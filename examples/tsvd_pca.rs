@@ -1,0 +1,79 @@
+//! Tall-and-skinny SVD (paper §III-B extension): PCA of a synthetic
+//! sensor dataset.
+//!
+//! Builds a 50k×20 data matrix with a planted 4-component low-rank
+//! structure plus noise, runs the Direct TSQR SVD (`A = QU Σ Vᵀ`, with
+//! the `U` product fused into step 3 so it costs the same passes as
+//! QR), and reports the recovered spectrum and explained variance —
+//! the "simulation data analysis" workload that motivated the method.
+
+use anyhow::Result;
+use mrtsqr::coordinator::{Coordinator, MatrixHandle};
+use mrtsqr::dfs::DiskModel;
+use mrtsqr::linalg::Matrix;
+use mrtsqr::mapreduce::{ClusterConfig, Engine};
+use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::util::rng::Rng;
+use mrtsqr::util::table::Table;
+use mrtsqr::workload::{get_matrix, put_matrix};
+
+fn main() -> Result<()> {
+    let pjrt;
+    let native;
+    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
+        pjrt = PjrtRuntime::from_default_artifacts()?;
+        &pjrt
+    } else {
+        native = NativeRuntime;
+        &native
+    };
+
+    // planted low-rank data: X = S W + noise
+    let (rows, cols, rank) = (50_000usize, 20usize, 4usize);
+    let mut rng = Rng::new(7);
+    let scores = Matrix::gaussian(rows, rank, &mut rng);
+    let mut loadings = Matrix::gaussian(rank, cols, &mut rng);
+    for (k, scale) in [8.0, 4.0, 2.0, 1.0].iter().enumerate() {
+        for j in 0..cols {
+            loadings[(k, j)] *= *scale;
+        }
+    }
+    let mut x = scores.matmul(&loadings);
+    for v in &mut x.data {
+        *v += 0.05 * rng.gaussian(); // measurement noise
+    }
+
+    let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
+    put_matrix(&mut engine.dfs, "X", &x);
+    let mut coord = Coordinator::new(engine, compute);
+    let input = MatrixHandle::new("X", rows, cols);
+    let out = coord.svd(&input)?;
+    let svd = out.svd.expect("svd parts");
+
+    let total_var: f64 = svd.sigma.iter().map(|s| s * s).sum();
+    let mut table = Table::new(
+        "TSVD/PCA of 50k x 20 synthetic sensor data (rank-4 + noise)",
+        &["component", "sigma", "explained var %", "cumulative %"],
+    );
+    let mut cum = 0.0;
+    for (i, s) in svd.sigma.iter().take(8).enumerate() {
+        let ev = s * s / total_var * 100.0;
+        cum += ev;
+        table.row(&[
+            (i + 1).to_string(),
+            format!("{s:.2}"),
+            format!("{ev:.2}"),
+            format!("{cum:.2}"),
+        ]);
+    }
+    table.print();
+
+    let qu = get_matrix(&coord.engine.dfs, &out.q.file, cols)?;
+    println!("left singular vectors orthogonality: {:.2e}", qu.orthogonality_error());
+    println!(
+        "rank-{rank} components explain {:.1}% of variance (noise floor beyond)",
+        svd.sigma.iter().take(rank).map(|s| s * s).sum::<f64>() / total_var * 100.0
+    );
+    println!("virtual job time: {:.1} s (same passes as plain Direct TSQR)", out.stats.virtual_secs());
+    Ok(())
+}

@@ -1,0 +1,170 @@
+"""AOT compiler: lower every (op, b, n) in the shape manifest to HLO text.
+
+Interchange format is HLO *text*, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs (``make artifacts``):
+
+  artifacts/<op>_<b>x<n>.hlo.txt   one module per manifest entry
+  artifacts/manifest.json          shape/op index the rust runtime loads
+
+Python runs ONLY here — never on the request path. The rust binary is
+self-contained once artifacts exist.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The request-path shape manifest. Block-row sizes are powers of two so
+# the rust runtime can pad any smaller block up (pad.rs); column counts
+# cover the paper's evaluation set {4,10,25,50,100} plus test sizes.
+N_LIST = [4, 8, 10, 16, 25, 50, 100]
+B_LIST = [256, 1024, 4096]
+
+QUICK_N = [4, 8]
+QUICK_B = [256]
+
+
+def default_manifest(quick=False):
+    ns = QUICK_N if quick else N_LIST
+    bs = QUICK_B if quick else B_LIST
+    entries = []
+    for op in ("qr", "gram", "matmul", "qr_apply"):
+        for n in ns:
+            blist = bs if op != "qr_apply" else bs[:1]
+            for b in blist:
+                if b < n:
+                    continue
+                entries.append((op, b, n))
+    return entries
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(op, b, n):
+    builder, _ = model.EXPORTS[op]
+    fn = builder(b, n)
+    args = model.example_args(op, b, n)
+    return jax.jit(fn).lower(*args)
+
+
+def output_shapes(op, b, n):
+    if op == "qr":
+        return [[b, n], [n, n]]
+    if op == "gram":
+        return [[n, n]]
+    if op == "matmul":
+        return [[b, n]]
+    if op == "qr_apply":
+        return [[b, n], [n, n]]
+    raise KeyError(op)
+
+
+def check_one(op, b, n, rtol=1e-12):
+    """Execute the jitted module on random input; compare to the oracle."""
+    from .kernels import ref
+
+    rng = np.random.default_rng(abs(hash((op, b, n))) % 2**32)
+    a = rng.standard_normal((b, n))
+    s = rng.standard_normal((n, n))
+    builder, _ = model.EXPORTS[op]
+    fn = jax.jit(builder(b, n))
+    if op == "qr":
+        q, r = fn(a)
+        err = max(
+            float(jnp.linalg.norm(a - q @ r) / jnp.linalg.norm(a)),
+            float(jnp.linalg.norm(q.T @ q - jnp.eye(n))),
+        )
+    elif op == "gram":
+        (g,) = fn(a)
+        err = float(jnp.linalg.norm(g - ref.ref_gram(a)) / jnp.linalg.norm(g))
+    elif op == "matmul":
+        (c,) = fn(a, s)
+        err = float(jnp.linalg.norm(c - a @ s) / jnp.linalg.norm(c))
+    elif op == "qr_apply":
+        # qs = Q·s and r, with A = Q·r. Recover Q = qs·s⁻¹ and check both
+        # the factorization and orthogonality (s is a well-conditioned
+        # random gaussian here).
+        qs, r = fn(a, s)
+        q = qs @ jnp.linalg.inv(s)
+        err = max(
+            float(jnp.linalg.norm(q.T @ q - jnp.eye(n))),
+            float(jnp.linalg.norm(a - q @ r) / jnp.linalg.norm(a)),
+        )
+    if not err < 1e-8:
+        raise AssertionError(f"check failed for {op}_{b}x{n}: err={err}")
+    return err
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--quick", action="store_true",
+                   help="small manifest for CI smoke runs")
+    p.add_argument("--check", action="store_true",
+                   help="execute each module via jax and verify vs oracle")
+    p.add_argument("--force", action="store_true",
+                   help="re-lower even if the artifact already exists")
+    args = p.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = default_manifest(quick=args.quick)
+    manifest = []
+    n_lowered = 0
+    for op, b, n in entries:
+        fname = f"{op}_{b}x{n}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        _, num_inputs = model.EXPORTS[op]
+        if args.force or not os.path.exists(path):
+            text = to_hlo_text(lower_one(op, b, n))
+            if "custom-call" in text:
+                raise RuntimeError(
+                    f"{fname}: custom-call leaked into HLO — the rust PJRT "
+                    "CPU client cannot execute it")
+            with open(path, "w") as f:
+                f.write(text)
+            n_lowered += 1
+            print(f"lowered {fname} ({len(text)} chars)")
+        if args.check:
+            err = check_one(op, b, n)
+            print(f"checked {fname}: err={err:.2e}")
+        manifest.append({
+            "op": op, "b": b, "n": n, "dtype": "f64", "file": fname,
+            "num_inputs": num_inputs, "outputs": output_shapes(op, b, n),
+        })
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "entries": manifest}, f, indent=1)
+    # TSV twin for the rust runtime (serde is unavailable offline):
+    # op <tab> b <tab> n <tab> dtype <tab> file <tab> num_inputs
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        for e in manifest:
+            f.write(f"{e['op']}\t{e['b']}\t{e['n']}\t{e['dtype']}\t"
+                    f"{e['file']}\t{e['num_inputs']}\n")
+    print(f"manifest: {len(manifest)} entries ({n_lowered} newly lowered) "
+          f"-> {args.out_dir}/manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

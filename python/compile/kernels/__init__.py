@@ -1,0 +1,13 @@
+"""L1 Pallas kernels for mrtsqr-rs.
+
+Every kernel is authored as a Pallas kernel and lowered with
+``interpret=True`` so the resulting HLO contains only stock ops the
+rust PJRT CPU client can execute (real-TPU lowering would emit Mosaic
+custom-calls). Correctness oracles live in :mod:`.ref`.
+"""
+
+from .qr_panel import qr_panel
+from .gram import gram
+from .matmul import tall_matmul
+
+__all__ = ["qr_panel", "gram", "tall_matmul"]

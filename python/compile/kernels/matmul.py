@@ -1,0 +1,42 @@
+"""Tall-times-small matmul ``(b,n)·(n,k)`` as a row-tiled Pallas kernel.
+
+Used by three request-path steps:
+  * Direct TSQR step 3: ``Q_i · Q_i^{(2)}``  (k = n)
+  * indirect Q:          ``A_i · R^{-1}``     (k = n)
+  * TSVD fused step 3:   ``Q_i · (Q_i^{(2)} U)`` (k = n)
+
+The small right operand is broadcast to every grid step (constant
+index_map); each program does one ``(tile,n)×(n,k)`` MXU-shaped product.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_body(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], y_ref[...],
+                         preferred_element_type=o_ref.dtype)
+
+
+def tall_matmul(a, b, *, tile=512, interpret=True):
+    """``a (m,n) @ b (n,k) -> (m,k)``, grid over row tiles of ``a``."""
+    m, n = a.shape
+    n2, k = b.shape
+    if n != n2:
+        raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
+    tile = min(tile, m)
+    if m % tile != 0:
+        tile = m
+    grid = (m // tile,)
+    return pl.pallas_call(
+        _matmul_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), a.dtype),
+        interpret=interpret,
+    )(a, b)

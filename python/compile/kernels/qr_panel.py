@@ -1,0 +1,91 @@
+"""Householder QR of one map-task block as a Pallas kernel.
+
+This is the compute hot-spot of every TSQR step: step 1 factors each
+``(b, n)`` block of ``A``; step 2 factors the stacked ``R`` factors; the
+iterative-refinement sweep re-factors blocks of the computed ``Q``.
+
+The kernel holds the whole ``(b, n)`` panel in VMEM (on TPU this bounds
+``b``: A + V + Q at f64 is ``3·8·b·n`` bytes, so b=4096, n=64 → 6 MB,
+inside the ~16 MB VMEM budget; see DESIGN.md §Hardware-Adaptation) and
+runs the textbook column loop:
+
+  for j in 0..n:
+      v   = householder(A[j:, j])          # reflector
+      A  -= v (β vᵀ A)                     # rank-1 trailing update (MXU)
+  Q = H_0 · … · H_{n-1} · [I_n; 0]         # applied in reverse
+
+Zero-row padding exactness: if rows ``b'..b`` of the input are 0, every
+reflector has zeros there and every update preserves them, so the output
+``Q`` rows ``b'..b`` are *exactly* 0 and rows ``0..b'`` agree with the
+unpadded factorization to roundoff. The rust runtime relies on this
+(runtime/pad.rs); ``tests/test_padding.py`` pins it down.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _householder_qr_body(a_ref, q_ref, r_ref):
+    b, n = a_ref.shape
+    A = a_ref[...]
+    dt = A.dtype
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (b,), 0)
+
+    def reflector(v):
+        """β = 2/vᵀv with a guard for the zero column (identity reflector)."""
+        vnorm2 = jnp.sum(v * v)
+        safe = vnorm2 > 0.0
+        return jnp.where(safe, 2.0 / jnp.where(safe, vnorm2, 1.0), 0.0)
+
+    def fact_step(j, carry):
+        A, V = carry
+        x = jnp.where(row_ids >= j, A[:, j], 0.0)
+        normx = jnp.sqrt(jnp.sum(x * x))
+        # sign choice avoids cancellation: v = x + sign(x_j)·‖x‖·e_j
+        alpha = jnp.where(x[j] >= 0.0, -normx, normx)
+        v = x.at[j].add(-alpha)
+        beta = reflector(v)
+        w = beta * (v @ A)          # (n,)  — BLAS-2 core
+        A = A - jnp.outer(v, w)     # trailing update
+        V = V.at[:, j].set(v)
+        return (A, V)
+
+    A_out, V = jax.lax.fori_loop(
+        0, n, fact_step, (A, jnp.zeros((b, n), dtype=dt))
+    )
+
+    # R: upper triangle of the leading n rows.
+    ii = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    r_ref[...] = jnp.where(ii <= jj, A_out[:n, :], 0.0)
+
+    # Thin Q = H_0 … H_{n-1} [I; 0], reflectors applied in reverse order.
+    # Built from iotas (not .at[].set of an eye constant): pallas_call
+    # rejects kernels that capture constants, and the b == n case
+    # degenerates the slice-update into one.
+    qi = jax.lax.broadcasted_iota(jnp.int32, (b, n), 0)
+    qj = jax.lax.broadcasted_iota(jnp.int32, (b, n), 1)
+    Q0 = jnp.where(qi == qj, jnp.ones((), dtype=dt), jnp.zeros((), dtype=dt))
+
+    def formq_step(i, Q):
+        v = V[:, n - 1 - i]
+        w = reflector(v) * (v @ Q)
+        return Q - jnp.outer(v, w)
+
+    q_ref[...] = jax.lax.fori_loop(0, n, formq_step, Q0)
+
+
+def qr_panel(a, *, interpret=True):
+    """Thin QR of a tall block: ``a (b,n) -> (Q (b,n), R (n,n))``."""
+    b, n = a.shape
+    if b < n:
+        raise ValueError(f"qr_panel requires b >= n, got {a.shape}")
+    return pl.pallas_call(
+        _householder_qr_body,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, n), a.dtype),
+            jax.ShapeDtypeStruct((n, n), a.dtype),
+        ),
+        interpret=interpret,
+    )(a)

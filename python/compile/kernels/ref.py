@@ -1,0 +1,46 @@
+"""Pure-jnp correctness oracles for every L1 kernel.
+
+These never touch Pallas and are the ground truth for pytest. ``ref_qr``
+uses ``jnp.linalg.qr`` (LAPACK under jit on CPU) — QR is unique only up
+to column signs, so tests compare *properties* (A = QR, QᵀQ = I, R upper
+triangular) and sign-normalized factors.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_qr(a):
+    q, r = jnp.linalg.qr(a, mode="reduced")
+    return q, r
+
+
+def ref_gram(a):
+    return a.T @ a
+
+
+def ref_matmul(a, b):
+    return a @ b
+
+
+def sign_normalize(q, r):
+    """Flip column/row signs so diag(R) >= 0 — makes QR factors comparable."""
+    s = jnp.sign(jnp.diagonal(r))
+    s = jnp.where(s == 0, 1.0, s)
+    return q * s[None, :], r * s[:, None]
+
+
+def ref_tsqr(a, nblocks):
+    """Two-level reference TSQR used to validate the L2 composition."""
+    m, n = a.shape
+    assert m % nblocks == 0
+    bs = m // nblocks
+    qs, rs = [], []
+    for i in range(nblocks):
+        q, r = ref_qr(a[i * bs:(i + 1) * bs])
+        qs.append(q)
+        rs.append(r)
+    q2, rfinal = ref_qr(jnp.concatenate(rs, axis=0))
+    qfinal = jnp.concatenate(
+        [qs[i] @ q2[i * n:(i + 1) * n] for i in range(nblocks)], axis=0
+    )
+    return qfinal, rfinal

@@ -1,0 +1,93 @@
+"""L2 — per-task JAX computations composed from the L1 Pallas kernels.
+
+Each function here is one *map- or reduce-task computation* of the
+paper's MapReduce algorithms (there is no gradient: the "model" of this
+paper is the factorization pipeline itself). ``aot.py`` lowers each one
+at a manifest of static shapes to HLO text; the rust coordinator
+(L3) executes them via PJRT and never calls back into Python.
+
+Request-path ops (all f64; see DESIGN.md on why the stability study
+requires double precision):
+
+  local_qr      step 1 of Direct/Indirect TSQR + the IR re-factorization
+  gram_block    Cholesky-QR map task (Alg. 1)
+  apply_right   step 3 (Q_i·Q_i²), indirect Q (A_i·R⁻¹), TSVD (Q_i·(Q²U))
+  qr_fused_apply step-1-and-carry fusion used by the TSVD fast path
+
+``tsqr_two_level`` is a *test-only* composition proving the kernels
+compose into the paper's factorization inside one jit — it is never
+exported as an artifact (the real pipeline splits it across MapReduce
+tasks).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gram, qr_panel, tall_matmul
+
+
+def local_qr(a):
+    """Thin Householder QR of one block: ``(b,n) -> (Q (b,n), R (n,n))``."""
+    return qr_panel(a)
+
+
+def gram_block(a):
+    """Cholesky-QR map task: ``(b,n) -> AᵀA (n,n)``."""
+    return (gram(a),)
+
+
+def apply_right(a, s):
+    """Tall-times-small product ``(b,n)·(n,n) -> (b,n)``."""
+    return (tall_matmul(a, s),)
+
+
+def qr_fused_apply(a, s):
+    """Fused step-1 + right-multiply: QR(a) then Q·s in one module.
+
+    Used by the recursive driver to avoid writing the intermediate thin-Q
+    when the caller already knows the small right factor (paper §VI's
+    proposed "remove much of the disk IO" optimization — we implement it
+    as the ``fused`` ablation).
+    """
+    q, r = qr_panel(a)
+    return tall_matmul(q, s), r
+
+
+def tsqr_two_level(a, nblocks):
+    """Whole two-level TSQR in one jit — composition test only."""
+    m, n = a.shape
+    assert m % nblocks == 0
+    bs = m // nblocks
+    qs, rs = [], []
+    for i in range(nblocks):
+        q, r = qr_panel(a[i * bs:(i + 1) * bs])
+        qs.append(q)
+        rs.append(r)
+    q2, rfinal = qr_panel(jnp.concatenate(rs, axis=0))
+    qfinal = jnp.concatenate(
+        [tall_matmul(qs[i], q2[i * n:(i + 1) * n]) for i in range(nblocks)],
+        axis=0,
+    )
+    return qfinal, rfinal
+
+
+#: op name -> (builder, n_inputs) used by aot.py. Builders take the
+#: static (b, n) and return a function of concrete arrays returning a
+#: tuple of outputs (PJRT side unwraps a tuple, so always return tuples).
+EXPORTS = {
+    "qr": (lambda b, n: lambda a: local_qr(a), 1),
+    "gram": (lambda b, n: lambda a: gram_block(a), 1),
+    "matmul": (lambda b, n: lambda a, s: apply_right(a, s), 2),
+    "qr_apply": (lambda b, n: lambda a, s: qr_fused_apply(a, s), 2),
+}
+
+
+def example_args(op, b, n, dtype=jnp.float64):
+    """ShapeDtypeStructs for lowering `op` at block shape (b, n)."""
+    tall = jax.ShapeDtypeStruct((b, n), dtype)
+    small = jax.ShapeDtypeStruct((n, n), dtype)
+    if op in ("qr", "gram"):
+        return (tall,)
+    if op in ("matmul", "qr_apply"):
+        return (tall, small)
+    raise KeyError(op)

@@ -1,0 +1,141 @@
+"""Kernel-vs-oracle tests — the CORE correctness signal for L1.
+
+Every Pallas kernel is compared against the pure-jnp oracle in
+``compile.kernels.ref`` at a grid of explicit shapes; hypothesis sweeps
+live in ``test_properties.py``.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import gram, qr_panel, tall_matmul
+from compile.kernels import ref
+
+SHAPES = [(8, 4), (32, 4), (64, 8), (100, 10), (128, 16), (256, 25),
+          (300, 50), (512, 50), (256, 100)]
+
+
+def _rand(shape, seed=0):
+    return np.random.default_rng(seed).standard_normal(shape)
+
+
+@pytest.mark.parametrize("b,n", SHAPES)
+def test_qr_reconstruction(b, n):
+    a = _rand((b, n), seed=b * 1000 + n)
+    q, r = jax.jit(qr_panel)(a)
+    err = jnp.linalg.norm(a - q @ r) / jnp.linalg.norm(a)
+    assert err < 1e-13, f"||A-QR||/||A|| = {err}"
+
+
+@pytest.mark.parametrize("b,n", SHAPES)
+def test_qr_orthogonality(b, n):
+    a = _rand((b, n), seed=b * 1000 + n + 1)
+    q, _ = jax.jit(qr_panel)(a)
+    err = jnp.linalg.norm(q.T @ q - jnp.eye(n))
+    assert err < 1e-13, f"||QtQ-I|| = {err}"
+
+
+@pytest.mark.parametrize("b,n", SHAPES)
+def test_qr_r_upper_triangular(b, n):
+    a = _rand((b, n), seed=b + n)
+    _, r = jax.jit(qr_panel)(a)
+    assert np.allclose(np.tril(np.asarray(r), -1), 0.0)
+
+
+@pytest.mark.parametrize("b,n", [(64, 8), (128, 16), (256, 25)])
+def test_qr_matches_lapack_up_to_signs(b, n):
+    a = _rand((b, n), seed=7)
+    q, r = jax.jit(qr_panel)(a)
+    qr_, rr = ref.ref_qr(a)
+    q, r = ref.sign_normalize(q, r)
+    qr_, rr = ref.sign_normalize(qr_, rr)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(rr),
+                               rtol=1e-10, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(qr_),
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_qr_ill_conditioned_still_orthogonal():
+    """The whole point of Direct TSQR: Q orthogonal even at kappa ~ 1e14."""
+    b, n = 256, 10
+    rng = np.random.default_rng(3)
+    u, _ = np.linalg.qr(rng.standard_normal((b, n)))
+    v, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    s = np.logspace(0, -14, n)
+    a = (u * s) @ v.T
+    q, r = jax.jit(qr_panel)(a)
+    assert jnp.linalg.norm(q.T @ q - jnp.eye(n)) < 1e-13
+    assert jnp.linalg.norm(a - q @ r) / jnp.linalg.norm(a) < 1e-13
+
+
+def test_qr_rank_deficient_does_not_nan():
+    """Zero columns hit the identity-reflector guard — no NaNs, A = QR."""
+    b, n = 64, 8
+    a = _rand((b, n), seed=11)
+    a[:, 3] = 0.0
+    q, r = jax.jit(qr_panel)(a)
+    assert not np.any(np.isnan(np.asarray(q)))
+    assert jnp.linalg.norm(a - q @ r) / jnp.linalg.norm(a) < 1e-13
+
+
+def test_qr_square_block():
+    a = _rand((16, 16), seed=5)
+    q, r = jax.jit(qr_panel)(a)
+    assert jnp.linalg.norm(a - q @ r) / jnp.linalg.norm(a) < 1e-13
+    assert jnp.linalg.norm(q.T @ q - jnp.eye(16)) < 1e-13
+
+
+def test_qr_rejects_wide():
+    with pytest.raises(ValueError):
+        qr_panel(jnp.zeros((4, 8)))
+
+
+@pytest.mark.parametrize("b,n", SHAPES)
+def test_gram_matches_ref(b, n):
+    a = _rand((b, n), seed=b ^ n)
+    g = jax.jit(gram)(a)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ref.ref_gram(a)),
+                               rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("tile", [16, 64, 128])
+def test_gram_tile_invariance(tile):
+    """Accumulation over row tiles must not depend on the tile size."""
+    a = _rand((256, 10), seed=2)
+    g0 = jax.jit(lambda x: gram(x, tile=256))(a)
+    g1 = jax.jit(lambda x: gram(x, tile=tile))(a)
+    np.testing.assert_allclose(np.asarray(g0), np.asarray(g1),
+                               rtol=1e-13, atol=1e-13)
+
+
+def test_gram_symmetric_psd():
+    a = _rand((128, 8), seed=9)
+    g = np.asarray(jax.jit(gram)(a))
+    np.testing.assert_allclose(g, g.T, rtol=1e-13, atol=1e-14)
+    assert np.all(np.linalg.eigvalsh(g) > -1e-10)
+
+
+@pytest.mark.parametrize("b,n", SHAPES)
+def test_matmul_matches_ref(b, n):
+    a = _rand((b, n), seed=b + 2 * n)
+    s = _rand((n, n), seed=n)
+    c = jax.jit(tall_matmul)(a, s)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(a @ s),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_matmul_rect_right():
+    a = _rand((64, 8), seed=1)
+    s = _rand((8, 3), seed=2)
+    c = jax.jit(tall_matmul)(a, s)
+    np.testing.assert_allclose(np.asarray(c), a @ s, rtol=1e-12, atol=1e-12)
+
+
+def test_matmul_shape_mismatch():
+    with pytest.raises(ValueError):
+        tall_matmul(jnp.zeros((8, 4)), jnp.zeros((5, 4)))

@@ -1,0 +1,98 @@
+"""Zero-padding exactness — the invariant the rust runtime relies on.
+
+PJRT executables have static shapes; rust pads partial blocks with zero
+rows (and, for the column dimension, zero columns) up to a manifest
+shape. These tests pin down that the padding is *exact*, not just
+approximately harmless (see DESIGN.md §"Why zero-row padding is exact").
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import gram, qr_panel, tall_matmul
+
+
+def _rand(shape, seed=0):
+    return np.random.default_rng(seed).standard_normal(shape)
+
+
+@pytest.mark.parametrize("rows,pad_to", [(40, 64), (100, 128), (17, 256)])
+def test_qr_row_padding_exact(rows, pad_to):
+    n = 8
+    a = _rand((rows, n), seed=rows)
+    ap = np.zeros((pad_to, n))
+    ap[:rows] = a
+    q, r = jax.jit(qr_panel)(a)
+    qp, rp = jax.jit(qr_panel)(ap)
+    # padded rows of Q are *exactly* zero (reflectors have exact zeros
+    # there and every update preserves them)
+    assert np.all(np.asarray(qp[rows:]) == 0.0)
+    # Unpadded rows and R match to roundoff. (Not bit-for-bit: the column
+    # norms are reduced over a different-length sum, so the reduction
+    # tree associates differently and alpha can move by an ulp.)
+    np.testing.assert_allclose(np.asarray(qp[:rows]), np.asarray(q),
+                               rtol=0, atol=1e-13)
+    np.testing.assert_allclose(np.asarray(rp), np.asarray(r),
+                               rtol=1e-13, atol=1e-13)
+    # and the padded factorization is valid in its own right
+    assert np.linalg.norm(a - np.asarray(qp[:rows]) @ np.asarray(rp)) \
+        / np.linalg.norm(a) < 1e-13
+
+
+def test_qr_column_padding_recoverable():
+    """Pad columns with zeros; leading n' columns of Q + principal R block
+    reproduce the unpadded factorization's *properties* exactly."""
+    b, n_real, n_pad = 96, 5, 8
+    a = _rand((b, n_real), seed=4)
+    ap = np.zeros((b, n_pad))
+    ap[:, :n_real] = a
+    qp, rp = jax.jit(qr_panel)(ap)
+    q = np.asarray(qp[:, :n_real])
+    r = np.asarray(rp[:n_real, :n_real])
+    assert np.linalg.norm(a - q @ r) / np.linalg.norm(a) < 1e-13
+    assert np.linalg.norm(q.T @ q - np.eye(n_real)) < 1e-13
+    # padded part of R is exactly zero
+    assert np.all(np.asarray(rp[:, n_real:]) == 0.0)
+
+
+@pytest.mark.parametrize("rows,pad_to", [(40, 64), (100, 256)])
+def test_gram_row_padding_exact(rows, pad_to):
+    n = 10
+    a = _rand((rows, n), seed=rows + 1)
+    ap = np.zeros((pad_to, n))
+    ap[:rows] = a
+    g = np.asarray(jax.jit(gram)(a))
+    gp = np.asarray(jax.jit(gram)(ap))
+    np.testing.assert_allclose(g, gp, rtol=0, atol=1e-13)
+
+
+@pytest.mark.parametrize("rows,pad_to", [(40, 64), (100, 256)])
+def test_matmul_row_padding_exact(rows, pad_to):
+    n = 10
+    a = _rand((rows, n), seed=rows + 2)
+    s = _rand((n, n), seed=3)
+    ap = np.zeros((pad_to, n))
+    ap[:rows] = a
+    c = np.asarray(jax.jit(tall_matmul)(a, s))
+    cp = np.asarray(jax.jit(tall_matmul)(ap, s))
+    np.testing.assert_array_equal(c, cp[:rows])
+    assert np.all(cp[rows:] == 0.0)
+
+
+def test_matmul_column_padding_exact():
+    b, n_real, n_pad = 64, 6, 8
+    a = _rand((b, n_real), seed=6)
+    s = _rand((n_real, n_real), seed=7)
+    ap = np.zeros((b, n_pad))
+    ap[:, :n_real] = a
+    sp = np.zeros((n_pad, n_pad))
+    sp[:n_real, :n_real] = s
+    c = np.asarray(jax.jit(tall_matmul)(a, s))
+    cp = np.asarray(jax.jit(tall_matmul)(ap, sp))
+    np.testing.assert_array_equal(c, cp[:, :n_real])
+    assert np.all(cp[:, n_real:] == 0.0)

@@ -1,0 +1,77 @@
+"""Hypothesis sweeps over the L1 kernels' shape/dtype/seed space."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, qr_panel, tall_matmul
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(shape, seed, scale=1.0):
+    return np.random.default_rng(seed).standard_normal(shape) * scale
+
+
+@given(
+    n=st.integers(min_value=1, max_value=24),
+    extra=st.integers(min_value=0, max_value=100),
+    seed=st.integers(min_value=0, max_value=2**31),
+    scale=st.sampled_from([1e-8, 1.0, 1e8]),
+)
+@settings(**SETTINGS)
+def test_qr_properties_sweep(n, extra, seed, scale):
+    b = n + extra
+    a = _rand((b, n), seed, scale)
+    q, r = jax.jit(qr_panel)(a)
+    q, r = np.asarray(q), np.asarray(r)
+    na = np.linalg.norm(a)
+    if na == 0:
+        return
+    assert np.linalg.norm(a - q @ r) / na < 1e-12
+    assert np.linalg.norm(q.T @ q - np.eye(n)) < 1e-12
+    assert np.allclose(np.tril(r, -1), 0.0)
+
+
+@given(
+    n=st.integers(min_value=1, max_value=32),
+    b=st.integers(min_value=1, max_value=400),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+@settings(**SETTINGS)
+def test_gram_sweep(n, b, seed):
+    a = _rand((b, n), seed)
+    g = np.asarray(jax.jit(gram)(a))
+    np.testing.assert_allclose(g, np.asarray(ref.ref_gram(a)),
+                               rtol=1e-11, atol=1e-11)
+
+
+@given(
+    n=st.integers(min_value=1, max_value=32),
+    k=st.integers(min_value=1, max_value=32),
+    b=st.integers(min_value=1, max_value=400),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+@settings(**SETTINGS)
+def test_matmul_sweep(n, k, b, seed):
+    a = _rand((b, n), seed)
+    s = _rand((n, k), seed + 1)
+    c = np.asarray(jax.jit(tall_matmul)(a, s))
+    np.testing.assert_allclose(c, a @ s, rtol=1e-11, atol=1e-11)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=10, deadline=None)
+def test_qr_f32_dtype(seed):
+    """f32 path: same kernels, relaxed tolerances."""
+    a = _rand((64, 8), seed).astype(np.float32)
+    q, r = jax.jit(qr_panel)(a)
+    assert q.dtype == jnp.float32 and r.dtype == jnp.float32
+    assert np.linalg.norm(a - np.asarray(q) @ np.asarray(r)) / \
+        np.linalg.norm(a) < 1e-5
+    assert np.linalg.norm(np.asarray(q).T @ np.asarray(q) - np.eye(8)) < 1e-5

@@ -1,0 +1,81 @@
+//! Table I analogue — does a lower-level per-task kernel matter?
+//!
+//! The paper compared its Python (NumPy) implementation against C++ and
+//! found only mild end-to-end speedups (1.29–2.76×) because disk I/O
+//! dominates. Our substitution (DESIGN.md §2): the **PJRT/XLA kernel
+//! path** plays the optimized implementation and the **naive scalar
+//! rust** path plays the baseline. We report both the raw per-block
+//! kernel speedup (large) and the end-to-end job-time speedup (mild) —
+//! reproducing the paper's conclusion that the platform, not the
+//! per-task kernel, bounds MapReduce linear algebra.
+
+use anyhow::Result;
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::linalg::Matrix;
+use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::util::bench::time;
+use mrtsqr::util::experiments::{bench_scale, run_one};
+use mrtsqr::util::rng::Rng;
+use mrtsqr::util::table::{commas, Table};
+use mrtsqr::workload::paper_workloads;
+
+fn main() -> Result<()> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.tsv").exists() {
+        println!("SKIP: table1 bench needs artifacts (make artifacts)");
+        return Ok(());
+    }
+    let pjrt = PjrtRuntime::from_default_artifacts()?;
+    let native = NativeRuntime;
+
+    // (a) per-block kernel speedup
+    let mut kernel_table = Table::new(
+        "Table I(a) — per-block local QR: PJRT/XLA kernel vs naive scalar rust",
+        &["block", "native ms", "pjrt ms", "kernel speedup"],
+    );
+    let mut rng = Rng::new(1);
+    for &(b, n) in &[(1000usize, 4usize), (1000, 10), (1000, 25), (1000, 50), (1000, 100)] {
+        let a = Matrix::gaussian(b, n, &mut rng);
+        let t_native = time(1, 5, || {
+            native.qr(&a).unwrap();
+        });
+        let t_pjrt = time(1, 5, || {
+            pjrt.qr(&a).unwrap();
+        });
+        kernel_table.row(&[
+            format!("{b}x{n}"),
+            format!("{:.2}", t_native.median_secs * 1e3),
+            format!("{:.2}", t_pjrt.median_secs * 1e3),
+            format!("{:.2}x", t_native.median_secs / t_pjrt.median_secs),
+        ]);
+    }
+    kernel_table.print();
+
+    // (b) end-to-end job-time speedup (virtual clock includes the
+    // measured compute, so a faster kernel only moves the small
+    // compute share — the paper's "only mild" finding)
+    let mut e2e = Table::new(
+        "Table I(b) — end-to-end Direct TSQR job time: naive vs kernel backend",
+        &["Rows (paper)", "Cols", "naive (s)", "kernel (s)", "job speedup"],
+    );
+    for w in paper_workloads(bench_scale() * 2) {
+        let m_native = run_one(&native, &w, Algorithm::DirectTsqr, 64.0e-9, 126.0e-9)?;
+        let m_pjrt = run_one(&pjrt, &w, Algorithm::DirectTsqr, 64.0e-9, 126.0e-9)?;
+        let speedup = m_native.virtual_secs / m_pjrt.virtual_secs;
+        e2e.row(&[
+            commas(w.paper_rows),
+            w.cols.to_string(),
+            format!("{:.0}", m_native.virtual_secs),
+            format!("{:.0}", m_pjrt.virtual_secs),
+            format!("{speedup:.2}x"),
+        ]);
+        // the paper's point: end-to-end gain is mild (they saw 1.29–2.76x
+        // with compute-heavy python; our virtual clock is I/O-dominated so
+        // the gain is even smaller)
+        assert!(speedup < 3.0, "end-to-end speedup should be mild, got {speedup}");
+    }
+    e2e.print();
+    println!("paper Table I: C++ over Python = 1.29–2.76x end-to-end; conclusion reproduced —");
+    println!("the disk model dominates, so per-task kernel speedups barely move job time.");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Table VIII — fraction of Direct TSQR time per step. The paper's
+//! point: step 2 (the single-reducer gather of all R factors) consumes
+//! a growing share as n increases — the bottleneck that motivates the
+//! recursive extension (Alg. 2).
+
+use anyhow::Result;
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::util::experiments::{bench_scale, run_one};
+use mrtsqr::util::table::{commas, Table};
+use mrtsqr::workload::paper_workloads;
+
+fn main() -> Result<()> {
+    let pjrt;
+    let native;
+    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
+        pjrt = PjrtRuntime::from_default_artifacts()?;
+        &pjrt
+    } else {
+        native = NativeRuntime;
+        &native
+    };
+
+    let mut table = Table::new(
+        "Table VIII — fraction of time per Direct TSQR step (ours vs paper)",
+        &["Rows (paper)", "Cols", "Step 1", "Step 2", "Step 3", "paper S1/S2/S3"],
+    );
+    let paper: [(u64, [f64; 3]); 5] = [
+        (4_000_000_000, [0.72, 0.02, 0.26]),
+        (2_500_000_000, [0.61, 0.04, 0.34]),
+        (600_000_000, [0.56, 0.06, 0.38]),
+        (500_000_000, [0.55, 0.07, 0.39]),
+        (150_000_000, [0.47, 0.15, 0.38]),
+    ];
+    let mut step2_fractions = Vec::new();
+    for (w, (prows, pfr)) in paper_workloads(bench_scale()).iter().zip(paper) {
+        assert_eq!(w.paper_rows, prows);
+        let m = run_one(compute, w, Algorithm::DirectTsqr, 64.0e-9, 126.0e-9)?;
+        let fr = m.stats.step_fractions();
+        // steps: step1, step2 (+ possible spill/recursion), step3 — fold
+        // anything between step1 and step3 into "step 2"
+        let s1 = fr.first().map(|x| x.1).unwrap_or(0.0);
+        let s3 = fr.last().map(|x| x.1).unwrap_or(0.0);
+        let s2 = 1.0 - s1 - s3;
+        step2_fractions.push(s2);
+        table.row(&[
+            commas(w.paper_rows),
+            w.cols.to_string(),
+            format!("{s1:.2}"),
+            format!("{s2:.2}"),
+            format!("{s3:.2}"),
+            format!("{:.2}/{:.2}/{:.2}", pfr[0], pfr[1], pfr[2]),
+        ]);
+    }
+    table.print();
+
+    // paper shape: step 2's share grows with column count
+    assert!(
+        step2_fractions.last().unwrap() > step2_fractions.first().unwrap(),
+        "step 2 share should grow with n: {step2_fractions:?}"
+    );
+    println!("OK: Table VIII shape holds (step 2 share grows with n — the serial gather)");
+    Ok(())
+}

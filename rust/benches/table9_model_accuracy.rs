@@ -1,0 +1,53 @@
+//! Table IX — measured job time as a multiple of the model lower bound.
+//! The paper's claim: the 2-parameter model predicts runtime within a
+//! factor of two (multiples 1.26–2.42 across all cells).
+
+use anyhow::Result;
+use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::util::experiments::run_table6_sweep;
+use mrtsqr::util::table::{commas, Table};
+
+fn main() -> Result<()> {
+    let pjrt;
+    let native;
+    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
+        pjrt = PjrtRuntime::from_default_artifacts()?;
+        &pjrt
+    } else {
+        native = NativeRuntime;
+        &native
+    };
+
+    let sweep = run_table6_sweep(compute, 64.0e-9, 126.0e-9)?;
+    let mut table = Table::new(
+        "Table IX — measured time as multiple of T_lb (paper: 1.26–2.42)",
+        &["Rows (paper)", "Cols", "Cholesky", "Indirect", "Chol+IR", "Ind+IR", "Direct", "House.*"],
+    );
+    let mut cells: Vec<String> = Vec::new();
+    let mut current = 0u64;
+    let mut multiples = Vec::new();
+    for m in &sweep {
+        if m.workload.paper_rows != current {
+            if !cells.is_empty() {
+                table.row(&cells);
+            }
+            current = m.workload.paper_rows;
+            cells = vec![commas(current), m.workload.cols.to_string()];
+        }
+        let mult = m.multiple_of_lb();
+        multiples.push(mult);
+        cells.push(format!("{mult:.3}"));
+    }
+    table.row(&cells);
+    table.print();
+
+    // the paper's claim, on our substrate: every algorithm within ~2.6x
+    // of its bound and never *below* ~0.9x (a bound that is beaten badly
+    // would mean the accounting is broken)
+    let max = multiples.iter().cloned().fold(0.0f64, f64::max);
+    let min = multiples.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(min > 0.85, "measured below lower bound: {min}");
+    assert!(max < 3.0, "model off by more than the paper's factor-of-two class: {max}");
+    println!("OK: all multiples in [{min:.2}, {max:.2}] — the model predicts within ~2x");
+    Ok(())
+}

@@ -1,0 +1,161 @@
+//! Cholesky QR (paper §II-A, Alg. 1).
+//!
+//! Map stage: each task gathers its split into `A_p` and computes the
+//! Gram matrix `A_pᵀA_p` (the `gram` artifact on the PJRT path), emitting
+//! one record per Gram row keyed by row index — so the reduce stage has
+//! exactly `n` distinct keys (the architecture limitation the paper
+//! points out). Reduce: sum the per-task rows. A serial Cholesky on the
+//! gathered `n×n` matrix gives `R = Lᵀ`.
+//!
+//! Breakdown semantics: `cond(AᵀA) = cond(A)²`, so for `cond(A) ≳ 1e8`
+//! the factorization fails — surfaced as an error carrying
+//! [`crate::linalg::CholeskyError`], which the stability bench (Fig. 6)
+//! reports as "breakdown".
+
+use super::io::rows_to_block;
+use super::{Coordinator, MatrixHandle};
+use crate::dfs::records::{decode_row, encode_row, row_key, Record};
+use crate::linalg::{cholesky, Matrix};
+use crate::mapreduce::{Emitter, JobSpec, JobStats, KeyGroup, MapTask, ReduceTask, StepStats};
+use crate::runtime::BlockCompute;
+use anyhow::{ensure, Result};
+
+struct GramMap<'a> {
+    compute: &'a dyn BlockCompute,
+}
+
+impl MapTask for GramMap<'_> {
+    fn run(&self, _id: usize, input: &[Record], _side: &[&[Record]], out: &mut Emitter) -> Result<()> {
+        let (a, _) = rows_to_block(input)?;
+        let g = self.compute.gram(&a)?;
+        for i in 0..g.rows {
+            out.emit(row_key(i as u64), encode_row(g.row(i)));
+        }
+        Ok(())
+    }
+}
+
+struct RowSumReduce;
+
+impl ReduceTask for RowSumReduce {
+    fn run(&self, partition: &[KeyGroup], out: &mut Emitter) -> Result<()> {
+        for (key, values) in partition {
+            ensure!(!values.is_empty(), "empty row-sum group");
+            let mut acc = decode_row(&values[0]);
+            for v in &values[1..] {
+                let row = decode_row(v);
+                ensure!(row.len() == acc.len(), "ragged gram rows");
+                for (a, b) in acc.iter_mut().zip(row) {
+                    *a += b;
+                }
+            }
+            out.emit(key.clone(), encode_row(&acc));
+        }
+        Ok(())
+    }
+}
+
+/// Charge the serial n×n gather+factor as a tiny leader step (the
+/// paper's Table III models it as one iteration of `8n²+8n` traffic).
+fn leader_step(coord: &Coordinator, name: &str, read: u64, write: u64) -> StepStats {
+    let mut s = StepStats { name: name.into(), map_tasks: 1, ..Default::default() };
+    s.map_io.add_read(read, 0);
+    s.map_io.add_write(write, 0);
+    s.virtual_secs = coord.engine.model.iteration_startup_secs
+        + coord.engine.model.read_secs(read)
+        + coord.engine.model.write_secs(write)
+        + coord.engine.model.task_startup_secs;
+    s
+}
+
+/// Compute `R` via Cholesky QR. Returns the breakdown error (with a
+/// downcastable [`crate::linalg::CholeskyError`]) for ill-conditioned
+/// inputs — the paper's Fig. 6 failure mode.
+pub fn cholesky_r(coord: &mut Coordinator, input: &MatrixHandle) -> Result<(Matrix, JobStats)> {
+    let mut stats = JobStats::default();
+    let gram_file = coord.tmp("chol-gram");
+    let mapper = GramMap { compute: coord.compute };
+    let reducer = RowSumReduce;
+    let spec = JobSpec::map_reduce(
+        "cholesky-gram",
+        &input.file,
+        coord.map_tasks_for(input.rows),
+        &mapper,
+        &reducer,
+        coord.opts.reduce_tasks,
+        &gram_file,
+    );
+    stats.push(coord.engine.run(&spec)?);
+
+    // leader: gather AᵀA, serial Cholesky
+    let recs = coord.engine.dfs.get(&gram_file)?;
+    ensure!(recs.len() == input.cols, "gram has {} rows, want {}", recs.len(), input.cols);
+    let mut g = Matrix::zeros(input.cols, input.cols);
+    for rec in recs {
+        // reduce output arrives in partition order, not key order — place
+        // each row by its key
+        let i = super::io::parse_row_key(&rec.key)? as usize;
+        ensure!(i < input.cols, "gram row key {i} out of range");
+        let row = decode_row(&rec.value);
+        ensure!(row.len() == input.cols, "gram row width");
+        g.row_mut(i).copy_from_slice(&row);
+    }
+    let nn = (8 * input.cols * input.cols + 8 * input.cols) as u64;
+    stats.push(leader_step(coord, "cholesky-factor", nn, nn));
+
+    let l = cholesky(&g).map_err(anyhow::Error::new)?;
+    Ok((l.transpose(), stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{householder_qr, matrix_with_condition, qr::sign_normalize};
+    use crate::mapreduce::{ClusterConfig, Engine};
+    use crate::runtime::NativeRuntime;
+    use crate::util::rng::Rng;
+    use crate::workload::put_matrix;
+
+    fn coord_with(a: &Matrix) -> (Coordinator<'static>, MatrixHandle) {
+        let mut engine = Engine::new(crate::dfs::DiskModel::icme_like(), ClusterConfig::default());
+        put_matrix(&mut engine.dfs, "A", a);
+        let coord = Coordinator::new(engine, &NativeRuntime);
+        (coord, MatrixHandle::new("A", a.rows, a.cols))
+    }
+
+    #[test]
+    fn r_matches_householder_oracle() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(500, 6, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        let (r, stats) = cholesky_r(&mut coord, &h).unwrap();
+        let (mut qo, mut ro) = householder_qr(&a);
+        sign_normalize(&mut qo, &mut ro);
+        // Cholesky R has positive diagonal by construction
+        assert!(r.sub(&ro).max_abs() < 1e-9 * ro.max_abs());
+        assert!(r.is_upper_triangular(0.0));
+        assert_eq!(stats.steps.len(), 2);
+        assert_eq!(stats.steps[0].distinct_keys, 6);
+    }
+
+    #[test]
+    fn breaks_down_on_ill_conditioned() {
+        let mut rng = Rng::new(2);
+        let a = matrix_with_condition(400, 8, 1e10, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        let err = cholesky_r(&mut coord, &h).unwrap_err();
+        assert!(err.downcast_ref::<crate::linalg::CholeskyError>().is_some());
+    }
+
+    #[test]
+    fn single_row_blocks_ok() {
+        // map tasks smaller than n: gram still sums correctly
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(40, 5, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        coord.opts.rows_per_task = 1; // 40 tasks of 1 row each
+        let (r, _) = cholesky_r(&mut coord, &h).unwrap();
+        let g = r.transpose().matmul(&r);
+        assert!(g.sub(&a.gram()).max_abs() < 1e-10 * a.gram().max_abs());
+    }
+}

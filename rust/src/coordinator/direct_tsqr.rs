@@ -1,0 +1,513 @@
+//! **Direct TSQR** — the paper's contribution (§III-B, Fig. 5), plus the
+//! recursive extension (Alg. 2) and the SVD modification.
+//!
+//! Three steps, two map functions + one reduce function:
+//!
+//! 1. *map-only*: each task factors its block `A_i = Q_i R_i`, writing
+//!    `Q_i` and `R_i` to **separate files** (the "feathers" pattern),
+//!    keyed by task id.
+//! 2. *single reduce*: gathers all `R_i` (ordered by key — "the kth key
+//!    in the list corresponds to rows (k−1)n+1 to kn"), factors the
+//!    stack `[R_1; …; R_m1] = [Q²_1; …; Q²_m1] R̃`, and emits each `Q²_i`
+//!    keyed by its originating task plus the final `R̃`.
+//! 3. *map-only*: reads the `Q_i` file with the step-2 output as a
+//!    distributed-cache side file ("redundant parsing allows us to skip
+//!    the shuffle"), emitting `Q` rows = `Q_i · Q²_i`.
+//!
+//! **Recursion** (Alg. 2): when `m1·n` exceeds the gather limit the
+//! stacked-R matrix is re-exported as a row file and Direct TSQR is
+//! invoked on it; its `Q` output (row layout) plugs straight into step 3
+//! as the `Q²` side file.
+//!
+//! **SVD** (§III-B末): step 2 additionally factors `R̃ = U Σ Vᵀ`
+//! (serial Jacobi on n×n) and — on the fast path — multiplies `Q²_i U`
+//! before emitting, so step 3 directly produces `QU` with no extra pass:
+//! `A = (QU) Σ Vᵀ`.
+
+use super::io::{
+    decode_block, encode_block, parse_q2_side, read_small_matrix, rows_to_block,
+};
+use super::{Coordinator, MatrixHandle};
+use crate::dfs::records::{encode_row, row_key, Record};
+use crate::linalg::{jacobi_svd, Matrix};
+use crate::mapreduce::{Emitter, JobSpec, JobStats, KeyGroup, MapTask, ReduceTask};
+use crate::runtime::BlockCompute;
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// Options for a Direct TSQR run.
+#[derive(Debug, Clone, Copy)]
+pub struct DirectOpts {
+    /// Also compute the SVD (`R̃ = UΣVᵀ`, step 3 emits `QU`).
+    pub compute_svd: bool,
+    /// Maximum recursion depth for Alg. 2 (safety bound).
+    pub max_depth: usize,
+}
+
+impl Default for DirectOpts {
+    fn default() -> Self {
+        DirectOpts { compute_svd: false, max_depth: 8 }
+    }
+}
+
+/// Σ and V from the TSVD extension.
+#[derive(Debug, Clone)]
+pub struct SvdParts {
+    pub sigma: Vec<f64>,
+    pub v: Matrix,
+}
+
+/// Output of a Direct TSQR run.
+#[derive(Debug)]
+pub struct DirectOutput {
+    /// Q (or QU when `compute_svd`), row layout, aligned with the input.
+    pub q: MatrixHandle,
+    /// The final upper-triangular factor R̃.
+    pub r: Matrix,
+    pub svd: Option<SvdParts>,
+    pub stats: JobStats,
+}
+
+// ---------------------------------------------------------------- step 1
+
+struct Step1Map<'a> {
+    compute: &'a dyn BlockCompute,
+}
+
+impl MapTask for Step1Map<'_> {
+    fn run(&self, task_id: usize, input: &[Record], _side: &[&[Record]], out: &mut Emitter) -> Result<()> {
+        let (a, first_row) = rows_to_block(input)?;
+        // blocks shorter than n: zero-pad rows (exact; see runtime::pad)
+        let (q, r) = if a.rows >= a.cols {
+            self.compute.qr(&a)?
+        } else {
+            let pad = Matrix::zeros(a.cols - a.rows, a.cols);
+            let (qp, r) = self.compute.qr(&Matrix::vstack(&[&a, &pad]))?;
+            (qp.slice_rows(0, a.rows), r)
+        };
+        // R_i to the default channel (step-2 input), Q_i to the side
+        // file. The Q record carries 32 bytes of row-key filler per row
+        // so the on-disk bytes match the paper's Table III (`8mn + Km`
+        // of Q data in step 1's writes and step 3's reads).
+        out.emit(row_key(task_id as u64), encode_block(0, &r));
+        out.emit_to(
+            "q1",
+            row_key(task_id as u64),
+            super::io::encode_block_with_filler(first_row, &q, 32 * q.rows),
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- step 2
+
+struct IdentityMap;
+
+impl MapTask for IdentityMap {
+    fn run(&self, _id: usize, input: &[Record], _side: &[&[Record]], out: &mut Emitter) -> Result<()> {
+        for rec in input {
+            out.emit(rec.key.clone(), rec.value.clone());
+        }
+        Ok(())
+    }
+}
+
+struct Step2Reduce<'a> {
+    compute: &'a dyn BlockCompute,
+    cols: usize,
+    compute_svd: bool,
+}
+
+impl ReduceTask for Step2Reduce<'_> {
+    fn run(&self, partition: &[KeyGroup], out: &mut Emitter) -> Result<()> {
+        // ordered list of keys = ordered list of R_i blocks
+        let mut blocks = Vec::with_capacity(partition.len());
+        for (key, values) in partition {
+            ensure!(values.len() == 1, "duplicate R block for key {key:?}");
+            let (_, r_i) = decode_block(&values[0])?;
+            ensure!(r_i.cols == self.cols, "R block width mismatch");
+            blocks.push((key.clone(), r_i));
+        }
+        let refs: Vec<&Matrix> = blocks.iter().map(|(_, m)| m).collect();
+        let stacked = Matrix::vstack(&refs);
+        let (q2, r) = if stacked.rows >= stacked.cols {
+            self.compute.qr(&stacked)?
+        } else {
+            let pad = Matrix::zeros(stacked.cols - stacked.rows, stacked.cols);
+            let (qp, r) = self.compute.qr(&Matrix::vstack(&[&stacked, &pad]))?;
+            (qp.slice_rows(0, stacked.rows), r)
+        };
+
+        // SVD extension: R̃ = U Σ Vᵀ; fold U into the emitted Q² blocks
+        let u = if self.compute_svd {
+            let svd = jacobi_svd(&r);
+            out.emit_to("svd", b"sigma".to_vec(), encode_row(&svd.sigma));
+            out.emit_to("svd", b"v".to_vec(), encode_block(0, &svd.v));
+            Some(svd.u)
+        } else {
+            None
+        };
+
+        // emit Q²_i per originating task (optionally ·U), and R̃ rows
+        let mut offset = 0usize;
+        for (key, r_i) in &blocks {
+            let mut q2_i = q2.slice_rows(offset, offset + r_i.rows);
+            if let Some(u) = &u {
+                q2_i = self.compute.matmul(&q2_i, u)?;
+            }
+            out.emit_to("q2", key.clone(), encode_block(offset as u64, &q2_i));
+            offset += r_i.rows;
+        }
+        for j in 0..r.rows {
+            out.emit(row_key(j as u64), encode_row(r.row(j)));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- step 3
+
+struct Step3Map<'a> {
+    compute: &'a dyn BlockCompute,
+    cols: usize,
+    /// Parsed-side-file cache. In Hadoop every task re-parses the Q²
+    /// distributed-cache file (the paper's "redundant parsing") — the
+    /// engine *charges* that read per task, but since all tasks run in
+    /// this process we parse once to keep wall time proportional.
+    q2_cache: std::cell::RefCell<Option<std::rc::Rc<std::collections::HashMap<Vec<u8>, Matrix>>>>,
+}
+
+impl Step3Map<'_> {
+    fn q2(&self, side: &[Record]) -> Result<std::rc::Rc<std::collections::HashMap<Vec<u8>, Matrix>>> {
+        let mut cache = self.q2_cache.borrow_mut();
+        if let Some(map) = cache.as_ref() {
+            return Ok(map.clone());
+        }
+        let map = std::rc::Rc::new(parse_q2_side(side, self.cols)?);
+        *cache = Some(map.clone());
+        Ok(map)
+    }
+}
+
+impl MapTask for Step3Map<'_> {
+    fn run(&self, _id: usize, input: &[Record], side: &[&[Record]], out: &mut Emitter) -> Result<()> {
+        ensure!(side.len() == 1, "step 3 wants the Q² side file");
+        let q2map = self.q2(side[0])?;
+        for rec in input {
+            let (first_row, q1) = decode_block(&rec.value)?;
+            let q2 = q2map
+                .get(&rec.key)
+                .ok_or_else(|| anyhow!("no Q² block for task key {:?}", rec.key))?;
+            let q = self.compute.matmul(&q1, q2)?;
+            super::io::emit_rows(out, first_row, &q);
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- pipeline
+
+/// Run Direct TSQR on `input`, recursing per Alg. 2 when the stacked R
+/// factors exceed the gather limit.
+pub fn direct_tsqr(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    opts: &DirectOpts,
+) -> Result<DirectOutput> {
+    direct_tsqr_level(coord, input, opts, 0)
+}
+
+fn direct_tsqr_level(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    opts: &DirectOpts,
+    depth: usize,
+) -> Result<DirectOutput> {
+    if depth >= opts.max_depth {
+        bail!("direct TSQR recursion exceeded max depth {}", opts.max_depth);
+    }
+    let n = input.cols;
+    let mut stats = JobStats::default();
+
+    // ---- step 1: map-only local QR, Q and R to separate files ----
+    let r1_file = coord.tmp("direct-r1");
+    let q1_file = coord.tmp("direct-q1");
+    let map_tasks = coord.map_tasks_for(input.rows);
+    // Q data is O(m·n) and inherits the input's virtual byte scale; the
+    // R factors are O(m1·n²) metadata and stay at scale 1 (DESIGN.md §2).
+    let data_scale = coord.engine.dfs.scale(&input.file);
+    {
+        let mapper = Step1Map { compute: coord.compute };
+        let spec = JobSpec::map_only(
+            &format!("direct-step1(d{depth})"),
+            &input.file,
+            map_tasks,
+            &mapper,
+            &r1_file,
+        )
+        .with_scaled_side_output("q1", &q1_file, data_scale);
+        stats.push(coord.engine.run(&spec)?);
+    }
+    let m1 = coord.engine.dfs.file_records(&r1_file)?;
+    let stacked_rows = m1 * n;
+    let gather_limit = coord
+        .opts
+        .gather_limit
+        .unwrap_or_else(|| coord.compute.max_qr_rows(n))
+        .max(2 * n); // always allow at least a trivial gather
+
+    let (q2_file, r, svd) = if stacked_rows > gather_limit && m1 > 1 {
+        // ---- Alg. 2: recurse on the stacked R factors ----
+        let spill = coord.tmp("direct-spill");
+        let (spill_stats, spill_rows) = spill_r1_to_rows(coord, &r1_file, &spill, n)?;
+        stats.push(spill_stats);
+        let sub_input = MatrixHandle::new(&spill, spill_rows, n);
+        // Re-block at the gather limit: each recursive task must compress
+        // many R factors into one (a block of b rows emits an n-row R, so
+        // b must exceed n for the stack to shrink — blocks of
+        // gather_limit rows guarantee geometric reduction per level).
+        let saved_rpt = coord.opts.rows_per_task;
+        coord.opts.rows_per_task = gather_limit;
+        let sub = direct_tsqr_level(coord, &sub_input, opts, depth + 1);
+        coord.opts.rows_per_task = saved_rpt;
+        let sub = sub?;
+        stats.extend(sub.stats);
+        (sub.q.file, sub.r, sub.svd)
+    } else {
+        // ---- step 2: identity map + single reduce over all R_i ----
+        let r2_file = coord.tmp("direct-r2");
+        let q2_file = coord.tmp("direct-q2");
+        let svd_file = coord.tmp("direct-svd");
+        {
+            let id = IdentityMap;
+            let reducer = Step2Reduce {
+                compute: coord.compute,
+                cols: n,
+                compute_svd: opts.compute_svd,
+            };
+            let spec = JobSpec::map_reduce(
+                &format!("direct-step2(d{depth})"),
+                &r1_file,
+                m1.min(coord.opts.reduce_tasks).max(1),
+                &id,
+                &reducer,
+                1,
+                &r2_file,
+            )
+            .with_side_output("q2", &q2_file)
+            .with_side_output("svd", &svd_file);
+            stats.push(coord.engine.run(&spec)?);
+        }
+        let r = read_small_matrix(coord.engine.dfs.get(&r2_file)?)?;
+        ensure!(r.rows == n && r.cols == n, "R̃ is {}x{}", r.rows, r.cols);
+        let svd = if opts.compute_svd {
+            Some(read_svd_parts(coord, &svd_file)?)
+        } else {
+            None
+        };
+        (q2_file, r, svd)
+    };
+
+    // ---- step 3: map-only Q_i · Q²_i with the side file ----
+    let q_file = coord.tmp("direct-q");
+    {
+        let mapper = Step3Map {
+            compute: coord.compute,
+            cols: n,
+            q2_cache: std::cell::RefCell::new(None),
+        };
+        let q1_records = coord.engine.dfs.file_records(&q1_file)?;
+        let spec = JobSpec::map_only(
+            &format!("direct-step3(d{depth})"),
+            &q1_file,
+            q1_records, // one map task per first-step block
+            &mapper,
+            &q_file,
+        )
+        .with_side_input(&q2_file)
+        .with_output_scale(data_scale);
+        stats.push(coord.engine.run(&spec)?);
+    }
+
+    Ok(DirectOutput {
+        q: MatrixHandle::new(&q_file, input.rows, n),
+        r,
+        svd,
+        stats,
+    })
+}
+
+/// Re-export the step-1 R blocks as a row file (input of the recursive
+/// level). Charged as a leader pass over the R file.
+fn spill_r1_to_rows(
+    coord: &mut Coordinator,
+    r1_file: &str,
+    out_file: &str,
+    n: usize,
+) -> Result<(crate::mapreduce::StepStats, usize)> {
+    let mut rows = Vec::new();
+    let mut read_bytes = 0u64;
+    {
+        let recs = coord.engine.dfs.get(r1_file)?;
+        for rec in recs {
+            read_bytes += rec.size_bytes();
+            let (_, r_i) = decode_block(&rec.value)?;
+            ensure!(r_i.cols == n, "R block width");
+            for j in 0..r_i.rows {
+                rows.push(encode_row(r_i.row(j)));
+            }
+        }
+    }
+    let records: Vec<Record> = rows
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| Record::new(row_key(i as u64), v))
+        .collect();
+    let nrows = records.len();
+    let write_bytes: u64 = records.iter().map(|r| r.size_bytes()).sum();
+    coord.engine.dfs.put(out_file, records);
+
+    let mut s = crate::mapreduce::StepStats {
+        name: "direct-spill".into(),
+        map_tasks: 1,
+        ..Default::default()
+    };
+    s.map_io.add_read(read_bytes, 0);
+    s.map_io.add_write(write_bytes, nrows as u64);
+    s.virtual_secs = coord.engine.model.read_secs(read_bytes)
+        + coord.engine.model.write_secs(write_bytes)
+        + coord.engine.model.task_startup_secs;
+    Ok((s, nrows))
+}
+
+fn read_svd_parts(coord: &Coordinator, svd_file: &str) -> Result<SvdParts> {
+    let recs = coord.engine.dfs.get(svd_file)?;
+    let mut sigma = None;
+    let mut v = None;
+    for rec in recs {
+        match rec.key.as_slice() {
+            b"sigma" => sigma = Some(crate::dfs::records::decode_row(&rec.value)),
+            b"v" => v = Some(decode_block(&rec.value)?.1),
+            other => bail!("unexpected svd record key {other:?}"),
+        }
+    }
+    Ok(SvdParts {
+        sigma: sigma.ok_or_else(|| anyhow!("missing sigma record"))?,
+        v: v.ok_or_else(|| anyhow!("missing V record"))?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix_with_condition;
+    use crate::mapreduce::{ClusterConfig, Engine};
+    use crate::runtime::NativeRuntime;
+    use crate::util::rng::Rng;
+    use crate::workload::{get_matrix, put_matrix};
+
+    fn coord_with(a: &Matrix) -> (Coordinator<'static>, MatrixHandle) {
+        let mut engine = Engine::new(crate::dfs::DiskModel::icme_like(), ClusterConfig::default());
+        put_matrix(&mut engine.dfs, "A", a);
+        (Coordinator::new(engine, &NativeRuntime), MatrixHandle::new("A", a.rows, a.cols))
+    }
+
+    fn check_qr(a: &Matrix, coord: &Coordinator, out: &DirectOutput, tol: f64) {
+        let q = get_matrix(&coord.engine.dfs, &out.q.file, a.cols).unwrap();
+        assert_eq!(q.rows, a.rows);
+        assert!(q.orthogonality_error() < tol, "orth {}", q.orthogonality_error());
+        let recon = a.sub(&q.matmul(&out.r)).frob_norm() / a.frob_norm();
+        assert!(recon < tol, "recon {recon}");
+        assert!(out.r.is_upper_triangular(1e-12 * out.r.max_abs()));
+    }
+
+    #[test]
+    fn three_step_factorization() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(500, 6, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        coord.opts.rows_per_task = 64;
+        let out = direct_tsqr(&mut coord, &h, &DirectOpts::default()).unwrap();
+        check_qr(&a, &coord, &out, 1e-12);
+        // 3 engine steps, no recursion
+        assert_eq!(out.stats.steps.len(), 3);
+    }
+
+    #[test]
+    fn stable_at_extreme_condition() {
+        // the headline claim: orthogonal Q at kappa = 1e15
+        let mut rng = Rng::new(2);
+        let a = matrix_with_condition(600, 10, 1e15, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        let out = direct_tsqr(&mut coord, &h, &DirectOpts::default()).unwrap();
+        let q = get_matrix(&coord.engine.dfs, &out.q.file, 10).unwrap();
+        assert!(q.orthogonality_error() < 1e-13, "orth {}", q.orthogonality_error());
+    }
+
+    #[test]
+    fn recursive_path_matches() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(512, 4, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        coord.opts.rows_per_task = 16; // 32 tasks -> 128 stacked rows
+        coord.opts.gather_limit = Some(32); // force recursion (>= 2n)
+        let out = direct_tsqr(&mut coord, &h, &DirectOpts::default()).unwrap();
+        check_qr(&a, &coord, &out, 1e-12);
+        // recursion shows up as extra steps
+        assert!(out.stats.steps.len() > 3, "steps: {}", out.stats.steps.len());
+        assert!(out.stats.steps.iter().any(|s| s.name.contains("d1")));
+    }
+
+    #[test]
+    fn svd_extension_reconstructs() {
+        let mut rng = Rng::new(4);
+        let sigma_true: Vec<f64> = (0..5).map(|i| 2.0f64.powi(-(i as i32))).collect();
+        let (a, _, _) = crate::linalg::matgen::matrix_with_spectrum(200, 5, &sigma_true, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        let opts = DirectOpts { compute_svd: true, ..Default::default() };
+        let out = direct_tsqr(&mut coord, &h, &opts).unwrap();
+        let svd = out.svd.as_ref().unwrap();
+        for (got, want) in svd.sigma.iter().zip(&sigma_true) {
+            assert!((got / want - 1.0).abs() < 1e-10, "sigma {got} vs {want}");
+        }
+        // A = (QU) Σ Vᵀ
+        let qu = get_matrix(&coord.engine.dfs, &out.q.file, 5).unwrap();
+        assert!(qu.orthogonality_error() < 1e-12);
+        let mut qus = qu.clone();
+        for j in 0..5 {
+            for i in 0..qus.rows {
+                qus[(i, j)] *= svd.sigma[j];
+            }
+        }
+        let recon = a.sub(&qus.matmul(&svd.v.transpose())).frob_norm() / a.frob_norm();
+        assert!(recon < 1e-11, "recon {recon}");
+    }
+
+    #[test]
+    fn single_block_degenerate() {
+        // whole matrix in one task: step 2 gets one R block
+        let mut rng = Rng::new(5);
+        let a = Matrix::gaussian(64, 4, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        coord.opts.rows_per_task = 1000;
+        let out = direct_tsqr(&mut coord, &h, &DirectOpts::default()).unwrap();
+        check_qr(&a, &coord, &out, 1e-12);
+    }
+
+    #[test]
+    fn step_names_match_paper_structure() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::gaussian(200, 4, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        coord.opts.rows_per_task = 50;
+        let out = direct_tsqr(&mut coord, &h, &DirectOpts::default()).unwrap();
+        let names: Vec<&str> = out.stats.steps.iter().map(|s| s.name.as_str()).collect();
+        assert!(names[0].contains("step1"));
+        assert!(names[1].contains("step2"));
+        assert!(names[2].contains("step3"));
+        // step 1 and step 3 are map-only
+        assert_eq!(out.stats.steps[0].reduce_tasks, 0);
+        assert_eq!(out.stats.steps[2].reduce_tasks, 0);
+        assert_eq!(out.stats.steps[1].reduce_tasks, 1);
+        assert_eq!(out.stats.steps[1].distinct_keys, 4); // m1 = 4 tasks
+    }
+}

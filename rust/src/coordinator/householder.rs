@@ -1,0 +1,339 @@
+//! MapReduce Householder QR (paper §III-A, Fig. 4) — the classic stable
+//! algorithm as a baseline, and the reason Direct TSQR exists.
+//!
+//! Iterative by nature: column `j` needs (a) the norm of the trailing
+//! column to build the reflector `v_j`, (b) `w = Aᵀv_j` (map+reduce),
+//! (c) the rank-1 rewrite `A ← A − β v_j wᵀ` of the *entire matrix on
+//! disk*. As in the paper, the first and third passes are merged (the
+//! update pass also emits the next column's partial norms), so the
+//! algorithm costs **2 passes per column = 2n passes**, every other one
+//! rewriting the matrix. BLAS-2, row-layout bound — hopeless in
+//! MapReduce, which is precisely Table VI's point.
+//!
+//! Only `R` is produced (as in the paper's implementation); `limit`
+//! allows benchmarks to run the first few columns and extrapolate,
+//! exactly like the paper's Table VI footnote.
+
+use super::io::rows_to_block;
+use super::{Coordinator, MatrixHandle};
+use crate::dfs::records::{decode_row, encode_row, row_key, Record};
+use crate::linalg::Matrix;
+use crate::mapreduce::{Emitter, JobSpec, JobStats, KeyGroup, MapTask, ReduceTask};
+use anyhow::{ensure, Result};
+
+/// Broadcast parameters for one column step.
+#[derive(Debug, Clone, Copy)]
+struct ColParams {
+    j: usize,
+    alpha: f64,
+}
+
+fn encode_params(p: &ColParams) -> Vec<u8> {
+    encode_row(&[p.j as f64, p.alpha])
+}
+
+fn decode_params(bytes: &[u8]) -> ColParams {
+    let v = decode_row(bytes);
+    ColParams { j: v[0] as usize, alpha: v[1] }
+}
+
+/// The reflector portion owned by one block: column `j` of `A_p` for
+/// global rows ≥ j, with the pivot entry shifted by −alpha.
+fn local_reflector(a: &Matrix, first_row: u64, p: &ColParams) -> Vec<f64> {
+    let mut v = vec![0.0f64; a.rows];
+    for i in 0..a.rows {
+        let g = first_row as usize + i;
+        if g >= p.j {
+            v[i] = a[(i, p.j)];
+        }
+        if g == p.j {
+            v[i] -= p.alpha;
+        }
+    }
+    v
+}
+
+/// Pass A ("w-pass"): partial `vᵀv` and `A_pᵀ v_p`.
+struct WPassMap;
+
+impl MapTask for WPassMap {
+    fn run(&self, task_id: usize, input: &[Record], side: &[&[Record]], out: &mut Emitter) -> Result<()> {
+        let p = decode_params(&side[0][0].value);
+        let (a, first_row) = rows_to_block(input)?;
+        let v = local_reflector(&a, first_row, &p);
+        let vv: f64 = v.iter().map(|x| x * x).sum();
+        let mut w = vec![0.0f64; a.cols + 1];
+        w[0] = vv;
+        for i in 0..a.rows {
+            let vi = v[i];
+            if vi == 0.0 {
+                continue;
+            }
+            for (wk, &aik) in w[1..].iter_mut().zip(a.row(i)) {
+                *wk += vi * aik;
+            }
+        }
+        out.emit(row_key(task_id as u64), encode_row(&w));
+        Ok(())
+    }
+}
+
+/// Sum the per-task `[vᵀv, w…]` vectors into one record.
+struct VecSumReduce;
+
+impl ReduceTask for VecSumReduce {
+    fn run(&self, partition: &[KeyGroup], out: &mut Emitter) -> Result<()> {
+        let mut acc: Option<Vec<f64>> = None;
+        for (_k, values) in partition {
+            for v in values {
+                let row = decode_row(v);
+                match &mut acc {
+                    None => acc = Some(row),
+                    Some(a) => {
+                        ensure!(a.len() == row.len(), "ragged partials");
+                        for (x, y) in a.iter_mut().zip(row) {
+                            *x += y;
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(a) = acc {
+            out.emit(row_key(0), encode_row(&a));
+        }
+        Ok(())
+    }
+}
+
+/// Pass B ("update pass"): `A_p ← A_p − β v_p wᵀ`, rewrite the block,
+/// and emit the next column's partial `[norm², diag]` statistics.
+struct UpdatePassMap;
+
+impl MapTask for UpdatePassMap {
+    fn run(&self, task_id: usize, input: &[Record], side: &[&[Record]], out: &mut Emitter) -> Result<()> {
+        let p = decode_params(&side[0][0].value);
+        let wrec = decode_row(&side[1][0].value);
+        let (vv, w) = (wrec[0], &wrec[1..]);
+        let (mut a, first_row) = rows_to_block(input)?;
+        let beta = if vv > 0.0 { 2.0 / vv } else { 0.0 };
+        let v = local_reflector(&a, first_row, &p);
+        for i in 0..a.rows {
+            let s = beta * v[i];
+            if s != 0.0 {
+                for (aik, wk) in a.row_mut(i).iter_mut().zip(w) {
+                    *aik -= s * wk;
+                }
+            }
+        }
+        // rewrite rows with their original keys
+        super::io::emit_rows(out, first_row, &a);
+        // next column statistics: Σ x² over global rows ≥ j+1, plus the
+        // diagonal entry A[j+1, j+1] if this block owns it
+        let jn = p.j + 1;
+        if jn < a.cols {
+            let mut norm2 = 0.0f64;
+            let mut diag = 0.0f64;
+            for i in 0..a.rows {
+                let g = first_row as usize + i;
+                if g >= jn {
+                    norm2 += a[(i, jn)] * a[(i, jn)];
+                }
+                if g == jn {
+                    diag = a[(i, jn)];
+                }
+            }
+            out.emit_to("stat", row_key(task_id as u64), encode_row(&[norm2, diag]));
+        }
+        Ok(())
+    }
+}
+
+/// Initial pass: `[norm²(col 0), A[0,0]]` partials.
+struct NormPassMap;
+
+impl MapTask for NormPassMap {
+    fn run(&self, task_id: usize, input: &[Record], _side: &[&[Record]], out: &mut Emitter) -> Result<()> {
+        let (a, first_row) = rows_to_block(input)?;
+        let mut norm2 = 0.0f64;
+        let mut diag = 0.0f64;
+        for i in 0..a.rows {
+            norm2 += a[(i, 0)] * a[(i, 0)];
+            if first_row as usize + i == 0 {
+                diag = a[(i, 0)];
+            }
+        }
+        out.emit(row_key(task_id as u64), encode_row(&[norm2, diag]));
+        Ok(())
+    }
+}
+
+fn alpha_from(norm2: f64, diag: f64) -> f64 {
+    let norm = norm2.sqrt();
+    if diag >= 0.0 {
+        -norm
+    } else {
+        norm
+    }
+}
+
+fn sum_stats(records: &[Record]) -> (f64, f64) {
+    let mut norm2 = 0.0;
+    let mut diag = 0.0;
+    for rec in records {
+        let v = decode_row(&rec.value);
+        norm2 += v[0];
+        diag += v[1]; // only one block owns the diagonal; others emit 0
+    }
+    (norm2, diag)
+}
+
+/// Compute `R` by `2n` MapReduce passes. `limit` runs only the first
+/// `limit` columns (benchmark extrapolation — paper Table VI's `*`);
+/// `R` is only returned for full runs.
+pub fn householder_r(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    limit: Option<usize>,
+) -> Result<(Matrix, JobStats)> {
+    let n = input.cols;
+    let cols_to_run = limit.unwrap_or(n).min(n);
+    let mut stats = JobStats::default();
+    let map_tasks = coord.map_tasks_for(input.rows);
+
+    // initial norm pass
+    let stat_file = coord.tmp("house-stat");
+    {
+        let mapper = NormPassMap;
+        let reducer = VecSumReduce;
+        let spec = JobSpec::map_reduce(
+            "house-norm0", &input.file, map_tasks, &mapper, &reducer, 1, &stat_file,
+        );
+        stats.push(coord.engine.run(&spec)?);
+    }
+    let (mut norm2, mut diag) = {
+        let recs = coord.engine.dfs.get(&stat_file)?;
+        let v = decode_row(&recs[0].value);
+        (v[0], v[1])
+    };
+
+    let mut current = input.file.clone();
+    for j in 0..cols_to_run {
+        let params = ColParams { j, alpha: alpha_from(norm2, diag) };
+        let params_file = coord.tmp("house-params");
+        coord
+            .engine
+            .dfs
+            .put(&params_file, vec![Record::new(row_key(0), encode_params(&params))]);
+
+        // pass A: w = Aᵀ v (+ vᵀv)
+        let w_file = coord.tmp("house-w");
+        {
+            let mapper = WPassMap;
+            let reducer = VecSumReduce;
+            let spec = JobSpec::map_reduce(
+                &format!("house-w{j}"), &current, map_tasks, &mapper, &reducer, 1, &w_file,
+            )
+            .with_side_input(&params_file);
+            stats.push(coord.engine.run(&spec)?);
+        }
+
+        // pass B: update + rewrite + next-column stats
+        let next = coord.tmp("house-a");
+        let stat = coord.tmp("house-stat");
+        {
+            let mapper = UpdatePassMap;
+            let data_scale = coord.engine.dfs.scale(&current);
+            let spec = JobSpec::map_only(
+                &format!("house-update{j}"), &current, map_tasks, &mapper, &next,
+            )
+            .with_side_input(&params_file)
+            .with_side_input(&w_file)
+            .with_side_output("stat", &stat)
+            .with_output_scale(data_scale);
+            stats.push(coord.engine.run(&spec)?);
+        }
+        if j + 1 < n {
+            let (n2, d) = sum_stats(coord.engine.dfs.get(&stat)?);
+            norm2 = n2;
+            diag = d;
+        }
+        if current != input.file {
+            coord.engine.dfs.delete(&current);
+        }
+        current = next;
+    }
+
+    // collect R from the leading n rows of the final matrix (only
+    // meaningful for full runs)
+    let mut r = Matrix::zeros(n, n);
+    if cols_to_run == n {
+        let recs = coord.engine.dfs.get(&current)?;
+        for rec in recs.iter().take(n) {
+            let i = super::io::parse_row_key(&rec.key)? as usize;
+            if i < n {
+                let row = decode_row(&rec.value);
+                for j in i..n {
+                    r[(i, j)] = row[j]; // below-diagonal residue is ~0
+                }
+            }
+        }
+        super::indirect_tsqr::normalize_r_signs(&mut Matrix::zeros(0, 0), &mut r);
+    }
+    Ok((r, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{householder_qr, qr::sign_normalize};
+    use crate::mapreduce::{ClusterConfig, Engine};
+    use crate::runtime::NativeRuntime;
+    use crate::util::rng::Rng;
+    use crate::workload::put_matrix;
+
+    fn coord_with(a: &Matrix) -> (Coordinator<'static>, MatrixHandle) {
+        let mut engine = Engine::new(crate::dfs::DiskModel::icme_like(), ClusterConfig::default());
+        put_matrix(&mut engine.dfs, "A", a);
+        (Coordinator::new(engine, &NativeRuntime), MatrixHandle::new("A", a.rows, a.cols))
+    }
+
+    #[test]
+    fn r_matches_serial_householder() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(120, 5, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        coord.opts.rows_per_task = 30;
+        let (r, stats) = householder_r(&mut coord, &h, None).unwrap();
+        let (mut qo, mut ro) = householder_qr(&a);
+        sign_normalize(&mut qo, &mut ro);
+        assert!(r.sub(&ro).max_abs() < 1e-10 * ro.max_abs(), "diff {}", r.sub(&ro).max_abs());
+        // 1 norm pass + 2 jobs per column
+        assert_eq!(stats.steps.len(), 1 + 2 * 5);
+    }
+
+    #[test]
+    fn pass_count_is_two_per_column() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::gaussian(60, 4, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        let (_, stats) = householder_r(&mut coord, &h, Some(2)).unwrap();
+        assert_eq!(stats.steps.len(), 1 + 2 * 2);
+        // each update pass rewrites the matrix
+        let update_steps: Vec<_> =
+            stats.steps.iter().filter(|s| s.name.starts_with("house-update")).collect();
+        let a_bytes = 60 * (32 + 4 * 8) as u64;
+        for s in update_steps {
+            assert!(s.map_io.bytes_written >= a_bytes, "rewrites full matrix");
+        }
+    }
+
+    #[test]
+    fn single_column_matrix() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(40, 1, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        let (r, _) = householder_r(&mut coord, &h, None).unwrap();
+        let norm: f64 = a.data.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((r[(0, 0)] - norm).abs() < 1e-10);
+    }
+}

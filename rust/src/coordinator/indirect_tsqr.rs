@@ -1,0 +1,266 @@
+//! Indirect TSQR (paper §II-B; Constantine & Gleich).
+//!
+//! Stable computation of `R` only: each map task factors its block and
+//! ships the `n×n` `R_i` rows into a reduction *tree* — first a
+//! `r_max`-way level (keys spread across reducers, each reducer QRs its
+//! stack), then a final single-reducer level. `Q` is later recovered
+//! indirectly as `A·R⁻¹` ([`super::ar_inv`]), which is the numerically
+//! unstable step the Direct TSQR avoids.
+
+use super::io::{read_small_matrix, rows_to_block};
+use super::{Coordinator, MatrixHandle};
+use crate::dfs::records::{encode_row, row_key, Record};
+use crate::linalg::Matrix;
+use crate::mapreduce::{Emitter, JobSpec, JobStats, KeyGroup, MapTask, ReduceTask};
+use crate::runtime::BlockCompute;
+use anyhow::{ensure, Result};
+
+/// QR-and-keep-R of a (possibly short) stack: pads with zero rows when
+/// the stack has fewer rows than columns (R of the padded stack equals
+/// R of the stack), and folds sequentially (`R ← R of [R; next chunk]`)
+/// when the stack exceeds the backend's largest block.
+pub(crate) fn r_of(compute: &dyn BlockCompute, m: &Matrix) -> Result<Matrix> {
+    let max = compute.max_qr_rows(m.cols).max(2 * m.cols);
+    if m.rows > max {
+        let mut r: Option<Matrix> = None;
+        let chunk_rows = max - m.cols;
+        let mut start = 0;
+        while start < m.rows {
+            let end = (start + chunk_rows).min(m.rows);
+            let chunk = m.slice_rows(start, end);
+            let stacked = match &r {
+                Some(prev) => Matrix::vstack(&[prev, &chunk]),
+                None => chunk,
+            };
+            r = Some(r_of(compute, &stacked)?);
+            start = end;
+        }
+        return Ok(r.expect("non-empty stack"));
+    }
+    if m.rows >= m.cols {
+        Ok(compute.qr(m)?.1)
+    } else {
+        let pad = Matrix::zeros(m.cols - m.rows, m.cols);
+        let stacked = Matrix::vstack(&[m, &pad]);
+        Ok(compute.qr(&stacked)?.1)
+    }
+}
+
+/// Map: local QR, emit the rows of `R_i` keyed by global R-row id
+/// (`task·n + j` → `m1·n` distinct keys, paper Table IV).
+struct LocalQrMap<'a> {
+    compute: &'a dyn BlockCompute,
+}
+
+impl MapTask for LocalQrMap<'_> {
+    fn run(&self, task_id: usize, input: &[Record], _side: &[&[Record]], out: &mut Emitter) -> Result<()> {
+        let (a, _) = rows_to_block(input)?;
+        let r = r_of(self.compute, &a)?;
+        for j in 0..r.rows {
+            out.emit(row_key((task_id * r.rows + j) as u64), encode_row(r.row(j)));
+        }
+        Ok(())
+    }
+}
+
+/// Reduce: stack this partition's R rows (key-sorted), QR them, emit the
+/// new R rows re-keyed by partition-local ids.
+struct StackQrReduce<'a> {
+    compute: &'a dyn BlockCompute,
+    cols: usize,
+}
+
+impl ReduceTask for StackQrReduce<'_> {
+    fn run(&self, partition: &[KeyGroup], out: &mut Emitter) -> Result<()> {
+        let mut data = Vec::new();
+        let mut rows = 0usize;
+        for (_key, values) in partition {
+            for v in values {
+                let row = crate::dfs::records::decode_row(v);
+                ensure!(row.len() == self.cols, "ragged R rows");
+                data.extend_from_slice(&row);
+                rows += 1;
+            }
+        }
+        let stacked = Matrix::from_rows(rows, self.cols, data);
+        let r = r_of(self.compute, &stacked)?;
+        // re-key rows by the partition's smallest input key so the next
+        // level gets distinct, ordered keys
+        let base = partition[0].0.clone();
+        let base_id = super::io::parse_row_key(&base)?;
+        for j in 0..r.rows {
+            out.emit(row_key(base_id + j as u64), encode_row(r.row(j)));
+        }
+        Ok(())
+    }
+}
+
+/// Identity map (the second tree level reads the first level's R file).
+struct IdentityMap;
+
+impl MapTask for IdentityMap {
+    fn run(&self, _id: usize, input: &[Record], _side: &[&[Record]], out: &mut Emitter) -> Result<()> {
+        for rec in input {
+            out.emit(rec.key.clone(), rec.value.clone());
+        }
+        Ok(())
+    }
+}
+
+/// Compute `R` via the two-level TSQR reduction tree.
+pub fn indirect_r(coord: &mut Coordinator, input: &MatrixHandle) -> Result<(Matrix, JobStats)> {
+    let mut stats = JobStats::default();
+    let n = input.cols;
+
+    // level 1: map QR + r_max-way reduce QR
+    let level1 = coord.tmp("indirect-r1");
+    let mapper = LocalQrMap { compute: coord.compute };
+    let reducer = StackQrReduce { compute: coord.compute, cols: n };
+    let spec = JobSpec::map_reduce(
+        "indirect-level1",
+        &input.file,
+        coord.map_tasks_for(input.rows),
+        &mapper,
+        &reducer,
+        coord.opts.reduce_tasks,
+        &level1,
+    );
+    stats.push(coord.engine.run(&spec)?);
+
+    // level 2: identity map + single reduce QR -> final R
+    let level2 = coord.tmp("indirect-r2");
+    let id = IdentityMap;
+    let reducer2 = StackQrReduce { compute: coord.compute, cols: n };
+    let records = coord.engine.dfs.file_records(&level1)?;
+    let spec2 = JobSpec::map_reduce(
+        "indirect-level2",
+        &level1,
+        records.min(coord.opts.reduce_tasks).max(1),
+        &id,
+        &reducer2,
+        1,
+        &level2,
+    );
+    stats.push(coord.engine.run(&spec2)?);
+
+    let mut r = read_small_matrix(coord.engine.dfs.get(&level2)?)?;
+    ensure!(r.rows == n && r.cols == n, "final R is {}x{}", r.rows, r.cols);
+    // normalize diag(R) >= 0 so results are comparable across trees
+    let mut dummy_q = Matrix::zeros(0, 0);
+    normalize_r_signs(&mut dummy_q, &mut r);
+    Ok((r, stats))
+}
+
+/// Single-level-tree ablation: map QR straight into one reducer, no
+/// intermediate `r_max`-way level. Constantine & Gleich "found that
+/// using an additional MapReduce iteration to form a more parallel
+/// reduction tree could greatly accelerate the method" (paper §II-B) —
+/// the `ablation_tree` bench measures that trade-off (one fewer
+/// iteration-startup vs a serial single-reducer gather of all `m₁·n`
+/// rows).
+pub fn indirect_r_single_level(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+) -> Result<(Matrix, JobStats)> {
+    let mut stats = JobStats::default();
+    let n = input.cols;
+    let out = coord.tmp("indirect-1lvl");
+    let mapper = LocalQrMap { compute: coord.compute };
+    let reducer = StackQrReduce { compute: coord.compute, cols: n };
+    let spec = JobSpec::map_reduce(
+        "indirect-single-level",
+        &input.file,
+        coord.map_tasks_for(input.rows),
+        &mapper,
+        &reducer,
+        1,
+        &out,
+    );
+    stats.push(coord.engine.run(&spec)?);
+    let mut r = read_small_matrix(coord.engine.dfs.get(&out)?)?;
+    ensure!(r.rows == n && r.cols == n, "final R is {}x{}", r.rows, r.cols);
+    normalize_r_signs(&mut Matrix::zeros(0, 0), &mut r);
+    Ok((r, stats))
+}
+
+/// Flip R row signs so the diagonal is non-negative (QR sign freedom).
+/// When `q` is non-empty its columns are flipped consistently.
+pub fn normalize_r_signs(q: &mut Matrix, r: &mut Matrix) {
+    for j in 0..r.rows {
+        if r[(j, j)] < 0.0 {
+            for k in j..r.cols {
+                r[(j, k)] = -r[(j, k)];
+            }
+            for i in 0..q.rows {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{householder_qr, matrix_with_condition, qr::sign_normalize};
+    use crate::mapreduce::{ClusterConfig, Engine};
+    use crate::runtime::NativeRuntime;
+    use crate::util::rng::Rng;
+    use crate::workload::put_matrix;
+
+    fn coord_with(a: &Matrix) -> (Coordinator<'static>, MatrixHandle) {
+        let mut engine = Engine::new(crate::dfs::DiskModel::icme_like(), ClusterConfig::default());
+        put_matrix(&mut engine.dfs, "A", a);
+        (Coordinator::new(engine, &NativeRuntime), MatrixHandle::new("A", a.rows, a.cols))
+    }
+
+    #[test]
+    fn r_matches_oracle() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(600, 8, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        let (r, stats) = indirect_r(&mut coord, &h).unwrap();
+        let (mut qo, mut ro) = householder_qr(&a);
+        sign_normalize(&mut qo, &mut ro);
+        assert!(r.sub(&ro).max_abs() < 1e-10 * ro.max_abs(), "{:?}", r.sub(&ro).max_abs());
+        assert_eq!(stats.steps.len(), 2);
+    }
+
+    #[test]
+    fn r_stable_on_ill_conditioned() {
+        // unlike Cholesky QR, TSQR's R survives kappa = 1e12
+        let mut rng = Rng::new(2);
+        let a = matrix_with_condition(300, 6, 1e12, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        let (r, _) = indirect_r(&mut coord, &h).unwrap();
+        let (mut qo, mut ro) = householder_qr(&a);
+        sign_normalize(&mut qo, &mut ro);
+        // compare on the dominant scale
+        assert!(r.sub(&ro).max_abs() < 1e-12 * ro.max_abs());
+    }
+
+    #[test]
+    fn partition_count_invariance() {
+        // R must not depend on the number of map tasks or reducers
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(240, 5, &mut rng);
+        let (mut c1, h1) = coord_with(&a);
+        c1.opts.rows_per_task = 40;
+        let (r1, _) = indirect_r(&mut c1, &h1).unwrap();
+        let (mut c2, h2) = coord_with(&a);
+        c2.opts.rows_per_task = 17;
+        c2.opts.reduce_tasks = 7;
+        let (r2, _) = indirect_r(&mut c2, &h2).unwrap();
+        assert!(r1.sub(&r2).max_abs() < 1e-10 * r1.max_abs());
+    }
+
+    #[test]
+    fn tiny_blocks_shorter_than_n() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::gaussian(50, 8, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        coord.opts.rows_per_task = 3; // blocks with fewer rows than cols
+        let (r, _) = indirect_r(&mut coord, &h).unwrap();
+        let g = r.transpose().matmul(&r);
+        assert!(g.sub(&a.gram()).max_abs() < 1e-10 * a.gram().max_abs());
+    }
+}

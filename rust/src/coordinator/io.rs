@@ -1,0 +1,211 @@
+//! Record codecs shared by the pipelines.
+//!
+//! Two layouts live in the DFS:
+//!
+//! * **row records** — one matrix row per record, key = 32-byte global
+//!   row id (the canonical tall-and-skinny layout, paper §I-A);
+//! * **block records** — a whole factor (`Q_i`, `R_i`, `Q_i²`) per
+//!   record, key = 32-byte task id, value = magic + first-row offset +
+//!   dims + data. The paper's step 1 emits exactly these ("a unique map
+//!   task identifier as the key and the Q or R factor as the value").
+
+use crate::dfs::records::{decode_row, encode_row, row_key, Record};
+use crate::linalg::Matrix;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+
+/// Magic prefix distinguishing block records from row records.
+const BLOCK_MAGIC: &[u8; 8] = b"MRBLOCK1";
+
+/// Encode a factor block with its global first-row offset.
+pub fn encode_block(first_row: u64, m: &Matrix) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32 + m.data.len() * 8);
+    out.extend_from_slice(BLOCK_MAGIC);
+    out.extend_from_slice(&first_row.to_le_bytes());
+    out.extend_from_slice(&(m.rows as u64).to_le_bytes());
+    out.extend_from_slice(&(m.cols as u64).to_le_bytes());
+    for v in &m.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Encode a block plus `filler` trailing bytes. The paper's on-disk Q
+/// files carry a 32-byte key per matrix row (`K·m` in Table III's byte
+/// counts); [`encode_block`] stores one key per *block*, so the step-1
+/// Q₁ emission appends `32·rows` filler to keep the byte accounting —
+/// and therefore every performance table — aligned with the paper.
+pub fn encode_block_with_filler(first_row: u64, m: &Matrix, filler: usize) -> Vec<u8> {
+    let mut out = encode_block(first_row, m);
+    out.resize(out.len() + filler, 0u8);
+    out
+}
+
+/// Decode a block record value -> (first_row, matrix). Trailing filler
+/// bytes (see [`encode_block_with_filler`]) are ignored.
+pub fn decode_block(bytes: &[u8]) -> Result<(u64, Matrix)> {
+    ensure!(bytes.len() >= 32 && &bytes[..8] == BLOCK_MAGIC, "not a block record");
+    let first_row = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let rows = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+    let cols = u64::from_le_bytes(bytes[24..32].try_into().unwrap()) as usize;
+    ensure!(bytes.len() >= 32 + rows * cols * 8, "block record too short");
+    let data = decode_row(&bytes[32..32 + rows * cols * 8]);
+    Ok((first_row, Matrix::from_rows(rows, cols, data)))
+}
+
+pub fn is_block_record(value: &[u8]) -> bool {
+    value.len() >= 8 && &value[..8] == BLOCK_MAGIC
+}
+
+/// Parse the global row id out of a 32-byte row key.
+pub fn parse_row_key(key: &[u8]) -> Result<u64> {
+    let s = std::str::from_utf8(key).context("row key not utf8")?;
+    s.trim_start_matches('0').parse::<u64>().or_else(|_| {
+        if s.chars().all(|c| c == '0') {
+            Ok(0)
+        } else {
+            bail!("bad row key {s:?}")
+        }
+    })
+}
+
+/// Assemble a map split of row records into a `Matrix`, returning the
+/// global row id of the first record (splits are contiguous).
+pub fn rows_to_block(input: &[Record]) -> Result<(Matrix, u64)> {
+    ensure!(!input.is_empty(), "empty split");
+    let first_row = parse_row_key(&input[0].key)?;
+    let cols = input[0].value.len() / 8;
+    let mut data = Vec::with_capacity(input.len() * cols);
+    for rec in input {
+        let row = decode_row(&rec.value);
+        ensure!(row.len() == cols, "ragged rows in split");
+        data.extend_from_slice(&row);
+    }
+    Ok((Matrix::from_rows(input.len(), cols, data), first_row))
+}
+
+/// Emit a matrix as row records with keys `first_row..first_row+rows`.
+pub fn emit_rows(out: &mut crate::mapreduce::Emitter, first_row: u64, m: &Matrix) {
+    for i in 0..m.rows {
+        out.emit(row_key(first_row + i as u64), encode_row(m.row(i)));
+    }
+}
+
+/// Parse a step-2 Q² side file into per-block factors. Accepts both
+/// layouts (see module docs): block records map directly; row records
+/// (a recursive Direct TSQR's Q output) are sliced into consecutive
+/// `block_rows`-row chunks in key order, with ordinal-based task keys.
+pub fn parse_q2_side(records: &[Record], block_rows: usize) -> Result<HashMap<Vec<u8>, Matrix>> {
+    ensure!(!records.is_empty(), "empty Q2 side file");
+    let mut out = HashMap::new();
+    if is_block_record(&records[0].value) {
+        for rec in records {
+            let (_, m) = decode_block(&rec.value)?;
+            out.insert(rec.key.clone(), m);
+        }
+        return Ok(out);
+    }
+    // row layout: records are already key-sorted (global row ids)
+    let cols = records[0].value.len() / 8;
+    ensure!(
+        records.len() % block_rows == 0,
+        "row-layout Q2 of {} rows is not a multiple of block_rows {}",
+        records.len(),
+        block_rows
+    );
+    for (ordinal, chunk) in records.chunks(block_rows).enumerate() {
+        let mut data = Vec::with_capacity(block_rows * cols);
+        for rec in chunk {
+            data.extend_from_slice(&decode_row(&rec.value));
+        }
+        out.insert(row_key(ordinal as u64), Matrix::from_rows(block_rows, cols, data));
+    }
+    Ok(out)
+}
+
+/// Read an n×n factor written as row records (e.g. the final R̃).
+pub fn read_small_matrix(records: &[Record]) -> Result<Matrix> {
+    let (m, _) = rows_to_block(records)?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::records::row_key;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn block_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::gaussian(5, 3, &mut rng);
+        let enc = encode_block(42, &m);
+        assert!(is_block_record(&enc));
+        let (fr, back) = decode_block(&enc).unwrap();
+        assert_eq!(fr, 42);
+        assert_eq!(back.data, m.data);
+    }
+
+    #[test]
+    fn row_key_parsing() {
+        assert_eq!(parse_row_key(&row_key(0)).unwrap(), 0);
+        assert_eq!(parse_row_key(&row_key(12345)).unwrap(), 12345);
+        assert!(parse_row_key(b"not a key").is_err());
+    }
+
+    #[test]
+    fn rows_to_block_contiguous() {
+        let mut rng = Rng::new(2);
+        let m = Matrix::gaussian(4, 2, &mut rng);
+        let recs: Vec<Record> = (0..4)
+            .map(|i| Record::new(row_key(10 + i as u64), encode_row(m.row(i))))
+            .collect();
+        let (back, first) = rows_to_block(&recs).unwrap();
+        assert_eq!(first, 10);
+        assert_eq!(back.data, m.data);
+    }
+
+    #[test]
+    fn q2_side_block_layout() {
+        let mut rng = Rng::new(3);
+        let m0 = Matrix::gaussian(3, 3, &mut rng);
+        let m1 = Matrix::gaussian(3, 3, &mut rng);
+        let recs = vec![
+            Record::new(row_key(0), encode_block(0, &m0)),
+            Record::new(row_key(1), encode_block(3, &m1)),
+        ];
+        let map = parse_q2_side(&recs, 3).unwrap();
+        assert_eq!(map[&row_key(0)].data, m0.data);
+        assert_eq!(map[&row_key(1)].data, m1.data);
+    }
+
+    #[test]
+    fn q2_side_row_layout() {
+        let mut rng = Rng::new(4);
+        let q = Matrix::gaussian(6, 2, &mut rng); // 3 blocks of 2 rows
+        let recs: Vec<Record> = (0..6)
+            .map(|i| Record::new(row_key(i as u64), encode_row(q.row(i))))
+            .collect();
+        let map = parse_q2_side(&recs, 2).unwrap();
+        assert_eq!(map.len(), 3);
+        assert_eq!(map[&row_key(1)].data, q.slice_rows(2, 4).data);
+    }
+
+    #[test]
+    fn q2_side_row_layout_rejects_ragged() {
+        let recs: Vec<Record> = (0..5)
+            .map(|i| Record::new(row_key(i as u64), encode_row(&[0.0, 0.0])))
+            .collect();
+        assert!(parse_q2_side(&recs, 2).is_err());
+    }
+
+    #[test]
+    fn emit_rows_keys() {
+        let mut em = crate::mapreduce::Emitter::new();
+        let m = Matrix::identity(2);
+        emit_rows(&mut em, 7, &m);
+        assert_eq!(em.main.len(), 2);
+        assert_eq!(em.main[0].key, row_key(7));
+        assert_eq!(em.main[1].key, row_key(8));
+    }
+}

@@ -1,0 +1,197 @@
+//! L3 coordinator — the paper's QR algorithms as MapReduce pipelines.
+//!
+//! Every algorithm consumes a [`MatrixHandle`] (a row-record file in the
+//! simulated DFS) and drives one or more engine jobs whose task bodies
+//! call [`crate::runtime::BlockCompute`] — i.e. the AOT-compiled
+//! JAX/Pallas artifacts on the PJRT path, or the pure-rust oracle.
+//!
+//! | method | stability | passes |
+//! |---|---|---|
+//! | [`cholesky_qr`] (+`ar_inv`)  | `R` loses κ², breaks down κ≳1e8 | 1 (+2 for Q) |
+//! | [`indirect_tsqr`] (+`ar_inv`)| stable `R`, `Q` loses κ        | 1 (+2 for Q) |
+//! | either + iterative refinement| ~ε until κ≈1e16                | ×2 |
+//! | [`direct_tsqr`] (this paper) | ε always                        | ~2+ε |
+//! | [`householder`]              | ε, but 2n passes                | 2n |
+//! | [`direct_tsqr`] with SVD     | ε                               | same as QR |
+
+pub mod ar_inv;
+pub mod cholesky_qr;
+pub mod direct_tsqr;
+pub mod fused;
+pub mod householder;
+pub mod indirect_tsqr;
+pub mod io;
+
+pub use direct_tsqr::{DirectOpts, DirectOutput, SvdParts};
+
+use crate::linalg::Matrix;
+use crate::mapreduce::{Engine, JobStats};
+use crate::perfmodel::AlgoKind;
+use crate::runtime::BlockCompute;
+use anyhow::Result;
+
+/// A tall-and-skinny matrix stored in the DFS (row records keyed by
+/// 32-byte global row ids).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatrixHandle {
+    pub file: String,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl MatrixHandle {
+    pub fn new(file: &str, rows: usize, cols: usize) -> Self {
+        MatrixHandle { file: file.to_string(), rows, cols }
+    }
+}
+
+/// Algorithm selector for [`Coordinator::qr`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Cholesky QR (Alg. 1) + `A·R⁻¹`; optionally one refinement sweep.
+    Cholesky { refine: bool },
+    /// Indirect TSQR (Constantine–Gleich) + `A·R⁻¹`; optional refinement.
+    IndirectTsqr { refine: bool },
+    /// The paper's 3-step Direct TSQR (recursive when the step-2 gather
+    /// exceeds the runtime's block limit).
+    DirectTsqr,
+    /// The paper's §VI proposal: in-memory step 2 + fused recompute-Q
+    /// step 3 (no Q₁ disk spill). See [`fused`].
+    DirectTsqrFused,
+    /// 2n-pass MapReduce Householder QR (R only — the paper's baseline).
+    Householder,
+}
+
+impl Algorithm {
+    pub fn kind(&self) -> AlgoKind {
+        match self {
+            Algorithm::Cholesky { refine: false } => AlgoKind::Cholesky,
+            Algorithm::Cholesky { refine: true } => AlgoKind::CholeskyIr,
+            Algorithm::IndirectTsqr { refine: false } => AlgoKind::IndirectTsqr,
+            Algorithm::IndirectTsqr { refine: true } => AlgoKind::IndirectTsqrIr,
+            Algorithm::DirectTsqr => AlgoKind::DirectTsqr,
+            Algorithm::DirectTsqrFused => AlgoKind::DirectTsqrFused,
+            Algorithm::Householder => AlgoKind::Householder,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    pub const ALL: [Algorithm; 6] = [
+        Algorithm::Cholesky { refine: false },
+        Algorithm::IndirectTsqr { refine: false },
+        Algorithm::Cholesky { refine: true },
+        Algorithm::IndirectTsqr { refine: true },
+        Algorithm::DirectTsqr,
+        Algorithm::Householder,
+    ];
+}
+
+/// Result of a QR run: `R` always; `Q` unless the algorithm only
+/// produces `R` (Householder baseline).
+#[derive(Debug)]
+pub struct QrResult {
+    pub q: Option<MatrixHandle>,
+    pub r: Matrix,
+    pub stats: JobStats,
+}
+
+/// Tuning knobs shared by the pipelines.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordOpts {
+    /// Rows per step-1 map task (block size; padded to a manifest shape).
+    pub rows_per_task: usize,
+    /// Reduce tasks for shuffling stages (`r_max` by default).
+    pub reduce_tasks: usize,
+    /// Override for the step-2 gather limit (rows) — forces the
+    /// recursive path when small. `None`: the runtime's `max_qr_rows`.
+    pub gather_limit: Option<usize>,
+}
+
+impl Default for CoordOpts {
+    fn default() -> Self {
+        CoordOpts { rows_per_task: 1000, reduce_tasks: 40, gather_limit: None }
+    }
+}
+
+/// The coordinator: owns the engine, borrows the block-compute backend.
+pub struct Coordinator<'c> {
+    pub engine: Engine,
+    pub compute: &'c dyn BlockCompute,
+    pub opts: CoordOpts,
+    seq: usize,
+}
+
+impl<'c> Coordinator<'c> {
+    pub fn new(engine: Engine, compute: &'c dyn BlockCompute) -> Self {
+        Coordinator { engine, compute, opts: CoordOpts::default(), seq: 0 }
+    }
+
+    pub fn with_opts(mut self, opts: CoordOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Fresh temp-file name.
+    pub(crate) fn tmp(&mut self, tag: &str) -> String {
+        self.seq += 1;
+        format!("tmp/{}-{:04}", tag, self.seq)
+    }
+
+    pub(crate) fn map_tasks_for(&self, rows: usize) -> usize {
+        rows.div_ceil(self.opts.rows_per_task).max(1)
+    }
+
+    /// Run `algo` on `input`, producing Q (where applicable) and R.
+    pub fn qr(&mut self, input: &MatrixHandle, algo: Algorithm) -> Result<QrResult> {
+        match algo {
+            Algorithm::Cholesky { refine } => {
+                let (r, mut stats) = cholesky_qr::cholesky_r(self, input)?;
+                let (q, r, st) = ar_inv::q_via_rinv(self, input, &r, refine, RFactorMethod::Cholesky)?;
+                stats.extend(st);
+                Ok(QrResult { q: Some(q), r, stats })
+            }
+            Algorithm::IndirectTsqr { refine } => {
+                let (r, mut stats) = indirect_tsqr::indirect_r(self, input)?;
+                let (q, r, st) =
+                    ar_inv::q_via_rinv(self, input, &r, refine, RFactorMethod::IndirectTsqr)?;
+                stats.extend(st);
+                Ok(QrResult { q: Some(q), r, stats })
+            }
+            Algorithm::DirectTsqr => {
+                let out = direct_tsqr::direct_tsqr(self, input, &DirectOpts::default())?;
+                Ok(QrResult { q: Some(out.q), r: out.r, stats: out.stats })
+            }
+            Algorithm::DirectTsqrFused => fused::direct_tsqr_fused(self, input),
+            Algorithm::Householder => {
+                let (r, stats) = householder::householder_r(self, input, None)?;
+                Ok(QrResult { q: None, r, stats })
+            }
+        }
+    }
+
+    /// Tall-and-skinny SVD via the Direct TSQR extension (paper §III-B):
+    /// `A = (Q·U) Σ Vᵀ` with the `U` product fused into step 3.
+    pub fn svd(&mut self, input: &MatrixHandle) -> Result<direct_tsqr::DirectOutput> {
+        let opts = DirectOpts { compute_svd: true, ..Default::default() };
+        direct_tsqr::direct_tsqr(self, input, &opts)
+    }
+
+    /// Singular values only (paper §III-B, last sentence): "it would be
+    /// favorable to use the TSQR implementation from Sec. II-B to
+    /// compute R" — one pass, then a serial n×n Jacobi SVD.
+    pub fn singular_values(&mut self, input: &MatrixHandle) -> Result<(Vec<f64>, JobStats)> {
+        let (r, stats) = indirect_tsqr::indirect_r(self, input)?;
+        Ok((crate::linalg::jacobi_svd(&r).sigma, stats))
+    }
+}
+
+/// Which R-factorization a refinement sweep re-uses (the paper refines
+/// Cholesky QR with Cholesky QR, and Indirect TSQR with Indirect TSQR).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RFactorMethod {
+    Cholesky,
+    IndirectTsqr,
+}

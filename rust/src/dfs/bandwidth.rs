@@ -1,0 +1,161 @@
+//! Disk-bandwidth model + I/O accounting.
+//!
+//! The paper's performance model (§V-A) has exactly two fitted
+//! parameters: the inverse read bandwidth `β_r` and inverse write
+//! bandwidth `β_w`. Table II reports them normalized per map slot
+//! (`β_r/m_max ≈ 1.4–2.3 s/GB`, `β_w/m_max ≈ 3.0–3.2 s/GB`, writes ~2×
+//! slower from HDFS replication), i.e. one Hadoop-streaming slot reads
+//! at only ~10–17 MB/s. A task reading `B` bytes therefore takes
+//! `B·β_r` seconds, and the paper's lower bound divides the *total*
+//! step bytes by the step parallelism `p_j` — exactly what the engine's
+//! slot-scheduled virtual clock computes.
+//!
+//! `byte_scale` maps our scaled-down workloads back to paper-scale
+//! bytes (DESIGN.md §2): the DFS stores ~2000× fewer rows, the virtual
+//! clock charges as if each byte were `byte_scale` bytes, so Table V/VI
+//! reproductions land in the paper's own units.
+
+/// Inverse-bandwidth disk model (per-slot seconds/byte).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiskModel {
+    /// Seconds per (virtual) byte read by one slot. Paper-units default:
+    /// 1.6 s/GB · m_max(=40) = 64 s/GB = 6.4e-8 s/B.
+    pub beta_r: f64,
+    /// Seconds per (virtual) byte written by one slot (~2× beta_r).
+    pub beta_w: f64,
+    /// Virtual bytes charged per actual stored byte (workload scale-up).
+    pub byte_scale: f64,
+    /// Fixed startup cost per MapReduce iteration (Hadoop job launch).
+    pub iteration_startup_secs: f64,
+    /// Fixed per-task-attempt scheduling overhead.
+    pub task_startup_secs: f64,
+}
+
+impl DiskModel {
+    /// Defaults fitted to the paper's ICME cluster (Table II).
+    pub fn icme_like() -> Self {
+        DiskModel {
+            beta_r: 64.0e-9,  // 64 s/GB per slot
+            beta_w: 126.0e-9, // 126 s/GB per slot
+            byte_scale: 1.0,
+            iteration_startup_secs: 15.0,
+            task_startup_secs: 2.0,
+        }
+    }
+
+    /// Pure-bandwidth model (no startup costs) — the paper's `T_lb`
+    /// counts only reads and writes.
+    pub fn pure_bandwidth(beta_r: f64, beta_w: f64) -> Self {
+        DiskModel {
+            beta_r,
+            beta_w,
+            byte_scale: 1.0,
+            iteration_startup_secs: 0.0,
+            task_startup_secs: 0.0,
+        }
+    }
+
+    /// Same model with a workload scale factor.
+    pub fn with_scale(mut self, byte_scale: f64) -> Self {
+        self.byte_scale = byte_scale;
+        self
+    }
+
+    pub fn read_secs(&self, bytes: u64) -> f64 {
+        self.read_secs_f(bytes as f64)
+    }
+
+    pub fn write_secs(&self, bytes: u64) -> f64 {
+        self.write_secs_f(bytes as f64)
+    }
+
+    /// Virtual-byte variants (bytes already carry a per-file scale; the
+    /// model's global `byte_scale` multiplies on top).
+    pub fn read_secs_f(&self, bytes: f64) -> f64 {
+        bytes * self.byte_scale * self.beta_r
+    }
+
+    pub fn write_secs_f(&self, bytes: f64) -> f64 {
+        bytes * self.byte_scale * self.beta_w
+    }
+}
+
+impl Default for DiskModel {
+    fn default() -> Self {
+        Self::icme_like()
+    }
+}
+
+/// Byte counters for one task / step / job.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IoMeter {
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub records_read: u64,
+    pub records_written: u64,
+}
+
+impl IoMeter {
+    pub fn add_read(&mut self, bytes: u64, records: u64) {
+        self.bytes_read += bytes;
+        self.records_read += records;
+    }
+
+    pub fn add_write(&mut self, bytes: u64, records: u64) {
+        self.bytes_written += bytes;
+        self.records_written += records;
+    }
+
+    pub fn merge(&mut self, other: &IoMeter) {
+        self.bytes_read += other.bytes_read;
+        self.bytes_written += other.bytes_written;
+        self.records_read += other.records_read;
+        self.records_written += other.records_written;
+    }
+
+    /// Virtual disk seconds for this meter under `model`.
+    pub fn disk_secs(&self, model: &DiskModel) -> f64 {
+        model.read_secs(self.bytes_read) + model.write_secs(self.bytes_written)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_slower_than_read_by_default() {
+        let m = DiskModel::default();
+        assert!(m.beta_w > m.beta_r);
+        let ratio = m.beta_w / m.beta_r;
+        assert!(ratio > 1.5 && ratio < 3.0, "paper-like ratio, got {ratio}");
+    }
+
+    #[test]
+    fn charges_linear() {
+        let m = DiskModel::pure_bandwidth(2e-9, 4e-9);
+        assert!((m.read_secs(1_000_000_000) - 2.0).abs() < 1e-12);
+        assert!((m.write_secs(500_000_000) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn byte_scale_multiplies() {
+        let m = DiskModel::pure_bandwidth(1.0, 1.0).with_scale(2000.0);
+        assert!((m.read_secs(10) - 20000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn meter_merge_and_secs() {
+        let mut a = IoMeter::default();
+        a.add_read(100, 2);
+        a.add_write(50, 1);
+        let mut b = IoMeter::default();
+        b.add_read(10, 1);
+        b.merge(&a);
+        assert_eq!(b.bytes_read, 110);
+        assert_eq!(b.bytes_written, 50);
+        assert_eq!(b.records_read, 3);
+        let m = DiskModel::pure_bandwidth(1.0, 2.0);
+        assert!((b.disk_secs(&m) - (110.0 + 100.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,126 @@
+//! Key-value record codec.
+//!
+//! A tall-and-skinny matrix in HDFS is a collection of key-value pairs:
+//! the key identifies a row (the paper uses 32-byte strings, `K = 32`
+//! in its Table III byte counts), the value is the row's `n` doubles.
+//! We keep the exact same layout so the engine's measured byte counts
+//! line up with the paper's formulas.
+
+/// Key size in bytes — matches the paper's `K = 32`.
+pub const KEY_BYTES: usize = 32;
+
+/// One key-value pair in a DFS file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub key: Vec<u8>,
+    pub value: Vec<u8>,
+}
+
+impl Record {
+    pub fn new(key: Vec<u8>, value: Vec<u8>) -> Self {
+        Record { key, value }
+    }
+
+    /// Bytes this record occupies on (simulated) disk.
+    pub fn size_bytes(&self) -> u64 {
+        (self.key.len() + self.value.len()) as u64
+    }
+}
+
+/// 32-byte row key: zero-padded decimal of the global row id (a stand-in
+/// for the paper's uuid-derived strings, same byte count).
+pub fn row_key(row_id: u64) -> Vec<u8> {
+    let s = format!("{:0width$}", row_id, width = KEY_BYTES);
+    debug_assert_eq!(s.len(), KEY_BYTES);
+    s.into_bytes()
+}
+
+/// Encode a row of f64 as little-endian bytes.
+pub fn encode_row(row: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(row.len() * 8);
+    for v in row {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a little-endian f64 row.
+pub fn decode_row(bytes: &[u8]) -> Vec<f64> {
+    assert!(bytes.len() % 8 == 0, "row byte length not a multiple of 8");
+    bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Encode an `r × c` matrix header + data as a single record value
+/// (used for Q/R factor shipping between steps: the paper emits whole
+/// factors keyed by task id).
+pub fn encode_matrix(rows: usize, cols: usize, data: &[f64]) -> Vec<u8> {
+    assert_eq!(data.len(), rows * cols);
+    let mut out = Vec::with_capacity(16 + data.len() * 8);
+    out.extend_from_slice(&(rows as u64).to_le_bytes());
+    out.extend_from_slice(&(cols as u64).to_le_bytes());
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a matrix record value -> (rows, cols, data).
+pub fn decode_matrix(bytes: &[u8]) -> (usize, usize, Vec<f64>) {
+    assert!(bytes.len() >= 16, "matrix record too short");
+    let rows = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+    let cols = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let data = decode_row(&bytes[16..]);
+    assert_eq!(data.len(), rows * cols, "matrix record size mismatch");
+    (rows, cols, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_key_is_32_bytes_and_ordered() {
+        assert_eq!(row_key(0).len(), KEY_BYTES);
+        assert_eq!(row_key(u64::MAX / 2).len(), KEY_BYTES);
+        assert!(row_key(5) < row_key(50));
+        assert!(row_key(99) < row_key(100));
+    }
+
+    #[test]
+    fn row_roundtrip() {
+        let row = vec![1.5, -2.25, 0.0, f64::MIN_POSITIVE, 1e300];
+        assert_eq!(decode_row(&encode_row(&row)), row);
+    }
+
+    #[test]
+    fn row_roundtrip_preserves_bits() {
+        let row = vec![-0.0, f64::NAN];
+        let back = decode_row(&encode_row(&row));
+        assert_eq!(back[0].to_bits(), (-0.0f64).to_bits());
+        assert!(back[1].is_nan());
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let data: Vec<f64> = (0..12).map(|i| i as f64 * 0.5).collect();
+        let enc = encode_matrix(3, 4, &data);
+        let (r, c, d) = decode_matrix(&enc);
+        assert_eq!((r, c), (3, 4));
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn record_size() {
+        let rec = Record::new(row_key(7), encode_row(&[1.0, 2.0]));
+        assert_eq!(rec.size_bytes(), 32 + 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn decode_bad_length_panics() {
+        decode_row(&[0u8; 7]);
+    }
+}

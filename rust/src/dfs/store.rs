@@ -1,0 +1,215 @@
+//! The simulated distributed file store.
+//!
+//! Files are named sequences of [`Record`]s held in memory (the *real*
+//! disk is irrelevant — what matters for reproducing the paper is the
+//! byte accounting, which [`Dfs`] performs on every access). Reads and
+//! writes return/consume whole files or splits, mirroring how Hadoop
+//! streams splits into map tasks.
+
+use super::records::Record;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Named key-value file store with byte accounting.
+///
+/// Each file carries a *virtual byte scale* (default 1.0): the virtual
+/// disk clock charges `actual bytes × scale`. Scaled-down reproductions
+/// mark matrix-sized files (`O(m·n)` data) with the workload scale while
+/// factor/metadata files (`O(m₁·n²)`) stay at 1.0 — because when the
+/// simulation runs the paper's real task counts, those files already
+/// have paper-scale size (see DESIGN.md §2).
+#[derive(Debug, Default)]
+pub struct Dfs {
+    files: BTreeMap<String, Vec<Record>>,
+    scales: BTreeMap<String, f64>,
+}
+
+impl Dfs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Virtual-byte multiplier of a file (1.0 if unset).
+    pub fn scale(&self, name: &str) -> f64 {
+        self.scales.get(name).copied().unwrap_or(1.0)
+    }
+
+    /// Mark a file's virtual byte scale.
+    pub fn set_scale(&mut self, name: &str, scale: f64) {
+        if scale == 1.0 {
+            self.scales.remove(name);
+        } else {
+            self.scales.insert(name.to_string(), scale);
+        }
+    }
+
+    /// Virtual bytes of a file (`actual × scale`).
+    pub fn virtual_bytes(&self, name: &str) -> Result<f64> {
+        Ok(self.file_bytes(name)? as f64 * self.scale(name))
+    }
+
+    /// Create/overwrite a file from records.
+    pub fn put(&mut self, name: &str, records: Vec<Record>) {
+        self.files.insert(name.to_string(), records);
+    }
+
+    /// Append records to a file (creating it if needed).
+    pub fn append(&mut self, name: &str, mut records: Vec<Record>) {
+        self.files.entry(name.to_string()).or_default().append(&mut records);
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.files.contains_key(name)
+    }
+
+    pub fn delete(&mut self, name: &str) -> bool {
+        self.files.remove(name).is_some()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&[Record]> {
+        match self.files.get(name) {
+            Some(recs) => Ok(recs),
+            None => bail!("dfs: no such file {name:?}"),
+        }
+    }
+
+    /// Total bytes of a file (what a full scan reads).
+    pub fn file_bytes(&self, name: &str) -> Result<u64> {
+        Ok(self.get(name)?.iter().map(|r| r.size_bytes()).sum())
+    }
+
+    pub fn file_records(&self, name: &str) -> Result<usize> {
+        Ok(self.get(name)?.len())
+    }
+
+    pub fn list(&self) -> Vec<&str> {
+        self.files.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Split a file into `nsplits` contiguous row-range splits
+    /// (record index ranges), like HDFS input splits. Splits are as
+    /// even as possible; trailing splits may be one record shorter.
+    pub fn splits(&self, name: &str, nsplits: usize) -> Result<Vec<(usize, usize)>> {
+        let n = self.file_records(name)?;
+        if nsplits == 0 {
+            bail!("dfs: zero splits requested");
+        }
+        let nsplits = nsplits.min(n.max(1));
+        let base = n / nsplits;
+        let extra = n % nsplits;
+        let mut out = Vec::with_capacity(nsplits);
+        let mut start = 0;
+        for i in 0..nsplits {
+            let len = base + usize::from(i < extra);
+            out.push((start, start + len));
+            start += len;
+        }
+        Ok(out)
+    }
+
+    /// Records of one split.
+    pub fn read_split(&self, name: &str, split: (usize, usize)) -> Result<&[Record]> {
+        let recs = self.get(name)?;
+        if split.1 > recs.len() || split.0 > split.1 {
+            bail!("dfs: bad split {split:?} for {name:?} ({} records)", recs.len());
+        }
+        Ok(&recs[split.0..split.1])
+    }
+
+    /// Total bytes stored (the paper reports "HDFS Size (GB)").
+    pub fn total_bytes(&self) -> u64 {
+        self.files
+            .values()
+            .map(|f| f.iter().map(|r| r.size_bytes()).sum::<u64>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::records::{encode_row, row_key};
+
+    fn mk_records(n: usize, cols: usize) -> Vec<Record> {
+        (0..n)
+            .map(|i| Record::new(row_key(i as u64), encode_row(&vec![i as f64; cols])))
+            .collect()
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut dfs = Dfs::new();
+        let recs = mk_records(5, 3);
+        dfs.put("a", recs.clone());
+        assert_eq!(dfs.get("a").unwrap(), &recs[..]);
+        assert!(dfs.exists("a"));
+        assert!(!dfs.exists("b"));
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let dfs = Dfs::new();
+        assert!(dfs.get("nope").is_err());
+    }
+
+    #[test]
+    fn append_grows() {
+        let mut dfs = Dfs::new();
+        dfs.append("a", mk_records(2, 1));
+        dfs.append("a", mk_records(3, 1));
+        assert_eq!(dfs.file_records("a").unwrap(), 5);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let mut dfs = Dfs::new();
+        dfs.put("a", mk_records(10, 4));
+        // 10 rows × (32 key + 32 value)
+        assert_eq!(dfs.file_bytes("a").unwrap(), 10 * (32 + 32));
+        assert_eq!(dfs.total_bytes(), 640);
+    }
+
+    #[test]
+    fn splits_cover_exactly() {
+        let mut dfs = Dfs::new();
+        dfs.put("a", mk_records(10, 1));
+        for nsplits in 1..=12 {
+            let splits = dfs.splits("a", nsplits).unwrap();
+            let total: usize = splits.iter().map(|(s, e)| e - s).sum();
+            assert_eq!(total, 10, "nsplits={nsplits}");
+            // contiguous & ordered
+            let mut prev = 0;
+            for &(s, e) in &splits {
+                assert_eq!(s, prev);
+                assert!(e >= s);
+                prev = e;
+            }
+        }
+    }
+
+    #[test]
+    fn splits_balanced() {
+        let mut dfs = Dfs::new();
+        dfs.put("a", mk_records(10, 1));
+        let splits = dfs.splits("a", 4).unwrap();
+        let sizes: Vec<usize> = splits.iter().map(|(s, e)| e - s).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn read_split_bounds_checked() {
+        let mut dfs = Dfs::new();
+        dfs.put("a", mk_records(4, 1));
+        assert!(dfs.read_split("a", (2, 4)).is_ok());
+        assert!(dfs.read_split("a", (2, 5)).is_err());
+    }
+
+    #[test]
+    fn delete_removes() {
+        let mut dfs = Dfs::new();
+        dfs.put("a", mk_records(1, 1));
+        assert!(dfs.delete("a"));
+        assert!(!dfs.delete("a"));
+        assert!(!dfs.exists("a"));
+    }
+}

@@ -1,0 +1,35 @@
+//! # mrtsqr — Direct QR factorizations for tall-and-skinny matrices
+//!
+//! A rust + JAX + Pallas reproduction of Benson, Gleich & Demmel,
+//! *"Direct QR factorizations for tall-and-skinny matrices in MapReduce
+//! architectures"* (IEEE BigData 2013).
+//!
+//! The system is a three-layer stack:
+//!
+//! * **L3 (this crate)** — the MapReduce coordinator: a Hadoop-like
+//!   engine ([`mapreduce`]) over a simulated HDFS ([`dfs`]) with a
+//!   disk-bandwidth virtual clock, plus the paper's algorithms
+//!   ([`coordinator`]): Cholesky QR, Indirect TSQR, `A·R⁻¹` (+ iterative
+//!   refinement), **Direct TSQR** (the paper's contribution), its
+//!   recursive extension, Householder QR, and the TSVD extension.
+//! * **L2/L1 (python, build-time only)** — per-task block computations
+//!   (local Householder QR, Gram, tall×small matmul) authored as Pallas
+//!   kernels inside JAX functions, AOT-lowered to HLO text once by
+//!   `make artifacts`, and executed from rust via the PJRT CPU client
+//!   ([`runtime`]). Python is never on the request path.
+//!
+//! Pure-rust dense linear algebra ([`linalg`]) provides the serial
+//! `n×n` steps the paper runs on a single node (Cholesky, `R⁻¹`,
+//! Jacobi SVD) and an independent correctness oracle.
+
+pub mod coordinator;
+pub mod dfs;
+pub mod linalg;
+pub mod mapreduce;
+pub mod perfmodel;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+pub use coordinator::{Algorithm, Coordinator};
+pub use linalg::Matrix;

@@ -1,0 +1,102 @@
+//! Serial Cholesky factorization — the Cholesky-QR reduce-side step.
+//!
+//! The paper's Cholesky QR computes `AᵀA` in MapReduce, gathers the
+//! small `n×n` Gram matrix on one node, and factors it serially. The
+//! crucial *failure mode* (Fig. 6): `cond(AᵀA) = cond(A)²`, so for
+//! `cond(A) ≳ 1e8` the Gram matrix is numerically indefinite and the
+//! factorization **breaks down** — surfaced here as
+//! [`CholeskyError::NotPositiveDefinite`] rather than NaNs.
+
+use super::matrix::Matrix;
+use thiserror::Error;
+
+#[derive(Debug, Error, Clone, PartialEq)]
+pub enum CholeskyError {
+    #[error("matrix is not positive definite (pivot {pivot:.3e} at index {index}) — for Cholesky QR this means cond(A)^2 exceeded 1/eps")]
+    NotPositiveDefinite { index: usize, pivot: f64 },
+    #[error("matrix is not square: {rows}x{cols}")]
+    NotSquare { rows: usize, cols: usize },
+}
+
+/// Lower-triangular `L` with `A = L·Lᵀ` (Cholesky–Banachiewicz).
+pub fn cholesky(a: &Matrix) -> Result<Matrix, CholeskyError> {
+    if a.rows != a.cols {
+        return Err(CholeskyError::NotSquare { rows: a.rows, cols: a.cols });
+    }
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return Err(CholeskyError::NotPositiveDefinite { index: i, pivot: s });
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn factors_spd() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(40, 6, &mut rng);
+        let g = a.gram();
+        let l = cholesky(&g).unwrap();
+        let recon = g.sub(&l.matmul(&l.transpose()));
+        assert!(recon.max_abs() < 1e-10 * g.max_abs());
+        assert!(l.transpose().is_upper_triangular(0.0));
+    }
+
+    #[test]
+    fn known_2x2() {
+        let a = Matrix::from_rows(2, 2, vec![4.0, 2.0, 2.0, 5.0]);
+        let l = cholesky(&a).unwrap();
+        assert!((l[(0, 0)] - 2.0).abs() < 1e-15);
+        assert!((l[(1, 0)] - 1.0).abs() < 1e-15);
+        assert!((l[(1, 1)] - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        match cholesky(&a) {
+            Err(CholeskyError::NotPositiveDefinite { index: 1, .. }) => {}
+            other => panic!("expected breakdown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_nonsquare() {
+        let a = Matrix::zeros(2, 3);
+        assert!(matches!(cholesky(&a), Err(CholeskyError::NotSquare { .. })));
+    }
+
+    #[test]
+    fn breaks_down_past_condition_1e8() {
+        // The paper's Fig. 6 phenomenon: gram of cond ~ 1e9 matrix fails.
+        let mut rng = Rng::new(2);
+        let a = crate::linalg::matrix_with_condition(80, 8, 1e9, &mut rng);
+        let g = a.gram();
+        assert!(cholesky(&g).is_err(), "expected κ² breakdown");
+    }
+
+    #[test]
+    fn survives_condition_1e6() {
+        let mut rng = Rng::new(3);
+        let a = crate::linalg::matrix_with_condition(80, 8, 1e6, &mut rng);
+        assert!(cholesky(&a.gram()).is_ok());
+    }
+}

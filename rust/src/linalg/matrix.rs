@@ -1,0 +1,363 @@
+//! Row-major dense matrix with the operations the coordinator needs.
+
+use crate::util::rng::Rng;
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Row-major `rows × cols` matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.gaussian()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Rows `[start, end)` as a new matrix.
+    pub fn slice_rows(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.rows);
+        Matrix {
+            rows: end - start,
+            cols: self.cols,
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+        }
+    }
+
+    /// Leading `r × c` principal block.
+    pub fn block(&self, r: usize, c: usize) -> Matrix {
+        assert!(r <= self.rows && c <= self.cols);
+        Matrix::from_fn(r, c, |i, j| self[(i, j)])
+    }
+
+    /// Stack matrices vertically (all must share `cols`).
+    pub fn vstack(parts: &[&Matrix]) -> Matrix {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        let rows = parts.iter().map(|p| {
+            assert_eq!(p.cols, cols, "vstack column mismatch");
+            p.rows
+        }).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// `self · other` (naive triple loop with the k-loop innermost on
+    /// rows — cache-friendly for row-major data).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ · self` — the Gram matrix (exploits symmetry).
+    pub fn gram(&self) -> Matrix {
+        let n = self.cols;
+        let mut g = Matrix::zeros(n, n);
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for a in 0..n {
+                let ra = r[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                for b in a..n {
+                    g[(a, b)] += ra * r[b];
+                }
+            }
+        }
+        for a in 0..n {
+            for b in 0..a {
+                g[(a, b)] = g[(b, a)];
+            }
+        }
+        g
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| v * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Spectral norm ‖·‖₂ via power iteration on `AᵀA` (the error
+    /// metrics in the paper are 2-norms of small matrices).
+    pub fn norm2(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        let g = if self.rows >= self.cols {
+            self.gram()
+        } else {
+            self.transpose().gram()
+        };
+        let n = g.rows;
+        let mut v = vec![1.0 / (n as f64).sqrt(); n];
+        let mut lambda = 0.0f64;
+        for _ in 0..200 {
+            let mut w = vec![0.0; n];
+            for i in 0..n {
+                let gr = g.row(i);
+                w[i] = gr.iter().zip(&v).map(|(a, b)| a * b).sum();
+            }
+            let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm == 0.0 {
+                return 0.0;
+            }
+            let next = norm;
+            for x in &mut w {
+                *x /= norm;
+            }
+            v = w;
+            if (next - lambda).abs() <= 1e-13 * next.max(1.0) {
+                lambda = next;
+                break;
+            }
+            lambda = next;
+        }
+        lambda.max(0.0).sqrt()
+    }
+
+    /// `‖QᵀQ − I‖₂` — the paper's orthogonality loss metric.
+    pub fn orthogonality_error(&self) -> f64 {
+        let mut g = self.gram();
+        for i in 0..g.rows {
+            g[(i, i)] -= 1.0;
+        }
+        g.norm2()
+    }
+
+    /// Max |aᵢⱼ| — used for exactness assertions.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+
+    pub fn is_upper_triangular(&self, tol: f64) -> bool {
+        for i in 0..self.rows {
+            for j in 0..i.min(self.cols) {
+                if self[(i, j)].abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show = self.rows.min(6);
+        for i in 0..show {
+            write!(f, "  [")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}]", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > show {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut m = Matrix::zeros(3, 2);
+        m[(2, 1)] = 5.0;
+        assert_eq!(m[(2, 1)], 5.0);
+        assert_eq!(m.row(2), &[0.0, 5.0]);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_rows(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_rows(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(5, 3, &mut rng);
+        let c = a.matmul(&Matrix::identity(3));
+        assert_eq!(c.data, a.data);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::gaussian(20, 4, &mut rng);
+        let g1 = a.gram();
+        let g2 = a.transpose().matmul(&a);
+        assert!(g1.sub(&g2).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn vstack_and_slice() {
+        let a = Matrix::from_rows(1, 2, vec![1.0, 2.0]);
+        let b = Matrix::from_rows(2, 2, vec![3.0, 4.0, 5.0, 6.0]);
+        let s = Matrix::vstack(&[&a, &b]);
+        assert_eq!(s.rows, 3);
+        assert_eq!(s.slice_rows(1, 3).data, b.data);
+    }
+
+    #[test]
+    fn norm2_of_diag() {
+        let mut d = Matrix::zeros(3, 3);
+        d[(0, 0)] = 3.0;
+        d[(1, 1)] = -7.0;
+        d[(2, 2)] = 2.0;
+        assert!((d.norm2() - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn norm2_matches_frob_for_rank1() {
+        // rank-1: ||A||_2 == ||A||_F
+        let u = Matrix::from_rows(3, 1, vec![1.0, 2.0, 2.0]);
+        let v = Matrix::from_rows(1, 2, vec![3.0, 4.0]);
+        let a = u.matmul(&v);
+        assert!((a.norm2() - a.frob_norm()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn orthogonality_error_of_identity_cols() {
+        let q = Matrix::from_fn(6, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+        assert!(q.orthogonality_error() < 1e-12);
+    }
+
+    #[test]
+    fn upper_triangular_check() {
+        let mut r = Matrix::zeros(3, 3);
+        r[(0, 1)] = 1.0;
+        assert!(r.is_upper_triangular(0.0));
+        r[(2, 0)] = 0.5;
+        assert!(!r.is_upper_triangular(1e-12));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(4, 7, &mut rng);
+        assert_eq!(a.transpose().transpose().data, a.data);
+    }
+}

@@ -1,0 +1,25 @@
+//! Pure-rust dense linear algebra substrate.
+//!
+//! The paper's MapReduce algorithms interleave *distributed* block
+//! computations (routed through the PJRT artifacts, see [`crate::runtime`])
+//! with *serial* `n×n` steps executed on the coordinator node: the
+//! Cholesky factorization of `AᵀA`, the triangular inverse for
+//! `Q = A·R⁻¹`, the step-2 QR of the stacked R factors, and the small
+//! SVD of `R̃` for the TSVD extension. This module implements those,
+//! plus an independent oracle for every distributed kernel and the
+//! prescribed-condition-number matrix generator used by the stability
+//! study (paper Fig. 6).
+
+pub mod cholesky;
+pub mod matgen;
+pub mod matrix;
+pub mod qr;
+pub mod svd;
+pub mod trisolve;
+
+pub use cholesky::{cholesky, CholeskyError};
+pub use matgen::{matrix_with_condition, random_orthogonal};
+pub use matrix::Matrix;
+pub use qr::householder_qr;
+pub use svd::jacobi_svd;
+pub use trisolve::{back_substitute, tri_inverse_upper};

@@ -1,0 +1,184 @@
+//! Serial Householder QR — the coordinator-side factorization.
+//!
+//! Used for (a) the step-2 factorization of the stacked `R` factors when
+//! routed on the leader instead of through PJRT, (b) the iterative-
+//! refinement inner QR, and (c) as an independent oracle against the
+//! Pallas `qr_panel` kernel in tests. Same algorithm as the kernel:
+//! column-wise Householder reflections, thin `Q` formed by applying the
+//! reflectors to `[I; 0]` in reverse.
+
+use super::matrix::Matrix;
+
+/// Thin QR factorization: `a (m×n, m ≥ n) -> (Q m×n, R n×n)`.
+///
+/// Numerically stable (backward error and orthogonality both `O(ε)`),
+/// which is exactly the property the paper's Direct TSQR inherits.
+pub fn householder_qr(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "householder_qr requires m >= n, got {m}x{n}");
+    let mut work = a.clone();
+    // Reflectors stored column-wise: v_j lives in vs[j*m..(j+1)*m].
+    let mut vs = vec![0.0f64; m * n];
+
+    for j in 0..n {
+        // x = work[j.., j]; norm with scaling for overflow safety.
+        let mut normx = 0.0f64;
+        for i in j..m {
+            normx = normx.hypot(work[(i, j)]);
+        }
+        let v = &mut vs[j * m..(j + 1) * m];
+        for i in j..m {
+            v[i] = work[(i, j)];
+        }
+        if normx > 0.0 {
+            let alpha = if v[j] >= 0.0 { -normx } else { normx };
+            v[j] -= alpha;
+        }
+        let vnorm2: f64 = v[j..].iter().map(|x| x * x).sum();
+        let beta = if vnorm2 > 0.0 { 2.0 / vnorm2 } else { 0.0 };
+        // trailing update: work -= v (beta vᵀ work)
+        for col in j..n {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i] * work[(i, col)];
+            }
+            let s = beta * dot;
+            if s != 0.0 {
+                for i in j..m {
+                    work[(i, col)] -= s * v[i];
+                }
+            }
+        }
+    }
+
+    // R = upper triangle of the leading n rows.
+    let mut r = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r[(i, j)] = work[(i, j)];
+        }
+    }
+
+    // Thin Q = H_0 … H_{n-1} [I; 0].
+    let mut q = Matrix::from_fn(m, n, |i, j| if i == j { 1.0 } else { 0.0 });
+    for j in (0..n).rev() {
+        let v = &vs[j * m..(j + 1) * m];
+        let vnorm2: f64 = v[j..].iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        let beta = 2.0 / vnorm2;
+        for col in 0..n {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i] * q[(i, col)];
+            }
+            let s = beta * dot;
+            if s != 0.0 {
+                for i in j..m {
+                    q[(i, col)] -= s * v[i];
+                }
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Sign-normalize a thin QR pair so `diag(R) ≥ 0` (QR is unique only up
+/// to column signs; tests compare normalized factors).
+pub fn sign_normalize(q: &mut Matrix, r: &mut Matrix) {
+    let n = r.rows;
+    for j in 0..n {
+        if r[(j, j)] < 0.0 {
+            for k in j..r.cols {
+                r[(j, k)] = -r[(j, k)];
+            }
+            for i in 0..q.rows {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check_qr(a: &Matrix, tol: f64) {
+        let (q, r) = householder_qr(a);
+        let recon_err = a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm().max(1e-300);
+        assert!(recon_err < tol, "||A-QR||/||A|| = {recon_err}");
+        assert!(q.orthogonality_error() < tol, "orth {}", q.orthogonality_error());
+        assert!(r.is_upper_triangular(1e-14 * a.frob_norm().max(1.0)));
+    }
+
+    #[test]
+    fn random_tall() {
+        let mut rng = Rng::new(1);
+        for &(m, n) in &[(8usize, 4usize), (50, 10), (200, 25), (64, 64)] {
+            check_qr(&Matrix::gaussian(m, n, &mut rng), 1e-13);
+        }
+    }
+
+    #[test]
+    fn single_column() {
+        let a = Matrix::from_rows(4, 1, vec![3.0, 0.0, 4.0, 0.0]);
+        let (q, r) = householder_qr(&a);
+        assert!((r[(0, 0)].abs() - 5.0).abs() < 1e-14);
+        assert!(q.orthogonality_error() < 1e-14);
+    }
+
+    #[test]
+    fn zero_column_no_nan() {
+        let mut rng = Rng::new(4);
+        let mut a = Matrix::gaussian(16, 4, &mut rng);
+        for i in 0..16 {
+            a[(i, 2)] = 0.0;
+        }
+        let (q, r) = householder_qr(&a);
+        assert!(q.data.iter().all(|v| v.is_finite()));
+        let recon = a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm();
+        assert!(recon < 1e-13);
+    }
+
+    #[test]
+    fn ill_conditioned_orthogonality() {
+        // Columns spanning 14 orders of magnitude: Q must stay orthogonal.
+        let mut rng = Rng::new(5);
+        let mut a = Matrix::gaussian(100, 8, &mut rng);
+        for j in 0..8 {
+            let s = 10f64.powi(-(2 * j as i32));
+            for i in 0..100 {
+                a[(i, j)] *= s;
+            }
+        }
+        let (q, _) = householder_qr(&a);
+        assert!(q.orthogonality_error() < 1e-13);
+    }
+
+    #[test]
+    fn matches_gram_cholesky_r() {
+        // |R| from QR == chol(AᵀA) up to signs, for well-conditioned A.
+        let mut rng = Rng::new(6);
+        let a = Matrix::gaussian(60, 5, &mut rng);
+        let (mut q, mut r) = householder_qr(&a);
+        sign_normalize(&mut q, &mut r);
+        let l = crate::linalg::cholesky(&a.gram()).unwrap();
+        let lt = l.transpose();
+        assert!(r.sub(&lt).max_abs() < 1e-10 * r.max_abs());
+    }
+
+    #[test]
+    fn sign_normalize_makes_diag_nonneg() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::gaussian(30, 6, &mut rng);
+        let (mut q, mut r) = householder_qr(&a);
+        sign_normalize(&mut q, &mut r);
+        for j in 0..6 {
+            assert!(r[(j, j)] >= 0.0);
+        }
+        let recon = a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm();
+        assert!(recon < 1e-13);
+    }
+}

@@ -1,0 +1,232 @@
+//! One-sided Jacobi SVD for small square matrices.
+//!
+//! The TSVD extension (paper §III-B, last paragraph) factors the final
+//! `R̃ = U Σ Vᵀ` on the leader — `R̃` is n×n so any robust serial SVD
+//! works. One-sided Jacobi is simple, accurate (it computes small
+//! singular values to high relative accuracy, which the stability
+//! example exploits), and dependency-free.
+
+use super::matrix::Matrix;
+
+/// Result of `a = U · diag(sigma) · Vᵀ`.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Matrix,
+    pub sigma: Vec<f64>,
+    pub v: Matrix,
+}
+
+/// One-sided Jacobi SVD of a square matrix.
+///
+/// Rotates column pairs of `W = A·V` until all pairs are orthogonal;
+/// then `sigma_j = ‖w_j‖`, `u_j = w_j/sigma_j`. Singular values are
+/// returned in descending order.
+pub fn jacobi_svd(a: &Matrix) -> Svd {
+    let n = a.rows;
+    assert_eq!(a.cols, n, "jacobi_svd expects square input");
+    let mut w = a.clone();
+    let mut v = Matrix::identity(n);
+    let eps = f64::EPSILON;
+
+    // Cyclic sweeps until convergence (bounded for safety).
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // 2x2 Gram entries for columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..n {
+                    let (wp, wq) = (w[(i, p)], w[(i, q)]);
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(f64::MIN_POSITIVE));
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation annihilating the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..n {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    w[(i, p)] = c * wp - s * wq;
+                    w[(i, q)] = s * wp + c * wq;
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off <= 4.0 * eps {
+            break;
+        }
+    }
+
+    // Extract sigma and U; handle (numerically) zero columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| (0..n).map(|i| w[(i, j)] * w[(i, j)]).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+
+    let mut u = Matrix::zeros(n, n);
+    let mut sigma = vec![0.0; n];
+    let mut vv = Matrix::zeros(n, n);
+    let mut zero_cols = Vec::new();
+    for (newj, &oldj) in order.iter().enumerate() {
+        sigma[newj] = norms[oldj];
+        if norms[oldj] > 0.0 {
+            for i in 0..n {
+                u[(i, newj)] = w[(i, oldj)] / norms[oldj];
+            }
+        } else {
+            zero_cols.push(newj);
+        }
+        for i in 0..n {
+            vv[(i, newj)] = v[(i, oldj)];
+        }
+    }
+    // Rank-deficient input: complete U to an orthonormal basis by
+    // Gram-Schmidt of canonical vectors against the existing columns.
+    for &j in &zero_cols {
+        let mut best: Option<Vec<f64>> = None;
+        for cand in 0..n {
+            let mut e = vec![0.0f64; n];
+            e[cand] = 1.0;
+            for col in 0..n {
+                if sigma[col] > 0.0 || col < j {
+                    let dot: f64 = (0..n).map(|i| u[(i, col)] * e[i]).sum();
+                    for (i, ei) in e.iter_mut().enumerate() {
+                        *ei -= dot * u[(i, col)];
+                    }
+                }
+            }
+            let norm = e.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 0.5 {
+                for x in &mut e {
+                    *x /= norm;
+                }
+                best = Some(e);
+                break;
+            }
+            if best.is_none() && norm > 1e-8 {
+                for x in &mut e {
+                    *x /= norm;
+                }
+                best = Some(e);
+            }
+        }
+        if let Some(e) = best {
+            for i in 0..n {
+                u[(i, j)] = e[i];
+            }
+        } else {
+            u[(j, j)] = 1.0; // unreachable for n >= 1 in practice
+        }
+    }
+    Svd { u, sigma, v: vv }
+}
+
+impl Svd {
+    /// Reconstruct `U Σ Vᵀ`.
+    pub fn reconstruct(&self) -> Matrix {
+        let n = self.sigma.len();
+        let mut us = self.u.clone();
+        for j in 0..n {
+            for i in 0..us.rows {
+                us[(i, j)] *= self.sigma[j];
+            }
+        }
+        us.matmul(&self.v.transpose())
+    }
+
+    /// cond₂ = sigma_max / sigma_min (inf if singular).
+    pub fn condition_number(&self) -> f64 {
+        let smax = self.sigma.first().copied().unwrap_or(0.0);
+        let smin = self.sigma.last().copied().unwrap_or(0.0);
+        if smin == 0.0 {
+            f64::INFINITY
+        } else {
+            smax / smin
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check(a: &Matrix, tol: f64) {
+        let svd = jacobi_svd(a);
+        let recon = a.sub(&svd.reconstruct()).frob_norm() / a.frob_norm().max(1e-300);
+        assert!(recon < tol, "recon {recon}");
+        assert!(svd.u.orthogonality_error() < tol);
+        assert!(svd.v.orthogonality_error() < tol);
+        for w in svd.sigma.windows(2) {
+            assert!(w[0] >= w[1], "sigma not sorted: {:?}", svd.sigma);
+        }
+    }
+
+    #[test]
+    fn random_square() {
+        let mut rng = Rng::new(1);
+        for &n in &[1usize, 2, 5, 10, 25] {
+            check(&Matrix::gaussian(n, n, &mut rng), 1e-12);
+        }
+    }
+
+    #[test]
+    fn diagonal_exact() {
+        let mut d = Matrix::zeros(3, 3);
+        d[(0, 0)] = 3.0;
+        d[(1, 1)] = -1.0;
+        d[(2, 2)] = 2.0;
+        let svd = jacobi_svd(&d);
+        let s = &svd.sigma;
+        assert!((s[0] - 3.0).abs() < 1e-14);
+        assert!((s[1] - 2.0).abs() < 1e-14);
+        assert!((s[2] - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn singular_matrix() {
+        // rank-1
+        let u = Matrix::from_rows(3, 1, vec![1.0, 2.0, 2.0]);
+        let a = u.matmul(&u.transpose());
+        let svd = jacobi_svd(&a);
+        assert!((svd.sigma[0] - 9.0).abs() < 1e-12);
+        assert!(svd.sigma[1].abs() < 1e-12);
+        check(&a, 1e-12);
+    }
+
+    #[test]
+    fn tiny_singular_values_relative_accuracy() {
+        // A = U diag(1, 1e-8) Vᵀ. Forming A at all perturbs sigma_min by
+        // ~eps·‖A‖ ≈ 1e-16 absolute, i.e. ~1e-8 relative on 1e-8 — the
+        // Jacobi recovery must stay within that inherent limit.
+        let mut rng = Rng::new(2);
+        let q1 = crate::linalg::random_orthogonal(2, &mut rng);
+        let q2 = crate::linalg::random_orthogonal(2, &mut rng);
+        let mut d = Matrix::zeros(2, 2);
+        d[(0, 0)] = 1.0;
+        d[(1, 1)] = 1e-8;
+        let a = q1.matmul(&d).matmul(&q2.transpose());
+        let svd = jacobi_svd(&a);
+        assert!((svd.sigma[1] / 1e-8 - 1.0).abs() < 1e-6, "{:?}", svd.sigma);
+    }
+
+    #[test]
+    fn condition_number() {
+        let mut d = Matrix::zeros(2, 2);
+        d[(0, 0)] = 8.0;
+        d[(1, 1)] = 2.0;
+        let svd = jacobi_svd(&d);
+        assert!((svd.condition_number() - 4.0).abs() < 1e-12);
+    }
+}

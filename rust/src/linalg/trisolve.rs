@@ -1,0 +1,105 @@
+//! Triangular solves and inversion — the `Q = A·R⁻¹` indirect path.
+//!
+//! The paper's indirect methods compute `R⁻¹` serially on the leader
+//! (R is n×n upper triangular, cheap) and broadcast it to the map tasks
+//! that form `A_i · R⁻¹`. This inversion is the *numerically unstable*
+//! step the Direct TSQR avoids: the forward error scales with cond(R).
+
+use super::matrix::Matrix;
+
+/// Solve `R x = b` for upper-triangular `R` by back substitution.
+pub fn back_substitute(r: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = r.rows;
+    assert_eq!(r.cols, n);
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        for j in i + 1..n {
+            x[i] -= r[(i, j)] * x[j];
+        }
+        x[i] /= r[(i, i)];
+    }
+    x
+}
+
+/// Inverse of an upper-triangular matrix (column-by-column back subst).
+///
+/// Returns `None` if a diagonal entry is zero/non-finite (singular R —
+/// the paper assumes full-rank A throughout).
+pub fn tri_inverse_upper(r: &Matrix) -> Option<Matrix> {
+    let n = r.rows;
+    assert_eq!(r.cols, n);
+    for i in 0..n {
+        if r[(i, i)] == 0.0 || !r[(i, i)].is_finite() {
+            return None;
+        }
+    }
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0f64; n];
+    for col in 0..n {
+        e[col] = 1.0;
+        let x = back_substitute(r, &e);
+        e[col] = 0.0;
+        for i in 0..n {
+            inv[(i, col)] = x[i];
+        }
+    }
+    Some(inv)
+}
+
+/// Solve `Lᵀ·x = b` given lower-triangular L (used by Cholesky QR:
+/// `R = Lᵀ`, so `A·R⁻¹` needs `R⁻¹ = L⁻ᵀ`).
+pub fn lower_transpose_inverse(l: &Matrix) -> Option<Matrix> {
+    tri_inverse_upper(&l.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::householder_qr;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn back_substitute_known() {
+        let r = Matrix::from_rows(2, 2, vec![2.0, 1.0, 0.0, 4.0]);
+        let x = back_substitute(&r, &[4.0, 8.0]);
+        assert_eq!(x, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn inverse_times_r_is_identity() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(30, 6, &mut rng);
+        let (_, r) = householder_qr(&a);
+        let rinv = tri_inverse_upper(&r).unwrap();
+        let eye = r.matmul(&rinv);
+        let mut err = eye.clone();
+        for i in 0..6 {
+            err[(i, i)] -= 1.0;
+        }
+        assert!(err.max_abs() < 1e-12);
+        // R⁻¹ of upper triangular is upper triangular
+        assert!(rinv.is_upper_triangular(1e-14));
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let mut r = Matrix::identity(3);
+        r[(1, 1)] = 0.0;
+        assert!(tri_inverse_upper(&r).is_none());
+    }
+
+    #[test]
+    fn lower_transpose_matches() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::gaussian(30, 5, &mut rng);
+        let l = crate::linalg::cholesky(&a.gram()).unwrap();
+        let inv = lower_transpose_inverse(&l).unwrap();
+        let eye = l.transpose().matmul(&inv);
+        let mut err = eye;
+        for i in 0..5 {
+            err[(i, i)] -= 1.0;
+        }
+        assert!(err.max_abs() < 1e-10);
+    }
+}

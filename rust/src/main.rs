@@ -1,0 +1,233 @@
+//! `mrtsqr` — CLI for the Direct TSQR MapReduce reproduction.
+//!
+//! ```text
+//! mrtsqr qr        --rows 100000 --cols 25 --algo direct [--pjrt] [--condition 1e8]
+//! mrtsqr svd       --rows 50000  --cols 10 [--pjrt]
+//! mrtsqr stability --rows 5000   --cols 50            # Fig. 6 sweep
+//! mrtsqr faults    --rows 80000  --cols 10 --prob 0.125  # Fig. 7 point
+//! mrtsqr model     --beta-r 64 --beta-w 126            # Tables III-V
+//! mrtsqr info                                          # artifact manifest
+//! ```
+
+use anyhow::{bail, Result};
+use mrtsqr::coordinator::{Algorithm, Coordinator, MatrixHandle};
+use mrtsqr::dfs::DiskModel;
+use mrtsqr::linalg::matrix_with_condition;
+use mrtsqr::mapreduce::{ClusterConfig, Engine, FaultPolicy};
+use mrtsqr::perfmodel::{lower_bound_secs, AlgoKind, StageParallelism, WorkloadShape};
+use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::util::cli::Args;
+use mrtsqr::util::rng::Rng;
+use mrtsqr::util::table::{commas, sci, Table};
+use mrtsqr::workload::{gaussian_matrix, get_matrix, put_matrix};
+
+fn parse_algo(s: &str) -> Result<Algorithm> {
+    Ok(match s {
+        "cholesky" => Algorithm::Cholesky { refine: false },
+        "cholesky-ir" => Algorithm::Cholesky { refine: true },
+        "indirect" => Algorithm::IndirectTsqr { refine: false },
+        "indirect-ir" => Algorithm::IndirectTsqr { refine: true },
+        "direct" => Algorithm::DirectTsqr,
+        "direct-fused" => Algorithm::DirectTsqrFused,
+        "householder" => Algorithm::Householder,
+        other => bail!(
+            "unknown --algo {other:?} (cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder)"
+        ),
+    })
+}
+
+fn build_compute(args: &Args) -> Result<Box<dyn BlockCompute>> {
+    if args.flag("pjrt") {
+        Ok(Box::new(PjrtRuntime::from_default_artifacts()?))
+    } else {
+        Ok(Box::new(NativeRuntime))
+    }
+}
+
+fn make_engine(args: &Args) -> Engine {
+    let model = DiskModel {
+        beta_r: args.get_f64("beta-r", 64.0) * 1e-9,
+        beta_w: args.get_f64("beta-w", 126.0) * 1e-9,
+        byte_scale: args.get_f64("byte-scale", 1.0),
+        iteration_startup_secs: args.get_f64("startup", 15.0),
+        task_startup_secs: args.get_f64("task-startup", 2.0),
+    };
+    let cluster = ClusterConfig {
+        map_slots: args.get_usize("map-slots", 40),
+        reduce_slots: args.get_usize("reduce-slots", 40),
+    };
+    Engine::new(model, cluster)
+}
+
+fn load_input(args: &Args, engine: &mut Engine) -> MatrixHandle {
+    let rows = args.get_usize("rows", 100_000);
+    let cols = args.get_usize("cols", 10);
+    let seed = args.get_u64("seed", 42);
+    if let Some(kappa) = args.get("condition") {
+        let kappa: f64 = kappa.parse().expect("--condition wants a number");
+        let mut rng = Rng::new(seed);
+        let a = matrix_with_condition(rows, cols, kappa, &mut rng);
+        put_matrix(&mut engine.dfs, "A", &a);
+    } else {
+        gaussian_matrix(&mut engine.dfs, "A", rows, cols, seed);
+    }
+    MatrixHandle::new("A", rows, cols)
+}
+
+fn cmd_qr(args: &Args) -> Result<()> {
+    let algo = parse_algo(&args.get_or("algo", "direct"))?;
+    let compute = build_compute(args)?;
+    let mut engine = make_engine(args);
+    let input = load_input(args, &mut engine);
+    let mut coord = Coordinator::new(engine, compute.as_ref());
+    coord.opts.rows_per_task = args.get_usize("rows-per-task", 1000);
+
+    let res = coord.qr(&input, algo)?;
+    println!("algorithm      : {}", algo.name());
+    println!("matrix         : {} x {}", commas(input.rows as u64), input.cols);
+    println!("virtual time   : {:.1} s", res.stats.virtual_secs());
+    println!("wall time      : {:.3} s", res.stats.wall_secs());
+    println!("steps          : {}", res.stats.steps.len());
+    let io = res.stats.total_io();
+    println!("bytes read     : {}", commas(io.bytes_read));
+    println!("bytes written  : {}", commas(io.bytes_written));
+    let a = get_matrix(&coord.engine.dfs, &input.file, input.cols)?;
+    if let Some(qh) = &res.q {
+        let q = get_matrix(&coord.engine.dfs, &qh.file, qh.cols)?;
+        let recon = a.sub(&q.matmul(&res.r)).frob_norm() / a.frob_norm();
+        println!("|A-QR|/|A|     : {}", sci(recon));
+        println!("|QtQ-I|_2      : {}", sci(q.orthogonality_error()));
+    } else {
+        println!("(R-only algorithm — no Q factor)");
+    }
+    Ok(())
+}
+
+fn cmd_svd(args: &Args) -> Result<()> {
+    let compute = build_compute(args)?;
+    let mut engine = make_engine(args);
+    let input = load_input(args, &mut engine);
+    let mut coord = Coordinator::new(engine, compute.as_ref());
+    let out = coord.svd(&input)?;
+    let svd = out.svd.expect("svd parts");
+    println!("TSVD via Direct TSQR — {} x {}", commas(input.rows as u64), input.cols);
+    println!("virtual time : {:.1} s", out.stats.virtual_secs());
+    println!("sigma        : {:?}", &svd.sigma[..svd.sigma.len().min(8)]);
+    Ok(())
+}
+
+fn cmd_stability(args: &Args) -> Result<()> {
+    let compute = build_compute(args)?;
+    let rows = args.get_usize("rows", 5000);
+    let cols = args.get_usize("cols", 50);
+    let mut table = Table::new(
+        "Fig. 6 — |QtQ-I|_2 vs condition number",
+        &["kappa", "Chol", "Chol+IR", "Indirect", "Indirect+IR", "Direct"],
+    );
+    for exp in (1..=16).step_by(3) {
+        let kappa = 10f64.powi(exp);
+        let mut row = vec![format!("1e{exp:02}")];
+        for algo in [
+            Algorithm::Cholesky { refine: false },
+            Algorithm::Cholesky { refine: true },
+            Algorithm::IndirectTsqr { refine: false },
+            Algorithm::IndirectTsqr { refine: true },
+            Algorithm::DirectTsqr,
+        ] {
+            let mut engine = make_engine(args);
+            let mut rng = Rng::new(7);
+            let a = matrix_with_condition(rows, cols, kappa, &mut rng);
+            put_matrix(&mut engine.dfs, "A", &a);
+            let input = MatrixHandle::new("A", rows, cols);
+            let mut coord = Coordinator::new(engine, compute.as_ref());
+            let cell = match coord.qr(&input, algo) {
+                Ok(res) => {
+                    let q = get_matrix(&coord.engine.dfs, &res.q.unwrap().file, cols)?;
+                    sci(q.orthogonality_error())
+                }
+                Err(_) => "breakdown".to_string(),
+            };
+            row.push(cell);
+        }
+        table.row(&row);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_faults(args: &Args) -> Result<()> {
+    let compute = build_compute(args)?;
+    let prob = args.get_f64("prob", 0.125);
+    let mut engine =
+        make_engine(args).with_faults(FaultPolicy::new(prob), args.get_u64("seed", 99));
+    let input = load_input(args, &mut engine);
+    let mut coord = Coordinator::new(engine, compute.as_ref());
+    let res = coord.qr(&input, Algorithm::DirectTsqr)?;
+    println!("fault probability : {prob}");
+    println!("faults injected   : {}", res.stats.total_faults());
+    println!("virtual time      : {:.1} s", res.stats.virtual_secs());
+    Ok(())
+}
+
+fn cmd_model(args: &Args) -> Result<()> {
+    let beta_r = args.get_f64("beta-r", 64.0) * 1e-9;
+    let beta_w = args.get_f64("beta-w", 126.0) * 1e-9;
+    let par = StageParallelism::default();
+    let mut table = Table::new(
+        "Table V — computed lower bounds T_lb (secs)",
+        &["Rows", "Cols", "Cholesky", "Indirect", "Chol+IR", "Ind+IR", "Direct", "House."],
+    );
+    for &(m, n) in &[
+        (4_000_000_000u64, 4u64),
+        (2_500_000_000, 10),
+        (600_000_000, 25),
+        (500_000_000, 50),
+        (150_000_000, 100),
+    ] {
+        let (m1, m1d) = StageParallelism::paper_m1(m, n).unwrap();
+        let mut row = vec![commas(m), n.to_string()];
+        for kind in AlgoKind::ALL {
+            let m1_used = if kind == AlgoKind::DirectTsqr { m1d } else { m1 };
+            let shape = WorkloadShape::new(m, n, m1_used);
+            let t = lower_bound_secs(kind, &shape, &par, beta_r, beta_w);
+            row.push(format!("{:.0}", t));
+        }
+        table.row(&row);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = Manifest::default_dir();
+    let manifest = Manifest::load(&dir)?;
+    println!("artifacts dir : {}", dir.display());
+    println!("modules       : {}", manifest.entries.len());
+    let mut table = Table::new("AOT artifact manifest", &["op", "block rows", "cols", "file"]);
+    for e in &manifest.entries {
+        table.row(&[e.op.name().into(), e.b.to_string(), e.n.to_string(), e.file.clone()]);
+    }
+    table.print();
+    Ok(())
+}
+
+const USAGE: &str = "usage: mrtsqr <qr|svd|stability|faults|model|info> [options]
+  common options: --rows N --cols N --seed N --pjrt --algo <name>
+                  --beta-r s/GB --beta-w s/GB --byte-scale X
+  see README.md for the full list";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("qr") => cmd_qr(&args),
+        Some("svd") => cmd_svd(&args),
+        Some("stability") => cmd_stability(&args),
+        Some("faults") => cmd_faults(&args),
+        Some("model") => cmd_model(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,480 @@
+//! The MapReduce job runner.
+//!
+//! Executes a [`JobSpec`] over the simulated DFS: split → map (with
+//! fault-injected attempts) → shuffle (group + partition) → reduce →
+//! write outputs. Every byte is metered and charged to the virtual disk
+//! clock; the step's virtual duration is the slot-scheduled makespan of
+//! its task durations plus the per-iteration startup, mirroring the
+//! paper's model `T = Σ_j (R_j β_r + W_j β_w)/p_j` with wave effects.
+//!
+//! Tasks execute serially on this process (compute wall time is
+//! measured per task and added to its virtual duration); parallelism is
+//! expressed in the *virtual* schedule, which is what the paper's
+//! evaluation measures.
+
+use super::fault::{draw_attempts, FaultPolicy};
+use super::job::{Emitter, JobSpec};
+use super::metrics::StepStats;
+use super::scheduler::{effective_parallelism, makespan};
+use super::shuffle::{group_by_key, partition};
+use crate::dfs::{Dfs, DiskModel, Record};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// Cluster slot configuration (paper: m_max = r_max = 40).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    pub map_slots: usize,
+    pub reduce_slots: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { map_slots: 40, reduce_slots: 40 }
+    }
+}
+
+/// The engine: DFS + disk model + cluster + fault policy.
+pub struct Engine {
+    pub dfs: Dfs,
+    pub model: DiskModel,
+    pub cluster: ClusterConfig,
+    pub faults: FaultPolicy,
+    rng: Rng,
+}
+
+impl Engine {
+    pub fn new(model: DiskModel, cluster: ClusterConfig) -> Self {
+        Engine {
+            dfs: Dfs::new(),
+            model,
+            cluster,
+            faults: FaultPolicy::none(),
+            rng: Rng::new(0x7153_71A5_u64),
+        }
+    }
+
+    pub fn with_faults(mut self, faults: FaultPolicy, seed: u64) -> Self {
+        self.faults = faults;
+        self.rng = Rng::new(seed);
+        self
+    }
+
+    /// Run one MapReduce job; outputs land in the DFS, metrics returned.
+    pub fn run(&mut self, spec: &JobSpec) -> Result<StepStats> {
+        let wall_start = Instant::now();
+        let mut stats = StepStats { name: spec.name.clone(), ..Default::default() };
+
+        // ---- split input ----
+        let splits = self
+            .dfs
+            .splits(&spec.input, spec.map_tasks)
+            .with_context(|| format!("job {:?}: splitting input", spec.name))?;
+        stats.map_tasks = splits.len();
+
+        // side-input (distributed cache) bytes are read by *every* task
+        let mut side_bytes = 0u64;
+        let mut side_virtual = 0.0f64;
+        let mut side_recs: u64 = 0;
+        for f in &spec.side_inputs {
+            side_bytes += self.dfs.file_bytes(f)?;
+            side_virtual += self.dfs.virtual_bytes(f)?;
+            side_recs += self.dfs.file_records(f)? as u64;
+        }
+        let input_scale = self.dfs.scale(&spec.input);
+
+        // ---- map stage ----
+        let mut map_durations = Vec::with_capacity(splits.len());
+        let mut shuffle_input: Vec<Record> = Vec::new();
+        let mut side_out: Vec<(String, Record)> = Vec::new();
+        for (task_id, &split) in splits.iter().enumerate() {
+            let outcome = {
+                let mut task_rng = self.rng.fork(task_id as u64);
+                draw_attempts(&self.faults, &mut task_rng)
+            };
+            if !outcome.succeeded {
+                bail!("job {:?}: map task {task_id} exceeded max attempts", spec.name);
+            }
+            stats.map_attempts += outcome.attempts;
+            stats.faults += outcome.attempts - 1;
+
+            let input = self.dfs.read_split(&spec.input, split)?;
+            let in_bytes: u64 = input.iter().map(|r| r.size_bytes()).sum();
+            let side_refs: Vec<&[Record]> = spec
+                .side_inputs
+                .iter()
+                .map(|f| self.dfs.get(f))
+                .collect::<Result<_>>()?;
+
+            let mut em = Emitter::new();
+            let t0 = Instant::now();
+            spec.mapper
+                .run(task_id, input, &side_refs, &mut em)
+                .with_context(|| format!("job {:?}: map task {task_id}", spec.name))?;
+            let compute = t0.elapsed().as_secs_f64();
+
+            let out_bytes = em.bytes_emitted();
+            stats.map_io.add_read(in_bytes + side_bytes, input.len() as u64 + side_recs);
+            stats.map_io.add_write(out_bytes, em.records_emitted());
+            stats.map_compute_secs += compute;
+
+            // per-file virtual scaling: input/side at their registered
+            // scales; main emissions at output_scale; side emissions at
+            // their channel's scale
+            let main_bytes: u64 = em.main.iter().map(|r| r.size_bytes()).sum();
+            let mut write_virtual = main_bytes as f64 * spec.output_scale;
+            for (chan, rec) in &em.side {
+                let scale = spec
+                    .side_outputs
+                    .iter()
+                    .find(|(c, _, _)| c == chan)
+                    .map(|(_, _, s)| *s)
+                    .unwrap_or(1.0);
+                write_virtual += rec.size_bytes() as f64 * scale;
+            }
+            let disk = self.model.read_secs_f(in_bytes as f64 * input_scale + side_virtual)
+                + self.model.write_secs_f(write_virtual);
+            map_durations.push(
+                (disk + compute + self.model.task_startup_secs) * outcome.duration_factor,
+            );
+
+            shuffle_input.append(&mut em.main);
+            side_out.append(&mut em.side);
+        }
+        let p_m = effective_parallelism(self.cluster.map_slots, stats.map_tasks, None);
+        let mut virtual_secs =
+            self.model.iteration_startup_secs + makespan(&map_durations, p_m);
+
+        // ---- reduce stage (if any) ----
+        let mut final_output: Vec<Record> = Vec::new();
+        if let Some(reducer) = spec.reducer {
+            let groups = group_by_key(shuffle_input);
+            stats.distinct_keys = groups.len();
+            let parts = partition(groups, spec.reduce_tasks.max(1));
+            stats.reduce_tasks = parts.iter().filter(|p| !p.is_empty()).count();
+
+            let mut reduce_durations = Vec::new();
+            for (rid, part) in parts.into_iter().enumerate() {
+                if part.is_empty() {
+                    continue;
+                }
+                let outcome = {
+                    let mut task_rng = self.rng.fork(0x8000_0000 + rid as u64);
+                    draw_attempts(&self.faults, &mut task_rng)
+                };
+                if !outcome.succeeded {
+                    bail!("job {:?}: reduce task {rid} exceeded max attempts", spec.name);
+                }
+                stats.reduce_attempts += outcome.attempts;
+                stats.faults += outcome.attempts - 1;
+
+                let in_bytes: u64 = part
+                    .iter()
+                    .map(|(k, vs)| {
+                        (k.len() * vs.len()) as u64
+                            + vs.iter().map(|v| v.len() as u64).sum::<u64>()
+                    })
+                    .sum();
+                let in_records: u64 = part.values().map(|v| v.len() as u64).sum();
+
+                let groups: Vec<(Vec<u8>, Vec<Vec<u8>>)> = part.into_iter().collect();
+                let mut em = Emitter::new();
+                let t0 = Instant::now();
+                reducer
+                    .run(&groups, &mut em)
+                    .with_context(|| format!("job {:?}: reduce task {rid}", spec.name))?;
+                let compute = t0.elapsed().as_secs_f64();
+
+                let out_bytes = em.bytes_emitted();
+                stats.reduce_io.add_read(in_bytes, in_records);
+                stats.reduce_io.add_write(out_bytes, em.records_emitted());
+                stats.reduce_compute_secs += compute;
+
+                let main_bytes: u64 = em.main.iter().map(|r| r.size_bytes()).sum();
+                let mut write_virtual = main_bytes as f64 * spec.output_scale;
+                for (chan, rec) in &em.side {
+                    let scale = spec
+                        .side_outputs
+                        .iter()
+                        .find(|(c, _, _)| c == chan)
+                        .map(|(_, _, s)| *s)
+                        .unwrap_or(1.0);
+                    write_virtual += rec.size_bytes() as f64 * scale;
+                }
+                // shuffle traffic carries the main channel's scale
+                let disk = self.model.read_secs_f(in_bytes as f64 * spec.output_scale)
+                    + self.model.write_secs_f(write_virtual);
+                reduce_durations.push(
+                    (disk + compute + self.model.task_startup_secs) * outcome.duration_factor,
+                );
+
+                final_output.append(&mut em.main);
+                side_out.append(&mut em.side);
+            }
+            let p_r = effective_parallelism(
+                self.cluster.reduce_slots,
+                spec.reduce_tasks.max(1),
+                Some(stats.distinct_keys),
+            );
+            virtual_secs += makespan(&reduce_durations, p_r);
+        } else {
+            // map-only job: default channel goes straight to the output
+            final_output = shuffle_input;
+        }
+
+        // ---- write outputs to DFS (registering their virtual scales) ----
+        self.dfs.put(&spec.output, final_output);
+        self.dfs.set_scale(&spec.output, spec.output_scale);
+        // route side-channel records to their configured files
+        for (channel, file, scale) in &spec.side_outputs {
+            let recs: Vec<Record> = side_out
+                .iter()
+                .filter(|(c, _)| c == channel)
+                .map(|(_, r)| r.clone())
+                .collect();
+            self.dfs.put(file, recs);
+            self.dfs.set_scale(file, *scale);
+        }
+        // any side emissions without a configured channel are an error
+        for (c, _) in &side_out {
+            if !spec.side_outputs.iter().any(|(ch, _, _)| ch == c) {
+                bail!("job {:?}: emission to unconfigured side channel {c:?}", spec.name);
+            }
+        }
+
+        stats.virtual_secs = virtual_secs;
+        stats.wall_secs = wall_start.elapsed().as_secs_f64();
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::records::{decode_row, encode_row, row_key};
+    use crate::mapreduce::job::{MapTask, ReduceTask};
+
+    /// Mapper: emits (col_index, value) per element — a toy column sum.
+    struct ColMap;
+    impl MapTask for ColMap {
+        fn run(&self, _: usize, input: &[Record], _: &[&[Record]], out: &mut Emitter) -> Result<()> {
+            for rec in input {
+                for (j, v) in decode_row(&rec.value).into_iter().enumerate() {
+                    out.emit(vec![j as u8], encode_row(&[v]));
+                }
+            }
+            Ok(())
+        }
+    }
+
+    struct SumReduce;
+    impl ReduceTask for SumReduce {
+        fn run(&self, partition: &[(Vec<u8>, Vec<Vec<u8>>)], out: &mut Emitter) -> Result<()> {
+            for (key, values) in partition {
+                let s: f64 = values.iter().map(|v| decode_row(v)[0]).sum();
+                out.emit(key.clone(), encode_row(&[s]));
+            }
+            Ok(())
+        }
+    }
+
+    fn engine_with_input(rows: usize, cols: usize) -> Engine {
+        let mut e = Engine::new(DiskModel::pure_bandwidth(1e-9, 2e-9), ClusterConfig::default());
+        let recs: Vec<Record> = (0..rows)
+            .map(|i| {
+                Record::new(
+                    row_key(i as u64),
+                    encode_row(&(0..cols).map(|j| (i * cols + j) as f64).collect::<Vec<_>>()),
+                )
+            })
+            .collect();
+        e.dfs.put("input", recs);
+        e
+    }
+
+    #[test]
+    fn map_reduce_column_sums() {
+        let mut e = engine_with_input(10, 3);
+        let m = ColMap;
+        let r = SumReduce;
+        let spec = JobSpec::map_reduce("colsum", "input", 4, &m, &r, 2, "out");
+        let stats = e.run(&spec).unwrap();
+        assert_eq!(stats.map_tasks, 4);
+        assert_eq!(stats.distinct_keys, 3);
+        let out = e.dfs.get("out").unwrap();
+        assert_eq!(out.len(), 3);
+        // column j sum over i of (3i + j): 3*45 + 10j
+        for rec in out {
+            let j = rec.key[0] as f64;
+            let got = decode_row(&rec.value)[0];
+            assert!((got - (135.0 + 10.0 * j)).abs() < 1e-9, "col {j} got {got}");
+        }
+    }
+
+    #[test]
+    fn map_only_passes_through() {
+        let mut e = engine_with_input(5, 2);
+        let m = ColMap;
+        let spec = JobSpec::map_only("ids", "input", 2, &m, "out");
+        let stats = e.run(&spec).unwrap();
+        assert_eq!(stats.reduce_tasks, 0);
+        assert_eq!(e.dfs.file_records("out").unwrap(), 10);
+        assert!(stats.virtual_secs > 0.0);
+    }
+
+    #[test]
+    fn io_accounting_matches_file_sizes() {
+        let mut e = engine_with_input(8, 4);
+        let m = ColMap;
+        let r = SumReduce;
+        let spec = JobSpec::map_reduce("acct", "input", 3, &m, &r, 2, "out");
+        let stats = e.run(&spec).unwrap();
+        let input_bytes = e.dfs.file_bytes("input").unwrap();
+        assert_eq!(stats.map_io.bytes_read, input_bytes);
+        // every map emission is later read by some reducer
+        assert_eq!(stats.map_io.bytes_written, stats.reduce_io.bytes_read);
+        assert_eq!(
+            stats.reduce_io.bytes_written,
+            e.dfs.file_bytes("out").unwrap()
+        );
+    }
+
+    #[test]
+    fn faults_increase_attempts_and_time() {
+        let mk = |p: f64, seed: u64| {
+            let mut e = engine_with_input(64, 2);
+            e = Engine {
+                dfs: std::mem::take(&mut e.dfs),
+                ..Engine::new(DiskModel::icme_like(), ClusterConfig::default())
+            }
+            .with_faults(
+                FaultPolicy { probability: p, max_attempts: 16, waste_fraction: 0.5 },
+                seed,
+            );
+            let m = ColMap;
+            let spec = JobSpec::map_only("f", "input", 32, &m, "out");
+            e.run(&spec).unwrap()
+        };
+        let clean = mk(0.0, 1);
+        let faulty = mk(0.3, 1);
+        assert_eq!(clean.faults, 0);
+        assert!(faulty.faults > 0);
+        assert!(faulty.map_attempts > clean.map_attempts);
+        assert!(faulty.virtual_secs > clean.virtual_secs);
+    }
+
+    #[test]
+    fn unconfigured_side_channel_errors() {
+        struct BadMap;
+        impl MapTask for BadMap {
+            fn run(&self, _: usize, _: &[Record], _: &[&[Record]], out: &mut Emitter) -> Result<()> {
+                out.emit_to("mystery", vec![1], vec![2]);
+                Ok(())
+            }
+        }
+        let mut e = engine_with_input(4, 1);
+        let m = BadMap;
+        let spec = JobSpec::map_only("bad", "input", 1, &m, "out");
+        assert!(e.run(&spec).is_err());
+    }
+
+    #[test]
+    fn more_tasks_than_records_collapses() {
+        let mut e = engine_with_input(3, 1);
+        let m = ColMap;
+        let spec = JobSpec::map_only("tiny", "input", 100, &m, "out");
+        let stats = e.run(&spec).unwrap();
+        assert_eq!(stats.map_tasks, 3); // capped at record count
+    }
+
+    #[test]
+    fn mapper_error_carries_job_context() {
+        struct FailMap;
+        impl MapTask for FailMap {
+            fn run(&self, _: usize, _: &[Record], _: &[&[Record]], _: &mut Emitter) -> Result<()> {
+                anyhow::bail!("boom")
+            }
+        }
+        let mut e = engine_with_input(4, 1);
+        let m = FailMap;
+        let spec = JobSpec::map_only("exploding-job", "input", 2, &m, "out");
+        let err = format!("{:#}", e.run(&spec).unwrap_err());
+        assert!(err.contains("exploding-job"), "{err}");
+        assert!(err.contains("boom"), "{err}");
+    }
+
+    #[test]
+    fn missing_input_fails_cleanly() {
+        let mut e = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
+        let m = ColMap;
+        let spec = JobSpec::map_only("nofile", "does-not-exist", 2, &m, "out");
+        assert!(e.run(&spec).is_err());
+    }
+
+    #[test]
+    fn more_reducers_than_keys_counts_nonempty_only() {
+        let mut e = engine_with_input(10, 2); // 2 distinct keys
+        let m = ColMap;
+        let r = SumReduce;
+        let spec = JobSpec::map_reduce("wide", "input", 4, &m, &r, 40, "out");
+        let stats = e.run(&spec).unwrap();
+        assert_eq!(stats.distinct_keys, 2);
+        assert!(stats.reduce_tasks <= 2, "empty partitions must not count");
+    }
+
+    #[test]
+    fn output_scale_registered_on_dfs() {
+        let mut e = engine_with_input(6, 2);
+        let m = ColMap;
+        let spec = JobSpec::map_only("scaled", "input", 2, &m, "out").with_output_scale(250.0);
+        e.run(&spec).unwrap();
+        assert_eq!(e.dfs.scale("out"), 250.0);
+        let vb = e.dfs.virtual_bytes("out").unwrap();
+        assert!((vb - e.dfs.file_bytes("out").unwrap() as f64 * 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaled_reads_increase_virtual_time_only() {
+        let run = |scale: f64| {
+            let mut e = engine_with_input(64, 4);
+            e.dfs.set_scale("input", scale);
+            let m = ColMap;
+            let spec = JobSpec::map_only("s", "input", 8, &m, "out");
+            e.run(&spec).unwrap()
+        };
+        let s1 = run(1.0);
+        let s1000 = run(1000.0);
+        // accounting of actual bytes is identical…
+        assert_eq!(s1.map_io.bytes_read, s1000.map_io.bytes_read);
+        // …but the virtual clock charges the scale
+        assert!(s1000.virtual_secs > s1.virtual_secs);
+    }
+
+    #[test]
+    fn side_inputs_are_readable_and_charged() {
+        struct CacheMap;
+        impl MapTask for CacheMap {
+            fn run(&self, _: usize, input: &[Record], side: &[&[Record]], out: &mut Emitter) -> Result<()> {
+                assert_eq!(side.len(), 1);
+                let bias = decode_row(&side[0][0].value)[0];
+                for rec in input {
+                    let v: f64 = decode_row(&rec.value).iter().sum();
+                    out.emit(rec.key.clone(), encode_row(&[v + bias]));
+                }
+                Ok(())
+            }
+        }
+        let mut e = engine_with_input(6, 2);
+        e.dfs.put("cache", vec![Record::new(row_key(0), encode_row(&[100.0]))]);
+        let m = CacheMap;
+        let spec = JobSpec::map_only("c", "input", 3, &m, "out").with_side_input("cache");
+        let stats = e.run(&spec).unwrap();
+        let cache_bytes = e.dfs.file_bytes("cache").unwrap();
+        let input_bytes = e.dfs.file_bytes("input").unwrap();
+        // each of the 3 tasks reads the cache once
+        assert_eq!(stats.map_io.bytes_read, input_bytes + 3 * cache_bytes);
+        let out = e.dfs.get("out").unwrap();
+        assert!(decode_row(&out[0].value)[0] >= 100.0);
+    }
+}

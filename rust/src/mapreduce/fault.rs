@@ -1,0 +1,110 @@
+//! Fault injection + Hadoop-style retry semantics.
+//!
+//! The paper's §V-C experiment crashes tasks with probability `p` and
+//! measures the job-time penalty (23.2% at p = 1/8 for Direct TSQR).
+//! We reproduce the semantics: each task *attempt* fails independently
+//! with probability `p`; a failed attempt wastes a fraction of the
+//! task's duration (the crash happens mid-task) and the scheduler
+//! re-executes until success or `max_attempts`.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPolicy {
+    /// Per-attempt crash probability.
+    pub probability: f64,
+    /// Attempts before the job is declared failed (Hadoop default: 4).
+    pub max_attempts: usize,
+    /// Fraction of the task duration wasted by a failed attempt.
+    pub waste_fraction: f64,
+}
+
+impl FaultPolicy {
+    pub fn new(probability: f64) -> Self {
+        FaultPolicy { probability, max_attempts: 4, waste_fraction: 0.5 }
+    }
+
+    pub fn none() -> Self {
+        FaultPolicy { probability: 0.0, max_attempts: 1, waste_fraction: 0.0 }
+    }
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// Outcome of running one task under the fault policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttemptOutcome {
+    /// Total attempts (1 = no faults).
+    pub attempts: usize,
+    /// Virtual-time multiplier ≥ 1 for the task's duration:
+    /// `(attempts-1) * waste_fraction + 1`.
+    pub duration_factor: f64,
+    /// Whether the task ultimately succeeded.
+    pub succeeded: bool,
+}
+
+/// Draw the attempt sequence for one task.
+pub fn draw_attempts(policy: &FaultPolicy, rng: &mut Rng) -> AttemptOutcome {
+    let mut attempts = 1;
+    while rng.chance(policy.probability) {
+        if attempts >= policy.max_attempts {
+            return AttemptOutcome {
+                attempts,
+                duration_factor: 1.0 + (attempts as f64) * policy.waste_fraction,
+                succeeded: false,
+            };
+        }
+        attempts += 1;
+    }
+    AttemptOutcome {
+        attempts,
+        duration_factor: 1.0 + (attempts as f64 - 1.0) * policy.waste_fraction,
+        succeeded: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_faults_single_attempt() {
+        let mut rng = Rng::new(1);
+        let o = draw_attempts(&FaultPolicy::none(), &mut rng);
+        assert_eq!(o, AttemptOutcome { attempts: 1, duration_factor: 1.0, succeeded: true });
+    }
+
+    #[test]
+    fn always_fails_hits_max_attempts() {
+        let mut rng = Rng::new(2);
+        let policy = FaultPolicy { probability: 1.0, max_attempts: 3, waste_fraction: 0.5 };
+        let o = draw_attempts(&policy, &mut rng);
+        assert_eq!(o.attempts, 3);
+        assert!(!o.succeeded);
+    }
+
+    #[test]
+    fn retry_frequency_matches_probability() {
+        let mut rng = Rng::new(3);
+        let policy = FaultPolicy::new(0.125);
+        let n = 100_000;
+        let total_attempts: usize =
+            (0..n).map(|_| draw_attempts(&policy, &mut rng).attempts).sum();
+        // E[attempts] = 1/(1-p) = 1.1428…
+        let mean = total_attempts as f64 / n as f64;
+        assert!((mean - 1.0 / (1.0 - 0.125)).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn duration_factor_grows_with_retries() {
+        let policy = FaultPolicy { probability: 1.0, max_attempts: 2, waste_fraction: 0.5 };
+        let mut rng = Rng::new(4);
+        let o = draw_attempts(&policy, &mut rng);
+        assert_eq!(o.attempts, 2);
+        assert!(o.duration_factor > 1.0);
+    }
+}

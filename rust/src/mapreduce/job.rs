@@ -1,0 +1,206 @@
+//! Job specification: mapper/reducer traits and the emitter.
+
+use crate::dfs::Record;
+use anyhow::Result;
+
+/// Where an emitted record goes.
+pub const DEFAULT_CHANNEL: &str = "";
+
+/// Collects task emissions, separated into the default channel (which
+/// feeds the shuffle / job output) and named side channels (the paper's
+/// "feathers" extension: Q and R factors written to separate files).
+#[derive(Debug, Default)]
+pub struct Emitter {
+    pub main: Vec<Record>,
+    pub side: Vec<(String, Record)>,
+}
+
+impl Emitter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Emit to the default channel (shuffled if the job has a reducer,
+    /// otherwise written to the job's output file).
+    pub fn emit(&mut self, key: Vec<u8>, value: Vec<u8>) {
+        self.main.push(Record::new(key, value));
+    }
+
+    /// Emit to a named side-output channel.
+    pub fn emit_to(&mut self, channel: &str, key: Vec<u8>, value: Vec<u8>) {
+        self.side.push((channel.to_string(), Record::new(key, value)));
+    }
+
+    pub fn bytes_emitted(&self) -> u64 {
+        self.main.iter().map(|r| r.size_bytes()).sum::<u64>()
+            + self.side.iter().map(|(_, r)| r.size_bytes()).sum::<u64>()
+    }
+
+    pub fn records_emitted(&self) -> u64 {
+        (self.main.len() + self.side.len()) as u64
+    }
+}
+
+/// A map task: processes one whole input split (Hadoop-streaming style —
+/// the paper's mappers gather their split into a local matrix before
+/// computing, so the per-record callback shape would be wrong here).
+///
+/// Not `Send`/`Sync`: tasks hold `&dyn BlockCompute`, and the PJRT
+/// runtime is deliberately single-threaded (parallelism lives in the
+/// virtual schedule, not in host threads — see `engine.rs`).
+pub trait MapTask {
+    /// `task_id` is the index of this map task within the job; `side`
+    /// holds the records of each side-input file (distributed cache),
+    /// in the order listed in [`JobSpec::side_inputs`].
+    fn run(
+        &self,
+        task_id: usize,
+        input: &[Record],
+        side: &[&[Record]],
+        out: &mut Emitter,
+    ) -> Result<()>;
+}
+
+/// One key group delivered to a reducer: `(key, values)` with values in
+/// emission order.
+pub type KeyGroup = (Vec<u8>, Vec<Vec<u8>>);
+
+/// A reduce task body: receives its *whole partition* (key groups in
+/// sorted key order). Per-key reducers simply loop; partition-scoped
+/// reducers (Direct TSQR step 2 stacks the R factors of *all* keys)
+/// need the full view — the paper's reduce task "maintains an ordered
+/// list of the keys read".
+pub trait ReduceTask {
+    fn run(&self, partition: &[KeyGroup], out: &mut Emitter) -> Result<()>;
+}
+
+/// Declarative job description consumed by [`super::Engine::run`].
+pub struct JobSpec<'a> {
+    /// For logs/metrics.
+    pub name: String,
+    /// DFS input file.
+    pub input: String,
+    /// Number of map tasks (input splits). The engine caps it at the
+    /// record count.
+    pub map_tasks: usize,
+    pub mapper: &'a dyn MapTask,
+    /// `None` makes this a map-only job (Direct TSQR steps 1 and 3).
+    pub reducer: Option<&'a dyn ReduceTask>,
+    /// Requested reduce tasks; effective parallelism is additionally
+    /// capped by the number of distinct keys (paper §II-A discussion).
+    pub reduce_tasks: usize,
+    /// DFS file receiving default-channel output.
+    pub output: String,
+    /// Virtual-byte scale of the default channel: applied to main-channel
+    /// emissions, shuffle traffic and the output file (see
+    /// [`crate::dfs::Dfs::set_scale`]).
+    pub output_scale: f64,
+    /// (channel name, DFS file, virtual-byte scale) for side outputs.
+    pub side_outputs: Vec<(String, String, f64)>,
+    /// DFS files broadcast to every map task (distributed cache).
+    pub side_inputs: Vec<String>,
+}
+
+impl<'a> JobSpec<'a> {
+    /// Minimal map-only job.
+    pub fn map_only(
+        name: &str,
+        input: &str,
+        map_tasks: usize,
+        mapper: &'a dyn MapTask,
+        output: &str,
+    ) -> Self {
+        JobSpec {
+            name: name.to_string(),
+            input: input.to_string(),
+            map_tasks,
+            mapper,
+            reducer: None,
+            reduce_tasks: 0,
+            output: output.to_string(),
+            output_scale: 1.0,
+            side_outputs: Vec::new(),
+            side_inputs: Vec::new(),
+        }
+    }
+
+    /// Full map+shuffle+reduce job.
+    pub fn map_reduce(
+        name: &str,
+        input: &str,
+        map_tasks: usize,
+        mapper: &'a dyn MapTask,
+        reducer: &'a dyn ReduceTask,
+        reduce_tasks: usize,
+        output: &str,
+    ) -> Self {
+        JobSpec {
+            name: name.to_string(),
+            input: input.to_string(),
+            map_tasks,
+            mapper,
+            reducer: Some(reducer),
+            reduce_tasks,
+            output: output.to_string(),
+            output_scale: 1.0,
+            side_outputs: Vec::new(),
+            side_inputs: Vec::new(),
+        }
+    }
+
+    pub fn with_side_output(mut self, channel: &str, file: &str) -> Self {
+        self.side_outputs.push((channel.to_string(), file.to_string(), 1.0));
+        self
+    }
+
+    pub fn with_scaled_side_output(mut self, channel: &str, file: &str, scale: f64) -> Self {
+        self.side_outputs.push((channel.to_string(), file.to_string(), scale));
+        self
+    }
+
+    pub fn with_side_input(mut self, file: &str) -> Self {
+        self.side_inputs.push(file.to_string());
+        self
+    }
+
+    pub fn with_output_scale(mut self, scale: f64) -> Self {
+        self.output_scale = scale;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emitter_accounts_bytes() {
+        let mut e = Emitter::new();
+        e.emit(vec![1, 2], vec![3, 4, 5]);
+        e.emit_to("q", vec![9], vec![8, 7]);
+        assert_eq!(e.bytes_emitted(), 5 + 3);
+        assert_eq!(e.records_emitted(), 2);
+        assert_eq!(e.main.len(), 1);
+        assert_eq!(e.side.len(), 1);
+        assert_eq!(e.side[0].0, "q");
+    }
+
+    struct NopMap;
+    impl MapTask for NopMap {
+        fn run(&self, _: usize, _: &[Record], _: &[&[Record]], _: &mut Emitter) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn spec_builders() {
+        let m = NopMap;
+        let spec = JobSpec::map_only("j", "in", 4, &m, "out")
+            .with_side_output("q", "qfile")
+            .with_side_input("cache");
+        assert_eq!(spec.map_tasks, 4);
+        assert!(spec.reducer.is_none());
+        assert_eq!(spec.side_outputs, vec![("q".into(), "qfile".into(), 1.0)]);
+        assert_eq!(spec.side_inputs, vec!["cache".to_string()]);
+    }
+}

@@ -1,0 +1,140 @@
+//! Per-step and per-job metrics.
+//!
+//! Everything the paper's evaluation reports is derived from these:
+//! byte counts per stage (Table III cross-check), task/parallelism
+//! numbers (Table IV), virtual job time (Tables V, VI, IX), per-step
+//! fractions (Table VIII), attempts/faults (Fig. 7).
+
+use crate::dfs::{DiskModel, IoMeter};
+
+/// Metrics for one MapReduce iteration (one map[+reduce] stage pair).
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    pub name: String,
+    pub map_tasks: usize,
+    pub reduce_tasks: usize,
+    /// Distinct keys shuffled into the reduce stage (`k_j` in the paper).
+    pub distinct_keys: usize,
+    pub map_io: IoMeter,
+    pub reduce_io: IoMeter,
+    /// Measured wall-clock compute inside map / reduce task bodies.
+    pub map_compute_secs: f64,
+    pub reduce_compute_secs: f64,
+    /// Virtual time of this step (slot-scheduled disk + compute + startup).
+    pub virtual_secs: f64,
+    /// Real wall time spent executing this step in the simulator.
+    pub wall_secs: f64,
+    /// Total task attempts (== tasks when no faults injected).
+    pub map_attempts: usize,
+    pub reduce_attempts: usize,
+    /// Injected faults observed.
+    pub faults: usize,
+}
+
+impl StepStats {
+    pub fn total_io(&self) -> IoMeter {
+        let mut io = self.map_io;
+        io.merge(&self.reduce_io);
+        io
+    }
+}
+
+/// Aggregated metrics for a whole algorithm run (several steps).
+#[derive(Debug, Clone, Default)]
+pub struct JobStats {
+    pub steps: Vec<StepStats>,
+}
+
+impl JobStats {
+    pub fn push(&mut self, s: StepStats) {
+        self.steps.push(s);
+    }
+
+    pub fn extend(&mut self, other: JobStats) {
+        self.steps.extend(other.steps);
+    }
+
+    /// Total virtual job time (the paper's "job time (secs.)").
+    pub fn virtual_secs(&self) -> f64 {
+        self.steps.iter().map(|s| s.virtual_secs).sum()
+    }
+
+    pub fn wall_secs(&self) -> f64 {
+        self.steps.iter().map(|s| s.wall_secs).sum()
+    }
+
+    pub fn total_io(&self) -> IoMeter {
+        let mut io = IoMeter::default();
+        for s in &self.steps {
+            io.merge(&s.total_io());
+        }
+        io
+    }
+
+    pub fn total_faults(&self) -> usize {
+        self.steps.iter().map(|s| s.faults).sum()
+    }
+
+    pub fn compute_secs(&self) -> f64 {
+        self.steps
+            .iter()
+            .map(|s| s.map_compute_secs + s.reduce_compute_secs)
+            .sum()
+    }
+
+    /// Disk-only virtual time under a (possibly different) model —
+    /// lets tests check model-vs-accounting consistency.
+    pub fn disk_secs(&self, model: &DiskModel) -> f64 {
+        self.steps.iter().map(|s| s.total_io().disk_secs(model)).sum()
+    }
+
+    /// Fraction of virtual time per step (paper Table VIII).
+    pub fn step_fractions(&self) -> Vec<(String, f64)> {
+        let total = self.virtual_secs().max(f64::MIN_POSITIVE);
+        self.steps
+            .iter()
+            .map(|s| (s.name.clone(), s.virtual_secs / total))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(name: &str, vsecs: f64, read: u64, written: u64) -> StepStats {
+        let mut s = StepStats { name: name.into(), virtual_secs: vsecs, ..Default::default() };
+        s.map_io.add_read(read, 1);
+        s.map_io.add_write(written, 1);
+        s
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut j = JobStats::default();
+        j.push(step("s1", 2.0, 100, 50));
+        j.push(step("s2", 3.0, 10, 5));
+        assert!((j.virtual_secs() - 5.0).abs() < 1e-12);
+        assert_eq!(j.total_io().bytes_read, 110);
+        assert_eq!(j.total_io().bytes_written, 55);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let mut j = JobStats::default();
+        j.push(step("a", 1.0, 0, 0));
+        j.push(step("b", 3.0, 0, 0));
+        let fr = j.step_fractions();
+        let total: f64 = fr.iter().map(|(_, f)| f).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert!((fr[1].1 - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disk_secs_uses_model() {
+        let mut j = JobStats::default();
+        j.push(step("a", 0.0, 1000, 500));
+        let m = DiskModel::pure_bandwidth(1e-3, 2e-3);
+        assert!((j.disk_secs(&m) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,32 @@
+//! Hadoop-like MapReduce engine substrate.
+//!
+//! Implements the computational engine the paper targets: **map** applies
+//! a task function to each input split, **shuffle** groups emitted
+//! key-value pairs by key (sorted, like Hadoop), **reduce** applies a
+//! task function per key group. On top of the paper's semantics the
+//! engine provides:
+//!
+//! * slot-limited scheduling ([`scheduler`]) with a *virtual disk clock*
+//!   derived from the [`crate::dfs::DiskModel`] — this is what makes the
+//!   simulated job times reproduce the paper's performance tables;
+//! * Hadoop-style transparent fault tolerance ([`fault`]): task attempts
+//!   crash with configurable probability and are re-executed (Fig. 7);
+//! * per-step I/O and timing metrics ([`metrics`]) that line up with the
+//!   byte-count formulas of the paper's Table III.
+//!
+//! Side outputs ("feathers" in the paper's Dumbo implementation — Q and
+//! R written to *separate files* from one task) and side inputs (the
+//! step-3 distributed cache file of second-stage Q factors) are
+//! first-class, since Direct TSQR needs both.
+
+pub mod engine;
+pub mod fault;
+pub mod job;
+pub mod metrics;
+pub mod scheduler;
+pub mod shuffle;
+
+pub use engine::{ClusterConfig, Engine};
+pub use fault::FaultPolicy;
+pub use job::{Emitter, JobSpec, KeyGroup, MapTask, ReduceTask};
+pub use metrics::{JobStats, StepStats};

@@ -1,0 +1,87 @@
+//! Slot-limited virtual-time scheduling.
+//!
+//! The cluster has `m_max` map slots and `r_max` reduce slots (paper:
+//! 40 + 40 on the 10-node ICME cluster). Tasks are placed greedily onto
+//! the least-loaded slot in longest-processing-time order — the classic
+//! LPT list schedule, a ≤4/3 approximation of optimal makespan, which is
+//! more than enough fidelity for reproducing wave effects (1200 tasks on
+//! 40 slots = 30 waves).
+
+/// LPT makespan of `durations` over `slots` identical slots.
+pub fn makespan(durations: &[f64], slots: usize) -> f64 {
+    if durations.is_empty() {
+        return 0.0;
+    }
+    let slots = slots.max(1).min(durations.len());
+    let mut order: Vec<usize> = (0..durations.len()).collect();
+    order.sort_by(|&a, &b| durations[b].partial_cmp(&durations[a]).unwrap());
+    // binary-heap-free least-loaded selection: slots is small (≤ ~64)
+    let mut load = vec![0.0f64; slots];
+    for &i in &order {
+        let (argmin, _) = load
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        load[argmin] += durations[i];
+    }
+    load.into_iter().fold(0.0, f64::max)
+}
+
+/// Effective parallelism of a stage: `min(slots, tasks)` — and for
+/// reduce stages additionally the number of distinct keys (a reducer
+/// with no keys does nothing; paper §II-A's `p_j^r = min{r_max, r_j, k_j}`).
+pub fn effective_parallelism(slots: usize, tasks: usize, distinct_keys: Option<usize>) -> usize {
+    let p = slots.min(tasks);
+    match distinct_keys {
+        Some(k) => p.min(k.max(1)),
+        None => p,
+    }
+    .max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(makespan(&[], 4), 0.0);
+    }
+
+    #[test]
+    fn single_slot_sums() {
+        let d = [1.0, 2.0, 3.0];
+        assert!((makespan(&d, 1) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn enough_slots_takes_max() {
+        let d = [1.0, 2.0, 3.0];
+        assert!((makespan(&d, 10) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn waves_of_equal_tasks() {
+        // 8 tasks of 1s on 4 slots = 2 waves = 2s
+        let d = [1.0f64; 8];
+        assert!((makespan(&d, 4) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lpt_balances() {
+        // LPT on {4, 3, 3, 2, 2, 2} over 2 slots -> 8 (optimal)
+        let d = [4.0, 3.0, 3.0, 2.0, 2.0, 2.0];
+        assert!((makespan(&d, 2) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallelism_caps() {
+        assert_eq!(effective_parallelism(40, 1200, None), 40);
+        assert_eq!(effective_parallelism(40, 4, None), 4);
+        // Cholesky QR reduce: n distinct keys cap the reducers (paper)
+        assert_eq!(effective_parallelism(40, 40, Some(4)), 4);
+        assert_eq!(effective_parallelism(40, 40, Some(1000)), 40);
+        assert_eq!(effective_parallelism(40, 0, None), 1);
+    }
+}

@@ -1,0 +1,96 @@
+//! The shuffle: group map emissions by key, sorted, and partition the
+//! key groups across reduce tasks (hash partitioner, like Hadoop's
+//! default).
+
+use crate::dfs::Record;
+use std::collections::BTreeMap;
+
+/// Key-grouped, key-sorted map output.
+pub type Groups = BTreeMap<Vec<u8>, Vec<Vec<u8>>>;
+
+/// Group records by key (sorted by key — Hadoop's sort phase).
+pub fn group_by_key(records: Vec<Record>) -> Groups {
+    let mut groups: Groups = BTreeMap::new();
+    for rec in records {
+        groups.entry(rec.key).or_default().push(rec.value);
+    }
+    groups
+}
+
+/// FNV-1a — a stable stand-in for Hadoop's `key.hashCode() % R`.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assign each key group to one of `parts` partitions. Returns a vec of
+/// `parts` maps (some possibly empty). Keys within a partition stay
+/// sorted.
+pub fn partition(groups: Groups, parts: usize) -> Vec<Groups> {
+    let parts = parts.max(1);
+    let mut out: Vec<Groups> = (0..parts).map(|_| Groups::new()).collect();
+    for (key, values) in groups {
+        let p = (fnv1a(&key) % parts as u64) as usize;
+        out[p].insert(key, values);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(k: &[u8], v: &[u8]) -> Record {
+        Record::new(k.to_vec(), v.to_vec())
+    }
+
+    #[test]
+    fn groups_and_sorts() {
+        let groups = group_by_key(vec![
+            rec(b"b", b"1"),
+            rec(b"a", b"2"),
+            rec(b"b", b"3"),
+        ]);
+        let keys: Vec<&[u8]> = groups.keys().map(|k| k.as_slice()).collect();
+        assert_eq!(keys, vec![b"a".as_slice(), b"b".as_slice()]);
+        assert_eq!(groups[b"b".as_slice()], vec![b"1".to_vec(), b"3".to_vec()]);
+    }
+
+    #[test]
+    fn grouping_preserves_emission_order_within_key() {
+        let groups = group_by_key(vec![rec(b"k", b"1"), rec(b"k", b"2")]);
+        assert_eq!(groups[b"k".as_slice()], vec![b"1".to_vec(), b"2".to_vec()]);
+    }
+
+    #[test]
+    fn partition_covers_all_keys() {
+        let groups = group_by_key(
+            (0..100u8).map(|i| rec(&[i], &[i])).collect(),
+        );
+        let parts = partition(groups.clone(), 7);
+        assert_eq!(parts.len(), 7);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, groups.len());
+    }
+
+    #[test]
+    fn partition_deterministic() {
+        let mk = || group_by_key((0..50u8).map(|i| rec(&[i], &[i])).collect());
+        let a = partition(mk(), 4);
+        let b = partition(mk(), 4);
+        for (pa, pb) in a.iter().zip(&b) {
+            assert_eq!(pa.len(), pb.len());
+        }
+    }
+
+    #[test]
+    fn single_partition_keeps_everything() {
+        let groups = group_by_key(vec![rec(b"x", b"1"), rec(b"y", b"2")]);
+        let parts = partition(groups, 1);
+        assert_eq!(parts[0].len(), 2);
+    }
+}

@@ -1,0 +1,21 @@
+//! The paper's performance model (§V-A).
+//!
+//! Two fitted parameters — inverse read/write bandwidth `β_r`, `β_w` —
+//! plus per-step byte counts (Table III) and stage parallelism
+//! (Table IV) give a lower bound on job time (Table V):
+//!
+//! ```text
+//! T_lb = Σ_j (R_j^m β_r + W_j^m β_w)/p_j^m + (R_j^r β_r + W_j^r β_w)/p_j^r
+//! ```
+//!
+//! The engine's measured byte accounting is cross-checked against these
+//! closed forms in `rust/tests/props.rs`, and Table IX reports the
+//! measured/T_lb multiple.
+
+pub mod bounds;
+pub mod counts;
+pub mod parallelism;
+
+pub use bounds::lower_bound_secs;
+pub use counts::{algorithm_steps, AlgoKind, StepBytes, WorkloadShape};
+pub use parallelism::StageParallelism;

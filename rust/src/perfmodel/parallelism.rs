@@ -1,0 +1,81 @@
+//! Table IV — stage parallelism: `p_j^m = min{m_max, m_j}`,
+//! `p_j^r = min{r_max, r_j, k_j}`.
+
+use super::counts::StepBytes;
+
+/// Cluster slot limits (paper: m_max = r_max = 40).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageParallelism {
+    pub m_max: u64,
+    pub r_max: u64,
+}
+
+impl Default for StageParallelism {
+    fn default() -> Self {
+        StageParallelism { m_max: 40, r_max: 40 }
+    }
+}
+
+impl StageParallelism {
+    /// `p_j^m` for a step.
+    pub fn map(&self, step: &StepBytes) -> u64 {
+        self.m_max.min(step.m_tasks.max(1))
+    }
+
+    /// `p_j^r` for a step (1 when the step has no reduce traffic, so the
+    /// zero-byte term is harmless).
+    pub fn reduce(&self, step: &StepBytes) -> u64 {
+        if step.r_tasks == 0 {
+            return 1;
+        }
+        self.r_max.min(step.r_tasks).min(step.keys.max(1))
+    }
+
+    /// The paper's Table IV m_1 values (map tasks per workload): the
+    /// direct method launches more tasks because it also writes Q.
+    /// Returns (m1_indirect, m1_direct) for one of the five paper
+    /// workloads, or None for other shapes.
+    pub fn paper_m1(rows: u64, cols: u64) -> Option<(u64, u64)> {
+        match (rows, cols) {
+            (4_000_000_000, 4) => Some((1200, 2000)),
+            (2_500_000_000, 10) => Some((1680, 2640)),
+            (600_000_000, 25) => Some((1200, 1600)),
+            (500_000_000, 50) => Some((1920, 2560)),
+            (150_000_000, 100) => Some((1200, 1600)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(m_tasks: u64, r_tasks: u64, keys: u64) -> StepBytes {
+        StepBytes { m_tasks, r_tasks, keys, ..Default::default() }
+    }
+
+    #[test]
+    fn map_capped_by_slots() {
+        let p = StageParallelism::default();
+        assert_eq!(p.map(&step(1200, 0, 0)), 40);
+        assert_eq!(p.map(&step(4, 0, 0)), 4);
+    }
+
+    #[test]
+    fn reduce_capped_by_keys() {
+        let p = StageParallelism::default();
+        // Cholesky QR: n = 4 keys -> at most 4 reducers (paper §II-A)
+        assert_eq!(p.reduce(&step(1200, 40, 4)), 4);
+        assert_eq!(p.reduce(&step(1200, 40, 16800)), 40);
+        assert_eq!(p.reduce(&step(1200, 1, 1680)), 1);
+        assert_eq!(p.reduce(&step(1200, 0, 0)), 1);
+    }
+
+    #[test]
+    fn paper_m1_table() {
+        assert_eq!(StageParallelism::paper_m1(4_000_000_000, 4), Some((1200, 2000)));
+        assert_eq!(StageParallelism::paper_m1(150_000_000, 100), Some((1200, 1600)));
+        assert_eq!(StageParallelism::paper_m1(7, 7), None);
+    }
+}

@@ -1,0 +1,206 @@
+//! The artifact manifest: which `(op, b, n)` modules exist on disk.
+//!
+//! `aot.py` writes `manifest.tsv` (serde is unavailable offline, so the
+//! interchange is one tab-separated line per module):
+//!
+//! ```text
+//! op \t block_rows \t cols \t dtype \t file \t num_inputs
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// The exported ops (mirror of `model.EXPORTS` on the python side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Op {
+    Qr,
+    Gram,
+    Matmul,
+    QrApply,
+}
+
+impl Op {
+    pub fn parse(s: &str) -> Result<Op> {
+        Ok(match s {
+            "qr" => Op::Qr,
+            "gram" => Op::Gram,
+            "matmul" => Op::Matmul,
+            "qr_apply" => Op::QrApply,
+            other => bail!("unknown op in manifest: {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Qr => "qr",
+            Op::Gram => "gram",
+            Op::Matmul => "matmul",
+            Op::QrApply => "qr_apply",
+        }
+    }
+}
+
+/// One AOT-compiled module.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub op: Op,
+    pub b: usize,
+    pub n: usize,
+    pub file: String,
+    pub num_inputs: usize,
+}
+
+/// Parsed manifest with shape-selection logic.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 6 {
+                bail!("manifest line {}: expected 6 fields, got {}", lineno + 1, cols.len());
+            }
+            if cols[3] != "f64" {
+                bail!("manifest line {}: only f64 artifacts supported, got {}", lineno + 1, cols[3]);
+            }
+            entries.push(ManifestEntry {
+                op: Op::parse(cols[0])?,
+                b: cols[1].parse().context("block rows")?,
+                n: cols[2].parse().context("cols")?,
+                file: cols[4].to_string(),
+                num_inputs: cols[5].parse().context("num_inputs")?,
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest at {dir:?} has no entries");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Default artifacts directory: `$MRTSQR_ARTIFACTS` or `artifacts/`
+    /// relative to the workspace root (also probing the parent, so tests
+    /// running under `target/` still find it).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("MRTSQR_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.tsv").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Smallest artifact that fits a `(rows × cols)` input for `op`:
+    /// minimal padded column count first (padding columns inflates every
+    /// later byte), then minimal block rows ≥ `rows`.
+    pub fn select(&self, op: Op, rows: usize, cols: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.op == op && e.n >= cols && e.b >= rows)
+            .min_by_key(|e| (e.n, e.b))
+    }
+
+    /// Largest block-rows available for `op` at column count `cols`
+    /// (0 if no artifact can serve this op/cols).
+    pub fn max_rows(&self, op: Op, cols: usize) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.op == op && e.n >= cols)
+            .map(|e| e.b)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn path_of(&self, entry: &ManifestEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "qr\t256\t4\tf64\tqr_256x4.hlo.txt\t1\n\
+                          qr\t1024\t4\tf64\tqr_1024x4.hlo.txt\t1\n\
+                          qr\t1024\t10\tf64\tqr_1024x10.hlo.txt\t1\n\
+                          matmul\t1024\t10\tf64\tmm.hlo.txt\t2\n";
+
+    fn sample() -> Manifest {
+        Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let m = sample();
+        assert_eq!(m.entries.len(), 4);
+        assert_eq!(m.entries[0].op, Op::Qr);
+        assert_eq!(m.entries[0].b, 256);
+    }
+
+    #[test]
+    fn select_prefers_tight_fit() {
+        let m = sample();
+        let e = m.select(Op::Qr, 100, 4).unwrap();
+        assert_eq!((e.b, e.n), (256, 4));
+        let e = m.select(Op::Qr, 300, 4).unwrap();
+        assert_eq!((e.b, e.n), (1024, 4));
+        // col padding: 5 cols -> n=10 artifact
+        let e = m.select(Op::Qr, 100, 5).unwrap();
+        assert_eq!((e.b, e.n), (1024, 10));
+    }
+
+    #[test]
+    fn select_none_when_too_big() {
+        let m = sample();
+        assert!(m.select(Op::Qr, 5000, 4).is_none());
+        assert!(m.select(Op::Qr, 10, 64).is_none());
+        assert!(m.select(Op::Gram, 10, 4).is_none());
+    }
+
+    #[test]
+    fn max_rows_per_op() {
+        let m = sample();
+        assert_eq!(m.max_rows(Op::Qr, 4), 1024);
+        assert_eq!(m.max_rows(Op::Qr, 10), 1024);
+        assert_eq!(m.max_rows(Op::Qr, 100), 0);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("/"), "qr\t1\t2\n").is_err());
+        assert!(Manifest::parse(Path::new("/"), "").is_err());
+        assert!(Manifest::parse(Path::new("/"), "qr\t1\t2\tf32\tx\t1\n").is_err());
+        assert!(Manifest::parse(Path::new("/"), "wat\t1\t2\tf64\tx\t1\n").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads() {
+        // integration-ish: if the artifacts have been built, load them
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.select(Op::Qr, 1000, 50).is_some());
+            assert!(m.select(Op::Gram, 4096, 100).is_some());
+        }
+    }
+}

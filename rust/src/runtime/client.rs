@@ -1,0 +1,243 @@
+//! PJRT client wrapper: load HLO text → compile (cached) → execute.
+//!
+//! One [`PjrtRuntime`] owns the CPU client and an executable cache keyed
+//! by `(op, b, n)`. Each artifact is compiled at most once per process;
+//! the hot path is literal creation + `execute` + literal readback.
+//! Compile counts and timings are tracked in [`RuntimeStats`] for the
+//! perf pass (EXPERIMENTS.md §Perf).
+
+use super::artifacts::{Manifest, ManifestEntry, Op};
+use super::pad::{extract, pad_to};
+use super::BlockCompute;
+use crate::linalg::Matrix;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Execution counters for the perf pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+    /// f64 elements shipped host->device and back.
+    pub elements_in: u64,
+    pub elements_out: u64,
+}
+
+/// PJRT-backed implementation of [`BlockCompute`].
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<(Op, usize, usize), Rc<xla::PjRtLoadedExecutable>>>,
+    pub stats: RefCell<RuntimeStats>,
+}
+
+impl PjrtRuntime {
+    /// Create from the default artifacts directory (env
+    /// `MRTSQR_ARTIFACTS` or `artifacts/`).
+    pub fn from_default_artifacts() -> Result<Self> {
+        Self::new(Manifest::load(&Manifest::default_dir())?)
+    }
+
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        // quiet the TF/XLA C++ banner unless the user overrides
+        if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for an entry.
+    fn executable(&self, entry: &ManifestEntry) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = (entry.op, entry.b, entry.n);
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path_of(entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow!("loading HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", entry.file))?;
+        let exe = Rc::new(exe);
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry on padded row-major buffers, returning the raw
+    /// output buffers (tuple elements, row-major).
+    fn execute_raw(&self, entry: &ManifestEntry, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        if inputs.len() != entry.num_inputs {
+            bail!("{}: expected {} inputs, got {}", entry.file, entry.num_inputs, inputs.len());
+        }
+        let exe = self.executable(entry)?;
+        let t0 = Instant::now();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (idx, buf) in inputs.iter().enumerate() {
+            let (rows, cols) = if idx == 0 {
+                (entry.b as i64, entry.n as i64)
+            } else {
+                (entry.n as i64, entry.n as i64)
+            };
+            debug_assert_eq!(buf.len() as i64, rows * cols);
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&[rows, cols])
+                .map_err(|e| anyhow!("reshape input {idx}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", entry.file))?;
+        let mut root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback {}: {e:?}", entry.file))?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        let parts = root
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose tuple {}: {e:?}", entry.file))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+            st.elements_in += inputs.iter().map(|b| b.len() as u64).sum::<u64>();
+            st.elements_out += out.iter().map(|b| b.len() as u64).sum::<u64>();
+        }
+        Ok(out)
+    }
+
+    fn select(&self, op: Op, rows: usize, cols: usize) -> Result<&ManifestEntry> {
+        self.manifest.select(op, rows, cols).ok_or_else(|| {
+            anyhow!(
+                "no artifact for op={} rows={rows} cols={cols} (max rows for this op/cols: {}) — \
+                 regenerate artifacts or split the block",
+                op.name(),
+                self.manifest.max_rows(op, cols)
+            )
+        })
+    }
+}
+
+impl BlockCompute for PjrtRuntime {
+    fn qr(&self, a: &Matrix) -> Result<(Matrix, Matrix)> {
+        if a.rows < a.cols {
+            bail!("qr requires rows >= cols, got {}x{}", a.rows, a.cols);
+        }
+        let entry = self.select(Op::Qr, a.rows, a.cols)?.clone();
+        let out = self.execute_raw(&entry, &[pad_to(a, entry.b, entry.n)])?;
+        let q = extract(&out[0], entry.b, entry.n, a.rows, a.cols);
+        let r = extract(&out[1], entry.n, entry.n, a.cols, a.cols);
+        Ok((q, r))
+    }
+
+    fn gram(&self, a: &Matrix) -> Result<Matrix> {
+        // Gram decomposes over row chunks: AᵀA = Σ chunkᵀchunk, so any
+        // block size is served by chunking through the largest artifact.
+        let max_b = self.manifest.max_rows(Op::Gram, a.cols);
+        if max_b == 0 {
+            bail!("no gram artifact for cols={}", a.cols);
+        }
+        if a.rows <= max_b {
+            let entry = self.select(Op::Gram, a.rows, a.cols)?.clone();
+            let out = self.execute_raw(&entry, &[pad_to(a, entry.b, entry.n)])?;
+            return Ok(extract(&out[0], entry.n, entry.n, a.cols, a.cols));
+        }
+        let mut acc = Matrix::zeros(a.cols, a.cols);
+        let mut start = 0;
+        while start < a.rows {
+            let end = (start + max_b).min(a.rows);
+            let part = self.gram(&a.slice_rows(start, end))?;
+            acc = acc.add(&part);
+            start = end;
+        }
+        Ok(acc)
+    }
+
+    fn matmul(&self, a: &Matrix, s: &Matrix) -> Result<Matrix> {
+        if a.cols != s.rows {
+            bail!("matmul shape mismatch: {}x{} @ {}x{}", a.rows, a.cols, s.rows, s.cols);
+        }
+        if s.cols > s.rows {
+            bail!("matmul artifact requires k <= n, got {}x{}", s.rows, s.cols);
+        }
+        // Row-wise independent: chunk tall inputs through the largest artifact.
+        let max_b = self.manifest.max_rows(Op::Matmul, a.cols);
+        if max_b == 0 {
+            bail!("no matmul artifact for cols={}", a.cols);
+        }
+        if a.rows > max_b {
+            let mut parts = Vec::new();
+            let mut start = 0;
+            while start < a.rows {
+                let end = (start + max_b).min(a.rows);
+                parts.push(self.matmul(&a.slice_rows(start, end), s)?);
+                start = end;
+            }
+            let refs: Vec<&Matrix> = parts.iter().collect();
+            return Ok(Matrix::vstack(&refs));
+        }
+        let entry = self.select(Op::Matmul, a.rows, a.cols)?.clone();
+        let out = self.execute_raw(
+            &entry,
+            &[pad_to(a, entry.b, entry.n), pad_to(s, entry.n, entry.n)],
+        )?;
+        Ok(extract(&out[0], entry.b, entry.n, a.rows, s.cols))
+    }
+
+    fn qr_apply(&self, a: &Matrix, s: &Matrix) -> Result<(Matrix, Matrix)> {
+        if a.rows < a.cols || s.rows != a.cols || s.cols != a.cols {
+            bail!(
+                "qr_apply shapes: a {}x{}, s {}x{}",
+                a.rows, a.cols, s.rows, s.cols
+            );
+        }
+        match self.manifest.select(Op::QrApply, a.rows, a.cols) {
+            Some(entry) => {
+                let entry = entry.clone();
+                let out = self.execute_raw(
+                    &entry,
+                    &[pad_to(a, entry.b, entry.n), pad_to(s, entry.n, entry.n)],
+                )?;
+                let qs = extract(&out[0], entry.b, entry.n, a.rows, a.cols);
+                let r = extract(&out[1], entry.n, entry.n, a.cols, a.cols);
+                Ok((qs, r))
+            }
+            // fall back to the two-artifact composition
+            None => {
+                let (q, r) = self.qr(a)?;
+                Ok((self.matmul(&q, s)?, r))
+            }
+        }
+    }
+
+    fn max_qr_rows(&self, cols: usize) -> usize {
+        self.manifest.max_rows(Op::Qr, cols)
+    }
+}

@@ -1,0 +1,89 @@
+//! Execution of the AOT-compiled L1/L2 artifacts from the rust hot path.
+//!
+//! `make artifacts` lowers the JAX/Pallas per-task computations to HLO
+//! text (one module per `(op, block_rows, cols)` in the manifest). This
+//! module loads them with the `xla` crate's PJRT CPU client
+//! (`HloModuleProto::from_text_file` → `client.compile` → `execute`),
+//! caches compiled executables per shape, and pads partial blocks up to
+//! the nearest manifest shape (zero-padding is mathematically exact for
+//! all our ops — see DESIGN.md and `pad.rs`).
+//!
+//! [`BlockCompute`] is the interface the coordinator's algorithms use;
+//! [`NativeRuntime`] is a pure-rust implementation of the same interface
+//! (the oracle for differential tests, and the "Python-vs-C++" baseline
+//! of the paper's Table I reproduction).
+
+pub mod artifacts;
+pub mod client;
+pub mod pad;
+
+pub use artifacts::{Manifest, ManifestEntry, Op};
+pub use client::{PjrtRuntime, RuntimeStats};
+
+use crate::linalg::{householder_qr, Matrix};
+use anyhow::Result;
+
+/// Block-level compute interface used by every MapReduce task body.
+pub trait BlockCompute {
+    /// Thin QR of a tall block: `(rows×n) -> (Q rows×n, R n×n)`.
+    fn qr(&self, a: &Matrix) -> Result<(Matrix, Matrix)>;
+    /// Gram matrix `AᵀA` of a block.
+    fn gram(&self, a: &Matrix) -> Result<Matrix>;
+    /// Tall×small product `(rows×n)·(n×k)`.
+    fn matmul(&self, a: &Matrix, s: &Matrix) -> Result<Matrix>;
+    /// Fused QR + right-multiply: returns `(Q·s, R)`.
+    fn qr_apply(&self, a: &Matrix, s: &Matrix) -> Result<(Matrix, Matrix)> {
+        let (q, r) = self.qr(a)?;
+        Ok((self.matmul(&q, s)?, r))
+    }
+    /// Largest block (rows) a single `qr` call can handle.
+    fn max_qr_rows(&self, cols: usize) -> usize;
+}
+
+/// Pure-rust implementation of [`BlockCompute`] (no PJRT).
+#[derive(Debug, Default)]
+pub struct NativeRuntime;
+
+impl BlockCompute for NativeRuntime {
+    fn qr(&self, a: &Matrix) -> Result<(Matrix, Matrix)> {
+        Ok(householder_qr(a))
+    }
+
+    fn gram(&self, a: &Matrix) -> Result<Matrix> {
+        Ok(a.gram())
+    }
+
+    fn matmul(&self, a: &Matrix, s: &Matrix) -> Result<Matrix> {
+        Ok(a.matmul(s))
+    }
+
+    fn max_qr_rows(&self, _cols: usize) -> usize {
+        usize::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_qr_contract() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(40, 6, &mut rng);
+        let rt = NativeRuntime;
+        let (q, r) = rt.qr(&a).unwrap();
+        assert!(a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm() < 1e-13);
+        assert!(q.orthogonality_error() < 1e-13);
+    }
+
+    #[test]
+    fn native_qr_apply_default_impl() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::gaussian(30, 4, &mut rng);
+        let s = Matrix::identity(4);
+        let rt = NativeRuntime;
+        let (qs, r) = rt.qr_apply(&a, &s).unwrap();
+        assert!(a.sub(&qs.matmul(&r)).frob_norm() / a.frob_norm() < 1e-13);
+    }
+}

@@ -1,0 +1,96 @@
+//! Zero-padding of blocks to static artifact shapes, and the inverse
+//! extraction.
+//!
+//! PJRT executables are compiled for fixed shapes; a `(rows × cols)`
+//! block is embedded into the top-left corner of a `(b × n)` zero
+//! buffer. Why this is exact:
+//!
+//! * **rows**: Householder reflectors built from columns with trailing
+//!   zeros have zeros there, and every update preserves them → the thin
+//!   Q's padded rows are exactly 0 and the top block/R agree with the
+//!   unpadded factorization to roundoff. `gram`/`matmul` padding is an
+//!   identity (adds zero terms).
+//! * **cols**: zero columns produce identity reflectors (guarded in the
+//!   kernel), zero rows/columns of R, and the leading `cols` columns of
+//!   Q together with the principal `cols×cols` block of R form a valid
+//!   thin QR of the original block.
+//!
+//! Pinned down by `python/tests/test_padding.py` (kernel side) and the
+//! tests here (extraction side).
+
+use crate::linalg::Matrix;
+
+/// Embed `a` in the top-left of a `(b × n)` zero matrix (row-major).
+pub fn pad_to(a: &Matrix, b: usize, n: usize) -> Vec<f64> {
+    assert!(a.rows <= b && a.cols <= n, "pad_to smaller than input");
+    let mut out = vec![0.0f64; b * n];
+    for i in 0..a.rows {
+        out[i * n..i * n + a.cols].copy_from_slice(a.row(i));
+    }
+    out
+}
+
+/// Extract the top-left `(rows × cols)` block from a row-major `(b × n)`
+/// buffer.
+pub fn extract(buf: &[f64], b: usize, n: usize, rows: usize, cols: usize) -> Matrix {
+    assert_eq!(buf.len(), b * n, "buffer shape mismatch");
+    assert!(rows <= b && cols <= n);
+    let mut m = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        m.row_mut(i).copy_from_slice(&buf[i * n..i * n + cols]);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pad_extract_roundtrip() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(5, 3, &mut rng);
+        let buf = pad_to(&a, 8, 4);
+        assert_eq!(buf.len(), 32);
+        let back = extract(&buf, 8, 4, 5, 3);
+        assert_eq!(back.data, a.data);
+    }
+
+    #[test]
+    fn padding_is_zero() {
+        let a = Matrix::from_rows(1, 1, vec![7.0]);
+        let buf = pad_to(&a, 2, 2);
+        assert_eq!(buf, vec![7.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn exact_fit_is_identity() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::gaussian(4, 4, &mut rng);
+        let buf = pad_to(&a, 4, 4);
+        assert_eq!(buf, a.data);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_shrinking() {
+        let a = Matrix::zeros(4, 4);
+        pad_to(&a, 2, 4);
+    }
+
+    #[test]
+    fn padded_qr_extraction_is_valid_qr() {
+        // End-to-end property the runtime relies on, via the native QR:
+        // factor the padded block, extract, check factorization.
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(37, 5, &mut rng);
+        let padded = Matrix::from_rows(64, 8, pad_to(&a, 64, 8));
+        let (qp, rp) = crate::linalg::householder_qr(&padded);
+        let q = extract(&qp.data, 64, 8, 37, 5);
+        let r = extract(&rp.data, 8, 8, 5, 5);
+        assert!(a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm() < 1e-13);
+        assert!(q.orthogonality_error() < 1e-13);
+        assert!(r.is_upper_triangular(0.0));
+    }
+}

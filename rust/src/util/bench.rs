@@ -1,0 +1,78 @@
+//! Tiny benchmarking harness (criterion is not vendored offline).
+//!
+//! Provides warmup + median-of-k wall timing with spread reporting.
+//! Bench targets are `harness = false` binaries that print paper-shaped
+//! tables via [`crate::util::table`].
+
+use std::time::Instant;
+
+/// Result of a timed measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub median_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+    pub iters: usize,
+}
+
+impl Sample {
+    pub fn throughput(&self, units: f64) -> f64 {
+        units / self.median_secs
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Sample {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Sample {
+        median_secs: times[times.len() / 2],
+        min_secs: times[0],
+        max_secs: *times.last().unwrap(),
+        iters,
+    }
+}
+
+/// One-shot wall timing of `f`, returning (result, seconds).
+pub fn once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// `--quick` mode helper: benches honor MRTSQR_BENCH_QUICK=1 to shrink
+/// workloads (used by CI / `cargo bench` smoke runs).
+pub fn quick_mode() -> bool {
+    std::env::var("MRTSQR_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_orders_samples() {
+        let s = time(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.min_secs <= s.median_secs && s.median_secs <= s.max_secs);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let (v, secs) = once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

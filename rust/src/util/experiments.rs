@@ -1,0 +1,192 @@
+//! Shared experiment runners behind the paper-table benches.
+//!
+//! Tables VI/VII/VIII/IX all derive from one sweep (job times per
+//! algorithm per workload); this module runs it once per bench binary
+//! and lets each bench print its own view.
+
+use crate::coordinator::{Algorithm, Coordinator, MatrixHandle};
+use crate::dfs::DiskModel;
+use crate::mapreduce::{ClusterConfig, Engine, JobStats};
+use crate::perfmodel::{lower_bound_secs, AlgoKind, StageParallelism, WorkloadShape};
+use crate::runtime::BlockCompute;
+use crate::workload::{gaussian_matrix, paper_workloads, ScaledWorkload};
+use anyhow::Result;
+
+/// One (workload, algorithm) measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub workload: ScaledWorkload,
+    pub algo: Algorithm,
+    pub virtual_secs: f64,
+    pub wall_secs: f64,
+    pub stats: JobStats,
+    /// Model lower bound at paper scale with the engine's betas.
+    pub t_lb: f64,
+}
+
+impl Measurement {
+    /// Paper Table VII metric: `2·m·n²/t` at paper scale.
+    pub fn flops_per_sec(&self) -> f64 {
+        let shape = WorkloadShape::new(self.workload.paper_rows, self.workload.cols as u64, 1);
+        shape.flops() / self.virtual_secs
+    }
+
+    pub fn multiple_of_lb(&self) -> f64 {
+        self.virtual_secs / self.t_lb
+    }
+}
+
+/// Default workload scale for benches (paper rows / this): QUICK mode
+/// shrinks further.
+pub fn bench_scale() -> u64 {
+    if crate::util::bench::quick_mode() {
+        40_000
+    } else {
+        4_000
+    }
+}
+
+/// Map-task counts mirroring the paper's Table IV exactly. Running the
+/// paper's *real* task counts (1200–2640) is what makes the per-file
+/// virtual-byte scaling honest: every `O(m1·n²)` factor file (the step-1
+/// R blocks, the step-2 Q² side file) then has paper-scale actual size
+/// and is charged at scale 1, while only the `O(m·n)` matrix files carry
+/// the workload scale.
+fn map_tasks_for(w: &ScaledWorkload, direct: bool) -> usize {
+    let paper = if direct { w.m1_direct } else { w.m1_indirect } as usize;
+    paper.min(w.rows).max(1)
+}
+
+/// Run one algorithm on one scaled workload with paper-scale virtual
+/// byte accounting. Householder runs 4 columns and extrapolates (the
+/// paper's own method for Table VI).
+pub fn run_one(
+    compute: &dyn BlockCompute,
+    w: &ScaledWorkload,
+    algo: Algorithm,
+    beta_r: f64,
+    beta_w: f64,
+) -> Result<Measurement> {
+    let model = DiskModel {
+        beta_r,
+        beta_w,
+        byte_scale: 1.0, // per-file scales below, not a global multiplier
+        iteration_startup_secs: 15.0,
+        task_startup_secs: 2.0,
+    };
+    let mut engine = Engine::new(model, ClusterConfig::default());
+    gaussian_matrix(&mut engine.dfs, "A", w.rows, w.cols, 0xBEEF ^ w.cols as u64);
+    // the matrix (and the Q files derived from it) are O(m·n): charge at
+    // the workload scale so virtual times land in paper units
+    engine.dfs.set_scale("A", w.byte_scale);
+    let mut coord = Coordinator::new(engine, compute);
+    let is_direct = matches!(algo, Algorithm::DirectTsqr);
+    let tasks = map_tasks_for(w, is_direct);
+    coord.opts.rows_per_task = (w.rows / tasks).max(1);
+    let input = MatrixHandle::new("A", w.rows, w.cols);
+
+    let t0 = std::time::Instant::now();
+    let (virtual_secs, stats) = if algo == Algorithm::Householder {
+        let cols_run = 4.min(w.cols);
+        let (_, stats) =
+            crate::coordinator::householder::householder_r(&mut coord, &input, Some(cols_run))?;
+        // extrapolate: norm pass + per-column cost × n
+        let norm_pass = stats.steps[0].virtual_secs;
+        let per_col = (stats.virtual_secs() - norm_pass) / cols_run as f64;
+        (norm_pass + per_col * w.cols as f64, stats)
+    } else {
+        let res = coord.qr(&input, algo)?;
+        (res.stats.virtual_secs(), res.stats)
+    };
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    // model bound at paper scale (paper Table IV m1 counts)
+    let m1 = if is_direct { w.m1_direct } else { w.m1_indirect };
+    let shape = WorkloadShape::new(w.paper_rows, w.cols as u64, m1);
+    let t_lb = lower_bound_secs(algo.kind(), &shape, &StageParallelism::default(), beta_r, beta_w);
+
+    Ok(Measurement { workload: *w, algo, virtual_secs, wall_secs, stats, t_lb })
+}
+
+/// The full Table VI sweep: all six algorithms × the five workloads.
+pub fn run_table6_sweep(
+    compute: &dyn BlockCompute,
+    beta_r: f64,
+    beta_w: f64,
+) -> Result<Vec<Measurement>> {
+    let mut out = Vec::new();
+    for w in paper_workloads(bench_scale()) {
+        for algo in Algorithm::ALL {
+            out.push(run_one(compute, &w, algo, beta_r, beta_w)?);
+        }
+    }
+    Ok(out)
+}
+
+/// The paper's measured Table VI numbers, for side-by-side printing.
+pub fn paper_table6(algo: AlgoKind, paper_rows: u64) -> Option<f64> {
+    let idx = match paper_rows {
+        4_000_000_000 => 0,
+        2_500_000_000 => 1,
+        600_000_000 => 2,
+        500_000_000 => 3,
+        150_000_000 => 4,
+        _ => return None,
+    };
+    let col: [f64; 5] = match algo {
+        AlgoKind::Cholesky => [2931.0, 2508.0, 1098.0, 1563.0, 921.0],
+        AlgoKind::IndirectTsqr => [4076.0, 2509.0, 1104.0, 1618.0, 954.0],
+        AlgoKind::CholeskyIr => [5832.0, 5011.0, 2221.0, 3204.0, 1878.0],
+        AlgoKind::IndirectTsqrIr => [7431.0, 5052.0, 2235.0, 3298.0, 1960.0],
+        AlgoKind::DirectTsqr => [6128.0, 4035.0, 1910.0, 3090.0, 2154.0],
+        AlgoKind::Householder => [15021.0, 32950.0, 37388.0, 117775.0, 133025.0],
+        // §VI variant was proposed, never measured by the paper
+        AlgoKind::DirectTsqrFused => return None,
+    };
+    Some(col[idx])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeRuntime;
+
+    #[test]
+    fn run_one_direct_smoke() {
+        let w = ScaledWorkload {
+            paper_rows: 4_000_000_000,
+            cols: 4,
+            rows: 4000,
+            byte_scale: 1_000_000.0,
+            m1_indirect: 1200,
+            m1_direct: 2000,
+        };
+        let m = run_one(&NativeRuntime, &w, Algorithm::DirectTsqr, 64e-9, 126e-9).unwrap();
+        assert!(m.virtual_secs > 0.0);
+        assert!(m.t_lb > 0.0);
+        assert!(m.flops_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn householder_extrapolates() {
+        let w = ScaledWorkload {
+            paper_rows: 600_000_000,
+            cols: 25,
+            rows: 2000,
+            byte_scale: 300_000.0,
+            m1_indirect: 1200,
+            m1_direct: 1600,
+        };
+        let m = run_one(&NativeRuntime, &w, Algorithm::Householder, 64e-9, 126e-9).unwrap();
+        // only 4 columns actually ran (1 + 2*4 = 9 steps), but the time
+        // reflects all 25
+        assert_eq!(m.stats.steps.len(), 9);
+        assert!(m.virtual_secs > m.stats.virtual_secs());
+    }
+
+    #[test]
+    fn paper_table6_lookup() {
+        assert_eq!(paper_table6(AlgoKind::DirectTsqr, 2_500_000_000), Some(4035.0));
+        assert_eq!(paper_table6(AlgoKind::Householder, 7), None);
+    }
+}

@@ -1,0 +1,15 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is offline with only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (`rand`,
+//! `clap`, `criterion`, `proptest`, `serde`) are unavailable. This
+//! module hand-rolls the minimal versions the project needs.
+
+pub mod bench;
+pub mod cli;
+pub mod experiments;
+pub mod prop;
+pub mod rng;
+pub mod table;
+
+pub use rng::Rng;

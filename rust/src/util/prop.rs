@@ -1,0 +1,80 @@
+//! Mini property-testing helper (proptest is not vendored offline).
+//!
+//! `check` runs a property over `cases` seeded random inputs produced by
+//! a generator; on failure it reports the seed and the debug-printed
+//! input so the case can be replayed deterministically (set
+//! `MRTSQR_PROP_SEED` to pin the base seed).
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Number of cases per property (override with MRTSQR_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("MRTSQR_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("MRTSQR_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` over `cases` inputs drawn from `gen`. Panics with the
+/// replay seed on the first failing case.
+pub fn check<T: Debug, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (replay: MRTSQR_PROP_SEED={base}):\n  input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f64s are within `tol` (absolute + relative).
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 16,
+            |r| (r.uniform(), r.uniform()),
+            |&(a, b)| close(a + b, b + a, 0.0),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports() {
+        check("always-fails", 4, |r| r.next_u64(), |_| Err("no".into()));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close(1.0, 2.0, 1e-9).is_err());
+        assert!(close(1e9, 1e9 + 1.0, 1e-6).is_ok()); // relative
+    }
+}

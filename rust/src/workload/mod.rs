@@ -1,0 +1,132 @@
+//! Workload generators: matrices written into the DFS as row records.
+//!
+//! The benches use the paper's matrix *aspect ratios* scaled down
+//! ~2000× (DESIGN.md §2); the stability study uses prescribed-condition
+//! matrices from [`crate::linalg::matgen`].
+
+use crate::dfs::records::{encode_row, row_key, Record};
+use crate::dfs::Dfs;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Write an in-memory matrix to a DFS file, one record per row, keyed by
+/// global row id (the paper's canonical HDFS layout).
+pub fn put_matrix(dfs: &mut Dfs, name: &str, a: &Matrix) {
+    let recs: Vec<Record> = (0..a.rows)
+        .map(|i| Record::new(row_key(i as u64), encode_row(a.row(i))))
+        .collect();
+    dfs.put(name, recs);
+}
+
+/// Read a whole DFS matrix file back (rows in key order as stored).
+pub fn get_matrix(dfs: &Dfs, name: &str, cols: usize) -> anyhow::Result<Matrix> {
+    let recs = dfs.get(name)?;
+    let mut data = Vec::with_capacity(recs.len() * cols);
+    for rec in recs {
+        let row = crate::dfs::records::decode_row(&rec.value);
+        anyhow::ensure!(row.len() == cols, "row width {} != {}", row.len(), cols);
+        data.extend_from_slice(&row);
+    }
+    Ok(Matrix::from_rows(recs.len(), cols, data))
+}
+
+/// Stream a gaussian `m × n` matrix into the DFS without materializing
+/// a `Matrix` (row at a time) — the perf-bench workload.
+pub fn gaussian_matrix(dfs: &mut Dfs, name: &str, m: usize, n: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let mut recs = Vec::with_capacity(m);
+    let mut row = vec![0.0f64; n];
+    for i in 0..m {
+        for v in row.iter_mut() {
+            *v = rng.gaussian();
+        }
+        recs.push(Record::new(row_key(i as u64), encode_row(&row)));
+    }
+    dfs.put(name, recs);
+}
+
+/// The five paper workloads (rows, cols) scaled by `1/scale`, with the
+/// byte scale to hand to [`crate::dfs::DiskModel::with_scale`] so the
+/// virtual clock still charges paper-scale bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaledWorkload {
+    pub paper_rows: u64,
+    pub cols: usize,
+    pub rows: usize,
+    pub byte_scale: f64,
+    /// paper's step-1 map tasks (indirect / direct variants)
+    pub m1_indirect: u64,
+    pub m1_direct: u64,
+}
+
+/// Paper Table VI workload list, scaled down by `scale` (rows are
+/// rounded to a multiple of 1000 to keep splits tidy).
+pub fn paper_workloads(scale: u64) -> Vec<ScaledWorkload> {
+    let raw: [(u64, usize, u64, u64); 5] = [
+        (4_000_000_000, 4, 1200, 2000),
+        (2_500_000_000, 10, 1680, 2640),
+        (600_000_000, 25, 1200, 1600),
+        (500_000_000, 50, 1920, 2560),
+        (150_000_000, 100, 1200, 1600),
+    ];
+    raw.iter()
+        .map(|&(m, n, m1i, m1d)| {
+            let rows = (((m / scale) / 1000).max(1) * 1000) as usize;
+            ScaledWorkload {
+                paper_rows: m,
+                cols: n,
+                rows,
+                byte_scale: m as f64 / rows as f64,
+                m1_indirect: m1i,
+                m1_direct: m1d,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut dfs = Dfs::new();
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(10, 3, &mut rng);
+        put_matrix(&mut dfs, "a", &a);
+        let back = get_matrix(&dfs, "a", 3).unwrap();
+        assert_eq!(back.data, a.data);
+    }
+
+    #[test]
+    fn gaussian_streaming_matches_records() {
+        let mut dfs = Dfs::new();
+        gaussian_matrix(&mut dfs, "g", 100, 5, 42);
+        assert_eq!(dfs.file_records("g").unwrap(), 100);
+        assert_eq!(dfs.file_bytes("g").unwrap(), 100 * (32 + 40));
+        let m = get_matrix(&dfs, "g", 5).unwrap();
+        // deterministic per seed
+        let mut dfs2 = Dfs::new();
+        gaussian_matrix(&mut dfs2, "g", 100, 5, 42);
+        assert_eq!(get_matrix(&dfs2, "g", 5).unwrap().data, m.data);
+    }
+
+    #[test]
+    fn paper_workloads_scaled() {
+        let w = paper_workloads(2000);
+        assert_eq!(w.len(), 5);
+        assert_eq!(w[0].rows, 2_000_000);
+        assert_eq!(w[0].cols, 4);
+        // byte scale maps back to paper rows
+        assert!((w[0].byte_scale * w[0].rows as f64 - 4e9).abs() < 1e-3);
+        assert_eq!(w[4].cols, 100);
+        assert_eq!(w[4].rows, 75_000);
+    }
+
+    #[test]
+    fn wrong_width_errors() {
+        let mut dfs = Dfs::new();
+        gaussian_matrix(&mut dfs, "g", 4, 3, 1);
+        assert!(get_matrix(&dfs, "g", 5).is_err());
+    }
+}

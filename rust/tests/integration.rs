@@ -1,0 +1,194 @@
+//! Integration tests: the PJRT runtime executing the real AOT artifacts.
+//!
+//! These require `make artifacts` to have run (they are skipped with a
+//! clear message otherwise — CI runs `make test` which builds artifacts
+//! first). One PJRT client is created per test.
+
+use mrtsqr::linalg::{householder_qr, jacobi_svd, matrix_with_condition, Matrix};
+use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::util::rng::Rng;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return None;
+    }
+    Some(PjrtRuntime::from_default_artifacts().expect("runtime"))
+}
+
+macro_rules! require_runtime {
+    () => {
+        match runtime() {
+            Some(rt) => rt,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn pjrt_qr_matches_native_oracle() {
+    let rt = require_runtime!();
+    let native = NativeRuntime;
+    let mut rng = Rng::new(1);
+    for &(rows, cols) in &[(64usize, 4usize), (1000, 10), (777, 25), (300, 50)] {
+        let a = Matrix::gaussian(rows, cols, &mut rng);
+        let (q, r) = rt.qr(&a).expect("pjrt qr");
+        let (mut qn, mut rn) = native.qr(&a).unwrap();
+        // properties
+        let recon = a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm();
+        assert!(recon < 1e-12, "{rows}x{cols} recon {recon}");
+        assert!(q.orthogonality_error() < 1e-12);
+        // agreement with the independent oracle up to signs
+        let (mut qp, mut rp) = (q, r);
+        mrtsqr::linalg::qr::sign_normalize(&mut qp, &mut rp);
+        mrtsqr::linalg::qr::sign_normalize(&mut qn, &mut rn);
+        assert!(rp.sub(&rn).max_abs() < 1e-9 * rn.max_abs(), "{rows}x{cols} R mismatch");
+        assert!(qp.sub(&qn).max_abs() < 1e-8, "{rows}x{cols} Q mismatch");
+    }
+}
+
+#[test]
+fn pjrt_qr_pads_rows_and_cols() {
+    let rt = require_runtime!();
+    let mut rng = Rng::new(2);
+    // 7 cols -> padded to the n=8 artifact; 150 rows -> padded to 256
+    let a = Matrix::gaussian(150, 7, &mut rng);
+    let (q, r) = rt.qr(&a).unwrap();
+    assert_eq!((q.rows, q.cols), (150, 7));
+    assert_eq!((r.rows, r.cols), (7, 7));
+    assert!(a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm() < 1e-12);
+    assert!(q.orthogonality_error() < 1e-12);
+    assert!(r.is_upper_triangular(0.0));
+}
+
+#[test]
+fn pjrt_qr_ill_conditioned_stays_orthogonal() {
+    let rt = require_runtime!();
+    let mut rng = Rng::new(3);
+    let a = matrix_with_condition(512, 10, 1e14, &mut rng);
+    let (q, _) = rt.qr(&a).unwrap();
+    assert!(q.orthogonality_error() < 1e-12, "orth {}", q.orthogonality_error());
+}
+
+#[test]
+fn pjrt_gram_matches_native() {
+    let rt = require_runtime!();
+    let native = NativeRuntime;
+    let mut rng = Rng::new(4);
+    for &(rows, cols) in &[(100usize, 4usize), (1024, 10), (333, 25)] {
+        let a = Matrix::gaussian(rows, cols, &mut rng);
+        let g = rt.gram(&a).unwrap();
+        let gn = native.gram(&a).unwrap();
+        assert!(g.sub(&gn).max_abs() < 1e-10 * gn.max_abs().max(1.0), "{rows}x{cols}");
+    }
+}
+
+#[test]
+fn pjrt_gram_chunks_past_max_block() {
+    let rt = require_runtime!();
+    let max_b = rt.manifest().max_rows(mrtsqr::runtime::Op::Gram, 4);
+    let rows = max_b + 1234; // forces the chunked accumulation path
+    let mut rng = Rng::new(5);
+    let a = Matrix::gaussian(rows, 4, &mut rng);
+    let g = rt.gram(&a).unwrap();
+    let gn = a.gram();
+    assert!(g.sub(&gn).max_abs() < 1e-9 * gn.max_abs());
+}
+
+#[test]
+fn pjrt_matmul_matches_native_and_chunks() {
+    let rt = require_runtime!();
+    let mut rng = Rng::new(6);
+    let max_b = rt.manifest().max_rows(mrtsqr::runtime::Op::Matmul, 8);
+    for rows in [200usize, max_b + 77] {
+        let a = Matrix::gaussian(rows, 8, &mut rng);
+        let s = Matrix::gaussian(8, 8, &mut rng);
+        let c = rt.matmul(&a, &s).unwrap();
+        let cn = a.matmul(&s);
+        assert!(c.sub(&cn).max_abs() < 1e-11 * cn.max_abs().max(1.0), "rows={rows}");
+    }
+}
+
+#[test]
+fn pjrt_matmul_rect_right_operand() {
+    let rt = require_runtime!();
+    let mut rng = Rng::new(7);
+    let a = Matrix::gaussian(100, 8, &mut rng);
+    let s = Matrix::gaussian(8, 3, &mut rng); // k < n: padded, then sliced
+    let c = rt.matmul(&a, &s).unwrap();
+    assert_eq!((c.rows, c.cols), (100, 3));
+    assert!(c.sub(&a.matmul(&s)).max_abs() < 1e-11);
+}
+
+#[test]
+fn pjrt_qr_apply_fused() {
+    let rt = require_runtime!();
+    let mut rng = Rng::new(8);
+    let a = Matrix::gaussian(200, 8, &mut rng);
+    let s = Matrix::gaussian(8, 8, &mut rng);
+    let (qs, r) = rt.qr_apply(&a, &s).unwrap();
+    // compare against the composition
+    let (q, r2) = rt.qr(&a).unwrap();
+    let qs2 = rt.matmul(&q, &s).unwrap();
+    assert!(qs.sub(&qs2).max_abs() < 1e-10);
+    assert!(r.sub(&r2).max_abs() < 1e-10 * r2.max_abs());
+}
+
+#[test]
+fn pjrt_executable_cache_compiles_once() {
+    let rt = require_runtime!();
+    let mut rng = Rng::new(9);
+    let a = Matrix::gaussian(64, 4, &mut rng);
+    rt.qr(&a).unwrap();
+    let after_first = rt.stats.borrow().compiles;
+    for _ in 0..5 {
+        rt.qr(&a).unwrap();
+    }
+    let after_six = rt.stats.borrow().compiles;
+    assert_eq!(after_first, after_six, "same shape must not recompile");
+    assert!(rt.stats.borrow().executions >= 6);
+}
+
+#[test]
+fn pjrt_svd_of_r_pipeline() {
+    // qr on PJRT + serial Jacobi on R — the TSVD step-2 combination
+    let rt = require_runtime!();
+    let mut rng = Rng::new(10);
+    let sigma = vec![4.0, 2.0, 1.0, 0.25];
+    let (a, _, _) = mrtsqr::linalg::matgen::matrix_with_spectrum(256, 4, &sigma, &mut rng);
+    let (_, r) = rt.qr(&a).unwrap();
+    let svd = jacobi_svd(&r);
+    for (got, want) in svd.sigma.iter().zip(&sigma) {
+        assert!((got / want - 1.0).abs() < 1e-10);
+    }
+}
+
+#[test]
+fn pjrt_differential_fuzz_vs_native() {
+    let rt = require_runtime!();
+    let native = NativeRuntime;
+    let mut rng = Rng::new(11);
+    for case in 0..20 {
+        let rows = 4 + (rng.below(500) as usize);
+        let cols = 1 + (rng.below(16) as usize);
+        let rows = rows.max(cols);
+        let a = Matrix::gaussian(rows, cols, &mut rng);
+        let (q, r) = rt.qr(&a).unwrap_or_else(|e| panic!("case {case} {rows}x{cols}: {e}"));
+        let (qn, rn) = native.qr(&a).unwrap();
+        // both must be valid factorizations of the same matrix
+        let e1 = a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm();
+        let e2 = a.sub(&qn.matmul(&rn)).frob_norm() / a.frob_norm();
+        assert!(e1 < 1e-11 && e2 < 1e-11, "case {case}: {e1} {e2}");
+        assert!(q.orthogonality_error() < 1e-11, "case {case}");
+    }
+}
+
+#[test]
+fn householder_oracle_self_check() {
+    // sanity anchor for everything above
+    let mut rng = Rng::new(12);
+    let a = Matrix::gaussian(128, 16, &mut rng);
+    let (q, r) = householder_qr(&a);
+    assert!(a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm() < 1e-13);
+}
