@@ -1,45 +1,44 @@
 //! End-to-end driver: the full system on one real small workload.
 //!
-//! Proves every layer composes: Pallas-kernel HLO artifacts (L1/L2)
-//! executed via PJRT from the rust coordinator (L3) over the simulated
-//! MapReduce cluster — all six algorithm variants plus the TSVD — on a
-//! 500k×50 (≈220 MB) ill-conditioned matrix (κ = 1e6), reporting the
-//! paper's success metrics per algorithm. Recorded in EXPERIMENTS.md.
+//! Proves every layer composes: the session API (L4) over the MapReduce
+//! coordinator (L3) over the simulated cluster, with the block kernels
+//! on whichever backend `Backend::Auto` resolves (PJRT artifacts when
+//! built with `--features pjrt`, the pure-rust oracle otherwise) — all
+//! six algorithm variants plus the TSVD — on a 500k×50 (≈220 MB)
+//! ill-conditioned matrix (κ = 1e6), reporting the paper's success
+//! metrics per algorithm. Recorded in EXPERIMENTS.md.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example end_to_end
+//! cargo run --release --example end_to_end
 //! ```
 
 use anyhow::Result;
-use mrtsqr::coordinator::{Algorithm, Coordinator, MatrixHandle};
-use mrtsqr::dfs::DiskModel;
+use mrtsqr::coordinator::Algorithm;
 use mrtsqr::linalg::matrix_with_condition;
-use mrtsqr::mapreduce::{ClusterConfig, Engine};
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::session::{Backend, TsqrSession};
 use mrtsqr::util::bench::once;
+use mrtsqr::util::experiments::householder_extrapolated;
 use mrtsqr::util::rng::Rng;
 use mrtsqr::util::table::{sci, Table};
-use mrtsqr::workload::{get_matrix, put_matrix};
 
 fn main() -> Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
-    let pjrt;
-    let native;
-    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
-        pjrt = PjrtRuntime::from_default_artifacts()?;
-        println!("backend: PJRT AOT artifacts");
-        &pjrt
-    } else {
-        native = NativeRuntime;
-        println!("backend: native (no artifacts — run `make artifacts`)");
-        &native
-    };
+    // resolve the backend once; every per-algorithm session shares it
+    let (compute, backend_name) = Backend::Auto.resolve()?;
+    println!("backend: {backend_name}");
 
     let (rows, cols) = if quick { (20_000, 25) } else { (500_000, 50) };
     let kappa = 1e6;
     println!("generating {rows} x {cols} matrix with condition number {kappa:.0e}…");
     let mut rng = Rng::new(2026);
     let a = matrix_with_condition(rows, cols, kappa, &mut rng);
+
+    let session_for = |compute: &std::rc::Rc<dyn mrtsqr::runtime::BlockCompute>| {
+        TsqrSession::builder()
+            .compute(compute.clone())
+            .rows_per_task(1000)
+            .build()
+    };
 
     let mut table = Table::new(
         "End-to-end: all algorithms on one workload (paper success metrics)",
@@ -53,15 +52,12 @@ fn main() -> Result<()> {
         Algorithm::IndirectTsqr { refine: true },
         Algorithm::DirectTsqr,
     ] {
-        let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
-        put_matrix(&mut engine.dfs, "A", &a);
-        engine.dfs.set_scale("A", 1000.0);
-        let mut coord = Coordinator::new(engine, compute);
-        coord.opts.rows_per_task = 1000;
-        let input = MatrixHandle::new("A", rows, cols);
-        let (res, wall) = once(|| coord.qr(&input, algo));
+        let mut session = session_for(&compute)?;
+        let input = session.ingest_matrix("A", &a)?;
+        session.set_scale("A", 1000.0);
+        let (res, wall) = once(|| session.qr_with(&input, algo));
         let res = res?;
-        let q = get_matrix(&coord.engine.dfs, &res.q.as_ref().unwrap().file, cols)?;
+        let q = session.get_matrix(res.q.as_ref().unwrap())?;
         let io = res.stats.total_io();
         table.row(&[
             algo.name().to_string(),
@@ -76,19 +72,11 @@ fn main() -> Result<()> {
 
     // Householder: R-only, first 4 columns extrapolated (paper Table VI *)
     {
-        let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
-        put_matrix(&mut engine.dfs, "A", &a);
-        engine.dfs.set_scale("A", 1000.0);
-        let mut coord = Coordinator::new(engine, compute);
-        coord.opts.rows_per_task = 1000;
-        let input = MatrixHandle::new("A", rows, cols);
-        let (out, wall) = once(|| {
-            mrtsqr::coordinator::householder::householder_r(&mut coord, &input, Some(4))
-        });
-        let (_, stats) = out?;
-        // per-column cost from the measured 4 columns, extrapolated to n
-        let percol = (stats.virtual_secs() - stats.steps[0].virtual_secs) / 4.0;
-        let est = stats.steps[0].virtual_secs + percol * cols as f64;
+        let mut session = session_for(&compute)?;
+        let input = session.ingest_matrix("A", &a)?;
+        session.set_scale("A", 1000.0);
+        let (out, wall) = once(|| householder_extrapolated(&mut session, &input, 4));
+        let (est, stats) = out?;
         let io = stats.total_io();
         table.row(&[
             "House.* (extrap)".into(),
@@ -103,26 +91,26 @@ fn main() -> Result<()> {
     table.print();
 
     // TSVD on the same matrix
-    let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
-    put_matrix(&mut engine.dfs, "A", &a);
-    engine.dfs.set_scale("A", 1000.0);
-    let mut coord = Coordinator::new(engine, compute);
-    coord.opts.rows_per_task = 1000;
-    let input = MatrixHandle::new("A", rows, cols);
-    let (out, wall) = once(|| coord.svd(&input));
+    let mut session = session_for(&compute)?;
+    let input = session.ingest_matrix("A", &a)?;
+    session.set_scale("A", 1000.0);
+    let (out, wall) = once(|| session.svd(&input));
     let out = out?;
-    let svd = out.svd.unwrap();
+    let sigma = out.sigma().unwrap();
+    println!(
+        "\nTSVD (Direct TSQR + fused U): virtual {:.0} s, wall {wall:.2} s",
+        out.stats.virtual_secs()
+    );
+    println!(
+        "sigma_max/sigma_min recovered: {:.3e} (target {kappa:.0e})",
+        sigma[0] / sigma[cols - 1]
+    );
     let spectrum = mrtsqr::linalg::matgen::log_spectrum(cols, kappa);
-    let max_rel_err = svd
-        .sigma
+    let max_rel_err = sigma
         .iter()
         .zip(&spectrum)
         .map(|(got, want)| (got / want - 1.0).abs())
-        .fold(0.0f64, f64::max)
-        // prescribed spectrum is scaled by the generator's norm; compare shapes
-        ;
-    println!("\nTSVD (Direct TSQR + fused U): virtual {:.0} s, wall {wall:.2} s", out.stats.virtual_secs());
-    println!("sigma_max/sigma_min recovered: {:.3e} (target {kappa:.0e})", svd.sigma[0] / svd.sigma[cols - 1]);
+        .fold(0.0f64, f64::max);
     println!("max relative sigma error vs prescribed spectrum: {}", sci(max_rel_err));
     println!("\nshape targets (paper Table VI): Chol≈Indirect < Direct < +IR variants ≪ Householder");
     Ok(())

@@ -3,26 +3,18 @@
 //! The paper crashes tasks with probability p and measures the penalty
 //! on an 800M×10 matrix (62.9 GB): at p = 1/8 the job slows by 23.2%.
 //! We run the same sweep on the scaled workload with Hadoop retry
-//! semantics (failed attempts waste half a task and re-execute).
+//! semantics (failed attempts waste half a task and re-execute), the
+//! fault policy configured straight on the session builder.
 
 use anyhow::Result;
-use mrtsqr::coordinator::{Algorithm, Coordinator, MatrixHandle};
-use mrtsqr::dfs::DiskModel;
-use mrtsqr::mapreduce::{ClusterConfig, Engine, FaultPolicy};
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::mapreduce::FaultPolicy;
+use mrtsqr::session::{Backend, TsqrSession};
 use mrtsqr::util::table::Table;
-use mrtsqr::workload::{gaussian_matrix, get_matrix};
 
 fn main() -> Result<()> {
-    let pjrt;
-    let native;
-    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
-        pjrt = PjrtRuntime::from_default_artifacts()?;
-        &pjrt
-    } else {
-        native = NativeRuntime;
-        &native
-    };
+    let (compute, backend_name) = Backend::Auto.resolve()?;
+    println!("backend: {backend_name}");
 
     // paper: 800M x 10 with 800 map tasks; scaled 1/2000 -> 400k x 10
     let (rows, cols) = (400_000usize, 10usize);
@@ -34,21 +26,21 @@ fn main() -> Result<()> {
     );
     let mut baseline = None;
     for &p in &[0.0, 1.0 / 64.0, 1.0 / 32.0, 1.0 / 16.0, 1.0 / 8.0] {
-        let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default())
-            .with_faults(
+        let mut session = TsqrSession::builder()
+            .compute(compute.clone())
+            .fault_policy(
                 FaultPolicy { probability: p, max_attempts: 24, waste_fraction: 1.0 },
                 4242,
-            );
-        gaussian_matrix(&mut engine.dfs, "A", rows, cols, 11);
-        engine.dfs.set_scale("A", byte_scale);
-        let mut coord = Coordinator::new(engine, compute);
-        coord.opts.rows_per_task = 500; // 800 map tasks, like the paper
-        let input = MatrixHandle::new("A", rows, cols);
-        let res = coord.qr(&input, Algorithm::DirectTsqr)?;
+            )
+            .rows_per_task(500) // 800 map tasks, like the paper
+            .build()?;
+        let input = session.ingest_gaussian("A", rows, cols, 11)?;
+        session.set_scale("A", byte_scale);
+        let res = session.qr_with(&input, Algorithm::DirectTsqr)?;
 
         // correctness is untouched by faults (Hadoop re-execution)
-        let a = get_matrix(&coord.engine.dfs, "A", cols)?;
-        let q = get_matrix(&coord.engine.dfs, &res.q.as_ref().unwrap().file, cols)?;
+        let a = session.get_matrix(&input)?;
+        let q = session.get_matrix(res.q.as_ref().unwrap())?;
         assert!(q.orthogonality_error() < 1e-11);
         assert!(a.sub(&q.matmul(&res.r)).frob_norm() / a.frob_norm() < 1e-11);
 

@@ -1,50 +1,41 @@
-//! Quickstart: factor a tall-and-skinny matrix with Direct TSQR.
+//! Quickstart: factor a tall-and-skinny matrix through the session API.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
+//! # or, with the AOT-compiled JAX/Pallas kernels:
+//! make artifacts && cargo run --release --features pjrt --example quickstart
 //! ```
 //!
-//! Loads the AOT-compiled JAX/Pallas kernels through PJRT (falling back
-//! to the pure-rust oracle if artifacts are missing), streams a matrix
-//! into the simulated HDFS, runs the paper's 3-step Direct TSQR, and
-//! verifies the factorization.
+//! One builder call configures the simulated cluster and picks the
+//! compute backend (PJRT artifacts when available, the pure-rust oracle
+//! otherwise), `ingest_gaussian` streams a matrix into the simulated
+//! HDFS, and a single `factorize` runs the paper's 3-step Direct TSQR.
 
 use anyhow::Result;
-use mrtsqr::coordinator::{Algorithm, Coordinator, MatrixHandle};
-use mrtsqr::dfs::DiskModel;
-use mrtsqr::mapreduce::{ClusterConfig, Engine};
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::session::TsqrSession;
 use mrtsqr::util::table::sci;
-use mrtsqr::workload::{gaussian_matrix, get_matrix};
 
 fn main() -> Result<()> {
-    // 1. pick the compute backend: PJRT artifacts if built
-    let pjrt;
-    let native;
-    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
-        pjrt = PjrtRuntime::from_default_artifacts()?;
-        println!("backend: PJRT ({} AOT modules)", pjrt.manifest().entries.len());
-        &pjrt
-    } else {
-        native = NativeRuntime;
-        println!("backend: native rust (run `make artifacts` for the PJRT path)");
-        &native
-    };
+    // 1. one fluent builder instead of five hand-assembled structs
+    let mut session = TsqrSession::builder().build()?;
+    println!("backend: {}", session.backend_desc());
 
-    // 2. a 100k x 25 matrix in the simulated HDFS
+    // 2. a 100k x 25 matrix streamed into the simulated HDFS
     let (rows, cols) = (100_000, 25);
-    let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
-    gaussian_matrix(&mut engine.dfs, "A", rows, cols, 42);
-    println!("matrix : {rows} x {cols} ({:.1} MB on DFS)", engine.dfs.total_bytes() as f64 / 1e6);
+    let input = session.ingest_gaussian("A", rows, cols, 42)?;
+    println!(
+        "matrix : {rows} x {cols} ({:.1} MB on DFS)",
+        session.dfs().total_bytes() as f64 / 1e6
+    );
 
-    // 3. Direct TSQR
-    let mut coord = Coordinator::new(engine, compute);
-    let input = MatrixHandle::new("A", rows, cols);
-    let res = coord.qr(&input, Algorithm::DirectTsqr)?;
+    // 3. Direct TSQR (pass no algorithm — or `session.qr(&input)` — for
+    //    condition-aware auto-selection)
+    let res = session.qr_with(&input, Algorithm::DirectTsqr)?;
 
     // 4. verify
-    let a = get_matrix(&coord.engine.dfs, "A", cols)?;
-    let q = get_matrix(&coord.engine.dfs, &res.q.as_ref().unwrap().file, cols)?;
+    let a = session.get_matrix(&input)?;
+    let q = session.get_matrix(res.q.as_ref().unwrap())?;
     println!("steps  : {} MapReduce iterations", res.stats.steps.len());
     println!("virtual: {:.1} s (simulated 40-slot cluster)", res.stats.virtual_secs());
     println!("wall   : {:.2} s", res.stats.wall_secs());

@@ -2,33 +2,25 @@
 //!
 //! Sweeps κ = 10¹ … 10¹⁶ and reports `‖QᵀQ − I‖₂` for Cholesky QR,
 //! Indirect TSQR (each ± one step of iterative refinement), and Direct
-//! TSQR. Expected shape (paper Fig. 6):
+//! TSQR, plus what the session's condition-aware `Auto` policy picks at
+//! each κ. Expected shape (paper Fig. 6):
 //!
 //! * Cholesky QR *breaks down* for κ ≳ 1e8 (Gram matrix indefinite);
 //! * Indirect errors grow like κ·ε;
 //! * one refinement step holds ~1e-15 until κ ≈ 1e16;
-//! * Direct TSQR is ~1e-15 everywhere.
+//! * Direct TSQR is ~1e-15 everywhere — and `Auto` therefore switches
+//!   from Cholesky to Direct as κ crosses the threshold.
 
 use anyhow::Result;
-use mrtsqr::coordinator::{Algorithm, Coordinator, MatrixHandle};
-use mrtsqr::dfs::DiskModel;
+use mrtsqr::coordinator::Algorithm;
 use mrtsqr::linalg::matrix_with_condition;
-use mrtsqr::mapreduce::{ClusterConfig, Engine};
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::session::{Backend, TsqrSession};
 use mrtsqr::util::rng::Rng;
 use mrtsqr::util::table::{sci, Table};
-use mrtsqr::workload::{get_matrix, put_matrix};
 
 fn main() -> Result<()> {
-    let pjrt;
-    let native;
-    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
-        pjrt = PjrtRuntime::from_default_artifacts()?;
-        &pjrt
-    } else {
-        native = NativeRuntime;
-        &native
-    };
+    let (compute, backend_name) = Backend::Auto.resolve()?;
+    println!("backend: {backend_name}");
 
     let (rows, cols) = (4000, 50);
     let algos: [(&str, Algorithm); 5] = [
@@ -40,7 +32,7 @@ fn main() -> Result<()> {
     ];
     let mut table = Table::new(
         "Fig. 6 — |QtQ-I|_2 vs condition number (5000x50-class matrices)",
-        &["kappa", "Cholesky", "Chol+IR", "Indirect", "Ind+IR", "Direct"],
+        &["kappa", "Cholesky", "Chol+IR", "Indirect", "Ind+IR", "Direct", "auto picks"],
     );
     for exp in [1, 2, 4, 6, 8, 10, 12, 14, 16] {
         let kappa = 10f64.powi(exp);
@@ -48,14 +40,14 @@ fn main() -> Result<()> {
         let a = matrix_with_condition(rows, cols, kappa, &mut rng);
         let mut cells = vec![format!("1e{exp:02}")];
         for (_, algo) in algos {
-            let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
-            put_matrix(&mut engine.dfs, "A", &a);
-            let mut coord = Coordinator::new(engine, compute);
-            coord.opts.rows_per_task = 250;
-            let input = MatrixHandle::new("A", rows, cols);
-            let cell = match coord.qr(&input, algo) {
+            let mut session = TsqrSession::builder()
+                .compute(compute.clone())
+                .rows_per_task(250)
+                .build()?;
+            let input = session.ingest_matrix("A", &a)?;
+            let cell = match session.qr_with(&input, algo) {
                 Ok(res) => {
-                    let q = get_matrix(&coord.engine.dfs, &res.q.unwrap().file, cols)?;
+                    let q = session.get_matrix(&res.q.unwrap())?;
                     sci(q.orthogonality_error())
                 }
                 Err(e) if e.downcast_ref::<mrtsqr::linalg::CholeskyError>().is_some() => {
@@ -65,10 +57,19 @@ fn main() -> Result<()> {
             };
             cells.push(cell);
         }
+        // what would the session's Auto policy run here?
+        let mut session = TsqrSession::builder()
+            .compute(compute.clone())
+            .rows_per_task(250)
+            .build()?;
+        let input = session.ingest_matrix("A", &a)?;
+        let auto = session.qr(&input)?;
+        cells.push(auto.algorithm.cli_name().to_string());
         table.row(&cells);
     }
     table.print();
     println!("expected: Cholesky breaks down past 1e8; Indirect grows ~kappa*eps;");
-    println!("          +IR flat ~1e-15 until 1e16; Direct flat ~1e-15 everywhere.");
+    println!("          +IR flat ~1e-15 until 1e16; Direct flat ~1e-15 everywhere;");
+    println!("          auto switches cholesky -> direct at the condition threshold.");
     Ok(())
 }

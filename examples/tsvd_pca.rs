@@ -2,31 +2,21 @@
 //! sensor dataset.
 //!
 //! Builds a 50k×20 data matrix with a planted 4-component low-rank
-//! structure plus noise, runs the Direct TSQR SVD (`A = QU Σ Vᵀ`, with
-//! the `U` product fused into step 3 so it costs the same passes as
-//! QR), and reports the recovered spectrum and explained variance —
-//! the "simulation data analysis" workload that motivated the method.
+//! structure plus noise — streamed into the DFS row by row through the
+//! session's `MatrixWriter`, the way a real sensor feed would arrive —
+//! runs the Direct TSQR SVD (`A = QU Σ Vᵀ`, with the `U` product fused
+//! into step 3 so it costs the same passes as QR), and reports the
+//! recovered spectrum and explained variance.
 
 use anyhow::Result;
-use mrtsqr::coordinator::{Coordinator, MatrixHandle};
-use mrtsqr::dfs::DiskModel;
 use mrtsqr::linalg::Matrix;
-use mrtsqr::mapreduce::{ClusterConfig, Engine};
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::session::TsqrSession;
 use mrtsqr::util::rng::Rng;
 use mrtsqr::util::table::Table;
-use mrtsqr::workload::{get_matrix, put_matrix};
 
 fn main() -> Result<()> {
-    let pjrt;
-    let native;
-    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
-        pjrt = PjrtRuntime::from_default_artifacts()?;
-        &pjrt
-    } else {
-        native = NativeRuntime;
-        &native
-    };
+    let mut session = TsqrSession::builder().build()?;
+    println!("backend: {}", session.backend_desc());
 
     // planted low-rank data: X = S W + noise
     let (rows, cols, rank) = (50_000usize, 20usize, 4usize);
@@ -38,25 +28,33 @@ fn main() -> Result<()> {
             loadings[(k, j)] *= *scale;
         }
     }
-    let mut x = scores.matmul(&loadings);
-    for v in &mut x.data {
-        *v += 0.05 * rng.gaussian(); // measurement noise
+
+    // stream row chunks into the DFS without materializing the matrix:
+    // each "sensor burst" is generated, pushed, and dropped
+    let mut writer = session.ingest("X", cols);
+    let mut row = vec![0.0f64; cols];
+    for i in 0..rows {
+        for (j, v) in row.iter_mut().enumerate() {
+            let mut x = 0.0;
+            for k in 0..rank {
+                x += scores[(i, k)] * loadings[(k, j)];
+            }
+            *v = x + 0.05 * rng.gaussian(); // measurement noise
+        }
+        writer.push_row(&row)?;
     }
+    let input = writer.finish();
 
-    let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
-    put_matrix(&mut engine.dfs, "X", &x);
-    let mut coord = Coordinator::new(engine, compute);
-    let input = MatrixHandle::new("X", rows, cols);
-    let out = coord.svd(&input)?;
-    let svd = out.svd.expect("svd parts");
+    let out = session.svd(&input)?;
+    let sigma = out.sigma().expect("svd parts");
 
-    let total_var: f64 = svd.sigma.iter().map(|s| s * s).sum();
+    let total_var: f64 = sigma.iter().map(|s| s * s).sum();
     let mut table = Table::new(
         "TSVD/PCA of 50k x 20 synthetic sensor data (rank-4 + noise)",
         &["component", "sigma", "explained var %", "cumulative %"],
     );
     let mut cum = 0.0;
-    for (i, s) in svd.sigma.iter().take(8).enumerate() {
+    for (i, s) in sigma.iter().take(8).enumerate() {
         let ev = s * s / total_var * 100.0;
         cum += ev;
         table.row(&[
@@ -68,12 +66,15 @@ fn main() -> Result<()> {
     }
     table.print();
 
-    let qu = get_matrix(&coord.engine.dfs, &out.q.file, cols)?;
+    let qu = session.get_matrix(out.q.as_ref().unwrap())?;
     println!("left singular vectors orthogonality: {:.2e}", qu.orthogonality_error());
     println!(
         "rank-{rank} components explain {:.1}% of variance (noise floor beyond)",
-        svd.sigma.iter().take(rank).map(|s| s * s).sum::<f64>() / total_var * 100.0
+        sigma.iter().take(rank).map(|s| s * s).sum::<f64>() / total_var * 100.0
     );
-    println!("virtual job time: {:.1} s (same passes as plain Direct TSQR)", out.stats.virtual_secs());
+    println!(
+        "virtual job time: {:.1} s (same passes as plain Direct TSQR)",
+        out.stats.virtual_secs()
+    );
     Ok(())
 }

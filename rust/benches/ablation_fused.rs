@@ -8,22 +8,15 @@
 
 use anyhow::Result;
 use mrtsqr::coordinator::Algorithm;
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
-use mrtsqr::util::experiments::run_one;
+use mrtsqr::session::Backend;
 use mrtsqr::util::experiments::bench_scale;
+use mrtsqr::util::experiments::run_one;
 use mrtsqr::util::table::{commas, Table};
 use mrtsqr::workload::paper_workloads;
 
 fn main() -> Result<()> {
-    let pjrt;
-    let native;
-    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
-        pjrt = PjrtRuntime::from_default_artifacts()?;
-        &pjrt
-    } else {
-        native = NativeRuntime;
-        &native
-    };
+    let (compute, backend_name) = Backend::Auto.resolve()?;
+    println!("backend: {backend_name}");
 
     let mut table = Table::new(
         "Ablation (§VI) — Direct TSQR vs fused variant (paper-scale secs)",
@@ -31,8 +24,8 @@ fn main() -> Result<()> {
     );
     let mut speedups = Vec::new();
     for w in paper_workloads(bench_scale()) {
-        let plain = run_one(compute, &w, Algorithm::DirectTsqr, 64.0e-9, 126.0e-9)?;
-        let fused = run_one(compute, &w, Algorithm::DirectTsqrFused, 64.0e-9, 126.0e-9)?;
+        let plain = run_one(compute.clone(), &w, Algorithm::DirectTsqr, 64.0e-9, 126.0e-9)?;
+        let fused = run_one(compute.clone(), &w, Algorithm::DirectTsqrFused, 64.0e-9, 126.0e-9)?;
         let speedup = plain.virtual_secs / fused.virtual_secs;
         speedups.push(speedup);
         table.row(&[

@@ -8,52 +8,38 @@
 //! all `m₁·n` R rows in one reducer.
 
 use anyhow::Result;
-use mrtsqr::coordinator::{indirect_tsqr, Coordinator, MatrixHandle};
-use mrtsqr::dfs::DiskModel;
-use mrtsqr::mapreduce::{ClusterConfig, Engine};
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
-use mrtsqr::util::experiments::bench_scale;
+use mrtsqr::session::{Backend, TsqrSession};
+use mrtsqr::util::experiments::{bench_scale, indirect_r_with_tree};
 use mrtsqr::util::table::{commas, Table};
-use mrtsqr::workload::{gaussian_matrix, paper_workloads, ScaledWorkload};
+use mrtsqr::workload::{paper_workloads, ScaledWorkload};
 
 fn run(
-    compute: &dyn BlockCompute,
+    compute: &std::rc::Rc<dyn mrtsqr::runtime::BlockCompute>,
     w: &ScaledWorkload,
     two_level: bool,
 ) -> Result<f64> {
-    let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
-    gaussian_matrix(&mut engine.dfs, "A", w.rows, w.cols, 5);
-    engine.dfs.set_scale("A", w.byte_scale);
-    let mut coord = Coordinator::new(engine, compute);
     let tasks = (w.m1_indirect as usize).min(w.rows).max(1);
-    coord.opts.rows_per_task = (w.rows / tasks).max(1);
-    let input = MatrixHandle::new("A", w.rows, w.cols);
-    let (_, stats) = if two_level {
-        indirect_tsqr::indirect_r(&mut coord, &input)?
-    } else {
-        indirect_tsqr::indirect_r_single_level(&mut coord, &input)?
-    };
+    let mut session = TsqrSession::builder()
+        .compute(compute.clone())
+        .rows_per_task((w.rows / tasks).max(1))
+        .build()?;
+    let input = session.ingest_gaussian("A", w.rows, w.cols, 5)?;
+    session.set_scale("A", w.byte_scale);
+    let (_, stats) = indirect_r_with_tree(&mut session, &input, two_level)?;
     Ok(stats.virtual_secs())
 }
 
 fn main() -> Result<()> {
-    let pjrt;
-    let native;
-    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
-        pjrt = PjrtRuntime::from_default_artifacts()?;
-        &pjrt
-    } else {
-        native = NativeRuntime;
-        &native
-    };
+    let (compute, backend_name) = Backend::Auto.resolve()?;
+    println!("backend: {backend_name}");
 
     let mut table = Table::new(
         "Ablation — Indirect TSQR reduction tree: 1 level vs 2 levels (R-only, secs)",
         &["Rows (paper)", "Cols", "single level", "two levels", "2-level speedup"],
     );
     for w in paper_workloads(bench_scale()) {
-        let one = run(compute, &w, false)?;
-        let two = run(compute, &w, true)?;
+        let one = run(&compute, &w, false)?;
+        let two = run(&compute, &w, true)?;
         table.row(&[
             commas(w.paper_rows),
             w.cols.to_string(),

@@ -3,29 +3,28 @@
 //! Indirect TSQR (± refinement), and Direct TSQR.
 
 use anyhow::Result;
-use mrtsqr::coordinator::{Algorithm, Coordinator, MatrixHandle};
-use mrtsqr::dfs::DiskModel;
+use mrtsqr::coordinator::Algorithm;
 use mrtsqr::linalg::matrix_with_condition;
-use mrtsqr::mapreduce::{ClusterConfig, Engine};
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::runtime::BlockCompute;
+use mrtsqr::session::{Backend, TsqrSession};
 use mrtsqr::util::bench::quick_mode;
 use mrtsqr::util::rng::Rng;
 use mrtsqr::util::table::{sci, Table};
-use mrtsqr::workload::{get_matrix, put_matrix};
+use std::rc::Rc;
 
 fn orth_err(
-    compute: &dyn BlockCompute,
+    compute: &Rc<dyn BlockCompute>,
     a: &mrtsqr::linalg::Matrix,
     algo: Algorithm,
 ) -> Result<Option<f64>> {
-    let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
-    put_matrix(&mut engine.dfs, "A", a);
-    let mut coord = Coordinator::new(engine, compute);
-    coord.opts.rows_per_task = 200;
-    let input = MatrixHandle::new("A", a.rows, a.cols);
-    match coord.qr(&input, algo) {
+    let mut session = TsqrSession::builder()
+        .compute(compute.clone())
+        .rows_per_task(200)
+        .build()?;
+    let input = session.ingest_matrix("A", a)?;
+    match session.qr_with(&input, algo) {
         Ok(res) => {
-            let q = get_matrix(&coord.engine.dfs, &res.q.unwrap().file, a.cols)?;
+            let q = session.get_matrix(&res.q.unwrap())?;
             Ok(Some(q.orthogonality_error()))
         }
         Err(e) if e.downcast_ref::<mrtsqr::linalg::CholeskyError>().is_some() => Ok(None),
@@ -34,15 +33,8 @@ fn orth_err(
 }
 
 fn main() -> Result<()> {
-    let pjrt;
-    let native;
-    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
-        pjrt = PjrtRuntime::from_default_artifacts()?;
-        &pjrt
-    } else {
-        native = NativeRuntime;
-        &native
-    };
+    let (compute, backend_name) = Backend::Auto.resolve()?;
+    println!("backend: {backend_name}");
 
     let (rows, cols) = if quick_mode() { (800, 10) } else { (2000, 50) };
     let exps: Vec<i32> = if quick_mode() {
@@ -69,7 +61,7 @@ fn main() -> Result<()> {
             Algorithm::IndirectTsqr { refine: true },
             Algorithm::DirectTsqr,
         ] {
-            let v = orth_err(compute, &a, algo)?;
+            let v = orth_err(&compute, &a, algo)?;
             row.push(v.map(sci).unwrap_or_else(|| "breakdown".into()));
             vals.push(v);
         }

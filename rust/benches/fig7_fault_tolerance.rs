@@ -2,24 +2,15 @@
 //! probability (paper: 800M×10 matrix, 800 map tasks; +23.2% at p=1/8).
 
 use anyhow::Result;
-use mrtsqr::coordinator::{Algorithm, Coordinator, MatrixHandle};
-use mrtsqr::dfs::DiskModel;
-use mrtsqr::mapreduce::{ClusterConfig, Engine, FaultPolicy};
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::mapreduce::FaultPolicy;
+use mrtsqr::session::{Backend, TsqrSession};
 use mrtsqr::util::bench::quick_mode;
 use mrtsqr::util::table::Table;
-use mrtsqr::workload::gaussian_matrix;
 
 fn main() -> Result<()> {
-    let pjrt;
-    let native;
-    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
-        pjrt = PjrtRuntime::from_default_artifacts()?;
-        &pjrt
-    } else {
-        native = NativeRuntime;
-        &native
-    };
+    let (compute, backend_name) = Backend::Auto.resolve()?;
+    println!("backend: {backend_name}");
 
     // paper: 800M x 10, 800 map tasks, 62.9 GB
     let rows = if quick_mode() { 40_000 } else { 200_000 };
@@ -34,17 +25,17 @@ fn main() -> Result<()> {
     let mut baseline = None;
     let mut penalties = Vec::new();
     for &p in &probs {
-        let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default())
-            .with_faults(
+        let mut session = TsqrSession::builder()
+            .compute(compute.clone())
+            .fault_policy(
                 FaultPolicy { probability: p, max_attempts: 24, waste_fraction: 1.0 },
                 20_26,
-            );
-        gaussian_matrix(&mut engine.dfs, "A", rows, cols, 3);
-        engine.dfs.set_scale("A", byte_scale);
-        let mut coord = Coordinator::new(engine, compute);
-        coord.opts.rows_per_task = (rows / 800).max(1); // ~800 map tasks
-        let input = MatrixHandle::new("A", rows, cols);
-        let res = coord.qr(&input, Algorithm::DirectTsqr)?;
+            )
+            .rows_per_task((rows / 800).max(1)) // ~800 map tasks
+            .build()?;
+        let input = session.ingest_gaussian("A", rows, cols, 3)?;
+        session.set_scale("A", byte_scale);
+        let res = session.qr_with(&input, Algorithm::DirectTsqr)?;
         let t = res.stats.virtual_secs();
         let base = *baseline.get_or_insert(t);
         let penalty = (t / base - 1.0) * 100.0;

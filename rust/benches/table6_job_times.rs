@@ -5,20 +5,13 @@
 
 use anyhow::Result;
 use mrtsqr::coordinator::Algorithm;
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::session::Backend;
 use mrtsqr::util::experiments::{paper_table6, run_table6_sweep};
 use mrtsqr::util::table::{commas, Table};
 
 fn main() -> Result<()> {
-    let pjrt;
-    let native;
-    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
-        pjrt = PjrtRuntime::from_default_artifacts()?;
-        &pjrt
-    } else {
-        native = NativeRuntime;
-        &native
-    };
+    let (compute, backend_name) = Backend::Auto.resolve()?;
+    println!("backend: {backend_name}");
 
     let sweep = run_table6_sweep(compute, 64.0e-9, 126.0e-9)?;
     let mut table = Table::new(

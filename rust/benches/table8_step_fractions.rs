@@ -5,21 +5,14 @@
 
 use anyhow::Result;
 use mrtsqr::coordinator::Algorithm;
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::session::Backend;
 use mrtsqr::util::experiments::{bench_scale, run_one};
 use mrtsqr::util::table::{commas, Table};
 use mrtsqr::workload::paper_workloads;
 
 fn main() -> Result<()> {
-    let pjrt;
-    let native;
-    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
-        pjrt = PjrtRuntime::from_default_artifacts()?;
-        &pjrt
-    } else {
-        native = NativeRuntime;
-        &native
-    };
+    let (compute, backend_name) = Backend::Auto.resolve()?;
+    println!("backend: {backend_name}");
 
     let mut table = Table::new(
         "Table VIII — fraction of time per Direct TSQR step (ours vs paper)",
@@ -35,7 +28,7 @@ fn main() -> Result<()> {
     let mut step2_fractions = Vec::new();
     for (w, (prows, pfr)) in paper_workloads(bench_scale()).iter().zip(paper) {
         assert_eq!(w.paper_rows, prows);
-        let m = run_one(compute, w, Algorithm::DirectTsqr, 64.0e-9, 126.0e-9)?;
+        let m = run_one(compute.clone(), w, Algorithm::DirectTsqr, 64.0e-9, 126.0e-9)?;
         let fr = m.stats.step_fractions();
         // steps: step1, step2 (+ possible spill/recursion), step3 — fold
         // anything between step1 and step3 into "step 2"

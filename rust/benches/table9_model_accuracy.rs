@@ -3,20 +3,13 @@
 //! factor of two (multiples 1.26–2.42 across all cells).
 
 use anyhow::Result;
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::session::Backend;
 use mrtsqr::util::experiments::run_table6_sweep;
 use mrtsqr::util::table::{commas, Table};
 
 fn main() -> Result<()> {
-    let pjrt;
-    let native;
-    let compute: &dyn BlockCompute = if Manifest::default_dir().join("manifest.tsv").exists() {
-        pjrt = PjrtRuntime::from_default_artifacts()?;
-        &pjrt
-    } else {
-        native = NativeRuntime;
-        &native
-    };
+    let (compute, backend_name) = Backend::Auto.resolve()?;
+    println!("backend: {backend_name}");
 
     let sweep = run_table6_sweep(compute, 64.0e-9, 126.0e-9)?;
     let mut table = Table::new(

@@ -28,7 +28,7 @@ use crate::linalg::Matrix;
 use crate::mapreduce::{Engine, JobStats};
 use crate::perfmodel::AlgoKind;
 use crate::runtime::BlockCompute;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// A tall-and-skinny matrix stored in the DFS (row records keyed by
 /// 32-byte global row ids).
@@ -79,12 +79,42 @@ impl Algorithm {
         self.kind().name()
     }
 
-    pub const ALL: [Algorithm; 6] = [
+    /// The canonical CLI spelling (inverse of [`Algorithm::parse`]).
+    pub fn cli_name(&self) -> &'static str {
+        match self {
+            Algorithm::Cholesky { refine: false } => "cholesky",
+            Algorithm::Cholesky { refine: true } => "cholesky-ir",
+            Algorithm::IndirectTsqr { refine: false } => "indirect",
+            Algorithm::IndirectTsqr { refine: true } => "indirect-ir",
+            Algorithm::DirectTsqr => "direct",
+            Algorithm::DirectTsqrFused => "direct-fused",
+            Algorithm::Householder => "householder",
+        }
+    }
+
+    /// Parse a CLI algorithm name (see [`Algorithm::cli_name`]).
+    pub fn parse(s: &str) -> Result<Algorithm> {
+        Ok(match s {
+            "cholesky" => Algorithm::Cholesky { refine: false },
+            "cholesky-ir" => Algorithm::Cholesky { refine: true },
+            "indirect" => Algorithm::IndirectTsqr { refine: false },
+            "indirect-ir" => Algorithm::IndirectTsqr { refine: true },
+            "direct" => Algorithm::DirectTsqr,
+            "direct-fused" => Algorithm::DirectTsqrFused,
+            "householder" => Algorithm::Householder,
+            other => bail!(
+                "unknown algorithm {other:?} (cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder)"
+            ),
+        })
+    }
+
+    pub const ALL: [Algorithm; 7] = [
         Algorithm::Cholesky { refine: false },
         Algorithm::IndirectTsqr { refine: false },
         Algorithm::Cholesky { refine: true },
         Algorithm::IndirectTsqr { refine: true },
         Algorithm::DirectTsqr,
+        Algorithm::DirectTsqrFused,
         Algorithm::Householder,
     ];
 }
@@ -121,7 +151,9 @@ pub struct Coordinator<'c> {
     pub engine: Engine,
     pub compute: &'c dyn BlockCompute,
     pub opts: CoordOpts,
-    seq: usize,
+    /// Temp-file counter; [`crate::session`] threads it across requests
+    /// so handles returned by earlier factorizations stay valid.
+    pub(crate) seq: usize,
 }
 
 impl<'c> Coordinator<'c> {
@@ -194,4 +226,38 @@ impl<'c> Coordinator<'c> {
 pub enum RFactorMethod {
     Cholesky,
     IndirectTsqr,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm_cli_names_round_trip() {
+        for algo in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(algo.cli_name()).unwrap(), algo, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn all_covers_every_variant() {
+        // the CLI parses 7 names; ALL must expose the same 7 (the fused
+        // §VI variant was historically missing)
+        assert_eq!(Algorithm::ALL.len(), 7);
+        assert!(Algorithm::ALL.contains(&Algorithm::DirectTsqrFused));
+        // no duplicates
+        for (i, a) in Algorithm::ALL.iter().enumerate() {
+            for b in &Algorithm::ALL[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_names() {
+        assert!(Algorithm::parse("qr").is_err());
+        assert!(Algorithm::parse("").is_err());
+        // `auto` is a session-layer concept, not a fixed algorithm
+        assert!(Algorithm::parse("auto").is_err());
+    }
 }

@@ -4,23 +4,46 @@
 //! *"Direct QR factorizations for tall-and-skinny matrices in MapReduce
 //! architectures"* (IEEE BigData 2013).
 //!
-//! The system is a three-layer stack:
+//! The system is a four-layer stack:
 //!
-//! * **L3 (this crate)** — the MapReduce coordinator: a Hadoop-like
+//! * **L4 ([`session`]) — the public API.** A [`session::TsqrSession`]
+//!   built fluently ([`session::TsqrSession::builder`]) bundles the
+//!   cluster, disk model, fault policy, compute backend, and tuning
+//!   knobs; matrices stream in through `ingest*` without materializing;
+//!   and a single request/response pair
+//!   ([`session::FactorizationRequest`] → [`session::Factorization`])
+//!   serves QR, R-only, SVD, and singular values. The default `Auto`
+//!   policy estimates κ₂(A) with a one-pass probe and picks Cholesky QR
+//!   for well-conditioned inputs, Direct TSQR otherwise — the paper's
+//!   stability story turned into a scheduling decision.
+//! * **L3 ([`coordinator`]) — the execution layer**: a Hadoop-like
 //!   engine ([`mapreduce`]) over a simulated HDFS ([`dfs`]) with a
-//!   disk-bandwidth virtual clock, plus the paper's algorithms
-//!   ([`coordinator`]): Cholesky QR, Indirect TSQR, `A·R⁻¹` (+ iterative
-//!   refinement), **Direct TSQR** (the paper's contribution), its
-//!   recursive extension, Householder QR, and the TSVD extension.
+//!   disk-bandwidth virtual clock, running the paper's algorithms:
+//!   Cholesky QR, Indirect TSQR, `A·R⁻¹` (+ iterative refinement),
+//!   **Direct TSQR** (the paper's contribution), its recursive
+//!   extension, Householder QR, and the TSVD extension.
 //! * **L2/L1 (python, build-time only)** — per-task block computations
 //!   (local Householder QR, Gram, tall×small matmul) authored as Pallas
 //!   kernels inside JAX functions, AOT-lowered to HLO text once by
 //!   `make artifacts`, and executed from rust via the PJRT CPU client
-//!   ([`runtime`]). Python is never on the request path.
+//!   ([`runtime`], behind the `pjrt` feature). Python is never on the
+//!   request path.
 //!
 //! Pure-rust dense linear algebra ([`linalg`]) provides the serial
 //! `n×n` steps the paper runs on a single node (Cholesky, `R⁻¹`,
 //! Jacobi SVD) and an independent correctness oracle.
+//!
+//! ```no_run
+//! use mrtsqr::session::{FactorizationRequest, TsqrSession};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = TsqrSession::builder().build()?;
+//! let a = session.ingest_gaussian("A", 100_000, 25, 42)?;
+//! let fact = session.factorize(&a, &FactorizationRequest::qr())?;
+//! println!("{} ran in {:.1} virtual s", fact.algorithm.name(), fact.stats.virtual_secs());
+//! # Ok(())
+//! # }
+//! ```
 
 pub mod coordinator;
 pub mod dfs;
@@ -28,8 +51,10 @@ pub mod linalg;
 pub mod mapreduce;
 pub mod perfmodel;
 pub mod runtime;
+pub mod session;
 pub mod util;
 pub mod workload;
 
-pub use coordinator::{Algorithm, Coordinator};
+pub use coordinator::{Algorithm, Coordinator, MatrixHandle};
 pub use linalg::Matrix;
+pub use session::{Backend, Factorization, FactorizationRequest, TsqrSession};

@@ -1,50 +1,39 @@
 //! `mrtsqr` — CLI for the Direct TSQR MapReduce reproduction.
 //!
 //! ```text
-//! mrtsqr qr        --rows 100000 --cols 25 --algo direct [--pjrt] [--condition 1e8]
+//! mrtsqr qr        --rows 100000 --cols 25 --algo auto [--pjrt] [--condition 1e8]
 //! mrtsqr svd       --rows 50000  --cols 10 [--pjrt]
+//! mrtsqr sigma     --rows 50000  --cols 10            # singular values only
 //! mrtsqr stability --rows 5000   --cols 50            # Fig. 6 sweep
 //! mrtsqr faults    --rows 80000  --cols 10 --prob 0.125  # Fig. 7 point
 //! mrtsqr model     --beta-r 64 --beta-w 126            # Tables III-V
 //! mrtsqr info                                          # artifact manifest
 //! ```
+//!
+//! Everything runs through the [`mrtsqr::session`] layer; `--algo`
+//! accepts the seven fixed algorithm names plus `auto` (condition-aware
+//! selection, the default).
 
-use anyhow::{bail, Result};
-use mrtsqr::coordinator::{Algorithm, Coordinator, MatrixHandle};
+use anyhow::Result;
+use mrtsqr::coordinator::{Algorithm, MatrixHandle};
 use mrtsqr::dfs::DiskModel;
 use mrtsqr::linalg::matrix_with_condition;
-use mrtsqr::mapreduce::{ClusterConfig, Engine, FaultPolicy};
+use mrtsqr::mapreduce::{ClusterConfig, FaultPolicy};
 use mrtsqr::perfmodel::{lower_bound_secs, AlgoKind, StageParallelism, WorkloadShape};
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::runtime::Manifest;
+use mrtsqr::session::{AlgoChoice, Backend, FactorizationRequest, SessionBuilder, TsqrSession};
 use mrtsqr::util::cli::Args;
 use mrtsqr::util::rng::Rng;
 use mrtsqr::util::table::{commas, sci, Table};
-use mrtsqr::workload::{gaussian_matrix, get_matrix, put_matrix};
 
-fn parse_algo(s: &str) -> Result<Algorithm> {
-    Ok(match s {
-        "cholesky" => Algorithm::Cholesky { refine: false },
-        "cholesky-ir" => Algorithm::Cholesky { refine: true },
-        "indirect" => Algorithm::IndirectTsqr { refine: false },
-        "indirect-ir" => Algorithm::IndirectTsqr { refine: true },
-        "direct" => Algorithm::DirectTsqr,
-        "direct-fused" => Algorithm::DirectTsqrFused,
-        "householder" => Algorithm::Householder,
-        other => bail!(
-            "unknown --algo {other:?} (cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder)"
-        ),
-    })
-}
-
-fn build_compute(args: &Args) -> Result<Box<dyn BlockCompute>> {
-    if args.flag("pjrt") {
-        Ok(Box::new(PjrtRuntime::from_default_artifacts()?))
-    } else {
-        Ok(Box::new(NativeRuntime))
+fn parse_algo_choice(s: &str) -> Result<AlgoChoice> {
+    if s == "auto" {
+        return Ok(AlgoChoice::Auto);
     }
+    Ok(AlgoChoice::Fixed(Algorithm::parse(s)?))
 }
 
-fn make_engine(args: &Args) -> Engine {
+fn session_builder(args: &Args) -> SessionBuilder {
     let model = DiskModel {
         beta_r: args.get_f64("beta-r", 64.0) * 1e-9,
         beta_w: args.get_f64("beta-w", 126.0) * 1e-9,
@@ -56,10 +45,14 @@ fn make_engine(args: &Args) -> Engine {
         map_slots: args.get_usize("map-slots", 40),
         reduce_slots: args.get_usize("reduce-slots", 40),
     };
-    Engine::new(model, cluster)
+    TsqrSession::builder()
+        .disk_model(model)
+        .cluster(cluster)
+        .backend(if args.flag("pjrt") { Backend::Pjrt } else { Backend::Auto })
+        .rows_per_task(args.get_usize("rows-per-task", 1000))
 }
 
-fn load_input(args: &Args, engine: &mut Engine) -> MatrixHandle {
+fn load_input(args: &Args, session: &mut TsqrSession) -> Result<MatrixHandle> {
     let rows = args.get_usize("rows", 100_000);
     let cols = args.get_usize("cols", 10);
     let seed = args.get_u64("seed", 42);
@@ -67,23 +60,29 @@ fn load_input(args: &Args, engine: &mut Engine) -> MatrixHandle {
         let kappa: f64 = kappa.parse().expect("--condition wants a number");
         let mut rng = Rng::new(seed);
         let a = matrix_with_condition(rows, cols, kappa, &mut rng);
-        put_matrix(&mut engine.dfs, "A", &a);
+        session.ingest_matrix("A", &a)
     } else {
-        gaussian_matrix(&mut engine.dfs, "A", rows, cols, seed);
+        session.ingest_gaussian("A", rows, cols, seed)
     }
-    MatrixHandle::new("A", rows, cols)
 }
 
 fn cmd_qr(args: &Args) -> Result<()> {
-    let algo = parse_algo(&args.get_or("algo", "direct"))?;
-    let compute = build_compute(args)?;
-    let mut engine = make_engine(args);
-    let input = load_input(args, &mut engine);
-    let mut coord = Coordinator::new(engine, compute.as_ref());
-    coord.opts.rows_per_task = args.get_usize("rows-per-task", 1000);
+    let algo = parse_algo_choice(&args.get_or("algo", "auto"))?;
+    let mut session = session_builder(args).build()?;
+    let input = load_input(args, &mut session)?;
+    let req = FactorizationRequest { algo, ..FactorizationRequest::qr() };
 
-    let res = coord.qr(&input, algo)?;
-    println!("algorithm      : {}", algo.name());
+    let res = session.factorize(&input, &req)?;
+    println!("backend        : {}", session.backend_desc());
+    match &res.auto {
+        Some(d) => println!(
+            "algorithm      : {} (auto: kappa~{:.1e} vs threshold {:.0e})",
+            res.algorithm.name(),
+            d.kappa_estimate,
+            d.threshold
+        ),
+        None => println!("algorithm      : {}", res.algorithm.name()),
+    }
     println!("matrix         : {} x {}", commas(input.rows as u64), input.cols);
     println!("virtual time   : {:.1} s", res.stats.virtual_secs());
     println!("wall time      : {:.3} s", res.stats.wall_secs());
@@ -91,9 +90,9 @@ fn cmd_qr(args: &Args) -> Result<()> {
     let io = res.stats.total_io();
     println!("bytes read     : {}", commas(io.bytes_read));
     println!("bytes written  : {}", commas(io.bytes_written));
-    let a = get_matrix(&coord.engine.dfs, &input.file, input.cols)?;
+    let a = session.get_matrix(&input)?;
     if let Some(qh) = &res.q {
-        let q = get_matrix(&coord.engine.dfs, &qh.file, qh.cols)?;
+        let q = session.get_matrix(qh)?;
         let recon = a.sub(&q.matmul(&res.r)).frob_norm() / a.frob_norm();
         println!("|A-QR|/|A|     : {}", sci(recon));
         println!("|QtQ-I|_2      : {}", sci(q.orthogonality_error()));
@@ -104,22 +103,33 @@ fn cmd_qr(args: &Args) -> Result<()> {
 }
 
 fn cmd_svd(args: &Args) -> Result<()> {
-    let compute = build_compute(args)?;
-    let mut engine = make_engine(args);
-    let input = load_input(args, &mut engine);
-    let mut coord = Coordinator::new(engine, compute.as_ref());
-    let out = coord.svd(&input)?;
-    let svd = out.svd.expect("svd parts");
+    let mut session = session_builder(args).build()?;
+    let input = load_input(args, &mut session)?;
+    let out = session.svd(&input)?;
+    let sigma = out.sigma().expect("svd parts");
     println!("TSVD via Direct TSQR — {} x {}", commas(input.rows as u64), input.cols);
     println!("virtual time : {:.1} s", out.stats.virtual_secs());
-    println!("sigma        : {:?}", &svd.sigma[..svd.sigma.len().min(8)]);
+    println!("sigma        : {:?}", &sigma[..sigma.len().min(8)]);
+    Ok(())
+}
+
+fn cmd_sigma(args: &Args) -> Result<()> {
+    let mut session = session_builder(args).build()?;
+    let input = load_input(args, &mut session)?;
+    let out = session.singular_values(&input)?;
+    let sigma = out.sigma().expect("sigma");
+    println!("singular values via {} — {} x {}", out.algorithm.name(),
+        commas(input.rows as u64), input.cols);
+    println!("virtual time : {:.1} s", out.stats.virtual_secs());
+    println!("sigma        : {:?}", &sigma[..sigma.len().min(8)]);
     Ok(())
 }
 
 fn cmd_stability(args: &Args) -> Result<()> {
-    let compute = build_compute(args)?;
     let rows = args.get_usize("rows", 5000);
     let cols = args.get_usize("cols", 50);
+    let backend = if args.flag("pjrt") { Backend::Pjrt } else { Backend::Auto };
+    let (compute, _) = backend.resolve()?;
     let mut table = Table::new(
         "Fig. 6 — |QtQ-I|_2 vs condition number",
         &["kappa", "Chol", "Chol+IR", "Indirect", "Indirect+IR", "Direct"],
@@ -134,15 +144,13 @@ fn cmd_stability(args: &Args) -> Result<()> {
             Algorithm::IndirectTsqr { refine: true },
             Algorithm::DirectTsqr,
         ] {
-            let mut engine = make_engine(args);
+            let mut session = session_builder(args).compute(compute.clone()).build()?;
             let mut rng = Rng::new(7);
             let a = matrix_with_condition(rows, cols, kappa, &mut rng);
-            put_matrix(&mut engine.dfs, "A", &a);
-            let input = MatrixHandle::new("A", rows, cols);
-            let mut coord = Coordinator::new(engine, compute.as_ref());
-            let cell = match coord.qr(&input, algo) {
+            let input = session.ingest_matrix("A", &a)?;
+            let cell = match session.qr_with(&input, algo) {
                 Ok(res) => {
-                    let q = get_matrix(&coord.engine.dfs, &res.q.unwrap().file, cols)?;
+                    let q = session.get_matrix(&res.q.unwrap())?;
                     sci(q.orthogonality_error())
                 }
                 Err(_) => "breakdown".to_string(),
@@ -156,13 +164,12 @@ fn cmd_stability(args: &Args) -> Result<()> {
 }
 
 fn cmd_faults(args: &Args) -> Result<()> {
-    let compute = build_compute(args)?;
     let prob = args.get_f64("prob", 0.125);
-    let mut engine =
-        make_engine(args).with_faults(FaultPolicy::new(prob), args.get_u64("seed", 99));
-    let input = load_input(args, &mut engine);
-    let mut coord = Coordinator::new(engine, compute.as_ref());
-    let res = coord.qr(&input, Algorithm::DirectTsqr)?;
+    let mut session = session_builder(args)
+        .fault_policy(FaultPolicy::new(prob), args.get_u64("seed", 99))
+        .build()?;
+    let input = load_input(args, &mut session)?;
+    let res = session.qr_with(&input, Algorithm::DirectTsqr)?;
     println!("fault probability : {prob}");
     println!("faults injected   : {}", res.stats.total_faults());
     println!("virtual time      : {:.1} s", res.stats.virtual_secs());
@@ -211,8 +218,9 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: mrtsqr <qr|svd|stability|faults|model|info> [options]
-  common options: --rows N --cols N --seed N --pjrt --algo <name>
+const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|stability|faults|model|info> [options]
+  common options: --rows N --cols N --seed N --pjrt
+                  --algo <auto|cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder>
                   --beta-r s/GB --beta-w s/GB --byte-scale X
   see README.md for the full list";
 
@@ -221,6 +229,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("qr") => cmd_qr(&args),
         Some("svd") => cmd_svd(&args),
+        Some("sigma") => cmd_sigma(&args),
         Some("stability") => cmd_stability(&args),
         Some("faults") => cmd_faults(&args),
         Some("model") => cmd_model(&args),

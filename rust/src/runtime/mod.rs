@@ -14,10 +14,12 @@
 //! of the paper's Table I reproduction).
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod pad;
 
 pub use artifacts::{Manifest, ManifestEntry, Op};
+#[cfg(feature = "pjrt")]
 pub use client::{PjrtRuntime, RuntimeStats};
 
 use crate::linalg::{householder_qr, Matrix};

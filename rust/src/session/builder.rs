@@ -1,0 +1,184 @@
+//! Fluent construction of a [`TsqrSession`]: cluster, disk model, fault
+//! policy, compute backend, and tuning knobs in one place.
+
+use super::TsqrSession;
+use crate::coordinator::CoordOpts;
+use crate::dfs::DiskModel;
+use crate::mapreduce::{ClusterConfig, Engine, FaultPolicy};
+use crate::runtime::{BlockCompute, NativeRuntime};
+use anyhow::Result;
+use std::rc::Rc;
+
+/// Compute-backend selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// PJRT when the crate was built with the `pjrt` feature *and* the
+    /// AOT artifacts exist on disk; the pure-rust oracle otherwise.
+    Auto,
+    /// The pure-rust [`NativeRuntime`] (always available).
+    Native,
+    /// The PJRT/XLA artifact path; errors when the build lacks the
+    /// `pjrt` feature or the artifacts are missing.
+    Pjrt,
+}
+
+impl Backend {
+    /// Resolve to a concrete (shareable) compute backend plus a short
+    /// human-readable name. Sessions sharing one resolved backend reuse
+    /// its compiled-executable cache — build it once, clone the `Rc`
+    /// into as many sessions as needed.
+    pub fn resolve(self) -> Result<(Rc<dyn BlockCompute>, &'static str)> {
+        match self {
+            Backend::Native => Ok((Rc::new(NativeRuntime), "native")),
+            Backend::Auto => {
+                #[cfg(feature = "pjrt")]
+                {
+                    let dir = crate::runtime::Manifest::default_dir();
+                    if dir.join("manifest.tsv").exists() {
+                        let rt = crate::runtime::PjrtRuntime::from_default_artifacts()?;
+                        return Ok((Rc::new(rt), "pjrt"));
+                    }
+                }
+                Ok((Rc::new(NativeRuntime), "native"))
+            }
+            Backend::Pjrt => {
+                #[cfg(feature = "pjrt")]
+                {
+                    let rt = crate::runtime::PjrtRuntime::from_default_artifacts()?;
+                    return Ok((Rc::new(rt), "pjrt"));
+                }
+                #[cfg(not(feature = "pjrt"))]
+                anyhow::bail!(
+                    "this build has no PJRT support — rebuild with `--features pjrt` \
+                     (and run `make artifacts`)"
+                );
+            }
+        }
+    }
+}
+
+/// Builder for [`TsqrSession`] — see the [`crate::session`] module docs
+/// for the full tour.
+pub struct SessionBuilder {
+    model: DiskModel,
+    cluster: ClusterConfig,
+    faults: Option<(FaultPolicy, u64)>,
+    backend: Backend,
+    compute: Option<Rc<dyn BlockCompute>>,
+    opts: CoordOpts,
+}
+
+impl SessionBuilder {
+    pub(crate) fn new() -> Self {
+        SessionBuilder {
+            model: DiskModel::icme_like(),
+            cluster: ClusterConfig::default(),
+            faults: None,
+            backend: Backend::Auto,
+            compute: None,
+            opts: CoordOpts::default(),
+        }
+    }
+
+    /// Disk-bandwidth model for the virtual clock (default:
+    /// [`DiskModel::icme_like`], the paper's fitted cluster).
+    pub fn disk_model(mut self, model: DiskModel) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// Map/reduce slot counts (default: the paper's 40/40).
+    pub fn cluster(mut self, cluster: ClusterConfig) -> Self {
+        self.cluster = cluster;
+        self
+    }
+
+    /// Inject task faults with Hadoop retry semantics (paper Fig. 7).
+    pub fn fault_policy(mut self, policy: FaultPolicy, seed: u64) -> Self {
+        self.faults = Some((policy, seed));
+        self
+    }
+
+    /// Compute-backend selector (default: [`Backend::Auto`]).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Share an already-resolved backend (see [`Backend::resolve`]) or
+    /// plug in a custom [`BlockCompute`] implementation.
+    pub fn compute(mut self, compute: Rc<dyn BlockCompute>) -> Self {
+        self.compute = Some(compute);
+        self
+    }
+
+    /// Rows per step-1 map task (default 1000).
+    pub fn rows_per_task(mut self, rows: usize) -> Self {
+        self.opts.rows_per_task = rows;
+        self
+    }
+
+    /// Reduce tasks for shuffling stages (default 40, the paper's r_max).
+    pub fn reduce_tasks(mut self, tasks: usize) -> Self {
+        self.opts.reduce_tasks = tasks;
+        self
+    }
+
+    /// Step-2 gather limit in rows — small values force the recursive
+    /// Direct TSQR (paper Alg. 2).
+    pub fn gather_limit(mut self, rows: usize) -> Self {
+        self.opts.gather_limit = Some(rows);
+        self
+    }
+
+    /// Assemble the session.
+    pub fn build(self) -> Result<TsqrSession> {
+        let (compute, backend_desc) = match self.compute {
+            Some(c) => (c, "custom"),
+            None => self.backend.resolve()?,
+        };
+        let mut engine = Engine::new(self.model, self.cluster);
+        if let Some((policy, seed)) = self.faults {
+            engine = engine.with_faults(policy, seed);
+        }
+        Ok(TsqrSession {
+            engine: Some(engine),
+            compute,
+            backend_desc,
+            opts: self.opts,
+            seq: 0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_always_resolves() {
+        let (_, desc) = Backend::Native.resolve().unwrap();
+        assert_eq!(desc, "native");
+    }
+
+    #[test]
+    fn builder_knobs_reach_the_session() {
+        let s = TsqrSession::builder()
+            .backend(Backend::Native)
+            .rows_per_task(123)
+            .reduce_tasks(7)
+            .gather_limit(99)
+            .build()
+            .unwrap();
+        assert_eq!(s.opts.rows_per_task, 123);
+        assert_eq!(s.opts.reduce_tasks, 7);
+        assert_eq!(s.opts.gather_limit, Some(99));
+        assert_eq!(s.backend_desc(), "native");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_errors_without_the_feature() {
+        assert!(Backend::Pjrt.resolve().is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Streaming ingestion: row chunks into the DFS without materializing
+//! the full matrix.
+//!
+//! [`MatrixWriter`] buffers rows and appends them to the session's DFS
+//! file in bounded batches, so a terabyte-class tall-and-skinny matrix
+//! can be staged with O(batch) memory — the same layout
+//! [`crate::workload::put_matrix`] produces (one row record per matrix
+//! row, keyed by 32-byte global row id).
+
+use crate::coordinator::MatrixHandle;
+use crate::dfs::records::{encode_row, row_key, Record};
+use crate::dfs::Dfs;
+use crate::linalg::Matrix;
+use anyhow::{ensure, Result};
+
+/// Rows buffered before each DFS append.
+const FLUSH_EVERY: usize = 4096;
+
+/// An in-progress streaming ingestion. Obtain via
+/// [`crate::session::TsqrSession::ingest`]; call [`finish`](Self::finish)
+/// to get the [`MatrixHandle`] the factorization APIs consume.
+///
+/// Creating a writer truncates any existing DFS file of the same name.
+/// Every pushed row is durable: the buffered tail is flushed on
+/// [`finish`](Self::finish) *and* on drop, so a writer abandoned by an
+/// early `?` return leaves a well-formed (if partial) row file rather
+/// than silently losing up to a batch of rows.
+pub struct MatrixWriter<'s> {
+    dfs: &'s mut Dfs,
+    file: String,
+    cols: usize,
+    next_row: u64,
+    buf: Vec<Record>,
+}
+
+impl<'s> MatrixWriter<'s> {
+    pub(crate) fn new(dfs: &'s mut Dfs, name: &str, cols: usize) -> MatrixWriter<'s> {
+        // fresh file: streaming appends follow
+        dfs.put(name, Vec::new());
+        MatrixWriter {
+            dfs,
+            file: name.to_string(),
+            cols,
+            next_row: 0,
+            buf: Vec::with_capacity(FLUSH_EVERY),
+        }
+    }
+
+    /// Append one row (must match the declared width).
+    pub fn push_row(&mut self, row: &[f64]) -> Result<()> {
+        ensure!(
+            row.len() == self.cols,
+            "row width {} != declared cols {}",
+            row.len(),
+            self.cols
+        );
+        self.buf.push(Record::new(row_key(self.next_row), encode_row(row)));
+        self.next_row += 1;
+        if self.buf.len() >= FLUSH_EVERY {
+            self.flush();
+        }
+        Ok(())
+    }
+
+    /// Append a block of rows.
+    pub fn push_chunk(&mut self, chunk: &Matrix) -> Result<()> {
+        ensure!(
+            chunk.cols == self.cols,
+            "chunk width {} != declared cols {}",
+            chunk.cols,
+            self.cols
+        );
+        for i in 0..chunk.rows {
+            self.push_row(chunk.row(i))?;
+        }
+        Ok(())
+    }
+
+    /// Rows written so far.
+    pub fn rows_written(&self) -> usize {
+        self.next_row as usize
+    }
+
+    fn flush(&mut self) {
+        if !self.buf.is_empty() {
+            self.dfs.append(&self.file, std::mem::take(&mut self.buf));
+        }
+    }
+
+    /// Flush the tail and return the handle for factorization requests.
+    pub fn finish(mut self) -> MatrixHandle {
+        self.flush();
+        MatrixHandle::new(&self.file, self.next_row as usize, self.cols)
+    }
+}
+
+impl Drop for MatrixWriter<'_> {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::{get_matrix, put_matrix};
+
+    #[test]
+    fn streamed_rows_match_put_matrix_layout() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(10, 3, &mut rng);
+        let mut dfs = Dfs::new();
+        put_matrix(&mut dfs, "ref", &a);
+
+        let mut w = MatrixWriter::new(&mut dfs, "streamed", 3);
+        for i in 0..a.rows {
+            w.push_row(a.row(i)).unwrap();
+        }
+        assert_eq!(w.rows_written(), 10);
+        let h = w.finish();
+        assert_eq!((h.rows, h.cols), (10, 3));
+
+        assert_eq!(dfs.get("streamed").unwrap(), dfs.get("ref").unwrap());
+    }
+
+    #[test]
+    fn flushes_in_bounded_batches() {
+        let rows = 2 * FLUSH_EVERY + 17;
+        let mut dfs = Dfs::new();
+        let mut w = MatrixWriter::new(&mut dfs, "big", 2);
+        for i in 0..rows {
+            w.push_row(&[i as f64, -(i as f64)]).unwrap();
+            // O(batch) memory: the buffer never holds a full batch
+            assert!(w.buf.len() < FLUSH_EVERY, "buffer grew to {}", w.buf.len());
+        }
+        let h = w.finish();
+        assert_eq!(h.rows, rows);
+        assert_eq!(dfs.file_records("big").unwrap(), rows);
+        let back = get_matrix(&dfs, "big", 2).unwrap();
+        assert_eq!(back[(FLUSH_EVERY, 0)], FLUSH_EVERY as f64);
+    }
+
+    #[test]
+    fn re_ingesting_overwrites_stale_rows() {
+        let mut dfs = Dfs::new();
+        let mut w = MatrixWriter::new(&mut dfs, "A", 1);
+        for _ in 0..5 {
+            w.push_row(&[1.0]).unwrap();
+        }
+        w.finish();
+        let mut w = MatrixWriter::new(&mut dfs, "A", 1);
+        w.push_row(&[2.0]).unwrap();
+        let h = w.finish();
+        assert_eq!(h.rows, 1);
+        assert_eq!(dfs.file_records("A").unwrap(), 1);
+    }
+
+    #[test]
+    fn dropped_writer_flushes_its_tail() {
+        let mut dfs = Dfs::new();
+        {
+            let mut w = MatrixWriter::new(&mut dfs, "partial", 2);
+            for i in 0..10 {
+                w.push_row(&[i as f64, 0.0]).unwrap();
+            }
+            // no finish(): simulates an early `?` return unwinding past
+            // the writer
+        }
+        assert_eq!(dfs.file_records("partial").unwrap(), 10);
+        let back = get_matrix(&dfs, "partial", 2).unwrap();
+        assert_eq!(back[(9, 0)], 9.0);
+    }
+
+    #[test]
+    fn width_mismatches_are_rejected() {
+        let mut dfs = Dfs::new();
+        let mut w = MatrixWriter::new(&mut dfs, "A", 3);
+        assert!(w.push_row(&[1.0, 2.0]).is_err());
+        let mut rng = Rng::new(2);
+        let chunk = Matrix::gaussian(4, 2, &mut rng);
+        assert!(w.push_chunk(&chunk).is_err());
+    }
+}

@@ -1,0 +1,525 @@
+//! L4 — the session layer, the crate's primary API.
+//!
+//! The paper's pitch is that one stable algorithm (Direct TSQR) serves
+//! QR and SVD alike "with only a small change"; this layer gives that a
+//! single ergonomic front door. A [`TsqrSession`] bundles what used to
+//! be five hand-assembled structs (`DiskModel`, `ClusterConfig`,
+//! `Engine`, `CoordOpts`, `DirectOpts`) behind one builder, ingest
+//! methods stream matrices into the simulated DFS, and one
+//! request/response pair — [`FactorizationRequest`] →
+//! [`Factorization`] — replaces the three differently-shaped
+//! `Coordinator` entry points:
+//!
+//! ```no_run
+//! use mrtsqr::session::{FactorizationRequest, TsqrSession};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = TsqrSession::builder().build()?;
+//! let a = session.ingest_gaussian("A", 100_000, 25, 42)?;
+//! let fact = session.factorize(&a, &FactorizationRequest::qr())?;
+//! println!("ran {} in {:.1} virtual s", fact.algorithm.name(), fact.stats.virtual_secs());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! With the default [`AlgoChoice::Auto`] policy the session estimates
+//! κ₂(A) from a one-pass Indirect-TSQR probe and picks Cholesky QR for
+//! well-conditioned inputs and Direct TSQR otherwise, recording the
+//! decision in [`Factorization::auto`] and as a marker step in the
+//! stats. The old [`Coordinator`] remains the internal execution layer.
+
+mod builder;
+mod ingest;
+mod request;
+mod select;
+
+pub use builder::{Backend, SessionBuilder};
+pub use ingest::MatrixWriter;
+pub use request::{AlgoChoice, FactorizationRequest, Want, DEFAULT_CONDITION_THRESHOLD};
+pub use select::{estimate_condition, AutoDecision};
+
+pub use crate::coordinator::MatrixHandle;
+
+use crate::coordinator::direct_tsqr::SvdParts;
+use crate::coordinator::{cholesky_qr, householder, indirect_tsqr};
+use crate::coordinator::{Algorithm, Coordinator, CoordOpts};
+use crate::dfs::Dfs;
+use crate::linalg::{jacobi_svd, Matrix};
+use crate::mapreduce::{Engine, JobStats};
+use crate::runtime::BlockCompute;
+use crate::util::rng::Rng;
+use crate::workload;
+use anyhow::{bail, Result};
+use std::rc::Rc;
+
+/// The unified result of any [`TsqrSession::factorize`] call.
+#[derive(Debug)]
+pub struct Factorization {
+    /// Orthogonal factor (or `QU` for SVD requests), lazily left in the
+    /// DFS as row records; `None` for R-only algorithms/requests.
+    pub q: Option<MatrixHandle>,
+    /// The `n×n` triangular factor.
+    pub r: Matrix,
+    /// Σ and V for SVD/singular-value requests.
+    pub svd: Option<SvdParts>,
+    /// The algorithm that actually ran.
+    pub algorithm: Algorithm,
+    /// The recorded `Auto` decision (`None` for `Fixed` requests).
+    pub auto: Option<AutoDecision>,
+    /// Per-step metrics, probe passes included.
+    pub stats: JobStats,
+}
+
+impl Factorization {
+    /// Singular values, when the request computed them.
+    pub fn sigma(&self) -> Option<&[f64]> {
+        self.svd.as_ref().map(|s| s.sigma.as_slice())
+    }
+}
+
+/// A factorization session: owns the simulated cluster (engine + DFS)
+/// and a shareable compute backend. Build with [`TsqrSession::builder`].
+pub struct TsqrSession {
+    /// `None` only transiently while a coordinator borrows the engine.
+    engine: Option<Engine>,
+    compute: Rc<dyn BlockCompute>,
+    backend_desc: &'static str,
+    opts: CoordOpts,
+    seq: usize,
+}
+
+impl TsqrSession {
+    /// Start configuring a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// A default session on the pure-rust backend (tests, quick runs).
+    pub fn native() -> TsqrSession {
+        Self::builder()
+            .backend(Backend::Native)
+            .build()
+            .expect("native session construction cannot fail")
+    }
+
+    /// Short name of the resolved compute backend ("native", "pjrt",
+    /// "custom").
+    pub fn backend_desc(&self) -> &'static str {
+        self.backend_desc
+    }
+
+    /// Clone the resolved backend to share with other sessions (reuses
+    /// compiled-executable caches across sessions).
+    pub fn compute_handle(&self) -> Rc<dyn BlockCompute> {
+        self.compute.clone()
+    }
+
+    /// The session's simulated DFS (read results, inspect byte totals).
+    pub fn dfs(&self) -> &Dfs {
+        &self.engine.as_ref().expect("session engine poisoned").dfs
+    }
+
+    /// Mutable DFS access (advanced: pre-staged files, cleanup).
+    pub fn dfs_mut(&mut self) -> &mut Dfs {
+        &mut self.engine.as_mut().expect("session engine poisoned").dfs
+    }
+
+    /// Mark a DFS file's virtual byte scale (scaled-down reproductions
+    /// of paper-sized workloads; see `DESIGN.md` §2).
+    pub fn set_scale(&mut self, name: &str, scale: f64) {
+        self.dfs_mut().set_scale(name, scale);
+    }
+
+    // ------------------------------------------------------ ingestion
+
+    /// Stream a matrix into the DFS chunk by chunk without materializing
+    /// it; call [`MatrixWriter::finish`] for the handle.
+    pub fn ingest(&mut self, name: &str, cols: usize) -> MatrixWriter<'_> {
+        MatrixWriter::new(self.dfs_mut(), name, cols)
+    }
+
+    /// Ingest an in-memory matrix (subsumes `workload::put_matrix`).
+    pub fn ingest_matrix(&mut self, name: &str, a: &Matrix) -> Result<MatrixHandle> {
+        let mut w = self.ingest(name, a.cols);
+        w.push_chunk(a)?;
+        Ok(w.finish())
+    }
+
+    /// Ingest a seeded gaussian `rows × cols` matrix one row at a time
+    /// (subsumes `workload::gaussian_matrix`; identical records for the
+    /// same seed).
+    pub fn ingest_gaussian(
+        &mut self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+    ) -> Result<MatrixHandle> {
+        let mut rng = Rng::new(seed);
+        let mut w = self.ingest(name, cols);
+        let mut row = vec![0.0f64; cols];
+        for _ in 0..rows {
+            for v in row.iter_mut() {
+                *v = rng.gaussian();
+            }
+            w.push_row(&row)?;
+        }
+        Ok(w.finish())
+    }
+
+    /// Read a handle's rows back into memory (verification, small
+    /// factors).
+    pub fn get_matrix(&self, handle: &MatrixHandle) -> Result<Matrix> {
+        workload::get_matrix(self.dfs(), &handle.file, handle.cols)
+    }
+
+    // --------------------------------------------------- factorization
+
+    /// Run one factorization request. See [`FactorizationRequest`] for
+    /// the knobs and [`Factorization`] for what comes back.
+    pub fn factorize(
+        &mut self,
+        input: &MatrixHandle,
+        req: &FactorizationRequest,
+    ) -> Result<Factorization> {
+        match req.algo {
+            AlgoChoice::Fixed(algo) => self.run_fixed(input, req.want, algo, None),
+            AlgoChoice::Auto => self.run_auto(input, req),
+        }
+    }
+
+    /// Convenience: full QR with auto-selection.
+    pub fn qr(&mut self, input: &MatrixHandle) -> Result<Factorization> {
+        self.factorize(input, &FactorizationRequest::qr())
+    }
+
+    /// Convenience: full QR with a pinned algorithm.
+    pub fn qr_with(&mut self, input: &MatrixHandle, algo: Algorithm) -> Result<Factorization> {
+        self.factorize(input, &FactorizationRequest::qr().with_algorithm(algo))
+    }
+
+    /// Convenience: tall-and-skinny SVD (`A = (QU) Σ Vᵀ`).
+    pub fn svd(&mut self, input: &MatrixHandle) -> Result<Factorization> {
+        self.factorize(input, &FactorizationRequest::svd())
+    }
+
+    /// Convenience: singular values only.
+    pub fn singular_values(&mut self, input: &MatrixHandle) -> Result<Factorization> {
+        self.factorize(input, &FactorizationRequest::singular_values())
+    }
+
+    fn run_auto(
+        &mut self,
+        input: &MatrixHandle,
+        req: &FactorizationRequest,
+    ) -> Result<Factorization> {
+        // wants with a single serving algorithm resolve without a probe
+        match req.want {
+            Want::Svd => return self.run_fixed(input, req.want, Algorithm::DirectTsqr, None),
+            Want::SingularValues => {
+                // "it would be favorable to use the TSQR implementation
+                // from Sec. II-B to compute R" (paper §III-B)
+                return self.run_fixed(
+                    input,
+                    req.want,
+                    Algorithm::IndirectTsqr { refine: false },
+                    None,
+                );
+            }
+            Want::Qr | Want::ROnly => {}
+        }
+
+        // one-pass probe: Indirect-TSQR R + serial Jacobi κ estimate
+        let (probe_r, mut stats) =
+            self.with_coordinator(|c| indirect_tsqr::indirect_r(c, input))?;
+
+        if req.want == Want::ROnly {
+            // the probe's R is already backward stable — no second pass
+            // needed whichever way the estimate leans, so the recorded
+            // decision is the algorithm that actually served the request
+            let decision = AutoDecision {
+                kappa_estimate: estimate_condition(&probe_r),
+                threshold: req.condition_threshold,
+                chosen: Algorithm::IndirectTsqr { refine: false },
+            };
+            stats.push(decision.step_stats());
+            return Ok(Factorization {
+                q: None,
+                r: probe_r,
+                svd: None,
+                algorithm: decision.chosen,
+                auto: Some(decision),
+                stats,
+            });
+        }
+
+        // NOTE: for the well-conditioned branch the probe's R could be
+        // finished into Q via `ar_inv::q_via_rinv` (2 passes, κ·ε) —
+        // see ROADMAP; picking Cholesky keeps the per-algorithm cost
+        // profile the paper tables describe.
+        let decision = AutoDecision::from_probe(&probe_r, req.condition_threshold, req.refine);
+        stats.push(decision.step_stats());
+
+        match self.run_fixed(input, req.want, decision.chosen, Some((decision, stats.clone()))) {
+            Ok(f) => Ok(f),
+            Err(e) if e.downcast_ref::<crate::linalg::CholeskyError>().is_some() => {
+                // the estimate was too optimistic — take the
+                // unconditionally stable path and record the override
+                let fallback = decision.fallback();
+                stats.push(fallback.step_stats());
+                self.run_fixed(input, req.want, fallback.chosen, Some((fallback, stats)))
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn run_fixed(
+        &mut self,
+        input: &MatrixHandle,
+        want: Want,
+        algo: Algorithm,
+        auto: Option<(AutoDecision, JobStats)>,
+    ) -> Result<Factorization> {
+        let (auto, mut stats) = match auto {
+            Some((d, s)) => (Some(d), s),
+            None => (None, JobStats::default()),
+        };
+        match want {
+            Want::Qr => {
+                let res = self.with_coordinator(|c| c.qr(input, algo))?;
+                stats.extend(res.stats);
+                Ok(Factorization { q: res.q, r: res.r, svd: None, algorithm: algo, auto, stats })
+            }
+            Want::ROnly => {
+                let (r, st) = self.r_only(input, algo)?;
+                stats.extend(st);
+                Ok(Factorization { q: None, r, svd: None, algorithm: algo, auto, stats })
+            }
+            Want::Svd => {
+                if algo != Algorithm::DirectTsqr {
+                    bail!(
+                        "want=Svd is served by Direct TSQR only (paper §III-B), not {}",
+                        algo.name()
+                    );
+                }
+                let out = self.with_coordinator(|c| c.svd(input))?;
+                stats.extend(out.stats);
+                Ok(Factorization {
+                    q: Some(out.q),
+                    r: out.r,
+                    svd: out.svd,
+                    algorithm: algo,
+                    auto,
+                    stats,
+                })
+            }
+            Want::SingularValues => {
+                let (r, st) = self.r_only(input, algo)?;
+                stats.extend(st);
+                let svd = jacobi_svd(&r);
+                Ok(Factorization {
+                    q: None,
+                    r,
+                    svd: Some(SvdParts { sigma: svd.sigma, v: svd.v }),
+                    algorithm: algo,
+                    auto,
+                    stats,
+                })
+            }
+        }
+    }
+
+    /// The cheapest R-only pipeline each algorithm offers.
+    fn r_only(&mut self, input: &MatrixHandle, algo: Algorithm) -> Result<(Matrix, JobStats)> {
+        self.with_coordinator(|c| match algo {
+            Algorithm::Cholesky { .. } => cholesky_qr::cholesky_r(c, input),
+            Algorithm::IndirectTsqr { .. } => indirect_tsqr::indirect_r(c, input),
+            Algorithm::Householder => householder::householder_r(c, input, None),
+            // the direct variants have no cheaper R-only path: run the
+            // full factorization and drop Q
+            Algorithm::DirectTsqr | Algorithm::DirectTsqrFused => {
+                let res = c.qr(input, algo)?;
+                Ok((res.r, res.stats))
+            }
+        })
+    }
+
+    /// Run `f` against the internal execution layer (a [`Coordinator`]
+    /// borrowing this session's engine and backend). Crate-internal
+    /// escape hatch for benches/experiments that drive raw pipelines.
+    pub(crate) fn with_coordinator<T>(
+        &mut self,
+        f: impl FnOnce(&mut Coordinator) -> Result<T>,
+    ) -> Result<T> {
+        let engine = self.engine.take().expect("session engine poisoned");
+        let mut coord = Coordinator::new(engine, &*self.compute).with_opts(self.opts);
+        coord.seq = self.seq;
+        let out = f(&mut coord);
+        self.seq = coord.seq;
+        self.engine = Some(coord.engine);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix_with_condition;
+    use crate::workload::gaussian_matrix;
+
+    fn recon_err(a: &Matrix, q: &Matrix, r: &Matrix) -> f64 {
+        a.sub(&q.matmul(r)).frob_norm() / a.frob_norm()
+    }
+
+    #[test]
+    fn ingest_gaussian_matches_workload_generator() {
+        let mut s = TsqrSession::native();
+        let h = s.ingest_gaussian("A", 100, 5, 42).unwrap();
+        assert_eq!((h.rows, h.cols), (100, 5));
+        let mut dfs = Dfs::new();
+        gaussian_matrix(&mut dfs, "A", 100, 5, 42);
+        assert_eq!(s.dfs().get("A").unwrap(), dfs.get("A").unwrap());
+    }
+
+    #[test]
+    fn fixed_direct_qr_round_trips() {
+        let mut s = TsqrSession::native();
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(400, 6, &mut rng);
+        let h = s.ingest_matrix("A", &a).unwrap();
+        let f = s.qr_with(&h, Algorithm::DirectTsqr).unwrap();
+        assert_eq!(f.algorithm, Algorithm::DirectTsqr);
+        assert!(f.auto.is_none());
+        let q = s.get_matrix(f.q.as_ref().unwrap()).unwrap();
+        assert!(q.orthogonality_error() < 1e-12);
+        assert!(recon_err(&a, &q, &f.r) < 1e-12);
+    }
+
+    #[test]
+    fn handles_from_successive_requests_stay_distinct() {
+        // the session threads the temp-file counter across requests so
+        // a second factorization must not clobber the first one's Q
+        let mut s = TsqrSession::native();
+        let mut rng = Rng::new(2);
+        let a = Matrix::gaussian(120, 4, &mut rng);
+        let h = s.ingest_matrix("A", &a).unwrap();
+        let f1 = s.qr_with(&h, Algorithm::DirectTsqr).unwrap();
+        let q1 = s.get_matrix(f1.q.as_ref().unwrap()).unwrap();
+        let f2 = s.qr_with(&h, Algorithm::DirectTsqrFused).unwrap();
+        assert_ne!(f1.q.as_ref().unwrap().file, f2.q.as_ref().unwrap().file);
+        // the first Q is still intact in the DFS
+        let q1_again = s.get_matrix(f1.q.as_ref().unwrap()).unwrap();
+        assert_eq!(q1.data, q1_again.data);
+    }
+
+    #[test]
+    fn auto_r_only_is_single_pass() {
+        let mut s = TsqrSession::native();
+        let h = s.ingest_gaussian("A", 300, 5, 7).unwrap();
+        let f = s.factorize(&h, &FactorizationRequest::r_only()).unwrap();
+        assert!(f.q.is_none());
+        // two tree levels + the zero-cost decision marker
+        assert_eq!(f.stats.steps.len(), 3);
+        assert!(f.stats.steps[2].name.starts_with("auto-select"));
+        // the recorded decision names the algorithm that actually ran
+        assert_eq!(f.auto.unwrap().chosen, f.algorithm);
+        assert!(f.stats.steps[2].name.contains(f.algorithm.cli_name()));
+        let g = f.r.transpose().matmul(&f.r);
+        let a = s.get_matrix(&h).unwrap();
+        assert!(g.sub(&a.gram()).max_abs() < 1e-10 * a.gram().max_abs());
+    }
+
+    #[test]
+    fn singular_values_match_direct_svd() {
+        let mut s = TsqrSession::native();
+        let mut rng = Rng::new(3);
+        let sigma_true = vec![8.0, 2.0, 0.5, 0.125];
+        let (a, _, _) =
+            crate::linalg::matgen::matrix_with_spectrum(256, 4, &sigma_true, &mut rng);
+        let h = s.ingest_matrix("A", &a).unwrap();
+        let sv = s.singular_values(&h).unwrap();
+        for (got, want) in sv.sigma().unwrap().iter().zip(&sigma_true) {
+            assert!((got / want - 1.0).abs() < 1e-10, "{got} vs {want}");
+        }
+        let full = s.svd(&h).unwrap();
+        assert_eq!(full.algorithm, Algorithm::DirectTsqr);
+        for (got, want) in full.sigma().unwrap().iter().zip(&sigma_true) {
+            assert!((got / want - 1.0).abs() < 1e-10, "{got} vs {want}");
+        }
+        // V agrees up to column signs: |V₁ᵀV₂| = I
+        let v1 = &sv.svd.as_ref().unwrap().v;
+        let v2 = &full.svd.as_ref().unwrap().v;
+        let prod = v1.transpose().matmul(v2);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)].abs() - want).abs() < 1e-9, "V mismatch at {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn svd_rejects_non_direct_algorithms() {
+        let mut s = TsqrSession::native();
+        let h = s.ingest_gaussian("A", 64, 4, 1).unwrap();
+        let req = FactorizationRequest::svd().with_algorithm(Algorithm::Householder);
+        let err = s.factorize(&h, &req).unwrap_err();
+        assert!(err.to_string().contains("Direct TSQR"), "{err}");
+    }
+
+    #[test]
+    fn auto_picks_cholesky_on_well_conditioned_input() {
+        let mut s = TsqrSession::native();
+        let h = s.ingest_gaussian("A", 400, 6, 11).unwrap();
+        let f = s.qr(&h).unwrap();
+        assert_eq!(f.algorithm, Algorithm::Cholesky { refine: false });
+        let d = f.auto.unwrap();
+        assert!(d.kappa_estimate < 1e3, "gaussian kappa ~ O(10), got {}", d.kappa_estimate);
+        assert!(f.stats.steps.iter().any(|st| st.name.starts_with("auto-select")));
+        let a = s.get_matrix(&h).unwrap();
+        let q = s.get_matrix(f.q.as_ref().unwrap()).unwrap();
+        assert!(recon_err(&a, &q, &f.r) < 1e-12);
+    }
+
+    #[test]
+    fn auto_picks_direct_on_ill_conditioned_input() {
+        let mut s = TsqrSession::native();
+        let mut rng = Rng::new(4);
+        let a = matrix_with_condition(500, 8, 1e12, &mut rng);
+        let h = s.ingest_matrix("A", &a).unwrap();
+        let f = s.qr(&h).unwrap();
+        assert_eq!(f.algorithm, Algorithm::DirectTsqr);
+        let d = f.auto.unwrap();
+        assert!(d.kappa_estimate > 1e10, "estimate {}", d.kappa_estimate);
+        let q = s.get_matrix(f.q.as_ref().unwrap()).unwrap();
+        assert!(q.orthogonality_error() < 1e-12);
+        assert!(recon_err(&a, &q, &f.r) < 1e-11);
+    }
+
+    #[test]
+    fn auto_refine_reaches_the_cheap_pick() {
+        let mut s = TsqrSession::native();
+        let h = s.ingest_gaussian("A", 200, 4, 5).unwrap();
+        let f = s.factorize(&h, &FactorizationRequest::qr().refined(true)).unwrap();
+        assert_eq!(f.algorithm, Algorithm::Cholesky { refine: true });
+    }
+
+    #[test]
+    fn fault_policy_flows_through_the_builder() {
+        use crate::mapreduce::FaultPolicy;
+        let mut s = TsqrSession::builder()
+            .backend(Backend::Native)
+            .fault_policy(
+                FaultPolicy { probability: 0.2, max_attempts: 16, waste_fraction: 0.5 },
+                99,
+            )
+            .rows_per_task(20)
+            .build()
+            .unwrap();
+        let h = s.ingest_gaussian("A", 400, 4, 6).unwrap();
+        let f = s.qr_with(&h, Algorithm::DirectTsqr).unwrap();
+        assert!(f.stats.total_faults() > 0, "faults should fire at p=0.2");
+        let q = s.get_matrix(f.q.as_ref().unwrap()).unwrap();
+        assert!(q.orthogonality_error() < 1e-12);
+    }
+}

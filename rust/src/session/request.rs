@@ -1,0 +1,135 @@
+//! The unified request type: *what* to compute and *how* to choose the
+//! algorithm, in one struct — replacing the three differently-shaped
+//! `Coordinator` entry points.
+
+use crate::coordinator::Algorithm;
+
+/// Which factors the caller wants back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Want {
+    /// `A = QR`: `Factorization.q` + `Factorization.r`.
+    Qr,
+    /// The triangular factor only (no Q pass where the algorithm allows).
+    ROnly,
+    /// `A = (QU) Σ Vᵀ` (paper §III-B): `q` holds `QU`, `svd` holds Σ, V.
+    Svd,
+    /// Σ (and V) only — one pass over A plus a serial n×n SVD.
+    SingularValues,
+}
+
+/// How to pick the algorithm.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AlgoChoice {
+    /// Condition-aware selection: a one-pass Indirect-TSQR probe
+    /// estimates κ₂(A) from its `R`; well-conditioned inputs get the
+    /// cheap Cholesky QR, everything else the stable Direct TSQR.
+    Auto,
+    /// Run exactly this algorithm.
+    Fixed(Algorithm),
+}
+
+/// Default κ₂ threshold below which `Auto` considers an input
+/// well-conditioned. Cholesky QR's loss of orthogonality grows like
+/// κ²·ε (`cond(AᵀA) = cond(A)²`, paper Fig. 6), so κ ≤ 1e3 keeps the
+/// cheap path's `‖QᵀQ−I‖` at ~1e-10 — and leaves five decades of
+/// margin under the κ ≈ 1e8 breakdown point.
+pub const DEFAULT_CONDITION_THRESHOLD: f64 = 1e3;
+
+/// A factorization request; every knob in one place.
+///
+/// `refine` applies one sweep of iterative refinement (paper §II-C)
+/// when `Auto` picks an indirect method; `Fixed` algorithms carry their
+/// own `refine` flag and ignore this field.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FactorizationRequest {
+    pub want: Want,
+    pub algo: AlgoChoice,
+    pub refine: bool,
+    /// κ₂ threshold for the `Auto` policy.
+    pub condition_threshold: f64,
+}
+
+impl Default for FactorizationRequest {
+    fn default() -> Self {
+        FactorizationRequest {
+            want: Want::Qr,
+            algo: AlgoChoice::Auto,
+            refine: false,
+            condition_threshold: DEFAULT_CONDITION_THRESHOLD,
+        }
+    }
+}
+
+impl FactorizationRequest {
+    /// Full QR (the default want), auto-selected algorithm.
+    pub fn qr() -> Self {
+        Self::default()
+    }
+
+    /// Triangular factor only.
+    pub fn r_only() -> Self {
+        FactorizationRequest { want: Want::ROnly, ..Self::default() }
+    }
+
+    /// Tall-and-skinny SVD via the Direct TSQR extension.
+    pub fn svd() -> Self {
+        FactorizationRequest { want: Want::Svd, ..Self::default() }
+    }
+
+    /// Singular values only (paper §III-B, last sentence).
+    pub fn singular_values() -> Self {
+        FactorizationRequest { want: Want::SingularValues, ..Self::default() }
+    }
+
+    /// Pin the algorithm instead of auto-selecting.
+    pub fn with_algorithm(mut self, algo: Algorithm) -> Self {
+        self.algo = AlgoChoice::Fixed(algo);
+        self
+    }
+
+    /// Explicitly request condition-aware auto-selection.
+    pub fn auto(mut self) -> Self {
+        self.algo = AlgoChoice::Auto;
+        self
+    }
+
+    /// Ask `Auto` for one iterative-refinement sweep on indirect picks.
+    pub fn refined(mut self, refine: bool) -> Self {
+        self.refine = refine;
+        self
+    }
+
+    /// Override the `Auto` condition threshold.
+    pub fn with_condition_threshold(mut self, kappa: f64) -> Self {
+        self.condition_threshold = kappa;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_auto_qr() {
+        let r = FactorizationRequest::default();
+        assert_eq!(r.want, Want::Qr);
+        assert_eq!(r.algo, AlgoChoice::Auto);
+        assert!(!r.refine);
+        assert_eq!(r.condition_threshold, DEFAULT_CONDITION_THRESHOLD);
+    }
+
+    #[test]
+    fn builder_methods_compose() {
+        let r = FactorizationRequest::r_only()
+            .with_algorithm(Algorithm::DirectTsqr)
+            .refined(true)
+            .with_condition_threshold(1e4);
+        assert_eq!(r.want, Want::ROnly);
+        assert_eq!(r.algo, AlgoChoice::Fixed(Algorithm::DirectTsqr));
+        assert!(r.refine);
+        assert_eq!(r.condition_threshold, 1e4);
+        let r = r.auto();
+        assert_eq!(r.algo, AlgoChoice::Auto);
+    }
+}

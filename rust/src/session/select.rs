@@ -1,0 +1,122 @@
+//! Condition-aware algorithm selection (the [`super::AlgoChoice::Auto`]
+//! policy).
+//!
+//! The paper's Fig. 6 shows the trade-off the policy encodes: Cholesky
+//! QR is the cheapest pipeline but loses κ² in the Gram matrix and
+//! breaks down for κ ≳ 1e8, while Direct TSQR is unconditionally stable
+//! at a ~30–50% job-time premium (Table VI). A one-pass Indirect-TSQR
+//! probe produces a backward-stable `R` whose singular values match A's
+//! in exact arithmetic, so a serial n×n Jacobi SVD of that `R` gives a
+//! reliable κ₂ estimate even deep into ill-conditioned territory.
+
+use crate::coordinator::Algorithm;
+use crate::linalg::{jacobi_svd, Matrix};
+use crate::mapreduce::StepStats;
+
+/// κ₂ estimate of the input from a probe's `n×n` triangular factor.
+pub fn estimate_condition(r: &Matrix) -> f64 {
+    jacobi_svd(r).condition_number()
+}
+
+/// The recorded outcome of one `Auto` selection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoDecision {
+    /// κ₂(A) estimated from the Indirect-TSQR probe's `R`.
+    pub kappa_estimate: f64,
+    /// Threshold the estimate was compared against.
+    pub threshold: f64,
+    /// The algorithm the policy settled on.
+    pub chosen: Algorithm,
+}
+
+impl AutoDecision {
+    /// Decide from a probe `R`: Cholesky QR for well-conditioned inputs,
+    /// Direct TSQR otherwise.
+    pub(crate) fn from_probe(r: &Matrix, threshold: f64, refine: bool) -> AutoDecision {
+        let kappa = estimate_condition(r);
+        let chosen = if kappa.is_finite() && kappa <= threshold {
+            Algorithm::Cholesky { refine }
+        } else {
+            Algorithm::DirectTsqr
+        };
+        AutoDecision { kappa_estimate: kappa, threshold, chosen }
+    }
+
+    /// The unconditional-stability fallback (taken if the chosen cheap
+    /// path still reports a Cholesky breakdown).
+    pub(crate) fn fallback(self) -> AutoDecision {
+        AutoDecision { chosen: Algorithm::DirectTsqr, ..self }
+    }
+
+    /// Zero-cost marker step recording the decision in the job stats.
+    pub(crate) fn step_stats(&self) -> StepStats {
+        StepStats {
+            name: format!(
+                "auto-select(kappa~{:.1e} -> {})",
+                self.kappa_estimate,
+                self.chosen.cli_name()
+            ),
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix_with_condition;
+    use crate::linalg::householder_qr;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn estimate_tracks_prescribed_condition() {
+        let mut rng = Rng::new(1);
+        for &kappa in &[1e0, 1e4, 1e9, 1e13] {
+            let a = matrix_with_condition(300, 6, kappa, &mut rng);
+            let (_, r) = householder_qr(&a);
+            let est = estimate_condition(&r);
+            assert!(
+                (est.log10() - kappa.log10()).abs() < 0.5,
+                "kappa {kappa:.0e} estimated {est:.2e}"
+            );
+        }
+    }
+
+    #[test]
+    fn decision_splits_on_threshold() {
+        let mut rng = Rng::new(2);
+        let a = matrix_with_condition(300, 5, 10.0, &mut rng);
+        let (_, r) = householder_qr(&a);
+        let d = AutoDecision::from_probe(&r, 1e6, false);
+        assert_eq!(d.chosen, Algorithm::Cholesky { refine: false });
+
+        let a = matrix_with_condition(300, 5, 1e12, &mut rng);
+        let (_, r) = householder_qr(&a);
+        let d = AutoDecision::from_probe(&r, 1e6, true);
+        assert_eq!(d.chosen, Algorithm::DirectTsqr);
+        assert_eq!(d.fallback().chosen, Algorithm::DirectTsqr);
+    }
+
+    #[test]
+    fn refine_is_honored_on_the_cheap_pick() {
+        let mut rng = Rng::new(3);
+        let a = matrix_with_condition(200, 4, 5.0, &mut rng);
+        let (_, r) = householder_qr(&a);
+        let d = AutoDecision::from_probe(&r, 1e6, true);
+        assert_eq!(d.chosen, Algorithm::Cholesky { refine: true });
+    }
+
+    #[test]
+    fn marker_step_is_zero_cost_and_named() {
+        let d = AutoDecision {
+            kappa_estimate: 3.0,
+            threshold: 1e6,
+            chosen: Algorithm::Cholesky { refine: false },
+        };
+        let s = d.step_stats();
+        assert!(s.name.starts_with("auto-select"));
+        assert!(s.name.contains("cholesky"));
+        assert_eq!(s.virtual_secs, 0.0);
+        assert_eq!(s.map_tasks, 0);
+    }
+}

@@ -2,15 +2,21 @@
 //!
 //! Tables VI/VII/VIII/IX all derive from one sweep (job times per
 //! algorithm per workload); this module runs it once per bench binary
-//! and lets each bench print its own view.
+//! and lets each bench print its own view. Everything goes through the
+//! [`crate::session`] layer — one resolved backend (see
+//! [`crate::session::Backend::resolve`]) is shared across all the
+//! per-measurement sessions so PJRT executables compile once.
 
-use crate::coordinator::{Algorithm, Coordinator, MatrixHandle};
+use crate::coordinator::{householder, indirect_tsqr, Algorithm, MatrixHandle};
 use crate::dfs::DiskModel;
-use crate::mapreduce::{ClusterConfig, Engine, JobStats};
+use crate::linalg::Matrix;
+use crate::mapreduce::JobStats;
 use crate::perfmodel::{lower_bound_secs, AlgoKind, StageParallelism, WorkloadShape};
 use crate::runtime::BlockCompute;
-use crate::workload::{gaussian_matrix, paper_workloads, ScaledWorkload};
+use crate::session::{FactorizationRequest, TsqrSession};
+use crate::workload::{paper_workloads, ScaledWorkload};
 use anyhow::Result;
+use std::rc::Rc;
 
 /// One (workload, algorithm) measurement.
 #[derive(Debug, Clone)]
@@ -57,11 +63,44 @@ fn map_tasks_for(w: &ScaledWorkload, direct: bool) -> usize {
     paper.min(w.rows).max(1)
 }
 
+/// Run `limit` columns of MapReduce Householder and extrapolate the
+/// virtual time to the input's full width — the paper's own method for
+/// its Table VI `*` entries. Returns `(extrapolated secs, stats)`.
+pub fn householder_extrapolated(
+    session: &mut TsqrSession,
+    input: &MatrixHandle,
+    limit: usize,
+) -> Result<(f64, JobStats)> {
+    let cols_run = limit.min(input.cols).max(1);
+    let (_, stats) =
+        session.with_coordinator(|c| householder::householder_r(c, input, Some(cols_run)))?;
+    // extrapolate: norm pass + per-column cost × n
+    let norm_pass = stats.steps[0].virtual_secs;
+    let per_col = (stats.virtual_secs() - norm_pass) / cols_run as f64;
+    Ok((norm_pass + per_col * input.cols as f64, stats))
+}
+
+/// Indirect-TSQR `R` through the session with an explicit reduction-tree
+/// depth (the `ablation_tree` bench's knob; paper §II-B).
+pub fn indirect_r_with_tree(
+    session: &mut TsqrSession,
+    input: &MatrixHandle,
+    two_level: bool,
+) -> Result<(Matrix, JobStats)> {
+    session.with_coordinator(|c| {
+        if two_level {
+            indirect_tsqr::indirect_r(c, input)
+        } else {
+            indirect_tsqr::indirect_r_single_level(c, input)
+        }
+    })
+}
+
 /// Run one algorithm on one scaled workload with paper-scale virtual
 /// byte accounting. Householder runs 4 columns and extrapolates (the
 /// paper's own method for Table VI).
 pub fn run_one(
-    compute: &dyn BlockCompute,
+    compute: Rc<dyn BlockCompute>,
     w: &ScaledWorkload,
     algo: Algorithm,
     beta_r: f64,
@@ -74,28 +113,24 @@ pub fn run_one(
         iteration_startup_secs: 15.0,
         task_startup_secs: 2.0,
     };
-    let mut engine = Engine::new(model, ClusterConfig::default());
-    gaussian_matrix(&mut engine.dfs, "A", w.rows, w.cols, 0xBEEF ^ w.cols as u64);
-    // the matrix (and the Q files derived from it) are O(m·n): charge at
-    // the workload scale so virtual times land in paper units
-    engine.dfs.set_scale("A", w.byte_scale);
-    let mut coord = Coordinator::new(engine, compute);
     let is_direct = matches!(algo, Algorithm::DirectTsqr);
     let tasks = map_tasks_for(w, is_direct);
-    coord.opts.rows_per_task = (w.rows / tasks).max(1);
-    let input = MatrixHandle::new("A", w.rows, w.cols);
+    let mut session = TsqrSession::builder()
+        .disk_model(model)
+        .compute(compute)
+        .rows_per_task((w.rows / tasks).max(1))
+        .build()?;
+    let input = session.ingest_gaussian("A", w.rows, w.cols, 0xBEEF ^ w.cols as u64)?;
+    // the matrix (and the Q files derived from it) are O(m·n): charge at
+    // the workload scale so virtual times land in paper units
+    session.set_scale("A", w.byte_scale);
 
     let t0 = std::time::Instant::now();
     let (virtual_secs, stats) = if algo == Algorithm::Householder {
-        let cols_run = 4.min(w.cols);
-        let (_, stats) =
-            crate::coordinator::householder::householder_r(&mut coord, &input, Some(cols_run))?;
-        // extrapolate: norm pass + per-column cost × n
-        let norm_pass = stats.steps[0].virtual_secs;
-        let per_col = (stats.virtual_secs() - norm_pass) / cols_run as f64;
-        (norm_pass + per_col * w.cols as f64, stats)
+        householder_extrapolated(&mut session, &input, 4)?
     } else {
-        let res = coord.qr(&input, algo)?;
+        let res =
+            session.factorize(&input, &FactorizationRequest::qr().with_algorithm(algo))?;
         (res.stats.virtual_secs(), res.stats)
     };
     let wall_secs = t0.elapsed().as_secs_f64();
@@ -108,16 +143,28 @@ pub fn run_one(
     Ok(Measurement { workload: *w, algo, virtual_secs, wall_secs, stats, t_lb })
 }
 
+/// The six algorithms of the paper's Table VI, in its column order. (The
+/// fused §VI variant is in [`Algorithm::ALL`] but measured separately by
+/// the `ablation_fused` bench — the paper never timed it.)
+pub const TABLE6_ALGOS: [Algorithm; 6] = [
+    Algorithm::Cholesky { refine: false },
+    Algorithm::IndirectTsqr { refine: false },
+    Algorithm::Cholesky { refine: true },
+    Algorithm::IndirectTsqr { refine: true },
+    Algorithm::DirectTsqr,
+    Algorithm::Householder,
+];
+
 /// The full Table VI sweep: all six algorithms × the five workloads.
 pub fn run_table6_sweep(
-    compute: &dyn BlockCompute,
+    compute: Rc<dyn BlockCompute>,
     beta_r: f64,
     beta_w: f64,
 ) -> Result<Vec<Measurement>> {
     let mut out = Vec::new();
     for w in paper_workloads(bench_scale()) {
-        for algo in Algorithm::ALL {
-            out.push(run_one(compute, &w, algo, beta_r, beta_w)?);
+        for algo in TABLE6_ALGOS {
+            out.push(run_one(compute.clone(), &w, algo, beta_r, beta_w)?);
         }
     }
     Ok(out)
@@ -151,6 +198,10 @@ mod tests {
     use super::*;
     use crate::runtime::NativeRuntime;
 
+    fn native() -> Rc<dyn BlockCompute> {
+        Rc::new(NativeRuntime)
+    }
+
     #[test]
     fn run_one_direct_smoke() {
         let w = ScaledWorkload {
@@ -161,7 +212,7 @@ mod tests {
             m1_indirect: 1200,
             m1_direct: 2000,
         };
-        let m = run_one(&NativeRuntime, &w, Algorithm::DirectTsqr, 64e-9, 126e-9).unwrap();
+        let m = run_one(native(), &w, Algorithm::DirectTsqr, 64e-9, 126e-9).unwrap();
         assert!(m.virtual_secs > 0.0);
         assert!(m.t_lb > 0.0);
         assert!(m.flops_per_sec() > 0.0);
@@ -177,11 +228,20 @@ mod tests {
             m1_indirect: 1200,
             m1_direct: 1600,
         };
-        let m = run_one(&NativeRuntime, &w, Algorithm::Householder, 64e-9, 126e-9).unwrap();
+        let m = run_one(native(), &w, Algorithm::Householder, 64e-9, 126e-9).unwrap();
         // only 4 columns actually ran (1 + 2*4 = 9 steps), but the time
         // reflects all 25
         assert_eq!(m.stats.steps.len(), 9);
         assert!(m.virtual_secs > m.stats.virtual_secs());
+    }
+
+    #[test]
+    fn table6_algos_match_the_paper_column_order() {
+        assert_eq!(TABLE6_ALGOS.len(), 6);
+        assert!(!TABLE6_ALGOS.contains(&Algorithm::DirectTsqrFused));
+        for algo in TABLE6_ALGOS {
+            assert!(paper_table6(algo.kind(), 4_000_000_000).is_some(), "{algo:?}");
+        }
     }
 
     #[test]

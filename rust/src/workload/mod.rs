@@ -3,6 +3,11 @@
 //! The benches use the paper's matrix *aspect ratios* scaled down
 //! ~2000× (DESIGN.md §2); the stability study uses prescribed-condition
 //! matrices from [`crate::linalg::matgen`].
+//!
+//! Application code should prefer the session-layer ingestion API
+//! ([`crate::session::TsqrSession::ingest`] and friends), which streams
+//! row chunks through a [`crate::session::MatrixWriter`]; the helpers
+//! here remain the low-level substrate those conveniences build on.
 
 use crate::dfs::records::{encode_row, row_key, Record};
 use crate::dfs::Dfs;

@@ -1,8 +1,10 @@
 //! Integration tests: the PJRT runtime executing the real AOT artifacts.
 //!
-//! These require `make artifacts` to have run (they are skipped with a
-//! clear message otherwise — CI runs `make test` which builds artifacts
-//! first). One PJRT client is created per test.
+//! These require the `pjrt` feature (the whole file is compiled out
+//! otherwise) and `make artifacts` to have run (they are skipped with a
+//! clear message if the artifacts are missing — CI runs `make test`
+//! which builds artifacts first). One PJRT client is created per test.
+#![cfg(feature = "pjrt")]
 
 use mrtsqr::linalg::{householder_qr, jacobi_svd, matrix_with_condition, Matrix};
 use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};

@@ -1,40 +1,28 @@
-//! End-to-end pipeline tests: full algorithms over the MapReduce engine
-//! with the **PJRT** runtime (the production configuration) and with the
-//! native oracle, cross-checked.
+//! End-to-end pipeline tests: full algorithms through the session layer
+//! (L4) over the MapReduce engine. `Backend::Auto` runs the PJRT
+//! production configuration when the crate is built with the `pjrt`
+//! feature and artifacts exist, and the pure-rust oracle otherwise — so
+//! these tests always run.
 
-use mrtsqr::coordinator::{Algorithm, Coordinator, DirectOpts, MatrixHandle};
-use mrtsqr::dfs::DiskModel;
+use mrtsqr::coordinator::Algorithm;
 use mrtsqr::linalg::{matrix_with_condition, Matrix};
-use mrtsqr::mapreduce::{ClusterConfig, Engine, FaultPolicy};
-use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+use mrtsqr::mapreduce::FaultPolicy;
+use mrtsqr::session::{Backend, Factorization, FactorizationRequest, MatrixHandle, TsqrSession};
 use mrtsqr::util::rng::Rng;
-use mrtsqr::workload::{get_matrix, put_matrix};
 
-fn pjrt() -> Option<PjrtRuntime> {
-    let dir = Manifest::default_dir();
-    if !dir.join("manifest.tsv").exists() {
-        eprintln!("SKIP: no artifacts — run `make artifacts`");
-        return None;
-    }
-    Some(PjrtRuntime::from_default_artifacts().expect("runtime"))
+fn session_with(a: &Matrix) -> (TsqrSession, MatrixHandle) {
+    let mut s = TsqrSession::builder()
+        .backend(Backend::Auto)
+        .rows_per_task(200)
+        .build()
+        .expect("session");
+    let h = s.ingest_matrix("A", a).expect("ingest");
+    (s, h)
 }
 
-fn coordinator<'a>(a: &Matrix, compute: &'a dyn BlockCompute) -> (Coordinator<'a>, MatrixHandle) {
-    let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
-    put_matrix(&mut engine.dfs, "A", a);
-    let mut coord = Coordinator::new(engine, compute);
-    coord.opts.rows_per_task = 200;
-    (coord, MatrixHandle::new("A", a.rows, a.cols))
-}
-
-fn check_result(
-    a: &Matrix,
-    coord: &Coordinator,
-    res: &mrtsqr::coordinator::QrResult,
-    tol: f64,
-) {
+fn check_result(a: &Matrix, s: &TsqrSession, res: &Factorization, tol: f64) {
     let qh = res.q.as_ref().expect("Q handle");
-    let q = get_matrix(&coord.engine.dfs, &qh.file, a.cols).unwrap();
+    let q = s.get_matrix(qh).unwrap();
     assert_eq!(q.rows, a.rows);
     let recon = a.sub(&q.matmul(&res.r)).frob_norm() / a.frob_norm();
     assert!(recon < tol, "recon {recon}");
@@ -42,11 +30,7 @@ fn check_result(
 }
 
 #[test]
-fn all_q_algorithms_factor_well_conditioned_input_on_pjrt() {
-    let rt = match pjrt() {
-        Some(rt) => rt,
-        None => return,
-    };
+fn all_q_algorithms_factor_well_conditioned_input() {
     let mut rng = Rng::new(1);
     let a = Matrix::gaussian(1500, 10, &mut rng);
     for algo in [
@@ -55,24 +39,21 @@ fn all_q_algorithms_factor_well_conditioned_input_on_pjrt() {
         Algorithm::Cholesky { refine: true },
         Algorithm::IndirectTsqr { refine: true },
         Algorithm::DirectTsqr,
+        Algorithm::DirectTsqrFused,
     ] {
-        let (mut coord, h) = coordinator(&a, &rt);
-        let res = coord.qr(&h, algo).unwrap_or_else(|e| panic!("{}: {e}", algo.name()));
-        check_result(&a, &coord, &res, 1e-10);
+        let (mut s, h) = session_with(&a);
+        let res = s.qr_with(&h, algo).unwrap_or_else(|e| panic!("{}: {e}", algo.name()));
+        check_result(&a, &s, &res, 1e-10);
     }
 }
 
 #[test]
-fn direct_tsqr_pjrt_stable_at_1e14() {
-    let rt = match pjrt() {
-        Some(rt) => rt,
-        None => return,
-    };
+fn direct_tsqr_stable_at_1e14() {
     let mut rng = Rng::new(2);
     let a = matrix_with_condition(1200, 25, 1e14, &mut rng);
-    let (mut coord, h) = coordinator(&a, &rt);
-    let res = coord.qr(&h, Algorithm::DirectTsqr).unwrap();
-    let q = get_matrix(&coord.engine.dfs, &res.q.unwrap().file, 25).unwrap();
+    let (mut s, h) = session_with(&a);
+    let res = s.qr_with(&h, Algorithm::DirectTsqr).unwrap();
+    let q = s.get_matrix(&res.q.unwrap()).unwrap();
     assert!(q.orthogonality_error() < 1e-12, "orth {}", q.orthogonality_error());
 }
 
@@ -80,86 +61,96 @@ fn direct_tsqr_pjrt_stable_at_1e14() {
 fn stability_ladder_matches_fig6_shape() {
     // At kappa = 1e10: Cholesky breaks down; indirect Q is non-orthogonal;
     // indirect+IR and Direct are at machine precision. (Fig. 6)
-    let rt = match pjrt() {
-        Some(rt) => rt,
-        None => return,
-    };
     let mut rng = Rng::new(3);
     let a = matrix_with_condition(900, 10, 1e10, &mut rng);
 
-    let (mut c1, h1) = coordinator(&a, &rt);
-    assert!(c1.qr(&h1, Algorithm::Cholesky { refine: false }).is_err(), "cholesky must break");
+    let (mut s1, h1) = session_with(&a);
+    assert!(
+        s1.qr_with(&h1, Algorithm::Cholesky { refine: false }).is_err(),
+        "cholesky must break"
+    );
 
-    let (mut c2, h2) = coordinator(&a, &rt);
-    let res = c2.qr(&h2, Algorithm::IndirectTsqr { refine: false }).unwrap();
-    let q = get_matrix(&c2.engine.dfs, &res.q.unwrap().file, 10).unwrap();
+    let (mut s2, h2) = session_with(&a);
+    let res = s2.qr_with(&h2, Algorithm::IndirectTsqr { refine: false }).unwrap();
+    let q = s2.get_matrix(&res.q.unwrap()).unwrap();
     let err_indirect = q.orthogonality_error();
     assert!(err_indirect > 1e-9, "indirect should lose orthogonality, got {err_indirect}");
 
-    let (mut c3, h3) = coordinator(&a, &rt);
-    let res = c3.qr(&h3, Algorithm::IndirectTsqr { refine: true }).unwrap();
-    let q = get_matrix(&c3.engine.dfs, &res.q.unwrap().file, 10).unwrap();
+    let (mut s3, h3) = session_with(&a);
+    let res = s3.qr_with(&h3, Algorithm::IndirectTsqr { refine: true }).unwrap();
+    let q = s3.get_matrix(&res.q.unwrap()).unwrap();
     assert!(q.orthogonality_error() < 1e-12);
 
-    let (mut c4, h4) = coordinator(&a, &rt);
-    let res = c4.qr(&h4, Algorithm::DirectTsqr).unwrap();
-    let q = get_matrix(&c4.engine.dfs, &res.q.unwrap().file, 10).unwrap();
+    let (mut s4, h4) = session_with(&a);
+    let res = s4.qr_with(&h4, Algorithm::DirectTsqr).unwrap();
+    let q = s4.get_matrix(&res.q.unwrap()).unwrap();
     assert!(q.orthogonality_error() < 1e-12);
 }
 
 #[test]
-fn recursive_direct_tsqr_on_pjrt() {
-    let rt = match pjrt() {
-        Some(rt) => rt,
-        None => return,
-    };
+fn auto_matches_the_stability_ladder() {
+    // the acceptance scenario: the same request picks different
+    // algorithms as the input's conditioning changes
+    let mut rng = Rng::new(30);
+    let req = FactorizationRequest::qr();
+
+    let easy = Matrix::gaussian(900, 10, &mut rng);
+    let (mut s, h) = session_with(&easy);
+    let res = s.factorize(&h, &req).unwrap();
+    assert_eq!(res.algorithm, Algorithm::Cholesky { refine: false });
+    check_result(&easy, &s, &res, 1e-10);
+
+    let hard = matrix_with_condition(900, 10, 1e12, &mut rng);
+    let (mut s, h) = session_with(&hard);
+    let res = s.factorize(&h, &req).unwrap();
+    assert_eq!(res.algorithm, Algorithm::DirectTsqr);
+    check_result(&hard, &s, &res, 1e-11);
+    assert!(res.auto.unwrap().kappa_estimate > 1e10);
+}
+
+#[test]
+fn recursive_direct_tsqr_via_session_gather_limit() {
     let mut rng = Rng::new(4);
     let a = Matrix::gaussian(2000, 4, &mut rng);
-    let (mut coord, h) = coordinator(&a, &rt);
-    coord.opts.rows_per_task = 50; // 40 blocks -> 160 stacked rows
-    coord.opts.gather_limit = Some(64); // force Alg. 2 recursion
-    let out =
-        mrtsqr::coordinator::direct_tsqr::direct_tsqr(&mut coord, &h, &DirectOpts::default())
-            .unwrap();
-    let q = get_matrix(&coord.engine.dfs, &out.q.file, 4).unwrap();
-    assert!(a.sub(&q.matmul(&out.r)).frob_norm() / a.frob_norm() < 1e-11);
+    let mut s = TsqrSession::builder()
+        .backend(Backend::Auto)
+        .rows_per_task(50) // 40 blocks -> 160 stacked rows
+        .gather_limit(64) // force Alg. 2 recursion
+        .build()
+        .unwrap();
+    let h = s.ingest_matrix("A", &a).unwrap();
+    let res = s.qr_with(&h, Algorithm::DirectTsqr).unwrap();
+    let q = s.get_matrix(res.q.as_ref().unwrap()).unwrap();
+    assert!(a.sub(&q.matmul(&res.r)).frob_norm() / a.frob_norm() < 1e-11);
     assert!(q.orthogonality_error() < 1e-11);
-    assert!(out.stats.steps.iter().any(|s| s.name.contains("d1")), "recursed");
+    assert!(res.stats.steps.iter().any(|st| st.name.contains("d1")), "recursed");
 }
 
 #[test]
-fn tsvd_pjrt_recovers_spectrum() {
-    let rt = match pjrt() {
-        Some(rt) => rt,
-        None => return,
-    };
+fn tsvd_recovers_spectrum() {
     let mut rng = Rng::new(5);
     let sigma_true: Vec<f64> = (0..10).map(|i| 3.0f64.powi(-(i as i32))).collect();
     let (a, _, _) = mrtsqr::linalg::matgen::matrix_with_spectrum(800, 10, &sigma_true, &mut rng);
-    let (mut coord, h) = coordinator(&a, &rt);
-    let out = coord.svd(&h).unwrap();
-    let svd = out.svd.unwrap();
-    for (got, want) in svd.sigma.iter().zip(&sigma_true) {
+    let (mut s, h) = session_with(&a);
+    let out = s.svd(&h).unwrap();
+    for (got, want) in out.sigma().unwrap().iter().zip(&sigma_true) {
         assert!((got / want - 1.0).abs() < 1e-9, "{got} vs {want}");
     }
-    let qu = get_matrix(&coord.engine.dfs, &out.q.file, 10).unwrap();
+    let qu = s.get_matrix(out.q.as_ref().unwrap()).unwrap();
     assert!(qu.orthogonality_error() < 1e-11);
 }
 
 #[test]
-fn householder_r_on_pjrt_input() {
-    // Householder task bodies are native (BLAS-2 per the paper), but the
-    // pipeline runs on the same engine; verify against direct TSQR R.
-    let rt = match pjrt() {
-        Some(rt) => rt,
-        None => return,
-    };
+fn householder_r_matches_direct_r() {
     let mut rng = Rng::new(6);
     let a = Matrix::gaussian(400, 4, &mut rng);
-    let (mut coord, h) = coordinator(&a, &rt);
-    let house = coord.qr(&h, Algorithm::Householder).unwrap();
-    let (mut c2, h2) = coordinator(&a, &rt);
-    let direct = c2.qr(&h2, Algorithm::DirectTsqr).unwrap();
+    let (mut s, h) = session_with(&a);
+    let house = s
+        .factorize(&h, &FactorizationRequest::r_only().with_algorithm(Algorithm::Householder))
+        .unwrap();
+    assert!(house.q.is_none());
+    let (mut s2, h2) = session_with(&a);
+    let direct = s2.qr_with(&h2, Algorithm::DirectTsqr).unwrap();
     let mut rd = direct.r.clone();
     mrtsqr::coordinator::indirect_tsqr::normalize_r_signs(&mut Matrix::zeros(0, 0), &mut rd);
     assert!(house.r.sub(&rd).max_abs() < 1e-9 * rd.max_abs());
@@ -169,85 +160,90 @@ fn householder_r_on_pjrt_input() {
 fn faults_leave_factorization_correct() {
     // Hadoop semantics: retried tasks re-run deterministically; the
     // output must be identical to a fault-free run.
-    let rt = match pjrt() {
-        Some(rt) => rt,
-        None => return,
-    };
     let mut rng = Rng::new(7);
     let a = Matrix::gaussian(800, 8, &mut rng);
 
-    let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default()).with_faults(
-        FaultPolicy { probability: 0.125, max_attempts: 16, waste_fraction: 0.5 },
-        1234,
-    );
-    put_matrix(&mut engine.dfs, "A", &a);
-    let mut coord = Coordinator::new(engine, &rt);
-    coord.opts.rows_per_task = 100;
-    let h = MatrixHandle::new("A", a.rows, a.cols);
-    let res = coord.qr(&h, Algorithm::DirectTsqr).unwrap();
+    let mut s = TsqrSession::builder()
+        .backend(Backend::Auto)
+        .fault_policy(
+            FaultPolicy { probability: 0.125, max_attempts: 16, waste_fraction: 0.5 },
+            1234,
+        )
+        .rows_per_task(100)
+        .build()
+        .unwrap();
+    let h = s.ingest_matrix("A", &a).unwrap();
+    let res = s.qr_with(&h, Algorithm::DirectTsqr).unwrap();
     assert!(res.stats.total_faults() > 0, "faults should have fired");
-    check_result(&a, &coord, &res, 1e-11);
+    check_result(&a, &s, &res, 1e-11);
 
     // and the penalty is visible in virtual time
-    let (mut clean, hc) = coordinator(&a, &rt);
-    clean.opts.rows_per_task = 100;
-    let clean_res = clean.qr(&hc, Algorithm::DirectTsqr).unwrap();
+    let mut clean = TsqrSession::builder()
+        .backend(Backend::Auto)
+        .rows_per_task(100)
+        .build()
+        .unwrap();
+    let hc = clean.ingest_matrix("A", &a).unwrap();
+    let clean_res = clean.qr_with(&hc, Algorithm::DirectTsqr).unwrap();
     assert!(res.stats.virtual_secs() > clean_res.stats.virtual_secs());
 }
 
 #[test]
-fn fused_direct_tsqr_on_pjrt_stable_and_faster() {
-    let rt = match pjrt() {
-        Some(rt) => rt,
-        None => return,
-    };
+fn fused_direct_tsqr_stable_and_faster() {
     let mut rng = Rng::new(9);
     let a = matrix_with_condition(1000, 10, 1e12, &mut rng);
-    let (mut c1, h1) = coordinator(&a, &rt);
-    let plain = c1.qr(&h1, Algorithm::DirectTsqr).unwrap();
-    let (mut c2, h2) = coordinator(&a, &rt);
-    let fused = c2.qr(&h2, Algorithm::DirectTsqrFused).unwrap();
-    let q = get_matrix(&c2.engine.dfs, &fused.q.as_ref().unwrap().file, 10).unwrap();
+    let (mut s1, h1) = session_with(&a);
+    let plain = s1.qr_with(&h1, Algorithm::DirectTsqr).unwrap();
+    let (mut s2, h2) = session_with(&a);
+    let fused = s2.qr_with(&h2, Algorithm::DirectTsqrFused).unwrap();
+    let q = s2.get_matrix(fused.q.as_ref().unwrap()).unwrap();
     assert!(q.orthogonality_error() < 1e-12, "orth {}", q.orthogonality_error());
     assert!(a.sub(&q.matmul(&fused.r)).frob_norm() / a.frob_norm() < 1e-12);
-    // the §VI claim, on the PJRT path
+    // the §VI claim
     assert!(fused.stats.virtual_secs() < plain.stats.virtual_secs());
     assert!(fused.stats.total_io().bytes_written < plain.stats.total_io().bytes_written);
 }
 
 #[test]
 fn singular_values_only_via_indirect() {
-    let rt = match pjrt() {
-        Some(rt) => rt,
-        None => return,
-    };
     let mut rng = Rng::new(10);
     let sigma_true = vec![10.0, 5.0, 1.0, 0.1];
     let (a, _, _) = mrtsqr::linalg::matgen::matrix_with_spectrum(600, 4, &sigma_true, &mut rng);
-    let (mut coord, h) = coordinator(&a, &rt);
-    let (sigma, stats) = coord.singular_values(&h).unwrap();
-    for (got, want) in sigma.iter().zip(&sigma_true) {
+    let (mut s, h) = session_with(&a);
+    let out = s.singular_values(&h).unwrap();
+    assert_eq!(out.algorithm, Algorithm::IndirectTsqr { refine: false });
+    for (got, want) in out.sigma().unwrap().iter().zip(&sigma_true) {
         assert!((got / want - 1.0).abs() < 1e-11, "{got} vs {want}");
     }
     // one pass over A (two engine steps for the reduction tree), far
     // cheaper than the full TSVD
-    assert_eq!(stats.steps.len(), 2);
+    assert_eq!(out.stats.steps.len(), 2);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn native_and_pjrt_agree_end_to_end() {
-    let rt = match pjrt() {
-        Some(rt) => rt,
-        None => return,
-    };
+    use mrtsqr::runtime::Manifest;
+    if !Manifest::default_dir().join("manifest.tsv").exists() {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        return;
+    }
     let mut rng = Rng::new(8);
     let a = Matrix::gaussian(600, 5, &mut rng);
 
-    let (mut cp, hp) = coordinator(&a, &rt);
-    let rp = cp.qr(&hp, Algorithm::DirectTsqr).unwrap();
-    let native = NativeRuntime;
-    let (mut cn, hn) = coordinator(&a, &native);
-    let rn = cn.qr(&hn, Algorithm::DirectTsqr).unwrap();
+    let (pjrt, desc) = Backend::Pjrt.resolve().unwrap();
+    assert_eq!(desc, "pjrt");
+    let mut sp = TsqrSession::builder().compute(pjrt).rows_per_task(200).build().unwrap();
+    let hp = sp.ingest_matrix("A", &a).unwrap();
+    let rp = sp.qr_with(&hp, Algorithm::DirectTsqr).unwrap();
+
+    let mut sn = TsqrSession::builder()
+        .backend(Backend::Native)
+        .rows_per_task(200)
+        .build()
+        .unwrap();
+    let hn = sn.ingest_matrix("A", &a).unwrap();
+    let rn = sn.qr_with(&hn, Algorithm::DirectTsqr).unwrap();
 
     let mut r1 = rp.r.clone();
     let mut r2 = rn.r.clone();

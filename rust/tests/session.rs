@@ -1,0 +1,192 @@
+//! Session-layer integration tests: the recursive Direct TSQR path
+//! driven through the session's `gather_limit` knob, streaming
+//! ingestion, and properties of the condition-aware `Auto` policy.
+
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::linalg::{matrix_with_condition, Matrix};
+use mrtsqr::session::{Backend, FactorizationRequest, TsqrSession};
+use mrtsqr::util::prop::check;
+use mrtsqr::util::rng::Rng;
+
+const EPS_TOL: f64 = 1e-12;
+
+fn native_session(rows_per_task: usize) -> TsqrSession {
+    TsqrSession::builder()
+        .backend(Backend::Native)
+        .rows_per_task(rows_per_task)
+        .build()
+        .unwrap()
+}
+
+fn factorization_errors(
+    s: &TsqrSession,
+    a: &Matrix,
+    res: &mrtsqr::session::Factorization,
+) -> (f64, f64) {
+    let q = s.get_matrix(res.q.as_ref().expect("Q handle")).unwrap();
+    let recon = a.sub(&q.matmul(&res.r)).frob_norm() / a.frob_norm();
+    (recon, q.orthogonality_error())
+}
+
+#[test]
+fn gather_limit_forces_recursion_and_stays_at_eps() {
+    // 32 blocks × 4 cols = 128 stacked R rows against a 32-row gather
+    // limit: the recursive Alg. 2 path must engage and lose nothing.
+    let mut rng = Rng::new(1);
+    let a = Matrix::gaussian(512, 4, &mut rng);
+    let mut s = TsqrSession::builder()
+        .backend(Backend::Native)
+        .rows_per_task(16)
+        .gather_limit(32)
+        .build()
+        .unwrap();
+    let h = s.ingest_matrix("A", &a).unwrap();
+    let res = s.qr_with(&h, Algorithm::DirectTsqr).unwrap();
+    assert!(
+        res.stats.steps.iter().any(|st| st.name.contains("d1")),
+        "gather_limit=32 must force the recursive path: {:?}",
+        res.stats.steps.iter().map(|st| st.name.as_str()).collect::<Vec<_>>()
+    );
+    let (recon, orth) = factorization_errors(&s, &a, &res);
+    assert!(recon < EPS_TOL, "|A-QR|/|A| = {recon}");
+    assert!(orth < EPS_TOL, "|QtQ-I| = {orth}");
+}
+
+#[test]
+fn deeper_recursion_still_at_eps() {
+    // small blocks + tiny gather limit: multiple recursion levels
+    let mut rng = Rng::new(2);
+    let a = Matrix::gaussian(1024, 3, &mut rng);
+    let mut s = TsqrSession::builder()
+        .backend(Backend::Native)
+        .rows_per_task(8) // 128 blocks -> 384 stacked rows
+        .gather_limit(24)
+        .build()
+        .unwrap();
+    let h = s.ingest_matrix("A", &a).unwrap();
+    let res = s.qr_with(&h, Algorithm::DirectTsqr).unwrap();
+    assert!(
+        res.stats.steps.iter().any(|st| st.name.contains("d2")),
+        "expected at least two recursion levels"
+    );
+    let (recon, orth) = factorization_errors(&s, &a, &res);
+    assert!(recon < EPS_TOL, "|A-QR|/|A| = {recon}");
+    assert!(orth < EPS_TOL, "|QtQ-I| = {orth}");
+}
+
+#[test]
+fn recursion_agrees_with_flat_gather() {
+    let mut rng = Rng::new(3);
+    let a = Matrix::gaussian(600, 5, &mut rng);
+
+    let mut flat = native_session(20);
+    let hf = flat.ingest_matrix("A", &a).unwrap();
+    let rf = flat.qr_with(&hf, Algorithm::DirectTsqr).unwrap();
+    assert!(rf.stats.steps.len() == 3, "no recursion expected");
+
+    let mut rec = TsqrSession::builder()
+        .backend(Backend::Native)
+        .rows_per_task(20)
+        .gather_limit(40)
+        .build()
+        .unwrap();
+    let hr = rec.ingest_matrix("A", &a).unwrap();
+    let rr = rec.qr_with(&hr, Algorithm::DirectTsqr).unwrap();
+    assert!(rr.stats.steps.len() > 3, "recursion expected");
+
+    let mut r1 = rf.r.clone();
+    let mut r2 = rr.r.clone();
+    mrtsqr::coordinator::indirect_tsqr::normalize_r_signs(&mut Matrix::zeros(0, 0), &mut r1);
+    mrtsqr::coordinator::indirect_tsqr::normalize_r_signs(&mut Matrix::zeros(0, 0), &mut r2);
+    assert!(r1.sub(&r2).max_abs() < 1e-10 * r1.max_abs());
+}
+
+#[test]
+fn streamed_chunks_factorize_end_to_end() {
+    // ingest through the streaming writer in uneven chunks, then factor
+    let mut rng = Rng::new(4);
+    let a = Matrix::gaussian(700, 6, &mut rng);
+    let mut s = native_session(64);
+    let mut w = s.ingest("A", 6);
+    let mut start = 0usize;
+    for size in [1usize, 130, 7, 250, 312].iter().cycle() {
+        if start >= a.rows {
+            break;
+        }
+        let end = (start + size).min(a.rows);
+        w.push_chunk(&a.slice_rows(start, end)).unwrap();
+        start = end;
+    }
+    let h = w.finish();
+    assert_eq!(h.rows, 700);
+    let res = s.qr_with(&h, Algorithm::DirectTsqr).unwrap();
+    let (recon, orth) = factorization_errors(&s, &a, &res);
+    assert!(recon < EPS_TOL && orth < EPS_TOL, "recon {recon}, orth {orth}");
+}
+
+#[test]
+fn prop_auto_never_breaks_down_where_direct_would_succeed() {
+    // Direct TSQR succeeds on any full-rank tall matrix, so the Auto
+    // policy must never surface a Cholesky breakdown — whatever the
+    // conditioning (this is the guard the condition probe buys us).
+    check(
+        "auto-no-breakdown",
+        12,
+        |rng| {
+            let cols = 2 + rng.below(8) as usize;
+            let rows = 10 * cols + rng.below(300) as usize;
+            let exp = rng.below(15) as i32; // kappa in [1e0, 1e14]
+            let kappa = 10f64.powi(exp);
+            (matrix_with_condition(rows, cols, kappa, rng), exp)
+        },
+        |(a, exp)| {
+            let mut s = native_session(50);
+            let h = s.ingest_matrix("A", a).map_err(|e| e.to_string())?;
+            let res = s
+                .factorize(&h, &FactorizationRequest::qr())
+                .map_err(|e| format!("auto broke down at kappa 1e{exp}: {e:#}"))?;
+            // the decision must be recorded
+            let d = res.auto.ok_or("missing auto decision")?;
+            let (recon, orth) = factorization_errors(&s, a, &res);
+            if recon > 1e-10 {
+                return Err(format!("recon {recon} via {:?}", res.algorithm));
+            }
+            // the Gram-based cheap pick loses orthogonality like κ²ε —
+            // that is exactly the regime the threshold admits; the
+            // stable picks must sit at ~ε
+            let orth_tol = match res.algorithm {
+                Algorithm::Cholesky { .. } => {
+                    (d.kappa_estimate * d.kappa_estimate * 1e-13).max(1e-10)
+                }
+                _ => 1e-10,
+            };
+            if orth > orth_tol {
+                return Err(format!("orth {orth} > {orth_tol} via {:?}", res.algorithm));
+            }
+            if !res.stats.steps.iter().any(|st| st.name.starts_with("auto-select")) {
+                return Err("decision marker missing from stats".into());
+            }
+            // and ill-conditioned inputs must land on the stable path
+            if *exp >= 9 && res.algorithm != Algorithm::DirectTsqr {
+                return Err(format!(
+                    "kappa 1e{exp} (est {:.1e}) ran {:?}",
+                    d.kappa_estimate, res.algorithm
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn auto_threshold_is_tunable() {
+    // with a tiny threshold even a benign matrix goes to Direct TSQR
+    let mut s = native_session(100);
+    let h = s.ingest_gaussian("A", 300, 5, 9).unwrap();
+    let res = s
+        .factorize(&h, &FactorizationRequest::qr().with_condition_threshold(1.0 + 1e-9))
+        .unwrap();
+    assert_eq!(res.algorithm, Algorithm::DirectTsqr);
+    let d = res.auto.unwrap();
+    assert!(d.kappa_estimate > d.threshold);
+}
