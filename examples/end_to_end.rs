@@ -33,7 +33,7 @@ fn main() -> Result<()> {
     let mut rng = Rng::new(2026);
     let a = matrix_with_condition(rows, cols, kappa, &mut rng);
 
-    let session_for = |compute: &std::rc::Rc<dyn mrtsqr::runtime::BlockCompute>| {
+    let session_for = |compute: &mrtsqr::runtime::SharedCompute| {
         TsqrSession::builder()
             .compute(compute.clone())
             .rows_per_task(1000)

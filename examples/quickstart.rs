@@ -18,8 +18,11 @@ use mrtsqr::util::table::sci;
 
 fn main() -> Result<()> {
     // 1. one fluent builder instead of five hand-assembled structs
+    //    (add .host_threads(1) to force serial execution — results are
+    //    bit-identical at any pool size, only the wall clock moves)
     let mut session = TsqrSession::builder().build()?;
     println!("backend: {}", session.backend_desc());
+    println!("host   : {} worker threads", session.host_threads());
 
     // 2. a 100k x 25 matrix streamed into the simulated HDFS
     let (rows, cols) = (100_000, 25);

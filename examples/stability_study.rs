@@ -9,7 +9,8 @@
 //! * Indirect errors grow like κ·ε;
 //! * one refinement step holds ~1e-15 until κ ≈ 1e16;
 //! * Direct TSQR is ~1e-15 everywhere — and `Auto` therefore switches
-//!   from Cholesky to Direct as κ crosses the threshold.
+//!   from the probe-reusing indirect finish to Direct as κ crosses the
+//!   threshold.
 
 use anyhow::Result;
 use mrtsqr::coordinator::Algorithm;
@@ -70,6 +71,6 @@ fn main() -> Result<()> {
     table.print();
     println!("expected: Cholesky breaks down past 1e8; Indirect grows ~kappa*eps;");
     println!("          +IR flat ~1e-15 until 1e16; Direct flat ~1e-15 everywhere;");
-    println!("          auto switches cholesky -> direct at the condition threshold.");
+    println!("          auto switches indirect (probe reused) -> direct at the threshold.");
     Ok(())
 }

@@ -14,7 +14,7 @@ use mrtsqr::util::table::{commas, Table};
 use mrtsqr::workload::{paper_workloads, ScaledWorkload};
 
 fn run(
-    compute: &std::rc::Rc<dyn mrtsqr::runtime::BlockCompute>,
+    compute: &mrtsqr::runtime::SharedCompute,
     w: &ScaledWorkload,
     two_level: bool,
 ) -> Result<f64> {

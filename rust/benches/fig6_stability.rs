@@ -5,15 +5,14 @@
 use anyhow::Result;
 use mrtsqr::coordinator::Algorithm;
 use mrtsqr::linalg::matrix_with_condition;
-use mrtsqr::runtime::BlockCompute;
+use mrtsqr::runtime::SharedCompute;
 use mrtsqr::session::{Backend, TsqrSession};
 use mrtsqr::util::bench::quick_mode;
 use mrtsqr::util::rng::Rng;
 use mrtsqr::util::table::{sci, Table};
-use std::rc::Rc;
 
 fn orth_err(
-    compute: &Rc<dyn BlockCompute>,
+    compute: &SharedCompute,
     a: &mrtsqr::linalg::Matrix,
     algo: Algorithm,
 ) -> Result<Option<f64>> {

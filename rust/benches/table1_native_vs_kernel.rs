@@ -18,20 +18,20 @@ use anyhow::Result;
 fn run() -> Result<()> {
     use mrtsqr::coordinator::Algorithm;
     use mrtsqr::linalg::Matrix;
-    use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime};
+    use mrtsqr::runtime::{BlockCompute, Manifest, NativeRuntime, PjrtRuntime, SharedCompute};
     use mrtsqr::util::bench::time;
     use mrtsqr::util::experiments::{bench_scale, run_one};
     use mrtsqr::util::rng::Rng;
     use mrtsqr::util::table::{commas, Table};
     use mrtsqr::workload::paper_workloads;
-    use std::rc::Rc;
+    use std::sync::Arc;
 
     let dir = Manifest::default_dir();
     if !dir.join("manifest.tsv").exists() {
         println!("SKIP: table1 bench needs artifacts (make artifacts)");
         return Ok(());
     }
-    let pjrt = Rc::new(PjrtRuntime::from_default_artifacts()?);
+    let pjrt = Arc::new(PjrtRuntime::from_default_artifacts()?);
     let native = NativeRuntime;
 
     // (a) per-block kernel speedup
@@ -57,33 +57,45 @@ fn run() -> Result<()> {
     }
     kernel_table.print();
 
-    // (b) end-to-end job-time speedup (virtual clock includes the
-    // measured compute, so a faster kernel only moves the small
-    // compute share — the paper's "only mild" finding)
+    // (b) end-to-end comparison. The virtual clock is deterministic
+    // (I/O + startup only — see mapreduce::engine), so both backends
+    // report the *same* virtual job time by construction; the kernel's
+    // win shows up only in the measured per-task compute share, which
+    // is tiny next to the modelled disk traffic — the paper's "only
+    // mild end-to-end gain" finding, sharpened.
     let mut e2e = Table::new(
-        "Table I(b) — end-to-end Direct TSQR job time: naive vs kernel backend",
-        &["Rows (paper)", "Cols", "naive (s)", "kernel (s)", "job speedup"],
+        "Table I(b) — end-to-end Direct TSQR: naive vs kernel backend",
+        &[
+            "Rows (paper)",
+            "Cols",
+            "virtual (s)",
+            "naive compute (s)",
+            "kernel compute (s)",
+            "compute speedup",
+        ],
     );
-    let native: Rc<dyn BlockCompute> = Rc::new(NativeRuntime);
+    let native: SharedCompute = Arc::new(NativeRuntime);
     for w in paper_workloads(bench_scale() * 2) {
         let m_native = run_one(native.clone(), &w, Algorithm::DirectTsqr, 64.0e-9, 126.0e-9)?;
         let m_pjrt = run_one(pjrt.clone(), &w, Algorithm::DirectTsqr, 64.0e-9, 126.0e-9)?;
-        let speedup = m_native.virtual_secs / m_pjrt.virtual_secs;
+        // deterministic clock: identical I/O ⇒ identical virtual time
+        let drift = (m_native.virtual_secs / m_pjrt.virtual_secs - 1.0).abs();
+        assert!(drift < 1e-9, "virtual clock must not depend on the backend, drift {drift}");
+        let c_native = m_native.stats.compute_secs();
+        let c_pjrt = m_pjrt.stats.compute_secs().max(1e-12);
         e2e.row(&[
             commas(w.paper_rows),
             w.cols.to_string(),
             format!("{:.0}", m_native.virtual_secs),
-            format!("{:.0}", m_pjrt.virtual_secs),
-            format!("{speedup:.2}x"),
+            format!("{c_native:.3}"),
+            format!("{c_pjrt:.3}"),
+            format!("{:.2}x", c_native / c_pjrt),
         ]);
-        // the paper's point: end-to-end gain is mild (they saw 1.29–2.76x
-        // with compute-heavy python; our virtual clock is I/O-dominated so
-        // the gain is even smaller)
-        assert!(speedup < 3.0, "end-to-end speedup should be mild, got {speedup}");
     }
     e2e.print();
     println!("paper Table I: C++ over Python = 1.29–2.76x end-to-end; conclusion reproduced —");
-    println!("the disk model dominates, so per-task kernel speedups barely move job time.");
+    println!("the disk model dominates job time, so per-task kernel speedups only move the");
+    println!("(small) compute share; the virtual clock itself is backend-independent.");
     Ok(())
 }
 

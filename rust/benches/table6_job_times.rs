@@ -5,15 +5,63 @@
 
 use anyhow::Result;
 use mrtsqr::coordinator::Algorithm;
-use mrtsqr::session::Backend;
+use mrtsqr::mapreduce::default_host_threads;
+use mrtsqr::runtime::SharedCompute;
+use mrtsqr::session::{Backend, TsqrSession};
+use mrtsqr::util::bench::{host_threads_arg, once};
 use mrtsqr::util::experiments::{paper_table6, run_table6_sweep};
 use mrtsqr::util::table::{commas, Table};
+
+/// Wall-clock leg of the bench: one Direct TSQR job, serial host
+/// execution vs a `host_threads`-wide pool. Virtual times are
+/// bit-identical by the engine's determinism contract; only the wall
+/// clock moves — the number `BENCH_*.json` tracks as the
+/// real-hardware trajectory.
+fn wall_clock_speedup(compute: &SharedCompute, host_threads: usize) -> Result<()> {
+    let quick = mrtsqr::util::bench::quick_mode();
+    let (rows, cols) = if quick { (60_000, 10) } else { (400_000, 25) };
+    let run = |threads: usize| -> Result<(f64, f64)> {
+        let mut session = TsqrSession::builder()
+            .compute(compute.clone())
+            .rows_per_task(rows / 800)
+            .host_threads(threads)
+            .build()?;
+        let input = session.ingest_gaussian("A", rows, cols, 1)?;
+        let (res, wall) = once(|| session.qr_with(&input, Algorithm::DirectTsqr));
+        Ok((wall, res?.stats.virtual_secs()))
+    };
+    let (wall_serial, virt_serial) = run(1)?;
+    let (wall_pool, virt_pool) = run(host_threads)?;
+    assert_eq!(
+        virt_serial.to_bits(),
+        virt_pool.to_bits(),
+        "virtual clock must not move with the pool size"
+    );
+    let mut table = Table::new(
+        "Host thread pool — wall-clock speedup (virtual times identical by construction)",
+        &["host threads", "wall (s)", "speedup", "virtual (s)"],
+    );
+    table.row(&[
+        "1".into(),
+        format!("{wall_serial:.3}"),
+        "1.00x".into(),
+        format!("{virt_serial:.0}"),
+    ]);
+    table.row(&[
+        host_threads.to_string(),
+        format!("{wall_pool:.3}"),
+        format!("{:.2}x", wall_serial / wall_pool),
+        format!("{virt_pool:.0}"),
+    ]);
+    table.print();
+    Ok(())
+}
 
 fn main() -> Result<()> {
     let (compute, backend_name) = Backend::Auto.resolve()?;
     println!("backend: {backend_name}");
 
-    let sweep = run_table6_sweep(compute, 64.0e-9, 126.0e-9)?;
+    let sweep = run_table6_sweep(compute.clone(), 64.0e-9, 126.0e-9)?;
     let mut table = Table::new(
         "Table VI — job times (ours / paper, secs; House.* extrapolated from 4 cols)",
         &["Rows (paper)", "Cols", "Cholesky", "Indirect", "Chol+IR", "Ind+IR", "Direct", "House.*"],
@@ -58,5 +106,9 @@ fn main() -> Result<()> {
     }
     println!("OK: Table VI shape holds (Chol≈Ind fastest; Direct beats +IR for n=10,25,50;");
     println!("    Householder slowest by far and worsening with n)");
+
+    // real-hardware leg: serial vs pooled wall clock on one workload
+    let pool = host_threads_arg().unwrap_or_else(default_host_threads).max(1);
+    wall_clock_speedup(&compute, pool)?;
     Ok(())
 }

@@ -173,16 +173,23 @@ struct Step3Map<'a> {
     /// distributed-cache file (the paper's "redundant parsing") — the
     /// engine *charges* that read per task, but since all tasks run in
     /// this process we parse once to keep wall time proportional.
-    q2_cache: std::cell::RefCell<Option<std::rc::Rc<std::collections::HashMap<Vec<u8>, Matrix>>>>,
+    /// `Mutex<Option<Arc>>` rather than `OnceLock` because parsing can
+    /// fail and `OnceLock::get_or_try_init` is unstable; holding the
+    /// lock across the parse means concurrent tasks on the host pool
+    /// wait for the one parse instead of duplicating it.
+    q2_cache: std::sync::Mutex<Option<std::sync::Arc<std::collections::HashMap<Vec<u8>, Matrix>>>>,
 }
 
 impl Step3Map<'_> {
-    fn q2(&self, side: &[Record]) -> Result<std::rc::Rc<std::collections::HashMap<Vec<u8>, Matrix>>> {
-        let mut cache = self.q2_cache.borrow_mut();
+    fn q2(
+        &self,
+        side: &[Record],
+    ) -> Result<std::sync::Arc<std::collections::HashMap<Vec<u8>, Matrix>>> {
+        let mut cache = self.q2_cache.lock().expect("q2 cache");
         if let Some(map) = cache.as_ref() {
             return Ok(map.clone());
         }
-        let map = std::rc::Rc::new(parse_q2_side(side, self.cols)?);
+        let map = std::sync::Arc::new(parse_q2_side(side, self.cols)?);
         *cache = Some(map.clone());
         Ok(map)
     }
@@ -313,7 +320,7 @@ fn direct_tsqr_level(
         let mapper = Step3Map {
             compute: coord.compute,
             cols: n,
-            q2_cache: std::cell::RefCell::new(None),
+            q2_cache: std::sync::Mutex::new(None),
         };
         let q1_records = coord.engine.dfs.file_records(&q1_file)?;
         let spec = JobSpec::map_only(

@@ -49,8 +49,10 @@ impl MapTask for ROnlyMap<'_> {
 struct QrApplyMap<'a> {
     compute: &'a dyn BlockCompute,
     cols: usize,
-    q2_cache: std::cell::RefCell<
-        Option<std::rc::Rc<std::collections::HashMap<Vec<u8>, Matrix>>>,
+    /// Shared parsed-side-file cache (see `Step3Map` in
+    /// [`super::direct_tsqr`] for why `Mutex` + `Arc`).
+    q2_cache: std::sync::Mutex<
+        Option<std::sync::Arc<std::collections::HashMap<Vec<u8>, Matrix>>>,
     >,
 }
 
@@ -58,12 +60,12 @@ impl QrApplyMap<'_> {
     fn q2(
         &self,
         side: &[Record],
-    ) -> Result<std::rc::Rc<std::collections::HashMap<Vec<u8>, Matrix>>> {
-        let mut cache = self.q2_cache.borrow_mut();
+    ) -> Result<std::sync::Arc<std::collections::HashMap<Vec<u8>, Matrix>>> {
+        let mut cache = self.q2_cache.lock().expect("q2 cache");
         if let Some(map) = cache.as_ref() {
             return Ok(map.clone());
         }
-        let map = std::rc::Rc::new(super::io::parse_q2_side(side, self.cols)?);
+        let map = std::sync::Arc::new(super::io::parse_q2_side(side, self.cols)?);
         *cache = Some(map.clone());
         Ok(map)
     }
@@ -171,7 +173,7 @@ pub fn direct_tsqr_fused(
         let mapper = QrApplyMap {
             compute: coord.compute,
             cols: n,
-            q2_cache: std::cell::RefCell::new(None),
+            q2_cache: std::sync::Mutex::new(None),
         };
         let spec = JobSpec::map_only(
             "fused-step3",

@@ -13,9 +13,10 @@
 //!   and a single request/response pair
 //!   ([`session::FactorizationRequest`] → [`session::Factorization`])
 //!   serves QR, R-only, SVD, and singular values. The default `Auto`
-//!   policy estimates κ₂(A) with a one-pass probe and picks Cholesky QR
-//!   for well-conditioned inputs, Direct TSQR otherwise — the paper's
-//!   stability story turned into a scheduling decision.
+//!   policy estimates κ₂(A) with a one-pass probe, reuses the probe's
+//!   `R` for well-conditioned inputs (two passes over A total), and
+//!   runs Direct TSQR otherwise — the paper's stability story turned
+//!   into a scheduling decision.
 //! * **L3 ([`coordinator`]) — the execution layer**: a Hadoop-like
 //!   engine ([`mapreduce`]) over a simulated HDFS ([`dfs`]) with a
 //!   disk-bandwidth virtual clock, running the paper's algorithms:
@@ -32,6 +33,19 @@
 //! Pure-rust dense linear algebra ([`linalg`]) provides the serial
 //! `n×n` steps the paper runs on a single node (Cholesky, `R⁻¹`,
 //! Jacobi SVD) and an independent correctness oracle.
+//!
+//! # Execution model: virtual vs host parallelism
+//!
+//! The *virtual* schedule (the paper's `m_max`/`r_max` slots) is what
+//! `virtual_secs` and every reproduced table measure; the *host* thread
+//! pool ([`mapreduce::ClusterConfig::host_threads`], exposed as
+//! [`session::SessionBuilder::host_threads`]) is what actually executes
+//! task bodies, wall-clock-parallel on real cores. The whole stack is
+//! `Send + Sync` — [`runtime::BlockCompute`] backends are shared as
+//! [`runtime::SharedCompute`] (`Arc<dyn BlockCompute + Send + Sync>`)
+//! across sessions and worker threads — and the engine guarantees
+//! bit-identical outputs, fault draws, and metrics (wall-clock fields
+//! aside) at every pool size; `rust/tests/parallel.rs` enforces it.
 //!
 //! ```no_run
 //! use mrtsqr::session::{FactorizationRequest, TsqrSession};

@@ -44,6 +44,7 @@ fn session_builder(args: &Args) -> SessionBuilder {
     let cluster = ClusterConfig {
         map_slots: args.get_usize("map-slots", 40),
         reduce_slots: args.get_usize("reduce-slots", 40),
+        host_threads: args.get_usize("host-threads", mrtsqr::mapreduce::default_host_threads()),
     };
     TsqrSession::builder()
         .disk_model(model)
@@ -74,6 +75,11 @@ fn cmd_qr(args: &Args) -> Result<()> {
 
     let res = session.factorize(&input, &req)?;
     println!("backend        : {}", session.backend_desc());
+    println!(
+        "host threads   : {} configured, {} realized",
+        session.host_threads(),
+        res.stats.host_threads()
+    );
     match &res.auto {
         Some(d) => println!(
             "algorithm      : {} (auto: kappa~{:.1e} vs threshold {:.0e})",
@@ -222,6 +228,7 @@ const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|stability|faults|model|info> [o
   common options: --rows N --cols N --seed N --pjrt
                   --algo <auto|cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder>
                   --beta-r s/GB --beta-w s/GB --byte-scale X
+                  --host-threads N   (worker threads for task bodies; results identical for any N)
   see README.md for the full list";
 
 fn main() -> Result<()> {

@@ -7,32 +7,139 @@
 //! its task durations plus the per-iteration startup, mirroring the
 //! paper's model `T = Σ_j (R_j β_r + W_j β_w)/p_j` with wave effects.
 //!
-//! Tasks execute serially on this process (compute wall time is
-//! measured per task and added to its virtual duration); parallelism is
-//! expressed in the *virtual* schedule, which is what the paper's
-//! evaluation measures.
+//! # Virtual vs host parallelism
+//!
+//! Two independent notions of parallelism coexist:
+//!
+//! * **virtual** — the paper's `m_max`/`r_max` slot schedule, which
+//!   drives `virtual_secs` and is what the evaluation tables measure;
+//! * **host** — the real OS threads that execute task bodies. Map and
+//!   reduce waves fan out over a [`ClusterConfig::host_threads`]-sized
+//!   `std::thread::scope` worker pool (task bodies are `Send + Sync`,
+//!   see [`super::job`]).
+//!
+//! The two never interact: fault draws are forked from the engine RNG in
+//! task-id order *before* the wave is dispatched, and task emissions are
+//! merged back in task-id order afterwards, so DFS contents, shuffle
+//! grouping, fault draws, and every [`StepStats`] field except the
+//! wall-clock measurements (`wall_secs`, `map_compute_secs`,
+//! `reduce_compute_secs`, and the recorded `host_threads`) are
+//! byte-identical whatever the pool size. The virtual clock charges only
+//! the deterministic model quantities (metered bytes, startup costs,
+//! fault duration factors) — measured host compute time is reported in
+//! the wall-clock fields but never folded into `virtual_secs`, which is
+//! what makes the guarantee hold (`rust/tests/parallel.rs` enforces it).
 
-use super::fault::{draw_attempts, FaultPolicy};
-use super::job::{Emitter, JobSpec};
+use super::fault::{draw_attempts, AttemptOutcome, FaultPolicy};
+use super::job::{Emitter, JobSpec, KeyGroup};
 use super::metrics::StepStats;
 use super::scheduler::{effective_parallelism, makespan};
 use super::shuffle::{group_by_key, partition};
 use crate::dfs::{Dfs, DiskModel, Record};
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
-/// Cluster slot configuration (paper: m_max = r_max = 40).
+/// Default host worker-thread count: everything the machine offers.
+pub fn default_host_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Cluster slot configuration (paper: m_max = r_max = 40) plus the host
+/// execution pool size.
 #[derive(Debug, Clone, Copy)]
 pub struct ClusterConfig {
     pub map_slots: usize,
     pub reduce_slots: usize,
+    /// OS threads executing task bodies (host parallelism — orthogonal
+    /// to the virtual slot schedule). `1` runs tasks inline on the
+    /// calling thread; the default is the machine's available
+    /// parallelism. Results are bit-identical for every value.
+    pub host_threads: usize,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        ClusterConfig { map_slots: 40, reduce_slots: 40 }
+        ClusterConfig { map_slots: 40, reduce_slots: 40, host_threads: default_host_threads() }
     }
+}
+
+impl ClusterConfig {
+    /// This configuration with a different host pool size.
+    pub fn with_host_threads(mut self, n: usize) -> Self {
+        self.host_threads = n.max(1);
+        self
+    }
+}
+
+/// What one task execution hands back to the merge phase.
+struct TaskOutput {
+    em: Emitter,
+    /// Measured wall-clock seconds inside the task body (diagnostic
+    /// only — never charged to the virtual clock).
+    compute_secs: f64,
+    /// Bytes read from the task's input split (map waves; reduce waves
+    /// account their input bytes in the pre-draw pass and leave this 0).
+    in_bytes: u64,
+}
+
+/// Run `n` task bodies over a `workers`-thread scoped pool, returning
+/// the outputs in task order. With one worker the tasks run inline on
+/// the calling thread. On failure the pool stops claiming new tasks
+/// (fast-fail, like the serial loop) and the lowest-task-id error among
+/// the tasks that ran is returned.
+fn run_tasks<F>(workers: usize, n: usize, task: F) -> Result<Vec<TaskOutput>>
+where
+    F: Fn(usize) -> Result<TaskOutput> + Sync,
+{
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    if workers <= 1 || n == 1 {
+        return (0..n).map(task).collect();
+    }
+    let slots: Vec<Mutex<Option<Result<TaskOutput>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = task(i);
+                if out.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().expect("task slot") = Some(out);
+            });
+        }
+    });
+    // merge in task-id order; a slot left `None` was skipped after some
+    // other task failed, and that failure is present in another slot
+    let mut results: Vec<Option<Result<TaskOutput>>> = slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("task slot poisoned"))
+        .collect();
+    if let Some(err_slot) = results.iter_mut().find(|r| matches!(r, Some(Err(_)))) {
+        match err_slot.take() {
+            Some(Err(e)) => return Err(e),
+            _ => unreachable!("just matched Some(Err(_))"),
+        }
+    }
+    results
+        .into_iter()
+        .map(|r| match r {
+            Some(Ok(t)) => Ok(t),
+            _ => unreachable!("no failure recorded, so every task index ran"),
+        })
+        .collect()
 }
 
 /// The engine: DFS + disk model + cluster + fault policy.
@@ -61,6 +168,31 @@ impl Engine {
         self
     }
 
+    /// Fault outcome for one task, forked from the engine RNG. Always
+    /// called in task-id order (before any wave is dispatched) so the
+    /// draw sequence is independent of the host pool size.
+    fn draw_task_outcome(&mut self, stream: u64) -> AttemptOutcome {
+        let mut task_rng = self.rng.fork(stream);
+        draw_attempts(&self.faults, &mut task_rng)
+    }
+
+    /// Virtual write cost of one task's emissions under the job's
+    /// per-channel byte scales.
+    fn write_virtual(spec: &JobSpec, em: &Emitter) -> f64 {
+        let main_bytes: u64 = em.main.iter().map(|r| r.size_bytes()).sum();
+        let mut virt = main_bytes as f64 * spec.output_scale;
+        for (chan, rec) in &em.side {
+            let scale = spec
+                .side_outputs
+                .iter()
+                .find(|(c, _, _)| c == chan)
+                .map(|(_, _, s)| *s)
+                .unwrap_or(1.0);
+            virt += rec.size_bytes() as f64 * scale;
+        }
+        virt
+    }
+
     /// Run one MapReduce job; outputs land in the DFS, metrics returned.
     pub fn run(&mut self, spec: &JobSpec) -> Result<StepStats> {
         let wall_start = Instant::now();
@@ -85,59 +217,55 @@ impl Engine {
         let input_scale = self.dfs.scale(&spec.input);
 
         // ---- map stage ----
-        let mut map_durations = Vec::with_capacity(splits.len());
-        let mut shuffle_input: Vec<Record> = Vec::new();
-        let mut side_out: Vec<(String, Record)> = Vec::new();
-        for (task_id, &split) in splits.iter().enumerate() {
-            let outcome = {
-                let mut task_rng = self.rng.fork(task_id as u64);
-                draw_attempts(&self.faults, &mut task_rng)
-            };
+        // fault draws first, in task-id order (see draw_task_outcome)
+        let mut map_outcomes = Vec::with_capacity(splits.len());
+        for task_id in 0..splits.len() {
+            let outcome = self.draw_task_outcome(task_id as u64);
             if !outcome.succeeded {
                 bail!("job {:?}: map task {task_id} exceeded max attempts", spec.name);
             }
             stats.map_attempts += outcome.attempts;
             stats.faults += outcome.attempts - 1;
+            map_outcomes.push(outcome);
+        }
 
-            let input = self.dfs.read_split(&spec.input, split)?;
+        let workers = self.cluster.host_threads.max(1);
+        stats.host_threads = workers.min(splits.len().max(1));
+        let dfs = &self.dfs;
+        let map_results = run_tasks(workers, splits.len(), |task_id| {
+            let input = dfs.read_split(&spec.input, splits[task_id])?;
             let in_bytes: u64 = input.iter().map(|r| r.size_bytes()).sum();
             let side_refs: Vec<&[Record]> = spec
                 .side_inputs
                 .iter()
-                .map(|f| self.dfs.get(f))
+                .map(|f| dfs.get(f))
                 .collect::<Result<_>>()?;
-
             let mut em = Emitter::new();
             let t0 = Instant::now();
             spec.mapper
                 .run(task_id, input, &side_refs, &mut em)
                 .with_context(|| format!("job {:?}: map task {task_id}", spec.name))?;
-            let compute = t0.elapsed().as_secs_f64();
+            Ok(TaskOutput { em, compute_secs: t0.elapsed().as_secs_f64(), in_bytes })
+        })?;
 
+        // merge in task-id order: byte accounting, durations, emissions
+        let mut map_durations = Vec::with_capacity(splits.len());
+        let mut shuffle_input: Vec<Record> = Vec::new();
+        let mut side_out: Vec<(String, Record)> = Vec::new();
+        for ((task, &split), outcome) in map_results.into_iter().zip(&splits).zip(&map_outcomes) {
+            let in_bytes = task.in_bytes;
+            let mut em = task.em;
             let out_bytes = em.bytes_emitted();
-            stats.map_io.add_read(in_bytes + side_bytes, input.len() as u64 + side_recs);
+            stats.map_io.add_read(in_bytes + side_bytes, (split.1 - split.0) as u64 + side_recs);
             stats.map_io.add_write(out_bytes, em.records_emitted());
-            stats.map_compute_secs += compute;
+            stats.map_compute_secs += task.compute_secs;
 
             // per-file virtual scaling: input/side at their registered
             // scales; main emissions at output_scale; side emissions at
             // their channel's scale
-            let main_bytes: u64 = em.main.iter().map(|r| r.size_bytes()).sum();
-            let mut write_virtual = main_bytes as f64 * spec.output_scale;
-            for (chan, rec) in &em.side {
-                let scale = spec
-                    .side_outputs
-                    .iter()
-                    .find(|(c, _, _)| c == chan)
-                    .map(|(_, _, s)| *s)
-                    .unwrap_or(1.0);
-                write_virtual += rec.size_bytes() as f64 * scale;
-            }
             let disk = self.model.read_secs_f(in_bytes as f64 * input_scale + side_virtual)
-                + self.model.write_secs_f(write_virtual);
-            map_durations.push(
-                (disk + compute + self.model.task_startup_secs) * outcome.duration_factor,
-            );
+                + self.model.write_secs_f(Self::write_virtual(spec, &em));
+            map_durations.push((disk + self.model.task_startup_secs) * outcome.duration_factor);
 
             shuffle_input.append(&mut em.main);
             side_out.append(&mut em.side);
@@ -154,15 +282,21 @@ impl Engine {
             let parts = partition(groups, spec.reduce_tasks.max(1));
             stats.reduce_tasks = parts.iter().filter(|p| !p.is_empty()).count();
 
-            let mut reduce_durations = Vec::new();
+            // fault draws in rid order, skipping empty partitions (the
+            // serial engine never forked for those)
+            struct ReduceWork {
+                rid: usize,
+                groups: Vec<KeyGroup>,
+                outcome: AttemptOutcome,
+                in_bytes: u64,
+                in_records: u64,
+            }
+            let mut work: Vec<ReduceWork> = Vec::new();
             for (rid, part) in parts.into_iter().enumerate() {
                 if part.is_empty() {
                     continue;
                 }
-                let outcome = {
-                    let mut task_rng = self.rng.fork(0x8000_0000 + rid as u64);
-                    draw_attempts(&self.faults, &mut task_rng)
-                };
+                let outcome = self.draw_task_outcome(0x8000_0000 + rid as u64);
                 if !outcome.succeeded {
                     bail!("job {:?}: reduce task {rid} exceeded max attempts", spec.name);
                 }
@@ -177,37 +311,39 @@ impl Engine {
                     })
                     .sum();
                 let in_records: u64 = part.values().map(|v| v.len() as u64).sum();
+                work.push(ReduceWork {
+                    rid,
+                    groups: part.into_iter().collect(),
+                    outcome,
+                    in_bytes,
+                    in_records,
+                });
+            }
 
-                let groups: Vec<(Vec<u8>, Vec<Vec<u8>>)> = part.into_iter().collect();
+            stats.host_threads = stats.host_threads.max(workers.min(work.len().max(1)));
+            let reduce_results = run_tasks(workers, work.len(), |i| {
+                let item = &work[i];
                 let mut em = Emitter::new();
                 let t0 = Instant::now();
                 reducer
-                    .run(&groups, &mut em)
-                    .with_context(|| format!("job {:?}: reduce task {rid}", spec.name))?;
-                let compute = t0.elapsed().as_secs_f64();
+                    .run(&item.groups, &mut em)
+                    .with_context(|| format!("job {:?}: reduce task {}", spec.name, item.rid))?;
+                Ok(TaskOutput { em, compute_secs: t0.elapsed().as_secs_f64(), in_bytes: 0 })
+            })?;
 
+            let mut reduce_durations = Vec::with_capacity(work.len());
+            for (task, item) in reduce_results.into_iter().zip(&work) {
+                let mut em = task.em;
                 let out_bytes = em.bytes_emitted();
-                stats.reduce_io.add_read(in_bytes, in_records);
+                stats.reduce_io.add_read(item.in_bytes, item.in_records);
                 stats.reduce_io.add_write(out_bytes, em.records_emitted());
-                stats.reduce_compute_secs += compute;
+                stats.reduce_compute_secs += task.compute_secs;
 
-                let main_bytes: u64 = em.main.iter().map(|r| r.size_bytes()).sum();
-                let mut write_virtual = main_bytes as f64 * spec.output_scale;
-                for (chan, rec) in &em.side {
-                    let scale = spec
-                        .side_outputs
-                        .iter()
-                        .find(|(c, _, _)| c == chan)
-                        .map(|(_, _, s)| *s)
-                        .unwrap_or(1.0);
-                    write_virtual += rec.size_bytes() as f64 * scale;
-                }
                 // shuffle traffic carries the main channel's scale
-                let disk = self.model.read_secs_f(in_bytes as f64 * spec.output_scale)
-                    + self.model.write_secs_f(write_virtual);
-                reduce_durations.push(
-                    (disk + compute + self.model.task_startup_secs) * outcome.duration_factor,
-                );
+                let disk = self.model.read_secs_f(item.in_bytes as f64 * spec.output_scale)
+                    + self.model.write_secs_f(Self::write_virtual(spec, &em));
+                reduce_durations
+                    .push((disk + self.model.task_startup_secs) * item.outcome.duration_factor);
 
                 final_output.append(&mut em.main);
                 side_out.append(&mut em.side);
@@ -405,6 +541,28 @@ mod tests {
     }
 
     #[test]
+    fn lowest_task_id_error_wins_under_parallel_execution() {
+        // a serial loop reports the first failing task; the pooled
+        // engine must report the same one however the wave is scheduled
+        struct FailPastZero;
+        impl MapTask for FailPastZero {
+            fn run(&self, id: usize, _: &[Record], _: &[&[Record]], _: &mut Emitter) -> Result<()> {
+                if id >= 1 {
+                    anyhow::bail!("task {id} failed")
+                }
+                Ok(())
+            }
+        }
+        let mut e = engine_with_input(16, 1);
+        e.cluster.host_threads = 8;
+        let m = FailPastZero;
+        let spec = JobSpec::map_only("first-error", "input", 8, &m, "out");
+        let err = format!("{:#}", e.run(&spec).unwrap_err());
+        assert!(err.contains("map task 1"), "{err}");
+        assert!(err.contains("task 1 failed"), "{err}");
+    }
+
+    #[test]
     fn missing_input_fails_cleanly() {
         let mut e = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
         let m = ColMap;
@@ -476,5 +634,69 @@ mod tests {
         assert_eq!(stats.map_io.bytes_read, input_bytes + 3 * cache_bytes);
         let out = e.dfs.get("out").unwrap();
         assert!(decode_row(&out[0].value)[0] >= 100.0);
+    }
+
+    /// Full-field step comparison minus the wall-clock measurements
+    /// (the determinism contract; the cross-algorithm version lives in
+    /// `rust/tests/parallel.rs`).
+    fn assert_steps_deterministic(a: &StepStats, b: &StepStats) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.map_tasks, b.map_tasks);
+        assert_eq!(a.reduce_tasks, b.reduce_tasks);
+        assert_eq!(a.distinct_keys, b.distinct_keys);
+        assert_eq!(a.map_io, b.map_io);
+        assert_eq!(a.reduce_io, b.reduce_io);
+        assert_eq!(a.map_attempts, b.map_attempts);
+        assert_eq!(a.reduce_attempts, b.reduce_attempts);
+        assert_eq!(a.faults, b.faults);
+        assert_eq!(a.virtual_secs.to_bits(), b.virtual_secs.to_bits(), "virtual clock drifted");
+    }
+
+    #[test]
+    fn host_threads_do_not_change_outputs_or_stats() {
+        let run = |host_threads: usize| {
+            let mut e = engine_with_input(64, 3);
+            e = Engine {
+                dfs: std::mem::take(&mut e.dfs),
+                ..Engine::new(
+                    DiskModel::icme_like(),
+                    ClusterConfig::default().with_host_threads(host_threads),
+                )
+            }
+            .with_faults(
+                FaultPolicy { probability: 0.2, max_attempts: 16, waste_fraction: 0.5 },
+                7,
+            );
+            let m = ColMap;
+            let r = SumReduce;
+            let spec = JobSpec::map_reduce("det", "input", 16, &m, &r, 3, "out");
+            let stats = e.run(&spec).unwrap();
+            let out: Vec<Record> = e.dfs.get("out").unwrap().to_vec();
+            (stats, out)
+        };
+        let (s1, out1) = run(1);
+        let (s8, out8) = run(8);
+        assert_eq!(out1, out8, "DFS output must not depend on the pool size");
+        assert_steps_deterministic(&s1, &s8);
+        assert_eq!(s1.host_threads, 1);
+        assert!(s8.host_threads > 1);
+    }
+
+    #[test]
+    fn virtual_clock_is_deterministic_across_runs() {
+        // the virtual clock charges only modelled quantities, so two
+        // identical runs agree to the bit (measured compute lives in
+        // the wall-clock fields only)
+        let run = || {
+            let mut e = engine_with_input(40, 2);
+            let m = ColMap;
+            let r = SumReduce;
+            let spec = JobSpec::map_reduce("bits", "input", 8, &m, &r, 2, "out");
+            e.run(&spec).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.virtual_secs.to_bits(), b.virtual_secs.to_bits());
+        assert_steps_deterministic(&a, &b);
     }
 }

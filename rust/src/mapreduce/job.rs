@@ -45,10 +45,12 @@ impl Emitter {
 /// the paper's mappers gather their split into a local matrix before
 /// computing, so the per-record callback shape would be wrong here).
 ///
-/// Not `Send`/`Sync`: tasks hold `&dyn BlockCompute`, and the PJRT
-/// runtime is deliberately single-threaded (parallelism lives in the
-/// virtual schedule, not in host threads — see `engine.rs`).
-pub trait MapTask {
+/// `Send + Sync`: one task value is shared by every map task of a wave,
+/// and waves fan out over the engine's host thread pool
+/// ([`super::engine::ClusterConfig::host_threads`]). Task bodies
+/// holding `&dyn BlockCompute` satisfy the bound because
+/// [`crate::runtime::BlockCompute`] itself requires `Send + Sync`.
+pub trait MapTask: Send + Sync {
     /// `task_id` is the index of this map task within the job; `side`
     /// holds the records of each side-input file (distributed cache),
     /// in the order listed in [`JobSpec::side_inputs`].
@@ -70,7 +72,10 @@ pub type KeyGroup = (Vec<u8>, Vec<Vec<u8>>);
 /// reducers (Direct TSQR step 2 stacks the R factors of *all* keys)
 /// need the full view — the paper's reduce task "maintains an ordered
 /// list of the keys read".
-pub trait ReduceTask {
+///
+/// `Send + Sync` for the same reason as [`MapTask`]: reduce waves run
+/// on the host thread pool.
+pub trait ReduceTask: Send + Sync {
     fn run(&self, partition: &[KeyGroup], out: &mut Emitter) -> Result<()>;
 }
 

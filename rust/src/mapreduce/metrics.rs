@@ -8,6 +8,12 @@
 use crate::dfs::{DiskModel, IoMeter};
 
 /// Metrics for one MapReduce iteration (one map[+reduce] stage pair).
+///
+/// Every field is deterministic — byte-identical for a given job
+/// whatever the host thread-pool size — except the wall-clock
+/// measurements: `wall_secs`, `map_compute_secs`, `reduce_compute_secs`
+/// (real measured time) and `host_threads` (configuration, not
+/// outcome). `rust/tests/parallel.rs` enforces the split.
 #[derive(Debug, Clone, Default)]
 pub struct StepStats {
     pub name: String,
@@ -17,10 +23,12 @@ pub struct StepStats {
     pub distinct_keys: usize,
     pub map_io: IoMeter,
     pub reduce_io: IoMeter,
-    /// Measured wall-clock compute inside map / reduce task bodies.
+    /// Measured wall-clock compute inside map / reduce task bodies
+    /// (diagnostic; never charged to the virtual clock).
     pub map_compute_secs: f64,
     pub reduce_compute_secs: f64,
-    /// Virtual time of this step (slot-scheduled disk + compute + startup).
+    /// Virtual time of this step (slot-scheduled disk + startup under
+    /// the paper's model — fully deterministic).
     pub virtual_secs: f64,
     /// Real wall time spent executing this step in the simulator.
     pub wall_secs: f64,
@@ -29,6 +37,10 @@ pub struct StepStats {
     pub reduce_attempts: usize,
     /// Injected faults observed.
     pub faults: usize,
+    /// Realized host worker-thread pool size for this step's widest
+    /// wave (`min(ClusterConfig::host_threads, tasks)`); 0 for leader
+    /// and marker steps that never enter the engine.
+    pub host_threads: usize,
 }
 
 impl StepStats {
@@ -73,6 +85,12 @@ impl JobStats {
 
     pub fn total_faults(&self) -> usize {
         self.steps.iter().map(|s| s.faults).sum()
+    }
+
+    /// Realized host parallelism across the run: the widest worker pool
+    /// any engine step actually used (0 if no engine step ran).
+    pub fn host_threads(&self) -> usize {
+        self.steps.iter().map(|s| s.host_threads).max().unwrap_or(0)
     }
 
     pub fn compute_secs(&self) -> f64 {

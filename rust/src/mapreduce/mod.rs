@@ -18,6 +18,11 @@
 //! R written to *separate files* from one task) and side inputs (the
 //! step-3 distributed cache file of second-stage Q factors) are
 //! first-class, since Direct TSQR needs both.
+//!
+//! Task bodies are `Send + Sync` and each map/reduce wave executes on a
+//! real host thread pool ([`ClusterConfig::host_threads`]) while
+//! remaining bit-for-bit deterministic — see [`engine`] for the
+//! virtual-vs-host parallelism contract.
 
 pub mod engine;
 pub mod fault;
@@ -26,7 +31,7 @@ pub mod metrics;
 pub mod scheduler;
 pub mod shuffle;
 
-pub use engine::{ClusterConfig, Engine};
+pub use engine::{default_host_threads, ClusterConfig, Engine};
 pub use fault::FaultPolicy;
 pub use job::{Emitter, JobSpec, KeyGroup, MapTask, ReduceTask};
 pub use metrics::{JobStats, StepStats};

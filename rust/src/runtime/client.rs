@@ -1,19 +1,25 @@
 //! PJRT client wrapper: load HLO text → compile (cached) → execute.
 //!
 //! One [`PjrtRuntime`] owns the CPU client and an executable cache keyed
-//! by `(op, b, n)`. Each artifact is compiled at most once per process;
-//! the hot path is literal creation + `execute` + literal readback.
-//! Compile counts and timings are tracked in [`RuntimeStats`] for the
-//! perf pass (EXPERIMENTS.md §Perf).
+//! by `(op, b, n)`. Each artifact is compiled once per process (a cold
+//! race may rarely compile a shape twice; the first insert wins) and
+//! compilation never blocks concurrent hits on cached shapes; the hot
+//! path is literal creation + `execute` + literal readback. Compile
+//! counts and timings are tracked in [`RuntimeStats`] for the perf pass
+//! (EXPERIMENTS.md §Perf).
+//!
+//! The runtime is shared across the engine's host worker threads
+//! ([`crate::mapreduce::ClusterConfig::host_threads`]), so all interior
+//! mutability is `Mutex`-guarded and executables are handed out as
+//! `Arc`s.
 
 use super::artifacts::{Manifest, ManifestEntry, Op};
 use super::pad::{extract, pad_to};
 use super::BlockCompute;
 use crate::linalg::Matrix;
 use anyhow::{anyhow, bail, Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Execution counters for the perf pass.
@@ -32,9 +38,18 @@ pub struct RuntimeStats {
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     manifest: Manifest,
-    cache: RefCell<HashMap<(Op, usize, usize), Rc<xla::PjRtLoadedExecutable>>>,
-    pub stats: RefCell<RuntimeStats>,
+    cache: Mutex<HashMap<(Op, usize, usize), Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<RuntimeStats>,
 }
+
+// SAFETY: the `xla` crate's client/executable wrappers are `!Send`/
+// `!Sync` only because they hold raw pointers to C++ objects; the
+// underlying PJRT CPU client and loaded executables are documented
+// thread-safe (compilation and execution take internal locks in the
+// PJRT runtime). All rust-side shared state (`cache`, `stats`) is
+// `Mutex`-guarded, and `Manifest` is read-only after construction.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
 
 impl PjrtRuntime {
     /// Create from the default artifacts directory (env
@@ -52,8 +67,8 @@ impl PjrtRuntime {
         Ok(PjrtRuntime {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
         })
     }
 
@@ -61,10 +76,19 @@ impl PjrtRuntime {
         &self.manifest
     }
 
-    /// Compile (or fetch from cache) the executable for an entry.
-    fn executable(&self, entry: &ManifestEntry) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    /// Snapshot of the execution counters.
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.lock().expect("runtime stats")
+    }
+
+    /// Compile (or fetch from cache) the executable for an entry. The
+    /// cache lock is *not* held across compilation, so concurrent hits
+    /// on already-compiled shapes never stall behind a cold compile; a
+    /// race on the same cold shape may compile it twice, in which case
+    /// the first insert wins and the duplicate is dropped.
+    fn executable(&self, entry: &ManifestEntry) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         let key = (entry.op, entry.b, entry.n);
-        if let Some(exe) = self.cache.borrow().get(&key) {
+        if let Some(exe) = self.cache.lock().expect("executable cache").get(&key) {
             return Ok(exe.clone());
         }
         let path = self.manifest.path_of(entry);
@@ -78,14 +102,14 @@ impl PjrtRuntime {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {}: {e:?}", entry.file))?;
-        let exe = Rc::new(exe);
+        let exe = Arc::new(exe);
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = self.stats.lock().expect("runtime stats");
             st.compiles += 1;
             st.compile_secs += t0.elapsed().as_secs_f64();
         }
-        self.cache.borrow_mut().insert(key, exe.clone());
-        Ok(exe)
+        let mut cache = self.cache.lock().expect("executable cache");
+        Ok(cache.entry(key).or_insert(exe).clone())
     }
 
     /// Execute an entry on padded row-major buffers, returning the raw
@@ -124,7 +148,7 @@ impl PjrtRuntime {
             out.push(p.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
         }
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = self.stats.lock().expect("runtime stats");
             st.executions += 1;
             st.execute_secs += t0.elapsed().as_secs_f64();
             st.elements_in += inputs.iter().map(|b| b.len() as u64).sum::<u64>();

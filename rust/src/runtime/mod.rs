@@ -24,9 +24,22 @@ pub use client::{PjrtRuntime, RuntimeStats};
 
 use crate::linalg::{householder_qr, Matrix};
 use anyhow::Result;
+use std::sync::Arc;
+
+/// A shareable, thread-safe handle to a resolved compute backend —
+/// clone it into as many sessions (or engine task bodies on the host
+/// thread pool) as needed; PJRT backends then share one compiled
+/// executable cache process-wide.
+pub type SharedCompute = Arc<dyn BlockCompute + Send + Sync>;
 
 /// Block-level compute interface used by every MapReduce task body.
-pub trait BlockCompute {
+///
+/// `Send + Sync` is part of the contract: the MapReduce engine executes
+/// map/reduce waves on a host thread pool and every task of a wave
+/// shares one backend reference, so implementations must guard any
+/// interior mutability (see the `Mutex`-protected executable cache in
+/// the PJRT client).
+pub trait BlockCompute: Send + Sync {
     /// Thin QR of a tall block: `(rows×n) -> (Q rows×n, R n×n)`.
     fn qr(&self, a: &Matrix) -> Result<(Matrix, Matrix)>;
     /// Gram matrix `AᵀA` of a block.

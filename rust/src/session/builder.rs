@@ -1,13 +1,14 @@
 //! Fluent construction of a [`TsqrSession`]: cluster, disk model, fault
-//! policy, compute backend, and tuning knobs in one place.
+//! policy, compute backend, host parallelism, and tuning knobs in one
+//! place.
 
 use super::TsqrSession;
 use crate::coordinator::CoordOpts;
 use crate::dfs::DiskModel;
 use crate::mapreduce::{ClusterConfig, Engine, FaultPolicy};
-use crate::runtime::{BlockCompute, NativeRuntime};
+use crate::runtime::{NativeRuntime, SharedCompute};
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Compute-backend selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -23,29 +24,30 @@ pub enum Backend {
 }
 
 impl Backend {
-    /// Resolve to a concrete (shareable) compute backend plus a short
-    /// human-readable name. Sessions sharing one resolved backend reuse
-    /// its compiled-executable cache — build it once, clone the `Rc`
-    /// into as many sessions as needed.
-    pub fn resolve(self) -> Result<(Rc<dyn BlockCompute>, &'static str)> {
+    /// Resolve to a concrete (shareable, thread-safe) compute backend
+    /// plus a short human-readable name. Sessions sharing one resolved
+    /// backend reuse its compiled-executable cache — build it once,
+    /// clone the [`SharedCompute`] `Arc` into as many sessions (and
+    /// host worker threads) as needed.
+    pub fn resolve(self) -> Result<(SharedCompute, &'static str)> {
         match self {
-            Backend::Native => Ok((Rc::new(NativeRuntime), "native")),
+            Backend::Native => Ok((Arc::new(NativeRuntime), "native")),
             Backend::Auto => {
                 #[cfg(feature = "pjrt")]
                 {
                     let dir = crate::runtime::Manifest::default_dir();
                     if dir.join("manifest.tsv").exists() {
                         let rt = crate::runtime::PjrtRuntime::from_default_artifacts()?;
-                        return Ok((Rc::new(rt), "pjrt"));
+                        return Ok((Arc::new(rt), "pjrt"));
                     }
                 }
-                Ok((Rc::new(NativeRuntime), "native"))
+                Ok((Arc::new(NativeRuntime), "native"))
             }
             Backend::Pjrt => {
                 #[cfg(feature = "pjrt")]
                 {
                     let rt = crate::runtime::PjrtRuntime::from_default_artifacts()?;
-                    return Ok((Rc::new(rt), "pjrt"));
+                    return Ok((Arc::new(rt), "pjrt"));
                 }
                 #[cfg(not(feature = "pjrt"))]
                 anyhow::bail!(
@@ -64,7 +66,7 @@ pub struct SessionBuilder {
     cluster: ClusterConfig,
     faults: Option<(FaultPolicy, u64)>,
     backend: Backend,
-    compute: Option<Rc<dyn BlockCompute>>,
+    compute: Option<SharedCompute>,
     opts: CoordOpts,
 }
 
@@ -87,9 +89,20 @@ impl SessionBuilder {
         self
     }
 
-    /// Map/reduce slot counts (default: the paper's 40/40).
+    /// Map/reduce slot counts (default: the paper's 40/40). Overwrites
+    /// any earlier [`host_threads`](Self::host_threads) call with the
+    /// config's own pool size.
     pub fn cluster(mut self, cluster: ClusterConfig) -> Self {
         self.cluster = cluster;
+        self
+    }
+
+    /// Host worker threads executing map/reduce task bodies (default:
+    /// the machine's available parallelism; `1` runs tasks inline).
+    /// Purely a wall-clock knob — results and all non-wall metrics are
+    /// bit-identical for every value (see `rust/tests/parallel.rs`).
+    pub fn host_threads(mut self, n: usize) -> Self {
+        self.cluster.host_threads = n.max(1);
         self
     }
 
@@ -106,8 +119,8 @@ impl SessionBuilder {
     }
 
     /// Share an already-resolved backend (see [`Backend::resolve`]) or
-    /// plug in a custom [`BlockCompute`] implementation.
-    pub fn compute(mut self, compute: Rc<dyn BlockCompute>) -> Self {
+    /// plug in a custom [`crate::runtime::BlockCompute`] implementation.
+    pub fn compute(mut self, compute: SharedCompute) -> Self {
         self.compute = Some(compute);
         self
     }
@@ -168,12 +181,37 @@ mod tests {
             .rows_per_task(123)
             .reduce_tasks(7)
             .gather_limit(99)
+            .host_threads(3)
             .build()
             .unwrap();
         assert_eq!(s.opts.rows_per_task, 123);
         assert_eq!(s.opts.reduce_tasks, 7);
         assert_eq!(s.opts.gather_limit, Some(99));
         assert_eq!(s.backend_desc(), "native");
+        assert_eq!(s.host_threads(), 3);
+    }
+
+    #[test]
+    fn host_threads_floor_is_one() {
+        let s = TsqrSession::builder()
+            .backend(Backend::Native)
+            .host_threads(0)
+            .build()
+            .unwrap();
+        assert_eq!(s.host_threads(), 1);
+    }
+
+    #[test]
+    fn resolved_backend_is_shareable_across_threads() {
+        use crate::runtime::BlockCompute as _;
+        // the whole point of SharedCompute: Arc<dyn BlockCompute> moves
+        // freely across host worker threads
+        let (compute, _) = Backend::Native.resolve().unwrap();
+        let handle = std::thread::spawn(move || {
+            let m = crate::linalg::Matrix::identity(3);
+            compute.gram(&m).unwrap().data
+        });
+        assert_eq!(handle.join().unwrap(), crate::linalg::Matrix::identity(3).data);
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -21,18 +21,20 @@ pub enum Want {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum AlgoChoice {
     /// Condition-aware selection: a one-pass Indirect-TSQR probe
-    /// estimates κ₂(A) from its `R`; well-conditioned inputs get the
-    /// cheap Cholesky QR, everything else the stable Direct TSQR.
+    /// estimates κ₂(A) from its `R`; well-conditioned inputs finish
+    /// that same `R` into `Q = A·R⁻¹` (the probe is *reused* — one
+    /// more pass), everything else runs the stable Direct TSQR.
     Auto,
     /// Run exactly this algorithm.
     Fixed(Algorithm),
 }
 
 /// Default κ₂ threshold below which `Auto` considers an input
-/// well-conditioned. Cholesky QR's loss of orthogonality grows like
-/// κ²·ε (`cond(AᵀA) = cond(A)²`, paper Fig. 6), so κ ≤ 1e3 keeps the
-/// cheap path's `‖QᵀQ−I‖` at ~1e-10 — and leaves five decades of
-/// margin under the κ ≈ 1e8 breakdown point.
+/// well-conditioned. The probe-reusing indirect finish loses
+/// orthogonality like κ·ε (paper Fig. 6), so κ ≤ 1e3 keeps the cheap
+/// path's `‖QᵀQ−I‖` at ~1e-13 — comfortably better than the κ²·ε a
+/// Cholesky-QR rerun would give at the same threshold, and far from
+/// any breakdown regime.
 pub const DEFAULT_CONDITION_THRESHOLD: f64 = 1e3;
 
 /// A factorization request; every knob in one place.

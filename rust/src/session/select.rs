@@ -1,13 +1,21 @@
 //! Condition-aware algorithm selection (the [`super::AlgoChoice::Auto`]
 //! policy).
 //!
-//! The paper's Fig. 6 shows the trade-off the policy encodes: Cholesky
-//! QR is the cheapest pipeline but loses κ² in the Gram matrix and
-//! breaks down for κ ≳ 1e8, while Direct TSQR is unconditionally stable
-//! at a ~30–50% job-time premium (Table VI). A one-pass Indirect-TSQR
-//! probe produces a backward-stable `R` whose singular values match A's
-//! in exact arithmetic, so a serial n×n Jacobi SVD of that `R` gives a
-//! reliable κ₂ estimate even deep into ill-conditioned territory.
+//! The paper's Fig. 6 shows the trade-off the policy encodes: the
+//! indirect methods are the cheapest pipelines but their `Q = A·R⁻¹`
+//! loses orthogonality like κ·ε (κ²·ε for Cholesky QR's Gram-based `R`,
+//! which also breaks down for κ ≳ 1e8), while Direct TSQR is
+//! unconditionally stable at a ~30–50% job-time premium (Table VI). A
+//! one-pass Indirect-TSQR probe produces a backward-stable `R` whose
+//! singular values match A's in exact arithmetic, so a serial n×n
+//! Jacobi SVD of that `R` gives a reliable κ₂ estimate even deep into
+//! ill-conditioned territory.
+//!
+//! On the well-conditioned branch the probe's `R` is *reused*: the
+//! session finishes it into `Q = A·R⁻¹` ([`crate::coordinator::ar_inv`])
+//! rather than re-running a factorization from scratch — two passes
+//! over `A` instead of three, with κ·ε orthogonality where the old
+//! Cholesky-QR rerun gave κ²·ε (see [`AutoDecision::probe_reused`]).
 
 use crate::coordinator::Algorithm;
 use crate::linalg::{jacobi_svd, Matrix};
@@ -27,34 +35,41 @@ pub struct AutoDecision {
     pub threshold: f64,
     /// The algorithm the policy settled on.
     pub chosen: Algorithm,
+    /// Whether the probe's `R` directly served the request (the
+    /// well-conditioned and R-only branches: one fewer pass over `A`).
+    pub probe_reused: bool,
 }
 
 impl AutoDecision {
-    /// Decide from a probe `R`: Cholesky QR for well-conditioned inputs,
-    /// Direct TSQR otherwise.
+    /// Decide from a probe `R`: finish the probe indirectly (reusing
+    /// its `R`) for well-conditioned inputs, Direct TSQR otherwise.
     pub(crate) fn from_probe(r: &Matrix, threshold: f64, refine: bool) -> AutoDecision {
         let kappa = estimate_condition(r);
-        let chosen = if kappa.is_finite() && kappa <= threshold {
-            Algorithm::Cholesky { refine }
+        if kappa.is_finite() && kappa <= threshold {
+            AutoDecision {
+                kappa_estimate: kappa,
+                threshold,
+                chosen: Algorithm::IndirectTsqr { refine },
+                probe_reused: true,
+            }
         } else {
-            Algorithm::DirectTsqr
-        };
-        AutoDecision { kappa_estimate: kappa, threshold, chosen }
-    }
-
-    /// The unconditional-stability fallback (taken if the chosen cheap
-    /// path still reports a Cholesky breakdown).
-    pub(crate) fn fallback(self) -> AutoDecision {
-        AutoDecision { chosen: Algorithm::DirectTsqr, ..self }
+            AutoDecision {
+                kappa_estimate: kappa,
+                threshold,
+                chosen: Algorithm::DirectTsqr,
+                probe_reused: false,
+            }
+        }
     }
 
     /// Zero-cost marker step recording the decision in the job stats.
     pub(crate) fn step_stats(&self) -> StepStats {
         StepStats {
             name: format!(
-                "auto-select(kappa~{:.1e} -> {})",
+                "auto-select(kappa~{:.1e} -> {}{})",
                 self.kappa_estimate,
-                self.chosen.cli_name()
+                self.chosen.cli_name(),
+                if self.probe_reused { ", probe-reused" } else { "" }
             ),
             ..Default::default()
         }
@@ -64,8 +79,8 @@ impl AutoDecision {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::matrix_with_condition;
     use crate::linalg::householder_qr;
+    use crate::linalg::matrix_with_condition;
     use crate::util::rng::Rng;
 
     #[test]
@@ -88,13 +103,14 @@ mod tests {
         let a = matrix_with_condition(300, 5, 10.0, &mut rng);
         let (_, r) = householder_qr(&a);
         let d = AutoDecision::from_probe(&r, 1e6, false);
-        assert_eq!(d.chosen, Algorithm::Cholesky { refine: false });
+        assert_eq!(d.chosen, Algorithm::IndirectTsqr { refine: false });
+        assert!(d.probe_reused, "well-conditioned pick reuses the probe's R");
 
         let a = matrix_with_condition(300, 5, 1e12, &mut rng);
         let (_, r) = householder_qr(&a);
         let d = AutoDecision::from_probe(&r, 1e6, true);
         assert_eq!(d.chosen, Algorithm::DirectTsqr);
-        assert_eq!(d.fallback().chosen, Algorithm::DirectTsqr);
+        assert!(!d.probe_reused, "the stable path re-reads A from scratch");
     }
 
     #[test]
@@ -103,7 +119,8 @@ mod tests {
         let a = matrix_with_condition(200, 4, 5.0, &mut rng);
         let (_, r) = householder_qr(&a);
         let d = AutoDecision::from_probe(&r, 1e6, true);
-        assert_eq!(d.chosen, Algorithm::Cholesky { refine: true });
+        assert_eq!(d.chosen, Algorithm::IndirectTsqr { refine: true });
+        assert!(d.probe_reused);
     }
 
     #[test]
@@ -111,12 +128,23 @@ mod tests {
         let d = AutoDecision {
             kappa_estimate: 3.0,
             threshold: 1e6,
-            chosen: Algorithm::Cholesky { refine: false },
+            chosen: Algorithm::IndirectTsqr { refine: false },
+            probe_reused: true,
         };
         let s = d.step_stats();
         assert!(s.name.starts_with("auto-select"));
-        assert!(s.name.contains("cholesky"));
+        assert!(s.name.contains("indirect"));
+        assert!(s.name.contains("probe-reused"));
         assert_eq!(s.virtual_secs, 0.0);
         assert_eq!(s.map_tasks, 0);
+
+        let d2 = AutoDecision {
+            kappa_estimate: 1e12,
+            threshold: 1e6,
+            chosen: Algorithm::DirectTsqr,
+            probe_reused: false,
+        };
+        assert!(!d2.step_stats().name.contains("probe-reused"));
+        assert!(d2.step_stats().name.contains("direct"));
     }
 }

@@ -56,6 +56,31 @@ pub fn quick_mode() -> bool {
         || std::env::args().any(|a| a == "--quick")
 }
 
+/// `--host-threads N` (or `MRTSQR_HOST_THREADS=N`) override for bench
+/// harnesses: how many OS threads execute task bodies in the parallel
+/// leg of the wall-clock comparison. `None` = the engine default
+/// (available parallelism). Purely a wall-clock knob — virtual times
+/// are bit-identical at any value.
+pub fn host_threads_arg() -> Option<usize> {
+    parse_host_threads(std::env::args())
+        .or_else(|| std::env::var("MRTSQR_HOST_THREADS").ok().and_then(|v| v.parse().ok()))
+}
+
+/// Argv-scanning core of [`host_threads_arg`], split out so it can be
+/// tested on a synthetic token list (mutating the real process env from
+/// a test races the multi-threaded test harness).
+fn parse_host_threads<I: Iterator<Item = String>>(mut args: I) -> Option<usize> {
+    while let Some(a) = args.next() {
+        if a == "--host-threads" {
+            return args.next().and_then(|v| v.parse().ok());
+        }
+        if let Some(v) = a.strip_prefix("--host-threads=") {
+            return v.parse().ok();
+        }
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +99,17 @@ mod tests {
         let (v, secs) = once(|| 41 + 1);
         assert_eq!(v, 42);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn host_threads_flag_parsing() {
+        let parse = |toks: &[&str]| {
+            parse_host_threads(toks.iter().map(|s| s.to_string()))
+        };
+        assert_eq!(parse(&["bench", "--host-threads", "6"]), Some(6));
+        assert_eq!(parse(&["bench", "--host-threads=12", "--quick"]), Some(12));
+        assert_eq!(parse(&["bench", "--quick"]), None);
+        assert_eq!(parse(&["--host-threads", "zero?"]), None);
+        assert_eq!(parse(&["--host-threads"]), None);
     }
 }

@@ -12,11 +12,10 @@ use crate::dfs::DiskModel;
 use crate::linalg::Matrix;
 use crate::mapreduce::JobStats;
 use crate::perfmodel::{lower_bound_secs, AlgoKind, StageParallelism, WorkloadShape};
-use crate::runtime::BlockCompute;
+use crate::runtime::SharedCompute;
 use crate::session::{FactorizationRequest, TsqrSession};
 use crate::workload::{paper_workloads, ScaledWorkload};
 use anyhow::Result;
-use std::rc::Rc;
 
 /// One (workload, algorithm) measurement.
 #[derive(Debug, Clone)]
@@ -100,7 +99,7 @@ pub fn indirect_r_with_tree(
 /// byte accounting. Householder runs 4 columns and extrapolates (the
 /// paper's own method for Table VI).
 pub fn run_one(
-    compute: Rc<dyn BlockCompute>,
+    compute: SharedCompute,
     w: &ScaledWorkload,
     algo: Algorithm,
     beta_r: f64,
@@ -157,7 +156,7 @@ pub const TABLE6_ALGOS: [Algorithm; 6] = [
 
 /// The full Table VI sweep: all six algorithms × the five workloads.
 pub fn run_table6_sweep(
-    compute: Rc<dyn BlockCompute>,
+    compute: SharedCompute,
     beta_r: f64,
     beta_w: f64,
 ) -> Result<Vec<Measurement>> {
@@ -198,8 +197,8 @@ mod tests {
     use super::*;
     use crate::runtime::NativeRuntime;
 
-    fn native() -> Rc<dyn BlockCompute> {
-        Rc::new(NativeRuntime)
+    fn native() -> SharedCompute {
+        std::sync::Arc::new(NativeRuntime)
     }
 
     #[test]

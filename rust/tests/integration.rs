@@ -143,13 +143,13 @@ fn pjrt_executable_cache_compiles_once() {
     let mut rng = Rng::new(9);
     let a = Matrix::gaussian(64, 4, &mut rng);
     rt.qr(&a).unwrap();
-    let after_first = rt.stats.borrow().compiles;
+    let after_first = rt.stats().compiles;
     for _ in 0..5 {
         rt.qr(&a).unwrap();
     }
-    let after_six = rt.stats.borrow().compiles;
+    let after_six = rt.stats().compiles;
     assert_eq!(after_first, after_six, "same shape must not recompile");
-    assert!(rt.stats.borrow().executions >= 6);
+    assert!(rt.stats().executions >= 6);
 }
 
 #[test]
@@ -193,4 +193,51 @@ fn householder_oracle_self_check() {
     let a = Matrix::gaussian(128, 16, &mut rng);
     let (q, r) = householder_qr(&a);
     assert!(a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm() < 1e-13);
+}
+
+#[test]
+fn pjrt_runtime_is_shareable_across_threads() {
+    // Exercises the `unsafe impl Send/Sync for PjrtRuntime`: concurrent
+    // workers hammer one shared runtime — cold compiles racing on the
+    // Mutex-guarded cache, then parallel executes — and every thread
+    // must see bit-identical results for its inputs. This is the shape
+    // of load the engine's host_threads pool generates.
+    use std::sync::Arc;
+    let rt = Arc::new(match runtime() {
+        Some(rt) => rt,
+        None => return,
+    });
+    let mut rng = Rng::new(13);
+    let inputs: Vec<Matrix> = (0..8).map(|_| Matrix::gaussian(300, 6, &mut rng)).collect();
+    let inputs = Arc::new(inputs);
+
+    let serial: Vec<(Matrix, Matrix)> =
+        inputs.iter().map(|a| rt.qr(a).expect("serial qr")).collect();
+
+    let handles: Vec<_> = (0..8)
+        .map(|w| {
+            let rt = rt.clone();
+            let inputs = inputs.clone();
+            std::thread::spawn(move || {
+                // each worker does every input several times, shifted so
+                // threads collide on different shapes at different moments
+                let mut out = Vec::new();
+                for round in 0..3 {
+                    for k in 0..inputs.len() {
+                        let idx = (k + w + round) % inputs.len();
+                        out.push((idx, rt.qr(&inputs[idx]).expect("parallel qr")));
+                    }
+                }
+                out
+            })
+        })
+        .collect();
+    for h in handles {
+        for (idx, (q, r)) in h.join().expect("worker panicked") {
+            let (qs, rs) = &serial[idx];
+            assert_eq!(q.data, qs.data, "Q drifted under concurrency (input {idx})");
+            assert_eq!(r.data, rs.data, "R drifted under concurrency (input {idx})");
+        }
+    }
+    assert!(rt.stats().executions >= 8 + 8 * 3 * 8);
 }

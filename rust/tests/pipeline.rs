@@ -97,7 +97,9 @@ fn auto_matches_the_stability_ladder() {
     let easy = Matrix::gaussian(900, 10, &mut rng);
     let (mut s, h) = session_with(&easy);
     let res = s.factorize(&h, &req).unwrap();
-    assert_eq!(res.algorithm, Algorithm::Cholesky { refine: false });
+    // well-conditioned: the probe's R is reused and finished indirectly
+    assert_eq!(res.algorithm, Algorithm::IndirectTsqr { refine: false });
+    assert!(res.auto.as_ref().unwrap().probe_reused);
     check_result(&easy, &s, &res, 1e-10);
 
     let hard = matrix_with_condition(900, 10, 1e12, &mut rng);
