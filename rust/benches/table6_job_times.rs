@@ -7,9 +7,10 @@ use anyhow::Result;
 use mrtsqr::coordinator::Algorithm;
 use mrtsqr::mapreduce::default_host_threads;
 use mrtsqr::runtime::SharedCompute;
-use mrtsqr::session::{Backend, TsqrSession};
-use mrtsqr::util::bench::{host_threads_arg, once};
+use mrtsqr::session::{Backend, FactorizationRequest, TsqrSession};
+use mrtsqr::util::bench::{arg_value, host_threads_arg, once};
 use mrtsqr::util::experiments::{paper_table6, run_table6_sweep};
+use mrtsqr::util::json::Json;
 use mrtsqr::util::table::{commas, Table};
 
 /// Wall-clock leg of the bench: one Direct TSQR job, serial host
@@ -17,7 +18,10 @@ use mrtsqr::util::table::{commas, Table};
 /// bit-identical by the engine's determinism contract; only the wall
 /// clock moves — the number `BENCH_*.json` tracks as the
 /// real-hardware trajectory.
-fn wall_clock_speedup(compute: &SharedCompute, host_threads: usize) -> Result<()> {
+fn wall_clock_speedup(
+    compute: &SharedCompute,
+    host_threads: usize,
+) -> Result<(f64, f64, f64)> {
     let quick = mrtsqr::util::bench::quick_mode();
     let (rows, cols) = if quick { (60_000, 10) } else { (400_000, 25) };
     let run = |threads: usize| -> Result<(f64, f64)> {
@@ -54,7 +58,65 @@ fn wall_clock_speedup(compute: &SharedCompute, host_threads: usize) -> Result<()
         format!("{virt_pool:.0}"),
     ]);
     table.print();
-    Ok(())
+    Ok((wall_serial, wall_pool, virt_serial))
+}
+
+/// Batch-throughput leg: the same mixed four-job manifest through one
+/// `TsqrService`, drained serially on one thread vs served by a worker
+/// pool. Results are bit-identical (tests/service.rs); what moves is
+/// wall-clock jobs/sec — the second `BENCH_*.json` trajectory number.
+fn batch_throughput(compute: &SharedCompute, workers: usize) -> Result<(f64, f64, usize)> {
+    let quick = mrtsqr::util::bench::quick_mode();
+    let rows = if quick { 20_000 } else { 120_000 };
+    let run = |svc_workers: usize| -> Result<f64> {
+        let svc = TsqrSession::builder()
+            .compute(compute.clone())
+            .rows_per_task(rows / 200)
+            .service_workers(svc_workers)
+            .build_service()?;
+        let requests = [
+            FactorizationRequest::qr(),
+            FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr),
+            FactorizationRequest::svd(),
+            FactorizationRequest::r_only().with_algorithm(Algorithm::DirectTsqrFused),
+        ];
+        let inputs: Vec<_> = (0..requests.len())
+            .map(|i| svc.ingest_gaussian(&format!("A{i}"), rows, 8, i as u64))
+            .collect::<Result<_>>()?;
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = inputs
+            .iter()
+            .zip(requests)
+            .map(|(h, req)| svc.submit(h, req))
+            .collect::<Result<_>>()?;
+        if svc_workers == 0 {
+            svc.drain_now();
+        }
+        for h in &handles {
+            h.wait()?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    };
+    let serial_secs = run(0)?;
+    let pooled_secs = run(workers)?;
+    let mut table = Table::new(
+        "Job-service batch — 4 mixed jobs, serial drain vs worker pool",
+        &["workers", "wall (s)", "jobs/s", "speedup"],
+    );
+    table.row(&[
+        "serial".into(),
+        format!("{serial_secs:.3}"),
+        format!("{:.2}", 4.0 / serial_secs),
+        "1.00x".into(),
+    ]);
+    table.row(&[
+        workers.to_string(),
+        format!("{pooled_secs:.3}"),
+        format!("{:.2}", 4.0 / pooled_secs),
+        format!("{:.2}x", serial_secs / pooled_secs),
+    ]);
+    table.print();
+    Ok((serial_secs, pooled_secs, 4))
 }
 
 fn main() -> Result<()> {
@@ -107,8 +169,47 @@ fn main() -> Result<()> {
     println!("OK: Table VI shape holds (Chol≈Ind fastest; Direct beats +IR for n=10,25,50;");
     println!("    Householder slowest by far and worsening with n)");
 
-    // real-hardware leg: serial vs pooled wall clock on one workload
+    // real-hardware legs: serial vs pooled wall clock on one workload,
+    // and serial vs concurrent batch serving through the job service
     let pool = host_threads_arg().unwrap_or_else(default_host_threads).max(1);
-    wall_clock_speedup(&compute, pool)?;
+    let (wall_serial, wall_pool, virt) = wall_clock_speedup(&compute, pool)?;
+    let svc_workers = pool.min(4).max(2);
+    let (batch_serial, batch_pooled, batch_jobs) = batch_throughput(&compute, svc_workers)?;
+
+    // BENCH trajectory: `--bench-json PATH` records the wall-clock
+    // numbers (ROADMAP asks for BENCH_*.json entries per PR)
+    if let Some(path) = arg_value("bench-json") {
+        let report = Json::obj([
+            ("bench", Json::str("table6_job_times")),
+            ("backend", Json::str(backend_name)),
+            ("quick", Json::Bool(mrtsqr::util::bench::quick_mode())),
+            ("host_threads", Json::num(pool as f64)),
+            (
+                "direct_tsqr",
+                Json::obj([
+                    ("wall_serial_secs", Json::num(wall_serial)),
+                    ("wall_pooled_secs", Json::num(wall_pool)),
+                    ("speedup", Json::num(wall_serial / wall_pool)),
+                    ("virtual_secs", Json::num(virt)),
+                ]),
+            ),
+            (
+                "batch",
+                Json::obj([
+                    ("jobs", Json::num(batch_jobs as f64)),
+                    ("service_workers", Json::num(svc_workers as f64)),
+                    ("serial_secs", Json::num(batch_serial)),
+                    ("concurrent_secs", Json::num(batch_pooled)),
+                    ("speedup", Json::num(batch_serial / batch_pooled)),
+                    (
+                        "throughput_jobs_per_sec",
+                        Json::num(batch_jobs as f64 / batch_pooled.max(1e-9)),
+                    ),
+                ]),
+            ),
+        ]);
+        std::fs::write(&path, report.render() + "\n")?;
+        println!("bench json -> {path}");
+    }
     Ok(())
 }

@@ -44,13 +44,12 @@ pub fn apply_rinv(
     let rinv = tri_inverse_upper(r)
         .ok_or_else(|| anyhow!("R is singular — A must be full-rank (paper assumption)"))?;
     let rinv_file = coord.tmp("rinv");
-    coord
-        .engine
-        .dfs
-        .put(&rinv_file, vec![Record::new(row_key(0), encode_block(0, &rinv))]);
+    let data_scale = coord.dfs_mut(|dfs| {
+        dfs.put(&rinv_file, vec![Record::new(row_key(0), encode_block(0, &rinv))]);
+        dfs.scale(&input.file)
+    });
 
     let mapper = ApplyRinvMap { compute: coord.compute };
-    let data_scale = coord.engine.dfs.scale(&input.file);
     let spec = JobSpec::map_only(
         "ar-inv",
         &input.file,
@@ -60,7 +59,7 @@ pub fn apply_rinv(
     )
     .with_side_input(&rinv_file)
     .with_output_scale(data_scale);
-    stats.push(coord.engine.run(&spec)?);
+    stats.push(coord.run_step(&spec)?);
     Ok((MatrixHandle::new(out_file, input.rows, input.cols), stats))
 }
 
@@ -120,7 +119,7 @@ mod tests {
         let (mut coord, h) = coord_with(&a);
         let (r, _) = indirect_tsqr::indirect_r(&mut coord, &h).unwrap();
         let (qh, r_out, _) = q_via_rinv(&mut coord, &h, &r, false, RFactorMethod::IndirectTsqr).unwrap();
-        let q = get_matrix(&coord.engine.dfs, &qh.file, 6).unwrap();
+        let q = coord.dfs(|d| get_matrix(d, &qh.file, 6)).unwrap();
         assert!(q.orthogonality_error() < 1e-10);
         assert!(recon_err(&a, &q, &r_out) < 1e-12);
     }
@@ -132,7 +131,7 @@ mod tests {
         let (mut coord, h) = coord_with(&a);
         let (r, _) = indirect_tsqr::indirect_r(&mut coord, &h).unwrap();
         let (qh, _, _) = q_via_rinv(&mut coord, &h, &r, false, RFactorMethod::IndirectTsqr).unwrap();
-        let q = get_matrix(&coord.engine.dfs, &qh.file, 8).unwrap();
+        let q = coord.dfs(|d| get_matrix(d, &qh.file, 8)).unwrap();
         // error ~ kappa * eps >> 1e-10 (the paper's Fig. 6 phenomenon)
         assert!(q.orthogonality_error() > 1e-8, "err {}", q.orthogonality_error());
     }
@@ -144,7 +143,7 @@ mod tests {
         let (mut coord, h) = coord_with(&a);
         let (r, _) = indirect_tsqr::indirect_r(&mut coord, &h).unwrap();
         let (qh, r_out, _) = q_via_rinv(&mut coord, &h, &r, true, RFactorMethod::IndirectTsqr).unwrap();
-        let q = get_matrix(&coord.engine.dfs, &qh.file, 8).unwrap();
+        let q = coord.dfs(|d| get_matrix(d, &qh.file, 8)).unwrap();
         assert!(q.orthogonality_error() < 1e-12, "err {}", q.orthogonality_error());
         assert!(recon_err(&a, &q, &r_out) < 1e-9);
     }

@@ -58,13 +58,14 @@ impl ReduceTask for RowSumReduce {
 /// Charge the serial n×n gather+factor as a tiny leader step (the
 /// paper's Table III models it as one iteration of `8n²+8n` traffic).
 fn leader_step(coord: &Coordinator, name: &str, read: u64, write: u64) -> StepStats {
+    let model = coord.model();
     let mut s = StepStats { name: name.into(), map_tasks: 1, ..Default::default() };
     s.map_io.add_read(read, 0);
     s.map_io.add_write(write, 0);
-    s.virtual_secs = coord.engine.model.iteration_startup_secs
-        + coord.engine.model.read_secs(read)
-        + coord.engine.model.write_secs(write)
-        + coord.engine.model.task_startup_secs;
+    s.virtual_secs = model.iteration_startup_secs
+        + model.read_secs(read)
+        + model.write_secs(write)
+        + model.task_startup_secs;
     s
 }
 
@@ -85,21 +86,24 @@ pub fn cholesky_r(coord: &mut Coordinator, input: &MatrixHandle) -> Result<(Matr
         coord.opts.reduce_tasks,
         &gram_file,
     );
-    stats.push(coord.engine.run(&spec)?);
+    stats.push(coord.run_step(&spec)?);
 
     // leader: gather AᵀA, serial Cholesky
-    let recs = coord.engine.dfs.get(&gram_file)?;
-    ensure!(recs.len() == input.cols, "gram has {} rows, want {}", recs.len(), input.cols);
-    let mut g = Matrix::zeros(input.cols, input.cols);
-    for rec in recs {
-        // reduce output arrives in partition order, not key order — place
-        // each row by its key
-        let i = super::io::parse_row_key(&rec.key)? as usize;
-        ensure!(i < input.cols, "gram row key {i} out of range");
-        let row = decode_row(&rec.value);
-        ensure!(row.len() == input.cols, "gram row width");
-        g.row_mut(i).copy_from_slice(&row);
-    }
+    let g = coord.dfs(|dfs| -> Result<Matrix> {
+        let recs = dfs.get(&gram_file)?;
+        ensure!(recs.len() == input.cols, "gram has {} rows, want {}", recs.len(), input.cols);
+        let mut g = Matrix::zeros(input.cols, input.cols);
+        for rec in recs {
+            // reduce output arrives in partition order, not key order —
+            // place each row by its key
+            let i = super::io::parse_row_key(&rec.key)? as usize;
+            ensure!(i < input.cols, "gram row key {i} out of range");
+            let row = decode_row(&rec.value);
+            ensure!(row.len() == input.cols, "gram row width");
+            g.row_mut(i).copy_from_slice(&row);
+        }
+        Ok(g)
+    })?;
     let nn = (8 * input.cols * input.cols + 8 * input.cols) as u64;
     stats.push(leader_step(coord, "cholesky-factor", nn, nn));
 

@@ -241,7 +241,7 @@ fn direct_tsqr_level(
     let map_tasks = coord.map_tasks_for(input.rows);
     // Q data is O(m·n) and inherits the input's virtual byte scale; the
     // R factors are O(m1·n²) metadata and stay at scale 1 (DESIGN.md §2).
-    let data_scale = coord.engine.dfs.scale(&input.file);
+    let data_scale = coord.dfs(|d| d.scale(&input.file));
     {
         let mapper = Step1Map { compute: coord.compute };
         let spec = JobSpec::map_only(
@@ -252,9 +252,9 @@ fn direct_tsqr_level(
             &r1_file,
         )
         .with_scaled_side_output("q1", &q1_file, data_scale);
-        stats.push(coord.engine.run(&spec)?);
+        stats.push(coord.run_step(&spec)?);
     }
-    let m1 = coord.engine.dfs.file_records(&r1_file)?;
+    let m1 = coord.dfs(|d| d.file_records(&r1_file))?;
     let stacked_rows = m1 * n;
     let gather_limit = coord
         .opts
@@ -302,9 +302,9 @@ fn direct_tsqr_level(
             )
             .with_side_output("q2", &q2_file)
             .with_side_output("svd", &svd_file);
-            stats.push(coord.engine.run(&spec)?);
+            stats.push(coord.run_step(&spec)?);
         }
-        let r = read_small_matrix(coord.engine.dfs.get(&r2_file)?)?;
+        let r = coord.dfs(|d| d.get(&r2_file).and_then(read_small_matrix))?;
         ensure!(r.rows == n && r.cols == n, "R̃ is {}x{}", r.rows, r.cols);
         let svd = if opts.compute_svd {
             Some(read_svd_parts(coord, &svd_file)?)
@@ -322,7 +322,7 @@ fn direct_tsqr_level(
             cols: n,
             q2_cache: std::sync::Mutex::new(None),
         };
-        let q1_records = coord.engine.dfs.file_records(&q1_file)?;
+        let q1_records = coord.dfs(|d| d.file_records(&q1_file))?;
         let spec = JobSpec::map_only(
             &format!("direct-step3(d{depth})"),
             &q1_file,
@@ -332,7 +332,7 @@ fn direct_tsqr_level(
         )
         .with_side_input(&q2_file)
         .with_output_scale(data_scale);
-        stats.push(coord.engine.run(&spec)?);
+        stats.push(coord.run_step(&spec)?);
     }
 
     Ok(DirectOutput {
@@ -351,11 +351,10 @@ fn spill_r1_to_rows(
     out_file: &str,
     n: usize,
 ) -> Result<(crate::mapreduce::StepStats, usize)> {
-    let mut rows = Vec::new();
-    let mut read_bytes = 0u64;
-    {
-        let recs = coord.engine.dfs.get(r1_file)?;
-        for rec in recs {
+    let (rows, read_bytes) = coord.dfs(|dfs| -> Result<(Vec<Vec<u8>>, u64)> {
+        let mut rows = Vec::new();
+        let mut read_bytes = 0u64;
+        for rec in dfs.get(r1_file)? {
             read_bytes += rec.size_bytes();
             let (_, r_i) = decode_block(&rec.value)?;
             ensure!(r_i.cols == n, "R block width");
@@ -363,7 +362,8 @@ fn spill_r1_to_rows(
                 rows.push(encode_row(r_i.row(j)));
             }
         }
-    }
+        Ok((rows, read_bytes))
+    })?;
     let records: Vec<Record> = rows
         .into_iter()
         .enumerate()
@@ -371,8 +371,9 @@ fn spill_r1_to_rows(
         .collect();
     let nrows = records.len();
     let write_bytes: u64 = records.iter().map(|r| r.size_bytes()).sum();
-    coord.engine.dfs.put(out_file, records);
+    coord.dfs_mut(|dfs| dfs.put(out_file, records));
 
+    let model = coord.model();
     let mut s = crate::mapreduce::StepStats {
         name: "direct-spill".into(),
         map_tasks: 1,
@@ -380,23 +381,25 @@ fn spill_r1_to_rows(
     };
     s.map_io.add_read(read_bytes, 0);
     s.map_io.add_write(write_bytes, nrows as u64);
-    s.virtual_secs = coord.engine.model.read_secs(read_bytes)
-        + coord.engine.model.write_secs(write_bytes)
-        + coord.engine.model.task_startup_secs;
+    s.virtual_secs = model.read_secs(read_bytes)
+        + model.write_secs(write_bytes)
+        + model.task_startup_secs;
     Ok((s, nrows))
 }
 
 fn read_svd_parts(coord: &Coordinator, svd_file: &str) -> Result<SvdParts> {
-    let recs = coord.engine.dfs.get(svd_file)?;
-    let mut sigma = None;
-    let mut v = None;
-    for rec in recs {
-        match rec.key.as_slice() {
-            b"sigma" => sigma = Some(crate::dfs::records::decode_row(&rec.value)),
-            b"v" => v = Some(decode_block(&rec.value)?.1),
-            other => bail!("unexpected svd record key {other:?}"),
+    let (sigma, v) = coord.dfs(|dfs| -> Result<(Option<Vec<f64>>, Option<Matrix>)> {
+        let mut sigma = None;
+        let mut v = None;
+        for rec in dfs.get(svd_file)? {
+            match rec.key.as_slice() {
+                b"sigma" => sigma = Some(crate::dfs::records::decode_row(&rec.value)),
+                b"v" => v = Some(decode_block(&rec.value)?.1),
+                other => bail!("unexpected svd record key {other:?}"),
+            }
         }
-    }
+        Ok((sigma, v))
+    })?;
     Ok(SvdParts {
         sigma: sigma.ok_or_else(|| anyhow!("missing sigma record"))?,
         v: v.ok_or_else(|| anyhow!("missing V record"))?,
@@ -419,7 +422,7 @@ mod tests {
     }
 
     fn check_qr(a: &Matrix, coord: &Coordinator, out: &DirectOutput, tol: f64) {
-        let q = get_matrix(&coord.engine.dfs, &out.q.file, a.cols).unwrap();
+        let q = coord.dfs(|d| get_matrix(d, &out.q.file, a.cols)).unwrap();
         assert_eq!(q.rows, a.rows);
         assert!(q.orthogonality_error() < tol, "orth {}", q.orthogonality_error());
         let recon = a.sub(&q.matmul(&out.r)).frob_norm() / a.frob_norm();
@@ -446,7 +449,7 @@ mod tests {
         let a = matrix_with_condition(600, 10, 1e15, &mut rng);
         let (mut coord, h) = coord_with(&a);
         let out = direct_tsqr(&mut coord, &h, &DirectOpts::default()).unwrap();
-        let q = get_matrix(&coord.engine.dfs, &out.q.file, 10).unwrap();
+        let q = coord.dfs(|d| get_matrix(d, &out.q.file, 10)).unwrap();
         assert!(q.orthogonality_error() < 1e-13, "orth {}", q.orthogonality_error());
     }
 
@@ -477,7 +480,7 @@ mod tests {
             assert!((got / want - 1.0).abs() < 1e-10, "sigma {got} vs {want}");
         }
         // A = (QU) Σ Vᵀ
-        let qu = get_matrix(&coord.engine.dfs, &out.q.file, 5).unwrap();
+        let qu = coord.dfs(|d| get_matrix(d, &out.q.file, 5)).unwrap();
         assert!(qu.orthogonality_error() < 1e-12);
         let mut qus = qu.clone();
         for j in 0..5 {

@@ -99,8 +99,8 @@ fn leader_step2(
     q2_file: &str,
     n: usize,
 ) -> Result<(Matrix, StepStats)> {
-    let (blocks, read_bytes) = {
-        let recs = coord.engine.dfs.get(r1_file)?;
+    let (blocks, read_bytes) = coord.dfs(|dfs| -> Result<(Vec<(Vec<u8>, Matrix)>, u64)> {
+        let recs = dfs.get(r1_file)?;
         let mut blocks = Vec::with_capacity(recs.len());
         let mut bytes = 0u64;
         for rec in recs {
@@ -109,8 +109,8 @@ fn leader_step2(
             ensure!(r_i.cols == n, "R block width");
             blocks.push((rec.key.clone(), r_i));
         }
-        (blocks, bytes)
-    };
+        Ok((blocks, bytes))
+    })?;
     let refs: Vec<&Matrix> = blocks.iter().map(|(_, m)| m).collect();
     let stacked = Matrix::vstack(&refs);
     // in-memory factorization (serial Householder — the "MPI" stand-in)
@@ -126,14 +126,15 @@ fn leader_step2(
         out_records.push(rec);
         offset += r_i.rows;
     }
-    coord.engine.dfs.put(q2_file, out_records);
+    coord.dfs_mut(|dfs| dfs.put(q2_file, out_records));
 
+    let model = coord.model();
     let mut s = StepStats { name: "fused-step2(leader)".into(), map_tasks: 1, ..Default::default() };
     s.map_io.add_read(read_bytes, blocks.len() as u64);
     s.map_io.add_write(write_bytes, blocks.len() as u64);
-    s.virtual_secs = coord.engine.model.read_secs(read_bytes)
-        + coord.engine.model.write_secs(write_bytes)
-        + coord.engine.model.task_startup_secs;
+    s.virtual_secs = model.read_secs(read_bytes)
+        + model.write_secs(write_bytes)
+        + model.task_startup_secs;
     Ok((r, s))
 }
 
@@ -146,7 +147,7 @@ pub fn direct_tsqr_fused(
 ) -> Result<super::QrResult> {
     let n = input.cols;
     let mut stats = JobStats::default();
-    let data_scale = coord.engine.dfs.scale(&input.file);
+    let data_scale = coord.dfs(|d| d.scale(&input.file));
 
     // step 1: R factors only
     let r1_file = coord.tmp("fused-r1");
@@ -159,7 +160,7 @@ pub fn direct_tsqr_fused(
             &mapper,
             &r1_file,
         );
-        stats.push(coord.engine.run(&spec)?);
+        stats.push(coord.run_step(&spec)?);
     }
 
     // step 2: in-memory on the leader
@@ -184,7 +185,7 @@ pub fn direct_tsqr_fused(
         )
         .with_side_input(&q2_file)
         .with_output_scale(data_scale);
-        stats.push(coord.engine.run(&spec)?);
+        stats.push(coord.run_step(&spec)?);
     }
 
     Ok(super::QrResult {
@@ -217,7 +218,7 @@ mod tests {
         let (mut coord, h) = coord_with(&a);
         coord.opts.rows_per_task = 64;
         let res = direct_tsqr_fused(&mut coord, &h).unwrap();
-        let q = get_matrix(&coord.engine.dfs, &res.q.unwrap().file, 8).unwrap();
+        let q = coord.dfs(|d| get_matrix(d, &res.q.unwrap().file, 8)).unwrap();
         assert!(q.orthogonality_error() < 1e-12, "orth {}", q.orthogonality_error());
         assert!(a.sub(&q.matmul(&res.r)).frob_norm() / a.frob_norm() < 1e-12);
     }

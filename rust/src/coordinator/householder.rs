@@ -208,22 +208,21 @@ pub fn householder_r(
         let spec = JobSpec::map_reduce(
             "house-norm0", &input.file, map_tasks, &mapper, &reducer, 1, &stat_file,
         );
-        stats.push(coord.engine.run(&spec)?);
+        stats.push(coord.run_step(&spec)?);
     }
-    let (mut norm2, mut diag) = {
-        let recs = coord.engine.dfs.get(&stat_file)?;
+    let (mut norm2, mut diag) = coord.dfs(|dfs| -> Result<(f64, f64)> {
+        let recs = dfs.get(&stat_file)?;
         let v = decode_row(&recs[0].value);
-        (v[0], v[1])
-    };
+        Ok((v[0], v[1]))
+    })?;
 
     let mut current = input.file.clone();
     for j in 0..cols_to_run {
         let params = ColParams { j, alpha: alpha_from(norm2, diag) };
         let params_file = coord.tmp("house-params");
-        coord
-            .engine
-            .dfs
-            .put(&params_file, vec![Record::new(row_key(0), encode_params(&params))]);
+        coord.dfs_mut(|dfs| {
+            dfs.put(&params_file, vec![Record::new(row_key(0), encode_params(&params))])
+        });
 
         // pass A: w = Aᵀ v (+ vᵀv)
         let w_file = coord.tmp("house-w");
@@ -234,7 +233,7 @@ pub fn householder_r(
                 &format!("house-w{j}"), &current, map_tasks, &mapper, &reducer, 1, &w_file,
             )
             .with_side_input(&params_file);
-            stats.push(coord.engine.run(&spec)?);
+            stats.push(coord.run_step(&spec)?);
         }
 
         // pass B: update + rewrite + next-column stats
@@ -242,7 +241,7 @@ pub fn householder_r(
         let stat = coord.tmp("house-stat");
         {
             let mapper = UpdatePassMap;
-            let data_scale = coord.engine.dfs.scale(&current);
+            let data_scale = coord.dfs(|d| d.scale(&current));
             let spec = JobSpec::map_only(
                 &format!("house-update{j}"), &current, map_tasks, &mapper, &next,
             )
@@ -250,15 +249,15 @@ pub fn householder_r(
             .with_side_input(&w_file)
             .with_side_output("stat", &stat)
             .with_output_scale(data_scale);
-            stats.push(coord.engine.run(&spec)?);
+            stats.push(coord.run_step(&spec)?);
         }
         if j + 1 < n {
-            let (n2, d) = sum_stats(coord.engine.dfs.get(&stat)?);
+            let (n2, d) = coord.dfs(|dfs| dfs.get(&stat).map(sum_stats))?;
             norm2 = n2;
             diag = d;
         }
         if current != input.file {
-            coord.engine.dfs.delete(&current);
+            coord.dfs_mut(|dfs| dfs.delete(&current));
         }
         current = next;
     }
@@ -267,16 +266,19 @@ pub fn householder_r(
     // meaningful for full runs)
     let mut r = Matrix::zeros(n, n);
     if cols_to_run == n {
-        let recs = coord.engine.dfs.get(&current)?;
-        for rec in recs.iter().take(n) {
-            let i = super::io::parse_row_key(&rec.key)? as usize;
-            if i < n {
-                let row = decode_row(&rec.value);
-                for j in i..n {
-                    r[(i, j)] = row[j]; // below-diagonal residue is ~0
+        coord.dfs(|dfs| -> Result<()> {
+            let recs = dfs.get(&current)?;
+            for rec in recs.iter().take(n) {
+                let i = super::io::parse_row_key(&rec.key)? as usize;
+                if i < n {
+                    let row = decode_row(&rec.value);
+                    for j in i..n {
+                        r[(i, j)] = row[j]; // below-diagonal residue is ~0
+                    }
                 }
             }
-        }
+            Ok(())
+        })?;
         super::indirect_tsqr::normalize_r_signs(&mut Matrix::zeros(0, 0), &mut r);
     }
     Ok((r, stats))

@@ -125,13 +125,13 @@ pub fn indirect_r(coord: &mut Coordinator, input: &MatrixHandle) -> Result<(Matr
         coord.opts.reduce_tasks,
         &level1,
     );
-    stats.push(coord.engine.run(&spec)?);
+    stats.push(coord.run_step(&spec)?);
 
     // level 2: identity map + single reduce QR -> final R
     let level2 = coord.tmp("indirect-r2");
     let id = IdentityMap;
     let reducer2 = StackQrReduce { compute: coord.compute, cols: n };
-    let records = coord.engine.dfs.file_records(&level1)?;
+    let records = coord.dfs(|d| d.file_records(&level1))?;
     let spec2 = JobSpec::map_reduce(
         "indirect-level2",
         &level1,
@@ -141,9 +141,9 @@ pub fn indirect_r(coord: &mut Coordinator, input: &MatrixHandle) -> Result<(Matr
         1,
         &level2,
     );
-    stats.push(coord.engine.run(&spec2)?);
+    stats.push(coord.run_step(&spec2)?);
 
-    let mut r = read_small_matrix(coord.engine.dfs.get(&level2)?)?;
+    let mut r = coord.dfs(|d| d.get(&level2).and_then(read_small_matrix))?;
     ensure!(r.rows == n && r.cols == n, "final R is {}x{}", r.rows, r.cols);
     // normalize diag(R) >= 0 so results are comparable across trees
     let mut dummy_q = Matrix::zeros(0, 0);
@@ -176,8 +176,8 @@ pub fn indirect_r_single_level(
         1,
         &out,
     );
-    stats.push(coord.engine.run(&spec)?);
-    let mut r = read_small_matrix(coord.engine.dfs.get(&out)?)?;
+    stats.push(coord.run_step(&spec)?);
+    let mut r = coord.dfs(|d| d.get(&out).and_then(read_small_matrix))?;
     ensure!(r.rows == n && r.cols == n, "final R is {}x{}", r.rows, r.cols);
     normalize_r_signs(&mut Matrix::zeros(0, 0), &mut r);
     Ok((r, stats))

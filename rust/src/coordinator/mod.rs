@@ -24,11 +24,14 @@ pub mod io;
 
 pub use direct_tsqr::{DirectOpts, DirectOutput, SvdParts};
 
+use crate::dfs::{Dfs, DiskModel};
 use crate::linalg::Matrix;
-use crate::mapreduce::{Engine, JobStats};
+use crate::mapreduce::{Engine, JobSpec, JobStats, StepStats};
 use crate::perfmodel::AlgoKind;
 use crate::runtime::BlockCompute;
+use crate::util::rng::Rng;
 use anyhow::{bail, Result};
+use std::sync::{Mutex, MutexGuard};
 
 /// A tall-and-skinny matrix stored in the DFS (row records keyed by
 /// 32-byte global row ids).
@@ -146,19 +149,80 @@ impl Default for CoordOpts {
     }
 }
 
-/// The coordinator: owns the engine, borrows the block-compute backend.
+/// How a [`Coordinator`] reaches its engine: exclusively owned (the
+/// single-session path — identical semantics to the pre-service code),
+/// or shared behind a `Mutex` with every other in-flight job of a
+/// [`crate::service::TsqrService`] cluster. In the shared case the lock
+/// is taken per *step* (one engine job, one DFS access), never across a
+/// whole factorization, so concurrent jobs interleave their MapReduce
+/// iterations on the common DFS.
+enum EngineRef<'c> {
+    /// Boxed to keep the variant pointer-sized next to `Shared`.
+    Owned(Box<Engine>),
+    Shared(&'c Mutex<Engine>),
+}
+
+/// Lock a shared engine, recovering from poison: the engine's state is
+/// consistent between steps (a panicking job dies between two `run`
+/// calls from the lock's perspective), and one job's panic must not
+/// wedge every other job — or the owning service's accessors — on the
+/// cluster.
+pub(crate) fn lock_engine(m: &Mutex<Engine>) -> MutexGuard<'_, Engine> {
+    m.lock().unwrap_or_else(|poison| poison.into_inner())
+}
+
+/// The coordinator: drives one factorization's pipelines against an
+/// engine (owned, or shared with other in-flight jobs) and a borrowed
+/// block-compute backend.
 pub struct Coordinator<'c> {
-    pub engine: Engine,
+    engine: EngineRef<'c>,
     pub compute: &'c dyn BlockCompute,
     pub opts: CoordOpts,
     /// Temp-file counter; [`crate::session`] threads it across requests
     /// so handles returned by earlier factorizations stay valid.
     pub(crate) seq: usize,
+    /// DFS namespace prefix for every temp file this coordinator names
+    /// (`job-<id>/` for service jobs, a session's configured namespace,
+    /// or `""`). Keeps concurrent requests over one shared DFS from
+    /// clobbering each other's intermediates.
+    ns: String,
+    /// Per-job fault stream. `None`: draws come from the engine's own
+    /// RNG (single-session behavior, state threading across requests).
+    /// `Some`: draws come from this job-private RNG, making them
+    /// independent of how concurrent jobs interleave.
+    fault_rng: Option<Rng>,
+    /// Cached copy of the engine's disk model for leader-step cost
+    /// formulas (avoids re-locking a shared engine for plain reads).
+    model: DiskModel,
 }
 
 impl<'c> Coordinator<'c> {
     pub fn new(engine: Engine, compute: &'c dyn BlockCompute) -> Self {
-        Coordinator { engine, compute, opts: CoordOpts::default(), seq: 0 }
+        let model = engine.model;
+        Coordinator {
+            engine: EngineRef::Owned(Box::new(engine)),
+            compute,
+            opts: CoordOpts::default(),
+            seq: 0,
+            ns: String::new(),
+            fault_rng: None,
+            model,
+        }
+    }
+
+    /// A coordinator over a cluster-shared engine (see
+    /// [`crate::service::TsqrService`]). The mutex is locked per step.
+    pub fn shared(engine: &'c Mutex<Engine>, compute: &'c dyn BlockCompute) -> Self {
+        let model = lock_engine(engine).model;
+        Coordinator {
+            engine: EngineRef::Shared(engine),
+            compute,
+            opts: CoordOpts::default(),
+            seq: 0,
+            ns: String::new(),
+            fault_rng: None,
+            model,
+        }
     }
 
     pub fn with_opts(mut self, opts: CoordOpts) -> Self {
@@ -166,10 +230,74 @@ impl<'c> Coordinator<'c> {
         self
     }
 
-    /// Fresh temp-file name.
+    /// Prefix every temp-file name with `ns` (the per-job / per-session
+    /// DFS namespace).
+    pub fn with_namespace(mut self, ns: impl Into<String>) -> Self {
+        self.ns = ns.into();
+        self
+    }
+
+    /// Draw fault outcomes from a job-private RNG instead of the
+    /// engine's internal one (see [`Engine::run_with_rng`]).
+    pub fn with_fault_rng(mut self, rng: Rng) -> Self {
+        self.fault_rng = Some(rng);
+        self
+    }
+
+    /// Run a closure with exclusive access to the engine (locks the
+    /// cluster mutex on the shared path — keep the closure to one
+    /// step's worth of work).
+    pub fn with_engine<T>(&mut self, f: impl FnOnce(&mut Engine) -> T) -> T {
+        match &mut self.engine {
+            EngineRef::Owned(e) => f(e),
+            EngineRef::Shared(m) => f(&mut lock_engine(m)),
+        }
+    }
+
+    /// Read-only DFS access (locks the cluster mutex on the shared
+    /// path for the closure's duration).
+    pub fn dfs<T>(&self, f: impl FnOnce(&Dfs) -> T) -> T {
+        match &self.engine {
+            EngineRef::Owned(e) => f(&e.dfs),
+            EngineRef::Shared(m) => f(&lock_engine(m).dfs),
+        }
+    }
+
+    /// Mutable DFS access (same locking discipline as [`Self::dfs`]).
+    pub fn dfs_mut<T>(&mut self, f: impl FnOnce(&mut Dfs) -> T) -> T {
+        self.with_engine(|e| f(&mut e.dfs))
+    }
+
+    /// The engine's disk model (cached — no lock).
+    pub fn model(&self) -> DiskModel {
+        self.model
+    }
+
+    /// Run one MapReduce step on the engine, drawing faults from the
+    /// job-private stream when one is set.
+    pub fn run_step(&mut self, spec: &JobSpec) -> Result<StepStats> {
+        let mut rng = self.fault_rng.take();
+        let out = self.with_engine(|e| match rng.as_mut() {
+            Some(r) => e.run_with_rng(spec, r),
+            None => e.run(spec),
+        });
+        self.fault_rng = rng;
+        out
+    }
+
+    /// Take the engine back out (single-session check-in; panics for
+    /// cluster-shared coordinators, which never owned it).
+    pub(crate) fn into_engine(self) -> Engine {
+        match self.engine {
+            EngineRef::Owned(e) => *e,
+            EngineRef::Shared(_) => panic!("shared coordinators do not own their engine"),
+        }
+    }
+
+    /// Fresh temp-file name inside this coordinator's namespace.
     pub(crate) fn tmp(&mut self, tag: &str) -> String {
         self.seq += 1;
-        format!("tmp/{}-{:04}", tag, self.seq)
+        format!("{}tmp/{}-{:04}", self.ns, tag, self.seq)
     }
 
     pub(crate) fn map_tasks_for(&self, rows: usize) -> usize {
@@ -259,5 +387,74 @@ mod tests {
         assert!(Algorithm::parse("").is_err());
         // `auto` is a session-layer concept, not a fixed algorithm
         assert!(Algorithm::parse("auto").is_err());
+    }
+
+    #[test]
+    fn lock_engine_recovers_from_a_poisoned_cluster() {
+        // a panicking job must not wedge other jobs or the service's
+        // accessors: lock_engine strips the poison
+        use crate::dfs::DiskModel;
+        use crate::mapreduce::ClusterConfig;
+        let m = Mutex::new(Engine::new(DiskModel::icme_like(), ClusterConfig::default()));
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = m.lock().unwrap();
+            panic!("job dies while holding the engine");
+        }));
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        let engine = lock_engine(&m);
+        assert_eq!(engine.cluster.map_slots, 40, "engine reachable after poison");
+    }
+
+    #[test]
+    fn tmp_names_carry_the_namespace() {
+        use crate::dfs::DiskModel;
+        use crate::mapreduce::ClusterConfig;
+        use crate::runtime::NativeRuntime;
+        let engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
+        let mut c = Coordinator::new(engine, &NativeRuntime).with_namespace("job-7/");
+        assert_eq!(c.tmp("x"), "job-7/tmp/x-0001");
+        assert_eq!(c.tmp("x"), "job-7/tmp/x-0002");
+    }
+
+    /// The latent collision the job service fixes: two request streams
+    /// over ONE shared DFS both start their temp counters at zero, so
+    /// without namespaces the second stream overwrites the first one's
+    /// intermediates (and any Q handle pointing at them). Distinct
+    /// namespaces keep every handle intact.
+    #[test]
+    fn namespaces_prevent_shared_dfs_temp_collisions() {
+        use crate::dfs::DiskModel;
+        use crate::mapreduce::ClusterConfig;
+        use crate::runtime::NativeRuntime;
+        use crate::util::rng::Rng;
+        use crate::workload::{get_matrix, put_matrix};
+
+        let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
+        let mut rng = Rng::new(5);
+        let a = Matrix::gaussian(200, 4, &mut rng);
+        put_matrix(&mut engine.dfs, "A", &a);
+        let h = MatrixHandle::new("A", a.rows, a.cols);
+        let shared = Mutex::new(engine);
+
+        // two independent "jobs", same request, same fresh seq counter
+        let run = |ns: &str| {
+            let mut c = Coordinator::shared(&shared, &NativeRuntime).with_namespace(ns);
+            c.qr(&h, Algorithm::DirectTsqr).unwrap()
+        };
+        let res0 = run("job-0/");
+        let q0_file = res0.q.as_ref().unwrap().file.clone();
+        let q0 = {
+            let e = shared.lock().unwrap();
+            get_matrix(&e.dfs, &q0_file, a.cols).unwrap()
+        };
+        let res1 = run("job-1/");
+        assert_ne!(q0_file, res1.q.as_ref().unwrap().file, "temp names must not collide");
+        // job 0's Q is still byte-identical after job 1 ran: with a
+        // shared namespace (the old `tmp/...` scheme) job 1's identical
+        // seq-derived names would have overwritten it
+        let e = shared.lock().unwrap();
+        let q0_again = get_matrix(&e.dfs, &q0_file, a.cols).unwrap();
+        assert_eq!(q0.data, q0_again.data);
+        assert!(q0.orthogonality_error() < 1e-12);
     }
 }

@@ -66,6 +66,23 @@ impl Dfs {
         self.files.remove(name).is_some()
     }
 
+    /// Delete every file whose name starts with `prefix` (a namespace
+    /// sweep — e.g. `job-3/` evicts one service job's intermediates).
+    /// Returns the number of files removed.
+    pub fn delete_prefix(&mut self, prefix: &str) -> usize {
+        let names: Vec<String> = self
+            .files
+            .range(prefix.to_string()..)
+            .take_while(|(name, _)| name.starts_with(prefix))
+            .map(|(name, _)| name.clone())
+            .collect();
+        for name in &names {
+            self.files.remove(name);
+            self.scales.remove(name);
+        }
+        names.len()
+    }
+
     pub fn get(&self, name: &str) -> Result<&[Record]> {
         match self.files.get(name) {
             Some(recs) => Ok(recs),
@@ -211,5 +228,24 @@ mod tests {
         assert!(dfs.delete("a"));
         assert!(!dfs.delete("a"));
         assert!(!dfs.exists("a"));
+    }
+
+    #[test]
+    fn delete_prefix_sweeps_a_namespace() {
+        let mut dfs = Dfs::new();
+        dfs.put("job-1/tmp/a", mk_records(1, 1));
+        dfs.put("job-1/tmp/b", mk_records(1, 1));
+        dfs.set_scale("job-1/tmp/b", 5.0);
+        dfs.put("job-10/tmp/a", mk_records(1, 1));
+        dfs.put("job-2/tmp/a", mk_records(1, 1));
+        dfs.put("A", mk_records(1, 1));
+        assert_eq!(dfs.delete_prefix("job-1/"), 2);
+        assert!(!dfs.exists("job-1/tmp/a"));
+        assert_eq!(dfs.scale("job-1/tmp/b"), 1.0, "scale entry swept too");
+        // `job-1/` must not catch `job-10/`
+        assert!(dfs.exists("job-10/tmp/a"));
+        assert!(dfs.exists("job-2/tmp/a"));
+        assert!(dfs.exists("A"));
+        assert_eq!(dfs.delete_prefix("job-9/"), 0);
     }
 }

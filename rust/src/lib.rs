@@ -4,9 +4,21 @@
 //! *"Direct QR factorizations for tall-and-skinny matrices in MapReduce
 //! architectures"* (IEEE BigData 2013).
 //!
-//! The system is a four-layer stack:
+//! The system is a five-layer stack:
 //!
-//! * **L4 ([`session`]) — the public API.** A [`session::TsqrSession`]
+//! * **L5 ([`service`]) — the serving layer.** A
+//!   [`service::TsqrService`] (built from the same
+//!   [`session::SessionBuilder`] via
+//!   [`session::SessionBuilder::build_service`]) turns the one-caller
+//!   session into a concurrent job service: `submit(&handle, request)`
+//!   returns a [`service::JobHandle`] immediately, a bounded
+//!   priority-FIFO queue feeds worker threads that interleave jobs
+//!   step-by-step over one lock-guarded cluster (shared engine + DFS +
+//!   backend), per-job `job-<id>/` DFS namespaces keep concurrent
+//!   intermediates collision-free, and results are bit-identical to
+//!   serial execution. The `mrtsqr batch` subcommand drives it from a
+//!   manifest.
+//! * **L4 ([`session`]) — the single-caller API.** A [`session::TsqrSession`]
 //!   built fluently ([`session::TsqrSession::builder`]) bundles the
 //!   cluster, disk model, fault policy, compute backend, and tuning
 //!   knobs; matrices stream in through `ingest*` without materializing;
@@ -65,10 +77,12 @@ pub mod linalg;
 pub mod mapreduce;
 pub mod perfmodel;
 pub mod runtime;
+pub mod service;
 pub mod session;
 pub mod util;
 pub mod workload;
 
 pub use coordinator::{Algorithm, Coordinator, MatrixHandle};
 pub use linalg::Matrix;
-pub use session::{Backend, Factorization, FactorizationRequest, TsqrSession};
+pub use service::{JobHandle, JobId, JobStatus, TsqrService};
+pub use session::{Backend, Factorization, FactorizationRequest, Priority, TsqrSession};

@@ -4,25 +4,29 @@
 //! mrtsqr qr        --rows 100000 --cols 25 --algo auto [--pjrt] [--condition 1e8]
 //! mrtsqr svd       --rows 50000  --cols 10 [--pjrt]
 //! mrtsqr sigma     --rows 50000  --cols 10            # singular values only
+//! mrtsqr batch     --manifest jobs.txt --jobs 4       # concurrent job service
 //! mrtsqr stability --rows 5000   --cols 50            # Fig. 6 sweep
 //! mrtsqr faults    --rows 80000  --cols 10 --prob 0.125  # Fig. 7 point
 //! mrtsqr model     --beta-r 64 --beta-w 126            # Tables III-V
 //! mrtsqr info                                          # artifact manifest
 //! ```
 //!
-//! Everything runs through the [`mrtsqr::session`] layer; `--algo`
-//! accepts the seven fixed algorithm names plus `auto` (condition-aware
-//! selection, the default).
+//! Everything runs through the [`mrtsqr::session`] layer (`batch`
+//! through the [`mrtsqr::service`] job service); `--algo` accepts the
+//! seven fixed algorithm names plus `auto` (condition-aware selection,
+//! the default).
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use mrtsqr::coordinator::{Algorithm, MatrixHandle};
 use mrtsqr::dfs::DiskModel;
 use mrtsqr::linalg::matrix_with_condition;
 use mrtsqr::mapreduce::{ClusterConfig, FaultPolicy};
 use mrtsqr::perfmodel::{lower_bound_secs, AlgoKind, StageParallelism, WorkloadShape};
 use mrtsqr::runtime::Manifest;
+use mrtsqr::service::parse_manifest;
 use mrtsqr::session::{AlgoChoice, Backend, FactorizationRequest, SessionBuilder, TsqrSession};
 use mrtsqr::util::cli::Args;
+use mrtsqr::util::json::Json;
 use mrtsqr::util::rng::Rng;
 use mrtsqr::util::table::{commas, sci, Table};
 
@@ -131,6 +135,136 @@ fn cmd_sigma(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run a manifest of factorization requests concurrently through one
+/// [`mrtsqr::service::TsqrService`], printing per-job stats plus
+/// aggregate throughput. `--jobs N` sets the worker count (default 4),
+/// `--serial` drains the queue on one thread instead (the baseline the
+/// aggregate numbers are compared against), `--json PATH` additionally
+/// writes the report as JSON.
+fn cmd_batch(args: &Args) -> Result<()> {
+    let manifest_path = args
+        .get("manifest")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+        .context("batch wants a manifest: mrtsqr batch --manifest jobs.txt")?;
+    let text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading manifest {manifest_path:?}"))?;
+    let entries = parse_manifest(&text)?;
+    let serial = args.flag("serial");
+    let workers = if serial { 0 } else { args.get_usize("jobs", 4).max(1) };
+
+    // serial mode has no workers draining during submission, so the
+    // queue must hold the whole manifest or submit() would block forever
+    let queue = args.get_usize("queue", 64).max(if serial { entries.len() } else { 1 });
+    let svc = session_builder(args)
+        .service_workers(workers)
+        .queue_capacity(queue)
+        .build_service()?;
+    println!(
+        "service        : backend={} workers={} queue-capacity={}",
+        svc.backend_desc(),
+        svc.workers(),
+        svc.capacity()
+    );
+
+    // stage every input first, then submit the whole manifest: the
+    // queue drains while later jobs are still being submitted
+    let inputs: Vec<MatrixHandle> = entries
+        .iter()
+        .map(|e| svc.ingest_gaussian(&e.name, e.rows, e.cols, e.seed))
+        .collect::<Result<_>>()?;
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = entries
+        .iter()
+        .zip(&inputs)
+        .map(|(e, h)| svc.submit(h, e.request()))
+        .collect::<Result<_>>()?;
+    if serial {
+        svc.drain_now();
+    }
+
+    let mut table = Table::new(
+        "Batch report (wall = running->done, queue wait excluded)",
+        &["job", "label", "request", "priority", "status", "virtual (s)", "wall (s)"],
+    );
+    let mut job_rows = Vec::new();
+    let (mut sum_wall, mut sum_virtual, mut failed) = (0.0f64, 0.0f64, 0usize);
+    for (entry, handle) in entries.iter().zip(&handles) {
+        let (status, virt) = match handle.wait() {
+            Ok(fact) => {
+                (format!("done ({})", fact.algorithm.cli_name()), fact.stats.virtual_secs())
+            }
+            Err(err) => {
+                failed += 1;
+                (format!("FAILED: {err:#}"), 0.0)
+            }
+        };
+        // failed-while-running jobs report their measured wall too;
+        // only cancelled/never-ran jobs fall back to 0
+        let wall = handle.wall_secs().unwrap_or(0.0);
+        sum_wall += wall;
+        sum_virtual += virt;
+        table.row(&[
+            handle.id().to_string(),
+            entry.name.clone(),
+            entry.describe(),
+            entry.priority.name().into(),
+            status.clone(),
+            format!("{virt:.1}"),
+            format!("{wall:.3}"),
+        ]);
+        job_rows.push(Json::obj([
+            ("id", Json::num(handle.id().0 as f64)),
+            ("label", Json::str(&entry.name)),
+            ("request", Json::str(entry.describe())),
+            ("priority", Json::str(entry.priority.name())),
+            ("status", Json::str(status)),
+            ("virtual_secs", Json::num(virt)),
+            ("wall_secs", Json::num(wall)),
+        ]));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    table.print();
+
+    let jobs = handles.len();
+    println!("jobs           : {jobs} submitted, {failed} failed");
+    println!("sum job wall   : {sum_wall:.3} s");
+    println!("aggregate wall : {elapsed:.3} s (submit -> all done)");
+    if sum_wall > 0.0 {
+        println!(
+            "overlap        : {:.2}x (sum of per-job walls / aggregate wall{})",
+            sum_wall / elapsed,
+            if workers > 1 { "; >1 means jobs genuinely ran concurrently" } else { "" }
+        );
+    }
+    println!("throughput     : {:.2} jobs/s", jobs as f64 / elapsed.max(1e-9));
+    println!("virtual total  : {sum_virtual:.1} s");
+
+    if let Some(path) = args.get("json") {
+        let report = Json::obj([
+            ("manifest", Json::str(&manifest_path)),
+            ("workers", Json::num(workers as f64)),
+            ("host_threads", Json::num(svc.host_threads() as f64)),
+            ("jobs", Json::num(jobs as f64)),
+            ("failed", Json::num(failed as f64)),
+            ("sum_job_wall_secs", Json::num(sum_wall)),
+            ("aggregate_wall_secs", Json::num(elapsed)),
+            ("throughput_jobs_per_sec", Json::num(jobs as f64 / elapsed.max(1e-9))),
+            ("virtual_secs_total", Json::num(sum_virtual)),
+            ("per_job", Json::Arr(job_rows)),
+        ]);
+        std::fs::write(path, report.render() + "\n")
+            .with_context(|| format!("writing {path:?}"))?;
+        println!("json report    : {path}");
+    }
+    // a failed job is a failed batch: CI smoke must go red, not just
+    // print FAILED rows
+    if failed > 0 {
+        anyhow::bail!("{failed} of {jobs} batch jobs failed");
+    }
+    Ok(())
+}
+
 fn cmd_stability(args: &Args) -> Result<()> {
     let rows = args.get_usize("rows", 5000);
     let cols = args.get_usize("cols", 50);
@@ -224,11 +358,13 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|stability|faults|model|info> [options]
+const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|batch|stability|faults|model|info> [options]
   common options: --rows N --cols N --seed N --pjrt
                   --algo <auto|cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder>
                   --beta-r s/GB --beta-w s/GB --byte-scale X
                   --host-threads N   (worker threads for task bodies; results identical for any N)
+  batch options:  --manifest FILE --jobs N --queue N [--serial] [--json PATH]
+                  (manifest lines: name rows cols seed <qr|r|svd|sigma> <algo> [low|normal|high])
   see README.md for the full list";
 
 fn main() -> Result<()> {
@@ -237,6 +373,7 @@ fn main() -> Result<()> {
         Some("qr") => cmd_qr(&args),
         Some("svd") => cmd_svd(&args),
         Some("sigma") => cmd_sigma(&args),
+        Some("batch") => cmd_batch(&args),
         Some("stability") => cmd_stability(&args),
         Some("faults") => cmd_faults(&args),
         Some("model") => cmd_model(&args),

@@ -142,6 +142,9 @@ where
         .collect()
 }
 
+/// Default seed of the engine's fault RNG when no fault policy is set.
+const DEFAULT_FAULT_SEED: u64 = 0x7153_71A5_u64;
+
 /// The engine: DFS + disk model + cluster + fault policy.
 pub struct Engine {
     pub dfs: Dfs,
@@ -149,6 +152,7 @@ pub struct Engine {
     pub cluster: ClusterConfig,
     pub faults: FaultPolicy,
     rng: Rng,
+    fault_seed: u64,
 }
 
 impl Engine {
@@ -158,22 +162,33 @@ impl Engine {
             model,
             cluster,
             faults: FaultPolicy::none(),
-            rng: Rng::new(0x7153_71A5_u64),
+            rng: Rng::new(DEFAULT_FAULT_SEED),
+            fault_seed: DEFAULT_FAULT_SEED,
         }
     }
 
     pub fn with_faults(mut self, faults: FaultPolicy, seed: u64) -> Self {
         self.faults = faults;
         self.rng = Rng::new(seed);
+        self.fault_seed = seed;
         self
     }
 
-    /// Fault outcome for one task, forked from the engine RNG. Always
-    /// called in task-id order (before any wave is dispatched) so the
-    /// draw sequence is independent of the host pool size.
-    fn draw_task_outcome(&mut self, stream: u64) -> AttemptOutcome {
-        let mut task_rng = self.rng.fork(stream);
-        draw_attempts(&self.faults, &mut task_rng)
+    /// The seed the engine's internal fault RNG was built from. The job
+    /// service derives an *independent* per-job fault stream from this
+    /// (`Rng` handed to [`Engine::run_with_rng`]), so concurrent jobs
+    /// sharing one engine draw faults deterministically regardless of
+    /// how their steps interleave.
+    pub fn fault_seed(&self) -> u64 {
+        self.fault_seed
+    }
+
+    /// Fault outcome for one task, forked from `rng`. Always called in
+    /// task-id order (before any wave is dispatched) so the draw
+    /// sequence is independent of the host pool size.
+    fn draw_task_outcome(faults: &FaultPolicy, rng: &mut Rng, stream: u64) -> AttemptOutcome {
+        let mut task_rng = rng.fork(stream);
+        draw_attempts(faults, &mut task_rng)
     }
 
     /// Virtual write cost of one task's emissions under the job's
@@ -194,7 +209,22 @@ impl Engine {
     }
 
     /// Run one MapReduce job; outputs land in the DFS, metrics returned.
+    /// Fault outcomes draw from the engine's own RNG, whose state
+    /// threads across successive `run` calls (the single-session
+    /// behavior).
     pub fn run(&mut self, spec: &JobSpec) -> Result<StepStats> {
+        let mut rng = self.rng.clone();
+        let out = self.run_with_rng(spec, &mut rng);
+        self.rng = rng;
+        out
+    }
+
+    /// Like [`Engine::run`], but drawing fault outcomes from an
+    /// explicit RNG. The concurrent job service gives every job its own
+    /// stream (derived from [`Engine::fault_seed`] and the job id), so
+    /// fault draws stay deterministic however concurrent jobs interleave
+    /// their steps on the shared engine.
+    pub fn run_with_rng(&mut self, spec: &JobSpec, fault_rng: &mut Rng) -> Result<StepStats> {
         let wall_start = Instant::now();
         let mut stats = StepStats { name: spec.name.clone(), ..Default::default() };
 
@@ -220,7 +250,7 @@ impl Engine {
         // fault draws first, in task-id order (see draw_task_outcome)
         let mut map_outcomes = Vec::with_capacity(splits.len());
         for task_id in 0..splits.len() {
-            let outcome = self.draw_task_outcome(task_id as u64);
+            let outcome = Self::draw_task_outcome(&self.faults, fault_rng, task_id as u64);
             if !outcome.succeeded {
                 bail!("job {:?}: map task {task_id} exceeded max attempts", spec.name);
             }
@@ -296,7 +326,8 @@ impl Engine {
                 if part.is_empty() {
                     continue;
                 }
-                let outcome = self.draw_task_outcome(0x8000_0000 + rid as u64);
+                let outcome =
+                    Self::draw_task_outcome(&self.faults, fault_rng, 0x8000_0000 + rid as u64);
                 if !outcome.succeeded {
                     bail!("job {:?}: reduce task {rid} exceeded max attempts", spec.name);
                 }
@@ -680,6 +711,43 @@ mod tests {
         assert_steps_deterministic(&s1, &s8);
         assert_eq!(s1.host_threads, 1);
         assert!(s8.host_threads > 1);
+    }
+
+    #[test]
+    fn explicit_fault_rng_is_independent_of_engine_state() {
+        // the job service hands each job its own RNG: the draws must
+        // depend only on that RNG, not on how many runs the engine's
+        // internal RNG has served in between
+        let policy = FaultPolicy { probability: 0.3, max_attempts: 16, waste_fraction: 0.5 };
+        let run_with = |warmup_runs: usize| {
+            let mut e = engine_with_input(64, 2);
+            e = Engine {
+                dfs: std::mem::take(&mut e.dfs),
+                ..Engine::new(DiskModel::icme_like(), ClusterConfig::default())
+            }
+            .with_faults(policy, 11);
+            let m = ColMap;
+            let spec = JobSpec::map_only("warm", "input", 16, &m, "out");
+            for _ in 0..warmup_runs {
+                e.run(&spec).unwrap(); // advances the *internal* rng
+            }
+            let spec = JobSpec::map_only("probe", "input", 16, &m, "out2");
+            let mut job_rng = Rng::new(0xDEAD_BEEF);
+            e.run_with_rng(&spec, &mut job_rng).unwrap()
+        };
+        let a = run_with(0);
+        let b = run_with(3);
+        assert_eq!(a.map_attempts, b.map_attempts, "explicit stream drifted");
+        assert_eq!(a.faults, b.faults);
+        assert_eq!(a.virtual_secs.to_bits(), b.virtual_secs.to_bits());
+    }
+
+    #[test]
+    fn fault_seed_is_recorded() {
+        let e = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
+        assert_eq!(e.fault_seed(), super::DEFAULT_FAULT_SEED);
+        let e = e.with_faults(FaultPolicy::none(), 42);
+        assert_eq!(e.fault_seed(), 42);
     }
 
     #[test]

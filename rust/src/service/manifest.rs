@@ -1,0 +1,174 @@
+//! Batch-job manifests for `mrtsqr batch`.
+//!
+//! One job per line, whitespace-separated, `#` comments:
+//!
+//! ```text
+//! # name  rows   cols  seed  want   algo     [priority]
+//! A1      40000  10    1     qr     auto
+//! A2      80000  25    2     svd    direct   high
+//! A3      40000  10    3     r      auto     low
+//! A4      20000  8     4     sigma  indirect
+//! ```
+//!
+//! `want`: `qr` | `r` | `svd` | `sigma`; `algo`: `auto` or any fixed
+//! CLI algorithm name ([`Algorithm::parse`]); `priority` defaults to
+//! `normal`.
+
+use crate::coordinator::Algorithm;
+use crate::session::{AlgoChoice, FactorizationRequest, Priority, Want};
+use anyhow::{bail, Context, Result};
+
+/// One parsed manifest line: the input to generate and the request to
+/// run on it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchEntry {
+    /// Input name (also the job's report label).
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// Gaussian-ingestion seed.
+    pub seed: u64,
+    pub want: Want,
+    pub algo: AlgoChoice,
+    pub priority: Priority,
+}
+
+impl BatchEntry {
+    /// The service request this entry describes.
+    pub fn request(&self) -> FactorizationRequest {
+        let base = match self.want {
+            Want::Qr => FactorizationRequest::qr(),
+            Want::ROnly => FactorizationRequest::r_only(),
+            Want::Svd => FactorizationRequest::svd(),
+            Want::SingularValues => FactorizationRequest::singular_values(),
+        };
+        let base = match self.algo {
+            AlgoChoice::Auto => base.auto(),
+            AlgoChoice::Fixed(algo) => base.with_algorithm(algo),
+        };
+        base.with_priority(self.priority).labeled(self.name.clone())
+    }
+
+    /// Short human-readable request description for report tables.
+    pub fn describe(&self) -> String {
+        let want = match self.want {
+            Want::Qr => "qr",
+            Want::ROnly => "r",
+            Want::Svd => "svd",
+            Want::SingularValues => "sigma",
+        };
+        let algo = match self.algo {
+            AlgoChoice::Auto => "auto".to_string(),
+            AlgoChoice::Fixed(a) => a.cli_name().to_string(),
+        };
+        format!("{want}/{algo}")
+    }
+}
+
+fn parse_want(s: &str) -> Result<Want> {
+    Ok(match s {
+        "qr" => Want::Qr,
+        "r" | "r-only" => Want::ROnly,
+        "svd" => Want::Svd,
+        "sigma" | "singular-values" => Want::SingularValues,
+        other => bail!("unknown want {other:?} (qr|r|svd|sigma)"),
+    })
+}
+
+fn parse_algo(s: &str) -> Result<AlgoChoice> {
+    if s == "auto" {
+        return Ok(AlgoChoice::Auto);
+    }
+    Ok(AlgoChoice::Fixed(Algorithm::parse(s)?))
+}
+
+fn parse_line(fields: &[&str]) -> Result<BatchEntry> {
+    if !(6..=7).contains(&fields.len()) {
+        bail!(
+            "expected `name rows cols seed want algo [priority]`, got {} fields",
+            fields.len()
+        );
+    }
+    Ok(BatchEntry {
+        name: fields[0].to_string(),
+        rows: fields[1].parse().context("rows")?,
+        cols: fields[2].parse().context("cols")?,
+        seed: fields[3].parse().context("seed")?,
+        want: parse_want(fields[4])?,
+        algo: parse_algo(fields[5])?,
+        priority: match fields.get(6) {
+            Some(p) => Priority::parse(p)?,
+            None => Priority::Normal,
+        },
+    })
+}
+
+/// Parse a whole manifest. Blank lines and `#` comments are skipped;
+/// errors name the offending line.
+pub fn parse_manifest(text: &str) -> Result<Vec<BatchEntry>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        let entry = parse_line(&fields)
+            .with_context(|| format!("manifest line {}: {line:?}", lineno + 1))?;
+        out.push(entry);
+    }
+    if out.is_empty() {
+        bail!("manifest has no jobs");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_doc_example() {
+        let text = "\
+# name  rows   cols  seed  want   algo     [priority]
+A1      40000  10    1     qr     auto
+A2      80000  25    2     svd    direct   high
+
+A3      40000  10    3     r      auto     low   # trailing comment
+A4      20000  8     4     sigma  indirect
+";
+        let jobs = parse_manifest(text).unwrap();
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs[0].name, "A1");
+        assert_eq!(jobs[0].want, Want::Qr);
+        assert_eq!(jobs[0].algo, AlgoChoice::Auto);
+        assert_eq!(jobs[0].priority, Priority::Normal);
+        assert_eq!(jobs[1].algo, AlgoChoice::Fixed(Algorithm::DirectTsqr));
+        assert_eq!(jobs[1].priority, Priority::High);
+        assert_eq!(jobs[2].want, Want::ROnly);
+        assert_eq!(jobs[2].priority, Priority::Low);
+        assert_eq!(jobs[3].want, Want::SingularValues);
+        assert_eq!(jobs[3].describe(), "sigma/indirect");
+    }
+
+    #[test]
+    fn entry_builds_a_labeled_prioritized_request() {
+        let e = parse_manifest("hot 100 4 7 qr direct high").unwrap().remove(0);
+        let req = e.request();
+        assert_eq!(req.want, Want::Qr);
+        assert_eq!(req.algo, AlgoChoice::Fixed(Algorithm::DirectTsqr));
+        assert_eq!(req.priority, Priority::High);
+        assert_eq!(req.label.as_deref(), Some("hot"));
+    }
+
+    #[test]
+    fn bad_lines_are_reported_with_position() {
+        let err = parse_manifest("A 100 4 7 qr").unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"), "{err:#}");
+        let err = parse_manifest("A 100 4 7 qr direct urgent").unwrap_err();
+        assert!(format!("{err:#}").contains("urgent"), "{err:#}");
+        let err = parse_manifest("A ten 4 7 qr direct").unwrap_err();
+        assert!(format!("{err:#}").contains("rows"), "{err:#}");
+        assert!(parse_manifest("# only comments\n").is_err());
+    }
+}

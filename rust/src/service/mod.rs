@@ -1,0 +1,663 @@
+//! L5 — the concurrent job service: submit/await factorization jobs
+//! over one shared cluster.
+//!
+//! The paper's pitch is *throughput on a shared platform*: Direct TSQR
+//! wins because many independent map/reduce tasks keep the machine
+//! busy, and both Demmel et al.'s communication-optimal TSQR
+//! (arXiv:0809.2407) and the grid TSQR of Agullo et al.
+//! (arXiv:0912.2572) treat the factorization as a *service*, not a
+//! one-shot program. [`TsqrService`] makes the public API say the same
+//! thing:
+//!
+//! ```no_run
+//! use mrtsqr::session::{FactorizationRequest, Priority, TsqrSession};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let svc = TsqrSession::builder().service_workers(4).build_service()?;
+//! let a = svc.ingest_gaussian("A", 100_000, 25, 42)?;
+//! let b = svc.ingest_gaussian("B", 50_000, 10, 43)?;
+//! let j1 = svc.submit(&a, FactorizationRequest::qr())?;               // returns immediately
+//! let j2 = svc.submit(&b, FactorizationRequest::svd().with_priority(Priority::High))?;
+//! let (f1, f2) = (j1.wait()?, j2.wait()?);                            // Arc<Factorization>
+//! println!("{} + {} done", f1.algorithm.name(), f2.algorithm.name());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! # Architecture
+//!
+//! * **Shared cluster.** One `Mutex<Engine>` (DFS + disk model + slot
+//!   config + host pool size) and one [`SharedCompute`] backend serve
+//!   every job. Workers lock the engine per *step* (one MapReduce
+//!   iteration or one leader DFS access), never across a whole job, so
+//!   in-flight jobs interleave their iterations — job A's serial
+//!   leader work (R⁻¹, Jacobi SVD, κ probes) overlaps job B's engine
+//!   waves, and each wave still fans out on the engine's
+//!   `host_threads` pool.
+//! * **Bounded priority-FIFO queue.** [`TsqrService::submit`] enqueues
+//!   and returns a [`JobHandle`]; at capacity it blocks
+//!   (back-pressure) while [`TsqrService::try_submit`] errors. Workers
+//!   dequeue the highest [`Priority`] first, FIFO within a priority.
+//! * **Per-job namespaces.** Every job's intermediates live under
+//!   `job-<id>/tmp/…`, fixing the latent collision of `seq`-derived
+//!   temp names on a shared DFS; [`TsqrService::evict_job`] sweeps a
+//!   namespace when its factors are no longer needed.
+//! * **Per-job fault streams.** Fault draws come from an RNG derived
+//!   from the cluster's fault seed and the job id
+//!   ([`Engine::run_with_rng`]), so injected faults are deterministic
+//!   however concurrently jobs interleave.
+//! * **One execution path.** Workers run
+//!   [`crate::session::TsqrSession::factorize`]'s own engine room
+//!   (`session::exec`) — a session *is* this service degenerated to
+//!   inline execution, and `rust/tests/service.rs` asserts
+//!   concurrent-vs-serial bit-identity of `R`, `Q`, Σ and
+//!   `virtual_secs`.
+//!
+//! `service_workers(0)` gives manual-drain mode: nothing runs in the
+//! background and [`TsqrService::drain_now`] /
+//! [`TsqrService::drain_one`] execute queued jobs on the calling
+//! thread in deterministic (priority, FIFO) order — the serial
+//! baseline the determinism tests compare against.
+
+pub mod manifest;
+
+pub use manifest::{parse_manifest, BatchEntry};
+
+use crate::coordinator::{CoordOpts, Coordinator, MatrixHandle};
+use crate::dfs::Dfs;
+use crate::linalg::Matrix;
+use crate::mapreduce::Engine;
+use crate::runtime::SharedCompute;
+use crate::session::{exec, Factorization, FactorizationRequest, MatrixWriter, Priority};
+use crate::util::rng::Rng;
+use crate::workload;
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Service-only knobs carried by the [`crate::session::SessionBuilder`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    /// Background worker threads (`0` = manual drain).
+    pub workers: usize,
+    /// Bounded queue capacity (≥ 1).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { workers: 2, queue_capacity: 64 }
+    }
+}
+
+/// Identifier of one submitted job; also names its DFS namespace
+/// (`job-<id>/`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u64);
+
+impl JobId {
+    /// The job's DFS namespace prefix.
+    pub fn namespace(&self) -> String {
+        format!("job-{}/", self.0)
+    }
+}
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// Observable lifecycle of a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+/// Terminal state + result storage for one job.
+enum JobSlot {
+    Queued,
+    Running,
+    Done { fact: Arc<Factorization>, wall_secs: f64 },
+    Failed { msg: String, wall_secs: f64 },
+    Cancelled,
+}
+
+struct JobShared {
+    slot: Mutex<JobSlot>,
+    done: Condvar,
+}
+
+/// Handle returned by [`TsqrService::submit`]: poll or block for the
+/// job's [`Factorization`]. All methods take `&self`; the result is an
+/// `Arc`, so `wait`/`try_result` can be called repeatedly and from
+/// multiple threads.
+pub struct JobHandle {
+    id: JobId,
+    label: Option<String>,
+    shared: Arc<JobShared>,
+}
+
+impl JobHandle {
+    pub fn id(&self) -> JobId {
+        self.id
+    }
+
+    /// The request's label, if it carried one.
+    pub fn label(&self) -> Option<&str> {
+        self.label.as_deref()
+    }
+
+    pub fn status(&self) -> JobStatus {
+        match *self.shared.slot.lock().expect("job slot") {
+            JobSlot::Queued => JobStatus::Queued,
+            JobSlot::Running => JobStatus::Running,
+            JobSlot::Done { .. } => JobStatus::Done,
+            JobSlot::Failed { .. } => JobStatus::Failed,
+            JobSlot::Cancelled => JobStatus::Cancelled,
+        }
+    }
+
+    /// Block until the job reaches a terminal state; `Ok` carries the
+    /// shared factorization, `Err` a failure/cancellation report.
+    pub fn wait(&self) -> Result<Arc<Factorization>> {
+        let mut slot = self.shared.slot.lock().expect("job slot");
+        loop {
+            match &*slot {
+                JobSlot::Queued | JobSlot::Running => {
+                    slot = self.shared.done.wait(slot).expect("job slot");
+                }
+                JobSlot::Done { fact, .. } => return Ok(fact.clone()),
+                JobSlot::Failed { msg, .. } => bail!("{} failed: {msg}", self.id),
+                JobSlot::Cancelled => bail!("{} was cancelled before it ran", self.id),
+            }
+        }
+    }
+
+    /// Non-blocking probe: `None` while the job is queued or running,
+    /// `Some(result)` once terminal.
+    pub fn try_result(&self) -> Option<Result<Arc<Factorization>>> {
+        match &*self.shared.slot.lock().expect("job slot") {
+            JobSlot::Queued | JobSlot::Running => None,
+            JobSlot::Done { fact, .. } => Some(Ok(fact.clone())),
+            JobSlot::Failed { msg, .. } => Some(Err(anyhow!("{} failed: {msg}", self.id))),
+            JobSlot::Cancelled => Some(Err(anyhow!("{} was cancelled before it ran", self.id))),
+        }
+    }
+
+    /// Measured wall-clock seconds of the job's execution (`None`
+    /// until it completed or failed while running). Queue wait time is
+    /// *excluded*: this is running-to-terminal, the per-job number
+    /// `mrtsqr batch` sums to show submit/await overlap.
+    pub fn wall_secs(&self) -> Option<f64> {
+        match &*self.shared.slot.lock().expect("job slot") {
+            JobSlot::Done { wall_secs, .. } | JobSlot::Failed { wall_secs, .. } => {
+                Some(*wall_secs)
+            }
+            _ => None,
+        }
+    }
+
+    /// Cancel the job if it has not started running. Returns `true` on
+    /// success; a job already running (or finished) is unaffected and
+    /// `false` comes back.
+    pub fn cancel(&self) -> bool {
+        let mut slot = self.shared.slot.lock().expect("job slot");
+        if matches!(*slot, JobSlot::Queued) {
+            *slot = JobSlot::Cancelled;
+            self.shared.done.notify_all();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// One queue entry (the handle keeps the shared slot alive on the
+/// caller's side).
+struct QueuedJob {
+    id: JobId,
+    priority: Priority,
+    input: MatrixHandle,
+    req: FactorizationRequest,
+    shared: Arc<JobShared>,
+}
+
+struct QueueState {
+    jobs: VecDeque<QueuedJob>,
+    /// `false` once shutdown begins: submissions are rejected, workers
+    /// drain what is left and exit.
+    open: bool,
+}
+
+struct ServiceInner {
+    engine: Mutex<Engine>,
+    compute: SharedCompute,
+    opts: CoordOpts,
+    /// Base seed for per-job fault streams (see [`Engine::fault_seed`]).
+    fault_seed: u64,
+    queue: Mutex<QueueState>,
+    /// Signalled when a job is enqueued (workers wait here).
+    ready: Condvar,
+    /// Signalled when a job is dequeued (blocked `submit`s wait here).
+    space: Condvar,
+    capacity: usize,
+}
+
+impl ServiceInner {
+    fn lock_queue(&self) -> MutexGuard<'_, QueueState> {
+        self.queue.lock().expect("service queue")
+    }
+
+    /// Highest priority first, FIFO (smallest id) within a priority.
+    fn pop_best(jobs: &mut VecDeque<QueuedJob>) -> Option<QueuedJob> {
+        let mut best: Option<usize> = None;
+        for (i, job) in jobs.iter().enumerate() {
+            match best {
+                None => best = Some(i),
+                // strictly-greater keeps the earliest (lowest id) of a
+                // priority class, because the deque is in id order
+                Some(b) if job.priority > jobs[b].priority => best = Some(i),
+                Some(_) => {}
+            }
+        }
+        best.and_then(|i| jobs.remove(i))
+    }
+
+    /// Run one dequeued job to a terminal state. Skips (and reports
+    /// `false` for) jobs cancelled while queued.
+    fn execute_job(&self, job: QueuedJob) -> bool {
+        {
+            let mut slot = job.shared.slot.lock().expect("job slot");
+            if matches!(*slot, JobSlot::Cancelled) {
+                return false;
+            }
+            *slot = JobSlot::Running;
+        }
+        let t0 = Instant::now();
+        // catch_unwind so one panicking job reports Failed instead of
+        // killing its worker thread and wedging every waiter
+        let outcome = catch_unwind(AssertUnwindSafe(|| self.run_request(&job)));
+        let wall_secs = t0.elapsed().as_secs_f64();
+        let slot_value = match outcome {
+            Ok(Ok(fact)) => JobSlot::Done { fact: Arc::new(fact), wall_secs },
+            Ok(Err(err)) => JobSlot::Failed { msg: format!("{err:#}"), wall_secs },
+            Err(_) => JobSlot::Failed { msg: "job panicked".into(), wall_secs },
+        };
+        *job.shared.slot.lock().expect("job slot") = slot_value;
+        job.shared.done.notify_all();
+        true
+    }
+
+    fn run_request(&self, job: &QueuedJob) -> Result<Factorization> {
+        // per-job fault stream: depends only on (cluster seed, job id),
+        // never on how concurrent jobs interleave their steps
+        let fault_rng =
+            Rng::new(self.fault_seed ^ (job.id.0 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut coord = Coordinator::shared(&self.engine, &*self.compute)
+            .with_opts(self.opts)
+            .with_namespace(job.id.namespace())
+            .with_fault_rng(fault_rng);
+        exec::execute(&mut coord, &job.input, &job.req)
+    }
+}
+
+fn worker_loop(inner: Arc<ServiceInner>) {
+    loop {
+        let job = {
+            let mut q = inner.lock_queue();
+            loop {
+                if let Some(job) = ServiceInner::pop_best(&mut q.jobs) {
+                    break Some(job);
+                }
+                if !q.open {
+                    break None;
+                }
+                q = inner.ready.wait(q).expect("service queue");
+            }
+        };
+        let Some(job) = job else { return };
+        inner.space.notify_one();
+        inner.execute_job(job);
+    }
+}
+
+/// A concurrent factorization service over one shared simulated
+/// cluster. Build with
+/// [`crate::session::SessionBuilder::build_service`]; see the
+/// [module docs](self) for the architecture.
+pub struct TsqrService {
+    inner: Arc<ServiceInner>,
+    workers: Vec<JoinHandle<()>>,
+    backend_desc: &'static str,
+    next_id: AtomicU64,
+}
+
+impl TsqrService {
+    pub(crate) fn start(
+        engine: Engine,
+        compute: SharedCompute,
+        backend_desc: &'static str,
+        opts: CoordOpts,
+        cfg: ServiceConfig,
+    ) -> TsqrService {
+        let inner = Arc::new(ServiceInner {
+            fault_seed: engine.fault_seed(),
+            engine: Mutex::new(engine),
+            compute,
+            opts,
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), open: true }),
+            ready: Condvar::new(),
+            space: Condvar::new(),
+            capacity: cfg.queue_capacity.max(1),
+        });
+        let workers = (0..cfg.workers)
+            .map(|i| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("tsqr-worker-{i}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("spawn service worker")
+            })
+            .collect();
+        TsqrService { inner, workers, backend_desc, next_id: AtomicU64::new(0) }
+    }
+
+    /// Short name of the resolved compute backend.
+    pub fn backend_desc(&self) -> &'static str {
+        self.backend_desc
+    }
+
+    /// Background worker threads serving the queue.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Bounded queue capacity (submissions beyond it block).
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Host worker threads each job's map/reduce waves fan out on (the
+    /// cluster's realized `ClusterConfig::host_threads`).
+    pub fn host_threads(&self) -> usize {
+        lock_engine(&self.inner.engine).cluster.host_threads
+    }
+
+    /// Jobs currently queued (not yet picked up by a worker).
+    pub fn pending(&self) -> usize {
+        self.inner.lock_queue().jobs.len()
+    }
+
+    // ----------------------------------------------------- submission
+
+    fn enqueue(&self, q: &mut QueueState, input: &MatrixHandle, req: FactorizationRequest) -> JobHandle {
+        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let shared = Arc::new(JobShared { slot: Mutex::new(JobSlot::Queued), done: Condvar::new() });
+        let handle = JobHandle { id, label: req.label.clone(), shared: shared.clone() };
+        q.jobs.push_back(QueuedJob {
+            id,
+            priority: req.priority,
+            input: input.clone(),
+            req,
+            shared,
+        });
+        self.inner.ready.notify_one();
+        handle
+    }
+
+    /// Submit a job and return immediately with its [`JobHandle`]. At
+    /// queue capacity this *blocks* until a worker (or drain) frees a
+    /// slot — back-pressure, not unbounded buffering.
+    pub fn submit(&self, input: &MatrixHandle, req: FactorizationRequest) -> Result<JobHandle> {
+        let mut q = self.inner.lock_queue();
+        while q.open && q.jobs.len() >= self.inner.capacity {
+            q = self.inner.space.wait(q).expect("service queue");
+        }
+        if !q.open {
+            bail!("job service is shut down");
+        }
+        Ok(self.enqueue(&mut q, input, req))
+    }
+
+    /// Non-blocking [`TsqrService::submit`]: errors instead of waiting
+    /// when the queue is at capacity.
+    pub fn try_submit(&self, input: &MatrixHandle, req: FactorizationRequest) -> Result<JobHandle> {
+        let mut q = self.inner.lock_queue();
+        if !q.open {
+            bail!("job service is shut down");
+        }
+        if q.jobs.len() >= self.inner.capacity {
+            bail!(
+                "job queue at capacity ({} queued) — wait for a worker or use submit()",
+                self.inner.capacity
+            );
+        }
+        Ok(self.enqueue(&mut q, input, req))
+    }
+
+    // ---------------------------------------------------- manual drain
+
+    /// Pop and run the next queued job (highest priority, FIFO within)
+    /// on the *calling* thread; `None` when nothing is queued. Jobs
+    /// cancelled while queued are discarded, not counted. With
+    /// `service_workers(0)` this is the deterministic serial engine the
+    /// determinism tests baseline against.
+    pub fn drain_one(&self) -> Option<JobId> {
+        loop {
+            let job = ServiceInner::pop_best(&mut self.inner.lock_queue().jobs)?;
+            self.inner.space.notify_one();
+            let id = job.id;
+            if self.inner.execute_job(job) {
+                return Some(id);
+            }
+        }
+    }
+
+    /// Run queued jobs on the calling thread until the queue is empty;
+    /// returns how many executed.
+    pub fn drain_now(&self) -> usize {
+        let mut ran = 0;
+        while self.drain_one().is_some() {
+            ran += 1;
+        }
+        ran
+    }
+
+    // ------------------------------------------------------- ingestion
+
+    /// Ingest an in-memory matrix into the shared DFS.
+    pub fn ingest_matrix(&self, name: &str, a: &Matrix) -> Result<MatrixHandle> {
+        self.ingest_with(name, a.cols, |w| w.push_chunk(a))
+    }
+
+    /// Ingest a seeded gaussian matrix (same records as
+    /// [`crate::session::TsqrSession::ingest_gaussian`]).
+    pub fn ingest_gaussian(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+    ) -> Result<MatrixHandle> {
+        let mut rng = Rng::new(seed);
+        let mut row = vec![0.0f64; cols];
+        self.ingest_with(name, cols, |w| {
+            for _ in 0..rows {
+                for v in row.iter_mut() {
+                    *v = rng.gaussian();
+                }
+                w.push_row(&row)?;
+            }
+            Ok(())
+        })
+    }
+
+    /// Stream rows into the shared DFS through a [`MatrixWriter`]
+    /// (the engine lock is held for the closure's duration — ingest
+    /// before submitting jobs that read the file).
+    pub fn ingest_with(
+        &self,
+        name: &str,
+        cols: usize,
+        f: impl FnOnce(&mut MatrixWriter) -> Result<()>,
+    ) -> Result<MatrixHandle> {
+        let mut engine = lock_engine(&self.inner.engine);
+        let mut w = MatrixWriter::new(&mut engine.dfs, name, cols);
+        f(&mut w)?;
+        Ok(w.finish())
+    }
+
+    /// Read a handle's rows back from the shared DFS.
+    pub fn get_matrix(&self, handle: &MatrixHandle) -> Result<Matrix> {
+        let engine = lock_engine(&self.inner.engine);
+        workload::get_matrix(&engine.dfs, &handle.file, handle.cols)
+    }
+
+    /// Run a closure against the shared DFS (byte totals, listings).
+    pub fn with_dfs<T>(&self, f: impl FnOnce(&Dfs) -> T) -> T {
+        f(&lock_engine(&self.inner.engine).dfs)
+    }
+
+    /// Mark a DFS file's virtual byte scale (see
+    /// [`crate::session::TsqrSession::set_scale`]).
+    pub fn set_scale(&self, name: &str, scale: f64) {
+        lock_engine(&self.inner.engine).dfs.set_scale(name, scale);
+    }
+
+    // ------------------------------------------------------- lifecycle
+
+    /// Delete one finished job's DFS namespace (`job-<id>/…` — its Q
+    /// factor and intermediates). Returns how many files were swept.
+    /// Handles into that namespace become dangling, which is the
+    /// caller's contract to uphold.
+    pub fn evict_job(&self, id: JobId) -> usize {
+        let mut engine = lock_engine(&self.inner.engine);
+        engine.dfs.delete_prefix(&id.namespace())
+    }
+
+    /// Graceful shutdown: reject new submissions, let the workers
+    /// drain everything already queued, join them, and cancel whatever
+    /// remains (only possible in manual-drain mode). Called on drop.
+    pub fn shutdown(&mut self) {
+        {
+            let mut q = self.inner.lock_queue();
+            if !q.open {
+                return;
+            }
+            q.open = false;
+        }
+        self.inner.ready.notify_all();
+        self.inner.space.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+        // manual-drain mode can leave queued jobs behind: resolve their
+        // handles so no waiter hangs forever
+        let mut q = self.inner.lock_queue();
+        while let Some(job) = q.jobs.pop_front() {
+            let mut slot = job.shared.slot.lock().expect("job slot");
+            if matches!(*slot, JobSlot::Queued) {
+                *slot = JobSlot::Cancelled;
+            }
+            job.shared.done.notify_all();
+        }
+    }
+}
+
+impl Drop for TsqrService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{Backend, TsqrSession};
+
+    fn manual_service() -> TsqrService {
+        TsqrSession::builder()
+            .backend(Backend::Native)
+            .rows_per_task(50)
+            .service_workers(0)
+            .queue_capacity(8)
+            .build_service()
+            .unwrap()
+    }
+
+    #[test]
+    fn submit_drain_wait_round_trip() {
+        let svc = manual_service();
+        let h = svc.ingest_gaussian("A", 300, 5, 1).unwrap();
+        let job = svc.submit(&h, FactorizationRequest::qr().labeled("smoke")).unwrap();
+        assert_eq!(job.status(), JobStatus::Queued);
+        assert_eq!(job.label(), Some("smoke"));
+        assert!(job.try_result().is_none());
+        assert_eq!(svc.pending(), 1);
+        assert_eq!(svc.drain_now(), 1);
+        let fact = job.wait().unwrap();
+        assert_eq!(job.status(), JobStatus::Done);
+        assert!(job.wall_secs().unwrap() >= 0.0);
+        assert_eq!(fact.r.rows, 5);
+        // the Q handle lives in the job's namespace
+        let qf = &fact.q.as_ref().unwrap().file;
+        assert!(qf.starts_with(&job.id().namespace()), "{qf}");
+        let q = svc.get_matrix(fact.q.as_ref().unwrap()).unwrap();
+        assert!(q.orthogonality_error() < 1e-10);
+    }
+
+    #[test]
+    fn priorities_jump_the_fifo_queue() {
+        let svc = manual_service();
+        let h = svc.ingest_gaussian("A", 60, 3, 2).unwrap();
+        let lo = svc
+            .submit(&h, FactorizationRequest::r_only().with_priority(Priority::Low))
+            .unwrap();
+        let n1 = svc.submit(&h, FactorizationRequest::r_only()).unwrap();
+        let n2 = svc.submit(&h, FactorizationRequest::r_only()).unwrap();
+        let hi = svc
+            .submit(&h, FactorizationRequest::r_only().with_priority(Priority::High))
+            .unwrap();
+        let order: Vec<JobId> = std::iter::from_fn(|| svc.drain_one()).collect();
+        assert_eq!(order, vec![hi.id(), n1.id(), n2.id(), lo.id()]);
+    }
+
+    #[test]
+    fn evict_job_sweeps_only_that_namespace() {
+        let svc = manual_service();
+        let h = svc.ingest_gaussian("A", 200, 4, 3).unwrap();
+        let j0 = svc.submit(&h, FactorizationRequest::qr()).unwrap();
+        let j1 = svc.submit(&h, FactorizationRequest::qr()).unwrap();
+        svc.drain_now();
+        let f0 = j0.wait().unwrap();
+        let f1 = j1.wait().unwrap();
+        assert!(svc.evict_job(j0.id()) > 0);
+        assert!(svc.get_matrix(f0.q.as_ref().unwrap()).is_err(), "evicted Q gone");
+        let q1 = svc.get_matrix(f1.q.as_ref().unwrap()).unwrap();
+        assert_eq!(q1.rows, 200, "other job's namespace untouched");
+        // input matrix is outside every job namespace
+        assert!(svc.get_matrix(&h).is_ok());
+    }
+
+    #[test]
+    fn shutdown_rejects_new_submissions_and_resolves_queued_handles() {
+        let mut svc = manual_service();
+        let h = svc.ingest_gaussian("A", 60, 3, 4).unwrap();
+        let stranded = svc.submit(&h, FactorizationRequest::r_only()).unwrap();
+        svc.shutdown();
+        assert_eq!(stranded.status(), JobStatus::Cancelled);
+        assert!(stranded.wait().is_err());
+        assert!(svc.submit(&h, FactorizationRequest::r_only()).is_err());
+        assert!(svc.try_submit(&h, FactorizationRequest::r_only()).is_err());
+    }
+}

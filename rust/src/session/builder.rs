@@ -7,8 +7,9 @@ use crate::coordinator::CoordOpts;
 use crate::dfs::DiskModel;
 use crate::mapreduce::{ClusterConfig, Engine, FaultPolicy};
 use crate::runtime::{NativeRuntime, SharedCompute};
+use crate::service::{ServiceConfig, TsqrService};
 use anyhow::Result;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Compute-backend selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -23,13 +24,69 @@ pub enum Backend {
     Pjrt,
 }
 
+/// Process-wide pool of resolved backends (one per backend kind). All
+/// sessions and job services resolving through [`Backend::resolve`]
+/// share these instances, so a PJRT backend's per-shape executable
+/// cache is compiled once and reused by every in-flight job in the
+/// process.
+static NATIVE_POOL: OnceLock<SharedCompute> = OnceLock::new();
+#[cfg(feature = "pjrt")]
+static PJRT_POOL: std::sync::Mutex<Option<SharedCompute>> = std::sync::Mutex::new(None);
+
 impl Backend {
     /// Resolve to a concrete (shareable, thread-safe) compute backend
-    /// plus a short human-readable name. Sessions sharing one resolved
-    /// backend reuse its compiled-executable cache — build it once,
-    /// clone the [`SharedCompute`] `Arc` into as many sessions (and
-    /// host worker threads) as needed.
+    /// plus a short human-readable name.
+    ///
+    /// Resolution is *pooled*: every `resolve()` of the same backend
+    /// kind in this process returns a clone of one shared instance, so
+    /// all sessions and all in-flight service jobs share a single
+    /// per-shape compiled-executable cache (the PJRT path compiles each
+    /// `(op, block_rows, cols)` shape exactly once process-wide). Use
+    /// [`Backend::resolve_fresh`] when an isolated instance is needed
+    /// (e.g. per-backend runtime-stats accounting).
     pub fn resolve(self) -> Result<(SharedCompute, &'static str)> {
+        match self {
+            Backend::Native => Ok((
+                NATIVE_POOL.get_or_init(|| Arc::new(NativeRuntime)).clone(),
+                "native",
+            )),
+            Backend::Auto => {
+                #[cfg(feature = "pjrt")]
+                {
+                    let dir = crate::runtime::Manifest::default_dir();
+                    if dir.join("manifest.tsv").exists() {
+                        return Backend::Pjrt.resolve();
+                    }
+                }
+                Backend::Native.resolve()
+            }
+            Backend::Pjrt => {
+                #[cfg(feature = "pjrt")]
+                {
+                    let mut pool = PJRT_POOL.lock().expect("pjrt backend pool");
+                    if let Some(rt) = pool.as_ref() {
+                        return Ok((rt.clone(), "pjrt"));
+                    }
+                    // failures (missing artifacts) are not cached: a
+                    // later resolve after `make artifacts` succeeds
+                    let rt: SharedCompute =
+                        Arc::new(crate::runtime::PjrtRuntime::from_default_artifacts()?);
+                    *pool = Some(rt.clone());
+                    return Ok((rt, "pjrt"));
+                }
+                #[cfg(not(feature = "pjrt"))]
+                anyhow::bail!(
+                    "this build has no PJRT support — rebuild with `--features pjrt` \
+                     (and run `make artifacts`)"
+                );
+            }
+        }
+    }
+
+    /// Resolve a *fresh* (unpooled) backend instance with its own
+    /// executable cache and stats. The pre-pool behavior of
+    /// [`Backend::resolve`].
+    pub fn resolve_fresh(self) -> Result<(SharedCompute, &'static str)> {
         match self {
             Backend::Native => Ok((Arc::new(NativeRuntime), "native")),
             Backend::Auto => {
@@ -68,6 +125,8 @@ pub struct SessionBuilder {
     backend: Backend,
     compute: Option<SharedCompute>,
     opts: CoordOpts,
+    ns: String,
+    service: ServiceConfig,
 }
 
 impl SessionBuilder {
@@ -79,6 +138,8 @@ impl SessionBuilder {
             backend: Backend::Auto,
             compute: None,
             opts: CoordOpts::default(),
+            ns: String::new(),
+            service: ServiceConfig::default(),
         }
     }
 
@@ -144,8 +205,37 @@ impl SessionBuilder {
         self
     }
 
-    /// Assemble the session.
-    pub fn build(self) -> Result<TsqrSession> {
+    /// DFS namespace prefix for this session's temp files (e.g.
+    /// `"s0/"`). Sessions whose requests land in one shared store must
+    /// use distinct namespaces, or their `seq`-derived intermediate
+    /// names collide — the job service does this automatically
+    /// (`job-<id>/` per job). Default: `""` (the historical `tmp/…`
+    /// names).
+    pub fn namespace(mut self, ns: impl Into<String>) -> Self {
+        self.ns = ns.into();
+        self
+    }
+
+    /// Worker threads a [`TsqrService`] built from this builder will
+    /// run jobs on (`0` = no background workers: jobs execute only via
+    /// [`TsqrService::drain_now`] / [`TsqrService::drain_one`], the
+    /// deterministic serial mode). Default: 2. Ignored by
+    /// [`SessionBuilder::build`].
+    pub fn service_workers(mut self, n: usize) -> Self {
+        self.service.workers = n;
+        self
+    }
+
+    /// Bounded FIFO queue capacity of a [`TsqrService`] built from this
+    /// builder: `submit` blocks (and `try_submit` errors) while this
+    /// many jobs are queued. Default: 64. Ignored by
+    /// [`SessionBuilder::build`].
+    pub fn queue_capacity(mut self, n: usize) -> Self {
+        self.service.queue_capacity = n.max(1);
+        self
+    }
+
+    fn into_cluster_parts(self) -> Result<ClusterParts> {
         let (compute, backend_desc) = match self.compute {
             Some(c) => (c, "custom"),
             None => self.backend.resolve()?,
@@ -154,14 +244,48 @@ impl SessionBuilder {
         if let Some((policy, seed)) = self.faults {
             engine = engine.with_faults(policy, seed);
         }
-        Ok(TsqrSession {
-            engine: Some(engine),
+        Ok(ClusterParts {
+            engine,
             compute,
             backend_desc,
             opts: self.opts,
-            seq: 0,
+            ns: self.ns,
+            service: self.service,
         })
     }
+
+    /// Assemble the session.
+    pub fn build(self) -> Result<TsqrSession> {
+        let p = self.into_cluster_parts()?;
+        Ok(TsqrSession {
+            engine: Some(p.engine),
+            compute: p.compute,
+            backend_desc: p.backend_desc,
+            opts: p.opts,
+            seq: 0,
+            ns: p.ns,
+        })
+    }
+
+    /// Assemble a concurrent job service instead of a session: the same
+    /// cluster (engine + DFS + backend + tuning), served through a
+    /// bounded job queue by [`SessionBuilder::service_workers`] worker
+    /// threads. See [`crate::service`].
+    pub fn build_service(self) -> Result<TsqrService> {
+        let p = self.into_cluster_parts()?;
+        Ok(TsqrService::start(p.engine, p.compute, p.backend_desc, p.opts, p.service))
+    }
+}
+
+/// Everything a builder resolves before handing it to a session or a
+/// service.
+struct ClusterParts {
+    engine: Engine,
+    compute: SharedCompute,
+    backend_desc: &'static str,
+    opts: CoordOpts,
+    ns: String,
+    service: ServiceConfig,
 }
 
 #[cfg(test)]
@@ -199,6 +323,46 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(s.host_threads(), 1);
+    }
+
+    #[test]
+    fn resolve_pools_one_instance_per_backend_kind() {
+        // the per-shape executable pool: every resolve() of a kind is
+        // the same instance, shared by all sessions and in-flight jobs
+        // (thin-pointer comparison: wide-pointer eq on dyn Arcs is
+        // lint-ambiguous)
+        let data_ptr = |c: &SharedCompute| Arc::as_ptr(c) as *const u8;
+        let (a, _) = Backend::Native.resolve().unwrap();
+        let (b, _) = Backend::Native.resolve().unwrap();
+        assert!(std::ptr::eq(data_ptr(&a), data_ptr(&b)), "resolve() must pool");
+        let (c, _) = Backend::Native.resolve_fresh().unwrap();
+        assert!(!std::ptr::eq(data_ptr(&a), data_ptr(&c)), "resolve_fresh() must not pool");
+    }
+
+    #[test]
+    fn namespace_flows_into_session_temp_names() {
+        let mut s = TsqrSession::builder()
+            .backend(Backend::Native)
+            .namespace("s0/")
+            .build()
+            .unwrap();
+        let h = s.ingest_gaussian("A", 120, 4, 1).unwrap();
+        let f = s.qr_with(&h, crate::coordinator::Algorithm::DirectTsqr).unwrap();
+        assert!(f.q.as_ref().unwrap().file.starts_with("s0/tmp/"));
+    }
+
+    #[test]
+    fn service_knobs_reach_the_service() {
+        let svc = TsqrSession::builder()
+            .backend(Backend::Native)
+            .service_workers(0)
+            .queue_capacity(3)
+            .build_service()
+            .unwrap();
+        assert_eq!(svc.workers(), 0);
+        assert_eq!(svc.capacity(), 3);
+        assert_eq!(svc.backend_desc(), "native");
+        assert_eq!(svc.pending(), 0);
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! The one request-execution path.
+//!
+//! Both front doors run every [`FactorizationRequest`] through
+//! [`execute`]: a [`crate::session::TsqrSession`] calls it inline on its
+//! privately-owned engine (factorize ≡ submit + wait with nothing
+//! queued), and a [`crate::service::TsqrService`] worker calls it with a
+//! cluster-shared, per-job-namespaced [`Coordinator`]. Keeping the
+//! want/algo dispatch here means the service cannot drift from the
+//! session: same probe, same auto decision, same pipelines, same stats.
+
+use super::request::{AlgoChoice, FactorizationRequest, Want};
+use super::select::{estimate_condition, AutoDecision};
+use super::Factorization;
+use crate::coordinator::direct_tsqr::SvdParts;
+use crate::coordinator::{ar_inv, cholesky_qr, householder, indirect_tsqr, RFactorMethod};
+use crate::coordinator::{Algorithm, Coordinator, MatrixHandle};
+use crate::linalg::{jacobi_svd, Matrix};
+use crate::mapreduce::JobStats;
+use anyhow::{bail, Result};
+
+/// Run one factorization request against a coordinator (owned or
+/// cluster-shared engine — the coordinator hides the difference).
+pub(crate) fn execute(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    req: &FactorizationRequest,
+) -> Result<Factorization> {
+    match req.algo {
+        AlgoChoice::Fixed(algo) => run_fixed(coord, input, req.want, algo, None),
+        AlgoChoice::Auto => run_auto(coord, input, req),
+    }
+}
+
+fn run_auto(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    req: &FactorizationRequest,
+) -> Result<Factorization> {
+    // wants with a single serving algorithm resolve without a probe
+    match req.want {
+        Want::Svd => return run_fixed(coord, input, req.want, Algorithm::DirectTsqr, None),
+        Want::SingularValues => {
+            // "it would be favorable to use the TSQR implementation
+            // from Sec. II-B to compute R" (paper §III-B)
+            return run_fixed(
+                coord,
+                input,
+                req.want,
+                Algorithm::IndirectTsqr { refine: false },
+                None,
+            );
+        }
+        Want::Qr | Want::ROnly => {}
+    }
+
+    // one-pass probe: Indirect-TSQR R + serial Jacobi κ estimate
+    let (probe_r, mut stats) = indirect_tsqr::indirect_r(coord, input)?;
+
+    if req.want == Want::ROnly {
+        // the probe's R is already backward stable — no second pass
+        // needed whichever way the estimate leans, so the recorded
+        // decision is the algorithm that actually served the request
+        let decision = AutoDecision {
+            kappa_estimate: estimate_condition(&probe_r),
+            threshold: req.condition_threshold,
+            chosen: Algorithm::IndirectTsqr { refine: false },
+            probe_reused: true,
+        };
+        stats.push(decision.step_stats());
+        return Ok(Factorization {
+            q: None,
+            r: probe_r,
+            svd: None,
+            algorithm: decision.chosen,
+            auto: Some(decision),
+            stats,
+        });
+    }
+
+    let decision = AutoDecision::from_probe(&probe_r, req.condition_threshold, req.refine);
+    stats.push(decision.step_stats());
+
+    if decision.probe_reused {
+        // Well-conditioned branch: finish the probe's Indirect-TSQR R
+        // into Q = A·R⁻¹ instead of re-running a factorization from
+        // scratch — 2 passes over A instead of 3, and the indirect Q
+        // loses κ·ε instead of Cholesky QR's κ²·ε. An optional
+        // refinement sweep still applies on top (req.refine).
+        let (q, r, st) =
+            ar_inv::q_via_rinv(coord, input, &probe_r, req.refine, RFactorMethod::IndirectTsqr)?;
+        stats.extend(st);
+        return Ok(Factorization {
+            q: Some(q),
+            r,
+            svd: None,
+            algorithm: decision.chosen,
+            auto: Some(decision),
+            stats,
+        });
+    }
+
+    // ill-conditioned: the unconditionally stable path
+    run_fixed(coord, input, req.want, decision.chosen, Some((decision, stats)))
+}
+
+fn run_fixed(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    want: Want,
+    algo: Algorithm,
+    auto: Option<(AutoDecision, JobStats)>,
+) -> Result<Factorization> {
+    let (auto, mut stats) = match auto {
+        Some((d, s)) => (Some(d), s),
+        None => (None, JobStats::default()),
+    };
+    match want {
+        Want::Qr => {
+            let res = coord.qr(input, algo)?;
+            stats.extend(res.stats);
+            Ok(Factorization { q: res.q, r: res.r, svd: None, algorithm: algo, auto, stats })
+        }
+        Want::ROnly => {
+            let (r, st) = r_only(coord, input, algo)?;
+            stats.extend(st);
+            Ok(Factorization { q: None, r, svd: None, algorithm: algo, auto, stats })
+        }
+        Want::Svd => {
+            if algo != Algorithm::DirectTsqr {
+                bail!(
+                    "want=Svd is served by Direct TSQR only (paper §III-B), not {}",
+                    algo.name()
+                );
+            }
+            let out = coord.svd(input)?;
+            stats.extend(out.stats);
+            Ok(Factorization {
+                q: Some(out.q),
+                r: out.r,
+                svd: out.svd,
+                algorithm: algo,
+                auto,
+                stats,
+            })
+        }
+        Want::SingularValues => {
+            let (r, st) = r_only(coord, input, algo)?;
+            stats.extend(st);
+            let svd = jacobi_svd(&r);
+            Ok(Factorization {
+                q: None,
+                r,
+                svd: Some(SvdParts { sigma: svd.sigma, v: svd.v }),
+                algorithm: algo,
+                auto,
+                stats,
+            })
+        }
+    }
+}
+
+/// The cheapest R-only pipeline each algorithm offers.
+fn r_only(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    algo: Algorithm,
+) -> Result<(Matrix, JobStats)> {
+    match algo {
+        Algorithm::Cholesky { .. } => cholesky_qr::cholesky_r(coord, input),
+        Algorithm::IndirectTsqr { .. } => indirect_tsqr::indirect_r(coord, input),
+        Algorithm::Householder => householder::householder_r(coord, input, None),
+        // the direct variants have no cheaper R-only path: run the
+        // full factorization and drop Q
+        Algorithm::DirectTsqr | Algorithm::DirectTsqrFused => {
+            let res = coord.qr(input, algo)?;
+            Ok((res.r, res.stats))
+        }
+    }
+}

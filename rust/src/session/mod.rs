@@ -34,35 +34,53 @@
 //! Sessions also own the *host parallelism* knob
 //! ([`SessionBuilder::host_threads`]): map/reduce waves execute on a
 //! real thread pool with bit-identical results at any pool size.
+//!
+//! A session serves one caller at a time; for concurrent multi-request
+//! serving over one shared cluster, build a
+//! [`crate::service::TsqrService`] from the same
+//! [`SessionBuilder`] ([`SessionBuilder::build_service`]) — `factorize`
+//! here and `submit`/`wait` there run the *same* execution path
+//! ([`exec`]), so a session is exactly a job service degenerated to
+//! inline execution.
 
 mod builder;
+pub(crate) mod exec;
 mod ingest;
 mod request;
 mod select;
 
 pub use builder::{Backend, SessionBuilder};
 pub use ingest::MatrixWriter;
-pub use request::{AlgoChoice, FactorizationRequest, Want, DEFAULT_CONDITION_THRESHOLD};
+pub use request::{
+    AlgoChoice, FactorizationRequest, Priority, Want, DEFAULT_CONDITION_THRESHOLD,
+};
 pub use select::{estimate_condition, AutoDecision};
 
 pub use crate::coordinator::MatrixHandle;
 
 use crate::coordinator::direct_tsqr::SvdParts;
-use crate::coordinator::{ar_inv, cholesky_qr, householder, indirect_tsqr, RFactorMethod};
 use crate::coordinator::{Algorithm, Coordinator, CoordOpts};
 use crate::dfs::Dfs;
-use crate::linalg::{jacobi_svd, Matrix};
+use crate::linalg::Matrix;
 use crate::mapreduce::{Engine, JobStats};
 use crate::runtime::SharedCompute;
 use crate::util::rng::Rng;
 use crate::workload;
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-/// The unified result of any [`TsqrSession::factorize`] call.
-#[derive(Debug)]
+/// The unified result of any [`TsqrSession::factorize`] call (and of
+/// every [`crate::service::JobHandle::wait`]).
+#[derive(Debug, Clone)]
 pub struct Factorization {
-    /// Orthogonal factor (or `QU` for SVD requests), lazily left in the
-    /// DFS as row records; `None` for R-only algorithms/requests.
+    /// Orthogonal factor (or `QU` for SVD requests) left in the DFS as
+    /// row records; `None` for R-only algorithms/requests. The handle
+    /// points into the namespace the request ran under — a session's
+    /// configured namespace (default `""`, i.e. `tmp/…`) or, through a
+    /// job service, the submitting job's private `job-<id>/tmp/…`
+    /// prefix — and stays readable for the lifetime of the owning
+    /// session/service cluster: nothing else writes into that
+    /// namespace, and the service only deletes it on an explicit
+    /// [`crate::service::TsqrService::evict_job`].
     pub q: Option<MatrixHandle>,
     /// The `n×n` triangular factor.
     pub r: Matrix,
@@ -92,6 +110,9 @@ pub struct TsqrSession {
     backend_desc: &'static str,
     opts: CoordOpts,
     seq: usize,
+    /// DFS namespace prefix for this session's temp files (see
+    /// [`SessionBuilder::namespace`]).
+    ns: String,
 }
 
 impl TsqrSession {
@@ -194,15 +215,18 @@ impl TsqrSession {
 
     /// Run one factorization request. See [`FactorizationRequest`] for
     /// the knobs and [`Factorization`] for what comes back.
+    ///
+    /// This is a submit + wait with nothing queued: the request runs
+    /// inline on the session's private engine through the *same*
+    /// execution path a [`crate::service::TsqrService`] worker uses
+    /// ([`exec::execute`]), so session and service results are
+    /// identical by construction.
     pub fn factorize(
         &mut self,
         input: &MatrixHandle,
         req: &FactorizationRequest,
     ) -> Result<Factorization> {
-        match req.algo {
-            AlgoChoice::Fixed(algo) => self.run_fixed(input, req.want, algo, None),
-            AlgoChoice::Auto => self.run_auto(input, req),
-        }
+        self.with_coordinator(|c| exec::execute(c, input, req))
     }
 
     /// Convenience: full QR with auto-selection.
@@ -225,151 +249,6 @@ impl TsqrSession {
         self.factorize(input, &FactorizationRequest::singular_values())
     }
 
-    fn run_auto(
-        &mut self,
-        input: &MatrixHandle,
-        req: &FactorizationRequest,
-    ) -> Result<Factorization> {
-        // wants with a single serving algorithm resolve without a probe
-        match req.want {
-            Want::Svd => return self.run_fixed(input, req.want, Algorithm::DirectTsqr, None),
-            Want::SingularValues => {
-                // "it would be favorable to use the TSQR implementation
-                // from Sec. II-B to compute R" (paper §III-B)
-                return self.run_fixed(
-                    input,
-                    req.want,
-                    Algorithm::IndirectTsqr { refine: false },
-                    None,
-                );
-            }
-            Want::Qr | Want::ROnly => {}
-        }
-
-        // one-pass probe: Indirect-TSQR R + serial Jacobi κ estimate
-        let (probe_r, mut stats) =
-            self.with_coordinator(|c| indirect_tsqr::indirect_r(c, input))?;
-
-        if req.want == Want::ROnly {
-            // the probe's R is already backward stable — no second pass
-            // needed whichever way the estimate leans, so the recorded
-            // decision is the algorithm that actually served the request
-            let decision = AutoDecision {
-                kappa_estimate: estimate_condition(&probe_r),
-                threshold: req.condition_threshold,
-                chosen: Algorithm::IndirectTsqr { refine: false },
-                probe_reused: true,
-            };
-            stats.push(decision.step_stats());
-            return Ok(Factorization {
-                q: None,
-                r: probe_r,
-                svd: None,
-                algorithm: decision.chosen,
-                auto: Some(decision),
-                stats,
-            });
-        }
-
-        let decision = AutoDecision::from_probe(&probe_r, req.condition_threshold, req.refine);
-        stats.push(decision.step_stats());
-
-        if decision.probe_reused {
-            // Well-conditioned branch (ROADMAP item): finish the
-            // probe's Indirect-TSQR R into Q = A·R⁻¹ instead of
-            // re-running a factorization from scratch — 2 passes over A
-            // instead of 3, and the indirect Q loses κ·ε instead of
-            // Cholesky QR's κ²·ε. An optional refinement sweep still
-            // applies on top (req.refine).
-            let (q, r, st) = self.with_coordinator(|c| {
-                ar_inv::q_via_rinv(c, input, &probe_r, req.refine, RFactorMethod::IndirectTsqr)
-            })?;
-            stats.extend(st);
-            return Ok(Factorization {
-                q: Some(q),
-                r,
-                svd: None,
-                algorithm: decision.chosen,
-                auto: Some(decision),
-                stats,
-            });
-        }
-
-        // ill-conditioned: the unconditionally stable path
-        self.run_fixed(input, req.want, decision.chosen, Some((decision, stats)))
-    }
-
-    fn run_fixed(
-        &mut self,
-        input: &MatrixHandle,
-        want: Want,
-        algo: Algorithm,
-        auto: Option<(AutoDecision, JobStats)>,
-    ) -> Result<Factorization> {
-        let (auto, mut stats) = match auto {
-            Some((d, s)) => (Some(d), s),
-            None => (None, JobStats::default()),
-        };
-        match want {
-            Want::Qr => {
-                let res = self.with_coordinator(|c| c.qr(input, algo))?;
-                stats.extend(res.stats);
-                Ok(Factorization { q: res.q, r: res.r, svd: None, algorithm: algo, auto, stats })
-            }
-            Want::ROnly => {
-                let (r, st) = self.r_only(input, algo)?;
-                stats.extend(st);
-                Ok(Factorization { q: None, r, svd: None, algorithm: algo, auto, stats })
-            }
-            Want::Svd => {
-                if algo != Algorithm::DirectTsqr {
-                    bail!(
-                        "want=Svd is served by Direct TSQR only (paper §III-B), not {}",
-                        algo.name()
-                    );
-                }
-                let out = self.with_coordinator(|c| c.svd(input))?;
-                stats.extend(out.stats);
-                Ok(Factorization {
-                    q: Some(out.q),
-                    r: out.r,
-                    svd: out.svd,
-                    algorithm: algo,
-                    auto,
-                    stats,
-                })
-            }
-            Want::SingularValues => {
-                let (r, st) = self.r_only(input, algo)?;
-                stats.extend(st);
-                let svd = jacobi_svd(&r);
-                Ok(Factorization {
-                    q: None,
-                    r,
-                    svd: Some(SvdParts { sigma: svd.sigma, v: svd.v }),
-                    algorithm: algo,
-                    auto,
-                    stats,
-                })
-            }
-        }
-    }
-
-    /// The cheapest R-only pipeline each algorithm offers.
-    fn r_only(&mut self, input: &MatrixHandle, algo: Algorithm) -> Result<(Matrix, JobStats)> {
-        self.with_coordinator(|c| match algo {
-            Algorithm::Cholesky { .. } => cholesky_qr::cholesky_r(c, input),
-            Algorithm::IndirectTsqr { .. } => indirect_tsqr::indirect_r(c, input),
-            Algorithm::Householder => householder::householder_r(c, input, None),
-            // the direct variants have no cheaper R-only path: run the
-            // full factorization and drop Q
-            Algorithm::DirectTsqr | Algorithm::DirectTsqrFused => {
-                let res = c.qr(input, algo)?;
-                Ok((res.r, res.stats))
-            }
-        })
-    }
-
     /// Run `f` against the internal execution layer (a [`Coordinator`]
     /// borrowing this session's engine and backend). Crate-internal
     /// escape hatch for benches/experiments that drive raw pipelines.
@@ -378,11 +257,13 @@ impl TsqrSession {
         f: impl FnOnce(&mut Coordinator) -> Result<T>,
     ) -> Result<T> {
         let engine = self.engine.take().expect("session engine poisoned");
-        let mut coord = Coordinator::new(engine, &*self.compute).with_opts(self.opts);
+        let mut coord = Coordinator::new(engine, &*self.compute)
+            .with_opts(self.opts)
+            .with_namespace(self.ns.clone());
         coord.seq = self.seq;
         let out = f(&mut coord);
         self.seq = coord.seq;
-        self.engine = Some(coord.engine);
+        self.engine = Some(coord.into_engine());
         out
     }
 }

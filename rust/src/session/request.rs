@@ -37,18 +37,54 @@ pub enum AlgoChoice {
 /// any breakdown regime.
 pub const DEFAULT_CONDITION_THRESHOLD: f64 = 1e3;
 
+/// Scheduling priority of a request on a [`crate::service::TsqrService`]
+/// queue: higher priorities are dequeued first, FIFO within a priority.
+/// Sessions (inline execution) ignore it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Low,
+    Normal,
+    High,
+}
+
+impl Priority {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Parse a CLI/manifest priority name.
+    pub fn parse(s: &str) -> anyhow::Result<Priority> {
+        Ok(match s {
+            "low" => Priority::Low,
+            "normal" => Priority::Normal,
+            "high" => Priority::High,
+            other => anyhow::bail!("unknown priority {other:?} (low|normal|high)"),
+        })
+    }
+}
+
 /// A factorization request; every knob in one place.
 ///
 /// `refine` applies one sweep of iterative refinement (paper §II-C)
 /// when `Auto` picks an indirect method; `Fixed` algorithms carry their
-/// own `refine` flag and ignore this field.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// own `refine` flag and ignore this field. `priority` and `label` only
+/// matter when the request is submitted to a job service.
+#[derive(Debug, Clone, PartialEq)]
 pub struct FactorizationRequest {
     pub want: Want,
     pub algo: AlgoChoice,
     pub refine: bool,
     /// κ₂ threshold for the `Auto` policy.
     pub condition_threshold: f64,
+    /// Queue priority on a job service (sessions ignore it).
+    pub priority: Priority,
+    /// Human-readable tag carried through the job service into per-job
+    /// reporting (`mrtsqr batch` prints it).
+    pub label: Option<String>,
 }
 
 impl Default for FactorizationRequest {
@@ -58,6 +94,8 @@ impl Default for FactorizationRequest {
             algo: AlgoChoice::Auto,
             refine: false,
             condition_threshold: DEFAULT_CONDITION_THRESHOLD,
+            priority: Priority::Normal,
+            label: None,
         }
     }
 }
@@ -106,6 +144,18 @@ impl FactorizationRequest {
         self.condition_threshold = kappa;
         self
     }
+
+    /// Queue priority when submitted to a job service.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Tag the request for per-job reporting.
+    pub fn labeled(mut self, label: impl Into<String>) -> Self {
+        self.label = Some(label.into());
+        self
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +169,20 @@ mod tests {
         assert_eq!(r.algo, AlgoChoice::Auto);
         assert!(!r.refine);
         assert_eq!(r.condition_threshold, DEFAULT_CONDITION_THRESHOLD);
+        assert_eq!(r.priority, Priority::Normal);
+        assert!(r.label.is_none());
+    }
+
+    #[test]
+    fn priority_orders_and_parses() {
+        assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+        let r = FactorizationRequest::qr().with_priority(Priority::High).labeled("hot");
+        assert_eq!(r.priority, Priority::High);
+        assert_eq!(r.label.as_deref(), Some("hot"));
     }
 
     #[test]

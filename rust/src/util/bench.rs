@@ -66,16 +66,29 @@ pub fn host_threads_arg() -> Option<usize> {
         .or_else(|| std::env::var("MRTSQR_HOST_THREADS").ok().and_then(|v| v.parse().ok()))
 }
 
-/// Argv-scanning core of [`host_threads_arg`], split out so it can be
-/// tested on a synthetic token list (mutating the real process env from
-/// a test races the multi-threaded test harness).
-fn parse_host_threads<I: Iterator<Item = String>>(mut args: I) -> Option<usize> {
+/// `--<name> VALUE` / `--<name>=VALUE` lookup in this process's argv
+/// (bench harnesses are plain binaries without a CLI parser; the
+/// BENCH-trajectory `--bench-json PATH` flag uses this).
+pub fn arg_value(name: &str) -> Option<String> {
+    parse_arg_value(std::env::args(), name)
+}
+
+/// Argv-scanning cores of [`host_threads_arg`] / [`arg_value`], split
+/// out so they can be tested on a synthetic token list (mutating the
+/// real process env from a test races the multi-threaded test harness).
+fn parse_host_threads<I: Iterator<Item = String>>(args: I) -> Option<usize> {
+    parse_arg_value(args, "host-threads").and_then(|v| v.parse().ok())
+}
+
+fn parse_arg_value<I: Iterator<Item = String>>(mut args: I, name: &str) -> Option<String> {
+    let flag = format!("--{name}");
+    let prefix = format!("--{name}=");
     while let Some(a) = args.next() {
-        if a == "--host-threads" {
-            return args.next().and_then(|v| v.parse().ok());
+        if a == flag {
+            return args.next();
         }
-        if let Some(v) = a.strip_prefix("--host-threads=") {
-            return v.parse().ok();
+        if let Some(v) = a.strip_prefix(&prefix) {
+            return Some(v.to_string());
         }
     }
     None
@@ -111,5 +124,21 @@ mod tests {
         assert_eq!(parse(&["bench", "--quick"]), None);
         assert_eq!(parse(&["--host-threads", "zero?"]), None);
         assert_eq!(parse(&["--host-threads"]), None);
+    }
+
+    #[test]
+    fn generic_arg_value_parsing() {
+        let parse = |toks: &[&str], name: &str| {
+            parse_arg_value(toks.iter().map(|s| s.to_string()), name)
+        };
+        assert_eq!(
+            parse(&["bench", "--bench-json", "out.json"], "bench-json").as_deref(),
+            Some("out.json")
+        );
+        assert_eq!(
+            parse(&["--bench-json=B.json", "--quick"], "bench-json").as_deref(),
+            Some("B.json")
+        );
+        assert_eq!(parse(&["--quick"], "bench-json"), None);
     }
 }

@@ -20,7 +20,7 @@ fn run_direct(a: &Matrix, rows_per_task: usize) -> (Matrix, Matrix) {
     coord.opts.rows_per_task = rows_per_task;
     let h = MatrixHandle::new("A", a.rows, a.cols);
     let res = coord.qr(&h, Algorithm::DirectTsqr).unwrap();
-    let q = get_matrix(&coord.engine.dfs, &res.q.unwrap().file, a.cols).unwrap();
+    let q = coord.dfs(|d| get_matrix(d, &res.q.unwrap().file, a.cols)).unwrap();
     (q, res.r)
 }
 

@@ -1,0 +1,322 @@
+//! The job service's contract: concurrent submission is *pure
+//! scheduling*. N mixed jobs submitted from M threads through one
+//! `TsqrService` produce bit-identical `R`, `Q`, Σ and `virtual_secs`
+//! to the same requests drained serially; the queue applies
+//! back-pressure at capacity; a poisoned input fails its own handle
+//! without wedging the queue; cancellation before running works; and
+//! per-job DFS namespaces keep concurrent intermediates (and returned
+//! Q handles) collision-free on the shared DFS.
+
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::mapreduce::FaultPolicy;
+use mrtsqr::service::{JobStatus, TsqrService};
+use mrtsqr::session::{Backend, FactorizationRequest, Priority, SessionBuilder};
+use mrtsqr::{Factorization, MatrixHandle};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn builder() -> SessionBuilder {
+    mrtsqr::TsqrSession::builder().backend(Backend::Native).rows_per_task(50)
+}
+
+/// The acceptance mix: ≥ 8 jobs covering QR / R-only / SVD / Σ, Auto
+/// and Fixed algorithms (direct, fused, cholesky, indirect+IR).
+fn mixed_requests() -> Vec<FactorizationRequest> {
+    vec![
+        FactorizationRequest::qr(),
+        FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr),
+        FactorizationRequest::qr()
+            .with_algorithm(Algorithm::DirectTsqrFused)
+            .with_priority(Priority::High),
+        FactorizationRequest::r_only(),
+        FactorizationRequest::r_only().with_algorithm(Algorithm::Cholesky { refine: false }),
+        FactorizationRequest::svd(),
+        FactorizationRequest::singular_values().with_priority(Priority::Low),
+        FactorizationRequest::qr().with_algorithm(Algorithm::IndirectTsqr { refine: true }),
+    ]
+}
+
+fn ingest_inputs(svc: &TsqrService, n: usize) -> Vec<MatrixHandle> {
+    (0..n)
+        .map(|i| {
+            svc.ingest_gaussian(&format!("A{i}"), 300 + 40 * i, 4 + i % 3, i as u64)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Serial ground truth: same cluster config, no workers, drained on
+/// this thread in submission order (priorities still apply, but the
+/// comparison below is per-request, so order does not matter).
+fn serial_results(requests: &[FactorizationRequest]) -> Vec<(Arc<Factorization>, Vec<f64>)> {
+    let svc = builder().service_workers(0).queue_capacity(requests.len()).build_service().unwrap();
+    let inputs = ingest_inputs(&svc, requests.len());
+    let handles: Vec<_> = inputs
+        .iter()
+        .zip(requests)
+        .map(|(h, req)| svc.submit(h, req.clone()).unwrap())
+        .collect();
+    assert_eq!(svc.drain_now(), requests.len());
+    handles
+        .iter()
+        .map(|h| {
+            let fact = h.wait().unwrap();
+            let q = fact
+                .q
+                .as_ref()
+                .map(|qh| svc.get_matrix(qh).unwrap().data)
+                .unwrap_or_default();
+            (fact, q)
+        })
+        .collect()
+}
+
+/// The tentpole acceptance test: 8 mixed jobs submitted from 4 threads
+/// through one service with 4 workers — every result bit-identical to
+/// the serial run of the same requests.
+#[test]
+fn concurrent_mixed_jobs_are_bit_identical_to_serial() {
+    let requests = mixed_requests();
+    assert!(requests.len() >= 8);
+    let serial = serial_results(&requests);
+
+    let svc = builder().service_workers(4).queue_capacity(requests.len()).build_service().unwrap();
+    let inputs = ingest_inputs(&svc, requests.len());
+
+    // 4 submitter threads × 2 requests each; each thread records the
+    // handles of *its* request indices so results pair up with the
+    // serial baseline regardless of job-id assignment order
+    let mut handles: Vec<Option<mrtsqr::JobHandle>> = (0..requests.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let chunks: Vec<_> = handles.chunks_mut(2).enumerate().collect();
+        for (t, chunk) in chunks {
+            let svc = &svc;
+            let inputs = &inputs;
+            let requests = &requests;
+            scope.spawn(move || {
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    let idx = 2 * t + j;
+                    *slot = Some(svc.submit(&inputs[idx], requests[idx].clone()).unwrap());
+                }
+            });
+        }
+    });
+
+    for (idx, (handle, (want, want_q))) in handles.iter().zip(&serial).enumerate() {
+        let handle = handle.as_ref().unwrap();
+        let got = handle.wait().unwrap_or_else(|e| panic!("request {idx}: {e:#}"));
+        let ctx = format!("request {idx} ({})", got.algorithm.name());
+        assert_eq!(got.algorithm, want.algorithm, "{ctx}: algorithm");
+        // bit-identical R
+        assert_eq!(got.r.rows, want.r.rows, "{ctx}");
+        for (a, b) in got.r.data.iter().zip(&want.r.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: R drifted");
+        }
+        // bit-identical virtual clock (the paper's evaluation metric)
+        assert_eq!(
+            got.stats.virtual_secs().to_bits(),
+            want.stats.virtual_secs().to_bits(),
+            "{ctx}: virtual_secs drifted ({} vs {})",
+            got.stats.virtual_secs(),
+            want.stats.virtual_secs()
+        );
+        assert_eq!(got.stats.steps.len(), want.stats.steps.len(), "{ctx}: step count");
+        // bit-identical Q (read out of the concurrent run's namespace)
+        let got_q = got
+            .q
+            .as_ref()
+            .map(|qh| svc.get_matrix(qh).unwrap().data)
+            .unwrap_or_default();
+        assert_eq!(got_q.len(), want_q.len(), "{ctx}: Q shape");
+        for (a, b) in got_q.iter().zip(want_q) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: Q drifted");
+        }
+        // bit-identical singular values
+        match (got.sigma(), want.sigma()) {
+            (Some(a), Some(b)) => {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: sigma drifted");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("{ctx}: sigma presence differs"),
+        }
+        // auto decisions agree
+        match (&got.auto, &want.auto) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.kappa_estimate.to_bits(), b.kappa_estimate.to_bits(), "{ctx}");
+                assert_eq!(a.chosen, b.chosen, "{ctx}");
+            }
+            (None, None) => {}
+            _ => panic!("{ctx}: auto presence differs"),
+        }
+    }
+}
+
+/// Concurrent jobs on ≥ 2 workers genuinely overlap: the aggregate
+/// wall-clock from first submit to last completion is lower than the
+/// sum of per-job running times (the `mrtsqr batch` headline number).
+#[test]
+fn concurrent_jobs_overlap_in_wall_time() {
+    let svc = mrtsqr::TsqrSession::builder()
+        .backend(Backend::Native)
+        .rows_per_task(75)
+        .host_threads(2)
+        .service_workers(2)
+        .build_service()
+        .unwrap();
+    let inputs: Vec<_> = (0..4)
+        .map(|i| svc.ingest_gaussian(&format!("A{i}"), 60_000, 8, i as u64).unwrap())
+        .collect();
+    let t0 = Instant::now();
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|h| svc.submit(h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr)).unwrap())
+        .collect();
+    for h in &handles {
+        h.wait().unwrap();
+    }
+    let aggregate = t0.elapsed().as_secs_f64();
+    let sum_walls: f64 = handles.iter().map(|h| h.wall_secs().unwrap()).sum();
+    assert!(
+        aggregate < sum_walls,
+        "aggregate {aggregate:.3}s must be below the sum of per-job walls {sum_walls:.3}s \
+         — jobs did not overlap"
+    );
+}
+
+#[test]
+fn queue_applies_backpressure_at_capacity() {
+    let svc = builder().service_workers(0).queue_capacity(2).build_service().unwrap();
+    let h = svc.ingest_gaussian("A", 100, 4, 1).unwrap();
+    let j0 = svc.try_submit(&h, FactorizationRequest::r_only()).unwrap();
+    let _j1 = svc.try_submit(&h, FactorizationRequest::r_only()).unwrap();
+    // full: non-blocking submission reports back-pressure
+    let err = svc.try_submit(&h, FactorizationRequest::r_only()).unwrap_err();
+    assert!(err.to_string().contains("capacity"), "{err}");
+    assert_eq!(svc.pending(), 2);
+
+    // a blocking submit parks until a drain frees a slot
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let svc = &svc;
+        let h = &h;
+        let blocked = scope.spawn(move || {
+            let j = svc.submit(h, FactorizationRequest::r_only()).unwrap();
+            (j, Instant::now())
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(!blocked.is_finished(), "submit must block at capacity");
+        svc.drain_now();
+        let (j3, unblocked_at) = blocked.join().unwrap();
+        assert!(unblocked_at.duration_since(t0).as_millis() >= 50);
+        // the late submission is queued; drain it too
+        svc.drain_now();
+        j3.wait().unwrap();
+    });
+    j0.wait().unwrap();
+}
+
+#[test]
+fn failed_job_is_isolated_from_the_queue() {
+    let svc = builder().service_workers(1).build_service().unwrap();
+    let good = svc.ingest_gaussian("A", 200, 4, 1).unwrap();
+    let poisoned = MatrixHandle::new("no-such-file", 200, 4);
+    let j0 = svc.submit(&good, FactorizationRequest::qr()).unwrap();
+    let j1 = svc.submit(&poisoned, FactorizationRequest::qr()).unwrap();
+    let j2 = svc.submit(&good, FactorizationRequest::svd()).unwrap();
+    assert!(j0.wait().is_ok());
+    let err = j1.wait().unwrap_err();
+    assert!(format!("{err:#}").contains("no-such-file"), "{err:#}");
+    assert_eq!(j1.status(), JobStatus::Failed);
+    // the failure neither wedged the worker nor poisoned the cluster
+    assert!(j2.wait().is_ok(), "queue must survive a failed job");
+    let j3 = svc.submit(&good, FactorizationRequest::r_only()).unwrap();
+    assert!(j3.wait().is_ok(), "service must accept work after a failure");
+}
+
+#[test]
+fn cancel_before_run_skips_the_job() {
+    let svc = builder().service_workers(0).build_service().unwrap();
+    let h = svc.ingest_gaussian("A", 120, 4, 1).unwrap();
+    let doomed = svc.submit(&h, FactorizationRequest::qr()).unwrap();
+    let kept = svc.submit(&h, FactorizationRequest::qr()).unwrap();
+    assert!(doomed.cancel(), "queued job must be cancellable");
+    assert!(!doomed.cancel(), "second cancel is a no-op");
+    assert_eq!(doomed.status(), JobStatus::Cancelled);
+    // only the surviving job executes
+    assert_eq!(svc.drain_now(), 1);
+    assert!(doomed.wait().is_err());
+    assert!(doomed.try_result().unwrap().is_err());
+    let fact = kept.wait().unwrap();
+    assert!(!kept.cancel(), "finished job cannot be cancelled");
+    // the cancelled job left nothing in the DFS
+    let cancelled_files =
+        svc.with_dfs(|d| d.list().iter().filter(|f| f.starts_with("job-0/")).count());
+    assert_eq!(cancelled_files, 0);
+    assert!(svc.get_matrix(fact.q.as_ref().unwrap()).is_ok());
+}
+
+/// The DFS temp-name collision regression (satellite): two identical
+/// requests — identical seq-derived temp names — over one shared DFS.
+/// Job namespaces must keep the first job's Q intact after the second
+/// runs; pre-namespace, the second run's `tmp/…` files overwrote it.
+#[test]
+fn identical_jobs_do_not_clobber_each_other_on_the_shared_dfs() {
+    let svc = builder().service_workers(2).build_service().unwrap();
+    let h = svc.ingest_gaussian("A", 400, 5, 9).unwrap();
+    let req = FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr);
+    let j0 = svc.submit(&h, req.clone()).unwrap();
+    let j1 = svc.submit(&h, req).unwrap();
+    let (f0, f1) = (j0.wait().unwrap(), j1.wait().unwrap());
+    let (q0h, q1h) = (f0.q.as_ref().unwrap(), f1.q.as_ref().unwrap());
+    assert_ne!(q0h.file, q1h.file, "Q files must live in distinct job namespaces");
+    let q0 = svc.get_matrix(q0h).unwrap();
+    let q1 = svc.get_matrix(q1h).unwrap();
+    // same input, same algorithm -> same factor, in two intact copies
+    for (a, b) in q0.data.iter().zip(&q1.data) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert!(q0.orthogonality_error() < 1e-12);
+}
+
+/// Fault injection stays deterministic under the service: draws come
+/// from per-job streams keyed by (cluster seed, job id), so a
+/// concurrent run reproduces the serial run bit-for-bit even with
+/// faults firing.
+#[test]
+fn fault_draws_are_deterministic_per_job_under_concurrency() {
+    let policy = FaultPolicy { probability: 0.2, max_attempts: 16, waste_fraction: 0.5 };
+    let run = |workers: usize| {
+        let svc = builder()
+            .fault_policy(policy, 777)
+            .service_workers(workers)
+            .build_service()
+            .unwrap();
+        let h = svc.ingest_gaussian("A", 800, 5, 3).unwrap();
+        // single-threaded submission fixes the job-id assignment
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                svc.submit(&h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr))
+                    .unwrap()
+            })
+            .collect();
+        if workers == 0 {
+            svc.drain_now();
+        }
+        handles
+            .iter()
+            .map(|j| {
+                let f = j.wait().unwrap();
+                (f.stats.total_faults(), f.stats.virtual_secs())
+            })
+            .collect::<Vec<_>>()
+    };
+    let serial = run(0);
+    let concurrent = run(3);
+    assert!(serial.iter().map(|(f, _)| f).sum::<usize>() > 0, "faults should fire at p=0.2");
+    for (i, ((fa, va), (fb, vb))) in serial.iter().zip(&concurrent).enumerate() {
+        assert_eq!(fa, fb, "job {i}: fault draws drifted");
+        assert_eq!(va.to_bits(), vb.to_bits(), "job {i}: virtual clock drifted");
+    }
+}
