@@ -119,6 +119,60 @@ fn batch_throughput(compute: &SharedCompute, workers: usize) -> Result<(f64, f64
     Ok((serial_secs, pooled_secs, 4))
 }
 
+/// Shard-scaling leg: the same 8-job batch through an engine pool of 1
+/// vs 4 shards, one service worker per shard. Results are bit-identical
+/// (tests/shards.rs) — what moves is the batch wall clock, because jobs
+/// on different shards share no engine lock at all. This is the third
+/// `BENCH_*.json` trajectory number (`shards` section since BENCH_4).
+fn shard_scaling(compute: &SharedCompute) -> Result<(f64, f64, usize)> {
+    let quick = mrtsqr::util::bench::quick_mode();
+    let rows = if quick { 20_000 } else { 120_000 };
+    const JOBS: usize = 8;
+    let run = |shards: usize| -> Result<f64> {
+        let svc = TsqrSession::builder()
+            .compute(compute.clone())
+            .rows_per_task(rows / 200)
+            .engine_shards(shards)
+            .service_workers(1)
+            .queue_capacity(JOBS)
+            .build_service()?;
+        let inputs: Vec<_> = (0..JOBS)
+            .map(|i| svc.ingest_gaussian(&format!("A{i}"), rows, 8, i as u64))
+            .collect::<Result<_>>()?;
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = inputs
+            .iter()
+            .map(|h| {
+                svc.submit(h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr))
+            })
+            .collect::<Result<_>>()?;
+        for h in &handles {
+            h.wait()?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    };
+    let one_shard_secs = run(1)?;
+    let four_shard_secs = run(4)?;
+    let mut table = Table::new(
+        "Engine-shard pool — 8-job batch, 1 worker/shard (results identical by construction)",
+        &["shards", "wall (s)", "jobs/s", "speedup"],
+    );
+    table.row(&[
+        "1".into(),
+        format!("{one_shard_secs:.3}"),
+        format!("{:.2}", JOBS as f64 / one_shard_secs),
+        "1.00x".into(),
+    ]);
+    table.row(&[
+        "4".into(),
+        format!("{four_shard_secs:.3}"),
+        format!("{:.2}", JOBS as f64 / four_shard_secs),
+        format!("{:.2}x", one_shard_secs / four_shard_secs),
+    ]);
+    table.print();
+    Ok((one_shard_secs, four_shard_secs, JOBS))
+}
+
 fn main() -> Result<()> {
     let (compute, backend_name) = Backend::Auto.resolve()?;
     println!("backend: {backend_name}");
@@ -175,6 +229,7 @@ fn main() -> Result<()> {
     let (wall_serial, wall_pool, virt) = wall_clock_speedup(&compute, pool)?;
     let svc_workers = pool.min(4).max(2);
     let (batch_serial, batch_pooled, batch_jobs) = batch_throughput(&compute, svc_workers)?;
+    let (shards1_secs, shards4_secs, shard_jobs) = shard_scaling(&compute)?;
 
     // BENCH trajectory: `--bench-json PATH` records the wall-clock
     // numbers (ROADMAP asks for BENCH_*.json entries per PR)
@@ -204,6 +259,20 @@ fn main() -> Result<()> {
                     (
                         "throughput_jobs_per_sec",
                         Json::num(batch_jobs as f64 / batch_pooled.max(1e-9)),
+                    ),
+                ]),
+            ),
+            (
+                "shards",
+                Json::obj([
+                    ("jobs", Json::num(shard_jobs as f64)),
+                    ("workers_per_shard", Json::num(1.0)),
+                    ("shards_1_secs", Json::num(shards1_secs)),
+                    ("shards_4_secs", Json::num(shards4_secs)),
+                    ("speedup", Json::num(shards1_secs / shards4_secs)),
+                    (
+                        "throughput_jobs_per_sec",
+                        Json::num(shard_jobs as f64 / shards4_secs.max(1e-9)),
                     ),
                 ]),
             ),

@@ -9,6 +9,7 @@
 use super::records::Record;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Named key-value file store with byte accounting.
 ///
@@ -18,9 +19,16 @@ use std::collections::BTreeMap;
 /// factor/metadata files (`O(m₁·n²)`) stay at 1.0 — because when the
 /// simulation runs the paper's real task counts, those files already
 /// have paper-scale size (see DESIGN.md §2).
+///
+/// Files are reference-counted (`Arc`) so independent stores — the
+/// engine-shard pool behind a [`crate::service::TsqrService`] keeps one
+/// `Dfs` per shard — can share one physical copy of a large ingested
+/// matrix: [`Dfs::export_file`] / [`Dfs::import_file`] move a handle in
+/// O(1), and copy-on-write ([`Arc::make_mut`]) keeps later appends to
+/// either side private.
 #[derive(Debug, Default)]
 pub struct Dfs {
-    files: BTreeMap<String, Vec<Record>>,
+    files: BTreeMap<String, Arc<Vec<Record>>>,
     scales: BTreeMap<String, f64>,
 }
 
@@ -50,12 +58,32 @@ impl Dfs {
 
     /// Create/overwrite a file from records.
     pub fn put(&mut self, name: &str, records: Vec<Record>) {
-        self.files.insert(name.to_string(), records);
+        self.files.insert(name.to_string(), Arc::new(records));
     }
 
-    /// Append records to a file (creating it if needed).
+    /// Append records to a file (creating it if needed). Appending to a
+    /// file whose records are shared with another store detaches this
+    /// store's copy first (copy-on-write).
     pub fn append(&mut self, name: &str, mut records: Vec<Record>) {
-        self.files.entry(name.to_string()).or_default().append(&mut records);
+        Arc::make_mut(self.files.entry(name.to_string()).or_default()).append(&mut records);
+    }
+
+    /// Hand out a file's shared record handle plus its virtual scale —
+    /// the cheap (O(1)) half of a cross-shard copy. The records behind
+    /// the `Arc` are immutable from the receiver's perspective; a later
+    /// `append` on either store detaches via copy-on-write.
+    pub fn export_file(&self, name: &str) -> Result<(Arc<Vec<Record>>, f64)> {
+        match self.files.get(name) {
+            Some(recs) => Ok((recs.clone(), self.scale(name))),
+            None => bail!("dfs: no such file {name:?}"),
+        }
+    }
+
+    /// Install an exported file handle under `name` (overwriting any
+    /// existing file), carrying its virtual scale along.
+    pub fn import_file(&mut self, name: &str, records: Arc<Vec<Record>>, scale: f64) {
+        self.files.insert(name.to_string(), records);
+        self.set_scale(name, scale);
     }
 
     pub fn exists(&self, name: &str) -> bool {
@@ -85,7 +113,7 @@ impl Dfs {
 
     pub fn get(&self, name: &str) -> Result<&[Record]> {
         match self.files.get(name) {
-            Some(recs) => Ok(recs),
+            Some(recs) => Ok(recs.as_slice()),
             None => bail!("dfs: no such file {name:?}"),
         }
     }
@@ -228,6 +256,36 @@ mod tests {
         assert!(dfs.delete("a"));
         assert!(!dfs.delete("a"));
         assert!(!dfs.exists("a"));
+    }
+
+    #[test]
+    fn export_import_shares_one_physical_copy() {
+        let mut src = Dfs::new();
+        src.put("A", mk_records(100, 3));
+        src.set_scale("A", 7.5);
+        let (recs, scale) = src.export_file("A").unwrap();
+        let mut dst = Dfs::new();
+        dst.import_file("A", recs, scale);
+        // same bytes, same scale, and physically the same allocation
+        assert_eq!(src.get("A").unwrap(), dst.get("A").unwrap());
+        assert_eq!(dst.scale("A"), 7.5);
+        let (a, _) = src.export_file("A").unwrap();
+        let (b, _) = dst.export_file("A").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "import must not deep-copy");
+        assert!(src.export_file("missing").is_err());
+    }
+
+    #[test]
+    fn append_after_import_copies_on_write() {
+        let mut src = Dfs::new();
+        src.put("A", mk_records(4, 1));
+        let (recs, scale) = src.export_file("A").unwrap();
+        let mut dst = Dfs::new();
+        dst.import_file("A", recs, scale);
+        dst.append("A", mk_records(2, 1));
+        assert_eq!(dst.file_records("A").unwrap(), 6);
+        // the source's copy is untouched by the receiver's append
+        assert_eq!(src.file_records("A").unwrap(), 4);
     }
 
     #[test]

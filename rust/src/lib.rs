@@ -11,13 +11,17 @@
 //!   [`session::SessionBuilder`] via
 //!   [`session::SessionBuilder::build_service`]) turns the one-caller
 //!   session into a concurrent job service: `submit(&handle, request)`
-//!   returns a [`service::JobHandle`] immediately, a bounded
-//!   priority-FIFO queue feeds worker threads that interleave jobs
-//!   step-by-step over one lock-guarded cluster (shared engine + DFS +
-//!   backend), per-job `job-<id>/` DFS namespaces keep concurrent
-//!   intermediates collision-free, and results are bit-identical to
-//!   serial execution. The `mrtsqr batch` subcommand drives it from a
-//!   manifest.
+//!   returns a [`service::JobHandle`] immediately, and a router places
+//!   each job on one of [`session::SessionBuilder::engine_shards`]
+//!   independent engine shards (least-loaded, or
+//!   [`session::Placement::Pinned`]) — each shard its own lock-guarded
+//!   cluster with its own DFS subtree and bounded priority-FIFO queue,
+//!   all sharing one pooled backend — so jobs on different shards run
+//!   with zero cross-job locking while per-job
+//!   `shard-<k>/job-<id>/` DFS namespaces keep intermediates
+//!   collision-free. Results are bit-identical to serial, unsharded
+//!   execution. The `mrtsqr batch` subcommand drives it from a
+//!   manifest (`--shards N`).
 //! * **L4 ([`session`]) — the single-caller API.** A [`session::TsqrSession`]
 //!   built fluently ([`session::TsqrSession::builder`]) bundles the
 //!   cluster, disk model, fault policy, compute backend, and tuning
@@ -85,4 +89,4 @@ pub mod workload;
 pub use coordinator::{Algorithm, Coordinator, MatrixHandle};
 pub use linalg::Matrix;
 pub use service::{JobHandle, JobId, JobStatus, TsqrService};
-pub use session::{Backend, Factorization, FactorizationRequest, Priority, TsqrSession};
+pub use session::{Backend, Factorization, FactorizationRequest, Placement, Priority, TsqrSession};

@@ -137,10 +137,14 @@ fn cmd_sigma(args: &Args) -> Result<()> {
 
 /// Run a manifest of factorization requests concurrently through one
 /// [`mrtsqr::service::TsqrService`], printing per-job stats plus
-/// aggregate throughput. `--jobs N` sets the worker count (default 4),
+/// aggregate throughput. `--jobs N` sets the per-shard worker count
+/// (default 4), `--shards N` the engine-shard pool size (default 1),
 /// `--serial` drains the queue on one thread instead (the baseline the
 /// aggregate numbers are compared against), `--json PATH` additionally
-/// writes the report as JSON.
+/// writes the report as JSON — including a per-job `result_digest` of
+/// the exact R/Σ bits, so two reports taken at different `--shards`
+/// values can be diffed for the sharding-determinism invariant with a
+/// one-line `grep | diff`.
 fn cmd_batch(args: &Args) -> Result<()> {
     let manifest_path = args
         .get("manifest")
@@ -152,6 +156,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
     let entries = parse_manifest(&text)?;
     let serial = args.flag("serial");
     let workers = if serial { 0 } else { args.get_usize("jobs", 4).max(1) };
+    let shards = args.get_usize("shards", 1).max(1);
 
     // serial mode has no workers draining during submission, so the
     // queue must hold the whole manifest or submit() would block forever
@@ -159,10 +164,12 @@ fn cmd_batch(args: &Args) -> Result<()> {
     let svc = session_builder(args)
         .service_workers(workers)
         .queue_capacity(queue)
+        .engine_shards(shards)
         .build_service()?;
     println!(
-        "service        : backend={} workers={} queue-capacity={}",
+        "service        : backend={} shards={} workers={} (total) queue-capacity={}/shard",
         svc.backend_desc(),
+        svc.shards(),
         svc.workers(),
         svc.capacity()
     );
@@ -185,18 +192,23 @@ fn cmd_batch(args: &Args) -> Result<()> {
 
     let mut table = Table::new(
         "Batch report (wall = running->done, queue wait excluded)",
-        &["job", "label", "request", "priority", "status", "virtual (s)", "wall (s)"],
+        &["job", "label", "request", "priority", "shard", "status", "virtual (s)", "wall (s)"],
     );
     let mut job_rows = Vec::new();
     let (mut sum_wall, mut sum_virtual, mut failed) = (0.0f64, 0.0f64, 0usize);
+    // per-shard aggregates: jobs served and summed job wall-clock
+    let mut shard_jobs = vec![0usize; svc.shards()];
+    let mut shard_wall = vec![0.0f64; svc.shards()];
     for (entry, handle) in entries.iter().zip(&handles) {
-        let (status, virt) = match handle.wait() {
-            Ok(fact) => {
-                (format!("done ({})", fact.algorithm.cli_name()), fact.stats.virtual_secs())
-            }
+        let (status, virt, digest) = match handle.wait() {
+            Ok(fact) => (
+                format!("done ({})", fact.algorithm.cli_name()),
+                fact.stats.virtual_secs(),
+                Some(fact.result_digest()),
+            ),
             Err(err) => {
                 failed += 1;
-                (format!("FAILED: {err:#}"), 0.0)
+                (format!("FAILED: {err:#}"), 0.0, None)
             }
         };
         // failed-while-running jobs report their measured wall too;
@@ -204,11 +216,15 @@ fn cmd_batch(args: &Args) -> Result<()> {
         let wall = handle.wall_secs().unwrap_or(0.0);
         sum_wall += wall;
         sum_virtual += virt;
+        let shard = svc.shard_of(handle.id()).unwrap_or(0);
+        shard_jobs[shard] += 1;
+        shard_wall[shard] += wall;
         table.row(&[
             handle.id().to_string(),
             entry.name.clone(),
             entry.describe(),
             entry.priority.name().into(),
+            shard.to_string(),
             status.clone(),
             format!("{virt:.1}"),
             format!("{wall:.3}"),
@@ -218,9 +234,17 @@ fn cmd_batch(args: &Args) -> Result<()> {
             ("label", Json::str(&entry.name)),
             ("request", Json::str(entry.describe())),
             ("priority", Json::str(entry.priority.name())),
+            ("shard", Json::num(shard as f64)),
             ("status", Json::str(status)),
             ("virtual_secs", Json::num(virt)),
             ("wall_secs", Json::num(wall)),
+            (
+                "result_digest",
+                match digest {
+                    Some(d) => Json::str(d),
+                    None => Json::Null,
+                },
+            ),
         ]));
     }
     let elapsed = t0.elapsed().as_secs_f64();
@@ -239,11 +263,29 @@ fn cmd_batch(args: &Args) -> Result<()> {
     }
     println!("throughput     : {:.2} jobs/s", jobs as f64 / elapsed.max(1e-9));
     println!("virtual total  : {sum_virtual:.1} s");
+    if svc.shards() > 1 {
+        for (k, (n, w)) in shard_jobs.iter().zip(&shard_wall).enumerate() {
+            println!("shard {k:<8} : {n} jobs, {w:.3} s summed wall");
+        }
+    }
 
     if let Some(path) = args.get("json") {
+        let shard_rows: Vec<Json> = shard_jobs
+            .iter()
+            .zip(&shard_wall)
+            .enumerate()
+            .map(|(k, (n, w))| {
+                Json::obj([
+                    ("shard", Json::num(k as f64)),
+                    ("jobs", Json::num(*n as f64)),
+                    ("sum_job_wall_secs", Json::num(*w)),
+                ])
+            })
+            .collect();
         let report = Json::obj([
             ("manifest", Json::str(&manifest_path)),
             ("workers", Json::num(workers as f64)),
+            ("shards", Json::num(svc.shards() as f64)),
             ("host_threads", Json::num(svc.host_threads() as f64)),
             ("jobs", Json::num(jobs as f64)),
             ("failed", Json::num(failed as f64)),
@@ -251,6 +293,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
             ("aggregate_wall_secs", Json::num(elapsed)),
             ("throughput_jobs_per_sec", Json::num(jobs as f64 / elapsed.max(1e-9))),
             ("virtual_secs_total", Json::num(sum_virtual)),
+            ("per_shard", Json::Arr(shard_rows)),
             ("per_job", Json::Arr(job_rows)),
         ]);
         std::fs::write(path, report.render() + "\n")
@@ -363,8 +406,8 @@ const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|batch|stability|faults|model|in
                   --algo <auto|cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder>
                   --beta-r s/GB --beta-w s/GB --byte-scale X
                   --host-threads N   (worker threads for task bodies; results identical for any N)
-  batch options:  --manifest FILE --jobs N --queue N [--serial] [--json PATH]
-                  (manifest lines: name rows cols seed <qr|r|svd|sigma> <algo> [low|normal|high])
+  batch options:  --manifest FILE --jobs N --shards N --queue N [--serial] [--json PATH]
+                  (manifest lines: name rows cols seed <qr|r|svd|sigma> <algo> [low|normal|high] [@shard])
   see README.md for the full list";
 
 fn main() -> Result<()> {

@@ -29,6 +29,15 @@
 //! fault duration factors) — measured host compute time is reported in
 //! the wall-clock fields but never folded into `virtual_secs`, which is
 //! what makes the guarantee hold (`rust/tests/parallel.rs` enforces it).
+//!
+//! The same determinism carries one level up: the serving layer runs a
+//! *pool* of identically-configured engines
+//! ([`crate::session::SessionBuilder::engine_shards`]) and, because an
+//! engine's outputs depend only on its inputs and the job-scoped fault
+//! RNG — never on engine identity — which engine of the pool serves a
+//! job is invisible in everything but wall clock
+//! ([`crate::mapreduce::JobStats::shard`] records the placement;
+//! `rust/tests/shards.rs` enforces the invariant).
 
 use super::fault::{draw_attempts, AttemptOutcome, FaultPolicy};
 use super::job::{Emitter, JobSpec, KeyGroup};

@@ -55,6 +55,12 @@ impl StepStats {
 #[derive(Debug, Clone, Default)]
 pub struct JobStats {
     pub steps: Vec<StepStats>,
+    /// Index of the engine shard the job ran on (0 for sessions and
+    /// single-shard services). Stamped by the service router; like
+    /// `host_threads`, it is a *placement* record — every modelled
+    /// metric in `steps` is bit-identical whatever shard served the
+    /// job (`rust/tests/shards.rs` enforces this).
+    pub shard: usize,
 }
 
 impl JobStats {

@@ -3,19 +3,23 @@
 //! One job per line, whitespace-separated, `#` comments:
 //!
 //! ```text
-//! # name  rows   cols  seed  want   algo     [priority]
+//! # name  rows   cols  seed  want   algo     [priority] [@shard]
 //! A1      40000  10    1     qr     auto
 //! A2      80000  25    2     svd    direct   high
-//! A3      40000  10    3     r      auto     low
-//! A4      20000  8     4     sigma  indirect
+//! A3      40000  10    3     r      auto     low        @1
+//! A4      20000  8     4     sigma  indirect @0
 //! ```
 //!
 //! `want`: `qr` | `r` | `svd` | `sigma`; `algo`: `auto` or any fixed
 //! CLI algorithm name ([`Algorithm::parse`]); `priority` defaults to
-//! `normal`.
+//! `normal`. A trailing `@<k>` pins the job to engine shard `k`
+//! ([`crate::session::Placement::Pinned`]) instead of letting the
+//! service's least-loaded router place it; it errors at submission
+//! when the service has fewer than `k+1` shards (`mrtsqr batch
+//! --shards N`).
 
 use crate::coordinator::Algorithm;
-use crate::session::{AlgoChoice, FactorizationRequest, Priority, Want};
+use crate::session::{AlgoChoice, FactorizationRequest, Placement, Priority, Want};
 use anyhow::{bail, Context, Result};
 
 /// One parsed manifest line: the input to generate and the request to
@@ -31,6 +35,8 @@ pub struct BatchEntry {
     pub want: Want,
     pub algo: AlgoChoice,
     pub priority: Priority,
+    /// Engine-shard placement (`@<k>` in the manifest; `Auto` = routed).
+    pub placement: Placement,
 }
 
 impl BatchEntry {
@@ -45,6 +51,10 @@ impl BatchEntry {
         let base = match self.algo {
             AlgoChoice::Auto => base.auto(),
             AlgoChoice::Fixed(algo) => base.with_algorithm(algo),
+        };
+        let base = match self.placement {
+            Placement::Auto => base,
+            Placement::Pinned(k) => base.pinned(k),
         };
         base.with_priority(self.priority).labeled(self.name.clone())
     }
@@ -83,11 +93,32 @@ fn parse_algo(s: &str) -> Result<AlgoChoice> {
 }
 
 fn parse_line(fields: &[&str]) -> Result<BatchEntry> {
-    if !(6..=7).contains(&fields.len()) {
+    if !(6..=8).contains(&fields.len()) {
         bail!(
-            "expected `name rows cols seed want algo [priority]`, got {} fields",
+            "expected `name rows cols seed want algo [priority] [@shard]`, got {} fields",
             fields.len()
         );
+    }
+    // the optional trailing fields: a priority name and/or an `@<k>`
+    // shard pin, in either order
+    let mut priority = Priority::Normal;
+    let mut placement = Placement::Auto;
+    let mut seen_priority = false;
+    let mut seen_placement = false;
+    for field in &fields[6..] {
+        if let Some(shard) = field.strip_prefix('@') {
+            if seen_placement {
+                bail!("duplicate @shard field {field:?}");
+            }
+            placement = Placement::Pinned(shard.parse().context("@shard")?);
+            seen_placement = true;
+        } else {
+            if seen_priority {
+                bail!("duplicate priority field {field:?}");
+            }
+            priority = Priority::parse(field)?;
+            seen_priority = true;
+        }
     }
     Ok(BatchEntry {
         name: fields[0].to_string(),
@@ -96,10 +127,8 @@ fn parse_line(fields: &[&str]) -> Result<BatchEntry> {
         seed: fields[3].parse().context("seed")?,
         want: parse_want(fields[4])?,
         algo: parse_algo(fields[5])?,
-        priority: match fields.get(6) {
-            Some(p) => Priority::parse(p)?,
-            None => Priority::Normal,
-        },
+        priority,
+        placement,
     })
 }
 
@@ -130,12 +159,12 @@ mod tests {
     #[test]
     fn parses_the_doc_example() {
         let text = "\
-# name  rows   cols  seed  want   algo     [priority]
+# name  rows   cols  seed  want   algo     [priority] [@shard]
 A1      40000  10    1     qr     auto
 A2      80000  25    2     svd    direct   high
 
-A3      40000  10    3     r      auto     low   # trailing comment
-A4      20000  8     4     sigma  indirect
+A3      40000  10    3     r      auto     low   @1   # trailing comment
+A4      20000  8     4     sigma  indirect @0
 ";
         let jobs = parse_manifest(text).unwrap();
         assert_eq!(jobs.len(), 4);
@@ -143,12 +172,28 @@ A4      20000  8     4     sigma  indirect
         assert_eq!(jobs[0].want, Want::Qr);
         assert_eq!(jobs[0].algo, AlgoChoice::Auto);
         assert_eq!(jobs[0].priority, Priority::Normal);
+        assert_eq!(jobs[0].placement, Placement::Auto);
         assert_eq!(jobs[1].algo, AlgoChoice::Fixed(Algorithm::DirectTsqr));
         assert_eq!(jobs[1].priority, Priority::High);
         assert_eq!(jobs[2].want, Want::ROnly);
         assert_eq!(jobs[2].priority, Priority::Low);
+        assert_eq!(jobs[2].placement, Placement::Pinned(1));
         assert_eq!(jobs[3].want, Want::SingularValues);
+        assert_eq!(jobs[3].placement, Placement::Pinned(0));
+        assert_eq!(jobs[3].priority, Priority::Normal);
         assert_eq!(jobs[3].describe(), "sigma/indirect");
+    }
+
+    #[test]
+    fn shard_pin_and_priority_compose_in_either_order() {
+        let e = parse_manifest("A 100 4 7 qr direct @2 high").unwrap().remove(0);
+        assert_eq!(e.priority, Priority::High);
+        assert_eq!(e.placement, Placement::Pinned(2));
+        let req = e.request();
+        assert_eq!(req.placement, Placement::Pinned(2));
+        assert!(parse_manifest("A 100 4 7 qr direct @1 @2").is_err(), "duplicate pin");
+        assert!(parse_manifest("A 100 4 7 qr direct low high").is_err(), "duplicate priority");
+        assert!(parse_manifest("A 100 4 7 qr direct @x").is_err(), "non-numeric shard");
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! L5 — the concurrent job service: submit/await factorization jobs
-//! over one shared cluster.
+//! over a pool of engine shards.
 //!
 //! The paper's pitch is *throughput on a shared platform*: Direct TSQR
 //! wins because many independent map/reduce tasks keep the machine
@@ -26,56 +26,78 @@
 //!
 //! # Architecture
 //!
-//! * **Shared cluster.** One `Mutex<Engine>` (DFS + disk model + slot
-//!   config + host pool size) and one [`SharedCompute`] backend serve
-//!   every job. Workers lock the engine per *step* (one MapReduce
-//!   iteration or one leader DFS access), never across a whole job, so
-//!   in-flight jobs interleave their iterations — job A's serial
-//!   leader work (R⁻¹, Jacobi SVD, κ probes) overlaps job B's engine
-//!   waves, and each wave still fans out on the engine's
-//!   `host_threads` pool.
-//! * **Bounded priority-FIFO queue.** [`TsqrService::submit`] enqueues
-//!   and returns a [`JobHandle`]; at capacity it blocks
-//!   (back-pressure) while [`TsqrService::try_submit`] errors. Workers
-//!   dequeue the highest [`Priority`] first, FIFO within a priority.
+//! * **Engine shard pool.** The cluster is
+//!   [`crate::session::SessionBuilder::engine_shards`] independent
+//!   `Mutex<Engine>` shards — each with its own DFS subtree
+//!   (`shard-<k>/` prefix under which every job's `job-<id>/`
+//!   namespace nests) and its own virtual clock — all sharing one
+//!   pooled [`SharedCompute`] backend. Jobs on different shards run
+//!   with **zero cross-job locking**; only jobs placed on the *same*
+//!   shard contend for its engine, and even then only per *step* (one
+//!   MapReduce iteration or one leader DFS access), so same-shard jobs
+//!   still interleave their iterations while each wave fans out on the
+//!   engine's `host_threads` pool. The default of one shard is exactly
+//!   the historical single-engine service.
+//! * **Router.** [`TsqrService::submit`] assigns each job to the
+//!   least-loaded shard (queued + running jobs; ties broken
+//!   deterministically on the job id), or honors an explicit
+//!   [`Placement::Pinned`] on the request. Ingested matrices are
+//!   pinned to shard 0 (their *home* shard); routing a job elsewhere
+//!   O(1)-copies the input's reference-counted records onto the target
+//!   shard at submission ([`crate::dfs::Dfs::export_file`]). Placement
+//!   is pure scheduling: `shards=1` and `shards=N` produce
+//!   bit-identical `R`/`Q`/Σ/`virtual_secs`/fault draws per job
+//!   (`rust/tests/shards.rs`).
+//! * **Bounded priority-FIFO queues.** Each shard owns one;
+//!   [`TsqrService::submit`] enqueues on the routed shard and returns a
+//!   [`JobHandle`]; at that shard's capacity it blocks (back-pressure)
+//!   while [`TsqrService::try_submit`] errors. Each shard's
+//!   [`crate::session::SessionBuilder::service_workers`] worker
+//!   threads dequeue the highest [`Priority`] first, FIFO within a
+//!   priority.
 //! * **Per-job namespaces.** Every job's intermediates live under
-//!   `job-<id>/tmp/…`, fixing the latent collision of `seq`-derived
-//!   temp names on a shared DFS; [`TsqrService::evict_job`] sweeps a
-//!   namespace when its factors are no longer needed.
+//!   `<shard-ns>job-<id>/tmp/…` on its shard, fixing the latent
+//!   collision of `seq`-derived temp names on a shared DFS;
+//!   [`TsqrService::evict_job`] sweeps exactly that one namespace on
+//!   that one shard.
 //! * **Per-job fault streams.** Fault draws come from an RNG derived
 //!   from the cluster's fault seed and the job id
-//!   ([`Engine::run_with_rng`]), so injected faults are deterministic
-//!   however concurrently jobs interleave.
+//!   ([`Engine::run_with_rng`]) — never from the shard — so injected
+//!   faults are deterministic however jobs interleave *and* wherever
+//!   the router places them.
 //! * **One execution path.** Workers run
 //!   [`crate::session::TsqrSession::factorize`]'s own engine room
 //!   (`session::exec`) — a session *is* this service degenerated to
-//!   inline execution, and `rust/tests/service.rs` asserts
-//!   concurrent-vs-serial bit-identity of `R`, `Q`, Σ and
+//!   one shard and inline execution, and `rust/tests/service.rs` +
+//!   `rust/tests/shards.rs` assert concurrent-vs-serial and
+//!   sharded-vs-unsharded bit-identity of `R`, `Q`, Σ and
 //!   `virtual_secs`.
 //!
 //! `service_workers(0)` gives manual-drain mode: nothing runs in the
 //! background and [`TsqrService::drain_now`] /
 //! [`TsqrService::drain_one`] execute queued jobs on the calling
-//! thread in deterministic (priority, FIFO) order — the serial
-//! baseline the determinism tests compare against.
+//! thread in deterministic (priority, job-id) order across all shards
+//! — the serial baseline the determinism tests compare against.
 
 pub mod manifest;
 
 pub use manifest::{parse_manifest, BatchEntry};
 
-use crate::coordinator::{CoordOpts, Coordinator, MatrixHandle};
+use crate::coordinator::{lock_engine, CoordOpts, Coordinator, MatrixHandle};
 use crate::dfs::Dfs;
 use crate::linalg::Matrix;
 use crate::mapreduce::Engine;
 use crate::runtime::SharedCompute;
-use crate::session::{exec, Factorization, FactorizationRequest, MatrixWriter, Priority};
+use crate::session::{
+    exec, Factorization, FactorizationRequest, MatrixWriter, Placement, Priority,
+};
 use crate::util::rng::Rng;
 use crate::workload;
 use anyhow::{anyhow, bail, Result};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -83,25 +105,30 @@ use std::time::Instant;
 /// Service-only knobs carried by the [`crate::session::SessionBuilder`].
 #[derive(Debug, Clone, Copy)]
 pub struct ServiceConfig {
-    /// Background worker threads (`0` = manual drain).
+    /// Background worker threads *per engine shard* (`0` = manual
+    /// drain).
     pub workers: usize,
-    /// Bounded queue capacity (≥ 1).
+    /// Bounded queue capacity per shard (≥ 1).
     pub queue_capacity: usize,
+    /// Independent engine shards (≥ 1; 1 = the historical
+    /// single-engine service).
+    pub engine_shards: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { workers: 2, queue_capacity: 64 }
+        ServiceConfig { workers: 2, queue_capacity: 64, engine_shards: 1 }
     }
 }
 
 /// Identifier of one submitted job; also names its DFS namespace
-/// (`job-<id>/`).
+/// (`job-<id>/`, nested under its shard's `shard-<k>/` prefix on a
+/// sharded service).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct JobId(pub u64);
 
 impl JobId {
-    /// The job's DFS namespace prefix.
+    /// The job's DFS namespace prefix (relative to its shard's).
     pub fn namespace(&self) -> String {
         format!("job-{}/", self.0)
     }
@@ -239,46 +266,128 @@ struct QueueState {
     open: bool,
 }
 
-struct ServiceInner {
+/// One engine shard: an independent cluster (engine = DFS + disk model
+/// + slot config + host pool) with its own bounded job queue and its
+/// own DFS namespace prefix. Jobs on different shards never touch each
+/// other's locks.
+struct Shard {
+    /// `""` on a single-shard service (the historical names),
+    /// `shard-<k>/` otherwise.
+    ns: String,
     engine: Mutex<Engine>,
-    compute: SharedCompute,
-    opts: CoordOpts,
-    /// Base seed for per-job fault streams (see [`Engine::fault_seed`]).
-    fault_seed: u64,
     queue: Mutex<QueueState>,
-    /// Signalled when a job is enqueued (workers wait here).
+    /// Signalled when a job is enqueued (this shard's workers wait
+    /// here).
     ready: Condvar,
     /// Signalled when a job is dequeued (blocked `submit`s wait here).
     space: Condvar,
+    /// Queued + running jobs — the router's load metric.
+    load: AtomicUsize,
+}
+
+struct ServiceInner {
+    shards: Vec<Shard>,
+    compute: SharedCompute,
+    opts: CoordOpts,
+    /// Base seed for per-job fault streams (see [`Engine::fault_seed`]).
+    /// One seed for the whole pool: a job's fault draws depend on its
+    /// id only, never on its placement.
+    fault_seed: u64,
+    /// Per-shard queue capacity.
     capacity: usize,
+    /// Router decisions: job id → shard index (read by
+    /// [`TsqrService::shard_of`], freed by [`TsqrService::evict_job`]).
+    /// One small entry per live job; eviction is the retirement step
+    /// that reclaims it, so a service churning through unbounded jobs
+    /// should evict them as it retires them.
+    placements: Mutex<HashMap<u64, usize>>,
 }
 
 impl ServiceInner {
-    fn lock_queue(&self) -> MutexGuard<'_, QueueState> {
-        self.queue.lock().expect("service queue")
+    fn lock_queue(&self, shard: usize) -> MutexGuard<'_, QueueState> {
+        self.shards[shard].queue.lock().expect("service queue")
     }
 
-    /// Highest priority first, FIFO (smallest id) within a priority.
+    /// The one scheduling order, shared by the per-shard workers
+    /// ([`ServiceInner::pop_best`]) and the cross-shard manual drain
+    /// ([`TsqrService::drain_one`]): smaller key runs earlier —
+    /// highest priority first, FIFO (smallest job id) within a
+    /// priority.
+    fn sched_key(priority: Priority, id: JobId) -> (std::cmp::Reverse<Priority>, JobId) {
+        (std::cmp::Reverse(priority), id)
+    }
+
+    /// Pop the job [`ServiceInner::sched_key`] orders first.
     fn pop_best(jobs: &mut VecDeque<QueuedJob>) -> Option<QueuedJob> {
-        let mut best: Option<usize> = None;
-        for (i, job) in jobs.iter().enumerate() {
-            match best {
-                None => best = Some(i),
-                // strictly-greater keeps the earliest (lowest id) of a
-                // priority class, because the deque is in id order
-                Some(b) if job.priority > jobs[b].priority => best = Some(i),
-                Some(_) => {}
-            }
-        }
+        let best = jobs
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, job)| Self::sched_key(job.priority, job.id))
+            .map(|(i, _)| i);
         best.and_then(|i| jobs.remove(i))
     }
 
-    /// Run one dequeued job to a terminal state. Skips (and reports
-    /// `false` for) jobs cancelled while queued.
-    fn execute_job(&self, job: QueuedJob) -> bool {
+    /// Pick the shard for a job: an explicit pin (validated), or the
+    /// least-loaded shard with a deterministic job-id tie-break.
+    fn route(&self, id: JobId, placement: Placement) -> Result<usize> {
+        match placement {
+            Placement::Pinned(k) => {
+                if k >= self.shards.len() {
+                    bail!(
+                        "request pinned to shard {k}, but the service has {} shard(s)",
+                        self.shards.len()
+                    );
+                }
+                Ok(k)
+            }
+            Placement::Auto => {
+                let loads: Vec<usize> =
+                    self.shards.iter().map(|s| s.load.load(Ordering::Relaxed)).collect();
+                let min = *loads.iter().min().expect("at least one shard");
+                let tied: Vec<usize> = loads
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &l)| l == min)
+                    .map(|(i, _)| i)
+                    .collect();
+                Ok(tied[(id.0 as usize) % tied.len()])
+            }
+        }
+    }
+
+    /// Make `file` readable on `target`: a no-op when it is already
+    /// there, an O(1) reference-counted copy from whichever shard holds
+    /// it otherwise (source and target are locked one at a time, never
+    /// together). A file found nowhere is left alone — the job will
+    /// fail with the ordinary missing-input error when it runs.
+    fn stage_input(&self, target: usize, file: &str) {
+        if lock_engine(&self.shards[target].engine).dfs.exists(file) {
+            return;
+        }
+        let mut found = None;
+        for (i, shard) in self.shards.iter().enumerate() {
+            if i == target {
+                continue;
+            }
+            if let Ok(export) = lock_engine(&shard.engine).dfs.export_file(file) {
+                found = Some(export);
+                break;
+            }
+        }
+        if let Some((records, scale)) = found {
+            lock_engine(&self.shards[target].engine).dfs.import_file(file, records, scale);
+        }
+    }
+
+    /// Run one dequeued job to a terminal state on `shard_idx`. Skips
+    /// (and reports `false` for) jobs cancelled while queued.
+    fn execute_job(&self, shard_idx: usize, job: QueuedJob) -> bool {
+        let shard = &self.shards[shard_idx];
         {
             let mut slot = job.shared.slot.lock().expect("job slot");
             if matches!(*slot, JobSlot::Cancelled) {
+                drop(slot);
+                shard.load.fetch_sub(1, Ordering::Relaxed);
                 return false;
             }
             *slot = JobSlot::Running;
@@ -286,35 +395,42 @@ impl ServiceInner {
         let t0 = Instant::now();
         // catch_unwind so one panicking job reports Failed instead of
         // killing its worker thread and wedging every waiter
-        let outcome = catch_unwind(AssertUnwindSafe(|| self.run_request(&job)));
+        let outcome = catch_unwind(AssertUnwindSafe(|| self.run_request(shard_idx, &job)));
         let wall_secs = t0.elapsed().as_secs_f64();
         let slot_value = match outcome {
-            Ok(Ok(fact)) => JobSlot::Done { fact: Arc::new(fact), wall_secs },
+            Ok(Ok(mut fact)) => {
+                fact.stats.shard = shard_idx;
+                JobSlot::Done { fact: Arc::new(fact), wall_secs }
+            }
             Ok(Err(err)) => JobSlot::Failed { msg: format!("{err:#}"), wall_secs },
             Err(_) => JobSlot::Failed { msg: "job panicked".into(), wall_secs },
         };
         *job.shared.slot.lock().expect("job slot") = slot_value;
         job.shared.done.notify_all();
+        shard.load.fetch_sub(1, Ordering::Relaxed);
         true
     }
 
-    fn run_request(&self, job: &QueuedJob) -> Result<Factorization> {
+    fn run_request(&self, shard_idx: usize, job: &QueuedJob) -> Result<Factorization> {
+        let shard = &self.shards[shard_idx];
         // per-job fault stream: depends only on (cluster seed, job id),
-        // never on how concurrent jobs interleave their steps
+        // never on how concurrent jobs interleave their steps — or on
+        // which shard the router picked
         let fault_rng =
             Rng::new(self.fault_seed ^ (job.id.0 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let mut coord = Coordinator::shared(&self.engine, &*self.compute)
+        let mut coord = Coordinator::shared(&shard.engine, &*self.compute)
             .with_opts(self.opts)
-            .with_namespace(job.id.namespace())
+            .with_namespace(format!("{}{}", shard.ns, job.id.namespace()))
             .with_fault_rng(fault_rng);
         exec::execute(&mut coord, &job.input, &job.req)
     }
 }
 
-fn worker_loop(inner: Arc<ServiceInner>) {
+fn worker_loop(inner: Arc<ServiceInner>, shard_idx: usize) {
     loop {
         let job = {
-            let mut q = inner.lock_queue();
+            let shard = &inner.shards[shard_idx];
+            let mut q = shard.queue.lock().expect("service queue");
             loop {
                 if let Some(job) = ServiceInner::pop_best(&mut q.jobs) {
                     break Some(job);
@@ -322,17 +438,17 @@ fn worker_loop(inner: Arc<ServiceInner>) {
                 if !q.open {
                     break None;
                 }
-                q = inner.ready.wait(q).expect("service queue");
+                q = shard.ready.wait(q).expect("service queue");
             }
         };
         let Some(job) = job else { return };
-        inner.space.notify_one();
-        inner.execute_job(job);
+        inner.shards[shard_idx].space.notify_one();
+        inner.execute_job(shard_idx, job);
     }
 }
 
-/// A concurrent factorization service over one shared simulated
-/// cluster. Build with
+/// A concurrent factorization service over a pool of simulated cluster
+/// shards. Build with
 /// [`crate::session::SessionBuilder::build_service`]; see the
 /// [module docs](self) for the architecture.
 pub struct TsqrService {
@@ -344,28 +460,44 @@ pub struct TsqrService {
 
 impl TsqrService {
     pub(crate) fn start(
-        engine: Engine,
+        engines: Vec<Engine>,
         compute: SharedCompute,
         backend_desc: &'static str,
         opts: CoordOpts,
         cfg: ServiceConfig,
     ) -> TsqrService {
+        assert!(!engines.is_empty(), "a service needs at least one engine shard");
+        let nshards = engines.len();
+        let fault_seed = engines[0].fault_seed();
+        let shards: Vec<Shard> = engines
+            .into_iter()
+            .enumerate()
+            .map(|(k, engine)| Shard {
+                // single-shard services keep the historical un-prefixed
+                // names (bit-for-bit the pre-shard service)
+                ns: if nshards == 1 { String::new() } else { format!("shard-{k}/") },
+                engine: Mutex::new(engine),
+                queue: Mutex::new(QueueState { jobs: VecDeque::new(), open: true }),
+                ready: Condvar::new(),
+                space: Condvar::new(),
+                load: AtomicUsize::new(0),
+            })
+            .collect();
         let inner = Arc::new(ServiceInner {
-            fault_seed: engine.fault_seed(),
-            engine: Mutex::new(engine),
+            shards,
             compute,
             opts,
-            queue: Mutex::new(QueueState { jobs: VecDeque::new(), open: true }),
-            ready: Condvar::new(),
-            space: Condvar::new(),
+            fault_seed,
             capacity: cfg.queue_capacity.max(1),
+            placements: Mutex::new(HashMap::new()),
         });
-        let workers = (0..cfg.workers)
-            .map(|i| {
+        let workers = (0..nshards)
+            .flat_map(|k| (0..cfg.workers).map(move |i| (k, i)))
+            .map(|(k, i)| {
                 let inner = inner.clone();
                 std::thread::Builder::new()
-                    .name(format!("tsqr-worker-{i}"))
-                    .spawn(move || worker_loop(inner))
+                    .name(format!("tsqr-worker-{k}-{i}"))
+                    .spawn(move || worker_loop(inner, k))
                     .expect("spawn service worker")
             })
             .collect();
@@ -377,31 +509,55 @@ impl TsqrService {
         self.backend_desc
     }
 
-    /// Background worker threads serving the queue.
+    /// Total background worker threads serving the queues
+    /// ([`crate::session::SessionBuilder::service_workers`] per shard).
     pub fn workers(&self) -> usize {
         self.workers.len()
     }
 
-    /// Bounded queue capacity (submissions beyond it block).
+    /// Engine shards in the pool.
+    pub fn shards(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    /// Bounded per-shard queue capacity (submissions beyond it block).
     pub fn capacity(&self) -> usize {
         self.inner.capacity
     }
 
     /// Host worker threads each job's map/reduce waves fan out on (the
-    /// cluster's realized `ClusterConfig::host_threads`).
+    /// cluster's realized `ClusterConfig::host_threads`; every shard
+    /// shares the configuration).
     pub fn host_threads(&self) -> usize {
-        lock_engine(&self.inner.engine).cluster.host_threads
+        lock_engine(&self.inner.shards[0].engine).cluster.host_threads
     }
 
-    /// Jobs currently queued (not yet picked up by a worker).
+    /// Jobs currently queued across all shards (not yet picked up by a
+    /// worker).
     pub fn pending(&self) -> usize {
-        self.inner.lock_queue().jobs.len()
+        (0..self.inner.shards.len())
+            .map(|k| self.inner.lock_queue(k).jobs.len())
+            .sum()
+    }
+
+    /// The shard the router assigned to `id` (`None` for unknown or
+    /// already-evicted jobs). For completed jobs the same index is
+    /// recorded durably in the result's
+    /// [`crate::mapreduce::JobStats::shard`].
+    pub fn shard_of(&self, id: JobId) -> Option<usize> {
+        self.inner.placements.lock().expect("placements").get(&id.0).copied()
     }
 
     // ----------------------------------------------------- submission
 
-    fn enqueue(&self, q: &mut QueueState, input: &MatrixHandle, req: FactorizationRequest) -> JobHandle {
-        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+    fn enqueue(
+        &self,
+        shard_idx: usize,
+        q: &mut QueueState,
+        id: JobId,
+        input: &MatrixHandle,
+        req: FactorizationRequest,
+    ) -> JobHandle {
         let shared = Arc::new(JobShared { slot: Mutex::new(JobSlot::Queued), done: Condvar::new() });
         let handle = JobHandle { id, label: req.label.clone(), shared: shared.clone() };
         q.jobs.push_back(QueuedJob {
@@ -411,60 +567,101 @@ impl TsqrService {
             req,
             shared,
         });
-        self.inner.ready.notify_one();
+        let shard = &self.inner.shards[shard_idx];
+        shard.load.fetch_add(1, Ordering::Relaxed);
+        self.inner.placements.lock().expect("placements").insert(id.0, shard_idx);
+        shard.ready.notify_one();
         handle
     }
 
+    /// Route a job: allocate its id, pick its shard, and stage its
+    /// input there.
+    fn place(&self, input: &MatrixHandle, req: &FactorizationRequest) -> Result<(JobId, usize)> {
+        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let shard_idx = self.inner.route(id, req.placement)?;
+        self.inner.stage_input(shard_idx, &input.file);
+        Ok((id, shard_idx))
+    }
+
     /// Submit a job and return immediately with its [`JobHandle`]. At
-    /// queue capacity this *blocks* until a worker (or drain) frees a
-    /// slot — back-pressure, not unbounded buffering.
+    /// the routed shard's queue capacity this *blocks* until a worker
+    /// (or drain) frees a slot — back-pressure, not unbounded
+    /// buffering.
     pub fn submit(&self, input: &MatrixHandle, req: FactorizationRequest) -> Result<JobHandle> {
-        let mut q = self.inner.lock_queue();
+        let (id, shard_idx) = self.place(input, &req)?;
+        let shard = &self.inner.shards[shard_idx];
+        let mut q = self.inner.lock_queue(shard_idx);
         while q.open && q.jobs.len() >= self.inner.capacity {
-            q = self.inner.space.wait(q).expect("service queue");
+            q = shard.space.wait(q).expect("service queue");
         }
         if !q.open {
             bail!("job service is shut down");
         }
-        Ok(self.enqueue(&mut q, input, req))
+        Ok(self.enqueue(shard_idx, &mut q, id, input, req))
     }
 
     /// Non-blocking [`TsqrService::submit`]: errors instead of waiting
-    /// when the queue is at capacity.
+    /// when the routed shard's queue is at capacity.
     pub fn try_submit(&self, input: &MatrixHandle, req: FactorizationRequest) -> Result<JobHandle> {
-        let mut q = self.inner.lock_queue();
+        let (id, shard_idx) = self.place(input, &req)?;
+        let mut q = self.inner.lock_queue(shard_idx);
         if !q.open {
             bail!("job service is shut down");
         }
         if q.jobs.len() >= self.inner.capacity {
             bail!(
-                "job queue at capacity ({} queued) — wait for a worker or use submit()",
+                "shard {shard_idx} job queue at capacity ({} queued) — wait for a worker or use submit()",
                 self.inner.capacity
             );
         }
-        Ok(self.enqueue(&mut q, input, req))
+        Ok(self.enqueue(shard_idx, &mut q, id, input, req))
     }
 
     // ---------------------------------------------------- manual drain
 
-    /// Pop and run the next queued job (highest priority, FIFO within)
-    /// on the *calling* thread; `None` when nothing is queued. Jobs
-    /// cancelled while queued are discarded, not counted. With
+    /// Pop and run the globally next queued job (highest priority,
+    /// lowest job id within a priority, across every shard) on the
+    /// *calling* thread; `None` when nothing is queued. Jobs cancelled
+    /// while queued are discarded, not counted. With
     /// `service_workers(0)` this is the deterministic serial engine the
     /// determinism tests baseline against.
     pub fn drain_one(&self) -> Option<JobId> {
         loop {
-            let job = ServiceInner::pop_best(&mut self.inner.lock_queue().jobs)?;
-            self.inner.space.notify_one();
-            let id = job.id;
-            if self.inner.execute_job(job) {
+            // scan every shard queue for the job sched_key orders first
+            let mut best: Option<(usize, (std::cmp::Reverse<Priority>, JobId))> = None;
+            for k in 0..self.inner.shards.len() {
+                let q = self.inner.lock_queue(k);
+                for job in &q.jobs {
+                    let key = ServiceInner::sched_key(job.priority, job.id);
+                    let better = match best {
+                        None => true,
+                        Some((_, best_key)) => key < best_key,
+                    };
+                    if better {
+                        best = Some((k, key));
+                    }
+                }
+            }
+            let (shard_idx, (_, id)) = best?;
+            // re-lock and pop that specific job; a background worker
+            // may have taken it meanwhile — rescan if so
+            let job = {
+                let mut q = self.inner.lock_queue(shard_idx);
+                match q.jobs.iter().position(|j| j.id == id) {
+                    Some(pos) => q.jobs.remove(pos),
+                    None => continue,
+                }
+            };
+            let Some(job) = job else { continue };
+            self.inner.shards[shard_idx].space.notify_one();
+            if self.inner.execute_job(shard_idx, job) {
                 return Some(id);
             }
         }
     }
 
-    /// Run queued jobs on the calling thread until the queue is empty;
-    /// returns how many executed.
+    /// Run queued jobs on the calling thread until every shard's queue
+    /// is empty; returns how many executed.
     pub fn drain_now(&self) -> usize {
         let mut ran = 0;
         while self.drain_one().is_some() {
@@ -475,7 +672,8 @@ impl TsqrService {
 
     // ------------------------------------------------------- ingestion
 
-    /// Ingest an in-memory matrix into the shared DFS.
+    /// Ingest an in-memory matrix into the pool (pinned to shard 0, the
+    /// home shard; jobs routed elsewhere receive an O(1) copy).
     pub fn ingest_matrix(&self, name: &str, a: &Matrix) -> Result<MatrixHandle> {
         self.ingest_with(name, a.cols, |w| w.push_chunk(a))
     }
@@ -502,74 +700,139 @@ impl TsqrService {
         })
     }
 
-    /// Stream rows into the shared DFS through a [`MatrixWriter`]
-    /// (the engine lock is held for the closure's duration — ingest
-    /// before submitting jobs that read the file).
+    /// Stream rows into the pool through a [`MatrixWriter`]. The
+    /// matrix lands on shard 0 — its *home* shard — and shard 0's
+    /// engine lock is held for the closure's duration, so ingest before
+    /// submitting jobs that read the file. Other shards receive the
+    /// file by O(1) reference-counted copy when the router places a
+    /// reader there.
     pub fn ingest_with(
         &self,
         name: &str,
         cols: usize,
         f: impl FnOnce(&mut MatrixWriter) -> Result<()>,
     ) -> Result<MatrixHandle> {
-        let mut engine = lock_engine(&self.inner.engine);
-        let mut w = MatrixWriter::new(&mut engine.dfs, name, cols);
-        f(&mut w)?;
-        Ok(w.finish())
+        let handle = {
+            let mut engine = lock_engine(&self.inner.shards[0].engine);
+            let mut w = MatrixWriter::new(&mut engine.dfs, name, cols);
+            f(&mut w)?;
+            w.finish()
+        };
+        // re-ingesting a name overwrites the home copy, so any copy an
+        // earlier job staged onto another shard is now stale — drop
+        // them all; the next job routed there re-stages the fresh one
+        for shard in &self.inner.shards[1..] {
+            lock_engine(&shard.engine).dfs.delete(name);
+        }
+        Ok(handle)
     }
 
-    /// Read a handle's rows back from the shared DFS.
+    /// Read a handle's rows back from the pool: shards are scanned in
+    /// index order and the first copy wins (every copy of a file is
+    /// byte-identical — files are immutable once ingested or written by
+    /// their job).
     pub fn get_matrix(&self, handle: &MatrixHandle) -> Result<Matrix> {
-        let engine = lock_engine(&self.inner.engine);
-        workload::get_matrix(&engine.dfs, &handle.file, handle.cols)
+        for shard in &self.inner.shards {
+            let engine = lock_engine(&shard.engine);
+            if engine.dfs.exists(&handle.file) {
+                return workload::get_matrix(&engine.dfs, &handle.file, handle.cols);
+            }
+        }
+        bail!("dfs: no such file {:?} on any shard", handle.file)
     }
 
-    /// Run a closure against the shared DFS (byte totals, listings).
+    /// Run a closure against shard 0's DFS (byte totals, listings) —
+    /// the home shard every ingestion lands on. Use
+    /// [`TsqrService::with_dfs_on`] to inspect another shard.
     pub fn with_dfs<T>(&self, f: impl FnOnce(&Dfs) -> T) -> T {
-        f(&lock_engine(&self.inner.engine).dfs)
+        f(&lock_engine(&self.inner.shards[0].engine).dfs)
+    }
+
+    /// Run a closure against one shard's DFS; errors on an
+    /// out-of-range shard index.
+    pub fn with_dfs_on<T>(&self, shard: usize, f: impl FnOnce(&Dfs) -> T) -> Result<T> {
+        match self.inner.shards.get(shard) {
+            Some(s) => Ok(f(&lock_engine(&s.engine).dfs)),
+            None => bail!("no such shard {shard} (service has {})", self.inner.shards.len()),
+        }
     }
 
     /// Mark a DFS file's virtual byte scale (see
-    /// [`crate::session::TsqrSession::set_scale`]).
+    /// [`crate::session::TsqrSession::set_scale`]). Registered
+    /// unconditionally on the home shard — like a session, the scale
+    /// may be set before the file is ingested — and on every other
+    /// shard already holding a staged copy; copies staged later carry
+    /// the home scale along ([`crate::dfs::Dfs::export_file`]).
     pub fn set_scale(&self, name: &str, scale: f64) {
-        lock_engine(&self.inner.engine).dfs.set_scale(name, scale);
+        lock_engine(&self.inner.shards[0].engine).dfs.set_scale(name, scale);
+        for shard in &self.inner.shards[1..] {
+            let mut engine = lock_engine(&shard.engine);
+            if engine.dfs.exists(name) {
+                engine.dfs.set_scale(name, scale);
+            }
+        }
     }
 
     // ------------------------------------------------------- lifecycle
 
-    /// Delete one finished job's DFS namespace (`job-<id>/…` — its Q
-    /// factor and intermediates). Returns how many files were swept.
+    /// Delete one finished job's DFS namespace
+    /// (`<shard-ns>job-<id>/…` — its Q factor and intermediates):
+    /// swept on the shard that ran the job *and*, should a chained job
+    /// have staged one of its files elsewhere, on every shard holding
+    /// such a copy. No other job's namespace and no ingested matrix is
+    /// touched. Returns how many files were swept (copies included).
     /// Handles into that namespace become dangling, which is the
-    /// caller's contract to uphold.
+    /// caller's contract to uphold. Eviction also frees the job's
+    /// placement record — it is the retirement step of the job
+    /// lifecycle, and a service churning through very many jobs should
+    /// evict them as it retires them.
     pub fn evict_job(&self, id: JobId) -> usize {
-        let mut engine = lock_engine(&self.inner.engine);
-        engine.dfs.delete_prefix(&id.namespace())
+        self.inner.placements.lock().expect("placements").remove(&id.0);
+        let job_ns = id.namespace();
+        let mut swept = 0;
+        for shard in &self.inner.shards {
+            let mut engine = lock_engine(&shard.engine);
+            // a staged copy keeps its original (owner-prefixed) name,
+            // so sweep every possible owner prefix on every shard
+            for owner in &self.inner.shards {
+                swept += engine.dfs.delete_prefix(&format!("{}{}", owner.ns, job_ns));
+            }
+        }
+        swept
     }
 
     /// Graceful shutdown: reject new submissions, let the workers
     /// drain everything already queued, join them, and cancel whatever
     /// remains (only possible in manual-drain mode). Called on drop.
     pub fn shutdown(&mut self) {
-        {
-            let mut q = self.inner.lock_queue();
-            if !q.open {
-                return;
-            }
+        let mut was_open = false;
+        for k in 0..self.inner.shards.len() {
+            let mut q = self.inner.lock_queue(k);
+            was_open |= q.open;
             q.open = false;
         }
-        self.inner.ready.notify_all();
-        self.inner.space.notify_all();
+        if !was_open {
+            return;
+        }
+        for shard in &self.inner.shards {
+            shard.ready.notify_all();
+            shard.space.notify_all();
+        }
         for handle in self.workers.drain(..) {
             let _ = handle.join();
         }
         // manual-drain mode can leave queued jobs behind: resolve their
         // handles so no waiter hangs forever
-        let mut q = self.inner.lock_queue();
-        while let Some(job) = q.jobs.pop_front() {
-            let mut slot = job.shared.slot.lock().expect("job slot");
-            if matches!(*slot, JobSlot::Queued) {
-                *slot = JobSlot::Cancelled;
+        for (k, shard) in self.inner.shards.iter().enumerate() {
+            let mut q = self.inner.lock_queue(k);
+            while let Some(job) = q.jobs.pop_front() {
+                shard.load.fetch_sub(1, Ordering::Relaxed);
+                let mut slot = job.shared.slot.lock().expect("job slot");
+                if matches!(*slot, JobSlot::Queued) {
+                    *slot = JobSlot::Cancelled;
+                }
+                job.shared.done.notify_all();
             }
-            job.shared.done.notify_all();
         }
     }
 }
@@ -595,6 +858,17 @@ mod tests {
             .unwrap()
     }
 
+    fn manual_sharded(shards: usize) -> TsqrService {
+        TsqrSession::builder()
+            .backend(Backend::Native)
+            .rows_per_task(50)
+            .engine_shards(shards)
+            .service_workers(0)
+            .queue_capacity(8)
+            .build_service()
+            .unwrap()
+    }
+
     #[test]
     fn submit_drain_wait_round_trip() {
         let svc = manual_service();
@@ -609,7 +883,9 @@ mod tests {
         assert_eq!(job.status(), JobStatus::Done);
         assert!(job.wall_secs().unwrap() >= 0.0);
         assert_eq!(fact.r.rows, 5);
-        // the Q handle lives in the job's namespace
+        assert_eq!(fact.stats.shard, 0, "single-shard service runs everything on shard 0");
+        // the Q handle lives in the job's namespace — un-prefixed on a
+        // single-shard service, exactly the historical names
         let qf = &fact.q.as_ref().unwrap().file;
         assert!(qf.starts_with(&job.id().namespace()), "{qf}");
         let q = svc.get_matrix(fact.q.as_ref().unwrap()).unwrap();
@@ -633,6 +909,24 @@ mod tests {
     }
 
     #[test]
+    fn priorities_order_across_shards_in_manual_drain() {
+        // drain_one's (priority, job-id) order spans the whole pool:
+        // pin jobs to different shards and the High one still runs
+        // first wherever it sits
+        let svc = manual_sharded(2);
+        let h = svc.ingest_gaussian("A", 60, 3, 2).unwrap();
+        let lo = svc
+            .submit(&h, FactorizationRequest::r_only().pinned(0).with_priority(Priority::Low))
+            .unwrap();
+        let n = svc.submit(&h, FactorizationRequest::r_only().pinned(0)).unwrap();
+        let hi = svc
+            .submit(&h, FactorizationRequest::r_only().pinned(1).with_priority(Priority::High))
+            .unwrap();
+        let order: Vec<JobId> = std::iter::from_fn(|| svc.drain_one()).collect();
+        assert_eq!(order, vec![hi.id(), n.id(), lo.id()]);
+    }
+
+    #[test]
     fn evict_job_sweeps_only_that_namespace() {
         let svc = manual_service();
         let h = svc.ingest_gaussian("A", 200, 4, 3).unwrap();
@@ -647,6 +941,9 @@ mod tests {
         assert_eq!(q1.rows, 200, "other job's namespace untouched");
         // input matrix is outside every job namespace
         assert!(svc.get_matrix(&h).is_ok());
+        // unknown / already-evicted ids sweep nothing
+        assert_eq!(svc.evict_job(j0.id()), 0);
+        assert_eq!(svc.evict_job(JobId(999)), 0);
     }
 
     #[test]
@@ -659,5 +956,97 @@ mod tests {
         assert!(stranded.wait().is_err());
         assert!(svc.submit(&h, FactorizationRequest::r_only()).is_err());
         assert!(svc.try_submit(&h, FactorizationRequest::r_only()).is_err());
+    }
+
+    #[test]
+    fn pinned_placement_is_validated_at_submission() {
+        let svc = manual_service();
+        let h = svc.ingest_gaussian("A", 60, 3, 5).unwrap();
+        let err = svc.submit(&h, FactorizationRequest::r_only().pinned(1)).unwrap_err();
+        assert!(err.to_string().contains("shard"), "{err}");
+        // in-range pin on the only shard is fine
+        let job = svc.submit(&h, FactorizationRequest::r_only().pinned(0)).unwrap();
+        svc.drain_now();
+        assert!(job.wait().is_ok());
+    }
+
+    #[test]
+    fn router_balances_and_records_placements() {
+        let svc = manual_sharded(3);
+        let h = svc.ingest_gaussian("A", 120, 4, 6).unwrap();
+        let jobs: Vec<_> = (0..6)
+            .map(|_| svc.submit(&h, FactorizationRequest::r_only()).unwrap())
+            .collect();
+        // 6 auto-routed jobs over 3 idle shards: least-loaded routing
+        // must spread them 2/2/2
+        let mut per_shard = [0usize; 3];
+        for j in &jobs {
+            per_shard[svc.shard_of(j.id()).unwrap()] += 1;
+        }
+        assert_eq!(per_shard, [2, 2, 2], "least-loaded router must balance");
+        svc.drain_now();
+        for j in &jobs {
+            let fact = j.wait().unwrap();
+            assert_eq!(fact.stats.shard, svc.shard_of(j.id()).unwrap());
+        }
+    }
+
+    #[test]
+    fn sharded_namespaces_nest_under_the_shard_prefix() {
+        let svc = manual_sharded(2);
+        let h = svc.ingest_gaussian("A", 200, 4, 7).unwrap();
+        let job = svc.submit(&h, FactorizationRequest::qr().pinned(1)).unwrap();
+        svc.drain_now();
+        let fact = job.wait().unwrap();
+        let qf = &fact.q.as_ref().unwrap().file;
+        assert!(
+            qf.starts_with(&format!("shard-1/{}", job.id().namespace())),
+            "Q must live under the shard's namespace: {qf}"
+        );
+        // the input was staged onto shard 1 by reference, not copied
+        let on_home = svc.with_dfs(|d| d.exists("A"));
+        let on_one = svc.with_dfs_on(1, |d| d.exists("A")).unwrap();
+        assert!(on_home && on_one, "input present on both home and target shard");
+        assert!(svc.with_dfs_on(2, |_| ()).is_err(), "out-of-range shard errors");
+    }
+
+    #[test]
+    fn set_scale_before_ingest_still_registers() {
+        // scales live independently of file contents, so (as with a
+        // session) a scale set before the matrix arrives must stick
+        let svc = manual_service();
+        svc.set_scale("A", 1e6);
+        svc.ingest_gaussian("A", 60, 3, 9).unwrap();
+        assert_eq!(svc.with_dfs(|d| d.scale("A")), 1e6);
+        // and a staged copy carries the scale to the other shard
+        let sharded = manual_sharded(2);
+        let h = sharded.ingest_gaussian("B", 60, 3, 9).unwrap();
+        sharded.set_scale("B", 250.0);
+        let job = sharded.submit(&h, FactorizationRequest::r_only().pinned(1)).unwrap();
+        sharded.drain_now();
+        job.wait().unwrap();
+        assert_eq!(sharded.with_dfs_on(1, |d| d.scale("B")).unwrap(), 250.0);
+    }
+
+    #[test]
+    fn poisoned_shard_engine_does_not_stop_the_pool() {
+        // extends PR 3's lock_engine poison-recovery test to the pool:
+        // poison shard 1's engine mutex the way a panicking job would
+        // (panic while holding the lock), then both shards must still
+        // serve — lock_engine strips the poison
+        let svc = manual_sharded(2);
+        let h = svc.ingest_gaussian("A", 200, 4, 8).unwrap();
+        let poisoned = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let _guard = svc.inner.shards[1].engine.lock().unwrap();
+            panic!("job dies while holding shard 1's engine");
+        }));
+        assert!(poisoned.is_err());
+        assert!(svc.inner.shards[1].engine.lock().is_err(), "shard 1 should be poisoned");
+        for k in 0..2 {
+            let job = svc.submit(&h, FactorizationRequest::qr().pinned(k)).unwrap();
+            svc.drain_now();
+            let fact = job.wait().unwrap_or_else(|e| panic!("shard {k} wedged: {e:#}"));
+            assert_eq!(fact.stats.shard, k);
+        }
     }
 }

@@ -228,10 +228,35 @@ impl SessionBuilder {
 
     /// Bounded FIFO queue capacity of a [`TsqrService`] built from this
     /// builder: `submit` blocks (and `try_submit` errors) while this
-    /// many jobs are queued. Default: 64. Ignored by
+    /// many jobs are queued (per engine shard). Default: 64. Ignored by
     /// [`SessionBuilder::build`].
     pub fn queue_capacity(mut self, n: usize) -> Self {
         self.service.queue_capacity = n.max(1);
+        self
+    }
+
+    /// Engine shards of a [`TsqrService`] built from this builder
+    /// (default 1 = one shared engine, exactly the pre-shard service).
+    /// Each shard is an independent `Mutex<Engine>` — its own DFS
+    /// subtree and virtual clock — so jobs placed on different shards
+    /// run with **zero cross-job locking**; all shards share one pooled
+    /// compute backend. The floor is 1.
+    ///
+    /// **Ingestion placement:** every `ingest_*` call pins the matrix
+    /// to shard 0 (its *home* shard). A job routed or
+    /// [`pinned`](crate::session::FactorizationRequest::pinned) to
+    /// another shard gets the input by a cheap O(1) reference-counted
+    /// copy at submission ([`crate::dfs::Dfs::export_file`]) — no
+    /// replication up front, no deep copy ever, and the explicit
+    /// `Placement::Pinned(k)` escape hatch remains for callers that
+    /// want to co-locate chained jobs with a shard's DFS.
+    ///
+    /// Placement is invisible in results: for any workload, `shards=1`
+    /// and `shards=N` produce bit-identical `R`/`Q`/Σ/`virtual_secs`
+    /// and fault draws per job (`rust/tests/shards.rs`). Ignored by
+    /// [`SessionBuilder::build`].
+    pub fn engine_shards(mut self, n: usize) -> Self {
+        self.service.engine_shards = n.max(1);
         self
     }
 
@@ -240,12 +265,10 @@ impl SessionBuilder {
             Some(c) => (c, "custom"),
             None => self.backend.resolve()?,
         };
-        let mut engine = Engine::new(self.model, self.cluster);
-        if let Some((policy, seed)) = self.faults {
-            engine = engine.with_faults(policy, seed);
-        }
         Ok(ClusterParts {
-            engine,
+            model: self.model,
+            cluster: self.cluster,
+            faults: self.faults,
             compute,
             backend_desc,
             opts: self.opts,
@@ -258,7 +281,7 @@ impl SessionBuilder {
     pub fn build(self) -> Result<TsqrSession> {
         let p = self.into_cluster_parts()?;
         Ok(TsqrSession {
-            engine: Some(p.engine),
+            engine: Some(p.make_engine()),
             compute: p.compute,
             backend_desc: p.backend_desc,
             opts: p.opts,
@@ -268,24 +291,41 @@ impl SessionBuilder {
     }
 
     /// Assemble a concurrent job service instead of a session: the same
-    /// cluster (engine + DFS + backend + tuning), served through a
-    /// bounded job queue by [`SessionBuilder::service_workers`] worker
-    /// threads. See [`crate::service`].
+    /// cluster recipe (disk model + slots + faults + backend + tuning),
+    /// served through bounded job queues by
+    /// [`SessionBuilder::service_workers`] worker threads per
+    /// [`SessionBuilder::engine_shards`] shard. See [`crate::service`].
     pub fn build_service(self) -> Result<TsqrService> {
         let p = self.into_cluster_parts()?;
-        Ok(TsqrService::start(p.engine, p.compute, p.backend_desc, p.opts, p.service))
+        let engines: Vec<Engine> = (0..p.service.engine_shards.max(1))
+            .map(|_| p.make_engine())
+            .collect();
+        Ok(TsqrService::start(engines, p.compute, p.backend_desc, p.opts, p.service))
     }
 }
 
 /// Everything a builder resolves before handing it to a session or a
-/// service.
+/// service. Holds the engine *recipe* rather than an engine, so a
+/// sharded service can stamp out N identically-configured engines.
 struct ClusterParts {
-    engine: Engine,
+    model: DiskModel,
+    cluster: ClusterConfig,
+    faults: Option<(FaultPolicy, u64)>,
     compute: SharedCompute,
     backend_desc: &'static str,
     opts: CoordOpts,
     ns: String,
     service: ServiceConfig,
+}
+
+impl ClusterParts {
+    fn make_engine(&self) -> Engine {
+        let mut engine = Engine::new(self.model, self.cluster);
+        if let Some((policy, seed)) = self.faults {
+            engine = engine.with_faults(policy, seed);
+        }
+        engine
+    }
 }
 
 #[cfg(test)]
@@ -363,6 +403,26 @@ mod tests {
         assert_eq!(svc.capacity(), 3);
         assert_eq!(svc.backend_desc(), "native");
         assert_eq!(svc.pending(), 0);
+        assert_eq!(svc.shards(), 1, "default is the single-engine service");
+    }
+
+    #[test]
+    fn engine_shards_knob_builds_a_pool() {
+        let svc = TsqrSession::builder()
+            .backend(Backend::Native)
+            .engine_shards(4)
+            .service_workers(0)
+            .build_service()
+            .unwrap();
+        assert_eq!(svc.shards(), 4);
+        // floor is one shard
+        let svc = TsqrSession::builder()
+            .backend(Backend::Native)
+            .engine_shards(0)
+            .service_workers(0)
+            .build_service()
+            .unwrap();
+        assert_eq!(svc.shards(), 1);
     }
 
     #[test]

@@ -40,7 +40,8 @@
 //! [`crate::service::TsqrService`] from the same
 //! [`SessionBuilder`] ([`SessionBuilder::build_service`]) — `factorize`
 //! here and `submit`/`wait` there run the *same* execution path
-//! ([`exec`]), so a session is exactly a job service degenerated to
+//! (the crate-internal `exec` module), so a session is exactly a job
+//! service degenerated to
 //! inline execution.
 
 mod builder;
@@ -52,7 +53,7 @@ mod select;
 pub use builder::{Backend, SessionBuilder};
 pub use ingest::MatrixWriter;
 pub use request::{
-    AlgoChoice, FactorizationRequest, Priority, Want, DEFAULT_CONDITION_THRESHOLD,
+    AlgoChoice, FactorizationRequest, Placement, Priority, Want, DEFAULT_CONDITION_THRESHOLD,
 };
 pub use select::{estimate_condition, AutoDecision};
 
@@ -98,6 +99,36 @@ impl Factorization {
     /// Singular values, when the request computed them.
     pub fn sigma(&self) -> Option<&[f64]> {
         self.svd.as_ref().map(|s| s.sigma.as_slice())
+    }
+
+    /// FNV-1a digest of the result's numerical content: `R`'s shape and
+    /// exact bit patterns plus Σ (when present). Two runs of the same
+    /// request agree on this hex string iff their factors are
+    /// bit-identical — `mrtsqr batch --json` emits it per job so CI can
+    /// diff a `--shards 1` report against a `--shards 4` report with
+    /// one `grep | diff` (wall-clock fields differ; digests must not).
+    pub fn result_digest(&self) -> String {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        eat(&(self.r.rows as u64).to_le_bytes());
+        eat(&(self.r.cols as u64).to_le_bytes());
+        for v in &self.r.data {
+            eat(&v.to_bits().to_le_bytes());
+        }
+        if let Some(sigma) = self.sigma() {
+            eat(&(sigma.len() as u64).to_le_bytes());
+            for v in sigma {
+                eat(&v.to_bits().to_le_bytes());
+            }
+        }
+        format!("{h:016x}")
     }
 }
 

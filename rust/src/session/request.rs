@@ -67,12 +67,29 @@ impl Priority {
     }
 }
 
+/// Which engine shard of a [`crate::service::TsqrService`] a job runs
+/// on. `Auto` lets the router pick the least-loaded shard (deterministic
+/// job-id tie-break); `Pinned(k)` is the escape hatch for callers that
+/// want locality with a specific shard's DFS (e.g. chained jobs reading
+/// an earlier job's Q without a cross-shard copy). Sessions and
+/// single-shard services have exactly one shard, so both variants are
+/// equivalent there. Placement never changes results: every modelled
+/// quantity is bit-identical whichever shard serves the job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Route to the least-loaded shard.
+    Auto,
+    /// Run on shard `k`; submission errors when `k` is out of range.
+    Pinned(usize),
+}
+
 /// A factorization request; every knob in one place.
 ///
 /// `refine` applies one sweep of iterative refinement (paper §II-C)
 /// when `Auto` picks an indirect method; `Fixed` algorithms carry their
-/// own `refine` flag and ignore this field. `priority` and `label` only
-/// matter when the request is submitted to a job service.
+/// own `refine` flag and ignore this field. `priority`, `label` and
+/// `placement` only matter when the request is submitted to a job
+/// service.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FactorizationRequest {
     pub want: Want,
@@ -85,6 +102,8 @@ pub struct FactorizationRequest {
     /// Human-readable tag carried through the job service into per-job
     /// reporting (`mrtsqr batch` prints it).
     pub label: Option<String>,
+    /// Engine-shard placement on a job service (sessions ignore it).
+    pub placement: Placement,
 }
 
 impl Default for FactorizationRequest {
@@ -96,6 +115,7 @@ impl Default for FactorizationRequest {
             condition_threshold: DEFAULT_CONDITION_THRESHOLD,
             priority: Priority::Normal,
             label: None,
+            placement: Placement::Auto,
         }
     }
 }
@@ -156,6 +176,13 @@ impl FactorizationRequest {
         self.label = Some(label.into());
         self
     }
+
+    /// Pin the job to engine shard `k` of a sharded service (see
+    /// [`Placement`]).
+    pub fn pinned(mut self, shard: usize) -> Self {
+        self.placement = Placement::Pinned(shard);
+        self
+    }
 }
 
 #[cfg(test)]
@@ -171,6 +198,13 @@ mod tests {
         assert_eq!(r.condition_threshold, DEFAULT_CONDITION_THRESHOLD);
         assert_eq!(r.priority, Priority::Normal);
         assert!(r.label.is_none());
+        assert_eq!(r.placement, Placement::Auto);
+    }
+
+    #[test]
+    fn placement_pins_a_shard() {
+        let r = FactorizationRequest::qr().pinned(3);
+        assert_eq!(r.placement, Placement::Pinned(3));
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //! without wedging the queue; cancellation before running works; and
 //! per-job DFS namespaces keep concurrent intermediates (and returned
 //! Q handles) collision-free on the shared DFS.
+//!
+//! Everything here runs the default single-shard pool — the historical
+//! shared-engine service. The shard axis of the same contract
+//! (`engine_shards = 1` vs `4`) lives in `rust/tests/shards.rs`.
 
 use mrtsqr::coordinator::Algorithm;
 use mrtsqr::mapreduce::FaultPolicy;

@@ -1,0 +1,348 @@
+//! The engine-shard pool's contract (mirror of `rust/tests/parallel.rs`
+//! for the shard axis): sharding is *pure scheduling*. The same mixed
+//! manifest run at `engine_shards = 1` and `engine_shards = 4` produces
+//! bit-identical `R`, `Q`, Σ, `virtual_secs`, auto decisions and fault
+//! draws per job — shard placement must not leak into any modelled
+//! quantity. On top of that: jobs on different shards genuinely overlap
+//! in wall time, evicting a job on one shard cannot touch another
+//! shard's namespaces or ingested matrices, and a job that panics
+//! (poisoning its shard's engine lock) leaves every shard — including
+//! its own — serving.
+
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::linalg::Matrix;
+use mrtsqr::mapreduce::FaultPolicy;
+use mrtsqr::runtime::{BlockCompute, NativeRuntime};
+use mrtsqr::service::TsqrService;
+use mrtsqr::session::{Backend, FactorizationRequest, Priority, SessionBuilder};
+use mrtsqr::{Factorization, MatrixHandle};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn builder() -> SessionBuilder {
+    mrtsqr::TsqrSession::builder().backend(Backend::Native).rows_per_task(50)
+}
+
+/// The acceptance mix: 8 jobs covering QR / R-only / SVD / Σ, Auto and
+/// Fixed algorithms — the same mix `rust/tests/service.rs` uses for the
+/// concurrency invariant.
+fn mixed_requests() -> Vec<FactorizationRequest> {
+    vec![
+        FactorizationRequest::qr(),
+        FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr),
+        FactorizationRequest::qr()
+            .with_algorithm(Algorithm::DirectTsqrFused)
+            .with_priority(Priority::High),
+        FactorizationRequest::r_only(),
+        FactorizationRequest::r_only().with_algorithm(Algorithm::Cholesky { refine: false }),
+        FactorizationRequest::svd(),
+        FactorizationRequest::singular_values().with_priority(Priority::Low),
+        FactorizationRequest::qr().with_algorithm(Algorithm::IndirectTsqr { refine: true }),
+    ]
+}
+
+fn ingest_inputs(svc: &TsqrService, n: usize) -> Vec<MatrixHandle> {
+    (0..n)
+        .map(|i| {
+            svc.ingest_gaussian(&format!("A{i}"), 300 + 40 * i, 4 + i % 3, i as u64)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Run the mixed manifest through a pool of `shards` engine shards and
+/// hand back per-request results (the Q read back out of whichever
+/// shard holds it). Submission is single-threaded so job ids — and with
+/// them fault streams — line up across configurations.
+fn run_pool(shards: usize, workers: usize) -> Vec<(Arc<Factorization>, Vec<f64>)> {
+    let requests = mixed_requests();
+    let svc = builder()
+        .engine_shards(shards)
+        .service_workers(workers)
+        .queue_capacity(requests.len())
+        .build_service()
+        .unwrap();
+    let inputs = ingest_inputs(&svc, requests.len());
+    let handles: Vec<_> = inputs
+        .iter()
+        .zip(&requests)
+        .map(|(h, req)| svc.submit(h, req.clone()).unwrap())
+        .collect();
+    if workers == 0 {
+        svc.drain_now();
+    }
+    handles
+        .iter()
+        .map(|h| {
+            let fact = h.wait().unwrap();
+            let q = fact
+                .q
+                .as_ref()
+                .map(|qh| svc.get_matrix(qh).unwrap().data)
+                .unwrap_or_default();
+            (fact, q)
+        })
+        .collect()
+}
+
+/// The tentpole invariant: shards=1 (serial drain — the historical
+/// single-engine service) vs shards=4 with background workers, same 8
+/// mixed jobs — every modelled quantity bit-identical per job.
+#[test]
+fn four_shards_are_bit_identical_to_one() {
+    let baseline = run_pool(1, 0);
+    let sharded = run_pool(4, 2);
+    for (idx, ((want, want_q), (got, got_q))) in baseline.iter().zip(&sharded).enumerate() {
+        let ctx = format!("request {idx} ({})", want.algorithm.name());
+        assert_eq!(got.algorithm, want.algorithm, "{ctx}: algorithm");
+        assert_eq!(got.r.rows, want.r.rows, "{ctx}");
+        for (a, b) in got.r.data.iter().zip(&want.r.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: R drifted");
+        }
+        assert_eq!(
+            got.stats.virtual_secs().to_bits(),
+            want.stats.virtual_secs().to_bits(),
+            "{ctx}: virtual_secs drifted ({} vs {})",
+            got.stats.virtual_secs(),
+            want.stats.virtual_secs()
+        );
+        assert_eq!(got.stats.steps.len(), want.stats.steps.len(), "{ctx}: step count");
+        assert_eq!(got_q.len(), want_q.len(), "{ctx}: Q shape");
+        for (a, b) in got_q.iter().zip(want_q) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: Q drifted");
+        }
+        match (got.sigma(), want.sigma()) {
+            (Some(a), Some(b)) => {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: sigma drifted");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("{ctx}: sigma presence differs"),
+        }
+        match (&got.auto, &want.auto) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.kappa_estimate.to_bits(), b.kappa_estimate.to_bits(), "{ctx}");
+                assert_eq!(a.chosen, b.chosen, "{ctx}");
+            }
+            (None, None) => {}
+            _ => panic!("{ctx}: auto presence differs"),
+        }
+        // the digest `mrtsqr batch --json` emits — what the CI shard
+        // matrix diffs — condenses exactly this invariant
+        assert_eq!(got.result_digest(), want.result_digest(), "{ctx}: digest");
+    }
+}
+
+/// Fault draws come from per-job-id streams, so where the router puts a
+/// job must not change what faults it sees.
+#[test]
+fn fault_draws_ignore_shard_placement() {
+    let policy = FaultPolicy { probability: 0.2, max_attempts: 16, waste_fraction: 0.5 };
+    let run = |shards: usize, workers: usize| {
+        let svc = builder()
+            .fault_policy(policy, 777)
+            .engine_shards(shards)
+            .service_workers(workers)
+            .build_service()
+            .unwrap();
+        let h = svc.ingest_gaussian("A", 800, 5, 3).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                svc.submit(&h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr))
+                    .unwrap()
+            })
+            .collect();
+        if workers == 0 {
+            svc.drain_now();
+        }
+        handles
+            .iter()
+            .map(|j| {
+                let f = j.wait().unwrap();
+                (f.stats.total_faults(), f.stats.virtual_secs())
+            })
+            .collect::<Vec<_>>()
+    };
+    let unsharded = run(1, 0);
+    let sharded = run(4, 1);
+    assert!(unsharded.iter().map(|(f, _)| f).sum::<usize>() > 0, "faults should fire at p=0.2");
+    for (i, ((fa, va), (fb, vb))) in unsharded.iter().zip(&sharded).enumerate() {
+        assert_eq!(fa, fb, "job {i}: fault draws drifted with placement");
+        assert_eq!(va.to_bits(), vb.to_bits(), "job {i}: virtual clock drifted");
+    }
+}
+
+/// The scaling claim: at shards=2 with 2 workers (one per shard), jobs
+/// on different shards run with zero shared locks, so the aggregate
+/// batch wall-clock lands below the sum of per-job wall-clocks.
+#[test]
+fn sharded_batch_overlaps_in_wall_time() {
+    let svc = mrtsqr::TsqrSession::builder()
+        .backend(Backend::Native)
+        .rows_per_task(75)
+        .host_threads(2)
+        .engine_shards(2)
+        .service_workers(1)
+        .build_service()
+        .unwrap();
+    assert_eq!(svc.workers(), 2, "one worker per shard = the two-worker setup");
+    let inputs: Vec<_> = (0..4)
+        .map(|i| svc.ingest_gaussian(&format!("A{i}"), 60_000, 8, i as u64).unwrap())
+        .collect();
+    let t0 = Instant::now();
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|h| {
+            svc.submit(h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr))
+                .unwrap()
+        })
+        .collect();
+    for h in &handles {
+        h.wait().unwrap();
+    }
+    let aggregate = t0.elapsed().as_secs_f64();
+    let sum_walls: f64 = handles.iter().map(|h| h.wall_secs().unwrap()).sum();
+    assert!(
+        aggregate < sum_walls,
+        "aggregate {aggregate:.3}s must be below the sum of per-job walls {sum_walls:.3}s \
+         — shards did not overlap"
+    );
+}
+
+/// Shard-aware eviction: sweeping a job on one shard must leave every
+/// other shard's job namespaces — and the ingested inputs — untouched.
+#[test]
+fn eviction_is_scoped_to_the_jobs_own_shard() {
+    let svc = builder().engine_shards(3).service_workers(0).build_service().unwrap();
+    let h = svc.ingest_gaussian("A", 200, 4, 3).unwrap();
+    let j0 = svc.submit(&h, FactorizationRequest::qr().pinned(0)).unwrap();
+    let j2 = svc.submit(&h, FactorizationRequest::qr().pinned(2)).unwrap();
+    svc.drain_now();
+    let f0 = j0.wait().unwrap();
+    let f2 = j2.wait().unwrap();
+    assert_eq!(svc.shard_of(j0.id()), Some(0));
+    assert_eq!(svc.shard_of(j2.id()), Some(2));
+
+    let files_on = |k: usize| svc.with_dfs_on(k, |d| d.list().len()).unwrap();
+    let shard0_before = files_on(0);
+    assert!(svc.evict_job(j2.id()) > 0);
+    // shard 2's job is gone; shard 0 is bit-for-bit untouched
+    assert!(svc.get_matrix(f2.q.as_ref().unwrap()).is_err(), "evicted Q gone");
+    assert_eq!(files_on(0), shard0_before, "eviction on shard 2 touched shard 0");
+    let q0 = svc.get_matrix(f0.q.as_ref().unwrap()).unwrap();
+    assert!(q0.orthogonality_error() < 1e-10);
+    // the ingested input survives on its home shard and on the copy
+    // shard 2 staged (eviction sweeps job namespaces only)
+    assert!(svc.get_matrix(&h).is_ok());
+    assert!(svc.with_dfs_on(2, |d| d.exists("A")).unwrap(), "ingested copy survives eviction");
+}
+
+/// Re-ingesting a name must invalidate copies staged onto other shards
+/// by earlier jobs — a later job routed there has to see the fresh
+/// data, exactly as it would at shards=1.
+#[test]
+fn reingesting_invalidates_staged_copies() {
+    let svc = builder().engine_shards(2).service_workers(0).build_service().unwrap();
+    let req = || FactorizationRequest::r_only().with_algorithm(Algorithm::DirectTsqr);
+    let h1 = svc.ingest_gaussian("A", 300, 4, 1).unwrap();
+    let j_old = svc.submit(&h1, req().pinned(1)).unwrap(); // stages "A" onto shard 1
+    svc.drain_now();
+    let old_digest = j_old.wait().unwrap().result_digest();
+
+    // overwrite "A" with different contents, then read it from both
+    // shards: results must agree with each other (and differ from old)
+    let h2 = svc.ingest_gaussian("A", 300, 4, 2).unwrap();
+    let on_home = svc.submit(&h2, req().pinned(0)).unwrap();
+    let on_other = svc.submit(&h2, req().pinned(1)).unwrap();
+    svc.drain_now();
+    let d0 = on_home.wait().unwrap().result_digest();
+    let d1 = on_other.wait().unwrap().result_digest();
+    assert_eq!(d0, d1, "shard 1 served stale pre-re-ingest data");
+    assert_ne!(d0, old_digest, "the new ingest must actually change the input");
+}
+
+/// Evicting a job also reclaims copies of its files that chained jobs
+/// staged onto other shards — nothing of the namespace survives
+/// anywhere in the pool.
+#[test]
+fn eviction_reclaims_staged_copies_on_other_shards() {
+    let svc = builder().engine_shards(2).service_workers(0).build_service().unwrap();
+    let h = svc.ingest_gaussian("A", 200, 4, 5).unwrap();
+    let producer = svc.submit(&h, FactorizationRequest::qr().pinned(0)).unwrap();
+    svc.drain_now();
+    let q = producer.wait().unwrap().q.clone().unwrap();
+    // chained consumer on the other shard stages a copy of the Q file
+    let consumer = svc
+        .submit(&q, FactorizationRequest::r_only().with_algorithm(Algorithm::DirectTsqr).pinned(1))
+        .unwrap();
+    svc.drain_now();
+    consumer.wait().unwrap();
+    assert!(svc.with_dfs_on(1, |d| d.exists(&q.file)).unwrap(), "copy staged on shard 1");
+
+    assert!(svc.evict_job(producer.id()) >= 2, "original + staged copy");
+    assert!(!svc.with_dfs(|d| d.exists(&q.file)), "original gone");
+    assert!(!svc.with_dfs_on(1, |d| d.exists(&q.file)).unwrap(), "staged copy gone");
+    assert!(svc.get_matrix(&q).is_err());
+    // the input matrix is outside the namespace and survives everywhere
+    assert!(svc.get_matrix(&h).is_ok());
+}
+
+/// A backend that panics on a marker shape (7 columns) — the way to
+/// make a job die *inside* an engine wave, while its worker holds the
+/// shard's engine lock, poisoning that mutex.
+struct PoisonOnSevenCols(NativeRuntime);
+
+impl BlockCompute for PoisonOnSevenCols {
+    fn qr(&self, a: &Matrix) -> anyhow::Result<(Matrix, Matrix)> {
+        assert!(a.cols != 7, "poison: refusing the 7-column marker block");
+        self.0.qr(a)
+    }
+
+    fn gram(&self, a: &Matrix) -> anyhow::Result<Matrix> {
+        assert!(a.cols != 7, "poison: refusing the 7-column marker block");
+        self.0.gram(a)
+    }
+
+    fn matmul(&self, a: &Matrix, s: &Matrix) -> anyhow::Result<Matrix> {
+        self.0.matmul(a, s)
+    }
+
+    fn max_qr_rows(&self, cols: usize) -> usize {
+        self.0.max_qr_rows(cols)
+    }
+}
+
+/// One panicked job (engine lock poisoned mid-wave) fails alone: its
+/// own shard and every other shard keep serving — the pool-level
+/// extension of PR 3's `lock_engine` poison-recovery guarantee.
+#[test]
+fn panicked_job_leaves_every_shard_serving() {
+    let svc = mrtsqr::TsqrSession::builder()
+        .compute(Arc::new(PoisonOnSevenCols(NativeRuntime)))
+        .rows_per_task(50)
+        .engine_shards(2)
+        .service_workers(1)
+        .build_service()
+        .unwrap();
+    let good = svc.ingest_gaussian("G", 300, 4, 1).unwrap();
+    let marked = svc.ingest_gaussian("M", 300, 7, 2).unwrap();
+
+    let doomed = svc
+        .submit(&marked, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(1))
+        .unwrap();
+    let err = doomed.wait().unwrap_err();
+    assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+
+    // the poisoned shard and the clean shard both still serve
+    for k in 0..2 {
+        let job = svc
+            .submit(&good, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(k))
+            .unwrap();
+        let fact = job.wait().unwrap_or_else(|e| panic!("shard {k} wedged after a panic: {e:#}"));
+        assert_eq!(fact.stats.shard, k);
+        assert!(svc.get_matrix(fact.q.as_ref().unwrap()).is_ok());
+    }
+    // and service accessors on the poisoned shard recover too
+    assert!(svc.with_dfs_on(1, |d| d.total_bytes()).unwrap() > 0);
+}
