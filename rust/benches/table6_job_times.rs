@@ -173,6 +173,64 @@ fn shard_scaling(compute: &SharedCompute) -> Result<(f64, f64, usize)> {
     Ok((one_shard_secs, four_shard_secs, JOBS))
 }
 
+/// Cross-process leg: the same 8-job batch through `worker_processes`
+/// 1 vs 2 (each worker one engine shard, 2 service workers). Results
+/// are bit-identical (tests/client.rs) — what moves is the batch wall
+/// clock, because the two pools are separate OS processes sharing
+/// nothing but pipes. This is the `procs` section BENCH_5 adds to the
+/// trajectory.
+fn proc_scaling() -> Result<(f64, f64, usize)> {
+    let quick = mrtsqr::util::bench::quick_mode();
+    let rows = if quick { 20_000 } else { 120_000 };
+    const JOBS: usize = 8;
+    // cargo provides the prebuilt binary path to benches of this package
+    let worker_bin = env!("CARGO_BIN_EXE_mrtsqr");
+    let run = |procs: usize| -> Result<f64> {
+        let client = TsqrSession::builder()
+            .backend(Backend::Auto)
+            .rows_per_task(rows / 200)
+            .worker_processes(procs)
+            .worker_binary(worker_bin)
+            .service_workers(2)
+            .queue_capacity(JOBS)
+            .build_client()?;
+        let inputs: Vec<_> = (0..JOBS)
+            .map(|i| client.ingest_gaussian(&format!("A{i}"), rows, 8, i as u64))
+            .collect::<Result<_>>()?;
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = inputs
+            .iter()
+            .map(|h| {
+                client.submit(h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr))
+            })
+            .collect::<Result<_>>()?;
+        for h in &handles {
+            h.wait()?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    };
+    let one_proc_secs = run(1)?;
+    let two_proc_secs = run(2)?;
+    let mut table = Table::new(
+        "Worker-process pool — 8-job batch, 1 vs 2 processes (results identical by construction)",
+        &["worker procs", "wall (s)", "jobs/s", "speedup"],
+    );
+    table.row(&[
+        "1".into(),
+        format!("{one_proc_secs:.3}"),
+        format!("{:.2}", JOBS as f64 / one_proc_secs),
+        "1.00x".into(),
+    ]);
+    table.row(&[
+        "2".into(),
+        format!("{two_proc_secs:.3}"),
+        format!("{:.2}", JOBS as f64 / two_proc_secs),
+        format!("{:.2}x", one_proc_secs / two_proc_secs),
+    ]);
+    table.print();
+    Ok((one_proc_secs, two_proc_secs, JOBS))
+}
+
 fn main() -> Result<()> {
     let (compute, backend_name) = Backend::Auto.resolve()?;
     println!("backend: {backend_name}");
@@ -230,6 +288,7 @@ fn main() -> Result<()> {
     let svc_workers = pool.min(4).max(2);
     let (batch_serial, batch_pooled, batch_jobs) = batch_throughput(&compute, svc_workers)?;
     let (shards1_secs, shards4_secs, shard_jobs) = shard_scaling(&compute)?;
+    let (procs1_secs, procs2_secs, proc_jobs) = proc_scaling()?;
 
     // BENCH trajectory: `--bench-json PATH` records the wall-clock
     // numbers (ROADMAP asks for BENCH_*.json entries per PR)
@@ -273,6 +332,21 @@ fn main() -> Result<()> {
                     (
                         "throughput_jobs_per_sec",
                         Json::num(shard_jobs as f64 / shards4_secs.max(1e-9)),
+                    ),
+                ]),
+            ),
+            (
+                "procs",
+                Json::obj([
+                    ("jobs", Json::num(proc_jobs as f64)),
+                    ("shards_per_proc", Json::num(1.0)),
+                    ("workers_per_shard", Json::num(2.0)),
+                    ("procs_1_secs", Json::num(procs1_secs)),
+                    ("procs_2_secs", Json::num(procs2_secs)),
+                    ("speedup", Json::num(procs1_secs / procs2_secs)),
+                    (
+                        "throughput_jobs_per_sec",
+                        Json::num(proc_jobs as f64 / procs2_secs.max(1e-9)),
                     ),
                 ]),
             ),

@@ -1,0 +1,386 @@
+//! L6 — the transport-agnostic client: one API whether the engine pool
+//! lives in this process or across a fleet of worker processes.
+//!
+//! The paper's architecture is a *distributed* MapReduce cluster —
+//! independent machines exchanging only small `R` factors up the
+//! reduction tree (Demmel et al., arXiv:0809.2407; Agullo et al.,
+//! arXiv:0912.2572) — yet everything below L6 assumes shared memory.
+//! [`TsqrClient`] removes that assumption from the public surface: it
+//! speaks to a [`Transport`], and the transport decides where the
+//! engine shards actually run.
+//!
+//! ```no_run
+//! use mrtsqr::session::{FactorizationRequest, TsqrSession};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let client = TsqrSession::builder()
+//!     .engine_shards(2)
+//!     .worker_processes(2) // 0 (default) = in-process, same API
+//!     .build_client()?;
+//! let a = client.ingest_gaussian("A", 100_000, 25, 42)?;
+//! let job = client.submit(&a, FactorizationRequest::qr())?; // returns immediately
+//! println!("{}", job.wait()?.algorithm.name());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! # The two transports
+//!
+//! * **`Local`** ([`LocalTransport`], `worker_processes(0)`, the
+//!   default): wraps an in-process sharded
+//!   [`crate::service::TsqrService`]. Every call is a direct
+//!   delegation — no serialization, zero behavior change; results are
+//!   bit-identical to using the service directly.
+//! * **`Process`** ([`ProcessTransport`], `worker_processes(n)`):
+//!   spawns `n` `mrtsqr worker` children, each running its own engine
+//!   pool of [`crate::session::SessionBuilder::engine_shards`] shards,
+//!   and speaks the versioned binary [`wire`] protocol over their
+//!   stdin/stdout pipes. A reader thread per worker demultiplexes
+//!   replies and pushed job completions, so any number of in-flight
+//!   [`ClientJobHandle`]s share one pipe.
+//!
+//! # The determinism contract
+//!
+//! In-process vs cross-process is *pure placement*. The client assigns
+//! every job a global [`JobId`] in submission order; a job's DFS
+//! namespace (`job-<id>/`) and fault-RNG stream depend only on that id;
+//! and the wire format ships every `f64` as exact bits. Hence the same
+//! manifest through `worker_processes(2) × engine_shards(2)` and
+//! through an in-process `engine_shards(4)` pool produces bit-identical
+//! `R`/`Q`/Σ/`virtual_secs`/fault draws and
+//! [`crate::session::Factorization::result_digest`]s per job —
+//! enforced by `rust/tests/client.rs` and by the CI cross-process
+//! batch-digest diff.
+//!
+//! Global shard indices flatten the topology as
+//! `proc * engine_shards + local_shard`;
+//! [`crate::session::Placement::Pinned`] addresses that flattened
+//! space on every transport.
+//!
+//! # Failure isolation
+//!
+//! A killed or crashed worker process fails exactly the jobs in flight
+//! on it — the process-level mirror of the service's poisoned-shard
+//! isolation. Other workers keep serving, `Placement::Auto` routes
+//! around the corpse, and pinning to a dead worker's shards errors at
+//! submission. [`TsqrClient::kill_worker`] exists precisely to test
+//! this.
+
+pub mod process;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use process::ProcessTransport;
+pub use transport::{LocalTransport, Transport, TransportJob};
+pub use wire::{WorkerConfig, WIRE_VERSION};
+
+use crate::coordinator::MatrixHandle;
+use crate::linalg::Matrix;
+use crate::service::{JobId, JobStatus};
+use crate::session::{Factorization, FactorizationRequest, Placement};
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Handle to one submitted job, returned by [`TsqrClient::submit`]:
+/// poll or block for its [`Factorization`] exactly like a
+/// [`crate::service::JobHandle`] — the transport behind it is
+/// invisible.
+pub struct ClientJobHandle {
+    inner: Box<dyn TransportJob>,
+}
+
+impl ClientJobHandle {
+    /// The client-assigned global job id (also the job's DFS namespace
+    /// and fault-stream key, on whatever shard of whatever process the
+    /// router picked).
+    pub fn id(&self) -> JobId {
+        self.inner.id()
+    }
+
+    /// The request's label, if it carried one.
+    pub fn label(&self) -> Option<&str> {
+        self.inner.label()
+    }
+
+    pub fn status(&self) -> JobStatus {
+        self.inner.status()
+    }
+
+    /// Block until terminal. `Ok` carries the shared factorization;
+    /// its `stats.shard` is the *global* shard index.
+    pub fn wait(&self) -> Result<Arc<Factorization>> {
+        self.inner.wait()
+    }
+
+    /// Non-blocking probe: `None` while queued or running.
+    pub fn try_result(&self) -> Option<Result<Arc<Factorization>>> {
+        self.inner.try_result()
+    }
+
+    /// Cancel if not yet running; `true` on success.
+    pub fn cancel(&self) -> bool {
+        self.inner.cancel()
+    }
+
+    /// Measured running→terminal wall seconds (worker-side on a
+    /// process transport); `None` until terminal.
+    pub fn wall_secs(&self) -> Option<f64> {
+        self.inner.wall_secs()
+    }
+}
+
+/// The transport-agnostic serving facade. Build with
+/// [`crate::session::SessionBuilder::build_client`]; see the
+/// [module docs](self) for the architecture.
+pub struct TsqrClient {
+    transport: Box<dyn Transport>,
+    next_id: AtomicU64,
+}
+
+impl TsqrClient {
+    pub(crate) fn new(transport: Box<dyn Transport>) -> TsqrClient {
+        TsqrClient { transport, next_id: AtomicU64::new(0) }
+    }
+
+    // ------------------------------------------------------- topology
+
+    /// Worker processes behind this client (1 = in-process).
+    pub fn procs(&self) -> usize {
+        self.transport.procs()
+    }
+
+    /// Total engine shards across all processes (the global shard
+    /// index space [`Placement::Pinned`] addresses).
+    pub fn shards(&self) -> usize {
+        self.transport.shards()
+    }
+
+    /// Total service worker threads across all processes.
+    pub fn workers(&self) -> usize {
+        self.transport.workers()
+    }
+
+    /// Bounded per-shard queue capacity.
+    pub fn capacity(&self) -> usize {
+        self.transport.capacity()
+    }
+
+    /// Resolved compute backend name ("native", "pjrt", "custom").
+    pub fn backend_desc(&self) -> String {
+        self.transport.backend_desc()
+    }
+
+    /// Host threads each job's map/reduce waves fan out on (per
+    /// process).
+    pub fn host_threads(&self) -> usize {
+        self.transport.host_threads()
+    }
+
+    // ------------------------------------------------------ ingestion
+
+    /// Ingest a seeded gaussian matrix onto the home shard (global
+    /// shard 0). Same records as
+    /// [`crate::session::TsqrSession::ingest_gaussian`] for the same
+    /// seed — on a process transport the *seed* travels, not the rows,
+    /// and the worker generates identical records.
+    pub fn ingest_gaussian(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+    ) -> Result<MatrixHandle> {
+        self.transport.ingest_gaussian(name, rows, cols, seed, Placement::Auto)
+    }
+
+    /// [`TsqrClient::ingest_gaussian`] with an explicit global-shard
+    /// placement, so a large input lands on its target shard up front
+    /// (no staging copy when the consuming job is pinned there too).
+    pub fn ingest_gaussian_placed(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        placement: Placement,
+    ) -> Result<MatrixHandle> {
+        self.transport.ingest_gaussian(name, rows, cols, seed, placement)
+    }
+
+    /// Ingest an in-memory matrix onto the home shard (exact bits; on a
+    /// process transport the rows ship as length-prefixed chunks).
+    pub fn ingest_matrix(&self, name: &str, a: &Matrix) -> Result<MatrixHandle> {
+        self.transport.ingest_matrix(name, a, Placement::Auto)
+    }
+
+    /// [`TsqrClient::ingest_matrix`] with an explicit global-shard
+    /// placement.
+    pub fn ingest_matrix_placed(
+        &self,
+        name: &str,
+        a: &Matrix,
+        placement: Placement,
+    ) -> Result<MatrixHandle> {
+        self.transport.ingest_matrix(name, a, placement)
+    }
+
+    /// Read a handle's rows back from whichever shard/process holds
+    /// them.
+    pub fn get_matrix(&self, handle: &MatrixHandle) -> Result<Matrix> {
+        self.transport.get_matrix(handle)
+    }
+
+    /// Mark a DFS file's virtual byte scale everywhere it is (or will
+    /// be) staged.
+    pub fn set_scale(&self, name: &str, scale: f64) -> Result<()> {
+        self.transport.set_scale(name, scale)
+    }
+
+    // ----------------------------------------------------- submission
+
+    /// Submit a job and return immediately with its handle. The client
+    /// assigns the next global job id; `req.placement` (if pinned)
+    /// names a *global* shard.
+    pub fn submit(
+        &self,
+        input: &MatrixHandle,
+        req: FactorizationRequest,
+    ) -> Result<ClientJobHandle> {
+        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        self.submit_id(id, input, req)
+    }
+
+    /// Submit under a *caller-chosen* job id (it must be fresh). This
+    /// is the relay hook the wire protocol uses — a `mrtsqr serve`
+    /// process runs jobs under the ids its remote peer assigned, so
+    /// namespaces and fault streams agree end to end. Most callers
+    /// want [`TsqrClient::submit`].
+    pub fn submit_with_id(
+        &self,
+        id: JobId,
+        input: &MatrixHandle,
+        req: FactorizationRequest,
+    ) -> Result<ClientJobHandle> {
+        // keep auto-assigned ids ahead of any explicit ones
+        self.next_id.fetch_max(id.0 + 1, Ordering::Relaxed);
+        self.submit_id(id, input, req)
+    }
+
+    fn submit_id(
+        &self,
+        id: JobId,
+        input: &MatrixHandle,
+        req: FactorizationRequest,
+    ) -> Result<ClientJobHandle> {
+        Ok(ClientJobHandle { inner: self.transport.submit(id, input, req)? })
+    }
+
+    /// Run queued jobs on the calling thread in deterministic
+    /// (priority, job-id) order — the serial baseline. Errors on a
+    /// process transport (a pipe cannot lend threads).
+    pub fn drain_now(&self) -> Result<usize> {
+        self.transport.drain_now()
+    }
+
+    // ------------------------------------------------------ lifecycle
+
+    /// Global shard index a job was placed on, where known (local
+    /// transport: immediately; process transport: once the job
+    /// completed — or read it off `Factorization::stats.shard`).
+    pub fn shard_of(&self, id: JobId) -> Option<usize> {
+        self.transport.shard_of(id)
+    }
+
+    /// Sweep one finished job's DFS namespace; returns files removed.
+    pub fn evict_job(&self, id: JobId) -> Result<usize> {
+        self.transport.evict_job(id)
+    }
+
+    /// Fault-injection hook: kill worker process `proc` outright, as a
+    /// crash/OOM would. Its in-flight jobs fail; every other worker
+    /// keeps serving. Errors on the local transport.
+    pub fn kill_worker(&self, proc: usize) -> Result<()> {
+        self.transport.kill_worker(proc)
+    }
+
+    /// Graceful shutdown (also runs on drop): reject new work, let
+    /// workers finish, reap child processes.
+    pub fn shutdown(&self) {
+        self.transport.shutdown();
+    }
+}
+
+impl Drop for TsqrClient {
+    fn drop(&mut self) {
+        self.transport.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{Backend, TsqrSession};
+
+    fn local_client() -> TsqrClient {
+        TsqrSession::builder()
+            .backend(Backend::Native)
+            .rows_per_task(50)
+            .service_workers(0)
+            .build_client()
+            .unwrap()
+    }
+
+    #[test]
+    fn local_client_round_trips_a_job() {
+        let client = local_client();
+        assert_eq!(client.procs(), 1);
+        assert_eq!(client.shards(), 1);
+        let h = client.ingest_gaussian("A", 300, 5, 1).unwrap();
+        let job = client.submit(&h, FactorizationRequest::qr().labeled("smoke")).unwrap();
+        assert_eq!(job.status(), JobStatus::Queued);
+        assert_eq!(job.label(), Some("smoke"));
+        assert!(job.try_result().is_none());
+        assert_eq!(client.drain_now().unwrap(), 1);
+        let fact = job.wait().unwrap();
+        assert_eq!(job.status(), JobStatus::Done);
+        assert!(job.wall_secs().unwrap() >= 0.0);
+        let q = client.get_matrix(fact.q.as_ref().unwrap()).unwrap();
+        assert!(q.orthogonality_error() < 1e-10);
+        assert!(client.evict_job(job.id()).unwrap() > 0);
+        assert!(client.kill_worker(0).is_err(), "local transport has no process to kill");
+    }
+
+    #[test]
+    fn client_ids_are_sequential_and_fetch_max_respects_explicit_ids() {
+        let client = local_client();
+        let h = client.ingest_gaussian("A", 60, 3, 2).unwrap();
+        let j0 = client.submit(&h, FactorizationRequest::r_only()).unwrap();
+        let j1 = client.submit(&h, FactorizationRequest::r_only()).unwrap();
+        assert_eq!((j0.id().0, j1.id().0), (0, 1));
+        let j9 = client
+            .submit_with_id(JobId(9), &h, FactorizationRequest::r_only())
+            .unwrap();
+        assert_eq!(j9.id().0, 9);
+        let j10 = client.submit(&h, FactorizationRequest::r_only()).unwrap();
+        assert_eq!(j10.id().0, 10, "auto ids must jump past explicit ones");
+        client.drain_now().unwrap();
+        for j in [&j0, &j1, &j9, &j10] {
+            j.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn duplicate_explicit_ids_are_rejected() {
+        let client = local_client();
+        let h = client.ingest_gaussian("A", 60, 3, 3).unwrap();
+        let _j = client
+            .submit_with_id(JobId(5), &h, FactorizationRequest::r_only())
+            .unwrap();
+        let err = client
+            .submit_with_id(JobId(5), &h, FactorizationRequest::r_only())
+            .unwrap_err();
+        assert!(err.to_string().contains("already"), "{err}");
+    }
+}

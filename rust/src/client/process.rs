@@ -1,0 +1,1089 @@
+//! The cross-process transport: `mrtsqr worker` child processes
+//! speaking the [`super::wire`] protocol over stdin/stdout pipes.
+//!
+//! One [`ProcessTransport`] owns `worker_processes(n)` children. Each
+//! child runs its own engine pool (its own DFS shards, its own virtual
+//! clocks, one [`crate::service::TsqrService`]) configured identically
+//! to the parent's recipe via the `Hello` handshake — which is why
+//! results are bit-identical to an in-process run: a job's namespace
+//! and fault stream depend only on its caller-assigned global id, and
+//! the wire format ships every `f64` as exact bits.
+//!
+//! # Demultiplexing
+//!
+//! All traffic with one worker flows over a single pipe pair, so many
+//! in-flight [`crate::client::ClientJobHandle`]s must share it. Writes
+//! are serialized by a mutex; reads are owned by one **reader thread**
+//! per worker that routes each incoming frame by its correlation id:
+//! ordinary replies go to the `ReplySlot` registered by the blocked
+//! request, and pushed job-completion frames ([`wire::Op::JobDone`] /
+//! [`wire::Op::JobFail`], `req_id 0`) go to the `RemoteJob` slot
+//! registered at submission. When the pipe dies — worker killed,
+//! crashed, or OOMed — the reader fails every pending request and every
+//! in-flight job *of that worker only*; other workers keep serving
+//! (the process-level mirror of the poisoned-shard isolation test).
+//!
+//! # Routing
+//!
+//! `ProcRouter` lifts the PR-4 shard router one level: a global shard
+//! index `k` names `(process k / shards_per_proc, local shard k %
+//! shards_per_proc)`, `Placement::Pinned(k)` maps accordingly, and
+//! `Placement::Auto` picks the least-loaded *live* process
+//! (deterministic job-id tie-break) and lets that worker's own router
+//! pick among its local shards. Ingested inputs are staged onto a
+//! worker the first time a job routed there needs them — replayed from
+//! the client-side recipe (gaussian seeds replay as seeds, not bytes) —
+//! and job outputs are fetched from the worker that holds them.
+
+use super::transport::{Transport, TransportJob};
+use super::wire::{self, Frame, Op, WireReader, WireWriter, WorkerConfig};
+use crate::coordinator::MatrixHandle;
+use crate::linalg::Matrix;
+use crate::service::{JobId, JobStatus};
+use crate::session::{Factorization, FactorizationRequest, Placement};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::io::{BufReader, BufWriter, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Rows per [`wire::Op::IngestChunk`] frame when shipping an in-memory
+/// matrix (bounds per-frame memory, mirrors the ingestion batch size).
+const CHUNK_ROWS: usize = 4096;
+
+/// Locate the `mrtsqr` binary to spawn as a worker when the builder did
+/// not name one: an explicit `MRTSQR_WORKER_BIN`, the current
+/// executable when it *is* `mrtsqr` (the `batch`/`serve` CLI path), or
+/// an `mrtsqr` sibling of the current executable (`target/<profile>/`
+/// for test and bench binaries living in `deps/`).
+pub(crate) fn default_worker_binary() -> Result<PathBuf> {
+    if let Some(path) = std::env::var_os("MRTSQR_WORKER_BIN") {
+        return Ok(PathBuf::from(path));
+    }
+    let exe = std::env::current_exe().context("resolving current executable")?;
+    if exe.file_stem() == Some(std::ffi::OsStr::new("mrtsqr")) {
+        return Ok(exe);
+    }
+    let mut dir = exe.parent();
+    while let Some(d) = dir {
+        let candidate = d.join("mrtsqr");
+        if candidate.is_file() {
+            return Ok(candidate);
+        }
+        if d.file_name() == Some(std::ffi::OsStr::new("target")) {
+            break;
+        }
+        dir = d.parent();
+    }
+    bail!(
+        "cannot locate the `mrtsqr` worker binary from {exe:?} — pass \
+         SessionBuilder::worker_binary(path) or set MRTSQR_WORKER_BIN"
+    )
+}
+
+// ------------------------------------------------------------- reply slot
+
+/// One blocked request's reply cell, filled by the reader thread.
+struct ReplySlot {
+    cell: Mutex<Option<Result<Frame>>>,
+    ready: Condvar,
+}
+
+impl ReplySlot {
+    fn new() -> ReplySlot {
+        ReplySlot { cell: Mutex::new(None), ready: Condvar::new() }
+    }
+
+    fn fill(&self, value: Result<Frame>) {
+        *self.cell.lock().expect("reply slot") = Some(value);
+        self.ready.notify_all();
+    }
+
+    fn take(&self) -> Result<Frame> {
+        let mut cell = self.cell.lock().expect("reply slot");
+        loop {
+            if let Some(value) = cell.take() {
+                return value;
+            }
+            cell = self.ready.wait(cell).expect("reply slot");
+        }
+    }
+}
+
+// ------------------------------------------------------------- remote job
+
+/// Client-side terminal state of one remote job.
+enum RemoteState {
+    Pending,
+    Done { fact: Arc<Factorization>, wall_secs: f64 },
+    Failed { msg: String, wall_secs: Option<f64> },
+    Cancelled,
+}
+
+/// Shared slot of one in-flight remote job, filled by the worker's
+/// pushed terminal frame (or by connection death).
+struct RemoteJob {
+    id: JobId,
+    label: Option<String>,
+    state: Mutex<RemoteState>,
+    done: Condvar,
+}
+
+impl RemoteJob {
+    fn resolve(&self, state: RemoteState) {
+        let mut slot = self.state.lock().expect("remote job state");
+        if matches!(*slot, RemoteState::Pending) {
+            *slot = state;
+        }
+        self.done.notify_all();
+    }
+
+    fn terminal_status(&self) -> Option<JobStatus> {
+        match *self.state.lock().expect("remote job state") {
+            RemoteState::Pending => None,
+            RemoteState::Done { .. } => Some(JobStatus::Done),
+            RemoteState::Failed { .. } => Some(JobStatus::Failed),
+            RemoteState::Cancelled => Some(JobStatus::Cancelled),
+        }
+    }
+}
+
+/// [`TransportJob`] over a [`RemoteJob`] plus the connection that can
+/// answer status/cancel queries while the job is still live.
+struct RemoteJobHandle {
+    job: Arc<RemoteJob>,
+    conn: Arc<WorkerConn>,
+}
+
+impl TransportJob for RemoteJobHandle {
+    fn id(&self) -> JobId {
+        self.job.id
+    }
+
+    fn label(&self) -> Option<&str> {
+        self.job.label.as_deref()
+    }
+
+    fn status(&self) -> JobStatus {
+        if let Some(status) = self.job.terminal_status() {
+            return status;
+        }
+        let mut w = WireWriter::new();
+        w.u64(self.job.id.0);
+        match self.conn.request(Op::Status, &w.into_bytes()) {
+            Ok(frame) => {
+                let mut r = WireReader::new(&frame.payload);
+                r.status().unwrap_or(JobStatus::Failed)
+            }
+            // the connection died: the reader thread resolves every
+            // in-flight job to Failed, so re-read the local state
+            Err(_) => self.job.terminal_status().unwrap_or(JobStatus::Failed),
+        }
+    }
+
+    fn wait(&self) -> Result<Arc<Factorization>> {
+        let mut state = self.job.state.lock().expect("remote job state");
+        loop {
+            match &*state {
+                RemoteState::Pending => {
+                    state = self.job.done.wait(state).expect("remote job state");
+                }
+                RemoteState::Done { fact, .. } => return Ok(fact.clone()),
+                RemoteState::Failed { msg, .. } => bail!("{} failed: {msg}", self.job.id),
+                RemoteState::Cancelled => {
+                    bail!("{} was cancelled before it ran", self.job.id)
+                }
+            }
+        }
+    }
+
+    fn try_result(&self) -> Option<Result<Arc<Factorization>>> {
+        match &*self.job.state.lock().expect("remote job state") {
+            RemoteState::Pending => None,
+            RemoteState::Done { fact, .. } => Some(Ok(fact.clone())),
+            RemoteState::Failed { msg, .. } => {
+                Some(Err(anyhow!("{} failed: {msg}", self.job.id)))
+            }
+            RemoteState::Cancelled => {
+                Some(Err(anyhow!("{} was cancelled before it ran", self.job.id)))
+            }
+        }
+    }
+
+    fn cancel(&self) -> bool {
+        if self.job.terminal_status().is_some() {
+            return false;
+        }
+        let mut w = WireWriter::new();
+        w.u64(self.job.id.0);
+        match self.conn.request(Op::Cancel, &w.into_bytes()) {
+            Ok(frame) => {
+                let mut r = WireReader::new(&frame.payload);
+                r.bool().unwrap_or(false)
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn wall_secs(&self) -> Option<f64> {
+        match &*self.job.state.lock().expect("remote job state") {
+            RemoteState::Done { wall_secs, .. } => Some(*wall_secs),
+            RemoteState::Failed { wall_secs, .. } => *wall_secs,
+            _ => None,
+        }
+    }
+}
+
+// ------------------------------------------------------------ connection
+
+/// One spawned worker process: the write half of its pipe, the registry
+/// the reader thread routes into, and its liveness/load accounting.
+struct WorkerConn {
+    index: usize,
+    child: Mutex<Child>,
+    /// `None` once shut down (closing the pipe is the EOF the worker
+    /// exits on).
+    stdin: Mutex<Option<BufWriter<ChildStdin>>>,
+    /// Correlation ids start at 1: 0 tags pushed frames.
+    next_req: AtomicU64,
+    pending: Mutex<HashMap<u64, Arc<ReplySlot>>>,
+    jobs: Mutex<HashMap<u64, Arc<RemoteJob>>>,
+    alive: AtomicBool,
+    /// In-flight jobs — the router's load metric.
+    load: AtomicUsize,
+    reader: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl WorkerConn {
+    /// Send one request frame and block for its reply. Fails fast when
+    /// the worker is dead, and cannot deadlock with the reader: the
+    /// slot is registered before the write, and a dying reader fails
+    /// every registered slot after flagging `alive = false`.
+    fn request(&self, op: Op, payload: &[u8]) -> Result<Frame> {
+        let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
+        let slot = Arc::new(ReplySlot::new());
+        self.pending.lock().expect("pending map").insert(req_id, slot.clone());
+        if !self.alive.load(Ordering::SeqCst) {
+            self.pending.lock().expect("pending map").remove(&req_id);
+            bail!("worker process {} is not running", self.index);
+        }
+        let write_result = {
+            let mut stdin = self.stdin.lock().expect("worker stdin");
+            match stdin.as_mut() {
+                None => Err(anyhow!("worker process {} is shut down", self.index)),
+                Some(w) => wire::write_frame(w, op, req_id, payload)
+                    .and_then(|()| w.flush().map_err(Into::into)),
+            }
+        };
+        if let Err(err) = write_result {
+            self.pending.lock().expect("pending map").remove(&req_id);
+            bail!("worker process {}: {err:#}", self.index);
+        }
+        let frame = slot.take()?;
+        if frame.op == Op::Err {
+            let msg = WireReader::new(&frame.payload)
+                .str()
+                .unwrap_or_else(|_| "malformed error reply".into());
+            bail!("worker process {}: {msg}", self.index);
+        }
+        Ok(frame)
+    }
+
+    /// Resolve everything still waiting on this connection — called by
+    /// the reader thread exactly once, when the pipe dies.
+    fn fail_all(&self, why: &str) {
+        self.alive.store(false, Ordering::SeqCst);
+        let pending: Vec<Arc<ReplySlot>> =
+            self.pending.lock().expect("pending map").drain().map(|(_, s)| s).collect();
+        for slot in pending {
+            slot.fill(Err(anyhow!("worker process {}: {why}", self.index)));
+        }
+        let jobs: Vec<Arc<RemoteJob>> =
+            self.jobs.lock().expect("jobs map").drain().map(|(_, j)| j).collect();
+        for job in jobs {
+            self.load.fetch_sub(1, Ordering::Relaxed);
+            job.resolve(RemoteState::Failed {
+                msg: format!("worker process {} {why}", self.index),
+                wall_secs: None,
+            });
+        }
+    }
+}
+
+/// Shared routing records: where each job went (and, once done, which
+/// global shard served it), and which workers hold which DFS files.
+#[derive(Default)]
+struct RouteBook {
+    /// job id → (process, global shard once known).
+    placements: Mutex<BTreeMap<u64, (usize, Option<usize>)>>,
+    /// file name → processes holding a copy.
+    staged: Mutex<HashMap<String, BTreeSet<usize>>>,
+}
+
+/// The reader-thread demux loop for one worker (see the module docs).
+fn reader_loop(
+    conn: &WorkerConn,
+    book: &RouteBook,
+    shards_per_proc: usize,
+    stdout: ChildStdout,
+) {
+    let mut stdout = BufReader::new(stdout);
+    let why = loop {
+        let frame = match wire::read_frame(&mut stdout) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => break "exited".to_string(),
+            Err(err) => break format!("desynchronized: {err:#}"),
+        };
+        match frame.op {
+            Op::JobDone => match decode_job_done(&frame.payload) {
+                Ok((id, wall_secs, mut fact)) => {
+                    // remap the worker-local shard index into the
+                    // global (proc, shard) flattening
+                    let global = conn.index * shards_per_proc + fact.stats.shard;
+                    fact.stats.shard = global;
+                    if let Some(entry) =
+                        book.placements.lock().expect("placements").get_mut(&id)
+                    {
+                        entry.1 = Some(global);
+                    }
+                    if let Some(q) = &fact.q {
+                        book.staged
+                            .lock()
+                            .expect("staged map")
+                            .entry(q.file.clone())
+                            .or_default()
+                            .insert(conn.index);
+                    }
+                    if let Some(job) = conn.jobs.lock().expect("jobs map").remove(&id) {
+                        conn.load.fetch_sub(1, Ordering::Relaxed);
+                        job.resolve(RemoteState::Done { fact: Arc::new(fact), wall_secs });
+                    }
+                }
+                Err(err) => break format!("sent a malformed JobDone: {err:#}"),
+            },
+            Op::JobFail => match decode_job_fail(&frame.payload) {
+                Ok((id, status, wall_secs, msg)) => {
+                    if let Some(job) = conn.jobs.lock().expect("jobs map").remove(&id) {
+                        conn.load.fetch_sub(1, Ordering::Relaxed);
+                        let state = if status == JobStatus::Cancelled {
+                            RemoteState::Cancelled
+                        } else {
+                            RemoteState::Failed { msg, wall_secs }
+                        };
+                        job.resolve(state);
+                    }
+                }
+                Err(err) => break format!("sent a malformed JobFail: {err:#}"),
+            },
+            _ => {
+                let slot = conn.pending.lock().expect("pending map").remove(&frame.req_id);
+                // a reply nobody waits for means the requester already
+                // bailed on a write error — drop it
+                if let Some(slot) = slot {
+                    slot.fill(Ok(frame));
+                }
+            }
+        }
+    };
+    conn.fail_all(&why);
+}
+
+fn decode_job_done(payload: &[u8]) -> Result<(u64, f64, Factorization)> {
+    let mut r = WireReader::new(payload);
+    let id = r.u64()?;
+    let wall = r.f64()?;
+    let fact = r.factorization()?;
+    r.finish()?;
+    Ok((id, wall, fact))
+}
+
+fn decode_job_fail(payload: &[u8]) -> Result<(u64, JobStatus, Option<f64>, String)> {
+    let mut r = WireReader::new(payload);
+    let id = r.u64()?;
+    let status = r.status()?;
+    let wall = match r.u8()? {
+        0 => None,
+        1 => Some(r.f64()?),
+        other => bail!("bad option tag {other}"),
+    };
+    let msg = r.str()?;
+    r.finish()?;
+    Ok((id, status, wall, msg))
+}
+
+// ---------------------------------------------------------------- router
+
+/// PR 4's least-loaded/pinned placement logic, lifted across processes:
+/// global shard `k` ≡ (process `k / shards_per_proc`, local shard
+/// `k % shards_per_proc`).
+pub(crate) struct ProcRouter {
+    nprocs: usize,
+    shards_per_proc: usize,
+}
+
+impl ProcRouter {
+    pub(crate) fn new(nprocs: usize, shards_per_proc: usize) -> ProcRouter {
+        ProcRouter { nprocs, shards_per_proc }
+    }
+
+    pub(crate) fn total_shards(&self) -> usize {
+        self.nprocs * self.shards_per_proc
+    }
+
+    /// Pick the worker process for a job (and the placement to forward
+    /// to it). `loads[p]` is `None` for dead processes.
+    pub(crate) fn route(
+        &self,
+        id: JobId,
+        placement: Placement,
+        loads: &[Option<usize>],
+    ) -> Result<(usize, Placement)> {
+        debug_assert_eq!(loads.len(), self.nprocs);
+        match placement {
+            Placement::Pinned(k) => {
+                if k >= self.total_shards() {
+                    bail!(
+                        "request pinned to global shard {k}, but the client has {} \
+                         ({} process(es) x {} shard(s))",
+                        self.total_shards(),
+                        self.nprocs,
+                        self.shards_per_proc
+                    );
+                }
+                let proc = k / self.shards_per_proc;
+                if loads[proc].is_none() {
+                    bail!("request pinned to shard {k}, but worker process {proc} is dead");
+                }
+                Ok((proc, Placement::Pinned(k % self.shards_per_proc)))
+            }
+            Placement::Auto => {
+                let min = loads
+                    .iter()
+                    .flatten()
+                    .min()
+                    .copied()
+                    .ok_or_else(|| anyhow!("every worker process is dead"))?;
+                let tied: Vec<usize> = loads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| **l == Some(min))
+                    .map(|(i, _)| i)
+                    .collect();
+                Ok((tied[(id.0 as usize) % tied.len()], Placement::Auto))
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- transport
+
+/// How to re-create a seeded gaussian input on another worker on
+/// demand: ship the recipe, not the rows — the worker regenerates
+/// identical records from the seed. Matrices ingested by rows carry no
+/// client-side copy at all; staging them elsewhere fetches the rows
+/// back from a worker that holds them (exact bits, identical key
+/// layout), so client memory never retains an input.
+#[derive(Clone, Copy)]
+struct GaussianRecipe {
+    rows: usize,
+    cols: usize,
+    seed: u64,
+}
+
+/// The `Process` transport: see the [module docs](self).
+pub struct ProcessTransport {
+    conns: Vec<Arc<WorkerConn>>,
+    router: ProcRouter,
+    book: Arc<RouteBook>,
+    recipes: Mutex<HashMap<String, GaussianRecipe>>,
+    /// Virtual byte scales to re-apply when a recipe replays.
+    scales: Mutex<HashMap<String, f64>>,
+    /// Topology reported by the workers' `HelloAck`s.
+    workers_per_proc: usize,
+    capacity: usize,
+    host_threads: usize,
+    backend_desc: String,
+    down: AtomicBool,
+}
+
+impl ProcessTransport {
+    /// Spawn `nprocs` workers from `program`, handshake each with
+    /// `cfg`, and wire up their reader threads.
+    pub(crate) fn launch(
+        cfg: WorkerConfig,
+        nprocs: usize,
+        program: PathBuf,
+    ) -> Result<ProcessTransport> {
+        ensure!(nprocs >= 1, "worker_processes wants at least one process");
+        let book = Arc::new(RouteBook::default());
+        let shards_per_proc = cfg.engine_shards.max(1);
+        let mut conns = Vec::with_capacity(nprocs);
+        let mut topo = None;
+        for index in 0..nprocs {
+            // a failure to spawn or handshake worker k must reap
+            // workers 0..k — otherwise they (and their blocked reader
+            // threads) outlive the failed launch forever
+            match Self::spawn_one(&program, index, &cfg, &book, shards_per_proc) {
+                Ok((conn, worker_topo)) => {
+                    topo = Some(worker_topo);
+                    conns.push(conn);
+                }
+                Err(err) => {
+                    Self::reap(&conns);
+                    return Err(err);
+                }
+            }
+        }
+        let (workers_per_proc, capacity, host_threads, backend_desc) =
+            topo.expect("at least one worker");
+        Ok(ProcessTransport {
+            conns,
+            router: ProcRouter::new(nprocs, shards_per_proc),
+            book,
+            recipes: Mutex::new(HashMap::new()),
+            scales: Mutex::new(HashMap::new()),
+            workers_per_proc,
+            capacity,
+            host_threads,
+            backend_desc,
+            down: AtomicBool::new(false),
+        })
+    }
+
+    /// Spawn one worker, start its demux reader, and run the `Hello`
+    /// handshake. Returns the connection plus the topology its ack
+    /// reported.
+    fn spawn_one(
+        program: &std::path::Path,
+        index: usize,
+        cfg: &WorkerConfig,
+        book: &Arc<RouteBook>,
+        shards_per_proc: usize,
+    ) -> Result<(Arc<WorkerConn>, (usize, usize, usize, String))> {
+        let mut child = Command::new(program)
+            .arg("worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning worker process from {program:?}"))?;
+        let stdin = child.stdin.take().expect("piped worker stdin");
+        let stdout = child.stdout.take().expect("piped worker stdout");
+        let conn = Arc::new(WorkerConn {
+            index,
+            child: Mutex::new(child),
+            stdin: Mutex::new(Some(BufWriter::new(stdin))),
+            next_req: AtomicU64::new(1),
+            pending: Mutex::new(HashMap::new()),
+            jobs: Mutex::new(HashMap::new()),
+            alive: AtomicBool::new(true),
+            load: AtomicUsize::new(0),
+            reader: Mutex::new(None),
+        });
+        let reader = {
+            let conn = conn.clone();
+            let book = book.clone();
+            std::thread::Builder::new()
+                .name(format!("mrtsqr-demux-{index}"))
+                .spawn(move || reader_loop(&conn, &book, shards_per_proc, stdout))
+                .expect("spawn demux reader")
+        };
+        *conn.reader.lock().expect("reader slot") = Some(reader);
+
+        // handshake: ship the cluster recipe, check the topology;
+        // reap this one connection ourselves on any failure from here
+        let handshake = (|| -> Result<(usize, usize, usize, String)> {
+            let mut w = WireWriter::new();
+            w.config(cfg);
+            let ack = conn
+                .request(Op::Hello, &w.into_bytes())
+                .with_context(|| format!("handshaking worker process {index}"))?;
+            ensure!(ack.op == Op::HelloAck, "worker {index}: expected HelloAck, got {:?}", ack.op);
+            let mut r = WireReader::new(&ack.payload);
+            let shards = r.usize()?;
+            let workers = r.usize()?;
+            let capacity = r.usize()?;
+            let host_threads = r.usize()?;
+            let backend = r.str()?;
+            r.finish()?;
+            ensure!(
+                shards == shards_per_proc,
+                "worker {index} built {shards} shard(s), expected {shards_per_proc}"
+            );
+            Ok((workers, capacity, host_threads, backend))
+        })();
+        match handshake {
+            Ok(worker_topo) => Ok((conn, worker_topo)),
+            Err(err) => {
+                Self::reap(std::slice::from_ref(&conn));
+                Err(err)
+            }
+        }
+    }
+
+    /// Tear down spawned workers after a failed launch: close the pipe
+    /// (the EOF a worker exits on), kill as a belt-and-braces, reap the
+    /// zombie, and join the reader thread.
+    fn reap(conns: &[Arc<WorkerConn>]) {
+        for conn in conns {
+            *conn.stdin.lock().expect("worker stdin") = None;
+            {
+                let mut child = conn.child.lock().expect("worker child");
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            if let Some(reader) = conn.reader.lock().expect("reader slot").take() {
+                let _ = reader.join();
+            }
+        }
+    }
+
+    fn loads(&self) -> Vec<Option<usize>> {
+        self.conns
+            .iter()
+            .map(|c| {
+                c.alive
+                    .load(Ordering::SeqCst)
+                    .then(|| c.load.load(Ordering::Relaxed))
+            })
+            .collect()
+    }
+
+    fn is_staged(&self, name: &str, proc: usize) -> bool {
+        self.book
+            .staged
+            .lock()
+            .expect("staged map")
+            .get(name)
+            .is_some_and(|procs| procs.contains(&proc))
+    }
+
+    fn mark_staged(&self, name: &str, proc: usize, exclusive: bool) {
+        let mut staged = self.book.staged.lock().expect("staged map");
+        let entry = staged.entry(name.to_string()).or_default();
+        if exclusive {
+            entry.clear();
+        }
+        entry.insert(proc);
+    }
+
+    /// Ship an in-memory matrix to one worker in bounded chunks.
+    fn send_matrix(
+        &self,
+        conn: &WorkerConn,
+        name: &str,
+        a: &Matrix,
+        placement: Placement,
+    ) -> Result<MatrixHandle> {
+        let mut w = WireWriter::new();
+        w.str(name);
+        w.u64(a.cols as u64);
+        w.placement(placement);
+        conn.request(Op::IngestBegin, &w.into_bytes())?;
+        let mut row = 0;
+        while row < a.rows {
+            let take = CHUNK_ROWS.min(a.rows - row);
+            let mut w = WireWriter::new();
+            w.chunk(name, row as u64, a.cols, &a.data[row * a.cols..(row + take) * a.cols]);
+            conn.request(Op::IngestChunk, &w.into_bytes())?;
+            row += take;
+        }
+        // rows == 0 still produces a well-formed (empty) file
+        let mut w = WireWriter::new();
+        w.str(name);
+        let reply = conn.request(Op::IngestEnd, &w.into_bytes())?;
+        ensure!(reply.op == Op::Handle, "expected Handle, got {:?}", reply.op);
+        let mut r = WireReader::new(&reply.payload);
+        let handle = r.handle()?;
+        r.finish()?;
+        Ok(handle)
+    }
+
+    /// Make `handle`'s file readable on worker `proc`: a no-op when a
+    /// copy is already there; otherwise replay the ingestion recipe, or
+    /// — for job outputs — fetch the rows from the worker holding them.
+    fn ensure_staged(&self, proc: usize, handle: &MatrixHandle) -> Result<()> {
+        if self.is_staged(&handle.file, proc) {
+            return Ok(());
+        }
+        let conn = &self.conns[proc];
+        // copy the recipe out so no lock is held across the blocking
+        // pipe round-trips below
+        let recipe = self.recipes.lock().expect("recipes").get(&handle.file).copied();
+        if let Some(GaussianRecipe { rows, cols, seed }) = recipe {
+            let mut w = WireWriter::new();
+            w.str(&handle.file);
+            w.u64(rows as u64);
+            w.u64(cols as u64);
+            w.u64(seed);
+            w.placement(Placement::Auto);
+            conn.request(Op::IngestGaussian, &w.into_bytes())?;
+        } else {
+            // a row-ingested matrix or a job output: fetch from
+            // whichever live worker holds it. Rows keep their exact
+            // bits and order; keys are re-derived (same 32-byte
+            // layout), so byte accounting — and with it the virtual
+            // clock — is unchanged.
+            let rows = self.fetch_matrix(handle)?;
+            self.send_matrix(conn, &handle.file, &rows, Placement::Auto)?;
+        }
+        let scale = self.scales.lock().expect("scales").get(&handle.file).copied();
+        if let Some(scale) = scale {
+            let mut w = WireWriter::new();
+            w.str(&handle.file);
+            w.f64(scale);
+            conn.request(Op::SetScale, &w.into_bytes())?;
+        }
+        self.mark_staged(&handle.file, proc, false);
+        Ok(())
+    }
+
+    fn fetch_matrix(&self, handle: &MatrixHandle) -> Result<Matrix> {
+        // prefer workers known to hold the file, then try the rest
+        let known: Vec<usize> = self
+            .book
+            .staged
+            .lock()
+            .expect("staged map")
+            .get(&handle.file)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default();
+        let mut order: Vec<usize> = known;
+        for i in 0..self.conns.len() {
+            if !order.contains(&i) {
+                order.push(i);
+            }
+        }
+        let mut last_err = anyhow!("no live worker holds {:?}", handle.file);
+        for proc in order {
+            let conn = &self.conns[proc];
+            if !conn.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut w = WireWriter::new();
+            w.handle(handle);
+            match conn.request(Op::FetchMatrix, &w.into_bytes()) {
+                Ok(reply) => {
+                    ensure!(
+                        reply.op == Op::MatrixData,
+                        "expected MatrixData, got {:?}",
+                        reply.op
+                    );
+                    let mut r = WireReader::new(&reply.payload);
+                    let m = r.matrix()?;
+                    r.finish()?;
+                    self.mark_staged(&handle.file, proc, false);
+                    return Ok(m);
+                }
+                Err(err) => last_err = err,
+            }
+        }
+        Err(last_err)
+    }
+
+    fn ingest_target(&self, placement: Placement) -> Result<(usize, Placement)> {
+        match placement {
+            Placement::Auto => Ok((0, Placement::Auto)),
+            Placement::Pinned(k) => {
+                ensure!(
+                    k < self.router.total_shards(),
+                    "ingest pinned to global shard {k}, but the client has {}",
+                    self.router.total_shards()
+                );
+                let proc = k / self.router.shards_per_proc;
+                ensure!(
+                    self.conns[proc].alive.load(Ordering::SeqCst),
+                    "ingest pinned to shard {k}, but worker process {proc} is dead"
+                );
+                Ok((proc, Placement::Pinned(k % self.router.shards_per_proc)))
+            }
+        }
+    }
+}
+
+impl Transport for ProcessTransport {
+    fn procs(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn shards(&self) -> usize {
+        self.router.total_shards()
+    }
+
+    fn workers(&self) -> usize {
+        self.workers_per_proc * self.conns.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn backend_desc(&self) -> String {
+        self.backend_desc.clone()
+    }
+
+    fn host_threads(&self) -> usize {
+        self.host_threads
+    }
+
+    fn ingest_gaussian(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        placement: Placement,
+    ) -> Result<MatrixHandle> {
+        let (proc, local) = self.ingest_target(placement)?;
+        let mut w = WireWriter::new();
+        w.str(name);
+        w.u64(rows as u64);
+        w.u64(cols as u64);
+        w.u64(seed);
+        w.placement(local);
+        let reply = self.conns[proc].request(Op::IngestGaussian, &w.into_bytes())?;
+        ensure!(reply.op == Op::Handle, "expected Handle, got {:?}", reply.op);
+        let mut r = WireReader::new(&reply.payload);
+        let handle = r.handle()?;
+        r.finish()?;
+        // re-ingesting a name invalidates copies staged on other
+        // workers: exclusive ownership until re-staged from the fresh
+        // recipe
+        self.recipes
+            .lock()
+            .expect("recipes")
+            .insert(name.to_string(), GaussianRecipe { rows, cols, seed });
+        self.mark_staged(name, proc, true);
+        Ok(handle)
+    }
+
+    fn ingest_matrix(
+        &self,
+        name: &str,
+        a: &Matrix,
+        placement: Placement,
+    ) -> Result<MatrixHandle> {
+        let (proc, local) = self.ingest_target(placement)?;
+        let handle = self.send_matrix(&self.conns[proc], name, a, local)?;
+        // no client-side copy is retained: a stale gaussian recipe for
+        // this name must go, so later staging fetches the fresh rows
+        // from the worker that now holds them
+        self.recipes.lock().expect("recipes").remove(name);
+        self.mark_staged(name, proc, true);
+        Ok(handle)
+    }
+
+    fn submit(
+        &self,
+        id: JobId,
+        input: &MatrixHandle,
+        mut req: FactorizationRequest,
+    ) -> Result<Box<dyn TransportJob>> {
+        let (proc, local) = self.router.route(id, req.placement, &self.loads())?;
+        // atomic duplicate guard (mirrors the service's live-id check):
+        // a second submission under a live id must not overwrite the
+        // first job's registry entry — that would orphan its handle
+        {
+            let mut placements = self.book.placements.lock().expect("placements");
+            if placements.contains_key(&id.0) {
+                bail!("job id {id} is already in use by a live (unevicted) job");
+            }
+            placements.insert(id.0, (proc, None));
+        }
+        if let Err(err) = self.ensure_staged(proc, input) {
+            self.book.placements.lock().expect("placements").remove(&id.0);
+            return Err(err);
+        }
+        req.placement = local;
+        let conn = self.conns[proc].clone();
+        let job = Arc::new(RemoteJob {
+            id,
+            label: req.label.clone(),
+            state: Mutex::new(RemoteState::Pending),
+            done: Condvar::new(),
+        });
+        conn.jobs.lock().expect("jobs map").insert(id.0, job.clone());
+        conn.load.fetch_add(1, Ordering::Relaxed);
+        let mut w = WireWriter::new();
+        w.u64(id.0);
+        w.handle(input);
+        w.request(&req);
+        match conn.request(Op::Submit, &w.into_bytes()) {
+            Ok(_) => Ok(Box::new(RemoteJobHandle { job, conn })),
+            Err(err) => {
+                // roll back the optimistic registration (unless the
+                // reader already failed the job on connection death)
+                if conn.jobs.lock().expect("jobs map").remove(&id.0).is_some() {
+                    conn.load.fetch_sub(1, Ordering::Relaxed);
+                }
+                self.book.placements.lock().expect("placements").remove(&id.0);
+                Err(err)
+            }
+        }
+    }
+
+    fn get_matrix(&self, handle: &MatrixHandle) -> Result<Matrix> {
+        self.fetch_matrix(handle)
+    }
+
+    fn set_scale(&self, name: &str, scale: f64) -> Result<()> {
+        self.scales.lock().expect("scales").insert(name.to_string(), scale);
+        for conn in &self.conns {
+            if !conn.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut w = WireWriter::new();
+            w.str(name);
+            w.f64(scale);
+            conn.request(Op::SetScale, &w.into_bytes())?;
+        }
+        Ok(())
+    }
+
+    fn evict_job(&self, id: JobId) -> Result<usize> {
+        if !self.book.placements.lock().expect("placements").contains_key(&id.0) {
+            return Ok(0);
+        }
+        // sweep every live worker, not just the owner: chained jobs may
+        // have re-staged the namespace's outputs elsewhere (the
+        // process-level analog of the service's every-shard sweep). A
+        // worker whose request fails is dying — its in-memory DFS dies
+        // with it, so there is nothing durable left to sweep there and
+        // the error is not propagated.
+        let mut swept = 0;
+        for conn in &self.conns {
+            if !conn.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut w = WireWriter::new();
+            w.u64(id.0);
+            if let Ok(reply) = conn.request(Op::Evict, &w.into_bytes()) {
+                let mut r = WireReader::new(&reply.payload);
+                swept += r.usize().unwrap_or(0);
+            }
+        }
+        // only after the sweep: retire the id and forget client-side
+        // records of the namespace's files
+        self.book.placements.lock().expect("placements").remove(&id.0);
+        let ns = format!("job-{}/", id.0);
+        self.book
+            .staged
+            .lock()
+            .expect("staged map")
+            .retain(|name, _| !name.contains(&ns));
+        Ok(swept)
+    }
+
+    fn drain_now(&self) -> Result<usize> {
+        bail!(
+            "manual drain needs the caller's thread inside the engine pool — \
+             impossible across processes; use service workers (the default)"
+        )
+    }
+
+    fn shard_of(&self, id: JobId) -> Option<usize> {
+        self.book
+            .placements
+            .lock()
+            .expect("placements")
+            .get(&id.0)
+            .and_then(|(_, shard)| *shard)
+    }
+
+    fn kill_worker(&self, proc: usize) -> Result<()> {
+        let conn = self
+            .conns
+            .get(proc)
+            .ok_or_else(|| anyhow!("no worker process {proc} (client has {})", self.conns.len()))?;
+        let mut child = conn.child.lock().expect("worker child");
+        child.kill().with_context(|| format!("killing worker process {proc}"))?;
+        child.wait().ok();
+        // the reader thread sees EOF and fails this worker's jobs
+        Ok(())
+    }
+
+    fn shutdown(&self) {
+        if self.down.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for conn in &self.conns {
+            // best-effort goodbye, then close the pipe (the EOF the
+            // worker also understands) and reap
+            {
+                let mut stdin = conn.stdin.lock().expect("worker stdin");
+                if let Some(w) = stdin.as_mut() {
+                    let _ = wire::write_frame(w, Op::Shutdown, 0, &[]);
+                    let _ = w.flush();
+                }
+                *stdin = None;
+            }
+            let _ = conn.child.lock().expect("worker child").wait();
+            if let Some(reader) = conn.reader.lock().expect("reader slot").take() {
+                let _ = reader.join();
+            }
+        }
+    }
+}
+
+impl Drop for ProcessTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn router_maps_global_pins_to_proc_shard_pairs() {
+        let router = ProcRouter::new(2, 2);
+        assert_eq!(router.total_shards(), 4);
+        let alive = vec![Some(0), Some(0)];
+        for (global, want) in [
+            (0, (0, Placement::Pinned(0))),
+            (1, (0, Placement::Pinned(1))),
+            (2, (1, Placement::Pinned(0))),
+            (3, (1, Placement::Pinned(1))),
+        ] {
+            assert_eq!(
+                router.route(JobId(9), Placement::Pinned(global), &alive).unwrap(),
+                want
+            );
+        }
+        let err = router.route(JobId(9), Placement::Pinned(4), &alive).unwrap_err();
+        assert!(err.to_string().contains("4"), "{err}");
+    }
+
+    #[test]
+    fn router_balances_and_avoids_dead_procs() {
+        let router = ProcRouter::new(3, 1);
+        // proc 1 busier: auto goes to 0 or 2, tie broken by job id
+        let loads = vec![Some(0), Some(5), Some(0)];
+        let (p0, _) = router.route(JobId(0), Placement::Auto, &loads).unwrap();
+        let (p1, _) = router.route(JobId(1), Placement::Auto, &loads).unwrap();
+        assert_eq!((p0, p1), (0, 2), "deterministic job-id tie-break among ties");
+        // dead proc 0: auto never picks it, pin errors
+        let loads = vec![None, Some(5), Some(9)];
+        let (p, _) = router.route(JobId(7), Placement::Auto, &loads).unwrap();
+        assert_eq!(p, 1, "least-loaded among the living");
+        assert!(router.route(JobId(7), Placement::Pinned(0), &loads).is_err());
+        // all dead
+        assert!(router.route(JobId(7), Placement::Auto, &[None, None, None]).is_err());
+    }
+
+    #[test]
+    fn reply_slot_hands_over_exactly_once() {
+        let slot = Arc::new(ReplySlot::new());
+        let waiter = {
+            let slot = slot.clone();
+            std::thread::spawn(move || slot.take())
+        };
+        slot.fill(Ok(Frame { op: Op::Ok, req_id: 3, payload: vec![] }));
+        let frame = waiter.join().unwrap().unwrap();
+        assert_eq!((frame.op, frame.req_id), (Op::Ok, 3));
+    }
+}

@@ -1,0 +1,252 @@
+//! The transport seam: one trait, two ways to reach an engine pool.
+//!
+//! A [`crate::client::TsqrClient`] never talks to a
+//! [`crate::service::TsqrService`] directly — it talks to a
+//! [`Transport`], and the transport decides where the pool lives:
+//!
+//! * [`LocalTransport`] wraps an in-process sharded `TsqrService`.
+//!   Every call is a direct delegation — no serialization, no copies,
+//!   zero behavior change; a client over this transport is bit-identical
+//!   to calling the service itself (`rust/tests/client.rs`).
+//! * [`crate::client::ProcessTransport`] spawns `mrtsqr worker` child
+//!   processes (one engine pool each) and speaks the
+//!   [`crate::client::wire`] protocol over their stdin/stdout pipes.
+//!
+//! The trait's job ids are **caller-assigned**: the client allocates a
+//! globally increasing [`JobId`] and every transport must run the job
+//! under exactly that id (namespace `job-<id>/`, per-job fault stream).
+//! That is the determinism hinge — a job's fault draws and DFS
+//! namespace depend only on its id, so in-process and cross-process
+//! placements of the same submission order produce bit-identical
+//! results.
+
+use crate::coordinator::MatrixHandle;
+use crate::linalg::Matrix;
+use crate::service::{JobHandle, JobId, JobStatus, TsqrService};
+use crate::session::{Factorization, FactorizationRequest, Placement};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// One submitted job as seen through a transport: poll or block for its
+/// result. Implementations: a thin wrapper over
+/// [`crate::service::JobHandle`] (local), or a slot filled by the pipe
+/// reader thread (process).
+pub trait TransportJob: Send + Sync {
+    fn id(&self) -> JobId;
+    fn label(&self) -> Option<&str>;
+    fn status(&self) -> JobStatus;
+    /// Block until terminal; `Ok` carries the shared factorization.
+    fn wait(&self) -> Result<Arc<Factorization>>;
+    /// `None` while queued/running, `Some(result)` once terminal.
+    fn try_result(&self) -> Option<Result<Arc<Factorization>>>;
+    /// Cancel if not yet running; `true` on success.
+    fn cancel(&self) -> bool;
+    /// Measured running→terminal wall seconds (`None` until then; on a
+    /// process transport, measured worker-side).
+    fn wall_secs(&self) -> Option<f64>;
+}
+
+/// Where a client's engine pool lives and how to reach it. All methods
+/// take `&self`: a transport is shared by every handle the client gives
+/// out. See the [module docs](self) for the two implementations and the
+/// caller-assigned-id contract.
+pub trait Transport: Send + Sync {
+    /// Worker processes behind this transport (1 means in-process).
+    fn procs(&self) -> usize;
+    /// Total engine shards across all processes.
+    fn shards(&self) -> usize;
+    /// Total service worker threads across all processes.
+    fn workers(&self) -> usize;
+    /// Bounded per-shard queue capacity.
+    fn capacity(&self) -> usize;
+    /// Resolved compute backend name ("native", "pjrt", "custom").
+    fn backend_desc(&self) -> String;
+    /// Host threads each job's waves fan out on (per process).
+    fn host_threads(&self) -> usize;
+
+    /// Ingest a seeded gaussian matrix. `placement` pins the *global*
+    /// shard the rows land on ([`Placement::Auto`] = the home shard,
+    /// process 0 / shard 0).
+    fn ingest_gaussian(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        placement: Placement,
+    ) -> Result<MatrixHandle>;
+
+    /// Ingest an in-memory matrix (exact bits; chunked on the wire).
+    fn ingest_matrix(&self, name: &str, a: &Matrix, placement: Placement)
+        -> Result<MatrixHandle>;
+
+    /// Run `req` on `input` under the caller-assigned global `id`.
+    /// `req.placement` names a *global* shard index; transports map it
+    /// to their own topology.
+    fn submit(
+        &self,
+        id: JobId,
+        input: &MatrixHandle,
+        req: FactorizationRequest,
+    ) -> Result<Box<dyn TransportJob>>;
+
+    /// Read a handle's rows back from whichever shard/process holds it.
+    fn get_matrix(&self, handle: &MatrixHandle) -> Result<Matrix>;
+
+    /// Mark a DFS file's virtual byte scale everywhere it is known.
+    fn set_scale(&self, name: &str, scale: f64) -> Result<()>;
+
+    /// Sweep one finished job's DFS namespace; returns files removed.
+    fn evict_job(&self, id: JobId) -> Result<usize>;
+
+    /// Run queued jobs on the calling thread (deterministic serial
+    /// baseline). Only the local transport can: a pipe has no way to
+    /// lend the caller's thread to another process.
+    fn drain_now(&self) -> Result<usize>;
+
+    /// Global shard index a job was placed on, where known (local:
+    /// immediately; process: once the job completed).
+    fn shard_of(&self, id: JobId) -> Option<usize>;
+
+    /// Fault-injection hook: kill worker process `proc` outright (no
+    /// graceful shutdown), as if the OS OOM-killed it. Errors on a
+    /// local transport — there is no process to kill. In-flight jobs on
+    /// that worker fail; every other worker keeps serving.
+    fn kill_worker(&self, proc: usize) -> Result<()>;
+
+    /// Graceful shutdown (reject new work, drain, reap children).
+    fn shutdown(&self);
+}
+
+// ----------------------------------------------------------------- local
+
+/// [`TransportJob`] over an in-process [`JobHandle`] — pure delegation.
+struct LocalJob(JobHandle);
+
+impl TransportJob for LocalJob {
+    fn id(&self) -> JobId {
+        self.0.id()
+    }
+
+    fn label(&self) -> Option<&str> {
+        self.0.label()
+    }
+
+    fn status(&self) -> JobStatus {
+        self.0.status()
+    }
+
+    fn wait(&self) -> Result<Arc<Factorization>> {
+        self.0.wait()
+    }
+
+    fn try_result(&self) -> Option<Result<Arc<Factorization>>> {
+        self.0.try_result()
+    }
+
+    fn cancel(&self) -> bool {
+        self.0.cancel()
+    }
+
+    fn wall_secs(&self) -> Option<f64> {
+        self.0.wall_secs()
+    }
+}
+
+/// The in-process transport: wraps today's sharded [`TsqrService`] with
+/// zero behavior change. Global shard indices *are* the service's shard
+/// indices, and every operation is a direct call.
+pub struct LocalTransport {
+    svc: TsqrService,
+}
+
+impl LocalTransport {
+    pub fn new(svc: TsqrService) -> LocalTransport {
+        LocalTransport { svc }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn procs(&self) -> usize {
+        1
+    }
+
+    fn shards(&self) -> usize {
+        self.svc.shards()
+    }
+
+    fn workers(&self) -> usize {
+        self.svc.workers()
+    }
+
+    fn capacity(&self) -> usize {
+        self.svc.capacity()
+    }
+
+    fn backend_desc(&self) -> String {
+        self.svc.backend_desc().to_string()
+    }
+
+    fn host_threads(&self) -> usize {
+        self.svc.host_threads()
+    }
+
+    fn ingest_gaussian(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        placement: Placement,
+    ) -> Result<MatrixHandle> {
+        self.svc.ingest_gaussian_placed(name, rows, cols, seed, placement)
+    }
+
+    fn ingest_matrix(
+        &self,
+        name: &str,
+        a: &Matrix,
+        placement: Placement,
+    ) -> Result<MatrixHandle> {
+        self.svc.ingest_matrix_placed(name, a, placement)
+    }
+
+    fn submit(
+        &self,
+        id: JobId,
+        input: &MatrixHandle,
+        req: FactorizationRequest,
+    ) -> Result<Box<dyn TransportJob>> {
+        Ok(Box::new(LocalJob(self.svc.submit_with_id(id, input, req)?)))
+    }
+
+    fn get_matrix(&self, handle: &MatrixHandle) -> Result<Matrix> {
+        self.svc.get_matrix(handle)
+    }
+
+    fn set_scale(&self, name: &str, scale: f64) -> Result<()> {
+        self.svc.set_scale(name, scale);
+        Ok(())
+    }
+
+    fn evict_job(&self, id: JobId) -> Result<usize> {
+        Ok(self.svc.evict_job(id))
+    }
+
+    fn drain_now(&self) -> Result<usize> {
+        Ok(self.svc.drain_now())
+    }
+
+    fn shard_of(&self, id: JobId) -> Option<usize> {
+        self.svc.shard_of(id)
+    }
+
+    fn kill_worker(&self, proc: usize) -> Result<()> {
+        bail!("local transport has no worker process {proc} to kill — use worker_processes(n)")
+    }
+
+    fn shutdown(&self) {
+        // TsqrService shuts itself down on drop; nothing rejects earlier
+        // because the client is being dropped with us anyway
+    }
+}

@@ -1,0 +1,1110 @@
+//! The versioned binary wire format of the cross-process protocol.
+//!
+//! Everything a [`crate::client::TsqrClient`] ships between processes —
+//! [`FactorizationRequest`]s, [`Factorization`]s, [`JobStats`],
+//! [`JobStatus`], ingestion chunks — is encoded here by hand (serde is
+//! not vendored offline, in the same spirit as
+//! [`crate::util::json::Json`] on the emission side). Three properties
+//! the protocol depends on:
+//!
+//! * **Length-prefixed framing.** Every message is one [`Frame`]:
+//!   a fixed header (`magic "MRTQ"`, `version`, `opcode`, `req_id`,
+//!   payload length) followed by exactly `len` payload bytes, so a
+//!   reader thread can demultiplex many in-flight requests off one pipe
+//!   without any payload knowledge.
+//! * **Exact-bit `f64`.** Floats travel as `to_bits()` little-endian
+//!   words ([`WireWriter::f64`]/[`WireReader::f64`]), never through a
+//!   decimal detour, so `R`/Σ/`virtual_secs` — and with them
+//!   [`crate::session::Factorization::result_digest`] — survive the
+//!   trip bit-for-bit. In-process and cross-process runs of the same
+//!   job agree on every digest (`rust/tests/client.rs`).
+//! * **Versioned and self-describing.** The header carries
+//!   [`WIRE_VERSION`]; a peer speaking a different version is rejected
+//!   at the handshake, never mis-parsed. Decoders are *total*: any
+//!   truncated, oversized, or corrupt frame (bad magic, unknown opcode,
+//!   short payload, trailing bytes) returns an error instead of
+//!   panicking or misreading — the unit tests exercise each rejection.
+//!
+//! Integers are little-endian throughout. Strings are UTF-8 with a
+//! `u32` byte-length prefix; `Option`s are a one-byte tag; sequences a
+//! `u32` count.
+
+use crate::coordinator::{Algorithm, CoordOpts, MatrixHandle, SvdParts};
+use crate::dfs::{DiskModel, IoMeter};
+use crate::linalg::Matrix;
+use crate::mapreduce::{ClusterConfig, FaultPolicy, JobStats, StepStats};
+use crate::service::JobStatus;
+use crate::session::{
+    AlgoChoice, AutoDecision, Backend, Factorization, FactorizationRequest, Placement, Priority,
+    Want,
+};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+/// Frame preamble: identifies a byte stream as this protocol.
+pub const WIRE_MAGIC: [u8; 4] = *b"MRTQ";
+
+/// Protocol version. Bumped on any incompatible change; the `Hello`
+/// handshake rejects a peer whose header says otherwise.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Upper bound on one frame's payload (1 GiB) — a corrupt length
+/// prefix must not look like an allocation request.
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+/// Message kinds. `1..` flow client → worker; `100..` are replies and
+/// pushes worker → client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u16)]
+pub enum Op {
+    /// Handshake; payload: [`WorkerConfig`]. Must be the first frame.
+    Hello = 1,
+    /// Generate + ingest a seeded gaussian matrix worker-side.
+    IngestGaussian = 2,
+    /// Open a streamed matrix ingestion (name, cols, placement).
+    IngestBegin = 3,
+    /// One chunk of rows for an open ingestion (exact f64 bits).
+    IngestChunk = 4,
+    /// Close a streamed ingestion; reply is the `Handle`.
+    IngestEnd = 5,
+    /// Submit a job under a *caller-assigned* global job id.
+    Submit = 6,
+    /// Poll one job's [`JobStatus`].
+    Status = 7,
+    /// Cancel a queued job.
+    Cancel = 8,
+    /// Evict a finished job's DFS namespace.
+    Evict = 9,
+    /// Read a matrix handle's rows back.
+    FetchMatrix = 10,
+    /// Set a DFS file's virtual byte scale.
+    SetScale = 11,
+    /// Graceful worker shutdown (acked, then the worker exits).
+    Shutdown = 12,
+    /// Handshake reply: topology of the serving side.
+    HelloAck = 100,
+    /// Empty success ack.
+    Ok = 101,
+    /// A [`MatrixHandle`].
+    Handle = 102,
+    /// A [`JobStatus`] byte.
+    StatusReply = 103,
+    /// A boolean.
+    Flag = 104,
+    /// A count.
+    Count = 105,
+    /// A dense matrix (rows, cols, exact f64 bits).
+    MatrixData = 106,
+    /// Request failed; payload is the error message.
+    Err = 107,
+    /// Push (req_id 0): job reached Done. Payload: id, wall_secs,
+    /// [`Factorization`].
+    JobDone = 110,
+    /// Push (req_id 0): job reached Failed/Cancelled. Payload: id,
+    /// wall_secs, message.
+    JobFail = 111,
+}
+
+impl Op {
+    pub fn from_u16(v: u16) -> Result<Op> {
+        Ok(match v {
+            1 => Op::Hello,
+            2 => Op::IngestGaussian,
+            3 => Op::IngestBegin,
+            4 => Op::IngestChunk,
+            5 => Op::IngestEnd,
+            6 => Op::Submit,
+            7 => Op::Status,
+            8 => Op::Cancel,
+            9 => Op::Evict,
+            10 => Op::FetchMatrix,
+            11 => Op::SetScale,
+            12 => Op::Shutdown,
+            100 => Op::HelloAck,
+            101 => Op::Ok,
+            102 => Op::Handle,
+            103 => Op::StatusReply,
+            104 => Op::Flag,
+            105 => Op::Count,
+            106 => Op::MatrixData,
+            107 => Op::Err,
+            110 => Op::JobDone,
+            111 => Op::JobFail,
+            other => bail!("wire: unknown opcode {other}"),
+        })
+    }
+}
+
+/// One protocol message: opcode + request-correlation id + payload.
+/// `req_id` pairs replies with requests on a multiplexed pipe; pushed
+/// frames ([`Op::JobDone`]/[`Op::JobFail`]) use `req_id = 0` and carry
+/// the job id in the payload instead.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub op: Op,
+    pub req_id: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Serialize one frame to a byte stream (header + payload).
+pub fn write_frame(w: &mut impl Write, op: Op, req_id: u64, payload: &[u8]) -> Result<()> {
+    ensure!(
+        payload.len() <= MAX_FRAME_BYTES as usize,
+        "wire: frame payload {} bytes exceeds the {} limit",
+        payload.len(),
+        MAX_FRAME_BYTES
+    );
+    let mut header = [0u8; 4 + 2 + 2 + 8 + 4];
+    header[0..4].copy_from_slice(&WIRE_MAGIC);
+    header[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    header[6..8].copy_from_slice(&(op as u16).to_le_bytes());
+    header[8..16].copy_from_slice(&req_id.to_le_bytes());
+    header[16..20].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` on a clean EOF *at a frame boundary*
+/// (the peer closed the pipe between messages); any mid-frame EOF,
+/// bad magic, version mismatch, unknown opcode or oversized length is
+/// an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
+    let mut header = [0u8; 20];
+    // hand-rolled read_exact that distinguishes boundary EOF
+    let mut filled = 0;
+    while filled < header.len() {
+        let n = match r.read(&mut header[filled..]) {
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        };
+        if n == 0 {
+            if filled == 0 {
+                return Ok(None);
+            }
+            bail!("wire: truncated frame header ({filled} of {} bytes)", header.len());
+        }
+        filled += n;
+    }
+    ensure!(
+        header[0..4] == WIRE_MAGIC,
+        "wire: bad magic {:02x?} (not a mrtsqr protocol stream)",
+        &header[0..4]
+    );
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    ensure!(
+        version == WIRE_VERSION,
+        "wire: protocol version {version} != supported {WIRE_VERSION}"
+    );
+    let op = Op::from_u16(u16::from_le_bytes(header[6..8].try_into().unwrap()))?;
+    let req_id = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let len = u32::from_le_bytes(header[16..20].try_into().unwrap());
+    ensure!(len <= MAX_FRAME_BYTES, "wire: frame length {len} exceeds the {MAX_FRAME_BYTES} limit");
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("wire: truncated payload (wanted {len} bytes)"))?;
+    Ok(Some(Frame { op, req_id, payload }))
+}
+
+// ---------------------------------------------------------------- writer
+
+/// Append-only payload encoder.
+#[derive(Debug, Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> WireWriter {
+        WireWriter::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Exact-bit float: the IEEE-754 word, never a decimal rendering.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn opt_str(&mut self, s: Option<&str>) {
+        match s {
+            None => self.u8(0),
+            Some(s) => {
+                self.u8(1);
+                self.str(s);
+            }
+        }
+    }
+
+    fn f64s(&mut self, vs: &[f64]) {
+        self.u32(vs.len() as u32);
+        for v in vs {
+            self.f64(*v);
+        }
+    }
+
+    // ---------------------------------------------------- domain types
+
+    pub fn handle(&mut self, h: &MatrixHandle) {
+        self.str(&h.file);
+        self.u64(h.rows as u64);
+        self.u64(h.cols as u64);
+    }
+
+    /// Algorithms travel as their canonical CLI spelling
+    /// ([`Algorithm::cli_name`]) — self-describing and stable across
+    /// enum-layout changes.
+    pub fn algorithm(&mut self, a: Algorithm) {
+        self.str(a.cli_name());
+    }
+
+    pub fn placement(&mut self, p: Placement) {
+        match p {
+            Placement::Auto => self.u8(0),
+            Placement::Pinned(k) => {
+                self.u8(1);
+                self.u64(k as u64);
+            }
+        }
+    }
+
+    pub fn request(&mut self, req: &FactorizationRequest) {
+        self.u8(match req.want {
+            Want::Qr => 0,
+            Want::ROnly => 1,
+            Want::Svd => 2,
+            Want::SingularValues => 3,
+        });
+        match req.algo {
+            AlgoChoice::Auto => self.u8(0),
+            AlgoChoice::Fixed(a) => {
+                self.u8(1);
+                self.algorithm(a);
+            }
+        }
+        self.bool(req.refine);
+        self.f64(req.condition_threshold);
+        self.u8(match req.priority {
+            Priority::Low => 0,
+            Priority::Normal => 1,
+            Priority::High => 2,
+        });
+        self.opt_str(req.label.as_deref());
+        self.placement(req.placement);
+    }
+
+    pub fn matrix(&mut self, m: &Matrix) {
+        self.u64(m.rows as u64);
+        self.u64(m.cols as u64);
+        for v in &m.data {
+            self.f64(*v);
+        }
+    }
+
+    /// One ingestion chunk: a run of rows of a named in-progress file.
+    pub fn chunk(&mut self, name: &str, first_row: u64, cols: usize, data: &[f64]) {
+        self.str(name);
+        self.u64(first_row);
+        self.u64(cols as u64);
+        self.f64s(data);
+    }
+
+    fn io_meter(&mut self, io: &IoMeter) {
+        self.u64(io.bytes_read);
+        self.u64(io.bytes_written);
+        self.u64(io.records_read);
+        self.u64(io.records_written);
+    }
+
+    fn step(&mut self, s: &StepStats) {
+        self.str(&s.name);
+        self.u64(s.map_tasks as u64);
+        self.u64(s.reduce_tasks as u64);
+        self.u64(s.distinct_keys as u64);
+        self.io_meter(&s.map_io);
+        self.io_meter(&s.reduce_io);
+        self.f64(s.map_compute_secs);
+        self.f64(s.reduce_compute_secs);
+        self.f64(s.virtual_secs);
+        self.f64(s.wall_secs);
+        self.u64(s.map_attempts as u64);
+        self.u64(s.reduce_attempts as u64);
+        self.u64(s.faults as u64);
+        self.u64(s.host_threads as u64);
+    }
+
+    pub fn stats(&mut self, stats: &JobStats) {
+        self.u64(stats.shard as u64);
+        self.u32(stats.steps.len() as u32);
+        for s in &stats.steps {
+            self.step(s);
+        }
+    }
+
+    pub fn status(&mut self, s: JobStatus) {
+        self.u8(match s {
+            JobStatus::Queued => 0,
+            JobStatus::Running => 1,
+            JobStatus::Done => 2,
+            JobStatus::Failed => 3,
+            JobStatus::Cancelled => 4,
+        });
+    }
+
+    fn auto_decision(&mut self, d: &AutoDecision) {
+        self.f64(d.kappa_estimate);
+        self.f64(d.threshold);
+        self.algorithm(d.chosen);
+        self.bool(d.probe_reused);
+    }
+
+    pub fn factorization(&mut self, f: &Factorization) {
+        match &f.q {
+            None => self.u8(0),
+            Some(h) => {
+                self.u8(1);
+                self.handle(h);
+            }
+        }
+        self.matrix(&f.r);
+        match &f.svd {
+            None => self.u8(0),
+            Some(parts) => {
+                self.u8(1);
+                self.f64s(&parts.sigma);
+                self.matrix(&parts.v);
+            }
+        }
+        self.algorithm(f.algorithm);
+        match &f.auto {
+            None => self.u8(0),
+            Some(d) => {
+                self.u8(1);
+                self.auto_decision(d);
+            }
+        }
+        self.stats(&f.stats);
+    }
+
+    pub fn config(&mut self, cfg: &WorkerConfig) {
+        self.f64(cfg.model.beta_r);
+        self.f64(cfg.model.beta_w);
+        self.f64(cfg.model.byte_scale);
+        self.f64(cfg.model.iteration_startup_secs);
+        self.f64(cfg.model.task_startup_secs);
+        self.u64(cfg.cluster.map_slots as u64);
+        self.u64(cfg.cluster.reduce_slots as u64);
+        self.u64(cfg.cluster.host_threads as u64);
+        match cfg.faults {
+            None => self.u8(0),
+            Some((policy, seed)) => {
+                self.u8(1);
+                self.f64(policy.probability);
+                self.u64(policy.max_attempts as u64);
+                self.f64(policy.waste_fraction);
+                self.u64(seed);
+            }
+        }
+        self.u64(cfg.opts.rows_per_task as u64);
+        self.u64(cfg.opts.reduce_tasks as u64);
+        match cfg.opts.gather_limit {
+            None => self.u8(0),
+            Some(rows) => {
+                self.u8(1);
+                self.u64(rows as u64);
+            }
+        }
+        self.u8(match cfg.backend {
+            Backend::Auto => 0,
+            Backend::Native => 1,
+            Backend::Pjrt => 2,
+        });
+        self.u64(cfg.engine_shards as u64);
+        self.u64(cfg.service_workers as u64);
+        self.u64(cfg.queue_capacity as u64);
+    }
+}
+
+// ---------------------------------------------------------------- reader
+
+/// Bounds-checked payload decoder; every read can fail on truncation,
+/// and [`WireReader::finish`] rejects trailing garbage.
+#[derive(Debug)]
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> WireReader<'a> {
+        WireReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.buf.len() - self.pos >= n,
+            "wire: truncated payload (wanted {n} bytes at offset {}, have {})",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Every byte must have been consumed — trailing bytes mean the
+    /// peer and we disagree about the message layout.
+    pub fn finish(self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "wire: {} trailing bytes after a complete message",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("wire: bad bool byte {other}"),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        Ok(std::str::from_utf8(bytes).context("wire: non-UTF-8 string")?.to_string())
+    }
+
+    pub fn opt_str(&mut self) -> Result<Option<String>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.str()?)),
+            other => bail!("wire: bad option tag {other}"),
+        }
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n.checked_mul(8).is_some_and(|bytes| self.buf.len() - self.pos >= bytes),
+            "wire: float run of {n} exceeds the remaining payload"
+        );
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    // ---------------------------------------------------- domain types
+
+    pub fn handle(&mut self) -> Result<MatrixHandle> {
+        let file = self.str()?;
+        let rows = self.usize()?;
+        let cols = self.usize()?;
+        Ok(MatrixHandle { file, rows, cols })
+    }
+
+    pub fn algorithm(&mut self) -> Result<Algorithm> {
+        Algorithm::parse(&self.str()?)
+    }
+
+    pub fn placement(&mut self) -> Result<Placement> {
+        match self.u8()? {
+            0 => Ok(Placement::Auto),
+            1 => Ok(Placement::Pinned(self.usize()?)),
+            other => bail!("wire: bad placement tag {other}"),
+        }
+    }
+
+    pub fn request(&mut self) -> Result<FactorizationRequest> {
+        let want = match self.u8()? {
+            0 => Want::Qr,
+            1 => Want::ROnly,
+            2 => Want::Svd,
+            3 => Want::SingularValues,
+            other => bail!("wire: bad want tag {other}"),
+        };
+        let algo = match self.u8()? {
+            0 => AlgoChoice::Auto,
+            1 => AlgoChoice::Fixed(self.algorithm()?),
+            other => bail!("wire: bad algo tag {other}"),
+        };
+        let refine = self.bool()?;
+        let condition_threshold = self.f64()?;
+        let priority = match self.u8()? {
+            0 => Priority::Low,
+            1 => Priority::Normal,
+            2 => Priority::High,
+            other => bail!("wire: bad priority tag {other}"),
+        };
+        let label = self.opt_str()?;
+        let placement = self.placement()?;
+        Ok(FactorizationRequest {
+            want,
+            algo,
+            refine,
+            condition_threshold,
+            priority,
+            label,
+            placement,
+        })
+    }
+
+    pub fn matrix(&mut self) -> Result<Matrix> {
+        let rows = self.usize()?;
+        let cols = self.usize()?;
+        // both multiplications are overflow-checked: a corrupt header
+        // must fail cleanly, not wrap into a bogus bounds pass (and a
+        // capacity-overflow panic that would kill a demux thread)
+        let n = rows
+            .checked_mul(cols)
+            .filter(|n| {
+                n.checked_mul(8).is_some_and(|bytes| self.buf.len() - self.pos >= bytes)
+            })
+            .ok_or_else(|| anyhow::anyhow!("wire: matrix {rows}x{cols} exceeds the payload"))?;
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(self.f64()?);
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Inverse of [`WireWriter::chunk`].
+    pub fn chunk(&mut self) -> Result<(String, u64, usize, Vec<f64>)> {
+        let name = self.str()?;
+        let first_row = self.u64()?;
+        let cols = self.usize()?;
+        let data = self.f64s()?;
+        ensure!(
+            cols > 0 && data.len() % cols == 0,
+            "wire: chunk of {} values is not a whole number of {cols}-wide rows",
+            data.len()
+        );
+        Ok((name, first_row, cols, data))
+    }
+
+    fn io_meter(&mut self) -> Result<IoMeter> {
+        Ok(IoMeter {
+            bytes_read: self.u64()?,
+            bytes_written: self.u64()?,
+            records_read: self.u64()?,
+            records_written: self.u64()?,
+        })
+    }
+
+    fn step(&mut self) -> Result<StepStats> {
+        Ok(StepStats {
+            name: self.str()?,
+            map_tasks: self.usize()?,
+            reduce_tasks: self.usize()?,
+            distinct_keys: self.usize()?,
+            map_io: self.io_meter()?,
+            reduce_io: self.io_meter()?,
+            map_compute_secs: self.f64()?,
+            reduce_compute_secs: self.f64()?,
+            virtual_secs: self.f64()?,
+            wall_secs: self.f64()?,
+            map_attempts: self.usize()?,
+            reduce_attempts: self.usize()?,
+            faults: self.usize()?,
+            host_threads: self.usize()?,
+        })
+    }
+
+    pub fn stats(&mut self) -> Result<JobStats> {
+        let shard = self.usize()?;
+        let nsteps = self.u32()? as usize;
+        let mut steps = Vec::with_capacity(nsteps.min(1024));
+        for _ in 0..nsteps {
+            steps.push(self.step()?);
+        }
+        Ok(JobStats { steps, shard })
+    }
+
+    pub fn status(&mut self) -> Result<JobStatus> {
+        Ok(match self.u8()? {
+            0 => JobStatus::Queued,
+            1 => JobStatus::Running,
+            2 => JobStatus::Done,
+            3 => JobStatus::Failed,
+            4 => JobStatus::Cancelled,
+            other => bail!("wire: bad status byte {other}"),
+        })
+    }
+
+    fn auto_decision(&mut self) -> Result<AutoDecision> {
+        Ok(AutoDecision {
+            kappa_estimate: self.f64()?,
+            threshold: self.f64()?,
+            chosen: self.algorithm()?,
+            probe_reused: self.bool()?,
+        })
+    }
+
+    pub fn factorization(&mut self) -> Result<Factorization> {
+        let q = match self.u8()? {
+            0 => None,
+            1 => Some(self.handle()?),
+            other => bail!("wire: bad option tag {other}"),
+        };
+        let r = self.matrix()?;
+        let svd = match self.u8()? {
+            0 => None,
+            1 => {
+                let sigma = self.f64s()?;
+                let v = self.matrix()?;
+                Some(SvdParts { sigma, v })
+            }
+            other => bail!("wire: bad option tag {other}"),
+        };
+        let algorithm = self.algorithm()?;
+        let auto = match self.u8()? {
+            0 => None,
+            1 => Some(self.auto_decision()?),
+            other => bail!("wire: bad option tag {other}"),
+        };
+        let stats = self.stats()?;
+        Ok(Factorization { q, r, svd, algorithm, auto, stats })
+    }
+
+    pub fn config(&mut self) -> Result<WorkerConfig> {
+        let model = DiskModel {
+            beta_r: self.f64()?,
+            beta_w: self.f64()?,
+            byte_scale: self.f64()?,
+            iteration_startup_secs: self.f64()?,
+            task_startup_secs: self.f64()?,
+        };
+        let cluster = ClusterConfig {
+            map_slots: self.usize()?,
+            reduce_slots: self.usize()?,
+            host_threads: self.usize()?,
+        };
+        let faults = match self.u8()? {
+            0 => None,
+            1 => {
+                let policy = FaultPolicy {
+                    probability: self.f64()?,
+                    max_attempts: self.usize()?,
+                    waste_fraction: self.f64()?,
+                };
+                Some((policy, self.u64()?))
+            }
+            other => bail!("wire: bad option tag {other}"),
+        };
+        let opts = CoordOpts {
+            rows_per_task: self.usize()?,
+            reduce_tasks: self.usize()?,
+            gather_limit: match self.u8()? {
+                0 => None,
+                1 => Some(self.usize()?),
+                other => bail!("wire: bad option tag {other}"),
+            },
+        };
+        let backend = match self.u8()? {
+            0 => Backend::Auto,
+            1 => Backend::Native,
+            2 => Backend::Pjrt,
+            other => bail!("wire: bad backend tag {other}"),
+        };
+        Ok(WorkerConfig {
+            model,
+            cluster,
+            faults,
+            opts,
+            backend,
+            engine_shards: self.usize()?,
+            service_workers: self.usize()?,
+            queue_capacity: self.usize()?,
+        })
+    }
+}
+
+/// The full cluster recipe a worker process needs to reconstruct the
+/// parent's [`crate::session::SessionBuilder`] — shipped in the
+/// [`Op::Hello`] handshake so every worker's engine pool is configured
+/// identically to an in-process run (same disk model, fault seed,
+/// tuning knobs), which is what makes cross-process results
+/// bit-identical.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerConfig {
+    pub model: DiskModel,
+    pub cluster: ClusterConfig,
+    pub faults: Option<(FaultPolicy, u64)>,
+    pub opts: CoordOpts,
+    pub backend: Backend,
+    /// Engine shards *per worker process*.
+    pub engine_shards: usize,
+    /// Service worker threads per shard (clamped to ≥ 1 worker-side:
+    /// manual drain does not exist across a pipe).
+    pub service_workers: usize,
+    pub queue_capacity: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip_request(req: &FactorizationRequest) -> FactorizationRequest {
+        let mut w = WireWriter::new();
+        w.request(req);
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        let out = r.request().unwrap();
+        r.finish().unwrap();
+        out
+    }
+
+    #[test]
+    fn request_roundtrips_every_variant() {
+        // the satellite's property sweep: every want × algo choice ×
+        // priority × placement, plus the label edge cases (absent,
+        // empty, unicode)
+        let wants = [
+            FactorizationRequest::qr(),
+            FactorizationRequest::r_only(),
+            FactorizationRequest::svd(),
+            FactorizationRequest::singular_values(),
+        ];
+        let algos: Vec<AlgoChoice> = std::iter::once(AlgoChoice::Auto)
+            .chain(Algorithm::ALL.into_iter().map(AlgoChoice::Fixed))
+            .collect();
+        for base in wants {
+            for &algo in &algos {
+                for priority in [Priority::Low, Priority::Normal, Priority::High] {
+                    for placement in [Placement::Auto, Placement::Pinned(0), Placement::Pinned(usize::MAX >> 1)] {
+                        for label in [None, Some(""), Some("hot-λ-job")] {
+                            let mut req = base.clone().with_priority(priority).refined(true);
+                            req.algo = algo;
+                            req.placement = placement;
+                            req.label = label.map(str::to_string);
+                            req.condition_threshold = 1.5e7;
+                            assert_eq!(roundtrip_request(&req), req);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn request_f64_fields_are_bit_exact() {
+        // a threshold that has no short decimal rendering must survive
+        // exactly — the wire ships bits, not digits
+        let mut req = FactorizationRequest::qr();
+        req.condition_threshold = f64::from_bits(0x3FF0_0000_0000_0001); // 1.0 + ulp
+        let back = roundtrip_request(&req);
+        assert_eq!(back.condition_threshold.to_bits(), req.condition_threshold.to_bits());
+    }
+
+    fn sample_stats() -> JobStats {
+        let mut io = IoMeter::default();
+        io.add_read(123_456_789, 1000);
+        io.add_write(987, 7);
+        let step = |name: &str, virt: f64| StepStats {
+            name: name.into(),
+            map_tasks: 40,
+            reduce_tasks: 3,
+            distinct_keys: 17,
+            map_io: io,
+            reduce_io: IoMeter::default(),
+            map_compute_secs: 0.25,
+            reduce_compute_secs: 0.5,
+            virtual_secs: virt,
+            wall_secs: 0.001,
+            map_attempts: 41,
+            reduce_attempts: 3,
+            faults: 1,
+            host_threads: 8,
+        };
+        JobStats {
+            steps: vec![step("s1", 100.125), step("auto-select(...)", 0.0)],
+            shard: 3,
+        }
+    }
+
+    #[test]
+    fn stats_roundtrip_bit_exact() {
+        let stats = sample_stats();
+        let mut w = WireWriter::new();
+        w.stats(&stats);
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        let back = r.stats().unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.shard, stats.shard);
+        assert_eq!(back.steps.len(), stats.steps.len());
+        for (a, b) in back.steps.iter().zip(&stats.steps) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.map_io, b.map_io);
+            assert_eq!(a.reduce_io, b.reduce_io);
+            assert_eq!(a.virtual_secs.to_bits(), b.virtual_secs.to_bits());
+            assert_eq!(a.wall_secs.to_bits(), b.wall_secs.to_bits());
+            assert_eq!(a.faults, b.faults);
+            assert_eq!(a.host_threads, b.host_threads);
+            assert_eq!(a.map_attempts, b.map_attempts);
+        }
+        assert_eq!(back.virtual_secs().to_bits(), stats.virtual_secs().to_bits());
+    }
+
+    #[test]
+    fn factorization_roundtrip_preserves_the_result_digest() {
+        // the headline contract: the digest (exact R/Σ bits) survives
+        // the wire — including awkward values like -0.0, denormals and
+        // 1+ulp that any decimal detour would mangle
+        let mut rng = Rng::new(7);
+        let mut r = Matrix::gaussian(5, 5, &mut rng);
+        r.data[0] = -0.0;
+        r.data[1] = f64::MIN_POSITIVE / 2.0; // subnormal
+        r.data[2] = f64::from_bits(0x3FF0_0000_0000_0001);
+        let fact = Factorization {
+            q: Some(MatrixHandle::new("shard-1/job-9/tmp/q-0", 400, 5)),
+            r,
+            svd: Some(SvdParts {
+                sigma: vec![3.5, 1.0, 0.5, 1e-300, 4e-320],
+                v: Matrix::gaussian(5, 5, &mut rng),
+            }),
+            algorithm: Algorithm::IndirectTsqr { refine: true },
+            auto: Some(AutoDecision {
+                kappa_estimate: 37.25,
+                threshold: 1e3,
+                chosen: Algorithm::IndirectTsqr { refine: true },
+                probe_reused: true,
+            }),
+            stats: sample_stats(),
+        };
+        let mut w = WireWriter::new();
+        w.factorization(&fact);
+        let bytes = w.into_bytes();
+        let mut rd = WireReader::new(&bytes);
+        let back = rd.factorization().unwrap();
+        rd.finish().unwrap();
+        assert_eq!(back.result_digest(), fact.result_digest());
+        assert_eq!(back.q, fact.q);
+        assert_eq!(back.algorithm, fact.algorithm);
+        let (a, b) = (back.auto.unwrap(), fact.auto.unwrap());
+        assert_eq!(a.kappa_estimate.to_bits(), b.kappa_estimate.to_bits());
+        assert_eq!(a.chosen, b.chosen);
+        assert_eq!(a.probe_reused, b.probe_reused);
+        for (x, y) in back.svd.as_ref().unwrap().sigma.iter().zip(&fact.svd.as_ref().unwrap().sigma)
+        {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(
+            back.stats.virtual_secs().to_bits(),
+            fact.stats.virtual_secs().to_bits()
+        );
+    }
+
+    #[test]
+    fn frames_roundtrip_through_a_byte_stream() {
+        let mut w = WireWriter::new();
+        w.str("hello");
+        let payload = w.into_bytes();
+        let mut stream = Vec::new();
+        write_frame(&mut stream, Op::Submit, 42, &payload).unwrap();
+        write_frame(&mut stream, Op::Ok, 43, &[]).unwrap();
+        let mut cursor = &stream[..];
+        let f1 = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!((f1.op, f1.req_id), (Op::Submit, 42));
+        assert_eq!(f1.payload, payload);
+        let f2 = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!((f2.op, f2.req_id, f2.payload.len()), (Op::Ok, 43, 0));
+        // clean EOF at the boundary
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_not_misread() {
+        let mut good = Vec::new();
+        write_frame(&mut good, Op::Submit, 1, &[1, 2, 3, 4]).unwrap();
+
+        // truncated header
+        let mut cut = &good[..10];
+        assert!(read_frame(&mut cut).is_err());
+        // truncated payload
+        let mut cut = &good[..good.len() - 2];
+        assert!(read_frame(&mut cut).is_err());
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(read_frame(&mut &bad[..]).unwrap_err().to_string().contains("magic"));
+        // future protocol version
+        let mut bad = good.clone();
+        bad[4..6].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+        assert!(read_frame(&mut &bad[..]).unwrap_err().to_string().contains("version"));
+        // unknown opcode
+        let mut bad = good.clone();
+        bad[6..8].copy_from_slice(&999u16.to_le_bytes());
+        assert!(read_frame(&mut &bad[..]).unwrap_err().to_string().contains("opcode"));
+        // absurd length prefix must not become an allocation
+        let mut bad = good.clone();
+        bad[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_frame(&mut &bad[..]).unwrap_err().to_string().contains("limit"));
+    }
+
+    #[test]
+    fn corrupt_payloads_are_rejected_not_misread() {
+        // truncated mid-struct
+        let mut w = WireWriter::new();
+        w.request(&FactorizationRequest::qr().labeled("x"));
+        let bytes = w.into_bytes();
+        for cut in [0, 1, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                WireReader::new(&bytes[..cut]).request().is_err(),
+                "cut at {cut} must not decode"
+            );
+        }
+        // trailing garbage
+        let mut padded = bytes.clone();
+        padded.push(0);
+        let mut r = WireReader::new(&padded);
+        r.request().unwrap();
+        assert!(r.finish().unwrap_err().to_string().contains("trailing"));
+        // bad enum tags
+        assert!(WireReader::new(&[9]).status().is_err());
+        assert!(WireReader::new(&[7]).placement().is_err());
+        assert!(WireReader::new(&[2]).bool().is_err());
+        // a matrix whose header promises more data than the payload has
+        let mut w = WireWriter::new();
+        w.u64(1 << 40);
+        w.u64(1 << 40);
+        let bytes = w.into_bytes();
+        assert!(WireReader::new(&bytes).matrix().is_err());
+        // a header whose rows*cols fits usize but whose byte count
+        // wraps: must be a clean error, not a capacity-overflow panic
+        // (the demux reader thread dies on panics without cleanup)
+        let mut w = WireWriter::new();
+        w.u64(1 << 61);
+        w.u64(4);
+        let bytes = w.into_bytes();
+        assert!(WireReader::new(&bytes).matrix().is_err());
+        // non-UTF-8 string
+        let mut w = WireWriter::new();
+        w.u32(2);
+        let mut bytes = w.into_bytes();
+        bytes.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(WireReader::new(&bytes).str().is_err());
+    }
+
+    #[test]
+    fn chunks_roundtrip_and_validate_row_alignment() {
+        let data = [1.5, -0.0, 3.25, f64::MIN_POSITIVE, 5.0, 6.0];
+        let mut w = WireWriter::new();
+        w.chunk("A", 1000, 3, &data);
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        let (name, first, cols, back) = r.chunk().unwrap();
+        r.finish().unwrap();
+        assert_eq!((name.as_str(), first, cols), ("A", 1000, 3));
+        for (a, b) in back.iter().zip(&data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // 5 values do not make whole 3-wide rows
+        let mut w = WireWriter::new();
+        w.chunk("A", 0, 3, &data);
+        let mut bytes = w.into_bytes();
+        // shrink the count prefix to 5 (name(4+1) + first(8) + cols(8) = offset 21)
+        bytes[21..25].copy_from_slice(&5u32.to_le_bytes());
+        bytes.truncate(bytes.len() - 8);
+        assert!(WireReader::new(&bytes).chunk().is_err());
+    }
+
+    #[test]
+    fn worker_config_roundtrips() {
+        let cfg = WorkerConfig {
+            model: DiskModel { beta_r: 1.25e-9, ..DiskModel::icme_like() },
+            cluster: ClusterConfig { map_slots: 40, reduce_slots: 13, host_threads: 3 },
+            faults: Some((
+                FaultPolicy { probability: 0.125, max_attempts: 7, waste_fraction: 0.5 },
+                777,
+            )),
+            opts: CoordOpts { rows_per_task: 50, reduce_tasks: 4, gather_limit: Some(99) },
+            backend: Backend::Native,
+            engine_shards: 2,
+            service_workers: 3,
+            queue_capacity: 64,
+        };
+        let mut w = WireWriter::new();
+        w.config(&cfg);
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        let back = r.config().unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.model, cfg.model);
+        assert_eq!(back.cluster.reduce_slots, 13);
+        assert_eq!(back.cluster.host_threads, 3);
+        let (policy, seed) = back.faults.unwrap();
+        assert_eq!(policy.probability, 0.125);
+        assert_eq!(policy.max_attempts, 7);
+        assert_eq!(seed, 777);
+        assert_eq!(back.opts.gather_limit, Some(99));
+        assert_eq!(back.backend, Backend::Native);
+        assert_eq!(
+            (back.engine_shards, back.service_workers, back.queue_capacity),
+            (2, 3, 64)
+        );
+    }
+
+    #[test]
+    fn status_roundtrips_every_state() {
+        for s in [
+            JobStatus::Queued,
+            JobStatus::Running,
+            JobStatus::Done,
+            JobStatus::Failed,
+            JobStatus::Cancelled,
+        ] {
+            let mut w = WireWriter::new();
+            w.status(s);
+            let bytes = w.into_bytes();
+            let mut r = WireReader::new(&bytes);
+            assert_eq!(r.status().unwrap(), s);
+            r.finish().unwrap();
+        }
+    }
+}

@@ -1,0 +1,505 @@
+//! The serving side of the wire protocol: `mrtsqr worker` and
+//! `mrtsqr serve`.
+//!
+//! Both subcommands run the same loop (`serve_loop`) over a
+//! [`TsqrClient`] — the protocol is served *by the transport-agnostic
+//! facade itself*, which is what makes it composable:
+//!
+//! * `mrtsqr worker` ([`run_worker`]) waits for the `Hello` handshake,
+//!   reconstructs the peer's cluster recipe ([`WorkerConfig`]) into an
+//!   in-process client (`Local` transport over an engine pool), and
+//!   serves. This is the child process a
+//!   [`crate::client::ProcessTransport`] spawns.
+//! * `mrtsqr serve` ([`run_serve`]) serves a client the CLI already
+//!   built — which may itself use `--worker-procs N`, making `serve` a
+//!   relay: any program able to frame bytes on a pipe gets a full
+//!   cross-process engine pool without linking this crate.
+//!
+//! One reader (the loop) owns stdin; stdout is mutex-shared between
+//! the loop's replies and the per-job waiter threads that push
+//! [`Op::JobDone`]/[`Op::JobFail`] frames when factorizations finish —
+//! the sending half of the demux scheme described in
+//! [`crate::client::process`].
+//!
+//! Jobs are executed under the ids the *peer* assigns
+//! ([`TsqrClient::submit_with_id`]), so DFS namespaces and fault
+//! streams agree across the pipe — the determinism contract's other
+//! half.
+
+use super::wire::{self, Frame, Op, WireReader, WireWriter, WorkerConfig, MAX_FRAME_BYTES};
+use super::{ClientJobHandle, TsqrClient};
+use crate::linalg::Matrix;
+use crate::service::{JobId, JobStatus};
+use crate::session::{Placement, SessionBuilder};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::sync::{Arc, Mutex};
+
+/// Serve the protocol on this process's stdin/stdout, building the
+/// engine pool from the peer's `Hello` handshake. The loop ends on
+/// `Shutdown` or EOF (the parent closed the pipe); a protocol error is
+/// fatal — the parent treats our exit as worker death.
+pub fn run_worker() -> Result<()> {
+    let stdin = std::io::stdin();
+    serve_loop(stdin.lock(), std::io::stdout(), None)
+}
+
+/// Serve the protocol on stdin/stdout over a client the caller already
+/// built (the `mrtsqr serve` subcommand). The `Hello` frame is then a
+/// version handshake only — its embedded config is ignored in favor of
+/// the CLI's.
+pub fn run_serve(client: TsqrClient) -> Result<()> {
+    let stdin = std::io::stdin();
+    serve_loop(stdin.lock(), std::io::stdout(), Some(client))
+}
+
+/// One in-progress streamed ingestion (chunks buffered until `End`).
+struct PendingIngest {
+    cols: usize,
+    placement: Placement,
+    rows: usize,
+    data: Vec<f64>,
+}
+
+/// Everything one serving session holds between frames.
+struct Server<W: Write + Send + 'static> {
+    out: Arc<Mutex<W>>,
+    client: Option<Arc<TsqrClient>>,
+    /// Whether `Hello` must supply the cluster config (worker mode) or
+    /// only version-handshake a pre-built client (serve mode).
+    prebuilt: bool,
+    jobs: Arc<Mutex<HashMap<u64, Arc<ClientJobHandle>>>>,
+    ingests: HashMap<String, PendingIngest>,
+    /// Live notify threads, joined before the loop returns so every
+    /// submitted job's terminal frame is flushed before worker exit.
+    notifiers: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn send<W: Write>(out: &Mutex<W>, op: Op, req_id: u64, payload: &[u8]) -> Result<()> {
+    let mut w = out.lock().expect("protocol writer");
+    wire::write_frame(&mut *w, op, req_id, payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// The protocol loop shared by both entry points; exposed to the crate
+/// so tests can serve over in-memory pipes.
+pub(crate) fn serve_loop<R: Read, W: Write + Send + 'static>(
+    mut input: R,
+    output: W,
+    prebuilt: Option<TsqrClient>,
+) -> Result<()> {
+    let mut server = Server {
+        out: Arc::new(Mutex::new(output)),
+        prebuilt: prebuilt.is_some(),
+        client: prebuilt.map(Arc::new),
+        jobs: Arc::new(Mutex::new(HashMap::new())),
+        ingests: HashMap::new(),
+        notifiers: Vec::new(),
+    };
+    while let Some(frame) = wire::read_frame(&mut input)? {
+        let shutdown = frame.op == Op::Shutdown;
+        let req_id = frame.req_id;
+        match server.handle(frame) {
+            Ok((op, payload)) => send(&server.out, op, req_id, &payload)?,
+            Err(err) => {
+                let mut w = WireWriter::new();
+                w.str(&format!("{err:#}"));
+                send(&server.out, Op::Err, req_id, &w.into_bytes())?;
+            }
+        }
+        if shutdown {
+            break;
+        }
+    }
+    // let every in-flight job finish and push its terminal frame (the
+    // client — and with it the engine pool — is still alive here);
+    // only then drop the client, which drains and joins the pool
+    for notifier in server.notifiers.drain(..) {
+        let _ = notifier.join();
+    }
+    Ok(())
+}
+
+impl<W: Write + Send + 'static> Server<W> {
+    fn client(&self) -> Result<&Arc<TsqrClient>> {
+        self.client
+            .as_ref()
+            .ok_or_else(|| anyhow!("protocol: Hello handshake required before any other op"))
+    }
+
+    fn handle(&mut self, frame: Frame) -> Result<(Op, Vec<u8>)> {
+        let mut r = WireReader::new(&frame.payload);
+        match frame.op {
+            Op::Hello => {
+                let cfg = r.config()?;
+                r.finish()?;
+                if self.client.is_none() {
+                    self.client = Some(Arc::new(build_from_config(&cfg)?));
+                } else if !self.prebuilt {
+                    bail!("protocol: duplicate Hello");
+                }
+                let client = self.client()?;
+                let mut w = WireWriter::new();
+                w.u64(client.shards() as u64);
+                w.u64(client.workers() as u64);
+                w.u64(client.capacity() as u64);
+                w.u64(client.host_threads() as u64);
+                w.str(&client.backend_desc());
+                Ok((Op::HelloAck, w.into_bytes()))
+            }
+            Op::IngestGaussian => {
+                let name = r.str()?;
+                let rows = r.usize()?;
+                let cols = r.usize()?;
+                let seed = r.u64()?;
+                let placement = r.placement()?;
+                r.finish()?;
+                let handle =
+                    self.client()?.ingest_gaussian_placed(&name, rows, cols, seed, placement)?;
+                let mut w = WireWriter::new();
+                w.handle(&handle);
+                Ok((Op::Handle, w.into_bytes()))
+            }
+            Op::IngestBegin => {
+                let name = r.str()?;
+                let cols = r.usize()?;
+                let placement = r.placement()?;
+                r.finish()?;
+                self.client()?;
+                self.ingests
+                    .insert(name, PendingIngest { cols, placement, rows: 0, data: Vec::new() });
+                Ok((Op::Ok, Vec::new()))
+            }
+            Op::IngestChunk => {
+                let (name, first_row, cols, data) = r.chunk()?;
+                r.finish()?;
+                let pending = self
+                    .ingests
+                    .get_mut(&name)
+                    .ok_or_else(|| anyhow!("protocol: chunk for unopened ingestion {name:?}"))?;
+                if cols != pending.cols || first_row != pending.rows as u64 {
+                    bail!(
+                        "protocol: chunk ({first_row}, {cols} cols) does not continue \
+                         ingestion {name:?} at row {} with {} cols",
+                        pending.rows,
+                        pending.cols
+                    );
+                }
+                pending.rows += data.len() / cols;
+                pending.data.extend_from_slice(&data);
+                Ok((Op::Ok, Vec::new()))
+            }
+            Op::IngestEnd => {
+                let name = r.str()?;
+                r.finish()?;
+                let pending = self
+                    .ingests
+                    .remove(&name)
+                    .ok_or_else(|| anyhow!("protocol: end of unopened ingestion {name:?}"))?;
+                let matrix =
+                    Matrix { rows: pending.rows, cols: pending.cols, data: pending.data };
+                let handle =
+                    self.client()?.ingest_matrix_placed(&name, &matrix, pending.placement)?;
+                let mut w = WireWriter::new();
+                w.handle(&handle);
+                Ok((Op::Handle, w.into_bytes()))
+            }
+            Op::Submit => {
+                let id = r.u64()?;
+                let input = r.handle()?;
+                let req = r.request()?;
+                r.finish()?;
+                let client = self.client()?.clone();
+                let job = Arc::new(client.submit_with_id(JobId(id), &input, req)?);
+                self.jobs.lock().expect("jobs registry").insert(id, job.clone());
+                // a long-running serve session must not accumulate one
+                // JoinHandle per job ever submitted
+                self.notifiers.retain(|h| !h.is_finished());
+                // waiter thread: push the terminal frame when the job
+                // finishes, however many jobs are in flight
+                let out = self.out.clone();
+                let registry = self.jobs.clone();
+                let notifier = std::thread::Builder::new()
+                    .name(format!("mrtsqr-notify-{id}"))
+                    .spawn(move || {
+                        let result = job.wait();
+                        let mut w = WireWriter::new();
+                        w.u64(id);
+                        let (op, payload) = match result {
+                            Ok(fact) => {
+                                w.f64(job.wall_secs().unwrap_or(0.0));
+                                w.factorization(&fact);
+                                (Op::JobDone, w.into_bytes())
+                            }
+                            Err(err) => {
+                                let status = if job.status() == JobStatus::Cancelled {
+                                    JobStatus::Cancelled
+                                } else {
+                                    JobStatus::Failed
+                                };
+                                w.status(status);
+                                match job.wall_secs() {
+                                    None => w.u8(0),
+                                    Some(secs) => {
+                                        w.u8(1);
+                                        w.f64(secs);
+                                    }
+                                }
+                                w.str(&format!("{err:#}"));
+                                (Op::JobFail, w.into_bytes())
+                            }
+                        };
+                        // a send failure means the peer is gone; the
+                        // loop will exit on its own EOF
+                        let _ = send(&out, op, 0, &payload);
+                        // the peer's handle has the terminal state now
+                        // (the pushed frame precedes any later
+                        // unknown-job error reply on the FIFO pipe), so
+                        // the registry entry can be reclaimed
+                        registry.lock().expect("jobs registry").remove(&id);
+                    })
+                    .expect("spawn notify thread");
+                self.notifiers.push(notifier);
+                Ok((Op::Ok, Vec::new()))
+            }
+            Op::Status => {
+                let id = r.u64()?;
+                r.finish()?;
+                let job = self.job(id)?;
+                let mut w = WireWriter::new();
+                w.status(job.status());
+                Ok((Op::StatusReply, w.into_bytes()))
+            }
+            Op::Cancel => {
+                let id = r.u64()?;
+                r.finish()?;
+                let job = self.job(id)?;
+                let mut w = WireWriter::new();
+                w.bool(job.cancel());
+                Ok((Op::Flag, w.into_bytes()))
+            }
+            Op::Evict => {
+                let id = r.u64()?;
+                r.finish()?;
+                let swept = self.client()?.evict_job(JobId(id))?;
+                self.jobs.lock().expect("jobs registry").remove(&id);
+                let mut w = WireWriter::new();
+                w.u64(swept as u64);
+                Ok((Op::Count, w.into_bytes()))
+            }
+            Op::FetchMatrix => {
+                let handle = r.handle()?;
+                r.finish()?;
+                let matrix = self.client()?.get_matrix(&handle)?;
+                let mut w = WireWriter::new();
+                w.matrix(&matrix);
+                let payload = w.into_bytes();
+                // an oversized reply must come back as a clean error —
+                // letting write_frame's size ensure fail would kill
+                // this whole serving session (and with it every
+                // in-flight job), not just this request
+                if payload.len() > MAX_FRAME_BYTES as usize {
+                    bail!(
+                        "matrix {:?} is {} bytes — beyond the single-frame fetch limit; \
+                         read it on the worker that holds it (pin chained jobs there)",
+                        handle.file,
+                        payload.len()
+                    );
+                }
+                Ok((Op::MatrixData, payload))
+            }
+            Op::SetScale => {
+                let name = r.str()?;
+                let scale = r.f64()?;
+                r.finish()?;
+                self.client()?.set_scale(&name, scale)?;
+                Ok((Op::Ok, Vec::new()))
+            }
+            Op::Shutdown => {
+                r.finish()?;
+                Ok((Op::Ok, Vec::new()))
+            }
+            other => bail!("protocol: unexpected client-bound opcode {other:?}"),
+        }
+    }
+
+    fn job(&self, id: u64) -> Result<Arc<ClientJobHandle>> {
+        self.jobs
+            .lock()
+            .expect("jobs registry")
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow!("protocol: unknown job id {id}"))
+    }
+}
+
+/// Reconstruct the peer's cluster recipe into an in-process client.
+/// `service_workers` is clamped to ≥ 1: manual drain cannot reach
+/// across a pipe, so a worker always has background execution.
+fn build_from_config(cfg: &WorkerConfig) -> Result<TsqrClient> {
+    let mut cfg = *cfg;
+    cfg.service_workers = cfg.service_workers.max(1);
+    SessionBuilder::from_worker_config(&cfg).build_client()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{Backend, FactorizationRequest, TsqrSession};
+    use std::io::Cursor;
+
+    /// Drive one request frame through a serve loop over in-memory
+    /// pipes and return every frame the server wrote back.
+    fn roundtrip(frames: &[(Op, u64, Vec<u8>)]) -> Vec<Frame> {
+        let mut input = Vec::new();
+        for (op, req_id, payload) in frames {
+            wire::write_frame(&mut input, *op, *req_id, payload).unwrap();
+        }
+        let client = TsqrSession::builder()
+            .backend(Backend::Native)
+            .rows_per_task(50)
+            .service_workers(1)
+            .build_client()
+            .unwrap();
+        let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        serve_loop(Cursor::new(input), SharedBuf(out.clone()), Some(client)).unwrap();
+        let bytes = out.lock().unwrap().clone();
+        let mut cursor = &bytes[..];
+        let mut frames = Vec::new();
+        while let Some(frame) = wire::read_frame(&mut cursor).unwrap() {
+            frames.push(frame);
+        }
+        frames
+    }
+
+    /// `Write` into an `Arc<Mutex<Vec<u8>>>` so the test can read what
+    /// the server (and its waiter threads) wrote.
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn hello_payload() -> Vec<u8> {
+        let mut w = WireWriter::new();
+        w.config(&WorkerConfig {
+            model: crate::dfs::DiskModel::icme_like(),
+            cluster: crate::mapreduce::ClusterConfig {
+                map_slots: 40,
+                reduce_slots: 40,
+                host_threads: 1,
+            },
+            faults: None,
+            opts: crate::coordinator::CoordOpts::default(),
+            backend: Backend::Native,
+            engine_shards: 1,
+            service_workers: 1,
+            queue_capacity: 8,
+        });
+        w.into_bytes()
+    }
+
+    #[test]
+    fn serve_loop_runs_a_whole_job_over_in_memory_pipes() {
+        // Hello → ingest → submit → shutdown; the reply stream must
+        // carry the acks, the handle, and the pushed JobDone whose
+        // factorization decodes with a valid digest
+        let mut ingest = WireWriter::new();
+        ingest.str("A");
+        ingest.u64(200);
+        ingest.u64(4);
+        ingest.u64(7);
+        ingest.placement(Placement::Auto);
+        let mut submit = WireWriter::new();
+        submit.u64(3); // peer-assigned job id
+        submit.handle(&crate::coordinator::MatrixHandle::new("A", 200, 4));
+        submit.request(&FactorizationRequest::r_only());
+        let frames = roundtrip(&[
+            (Op::Hello, 1, hello_payload()),
+            (Op::IngestGaussian, 2, ingest.into_bytes()),
+            (Op::Submit, 3, submit.into_bytes()),
+            // note: no explicit Shutdown — EOF must also end the loop
+        ]);
+        // replies in request order (the loop is serial)…
+        assert_eq!(frames[0].op, Op::HelloAck);
+        assert_eq!(frames[1].op, Op::Handle);
+        let mut r = WireReader::new(&frames[1].payload);
+        let h = r.handle().unwrap();
+        assert_eq!((h.file.as_str(), h.rows, h.cols), ("A", 200, 4));
+        assert_eq!(frames[2].op, Op::Ok, "submit ack");
+        // …plus the pushed JobDone (serve_loop drops the client, which
+        // joins workers, before we read the stream — the push is there)
+        let done = frames.iter().find(|f| f.op == Op::JobDone).expect("JobDone push");
+        assert_eq!(done.req_id, 0, "pushes carry req_id 0");
+        let mut r = WireReader::new(&done.payload);
+        assert_eq!(r.u64().unwrap(), 3, "peer-assigned id echoes back");
+        let _wall = r.f64().unwrap();
+        let fact = r.factorization().unwrap();
+        r.finish().unwrap();
+        assert_eq!(fact.r.cols, 4);
+        assert_eq!(fact.result_digest().len(), 16);
+    }
+
+    #[test]
+    fn ops_before_hello_are_rejected_in_worker_mode() {
+        let mut input = Vec::new();
+        let mut w = WireWriter::new();
+        w.str("A");
+        w.f64(2.0);
+        wire::write_frame(&mut input, Op::SetScale, 1, &w.into_bytes()).unwrap();
+        let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        serve_loop(Cursor::new(input), SharedBuf(out.clone()), None).unwrap();
+        let bytes = out.lock().unwrap().clone();
+        let frame = wire::read_frame(&mut &bytes[..]).unwrap().unwrap();
+        assert_eq!(frame.op, Op::Err);
+        let msg = WireReader::new(&frame.payload).str().unwrap();
+        assert!(msg.contains("Hello"), "{msg}");
+    }
+
+    #[test]
+    fn chunked_ingest_reassembles_in_order_and_rejects_gaps() {
+        let mut begin = WireWriter::new();
+        begin.str("M");
+        begin.u64(2);
+        begin.placement(Placement::Auto);
+        let mut c0 = WireWriter::new();
+        c0.chunk("M", 0, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let mut gap = WireWriter::new();
+        gap.chunk("M", 5, 2, &[9.0, 9.0]); // wrong offset: must be rejected
+        let mut c1 = WireWriter::new();
+        c1.chunk("M", 2, 2, &[5.0, 6.0]);
+        let mut end = WireWriter::new();
+        end.str("M");
+        let mut fetch = WireWriter::new();
+        fetch.handle(&crate::coordinator::MatrixHandle::new("M", 3, 2));
+        let frames = roundtrip(&[
+            (Op::IngestBegin, 1, begin.into_bytes()),
+            (Op::IngestChunk, 2, c0.into_bytes()),
+            (Op::IngestChunk, 3, gap.into_bytes()),
+            (Op::IngestChunk, 4, c1.into_bytes()),
+            (Op::IngestEnd, 5, end.into_bytes()),
+            (Op::FetchMatrix, 6, fetch.into_bytes()),
+        ]);
+        assert_eq!(frames[0].op, Op::Ok);
+        assert_eq!(frames[1].op, Op::Ok);
+        assert_eq!(frames[2].op, Op::Err, "out-of-order chunk must be rejected");
+        assert_eq!(frames[3].op, Op::Ok, "in-order chunk still lands after the bad one");
+        assert_eq!(frames[4].op, Op::Handle);
+        let mut r = WireReader::new(&frames[4].payload);
+        assert_eq!(r.handle().unwrap().rows, 3);
+        assert_eq!(frames[5].op, Op::MatrixData);
+        let mut r = WireReader::new(&frames[5].payload);
+        let m = r.matrix().unwrap();
+        assert_eq!((m.rows, m.cols), (3, 2));
+        assert_eq!(m.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+}

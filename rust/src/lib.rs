@@ -4,8 +4,27 @@
 //! *"Direct QR factorizations for tall-and-skinny matrices in MapReduce
 //! architectures"* (IEEE BigData 2013).
 //!
-//! The system is a five-layer stack:
+//! The system is a six-layer stack:
 //!
+//! * **L6 ([`client`]) — the transport-agnostic serving facade.** A
+//!   [`client::TsqrClient`] (built via
+//!   [`session::SessionBuilder::build_client`]) hides *where* the
+//!   engine pool lives behind one [`client::Transport`] seam: the
+//!   `Local` transport wraps an in-process L5 service unchanged, while
+//!   the `Process` transport
+//!   ([`session::SessionBuilder::worker_processes`]) spawns
+//!   `mrtsqr worker` child processes — one engine pool each — and
+//!   speaks a versioned, length-prefixed binary wire format
+//!   ([`client::wire`]) over their stdin/stdout pipes, with a
+//!   reader-thread demux so any number of in-flight
+//!   [`client::ClientJobHandle`]s multiplex one pipe. Jobs carry
+//!   client-assigned global ids, f64s travel as exact bits, and a
+//!   `ProcRouter` lifts the shard router across processes
+//!   (`Placement::Pinned(k)` ≡ process `k / shards`, local shard
+//!   `k % shards`) — so in-process vs cross-process is pure placement:
+//!   bit-identical `R`/`Q`/Σ/`virtual_secs`/fault draws/digests
+//!   (`rust/tests/client.rs`). `mrtsqr batch --worker-procs N` and the
+//!   `mrtsqr serve`/`mrtsqr worker` subcommands drive it from the CLI.
 //! * **L5 ([`service`]) — the serving layer.** A
 //!   [`service::TsqrService`] (built from the same
 //!   [`session::SessionBuilder`] via
@@ -75,6 +94,7 @@
 //! # }
 //! ```
 
+pub mod client;
 pub mod coordinator;
 pub mod dfs;
 pub mod linalg;
@@ -86,6 +106,7 @@ pub mod session;
 pub mod util;
 pub mod workload;
 
+pub use client::{ClientJobHandle, Transport, TsqrClient};
 pub use coordinator::{Algorithm, Coordinator, MatrixHandle};
 pub use linalg::Matrix;
 pub use service::{JobHandle, JobId, JobStatus, TsqrService};

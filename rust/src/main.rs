@@ -5,16 +5,20 @@
 //! mrtsqr svd       --rows 50000  --cols 10 [--pjrt]
 //! mrtsqr sigma     --rows 50000  --cols 10            # singular values only
 //! mrtsqr batch     --manifest jobs.txt --jobs 4       # concurrent job service
+//! mrtsqr batch     --manifest jobs.txt --worker-procs 2  # …across worker processes
+//! mrtsqr serve     --shards 2                         # wire protocol on stdin/stdout
+//! mrtsqr worker                                       # child of the Process transport
 //! mrtsqr stability --rows 5000   --cols 50            # Fig. 6 sweep
 //! mrtsqr faults    --rows 80000  --cols 10 --prob 0.125  # Fig. 7 point
 //! mrtsqr model     --beta-r 64 --beta-w 126            # Tables III-V
 //! mrtsqr info                                          # artifact manifest
 //! ```
 //!
-//! Everything runs through the [`mrtsqr::session`] layer (`batch`
-//! through the [`mrtsqr::service`] job service); `--algo` accepts the
-//! seven fixed algorithm names plus `auto` (condition-aware selection,
-//! the default).
+//! Everything runs through the [`mrtsqr::session`] layer (`batch`,
+//! `serve` and `worker` through the transport-agnostic
+//! [`mrtsqr::client::TsqrClient`]); `--algo` accepts the seven fixed
+//! algorithm names plus `auto` (condition-aware selection, the
+//! default).
 
 use anyhow::{Context, Result};
 use mrtsqr::coordinator::{Algorithm, MatrixHandle};
@@ -136,14 +140,17 @@ fn cmd_sigma(args: &Args) -> Result<()> {
 }
 
 /// Run a manifest of factorization requests concurrently through one
-/// [`mrtsqr::service::TsqrService`], printing per-job stats plus
+/// [`mrtsqr::client::TsqrClient`], printing per-job stats plus
 /// aggregate throughput. `--jobs N` sets the per-shard worker count
 /// (default 4), `--shards N` the engine-shard pool size (default 1),
-/// `--serial` drains the queue on one thread instead (the baseline the
-/// aggregate numbers are compared against), `--json PATH` additionally
-/// writes the report as JSON — including a per-job `result_digest` of
-/// the exact R/Σ bits, so two reports taken at different `--shards`
-/// values can be diffed for the sharding-determinism invariant with a
+/// `--worker-procs N` moves the whole pool into `N` spawned
+/// `mrtsqr worker` processes (each running `--shards` shards; 0 =
+/// in-process, the default), `--serial` drains the queue on one thread
+/// instead (the baseline the aggregate numbers are compared against;
+/// in-process only), `--json PATH` additionally writes the report as
+/// JSON — including a per-job `result_digest` of the exact R/Σ bits,
+/// so two reports taken at different `--shards`/`--worker-procs`
+/// values can be diffed for the placement-determinism invariant with a
 /// one-line `grep | diff`.
 fn cmd_batch(args: &Args) -> Result<()> {
     let manifest_path = args
@@ -155,39 +162,46 @@ fn cmd_batch(args: &Args) -> Result<()> {
         .with_context(|| format!("reading manifest {manifest_path:?}"))?;
     let entries = parse_manifest(&text)?;
     let serial = args.flag("serial");
+    let procs = args.get_usize("worker-procs", 0);
+    if serial && procs > 0 {
+        anyhow::bail!("--serial drains on the calling thread, which cannot reach into worker \
+                       processes — drop --serial or --worker-procs");
+    }
     let workers = if serial { 0 } else { args.get_usize("jobs", 4).max(1) };
     let shards = args.get_usize("shards", 1).max(1);
 
     // serial mode has no workers draining during submission, so the
     // queue must hold the whole manifest or submit() would block forever
     let queue = args.get_usize("queue", 64).max(if serial { entries.len() } else { 1 });
-    let svc = session_builder(args)
+    let client = session_builder(args)
         .service_workers(workers)
         .queue_capacity(queue)
         .engine_shards(shards)
-        .build_service()?;
+        .worker_processes(procs)
+        .build_client()?;
     println!(
-        "service        : backend={} shards={} workers={} (total) queue-capacity={}/shard",
-        svc.backend_desc(),
-        svc.shards(),
-        svc.workers(),
-        svc.capacity()
+        "service        : backend={} procs={} shards={} (total) workers={} (total) queue-capacity={}/shard",
+        client.backend_desc(),
+        client.procs(),
+        client.shards(),
+        client.workers(),
+        client.capacity()
     );
 
     // stage every input first, then submit the whole manifest: the
     // queue drains while later jobs are still being submitted
     let inputs: Vec<MatrixHandle> = entries
         .iter()
-        .map(|e| svc.ingest_gaussian(&e.name, e.rows, e.cols, e.seed))
+        .map(|e| client.ingest_gaussian(&e.name, e.rows, e.cols, e.seed))
         .collect::<Result<_>>()?;
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = entries
         .iter()
         .zip(&inputs)
-        .map(|(e, h)| svc.submit(h, e.request()))
+        .map(|(e, h)| client.submit(h, e.request()))
         .collect::<Result<_>>()?;
     if serial {
-        svc.drain_now();
+        client.drain_now()?;
     }
 
     let mut table = Table::new(
@@ -196,19 +210,23 @@ fn cmd_batch(args: &Args) -> Result<()> {
     );
     let mut job_rows = Vec::new();
     let (mut sum_wall, mut sum_virtual, mut failed) = (0.0f64, 0.0f64, 0usize);
-    // per-shard aggregates: jobs served and summed job wall-clock
-    let mut shard_jobs = vec![0usize; svc.shards()];
-    let mut shard_wall = vec![0.0f64; svc.shards()];
+    // per-(global-)shard aggregates: jobs served and summed job wall
+    let mut shard_jobs = vec![0usize; client.shards()];
+    let mut shard_wall = vec![0.0f64; client.shards()];
     for (entry, handle) in entries.iter().zip(&handles) {
-        let (status, virt, digest) = match handle.wait() {
+        let (status, virt, digest, shard) = match handle.wait() {
             Ok(fact) => (
                 format!("done ({})", fact.algorithm.cli_name()),
                 fact.stats.virtual_secs(),
                 Some(fact.result_digest()),
+                Some(fact.stats.shard),
             ),
             Err(err) => {
                 failed += 1;
-                (format!("FAILED: {err:#}"), 0.0, None)
+                // a cross-process job that died with its worker has no
+                // known shard — report it honestly instead of booking
+                // it under shard 0
+                (format!("FAILED: {err:#}"), 0.0, None, client.shard_of(handle.id()))
             }
         };
         // failed-while-running jobs report their measured wall too;
@@ -216,15 +234,16 @@ fn cmd_batch(args: &Args) -> Result<()> {
         let wall = handle.wall_secs().unwrap_or(0.0);
         sum_wall += wall;
         sum_virtual += virt;
-        let shard = svc.shard_of(handle.id()).unwrap_or(0);
-        shard_jobs[shard] += 1;
-        shard_wall[shard] += wall;
+        if let Some(shard) = shard {
+            shard_jobs[shard] += 1;
+            shard_wall[shard] += wall;
+        }
         table.row(&[
             handle.id().to_string(),
             entry.name.clone(),
             entry.describe(),
             entry.priority.name().into(),
-            shard.to_string(),
+            shard.map_or_else(|| "?".into(), |s| s.to_string()),
             status.clone(),
             format!("{virt:.1}"),
             format!("{wall:.3}"),
@@ -234,7 +253,13 @@ fn cmd_batch(args: &Args) -> Result<()> {
             ("label", Json::str(&entry.name)),
             ("request", Json::str(entry.describe())),
             ("priority", Json::str(entry.priority.name())),
-            ("shard", Json::num(shard as f64)),
+            (
+                "shard",
+                match shard {
+                    Some(s) => Json::num(s as f64),
+                    None => Json::Null,
+                },
+            ),
             ("status", Json::str(status)),
             ("virtual_secs", Json::num(virt)),
             ("wall_secs", Json::num(wall)),
@@ -263,7 +288,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
     }
     println!("throughput     : {:.2} jobs/s", jobs as f64 / elapsed.max(1e-9));
     println!("virtual total  : {sum_virtual:.1} s");
-    if svc.shards() > 1 {
+    if client.shards() > 1 {
         for (k, (n, w)) in shard_jobs.iter().zip(&shard_wall).enumerate() {
             println!("shard {k:<8} : {n} jobs, {w:.3} s summed wall");
         }
@@ -285,8 +310,9 @@ fn cmd_batch(args: &Args) -> Result<()> {
         let report = Json::obj([
             ("manifest", Json::str(&manifest_path)),
             ("workers", Json::num(workers as f64)),
-            ("shards", Json::num(svc.shards() as f64)),
-            ("host_threads", Json::num(svc.host_threads() as f64)),
+            ("procs", Json::num(client.procs() as f64)),
+            ("shards", Json::num(client.shards() as f64)),
+            ("host_threads", Json::num(client.host_threads() as f64)),
             ("jobs", Json::num(jobs as f64)),
             ("failed", Json::num(failed as f64)),
             ("sum_job_wall_secs", Json::num(sum_wall)),
@@ -388,6 +414,29 @@ fn cmd_model(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Serve the binary wire protocol on stdin/stdout over a client built
+/// from the CLI flags: `--shards N` engine shards, `--jobs N` workers
+/// per shard, `--queue N` capacity, and `--worker-procs N` to relay the
+/// whole pool into spawned `mrtsqr worker` processes. Any program able
+/// to frame bytes on a pipe (see `mrtsqr::client::wire`) gets a full
+/// factorization service without linking the crate.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let client = session_builder(args)
+        .service_workers(args.get_usize("jobs", 2).max(1))
+        .queue_capacity(args.get_usize("queue", 64))
+        .engine_shards(args.get_usize("shards", 1))
+        .worker_processes(args.get_usize("worker-procs", 0))
+        .build_client()?;
+    eprintln!(
+        "mrtsqr serve: protocol v{} on stdio, procs={} shards={} workers={}",
+        mrtsqr::client::WIRE_VERSION,
+        client.procs(),
+        client.shards(),
+        client.workers()
+    );
+    mrtsqr::client::worker::run_serve(client)
+}
+
 fn cmd_info() -> Result<()> {
     let dir = Manifest::default_dir();
     let manifest = Manifest::load(&dir)?;
@@ -401,13 +450,15 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|batch|stability|faults|model|info> [options]
+const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|batch|serve|worker|stability|faults|model|info> [options]
   common options: --rows N --cols N --seed N --pjrt
                   --algo <auto|cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder>
                   --beta-r s/GB --beta-w s/GB --byte-scale X
                   --host-threads N   (worker threads for task bodies; results identical for any N)
-  batch options:  --manifest FILE --jobs N --shards N --queue N [--serial] [--json PATH]
+  batch options:  --manifest FILE --jobs N --shards N --worker-procs N --queue N [--serial] [--json PATH]
                   (manifest lines: name rows cols seed <qr|r|svd|sigma> <algo> [low|normal|high] [@shard])
+  serve options:  --jobs N --shards N --worker-procs N --queue N   (wire protocol on stdin/stdout)
+  worker:         no options — spawned by the Process transport; config arrives in the Hello handshake
   see README.md for the full list";
 
 fn main() -> Result<()> {
@@ -417,6 +468,8 @@ fn main() -> Result<()> {
         Some("svd") => cmd_svd(&args),
         Some("sigma") => cmd_sigma(&args),
         Some("batch") => cmd_batch(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("worker") => mrtsqr::client::worker::run_worker(),
         Some("stability") => cmd_stability(&args),
         Some("faults") => cmd_faults(&args),
         Some("model") => cmd_model(&args),

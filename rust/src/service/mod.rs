@@ -545,10 +545,57 @@ impl TsqrService {
     /// recorded durably in the result's
     /// [`crate::mapreduce::JobStats::shard`].
     pub fn shard_of(&self, id: JobId) -> Option<usize> {
-        self.inner.placements.lock().expect("placements").get(&id.0).copied()
+        self.inner
+            .placements
+            .lock()
+            .expect("placements")
+            .get(&id.0)
+            .copied()
+            .filter(|&shard| shard != Self::PENDING_SHARD)
     }
 
     // ----------------------------------------------------- submission
+
+    /// Placeholder shard recorded while a submission is between id
+    /// reservation and enqueue (never a valid shard index;
+    /// [`TsqrService::shard_of`] filters it out).
+    const PENDING_SHARD: usize = usize::MAX;
+
+    /// Reserve the next auto-assigned id. The reservation lives in the
+    /// placements map, which makes the duplicate check in
+    /// [`TsqrService::submit_with_id`] atomic with it: an explicit id
+    /// raced against an auto allocation can never end up shared by two
+    /// live jobs (same `job-<id>/` namespace, same fault stream).
+    fn reserve_auto_id(&self) -> JobId {
+        let mut placements = self.inner.placements.lock().expect("placements");
+        loop {
+            let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+            if let std::collections::hash_map::Entry::Vacant(slot) = placements.entry(id.0) {
+                slot.insert(Self::PENDING_SHARD);
+                return id;
+            }
+            // the counter ran into an explicit id still live: skip it
+        }
+    }
+
+    /// Reserve a caller-chosen id, atomically rejecting one already in
+    /// use by a live (unevicted) job.
+    fn reserve_explicit_id(&self, id: JobId) -> Result<()> {
+        let mut placements = self.inner.placements.lock().expect("placements");
+        if placements.contains_key(&id.0) {
+            bail!("job id {id} is already in use by a live (unevicted) job");
+        }
+        placements.insert(id.0, Self::PENDING_SHARD);
+        drop(placements);
+        // keep auto-assigned ids ahead of every explicit one
+        self.next_id.fetch_max(id.0 + 1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Release a reservation whose submission failed before enqueue.
+    fn unreserve(&self, id: JobId) {
+        self.inner.placements.lock().expect("placements").remove(&id.0);
+    }
 
     fn enqueue(
         &self,
@@ -574,13 +621,12 @@ impl TsqrService {
         handle
     }
 
-    /// Route a job: allocate its id, pick its shard, and stage its
+    /// Route an already-identified job: pick its shard and stage its
     /// input there.
-    fn place(&self, input: &MatrixHandle, req: &FactorizationRequest) -> Result<(JobId, usize)> {
-        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+    fn place(&self, id: JobId, req: &FactorizationRequest, input: &MatrixHandle) -> Result<usize> {
         let shard_idx = self.inner.route(id, req.placement)?;
         self.inner.stage_input(shard_idx, &input.file);
-        Ok((id, shard_idx))
+        Ok(shard_idx)
     }
 
     /// Submit a job and return immediately with its [`JobHandle`]. At
@@ -588,27 +634,76 @@ impl TsqrService {
     /// (or drain) frees a slot — back-pressure, not unbounded
     /// buffering.
     pub fn submit(&self, input: &MatrixHandle, req: FactorizationRequest) -> Result<JobHandle> {
-        let (id, shard_idx) = self.place(input, &req)?;
+        let id = self.reserve_auto_id();
+        self.submit_reserved(id, input, req)
+    }
+
+    /// Queue a job whose id is already reserved (blocking flavor);
+    /// releases the reservation on every failure path.
+    fn submit_reserved(
+        &self,
+        id: JobId,
+        input: &MatrixHandle,
+        req: FactorizationRequest,
+    ) -> Result<JobHandle> {
+        let shard_idx = match self.place(id, &req, input) {
+            Ok(shard_idx) => shard_idx,
+            Err(err) => {
+                self.unreserve(id);
+                return Err(err);
+            }
+        };
         let shard = &self.inner.shards[shard_idx];
         let mut q = self.inner.lock_queue(shard_idx);
         while q.open && q.jobs.len() >= self.inner.capacity {
             q = shard.space.wait(q).expect("service queue");
         }
         if !q.open {
+            drop(q);
+            self.unreserve(id);
             bail!("job service is shut down");
         }
         Ok(self.enqueue(shard_idx, &mut q, id, input, req))
     }
 
+    /// [`TsqrService::submit`] under a *caller-assigned* job id (it
+    /// must not collide with a live job's). A job's DFS namespace and
+    /// fault-RNG stream derive from its id alone, so a caller that
+    /// controls ids controls determinism across services — this is how
+    /// the cross-process [`crate::client::TsqrClient`] keeps worker
+    /// processes bit-identical to an in-process pool. Auto-assigned
+    /// ids ([`TsqrService::submit`]) always continue past the largest
+    /// explicit one.
+    pub fn submit_with_id(
+        &self,
+        id: JobId,
+        input: &MatrixHandle,
+        req: FactorizationRequest,
+    ) -> Result<JobHandle> {
+        self.reserve_explicit_id(id)?;
+        self.submit_reserved(id, input, req)
+    }
+
     /// Non-blocking [`TsqrService::submit`]: errors instead of waiting
     /// when the routed shard's queue is at capacity.
     pub fn try_submit(&self, input: &MatrixHandle, req: FactorizationRequest) -> Result<JobHandle> {
-        let (id, shard_idx) = self.place(input, &req)?;
+        let id = self.reserve_auto_id();
+        let shard_idx = match self.place(id, &req, input) {
+            Ok(shard_idx) => shard_idx,
+            Err(err) => {
+                self.unreserve(id);
+                return Err(err);
+            }
+        };
         let mut q = self.inner.lock_queue(shard_idx);
         if !q.open {
+            drop(q);
+            self.unreserve(id);
             bail!("job service is shut down");
         }
         if q.jobs.len() >= self.inner.capacity {
+            drop(q);
+            self.unreserve(id);
             bail!(
                 "shard {shard_idx} job queue at capacity ({} queued) — wait for a worker or use submit()",
                 self.inner.capacity
@@ -675,7 +770,20 @@ impl TsqrService {
     /// Ingest an in-memory matrix into the pool (pinned to shard 0, the
     /// home shard; jobs routed elsewhere receive an O(1) copy).
     pub fn ingest_matrix(&self, name: &str, a: &Matrix) -> Result<MatrixHandle> {
-        self.ingest_with(name, a.cols, |w| w.push_chunk(a))
+        self.ingest_matrix_placed(name, a, Placement::Auto)
+    }
+
+    /// [`TsqrService::ingest_matrix`] with an explicit home-shard
+    /// [`Placement`]: `Pinned(k)` lands the rows directly on shard `k`,
+    /// so a job pinned there reads them with no cross-shard staging
+    /// copy at submission. `Auto` keeps the historical home, shard 0.
+    pub fn ingest_matrix_placed(
+        &self,
+        name: &str,
+        a: &Matrix,
+        placement: Placement,
+    ) -> Result<MatrixHandle> {
+        self.ingest_with_placed(name, a.cols, placement, |w| w.push_chunk(a))
     }
 
     /// Ingest a seeded gaussian matrix (same records as
@@ -687,9 +795,22 @@ impl TsqrService {
         cols: usize,
         seed: u64,
     ) -> Result<MatrixHandle> {
+        self.ingest_gaussian_placed(name, rows, cols, seed, Placement::Auto)
+    }
+
+    /// [`TsqrService::ingest_gaussian`] with an explicit home-shard
+    /// [`Placement`] (see [`TsqrService::ingest_matrix_placed`]).
+    pub fn ingest_gaussian_placed(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        placement: Placement,
+    ) -> Result<MatrixHandle> {
         let mut rng = Rng::new(seed);
         let mut row = vec![0.0f64; cols];
-        self.ingest_with(name, cols, |w| {
+        self.ingest_with_placed(name, cols, placement, |w| {
             for _ in 0..rows {
                 for v in row.iter_mut() {
                     *v = rng.gaussian();
@@ -712,17 +833,60 @@ impl TsqrService {
         cols: usize,
         f: impl FnOnce(&mut MatrixWriter) -> Result<()>,
     ) -> Result<MatrixHandle> {
+        self.ingest_with_placed(name, cols, Placement::Auto, f)
+    }
+
+    /// [`TsqrService::ingest_with`] with an explicit home-shard
+    /// [`Placement`]. With `Pinned(k)` the rows land on shard `k` up
+    /// front — closing the gap where every large input first staged on
+    /// shard 0 and was then copied to its real destination. A scale
+    /// registered before ingestion ([`TsqrService::set_scale`] keeps
+    /// its scale-before-ingest contract via shard 0) is carried onto
+    /// the pinned home shard.
+    pub fn ingest_with_placed(
+        &self,
+        name: &str,
+        cols: usize,
+        placement: Placement,
+        f: impl FnOnce(&mut MatrixWriter) -> Result<()>,
+    ) -> Result<MatrixHandle> {
+        let home = match placement {
+            Placement::Auto => 0,
+            Placement::Pinned(k) => {
+                if k >= self.inner.shards.len() {
+                    bail!(
+                        "ingest pinned to shard {k}, but the service has {} shard(s)",
+                        self.inner.shards.len()
+                    );
+                }
+                k
+            }
+        };
+        // scales registered ahead of ingestion live on shard 0; a
+        // pinned ingest must honor them on its actual home shard
+        let pre_scale = if home != 0 {
+            let engine = lock_engine(&self.inner.shards[0].engine);
+            Some(engine.dfs.scale(name)).filter(|s| *s != 1.0)
+        } else {
+            None
+        };
         let handle = {
-            let mut engine = lock_engine(&self.inner.shards[0].engine);
+            let mut engine = lock_engine(&self.inner.shards[home].engine);
             let mut w = MatrixWriter::new(&mut engine.dfs, name, cols);
             f(&mut w)?;
-            w.finish()
+            let handle = w.finish();
+            if let Some(scale) = pre_scale {
+                engine.dfs.set_scale(name, scale);
+            }
+            handle
         };
         // re-ingesting a name overwrites the home copy, so any copy an
-        // earlier job staged onto another shard is now stale — drop
-        // them all; the next job routed there re-stages the fresh one
-        for shard in &self.inner.shards[1..] {
-            lock_engine(&shard.engine).dfs.delete(name);
+        // earlier ingest or job staged onto another shard is now stale
+        // — drop them all; the next job routed there re-stages fresh
+        for (k, shard) in self.inner.shards.iter().enumerate() {
+            if k != home {
+                lock_engine(&shard.engine).dfs.delete(name);
+            }
         }
         Ok(handle)
     }
@@ -1026,6 +1190,76 @@ mod tests {
         sharded.drain_now();
         job.wait().unwrap();
         assert_eq!(sharded.with_dfs_on(1, |d| d.scale("B")).unwrap(), 250.0);
+    }
+
+    #[test]
+    fn pinned_ingest_plus_pinned_job_never_copies_across_shards() {
+        // the ingestion shard-pinning satellite: a large input pinned
+        // to its consumer's shard must land there up front — no copy on
+        // shard 0, and no staging copy at submission
+        let svc = manual_sharded(3);
+        let h = svc
+            .ingest_gaussian_placed("A", 300, 4, 11, Placement::Pinned(1))
+            .unwrap();
+        assert!(!svc.with_dfs(|d| d.exists("A")), "pinned ingest must skip shard 0");
+        assert!(svc.with_dfs_on(1, |d| d.exists("A")).unwrap());
+        let job = svc.submit(&h, FactorizationRequest::qr().pinned(1)).unwrap();
+        svc.drain_now();
+        let fact = job.wait().unwrap();
+        assert_eq!(fact.stats.shard, 1);
+        // after the whole lifecycle, "A" still lives on exactly one shard
+        for k in [0usize, 2] {
+            assert!(
+                !svc.with_dfs_on(k, |d| d.exists("A")).unwrap(),
+                "shard {k} must never receive a copy of the pinned input"
+            );
+        }
+        // the result is readable (get_matrix scans all shards)
+        assert!(svc.get_matrix(fact.q.as_ref().unwrap()).is_ok());
+        // a job routed *elsewhere* still works — staged from shard 1
+        let j2 = svc.submit(&h, FactorizationRequest::r_only().pinned(2)).unwrap();
+        svc.drain_now();
+        j2.wait().unwrap();
+        assert!(svc.with_dfs_on(2, |d| d.exists("A")).unwrap(), "cross-shard staging still works");
+        // out-of-range pins error
+        assert!(svc
+            .ingest_gaussian_placed("B", 10, 2, 1, Placement::Pinned(9))
+            .is_err());
+    }
+
+    #[test]
+    fn pinned_ingest_honors_scale_set_before_ingestion() {
+        let svc = manual_sharded(2);
+        svc.set_scale("A", 2000.0);
+        svc.ingest_gaussian_placed("A", 60, 3, 4, Placement::Pinned(1)).unwrap();
+        assert_eq!(svc.with_dfs_on(1, |d| d.scale("A")).unwrap(), 2000.0);
+    }
+
+    #[test]
+    fn submit_with_id_controls_namespace_and_rejects_live_duplicates() {
+        let svc = manual_service();
+        let h = svc.ingest_gaussian("A", 200, 4, 6).unwrap();
+        let job = svc.submit_with_id(JobId(7), &h, FactorizationRequest::qr()).unwrap();
+        assert_eq!(job.id(), JobId(7));
+        // a live id cannot be reused…
+        let err = svc.submit_with_id(JobId(7), &h, FactorizationRequest::qr()).unwrap_err();
+        assert!(err.to_string().contains("already in use"), "{err}");
+        // …and auto ids continue past the explicit one
+        let auto = svc.submit(&h, FactorizationRequest::r_only()).unwrap();
+        assert_eq!(auto.id(), JobId(8));
+        svc.drain_now();
+        let fact = job.wait().unwrap();
+        assert!(
+            fact.q.as_ref().unwrap().file.starts_with("job-7/"),
+            "the namespace must follow the explicit id: {}",
+            fact.q.as_ref().unwrap().file
+        );
+        auto.wait().unwrap();
+        // eviction retires the id; reuse becomes legal again
+        svc.evict_job(JobId(7));
+        let again = svc.submit_with_id(JobId(7), &h, FactorizationRequest::r_only()).unwrap();
+        svc.drain_now();
+        again.wait().unwrap();
     }
 
     #[test]

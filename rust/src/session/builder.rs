@@ -3,12 +3,15 @@
 //! place.
 
 use super::TsqrSession;
+use crate::client::process::{default_worker_binary, ProcessTransport};
+use crate::client::{LocalTransport, TsqrClient, WorkerConfig};
 use crate::coordinator::CoordOpts;
 use crate::dfs::DiskModel;
 use crate::mapreduce::{ClusterConfig, Engine, FaultPolicy};
 use crate::runtime::{NativeRuntime, SharedCompute};
 use crate::service::{ServiceConfig, TsqrService};
-use anyhow::Result;
+use anyhow::{ensure, Result};
+use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
 
 /// Compute-backend selector.
@@ -127,6 +130,11 @@ pub struct SessionBuilder {
     opts: CoordOpts,
     ns: String,
     service: ServiceConfig,
+    /// Worker processes a [`TsqrClient`] built from this builder spawns
+    /// (0 = in-process `Local` transport).
+    worker_procs: usize,
+    /// Override for the `mrtsqr` binary the `Process` transport spawns.
+    worker_binary: Option<PathBuf>,
 }
 
 impl SessionBuilder {
@@ -140,6 +148,31 @@ impl SessionBuilder {
             opts: CoordOpts::default(),
             ns: String::new(),
             service: ServiceConfig::default(),
+            worker_procs: 0,
+            worker_binary: None,
+        }
+    }
+
+    /// Reconstruct a builder from the cluster recipe a
+    /// [`crate::client::wire::Op::Hello`] handshake shipped — how an
+    /// `mrtsqr worker` process becomes configured identically to the
+    /// parent that spawned it.
+    pub(crate) fn from_worker_config(cfg: &WorkerConfig) -> SessionBuilder {
+        SessionBuilder {
+            model: cfg.model,
+            cluster: cfg.cluster,
+            faults: cfg.faults,
+            backend: cfg.backend,
+            compute: None,
+            opts: cfg.opts,
+            ns: String::new(),
+            service: ServiceConfig {
+                workers: cfg.service_workers,
+                queue_capacity: cfg.queue_capacity.max(1),
+                engine_shards: cfg.engine_shards.max(1),
+            },
+            worker_procs: 0,
+            worker_binary: None,
         }
     }
 
@@ -260,6 +293,36 @@ impl SessionBuilder {
         self
     }
 
+    /// Worker *processes* of a [`TsqrClient`] built from this builder
+    /// ([`SessionBuilder::build_client`]). `0` (the default) keeps the
+    /// whole engine pool in this process behind the `Local` transport —
+    /// the exact [`TsqrService`] behavior. `n ≥ 1` spawns `n`
+    /// `mrtsqr worker` children, each running its *own* engine pool of
+    /// [`SessionBuilder::engine_shards`] shards with
+    /// [`SessionBuilder::service_workers`] threads per shard, reached
+    /// over the framed stdin/stdout wire protocol
+    /// ([`crate::client::wire`]).
+    ///
+    /// Like engine shards, worker processes are *pure placement*:
+    /// global shard `k` means (process `k / engine_shards`, local shard
+    /// `k % engine_shards`), and every job's results are bit-identical
+    /// wherever it runs (`rust/tests/client.rs`). Ignored by
+    /// [`SessionBuilder::build`] and [`SessionBuilder::build_service`].
+    pub fn worker_processes(mut self, n: usize) -> Self {
+        self.worker_procs = n;
+        self
+    }
+
+    /// Path of the `mrtsqr` binary spawned as a worker process
+    /// (default: auto-detected — the current executable when it is
+    /// `mrtsqr`, an `mrtsqr` sibling in the build tree, or
+    /// `MRTSQR_WORKER_BIN`). Tests pass
+    /// `env!("CARGO_BIN_EXE_mrtsqr")`.
+    pub fn worker_binary(mut self, path: impl Into<PathBuf>) -> Self {
+        self.worker_binary = Some(path.into());
+        self
+    }
+
     fn into_cluster_parts(self) -> Result<ClusterParts> {
         let (compute, backend_desc) = match self.compute {
             Some(c) => (c, "custom"),
@@ -301,6 +364,40 @@ impl SessionBuilder {
             .map(|_| p.make_engine())
             .collect();
         Ok(TsqrService::start(engines, p.compute, p.backend_desc, p.opts, p.service))
+    }
+
+    /// Assemble a transport-agnostic [`TsqrClient`] — the L6 facade.
+    /// With [`SessionBuilder::worker_processes`] at 0 (default) the
+    /// client wraps an in-process [`TsqrService`] (the `Local`
+    /// transport, zero behavior change); with `n ≥ 1` it spawns `n`
+    /// `mrtsqr worker` processes and speaks the framed wire protocol
+    /// (the `Process` transport). See [`crate::client`].
+    pub fn build_client(self) -> Result<TsqrClient> {
+        if self.worker_procs == 0 {
+            let svc = self.build_service()?;
+            return Ok(TsqrClient::new(Box::new(LocalTransport::new(svc))));
+        }
+        ensure!(
+            self.compute.is_none(),
+            "a custom compute backend cannot cross a process boundary — \
+             use worker_processes(0) or a named Backend"
+        );
+        let cfg = WorkerConfig {
+            model: self.model,
+            cluster: self.cluster,
+            faults: self.faults,
+            opts: self.opts,
+            backend: self.backend,
+            engine_shards: self.service.engine_shards.max(1),
+            service_workers: self.service.workers,
+            queue_capacity: self.service.queue_capacity.max(1),
+        };
+        let program = match self.worker_binary {
+            Some(path) => path,
+            None => default_worker_binary()?,
+        };
+        let transport = ProcessTransport::launch(cfg, self.worker_procs, program)?;
+        Ok(TsqrClient::new(Box::new(transport)))
     }
 }
 

@@ -1,0 +1,312 @@
+//! The transport contract (mirror of `rust/tests/shards.rs` for the
+//! process axis): *where the engine pool lives is pure placement*.
+//!
+//! Three invariants:
+//!
+//! 1. A [`TsqrClient`] over the `Local` transport is bit-identical to
+//!    calling [`mrtsqr::TsqrService`] directly — the facade adds
+//!    nothing to the numbers.
+//! 2. The 8-job mixed manifest through `worker_processes(2) ×
+//!    engine_shards(2)` (two OS processes speaking the binary wire
+//!    protocol) is bit-identical — `R`, `Q`, Σ, `virtual_secs`, fault
+//!    draws, `result_digest` — to the in-process `engine_shards(4)`
+//!    pool. Exact-bit f64 encoding and client-assigned global job ids
+//!    are what make this hold.
+//! 3. A killed worker process fails exactly the jobs in flight on it
+//!    (the process-level mirror of the poisoned-shard test): every
+//!    other worker keeps serving and the router routes around the
+//!    corpse.
+
+use mrtsqr::client::TsqrClient;
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::mapreduce::FaultPolicy;
+use mrtsqr::session::{Backend, FactorizationRequest, Priority, SessionBuilder};
+use mrtsqr::{Factorization, MatrixHandle, Placement};
+use std::sync::Arc;
+
+/// The prebuilt `mrtsqr` binary (cargo provides this to integration
+/// tests of the package that owns the bin target).
+const WORKER_BIN: &str = env!("CARGO_BIN_EXE_mrtsqr");
+
+fn builder() -> SessionBuilder {
+    mrtsqr::TsqrSession::builder()
+        .backend(Backend::Native)
+        .rows_per_task(50)
+        .fault_policy(FaultPolicy { probability: 0.15, max_attempts: 16, waste_fraction: 0.5 }, 777)
+        .worker_binary(WORKER_BIN)
+}
+
+/// The acceptance mix: 8 jobs covering QR / R-only / SVD / Σ, Auto and
+/// Fixed algorithms — the same mix `tests/service.rs` and
+/// `tests/shards.rs` pin their invariants on.
+fn mixed_requests() -> Vec<FactorizationRequest> {
+    vec![
+        FactorizationRequest::qr(),
+        FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr),
+        FactorizationRequest::qr()
+            .with_algorithm(Algorithm::DirectTsqrFused)
+            .with_priority(Priority::High),
+        FactorizationRequest::r_only(),
+        FactorizationRequest::r_only().with_algorithm(Algorithm::Cholesky { refine: false }),
+        FactorizationRequest::svd(),
+        FactorizationRequest::singular_values().with_priority(Priority::Low),
+        FactorizationRequest::qr().with_algorithm(Algorithm::IndirectTsqr { refine: true }),
+    ]
+}
+
+/// Run the mixed manifest through a client and hand back per-request
+/// results plus the Q rows read back through the client. Submission is
+/// single-threaded so global job ids — and with them namespaces and
+/// fault streams — line up across configurations.
+fn run_client(client: &TsqrClient) -> Vec<(Arc<Factorization>, Vec<f64>)> {
+    let requests = mixed_requests();
+    let inputs: Vec<MatrixHandle> = (0..requests.len())
+        .map(|i| {
+            client
+                .ingest_gaussian(&format!("A{i}"), 300 + 40 * i, 4 + i % 3, i as u64)
+                .unwrap()
+        })
+        .collect();
+    let handles: Vec<_> = inputs
+        .iter()
+        .zip(&requests)
+        .map(|(h, req)| client.submit(h, req.clone()).unwrap())
+        .collect();
+    handles
+        .iter()
+        .map(|h| {
+            let fact = h.wait().unwrap();
+            let q = fact
+                .q
+                .as_ref()
+                .map(|qh| client.get_matrix(qh).unwrap().data)
+                .unwrap_or_default();
+            (fact, q)
+        })
+        .collect()
+}
+
+/// Field-by-field bitwise comparison of two runs of the same manifest.
+fn assert_bit_identical(
+    baseline: &[(Arc<Factorization>, Vec<f64>)],
+    other: &[(Arc<Factorization>, Vec<f64>)],
+) {
+    assert_eq!(baseline.len(), other.len());
+    for (idx, ((want, want_q), (got, got_q))) in baseline.iter().zip(other).enumerate() {
+        let ctx = format!("request {idx} ({})", want.algorithm.name());
+        assert_eq!(got.algorithm, want.algorithm, "{ctx}: algorithm");
+        assert_eq!((got.r.rows, got.r.cols), (want.r.rows, want.r.cols), "{ctx}: R shape");
+        for (a, b) in got.r.data.iter().zip(&want.r.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: R drifted");
+        }
+        assert_eq!(
+            got.stats.virtual_secs().to_bits(),
+            want.stats.virtual_secs().to_bits(),
+            "{ctx}: virtual_secs drifted ({} vs {})",
+            got.stats.virtual_secs(),
+            want.stats.virtual_secs()
+        );
+        assert_eq!(got.stats.steps.len(), want.stats.steps.len(), "{ctx}: step count");
+        assert_eq!(
+            got.stats.total_faults(),
+            want.stats.total_faults(),
+            "{ctx}: fault draws drifted with placement"
+        );
+        for (a, b) in got.stats.steps.iter().zip(&want.stats.steps) {
+            assert_eq!(a.faults, b.faults, "{ctx}: per-step faults (step {})", a.name);
+            assert_eq!(
+                a.virtual_secs.to_bits(),
+                b.virtual_secs.to_bits(),
+                "{ctx}: per-step virtual clock (step {})",
+                a.name
+            );
+        }
+        assert_eq!(got_q.len(), want_q.len(), "{ctx}: Q shape");
+        for (a, b) in got_q.iter().zip(want_q) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: Q drifted");
+        }
+        match (got.sigma(), want.sigma()) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.len(), b.len(), "{ctx}: sigma length");
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: sigma drifted");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("{ctx}: sigma presence differs"),
+        }
+        match (&got.auto, &want.auto) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.kappa_estimate.to_bits(), b.kappa_estimate.to_bits(), "{ctx}");
+                assert_eq!(a.chosen, b.chosen, "{ctx}");
+            }
+            (None, None) => {}
+            _ => panic!("{ctx}: auto presence differs"),
+        }
+        assert_eq!(got.result_digest(), want.result_digest(), "{ctx}: digest");
+    }
+}
+
+/// Invariant 1: the facade over the `Local` transport changes nothing —
+/// bit-identical to driving the `TsqrService` by hand.
+#[test]
+fn local_client_is_bit_identical_to_the_service() {
+    // the service, driven directly (serial drain — the historical
+    // deterministic baseline)
+    let svc = builder().service_workers(0).queue_capacity(8).build_service().unwrap();
+    let requests = mixed_requests();
+    let inputs: Vec<MatrixHandle> = (0..requests.len())
+        .map(|i| {
+            svc.ingest_gaussian(&format!("A{i}"), 300 + 40 * i, 4 + i % 3, i as u64)
+                .unwrap()
+        })
+        .collect();
+    let handles: Vec<_> = inputs
+        .iter()
+        .zip(&requests)
+        .map(|(h, req)| svc.submit(h, req.clone()).unwrap())
+        .collect();
+    svc.drain_now();
+    let baseline: Vec<(Arc<Factorization>, Vec<f64>)> = handles
+        .iter()
+        .map(|h| {
+            let fact = h.wait().unwrap();
+            let q = fact
+                .q
+                .as_ref()
+                .map(|qh| svc.get_matrix(qh).unwrap().data)
+                .unwrap_or_default();
+            (fact, q)
+        })
+        .collect();
+
+    // the same manifest through the facade, concurrent workers
+    let client = builder().service_workers(2).queue_capacity(8).build_client().unwrap();
+    let via_client = run_client(&client);
+    assert_bit_identical(&baseline, &via_client);
+}
+
+/// Invariant 2 (the headline): worker_processes(2) × engine_shards(2)
+/// ≡ in-process engine_shards(4), bit for bit, fault draw for fault
+/// draw — the acceptance criterion's 8-job mixed manifest.
+#[test]
+fn cross_process_pool_is_bit_identical_to_in_process() {
+    let in_process = builder()
+        .engine_shards(4)
+        .service_workers(2)
+        .queue_capacity(8)
+        .build_client()
+        .unwrap();
+    assert_eq!((in_process.procs(), in_process.shards()), (1, 4));
+    let baseline = run_client(&in_process);
+    assert!(
+        baseline.iter().map(|(f, _)| f.stats.total_faults()).sum::<usize>() > 0,
+        "faults should fire at p=0.15 so the fault-draw comparison is non-vacuous"
+    );
+
+    let cross = builder()
+        .engine_shards(2)
+        .worker_processes(2)
+        .service_workers(2)
+        .queue_capacity(8)
+        .build_client()
+        .unwrap();
+    assert_eq!((cross.procs(), cross.shards()), (2, 4));
+    let via_procs = run_client(&cross);
+    assert_bit_identical(&baseline, &via_procs);
+
+    // global shard indices flatten (proc, local): every recorded shard
+    // is in range, and pinning addresses the flattened space
+    for (fact, _) in &via_procs {
+        assert!(fact.stats.shard < 4, "global shard {} out of range", fact.stats.shard);
+    }
+    let h = cross.ingest_gaussian("P", 240, 4, 99).unwrap();
+    let pinned = cross
+        .submit(&h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(3))
+        .unwrap();
+    let fact = pinned.wait().unwrap();
+    assert_eq!(fact.stats.shard, 3, "Pinned(3) must land on proc 1 / local shard 1");
+    assert_eq!(cross.shard_of(pinned.id()), Some(3));
+    // an out-of-range global pin errors at submission
+    assert!(cross
+        .submit(&h, FactorizationRequest::qr().pinned(4))
+        .is_err());
+}
+
+/// Remote lifecycle smoke over the wire: status, wall clock, eviction,
+/// and pinned ingestion staying off the home process.
+#[test]
+fn remote_jobs_expose_the_full_lifecycle() {
+    let client = builder()
+        .engine_shards(1)
+        .worker_processes(2)
+        .service_workers(1)
+        .build_client()
+        .unwrap();
+    // pinned ingest to global shard 1 = proc 1, and a pinned consumer
+    let h = client
+        .ingest_gaussian_placed("A", 400, 5, 3, Placement::Pinned(1))
+        .unwrap();
+    let job = client
+        .submit(&h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(1))
+        .unwrap();
+    let fact = job.wait().unwrap();
+    assert_eq!(job.status(), mrtsqr::JobStatus::Done);
+    assert!(job.wall_secs().unwrap() >= 0.0);
+    assert_eq!(fact.stats.shard, 1);
+    // Q flows back over the wire with a sane orthogonality error
+    let q = client.get_matrix(fact.q.as_ref().unwrap()).unwrap();
+    assert!(q.orthogonality_error() < 1e-10);
+    // eviction sweeps the namespace on the owning worker
+    assert!(client.evict_job(job.id()).unwrap() > 0);
+    assert!(client.get_matrix(fact.q.as_ref().unwrap()).is_err(), "evicted Q gone");
+    // cancel on a finished job is a no-op
+    assert!(!job.cancel());
+    // drain_now cannot reach across processes
+    assert!(client.drain_now().is_err());
+}
+
+/// Invariant 3: a killed worker fails only its own jobs — the
+/// process-level mirror of the poisoned-shard isolation test.
+#[test]
+fn killed_worker_fails_only_its_own_jobs() {
+    let client = builder()
+        .engine_shards(1)
+        .worker_processes(2)
+        .service_workers(1)
+        .build_client()
+        .unwrap();
+    let small = client.ingest_gaussian("S", 300, 4, 1).unwrap();
+    // big enough that it cannot complete in the instants before the
+    // kill lands
+    let big = client.ingest_gaussian("B", 200_000, 8, 2).unwrap();
+
+    let safe = client
+        .submit(&small, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(0))
+        .unwrap();
+    let doomed_running = client
+        .submit(&big, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(1))
+        .unwrap();
+    let doomed_queued = client
+        .submit(&small, FactorizationRequest::r_only().pinned(1))
+        .unwrap();
+    client.kill_worker(1).unwrap();
+
+    // the dead worker's jobs fail, naming the corpse…
+    let err = doomed_running.wait().unwrap_err();
+    assert!(format!("{err:#}").contains("worker process 1"), "{err:#}");
+    assert!(doomed_queued.wait().is_err());
+    assert_eq!(doomed_running.status(), mrtsqr::JobStatus::Failed);
+    // …while the surviving worker's job is untouched
+    let fact = safe.wait().unwrap();
+    assert_eq!(fact.stats.shard, 0);
+
+    // pinning to the corpse errors at submission; Auto routes around it
+    let err = client
+        .submit(&small, FactorizationRequest::r_only().pinned(1))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("dead"), "{err:#}");
+    let rerouted = client.submit(&small, FactorizationRequest::r_only()).unwrap();
+    let fact = rerouted.wait().unwrap();
+    assert_eq!(fact.stats.shard, 0, "auto placement must avoid the dead worker");
+}
