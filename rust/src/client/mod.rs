@@ -24,7 +24,7 @@
 //! # }
 //! ```
 //!
-//! # The two transports
+//! # The three transports
 //!
 //! * **`Local`** ([`LocalTransport`], `worker_processes(0)`, the
 //!   default): wraps an in-process sharded
@@ -38,24 +38,34 @@
 //!   stdin/stdout pipes. A reader thread per worker demultiplexes
 //!   replies and pushed job completions, so any number of in-flight
 //!   [`ClientJobHandle`]s share one pipe.
+//! * **`Tcp`** ([`TcpTransport`],
+//!   [`crate::session::SessionBuilder::connect`]): the same frames on
+//!   sockets, against one or more `mrtsqr serve --listen` hosts
+//!   ([`TcpServer`]). The wire version is negotiated at `Hello`
+//!   (mismatches get a clean error frame), every request carries a
+//!   reply deadline, and a dropped connection *parks* its jobs for
+//!   reconnect-and-resubmit instead of failing them — see the
+//!   [`net`] module docs for the full lifecycle.
 //!
 //! # The determinism contract
 //!
-//! In-process vs cross-process is *pure placement*. The client assigns
-//! every job a global [`JobId`] in submission order; a job's DFS
-//! namespace (`job-<id>/`) and fault-RNG stream depend only on that id;
-//! and the wire format ships every `f64` as exact bits. Hence the same
-//! manifest through `worker_processes(2) × engine_shards(2)` and
-//! through an in-process `engine_shards(4)` pool produces bit-identical
+//! In-process vs cross-process vs cross-network is *pure placement*.
+//! The client assigns every job a global [`JobId`] in submission
+//! order; a job's DFS namespace (`job-<id>/`) and fault-RNG stream
+//! depend only on that id; and the wire format ships every `f64` as
+//! exact bits. Hence the same manifest through
+//! `worker_processes(2) × engine_shards(2)`, through an in-process
+//! `engine_shards(4)` pool, or through `connect(addrs)` against
+//! serving hosts totalling four shards produces bit-identical
 //! `R`/`Q`/Σ/`virtual_secs`/fault draws and
 //! [`crate::session::Factorization::result_digest`]s per job —
-//! enforced by `rust/tests/client.rs` and by the CI cross-process
-//! batch-digest diff.
+//! enforced by `rust/tests/client.rs`, `rust/tests/tcp.rs`, and the
+//! CI cross-process and loopback-TCP batch-digest diffs.
 //!
 //! Global shard indices flatten the topology as
-//! `proc * engine_shards + local_shard`;
-//! [`crate::session::Placement::Pinned`] addresses that flattened
-//! space on every transport.
+//! `proc * engine_shards + local_shard` (for TCP, read "host" for
+//! "proc"); [`crate::session::Placement::Pinned`] addresses that
+//! flattened space on every transport.
 //!
 //! # Failure isolation
 //!
@@ -64,14 +74,24 @@
 //! isolation. Other workers keep serving, `Placement::Auto` routes
 //! around the corpse, and pinning to a dead worker's shards errors at
 //! submission. [`TsqrClient::kill_worker`] exists precisely to test
-//! this.
+//! this. On the TCP transport the same hook severs a host's
+//! *connection* instead (the server keeps running): jobs in flight
+//! there park, the keeper reconnects and resubmits them under their
+//! original ids, and determinism guarantees the recovered batch is
+//! bit-identical. Jobs are failed only with a precise reason —
+//! resubmission refused, host condemned after exhausting reconnect
+//! attempts, or client shutdown — never silently lost.
 
+pub mod net;
 pub mod process;
+pub mod tcp;
 pub mod transport;
 pub mod wire;
 pub mod worker;
 
+pub use net::TcpTransport;
 pub use process::ProcessTransport;
+pub use tcp::TcpServer;
 pub use transport::{LocalTransport, Transport, TransportJob};
 pub use wire::{WorkerConfig, WIRE_VERSION};
 

@@ -1,0 +1,1132 @@
+//! The network transport: a [`TcpTransport`] driving one or more
+//! `mrtsqr serve --listen` hosts over length-prefixed `MRTQ` frames on
+//! TCP sockets. This is [`super::process`] with the pipes swapped for
+//! sockets — same wire format, same demux reader per connection, same
+//! caller-assigned-id contract — plus the lifecycle a socket needs and
+//! a pipe does not: a connection can *come back*.
+//!
+//! # Topology
+//!
+//! Each address in `SessionBuilder::connect(&[addrs])` names one
+//! serving host: a `mrtsqr serve --listen` process running its own
+//! engine pool (its own DFS shards, virtual clocks, and
+//! [`crate::service::TsqrService`]). The server's topology wins — the
+//! `Hello` ack reports its `engine_shards`, and every host must report
+//! the same count so global shard `k` means
+//! `(host k / shards_per_host, local shard k % shards_per_host)`,
+//! exactly the pipe transport's flattening one layer up. Determinism
+//! is preserved by construction: a job's DFS namespace and fault
+//! stream depend only on its caller-assigned global id and every `f64`
+//! crosses the wire as exact bits, so `result_digest`s are
+//! bit-identical to an in-process or pipe-transport run.
+//!
+//! # Reconnect-and-resubmit
+//!
+//! A dead pipe means a dead child, so [`super::ProcessTransport`]
+//! fails a worker's in-flight jobs outright. A dropped socket usually
+//! means a network blip, so this transport *parks* the dropped
+//! connection's jobs instead (their handles stay pending, status
+//! `Queued`) and a background **keeper** thread reconnects, re-stages
+//! inputs (gaussian recipes replay as seeds; the staged-copy records
+//! for the host are dropped in case the server restarted), and
+//! resubmits every parked job under its original id. Resolution is
+//! first-writer-wins and the server retains finished jobs until
+//! `Evict`, so a resubmission that races a delivered result — or
+//! re-attaches to a job the server already finished — is harmless and
+//! bit-identical. A job is failed only with a precise reason: its
+//! resubmission was refused, the host was condemned after
+//! `max_reconnect_attempts` consecutive failed dials, or the client
+//! shut down first. Never silently lost.
+//!
+//! # Health checks and routing
+//!
+//! The keeper also pings every connected host each `health_interval`,
+//! recording round-trip latency. [`NetRouter`] lifts the PR-4/5
+//! placement rules across hosts: `Pinned(k)` maps to host
+//! `k / shards_per_host` (an error if that host is down), `Auto` picks
+//! the least-loaded live host (deterministic job-id tie-break) —
+//! skipping hosts marked *suspect* by a timed-out request and, when at
+//! least one brisk host is available, hosts whose last ping exceeded
+//! `lag_threshold`.
+//!
+//! # Shutdown
+//!
+//! Unlike a pipe worker, a server is not owned by its client: shutdown
+//! closes this client's sockets without sending `Shutdown`, and the
+//! server keeps serving everyone else.
+
+use super::process::{
+    decode_job_done, decode_job_fail, GaussianRecipe, Peer, ProcRouter, RemoteJob,
+    RemoteJobHandle, RemoteState, ReplySlot, RouteBook, CHUNK_ROWS,
+};
+use super::transport::{Transport, TransportJob};
+use super::wire::{self, Frame, Op, WireReader, WireWriter, WorkerConfig};
+use crate::coordinator::MatrixHandle;
+use crate::linalg::Matrix;
+use crate::service::{JobId, JobStatus};
+use crate::session::{FactorizationRequest, Placement};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufReader, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Knobs for the network transport, set through `SessionBuilder`.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct NetOptions {
+    /// Reply deadline per request round-trip (`None` = wait forever).
+    pub(crate) request_timeout: Option<Duration>,
+    /// Dial deadline per connection attempt.
+    pub(crate) connect_timeout: Duration,
+    /// Keeper cadence: health pings and reconnect attempts.
+    pub(crate) health_interval: Duration,
+    /// Ping round-trips above this mark a host *lagging*: Auto jobs
+    /// route around it while any brisk host is available.
+    pub(crate) lag_threshold: Duration,
+    /// Consecutive failed dials before a host is condemned and its
+    /// parked jobs are failed.
+    pub(crate) max_reconnect_attempts: usize,
+}
+
+impl Default for NetOptions {
+    fn default() -> NetOptions {
+        NetOptions {
+            request_timeout: Some(Duration::from_secs(30)),
+            connect_timeout: Duration::from_secs(5),
+            health_interval: Duration::from_millis(500),
+            lag_threshold: Duration::from_millis(250),
+            max_reconnect_attempts: 5,
+        }
+    }
+}
+
+// ----------------------------------------------------------------- router
+
+/// One host's routing inputs: `load` is `None` when the host cannot
+/// take work (disconnected, condemned, or suspect), `ping` its last
+/// health round-trip.
+pub(crate) struct HostHealth {
+    pub(crate) load: Option<usize>,
+    pub(crate) ping: Duration,
+}
+
+/// [`ProcRouter`] lifted across hosts, with latency awareness: Auto
+/// placement skips lagging hosts whenever a brisk one is available;
+/// pins ignore lag (a pin is a promise about *where*, not *when*).
+pub(crate) struct NetRouter {
+    inner: ProcRouter,
+    lag_threshold: Duration,
+}
+
+impl NetRouter {
+    pub(crate) fn new(nhosts: usize, shards_per_host: usize, lag_threshold: Duration) -> NetRouter {
+        NetRouter { inner: ProcRouter::new(nhosts, shards_per_host), lag_threshold }
+    }
+
+    pub(crate) fn total_shards(&self) -> usize {
+        self.inner.total_shards()
+    }
+
+    pub(crate) fn route(
+        &self,
+        id: JobId,
+        placement: Placement,
+        health: &[HostHealth],
+    ) -> Result<(usize, Placement)> {
+        if let Placement::Auto = placement {
+            let brisk: Vec<Option<usize>> = health
+                .iter()
+                .map(|h| h.load.filter(|_| h.ping <= self.lag_threshold))
+                .collect();
+            if brisk.iter().any(Option::is_some) {
+                return self.inner.route(id, placement, &brisk);
+            }
+            // every reachable host is lagging: a slow answer beats none
+        }
+        let reachable: Vec<Option<usize>> = health.iter().map(|h| h.load).collect();
+        self.inner.route(id, placement, &reachable)
+    }
+}
+
+// ------------------------------------------------------------- connection
+
+/// One job parked on (or in flight to) a host: everything needed to
+/// resubmit it verbatim after a reconnect.
+#[derive(Clone)]
+struct TrackedJob {
+    job: Arc<RemoteJob>,
+    input: MatrixHandle,
+    /// As sent: placement already mapped to the host-local index.
+    req: FactorizationRequest,
+}
+
+/// One serving host's connection state. The socket write half lives
+/// behind `stream` (`None` while disconnected); a reader thread owns
+/// the read half and demuxes frames exactly like the pipe transport's.
+/// `epoch` counts connections so a stale reader of a replaced socket
+/// cannot tear down its successor.
+struct HostConn {
+    index: usize,
+    addr: String,
+    book: Arc<RouteBook>,
+    /// Set from the first `HelloAck` (the server's topology wins);
+    /// readers remap worker-local shard indices through it.
+    shards_per_host: Arc<AtomicUsize>,
+    stream: Mutex<Option<TcpStream>>,
+    epoch: AtomicU64,
+    /// Correlation ids start at 1: 0 tags pushed frames.
+    next_req: AtomicU64,
+    pending: Mutex<HashMap<u64, Arc<ReplySlot>>>,
+    /// In-flight *and parked* jobs, keyed by id (ordered so
+    /// resubmission walks ids deterministically).
+    jobs: Mutex<BTreeMap<u64, TrackedJob>>,
+    connected: AtomicBool,
+    /// Condemned: reconnect attempts exhausted, parked jobs failed.
+    dead: AtomicBool,
+    /// A request timed out against this host — skipped by Auto routing
+    /// until its next frame arrives (mirrors the pipe transport).
+    suspect: AtomicBool,
+    load: AtomicUsize,
+    /// Last health-ping round-trip, in nanoseconds.
+    ping_nanos: AtomicU64,
+    reconnect_failures: AtomicUsize,
+    reader: Mutex<Option<JoinHandle<()>>>,
+    request_timeout: Option<Duration>,
+    connect_timeout: Duration,
+}
+
+impl HostConn {
+    fn new(
+        index: usize,
+        addr: String,
+        book: Arc<RouteBook>,
+        shards_per_host: Arc<AtomicUsize>,
+        opts: &NetOptions,
+    ) -> Arc<HostConn> {
+        Arc::new(HostConn {
+            index,
+            addr,
+            book,
+            shards_per_host,
+            stream: Mutex::new(None),
+            epoch: AtomicU64::new(0),
+            next_req: AtomicU64::new(1),
+            pending: Mutex::new(HashMap::new()),
+            jobs: Mutex::new(BTreeMap::new()),
+            connected: AtomicBool::new(false),
+            dead: AtomicBool::new(false),
+            suspect: AtomicBool::new(false),
+            load: AtomicUsize::new(0),
+            ping_nanos: AtomicU64::new(0),
+            reconnect_failures: AtomicUsize::new(0),
+            reader: Mutex::new(None),
+            request_timeout: opts.request_timeout,
+            connect_timeout: opts.connect_timeout,
+        })
+    }
+
+    /// Dial, install the socket under a fresh epoch, spawn the demux
+    /// reader, and run the `Hello` handshake. Returns the topology the
+    /// ack reported: `(shards, workers, capacity, host_threads,
+    /// backend)`.
+    fn establish(
+        self: &Arc<Self>,
+        cfg: &WorkerConfig,
+    ) -> Result<(usize, usize, usize, usize, String)> {
+        // the previous connection's reader (if any) is exiting — its
+        // socket is shut down; reclaim the handle before spawning anew
+        self.join_reader();
+        let target = self
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {:?}", self.addr))?
+            .next()
+            .ok_or_else(|| anyhow!("address {:?} resolved to nothing", self.addr))?;
+        let stream = TcpStream::connect_timeout(&target, self.connect_timeout)
+            .with_context(|| format!("connecting to {} (host {})", self.addr, self.index))?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_write_timeout(self.request_timeout);
+        let read_half = stream.try_clone().context("cloning the socket's read half")?;
+        let epoch = {
+            let mut guard = self.stream.lock().expect("host stream");
+            let epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+            *guard = Some(stream);
+            self.connected.store(true, Ordering::SeqCst);
+            self.suspect.store(false, Ordering::SeqCst);
+            epoch
+        };
+        let reader = {
+            let host = self.clone();
+            std::thread::Builder::new()
+                .name(format!("mrtsqr-net-demux-{}", self.index))
+                .spawn(move || reader_loop(&host, read_half, epoch))
+                .expect("spawn net demux reader")
+        };
+        *self.reader.lock().expect("reader slot") = Some(reader);
+
+        let handshake = (|| -> Result<(usize, usize, usize, usize, String)> {
+            let mut w = WireWriter::new();
+            w.config(cfg);
+            let ack = self
+                .request(Op::Hello, &w.into_bytes())
+                .with_context(|| format!("handshaking host {} ({})", self.index, self.addr))?;
+            ensure!(
+                ack.op == Op::HelloAck,
+                "host {}: expected HelloAck, got {:?}",
+                self.index,
+                ack.op
+            );
+            let mut r = WireReader::new(&ack.payload);
+            let shards = r.usize()?;
+            let workers = r.usize()?;
+            let capacity = r.usize()?;
+            let host_threads = r.usize()?;
+            let backend = r.str()?;
+            r.finish()?;
+            Ok((shards, workers, capacity, host_threads, backend))
+        })();
+        if handshake.is_err() {
+            self.on_disconnect(None, "handshake failed");
+        }
+        handshake
+    }
+
+    /// Send one request frame and block for its reply, with the same
+    /// no-deadlock shape as the pipe transport's (slot registered
+    /// before the write; a dying reader fails every registered slot).
+    fn request(&self, op: Op, payload: &[u8]) -> Result<Frame> {
+        let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
+        let slot = Arc::new(ReplySlot::new());
+        self.pending.lock().expect("pending map").insert(req_id, slot.clone());
+        let write_result = {
+            let mut stream = self.stream.lock().expect("host stream");
+            match stream.as_mut() {
+                None => Err(anyhow!("not connected")),
+                Some(s) => wire::write_frame(s, op, req_id, payload)
+                    .and_then(|()| s.flush().map_err(Into::into)),
+            }
+        };
+        if let Err(err) = write_result {
+            self.pending.lock().expect("pending map").remove(&req_id);
+            bail!("host {} ({}): {err:#}", self.index, self.addr);
+        }
+        let frame = match slot.take(self.request_timeout) {
+            Some(reply) => reply?,
+            None => {
+                self.pending.lock().expect("pending map").remove(&req_id);
+                self.suspect.store(true, Ordering::SeqCst);
+                bail!(
+                    "host {} ({}) did not answer {:?} within {:?} — marked suspect; \
+                     it rejoins Auto routing when it speaks again",
+                    self.index,
+                    self.addr,
+                    op,
+                    self.request_timeout.expect("deadline implies a timeout")
+                );
+            }
+        };
+        if frame.op == Op::Err {
+            let msg = WireReader::new(&frame.payload)
+                .str()
+                .unwrap_or_else(|_| "malformed error reply".into());
+            bail!("host {} ({}): {msg}", self.index, self.addr);
+        }
+        Ok(frame)
+    }
+
+    /// Tear down the current connection (idempotent): close the
+    /// socket, fail pending request waiters — and *park* this host's
+    /// jobs untouched for the keeper to resubmit. `epoch` guards a
+    /// stale reader of an already-replaced connection.
+    fn on_disconnect(&self, epoch: Option<u64>, why: &str) {
+        {
+            let mut guard = self.stream.lock().expect("host stream");
+            if let Some(e) = epoch {
+                if self.epoch.load(Ordering::SeqCst) != e {
+                    return;
+                }
+            }
+            if let Some(s) = guard.take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            self.connected.store(false, Ordering::SeqCst);
+        }
+        let pending: Vec<Arc<ReplySlot>> =
+            self.pending.lock().expect("pending map").drain().map(|(_, s)| s).collect();
+        for slot in pending {
+            slot.fill(Err(anyhow!("host {} ({}): {why}", self.index, self.addr)));
+        }
+    }
+
+    /// Condemn the host for good: no more reconnects, and every parked
+    /// job fails with a precise reason.
+    fn condemn(&self, why: &str) {
+        self.dead.store(true, Ordering::SeqCst);
+        self.on_disconnect(None, why);
+        let parked = std::mem::take(&mut *self.jobs.lock().expect("jobs map"));
+        for (_, t) in parked {
+            self.load.fetch_sub(1, Ordering::Relaxed);
+            t.job.resolve(RemoteState::Failed {
+                msg: format!("host {} ({}) {why}", self.index, self.addr),
+                wall_secs: None,
+            });
+        }
+    }
+
+    fn join_reader(&self) {
+        let handle = self.reader.lock().expect("reader slot").take();
+        if let Some(handle) = handle {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Peer for HostConn {
+    fn request(&self, op: Op, payload: &[u8]) -> Result<Frame> {
+        HostConn::request(self, op, payload)
+    }
+
+    fn offline_status(&self) -> JobStatus {
+        // a dropped connection parks its jobs for resubmission: they
+        // are queued, not failed (a condemned host resolves them
+        // terminally, so this fallback never reports a lie for long)
+        JobStatus::Queued
+    }
+}
+
+/// The demux loop for one host connection — the socket twin of the
+/// pipe transport's, ending in *park* (via [`HostConn::on_disconnect`])
+/// instead of fail-all.
+fn reader_loop(host: &Arc<HostConn>, stream: TcpStream, epoch: u64) {
+    let mut input = BufReader::new(stream);
+    let why = loop {
+        let frame = match wire::read_frame(&mut input) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => break "connection closed".to_string(),
+            Err(err) => break format!("connection desynchronized: {err:#}"),
+        };
+        host.suspect.store(false, Ordering::SeqCst);
+        match frame.op {
+            Op::JobDone => match decode_job_done(&frame.payload) {
+                Ok((id, wall_secs, mut fact)) => {
+                    let spp = host.shards_per_host.load(Ordering::SeqCst).max(1);
+                    let global = host.index * spp + fact.stats.shard;
+                    fact.stats.shard = global;
+                    if let Some(entry) =
+                        host.book.placements.lock().expect("placements").get_mut(&id)
+                    {
+                        entry.1 = Some(global);
+                    }
+                    if let Some(q) = &fact.q {
+                        host.book
+                            .staged
+                            .lock()
+                            .expect("staged map")
+                            .entry(q.file.clone())
+                            .or_default()
+                            .insert(host.index);
+                    }
+                    if let Some(t) = host.jobs.lock().expect("jobs map").remove(&id) {
+                        host.load.fetch_sub(1, Ordering::Relaxed);
+                        t.job.resolve(RemoteState::Done { fact: Arc::new(fact), wall_secs });
+                    }
+                }
+                Err(err) => break format!("sent a malformed JobDone: {err:#}"),
+            },
+            Op::JobFail => match decode_job_fail(&frame.payload) {
+                Ok((id, status, wall_secs, msg)) => {
+                    if let Some(t) = host.jobs.lock().expect("jobs map").remove(&id) {
+                        host.load.fetch_sub(1, Ordering::Relaxed);
+                        let state = if status == JobStatus::Cancelled {
+                            RemoteState::Cancelled
+                        } else {
+                            RemoteState::Failed { msg, wall_secs }
+                        };
+                        t.job.resolve(state);
+                    }
+                }
+                Err(err) => break format!("sent a malformed JobFail: {err:#}"),
+            },
+            _ => {
+                let slot = host.pending.lock().expect("pending map").remove(&frame.req_id);
+                if let Some(slot) = slot {
+                    slot.fill(Ok(frame));
+                }
+            }
+        }
+    };
+    host.on_disconnect(Some(epoch), &why);
+}
+
+// --------------------------------------------------------------- the core
+
+/// Everything the transport and its keeper thread share.
+struct NetCore {
+    hosts: Vec<Arc<HostConn>>,
+    router: NetRouter,
+    shards_per_host: usize,
+    book: Arc<RouteBook>,
+    recipes: Mutex<HashMap<String, GaussianRecipe>>,
+    scales: Mutex<HashMap<String, f64>>,
+    /// The cluster recipe re-sent as `Hello` on every reconnect (a
+    /// prebuilt server ignores its contents, but the handshake still
+    /// negotiates the wire version and reports topology).
+    cfg: WorkerConfig,
+    opts: NetOptions,
+    workers_per_host: usize,
+    capacity: usize,
+    host_threads: usize,
+    backend_desc: String,
+    /// Keeper stop flag + condvar: shutdown interrupts the sleep
+    /// instead of waiting out a full health interval.
+    stop: Mutex<bool>,
+    stop_cv: Condvar,
+}
+
+impl NetCore {
+    fn health(&self) -> Vec<HostHealth> {
+        self.hosts
+            .iter()
+            .map(|h| HostHealth {
+                load: (h.connected.load(Ordering::SeqCst)
+                    && !h.dead.load(Ordering::SeqCst)
+                    && !h.suspect.load(Ordering::SeqCst))
+                .then(|| h.load.load(Ordering::Relaxed)),
+                ping: Duration::from_nanos(h.ping_nanos.load(Ordering::Relaxed)),
+            })
+            .collect()
+    }
+
+    fn is_staged(&self, name: &str, hidx: usize) -> bool {
+        self.book
+            .staged
+            .lock()
+            .expect("staged map")
+            .get(name)
+            .is_some_and(|hosts| hosts.contains(&hidx))
+    }
+
+    fn mark_staged(&self, name: &str, hidx: usize, exclusive: bool) {
+        let mut staged = self.book.staged.lock().expect("staged map");
+        let entry = staged.entry(name.to_string()).or_default();
+        if exclusive {
+            entry.clear();
+        }
+        entry.insert(hidx);
+    }
+
+    /// Ship an in-memory matrix to one host in bounded chunks.
+    fn send_matrix(
+        &self,
+        host: &HostConn,
+        name: &str,
+        a: &Matrix,
+        placement: Placement,
+    ) -> Result<MatrixHandle> {
+        let mut w = WireWriter::new();
+        w.str(name);
+        w.u64(a.cols as u64);
+        w.placement(placement);
+        host.request(Op::IngestBegin, &w.into_bytes())?;
+        let mut row = 0;
+        while row < a.rows {
+            let take = CHUNK_ROWS.min(a.rows - row);
+            let mut w = WireWriter::new();
+            w.chunk(name, row as u64, a.cols, &a.data[row * a.cols..(row + take) * a.cols]);
+            host.request(Op::IngestChunk, &w.into_bytes())?;
+            row += take;
+        }
+        let mut w = WireWriter::new();
+        w.str(name);
+        let reply = host.request(Op::IngestEnd, &w.into_bytes())?;
+        ensure!(reply.op == Op::Handle, "expected Handle, got {:?}", reply.op);
+        let mut r = WireReader::new(&reply.payload);
+        let handle = r.handle()?;
+        r.finish()?;
+        Ok(handle)
+    }
+
+    /// Make `handle`'s file readable on host `hidx` — the pipe
+    /// transport's staging logic verbatim (recipes replay as seeds,
+    /// outputs are fetched back from a host that holds them).
+    fn ensure_staged(&self, hidx: usize, handle: &MatrixHandle) -> Result<()> {
+        if self.is_staged(&handle.file, hidx) {
+            return Ok(());
+        }
+        let host = &self.hosts[hidx];
+        let recipe = self.recipes.lock().expect("recipes").get(&handle.file).copied();
+        if let Some(GaussianRecipe { rows, cols, seed }) = recipe {
+            let mut w = WireWriter::new();
+            w.str(&handle.file);
+            w.u64(rows as u64);
+            w.u64(cols as u64);
+            w.u64(seed);
+            w.placement(Placement::Auto);
+            host.request(Op::IngestGaussian, &w.into_bytes())?;
+        } else {
+            let rows = self.fetch_matrix(handle)?;
+            self.send_matrix(host, &handle.file, &rows, Placement::Auto)?;
+        }
+        let scale = self.scales.lock().expect("scales").get(&handle.file).copied();
+        if let Some(scale) = scale {
+            let mut w = WireWriter::new();
+            w.str(&handle.file);
+            w.f64(scale);
+            host.request(Op::SetScale, &w.into_bytes())?;
+        }
+        self.mark_staged(&handle.file, hidx, false);
+        Ok(())
+    }
+
+    fn fetch_matrix(&self, handle: &MatrixHandle) -> Result<Matrix> {
+        let known: Vec<usize> = self
+            .book
+            .staged
+            .lock()
+            .expect("staged map")
+            .get(&handle.file)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default();
+        let mut order: Vec<usize> = known;
+        for i in 0..self.hosts.len() {
+            if !order.contains(&i) {
+                order.push(i);
+            }
+        }
+        let mut last_err = anyhow!("no reachable host holds {:?}", handle.file);
+        for hidx in order {
+            let host = &self.hosts[hidx];
+            if !host.connected.load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut w = WireWriter::new();
+            w.handle(handle);
+            match host.request(Op::FetchMatrix, &w.into_bytes()) {
+                Ok(reply) => {
+                    ensure!(
+                        reply.op == Op::MatrixData,
+                        "expected MatrixData, got {:?}",
+                        reply.op
+                    );
+                    let mut r = WireReader::new(&reply.payload);
+                    let m = r.matrix()?;
+                    r.finish()?;
+                    self.mark_staged(&handle.file, hidx, false);
+                    return Ok(m);
+                }
+                Err(err) => last_err = err,
+            }
+        }
+        Err(last_err)
+    }
+
+    fn ingest_target(&self, placement: Placement) -> Result<(usize, Placement)> {
+        match placement {
+            Placement::Auto => Ok((0, Placement::Auto)),
+            Placement::Pinned(k) => {
+                ensure!(
+                    k < self.router.total_shards(),
+                    "ingest pinned to global shard {k}, but the client has {}",
+                    self.router.total_shards()
+                );
+                let hidx = k / self.shards_per_host;
+                ensure!(
+                    self.hosts[hidx].connected.load(Ordering::SeqCst),
+                    "ingest pinned to shard {k}, but host {hidx} is not connected"
+                );
+                Ok((hidx, Placement::Pinned(k % self.shards_per_host)))
+            }
+        }
+    }
+
+    /// One reconnect attempt for a disconnected host (keeper-only).
+    fn revive(&self, host: &Arc<HostConn>) {
+        match host.establish(&self.cfg) {
+            Ok((shards, ..)) => {
+                if shards != self.shards_per_host {
+                    host.condemn(&format!(
+                        "came back serving {shards} shard(s), expected {} — \
+                         topology drift breaks global shard indexing",
+                        self.shards_per_host
+                    ));
+                    return;
+                }
+                host.reconnect_failures.store(0, Ordering::SeqCst);
+                // the server may have restarted and lost its DFS:
+                // forget this host's staged copies so resubmission
+                // re-stages every input it needs (gaussian recipes
+                // replay as seeds — identical records by construction)
+                for hosts in self.book.staged.lock().expect("staged map").values_mut() {
+                    hosts.remove(&host.index);
+                }
+                self.resubmit_parked(host);
+            }
+            Err(err) => {
+                let failures = host.reconnect_failures.fetch_add(1, Ordering::SeqCst) + 1;
+                if failures >= self.opts.max_reconnect_attempts {
+                    host.condemn(&format!(
+                        "is unreachable after {failures} reconnect attempt(s): {err:#}"
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Resubmit every job parked on a freshly reconnected host under
+    /// its original id. The server retains finished jobs until
+    /// `Evict`, so a job it already completed re-attaches and pushes
+    /// the identical result; a job it never saw (or lost to a restart)
+    /// re-runs bit-identically — its namespace and fault stream depend
+    /// only on the id. A job whose resubmission fails is failed with a
+    /// precise reason, never dropped on the floor.
+    fn resubmit_parked(&self, host: &Arc<HostConn>) {
+        let parked: Vec<(u64, TrackedJob)> = host
+            .jobs
+            .lock()
+            .expect("jobs map")
+            .iter()
+            .map(|(id, t)| (*id, t.clone()))
+            .collect();
+        for (id, t) in parked {
+            if t.job.terminal_status().is_some() {
+                continue;
+            }
+            let outcome = self.ensure_staged(host.index, &t.input).and_then(|()| {
+                let mut w = WireWriter::new();
+                w.u64(id);
+                w.handle(&t.input);
+                w.request(&t.req);
+                host.request(Op::Submit, &w.into_bytes()).map(|_| ())
+            });
+            if let Err(err) = outcome {
+                if host.jobs.lock().expect("jobs map").remove(&id).is_some() {
+                    host.load.fetch_sub(1, Ordering::Relaxed);
+                    t.job.resolve(RemoteState::Failed {
+                        msg: format!(
+                            "was parked on host {} ({}) when its connection dropped, \
+                             and resubmission after reconnect failed: {err:#}",
+                            host.index, host.addr
+                        ),
+                        wall_secs: None,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// The keeper: pings connected hosts (liveness + latency for the
+/// router's lag mask) and revives disconnected ones, every
+/// `health_interval`, until shutdown flips the stop flag.
+fn keeper_loop(core: &Arc<NetCore>) {
+    loop {
+        {
+            let stopped = core.stop.lock().expect("keeper stop flag");
+            let (stopped, _) = core
+                .stop_cv
+                .wait_timeout(stopped, core.opts.health_interval)
+                .expect("keeper stop flag");
+            if *stopped {
+                return;
+            }
+        }
+        for host in &core.hosts {
+            if host.dead.load(Ordering::SeqCst) {
+                continue;
+            }
+            if host.connected.load(Ordering::SeqCst) {
+                let started = Instant::now();
+                match host.request(Op::Ping, &[]) {
+                    Ok(frame) if frame.op == Op::Pong => {
+                        let nanos = started.elapsed().as_nanos().min(u128::from(u64::MAX));
+                        host.ping_nanos.store(nanos as u64, Ordering::Relaxed);
+                    }
+                    Ok(frame) => {
+                        host.on_disconnect(
+                            None,
+                            &format!("health ping answered with {:?}", frame.op),
+                        );
+                    }
+                    Err(err) => {
+                        host.on_disconnect(None, &format!("health ping failed: {err:#}"));
+                    }
+                }
+            } else {
+                core.revive(host);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- transport
+
+/// The network [`Transport`]: see the [module docs](self).
+pub struct TcpTransport {
+    core: Arc<NetCore>,
+    keeper: Mutex<Option<JoinHandle<()>>>,
+    down: AtomicBool,
+}
+
+impl TcpTransport {
+    /// Dial every address, handshake each host, validate the shared
+    /// shard count, and start the keeper. Any host failing the initial
+    /// dial fails the whole connect (reconnects only cover drops
+    /// *after* a topology was established).
+    pub(crate) fn connect(
+        addrs: &[String],
+        cfg: WorkerConfig,
+        opts: NetOptions,
+    ) -> Result<TcpTransport> {
+        ensure!(!addrs.is_empty(), "connect wants at least one server address");
+        let book = Arc::new(RouteBook::default());
+        let shards_per_host = Arc::new(AtomicUsize::new(0));
+        let hosts: Vec<Arc<HostConn>> = addrs
+            .iter()
+            .enumerate()
+            .map(|(index, addr)| {
+                HostConn::new(index, addr.clone(), book.clone(), shards_per_host.clone(), &opts)
+            })
+            .collect();
+        let teardown = |hosts: &[Arc<HostConn>]| {
+            for host in hosts {
+                host.on_disconnect(None, "client startup failed");
+                host.join_reader();
+            }
+        };
+        let mut topo = None;
+        for host in &hosts {
+            let (shards, workers, capacity, host_threads, backend) =
+                match host.establish(&cfg) {
+                    Ok(t) => t,
+                    Err(err) => {
+                        teardown(&hosts);
+                        return Err(err);
+                    }
+                };
+            let known = shards_per_host.load(Ordering::SeqCst);
+            if known == 0 {
+                shards_per_host.store(shards.max(1), Ordering::SeqCst);
+            } else if shards != known {
+                let (index, addr) = (host.index, host.addr.clone());
+                teardown(&hosts);
+                bail!(
+                    "host {index} ({addr}) serves {shards} shard(s) but host 0 serves \
+                     {known} — every host must run the same engine-shard count so \
+                     global shard indices mean the same thing everywhere"
+                );
+            }
+            topo = Some((workers, capacity, host_threads, backend));
+        }
+        let (workers_per_host, capacity, host_threads, backend_desc) =
+            topo.expect("at least one host");
+        let spp = shards_per_host.load(Ordering::SeqCst).max(1);
+        let core = Arc::new(NetCore {
+            router: NetRouter::new(hosts.len(), spp, opts.lag_threshold),
+            shards_per_host: spp,
+            hosts,
+            book,
+            recipes: Mutex::new(HashMap::new()),
+            scales: Mutex::new(HashMap::new()),
+            cfg,
+            opts,
+            workers_per_host,
+            capacity,
+            host_threads,
+            backend_desc,
+            stop: Mutex::new(false),
+            stop_cv: Condvar::new(),
+        });
+        let keeper = {
+            let core = core.clone();
+            std::thread::Builder::new()
+                .name("mrtsqr-net-keeper".into())
+                .spawn(move || keeper_loop(&core))
+                .expect("spawn net keeper")
+        };
+        Ok(TcpTransport { core, keeper: Mutex::new(Some(keeper)), down: AtomicBool::new(false) })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn procs(&self) -> usize {
+        self.core.hosts.len()
+    }
+
+    fn shards(&self) -> usize {
+        self.core.router.total_shards()
+    }
+
+    fn workers(&self) -> usize {
+        self.core.workers_per_host * self.core.hosts.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.core.capacity
+    }
+
+    fn backend_desc(&self) -> String {
+        self.core.backend_desc.clone()
+    }
+
+    fn host_threads(&self) -> usize {
+        self.core.host_threads
+    }
+
+    fn ingest_gaussian(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        placement: Placement,
+    ) -> Result<MatrixHandle> {
+        let core = &self.core;
+        let (hidx, local) = core.ingest_target(placement)?;
+        let mut w = WireWriter::new();
+        w.str(name);
+        w.u64(rows as u64);
+        w.u64(cols as u64);
+        w.u64(seed);
+        w.placement(local);
+        let reply = core.hosts[hidx].request(Op::IngestGaussian, &w.into_bytes())?;
+        ensure!(reply.op == Op::Handle, "expected Handle, got {:?}", reply.op);
+        let mut r = WireReader::new(&reply.payload);
+        let handle = r.handle()?;
+        r.finish()?;
+        core.recipes
+            .lock()
+            .expect("recipes")
+            .insert(name.to_string(), GaussianRecipe { rows, cols, seed });
+        core.mark_staged(name, hidx, true);
+        Ok(handle)
+    }
+
+    fn ingest_matrix(
+        &self,
+        name: &str,
+        a: &Matrix,
+        placement: Placement,
+    ) -> Result<MatrixHandle> {
+        let core = &self.core;
+        let (hidx, local) = core.ingest_target(placement)?;
+        let handle = core.send_matrix(&core.hosts[hidx], name, a, local)?;
+        core.recipes.lock().expect("recipes").remove(name);
+        core.mark_staged(name, hidx, true);
+        Ok(handle)
+    }
+
+    fn submit(
+        &self,
+        id: JobId,
+        input: &MatrixHandle,
+        mut req: FactorizationRequest,
+    ) -> Result<Box<dyn TransportJob>> {
+        let core = &self.core;
+        let (hidx, local) = core.router.route(id, req.placement, &core.health())?;
+        {
+            let mut placements = core.book.placements.lock().expect("placements");
+            if placements.contains_key(&id.0) {
+                bail!("job id {id} is already in use by a live (unevicted) job");
+            }
+            placements.insert(id.0, (hidx, None));
+        }
+        if let Err(err) = core.ensure_staged(hidx, input) {
+            core.book.placements.lock().expect("placements").remove(&id.0);
+            return Err(err);
+        }
+        req.placement = local;
+        let host = core.hosts[hidx].clone();
+        let job = Arc::new(RemoteJob::new(id, req.label.clone()));
+        host.jobs.lock().expect("jobs map").insert(
+            id.0,
+            TrackedJob { job: job.clone(), input: input.clone(), req: req.clone() },
+        );
+        host.load.fetch_add(1, Ordering::Relaxed);
+        let mut w = WireWriter::new();
+        w.u64(id.0);
+        w.handle(input);
+        w.request(&req);
+        match host.request(Op::Submit, &w.into_bytes()) {
+            Ok(_) => Ok(Box::new(RemoteJobHandle { job, conn: host })),
+            Err(err) => {
+                // a submit the host never acknowledged: roll back
+                // rather than park — the caller holds the error
+                if host.jobs.lock().expect("jobs map").remove(&id.0).is_some() {
+                    host.load.fetch_sub(1, Ordering::Relaxed);
+                }
+                core.book.placements.lock().expect("placements").remove(&id.0);
+                Err(err)
+            }
+        }
+    }
+
+    fn get_matrix(&self, handle: &MatrixHandle) -> Result<Matrix> {
+        self.core.fetch_matrix(handle)
+    }
+
+    fn set_scale(&self, name: &str, scale: f64) -> Result<()> {
+        self.core.scales.lock().expect("scales").insert(name.to_string(), scale);
+        for host in &self.core.hosts {
+            // a disconnected host re-stages (and re-scales) everything
+            // it needs after reconnect — skipping it here is safe
+            if !host.connected.load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut w = WireWriter::new();
+            w.str(name);
+            w.f64(scale);
+            host.request(Op::SetScale, &w.into_bytes())?;
+        }
+        Ok(())
+    }
+
+    fn evict_job(&self, id: JobId) -> Result<usize> {
+        let core = &self.core;
+        if !core.book.placements.lock().expect("placements").contains_key(&id.0) {
+            return Ok(0);
+        }
+        // sweep every connected host (chained jobs may have re-staged
+        // outputs anywhere); this also releases the server-side job
+        // registry entry that backed reconnect re-attachment
+        let mut swept = 0;
+        for host in &core.hosts {
+            if !host.connected.load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut w = WireWriter::new();
+            w.u64(id.0);
+            if let Ok(reply) = host.request(Op::Evict, &w.into_bytes()) {
+                let mut r = WireReader::new(&reply.payload);
+                swept += r.usize().unwrap_or(0);
+            }
+        }
+        core.book.placements.lock().expect("placements").remove(&id.0);
+        let ns = format!("job-{}/", id.0);
+        core.book
+            .staged
+            .lock()
+            .expect("staged map")
+            .retain(|name, _| !name.contains(&ns));
+        Ok(swept)
+    }
+
+    fn drain_now(&self) -> Result<usize> {
+        bail!(
+            "manual drain needs the caller's thread inside the engine pool — \
+             impossible across the network; use service workers (the default)"
+        )
+    }
+
+    fn shard_of(&self, id: JobId) -> Option<usize> {
+        self.core
+            .book
+            .placements
+            .lock()
+            .expect("placements")
+            .get(&id.0)
+            .and_then(|(_, shard)| *shard)
+    }
+
+    /// Fault-injection hook, reinterpreted for the network: sever the
+    /// connection to host `proc` as if the network blipped. The server
+    /// process keeps running; the keeper reconnects and resubmits the
+    /// parked jobs (this is what the mid-batch-kill determinism test
+    /// exercises).
+    fn kill_worker(&self, proc: usize) -> Result<()> {
+        let host = self
+            .core
+            .hosts
+            .get(proc)
+            .ok_or_else(|| anyhow!("no host {proc} (client has {})", self.core.hosts.len()))?;
+        ensure!(
+            host.connected.load(Ordering::SeqCst),
+            "host {proc} is already disconnected"
+        );
+        host.on_disconnect(None, "connection severed by the client (fault injection)");
+        Ok(())
+    }
+
+    fn shutdown(&self) {
+        if self.down.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // stop the keeper first so nothing reconnects behind us
+        {
+            let mut stopped = self.core.stop.lock().expect("keeper stop flag");
+            *stopped = true;
+            self.core.stop_cv.notify_all();
+        }
+        if let Some(keeper) = self.keeper.lock().expect("keeper handle").take() {
+            let _ = keeper.join();
+        }
+        for host in &self.core.hosts {
+            // deliberately not Op::Shutdown: the server outlives its
+            // clients (it may be serving others right now)
+            host.on_disconnect(None, "client shut down");
+            host.join_reader();
+            let parked = std::mem::take(&mut *host.jobs.lock().expect("jobs map"));
+            for (_, t) in parked {
+                host.load.fetch_sub(1, Ordering::Relaxed);
+                t.job.resolve(RemoteState::Failed {
+                    msg: format!(
+                        "the client shut down while the job was parked for \
+                         resubmission to host {} ({})",
+                        host.index, host.addr
+                    ),
+                    wall_secs: None,
+                });
+            }
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn health(entries: &[(Option<usize>, u64)]) -> Vec<HostHealth> {
+        entries
+            .iter()
+            .map(|&(load, ping_ms)| HostHealth { load, ping: Duration::from_millis(ping_ms) })
+            .collect()
+    }
+
+    #[test]
+    fn auto_routes_around_lagging_hosts_when_a_brisk_one_exists() {
+        let router = NetRouter::new(3, 2, Duration::from_millis(100));
+        // host 0 idle but lagging; host 2 busier but brisk: auto skips 0
+        let h = health(&[(Some(0), 500), (None, 0), (Some(3), 5)]);
+        let (host, _) = router.route(JobId(1), Placement::Auto, &h).unwrap();
+        assert_eq!(host, 2, "lagging host skipped while a brisk one lives");
+    }
+
+    #[test]
+    fn auto_falls_back_to_lagging_hosts_when_all_lag() {
+        let router = NetRouter::new(2, 1, Duration::from_millis(100));
+        let h = health(&[(Some(7), 500), (Some(2), 900)]);
+        let (host, _) = router.route(JobId(4), Placement::Auto, &h).unwrap();
+        assert_eq!(host, 1, "a slow answer beats none: least-loaded among laggards");
+    }
+
+    #[test]
+    fn pins_ignore_lag_but_not_death() {
+        let router = NetRouter::new(2, 2, Duration::from_millis(100));
+        let h = health(&[(Some(0), 5), (Some(0), 900)]);
+        // global shard 3 → host 1, local shard 1 — lag is no obstacle
+        assert_eq!(
+            router.route(JobId(9), Placement::Pinned(3), &h).unwrap(),
+            (1, Placement::Pinned(1))
+        );
+        let h = health(&[(Some(0), 5), (None, 0)]);
+        assert!(router.route(JobId(9), Placement::Pinned(3), &h).is_err());
+    }
+}

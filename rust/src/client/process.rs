@@ -49,10 +49,11 @@ use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Rows per [`wire::Op::IngestChunk`] frame when shipping an in-memory
 /// matrix (bounds per-frame memory, mirrors the ingestion batch size).
-const CHUNK_ROWS: usize = 4096;
+pub(crate) const CHUNK_ROWS: usize = 4096;
 
 /// Locate the `mrtsqr` binary to spawn as a worker when the builder did
 /// not name one: an explicit `MRTSQR_WORKER_BIN`, the current
@@ -87,28 +88,48 @@ pub(crate) fn default_worker_binary() -> Result<PathBuf> {
 // ------------------------------------------------------------- reply slot
 
 /// One blocked request's reply cell, filled by the reader thread.
-struct ReplySlot {
+/// Shared by the pipe and TCP transports.
+pub(crate) struct ReplySlot {
     cell: Mutex<Option<Result<Frame>>>,
     ready: Condvar,
 }
 
 impl ReplySlot {
-    fn new() -> ReplySlot {
+    pub(crate) fn new() -> ReplySlot {
         ReplySlot { cell: Mutex::new(None), ready: Condvar::new() }
     }
 
-    fn fill(&self, value: Result<Frame>) {
+    pub(crate) fn fill(&self, value: Result<Frame>) {
         *self.cell.lock().expect("reply slot") = Some(value);
         self.ready.notify_all();
     }
 
-    fn take(&self) -> Result<Frame> {
+    /// Block for the reply, up to `timeout` (`None` = forever).
+    /// Returns `None` on deadline expiry — the caller decides what a
+    /// silent peer means (for both transports: fail the request and
+    /// mark the peer suspect, instead of wedging the client thread
+    /// behind a stuck-but-not-dead worker).
+    pub(crate) fn take(&self, timeout: Option<Duration>) -> Option<Result<Frame>> {
         let mut cell = self.cell.lock().expect("reply slot");
+        let deadline = timeout.map(|t| Instant::now() + t);
         loop {
             if let Some(value) = cell.take() {
-                return value;
+                return Some(value);
             }
-            cell = self.ready.wait(cell).expect("reply slot");
+            match deadline {
+                None => cell = self.ready.wait(cell).expect("reply slot"),
+                Some(deadline) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    let (guard, _) = self
+                        .ready
+                        .wait_timeout(cell, deadline - now)
+                        .expect("reply slot");
+                    cell = guard;
+                }
+            }
         }
     }
 }
@@ -116,7 +137,7 @@ impl ReplySlot {
 // ------------------------------------------------------------- remote job
 
 /// Client-side terminal state of one remote job.
-enum RemoteState {
+pub(crate) enum RemoteState {
     Pending,
     Done { fact: Arc<Factorization>, wall_secs: f64 },
     Failed { msg: String, wall_secs: Option<f64> },
@@ -124,8 +145,11 @@ enum RemoteState {
 }
 
 /// Shared slot of one in-flight remote job, filled by the worker's
-/// pushed terminal frame (or by connection death).
-struct RemoteJob {
+/// pushed terminal frame (or by connection death). Resolution is
+/// first-writer-wins, which is what makes the TCP transport's
+/// resubmit-after-reconnect safe: a duplicate terminal push for an
+/// already-resolved job is a no-op.
+pub(crate) struct RemoteJob {
     id: JobId,
     label: Option<String>,
     state: Mutex<RemoteState>,
@@ -133,7 +157,11 @@ struct RemoteJob {
 }
 
 impl RemoteJob {
-    fn resolve(&self, state: RemoteState) {
+    pub(crate) fn new(id: JobId, label: Option<String>) -> RemoteJob {
+        RemoteJob { id, label, state: Mutex::new(RemoteState::Pending), done: Condvar::new() }
+    }
+
+    pub(crate) fn resolve(&self, state: RemoteState) {
         let mut slot = self.state.lock().expect("remote job state");
         if matches!(*slot, RemoteState::Pending) {
             *slot = state;
@@ -141,7 +169,7 @@ impl RemoteJob {
         self.done.notify_all();
     }
 
-    fn terminal_status(&self) -> Option<JobStatus> {
+    pub(crate) fn terminal_status(&self) -> Option<JobStatus> {
         match *self.state.lock().expect("remote job state") {
             RemoteState::Pending => None,
             RemoteState::Done { .. } => Some(JobStatus::Done),
@@ -151,14 +179,25 @@ impl RemoteJob {
     }
 }
 
-/// [`TransportJob`] over a [`RemoteJob`] plus the connection that can
-/// answer status/cancel queries while the job is still live.
-struct RemoteJobHandle {
-    job: Arc<RemoteJob>,
-    conn: Arc<WorkerConn>,
+/// What a [`RemoteJobHandle`] needs from its connection: a blocking
+/// request round-trip, and the status to report for a still-pending job
+/// when the connection cannot be asked. The pipe transport answers
+/// `Failed` (a dead worker's jobs are failed by its reader thread); the
+/// TCP transport answers `Queued` (a dropped connection parks its jobs
+/// for resubmission after reconnect).
+pub(crate) trait Peer: Send + Sync {
+    fn request(&self, op: Op, payload: &[u8]) -> Result<Frame>;
+    fn offline_status(&self) -> JobStatus;
 }
 
-impl TransportJob for RemoteJobHandle {
+/// [`TransportJob`] over a [`RemoteJob`] plus the connection that can
+/// answer status/cancel queries while the job is still live.
+pub(crate) struct RemoteJobHandle<P: Peer> {
+    pub(crate) job: Arc<RemoteJob>,
+    pub(crate) conn: Arc<P>,
+}
+
+impl<P: Peer + 'static> TransportJob for RemoteJobHandle<P> {
     fn id(&self) -> JobId {
         self.job.id
     }
@@ -178,9 +217,10 @@ impl TransportJob for RemoteJobHandle {
                 let mut r = WireReader::new(&frame.payload);
                 r.status().unwrap_or(JobStatus::Failed)
             }
-            // the connection died: the reader thread resolves every
-            // in-flight job to Failed, so re-read the local state
-            Err(_) => self.job.terminal_status().unwrap_or(JobStatus::Failed),
+            // the connection can't be asked: re-read the local state,
+            // else report what an unreachable peer means (Failed for a
+            // dead pipe worker, Queued for a parked TCP job)
+            Err(_) => self.job.terminal_status().unwrap_or_else(|| self.conn.offline_status()),
         }
     }
 
@@ -252,6 +292,15 @@ struct WorkerConn {
     pending: Mutex<HashMap<u64, Arc<ReplySlot>>>,
     jobs: Mutex<HashMap<u64, Arc<RemoteJob>>>,
     alive: AtomicBool,
+    /// Set when a request timed out waiting for this worker's reply:
+    /// the child is *running but not answering* (wedged, or grinding
+    /// through something enormous). A suspect worker is skipped by the
+    /// Auto router until its next frame arrives; unlike `alive`, the
+    /// flag clears itself the moment the worker speaks again.
+    suspect: AtomicBool,
+    /// Per-request reply deadline (`None` = wait forever, the
+    /// pre-timeout behavior).
+    timeout: Option<Duration>,
     /// In-flight jobs — the router's load metric.
     load: AtomicUsize,
     reader: Mutex<Option<JoinHandle<()>>>,
@@ -261,7 +310,10 @@ impl WorkerConn {
     /// Send one request frame and block for its reply. Fails fast when
     /// the worker is dead, and cannot deadlock with the reader: the
     /// slot is registered before the write, and a dying reader fails
-    /// every registered slot after flagging `alive = false`.
+    /// every registered slot after flagging `alive = false`. With a
+    /// configured timeout the wait is bounded too: a wedged-but-alive
+    /// child fails the request and is marked suspect instead of
+    /// hanging the client thread forever.
     fn request(&self, op: Op, payload: &[u8]) -> Result<Frame> {
         let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
         let slot = Arc::new(ReplySlot::new());
@@ -282,7 +334,20 @@ impl WorkerConn {
             self.pending.lock().expect("pending map").remove(&req_id);
             bail!("worker process {}: {err:#}", self.index);
         }
-        let frame = slot.take()?;
+        let frame = match slot.take(self.timeout) {
+            Some(reply) => reply?,
+            None => {
+                self.pending.lock().expect("pending map").remove(&req_id);
+                self.suspect.store(true, Ordering::SeqCst);
+                bail!(
+                    "worker process {} did not answer {:?} within {:?} — \
+                     marked suspect (stuck child?); it rejoins routing when it speaks again",
+                    self.index,
+                    op,
+                    self.timeout.expect("deadline implies a timeout")
+                );
+            }
+        };
         if frame.op == Op::Err {
             let msg = WireReader::new(&frame.payload)
                 .str()
@@ -313,14 +378,28 @@ impl WorkerConn {
     }
 }
 
+impl Peer for WorkerConn {
+    fn request(&self, op: Op, payload: &[u8]) -> Result<Frame> {
+        WorkerConn::request(self, op, payload)
+    }
+
+    fn offline_status(&self) -> JobStatus {
+        // a dead pipe worker's jobs are gone: the reader thread failed
+        // them already, this is only the fallback for the brief race
+        JobStatus::Failed
+    }
+}
+
 /// Shared routing records: where each job went (and, once done, which
 /// global shard served it), and which workers hold which DFS files.
+/// Shared by the pipe and TCP transports (for TCP, "process" reads
+/// "host").
 #[derive(Default)]
-struct RouteBook {
+pub(crate) struct RouteBook {
     /// job id → (process, global shard once known).
-    placements: Mutex<BTreeMap<u64, (usize, Option<usize>)>>,
+    pub(crate) placements: Mutex<BTreeMap<u64, (usize, Option<usize>)>>,
     /// file name → processes holding a copy.
-    staged: Mutex<HashMap<String, BTreeSet<usize>>>,
+    pub(crate) staged: Mutex<HashMap<String, BTreeSet<usize>>>,
 }
 
 /// The reader-thread demux loop for one worker (see the module docs).
@@ -337,6 +416,9 @@ fn reader_loop(
             Ok(None) => break "exited".to_string(),
             Err(err) => break format!("desynchronized: {err:#}"),
         };
+        // any frame is proof of life: a worker marked suspect by a
+        // timed-out request rejoins routing as soon as it speaks
+        conn.suspect.store(false, Ordering::SeqCst);
         match frame.op {
             Op::JobDone => match decode_job_done(&frame.payload) {
                 Ok((id, wall_secs, mut fact)) => {
@@ -391,7 +473,7 @@ fn reader_loop(
     conn.fail_all(&why);
 }
 
-fn decode_job_done(payload: &[u8]) -> Result<(u64, f64, Factorization)> {
+pub(crate) fn decode_job_done(payload: &[u8]) -> Result<(u64, f64, Factorization)> {
     let mut r = WireReader::new(payload);
     let id = r.u64()?;
     let wall = r.f64()?;
@@ -400,7 +482,7 @@ fn decode_job_done(payload: &[u8]) -> Result<(u64, f64, Factorization)> {
     Ok((id, wall, fact))
 }
 
-fn decode_job_fail(payload: &[u8]) -> Result<(u64, JobStatus, Option<f64>, String)> {
+pub(crate) fn decode_job_fail(payload: &[u8]) -> Result<(u64, JobStatus, Option<f64>, String)> {
     let mut r = WireReader::new(payload);
     let id = r.u64()?;
     let status = r.status()?;
@@ -487,10 +569,10 @@ impl ProcRouter {
 /// back from a worker that holds them (exact bits, identical key
 /// layout), so client memory never retains an input.
 #[derive(Clone, Copy)]
-struct GaussianRecipe {
-    rows: usize,
-    cols: usize,
-    seed: u64,
+pub(crate) struct GaussianRecipe {
+    pub(crate) rows: usize,
+    pub(crate) cols: usize,
+    pub(crate) seed: u64,
 }
 
 /// The `Process` transport: see the [module docs](self).
@@ -511,11 +593,13 @@ pub struct ProcessTransport {
 
 impl ProcessTransport {
     /// Spawn `nprocs` workers from `program`, handshake each with
-    /// `cfg`, and wire up their reader threads.
+    /// `cfg`, and wire up their reader threads. `request_timeout`
+    /// bounds every request's reply wait (`None` = wait forever).
     pub(crate) fn launch(
         cfg: WorkerConfig,
         nprocs: usize,
         program: PathBuf,
+        request_timeout: Option<Duration>,
     ) -> Result<ProcessTransport> {
         ensure!(nprocs >= 1, "worker_processes wants at least one process");
         let book = Arc::new(RouteBook::default());
@@ -526,7 +610,7 @@ impl ProcessTransport {
             // a failure to spawn or handshake worker k must reap
             // workers 0..k — otherwise they (and their blocked reader
             // threads) outlive the failed launch forever
-            match Self::spawn_one(&program, index, &cfg, &book, shards_per_proc) {
+            match Self::spawn_one(&program, index, &cfg, &book, shards_per_proc, request_timeout) {
                 Ok((conn, worker_topo)) => {
                     topo = Some(worker_topo);
                     conns.push(conn);
@@ -562,6 +646,7 @@ impl ProcessTransport {
         cfg: &WorkerConfig,
         book: &Arc<RouteBook>,
         shards_per_proc: usize,
+        request_timeout: Option<Duration>,
     ) -> Result<(Arc<WorkerConn>, (usize, usize, usize, String))> {
         let mut child = Command::new(program)
             .arg("worker")
@@ -580,6 +665,8 @@ impl ProcessTransport {
             pending: Mutex::new(HashMap::new()),
             jobs: Mutex::new(HashMap::new()),
             alive: AtomicBool::new(true),
+            suspect: AtomicBool::new(false),
+            timeout: request_timeout,
             load: AtomicUsize::new(0),
             reader: Mutex::new(None),
         });
@@ -645,8 +732,7 @@ impl ProcessTransport {
         self.conns
             .iter()
             .map(|c| {
-                c.alive
-                    .load(Ordering::SeqCst)
+                (c.alive.load(Ordering::SeqCst) && !c.suspect.load(Ordering::SeqCst))
                     .then(|| c.load.load(Ordering::Relaxed))
             })
             .collect()
@@ -899,12 +985,7 @@ impl Transport for ProcessTransport {
         }
         req.placement = local;
         let conn = self.conns[proc].clone();
-        let job = Arc::new(RemoteJob {
-            id,
-            label: req.label.clone(),
-            state: Mutex::new(RemoteState::Pending),
-            done: Condvar::new(),
-        });
+        let job = Arc::new(RemoteJob::new(id, req.label.clone()));
         conn.jobs.lock().expect("jobs map").insert(id.0, job.clone());
         conn.load.fetch_add(1, Ordering::Relaxed);
         let mut w = WireWriter::new();
@@ -1080,10 +1161,21 @@ mod tests {
         let slot = Arc::new(ReplySlot::new());
         let waiter = {
             let slot = slot.clone();
-            std::thread::spawn(move || slot.take())
+            std::thread::spawn(move || slot.take(None))
         };
         slot.fill(Ok(Frame { op: Op::Ok, req_id: 3, payload: vec![] }));
-        let frame = waiter.join().unwrap().unwrap();
+        let frame = waiter.join().unwrap().expect("reply, not deadline").unwrap();
         assert_eq!((frame.op, frame.req_id), (Op::Ok, 3));
+    }
+
+    #[test]
+    fn reply_slot_deadline_expires_instead_of_wedging() {
+        let slot = ReplySlot::new();
+        let start = Instant::now();
+        assert!(slot.take(Some(Duration::from_millis(30))).is_none(), "empty slot times out");
+        assert!(start.elapsed() >= Duration::from_millis(30));
+        // a filled slot is handed over even with a zero deadline
+        slot.fill(Ok(Frame { op: Op::Ok, req_id: 1, payload: vec![] }));
+        assert!(slot.take(Some(Duration::ZERO)).is_some());
     }
 }

@@ -1,0 +1,154 @@
+//! The serving side of the network layer: [`TcpServer`] accepts
+//! connections on a listen address and runs the
+//! [`super::worker`] protocol loop over each socket — `mrtsqr serve
+//! --listen <addr>` is a thin CLI wrapper around it.
+//!
+//! Every connection shares one pre-built [`TsqrClient`] (one engine
+//! pool, one DFS, one set of virtual clocks) and one job registry in
+//! `retain_jobs` mode: a job's registry entry survives its terminal
+//! push until `Evict`, so a client that reconnects mid-batch and
+//! resubmits under the same ids *re-attaches* to jobs the dropped
+//! connection started — a still-running job gains the new connection
+//! as its push target, a finished one re-pushes its result
+//! immediately, and determinism makes either path bit-identical to an
+//! undisturbed run.
+//!
+//! One caveat the registry's shape imposes: jobs are keyed by the
+//! peer-assigned id alone, so one server expects one *logical* client
+//! (or clients that partition the id space). That is the topology the
+//! [`super::net::TcpTransport`] builds — it is the only writer to the
+//! hosts it connects.
+
+use super::worker::{serve_connection, SharedServe};
+use super::TsqrClient;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A listening server wrapping one [`TsqrClient`]: one accept thread,
+/// one session thread per connection, all sharing the client and the
+/// retained job registry.
+pub struct TcpServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    /// Socket clones of the live sessions (keyed by session id; each
+    /// session reclaims its own entry on exit), so shutdown can sever
+    /// sessions blocked reading.
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    sessions: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl TcpServer {
+    /// Bind `addr` (`"127.0.0.1:0"` picks a free port — read it back
+    /// with [`TcpServer::local_addr`]) and start accepting. The server
+    /// owns `client`; it keeps serving until [`TcpServer::shutdown`]
+    /// or drop.
+    pub fn bind(client: TsqrClient, addr: &str) -> Result<TcpServer> {
+        let shared = SharedServe::new(Arc::new(client));
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr:?}"))?;
+        let local_addr = listener.local_addr().context("reading the bound address")?;
+        // non-blocking accept so shutdown doesn't wait for one more
+        // connection that never comes
+        listener.set_nonblocking(true).context("non-blocking listener")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+        let sessions: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let sessions = sessions.clone();
+            std::thread::Builder::new()
+                .name("mrtsqr-accept".into())
+                .spawn(move || accept_loop(&listener, &shared, &stop, &conns, &sessions))
+                .expect("spawn accept thread")
+        };
+        Ok(TcpServer { local_addr, stop, accept: Some(accept), conns, sessions })
+    }
+
+    /// The address the listener actually bound (resolves `:0` ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, sever every live session socket, and join the
+    /// session threads (each joins its job notifiers, so in-flight
+    /// jobs run to completion before this returns). Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        for (_, stream) in self.conns.lock().expect("server connections").drain() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        let sessions: Vec<JoinHandle<()>> =
+            self.sessions.lock().expect("server sessions").drain(..).collect();
+        for session in sessions {
+            let _ = session.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    shared: &SharedServe,
+    stop: &AtomicBool,
+    conns: &Arc<Mutex<HashMap<u64, TcpStream>>>,
+    sessions: &Mutex<Vec<JoinHandle<()>>>,
+) {
+    let mut next_session = 0u64;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let _ = stream.set_nodelay(true);
+                let session_id = next_session;
+                next_session += 1;
+                if let Ok(clone) = stream.try_clone() {
+                    conns.lock().expect("server connections").insert(session_id, clone);
+                }
+                let shared = shared.clone();
+                let conns = conns.clone();
+                let session = std::thread::Builder::new()
+                    .name(format!("mrtsqr-session-{peer}"))
+                    .spawn(move || {
+                        // per-connection errors (including version
+                        // mismatches, answered with a clean Err frame
+                        // inside the loop) end this session only — the
+                        // server keeps serving
+                        if let Ok(read_half) = stream.try_clone() {
+                            let _ = serve_connection(
+                                BufReader::new(read_half),
+                                stream,
+                                Some(shared),
+                                true,
+                            );
+                        }
+                        conns.lock().expect("server connections").remove(&session_id);
+                    });
+                if let Ok(session) = session {
+                    let mut guard = sessions.lock().expect("server sessions");
+                    guard.retain(|h| !h.is_finished());
+                    guard.push(session);
+                }
+            }
+            Err(err) if err.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(15));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(15)),
+        }
+    }
+}

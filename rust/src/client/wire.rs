@@ -45,8 +45,12 @@ use std::io::{Read, Write};
 pub const WIRE_MAGIC: [u8; 4] = *b"MRTQ";
 
 /// Protocol version. Bumped on any incompatible change; the `Hello`
-/// handshake rejects a peer whose header says otherwise.
-pub const WIRE_VERSION: u16 = 1;
+/// handshake rejects a peer whose header says otherwise (as a typed
+/// [`VersionMismatch`] error, so serving loops can reply with a clean
+/// [`Op::Err`] frame instead of hanging up silently). v2 added the
+/// [`Op::Ping`]/[`Op::Pong`] liveness probes used by the network
+/// transport's health checks.
+pub const WIRE_VERSION: u16 = 2;
 
 /// Upper bound on one frame's payload (1 GiB) — a corrupt length
 /// prefix must not look like an allocation request.
@@ -81,6 +85,9 @@ pub enum Op {
     SetScale = 11,
     /// Graceful worker shutdown (acked, then the worker exits).
     Shutdown = 12,
+    /// Liveness/latency probe (empty payload); replied with [`Op::Pong`].
+    /// The network transport's health checks time these round trips.
+    Ping = 13,
     /// Handshake reply: topology of the serving side.
     HelloAck = 100,
     /// Empty success ack.
@@ -97,6 +104,8 @@ pub enum Op {
     MatrixData = 106,
     /// Request failed; payload is the error message.
     Err = 107,
+    /// Reply to [`Op::Ping`] (empty payload).
+    Pong = 112,
     /// Push (req_id 0): job reached Done. Payload: id, wall_secs,
     /// [`Factorization`].
     JobDone = 110,
@@ -120,6 +129,7 @@ impl Op {
             10 => Op::FetchMatrix,
             11 => Op::SetScale,
             12 => Op::Shutdown,
+            13 => Op::Ping,
             100 => Op::HelloAck,
             101 => Op::Ok,
             102 => Op::Handle,
@@ -130,10 +140,39 @@ impl Op {
             107 => Op::Err,
             110 => Op::JobDone,
             111 => Op::JobFail,
+            112 => Op::Pong,
             other => bail!("wire: unknown opcode {other}"),
         })
     }
 }
+
+/// Typed error for a frame whose header carries a different protocol
+/// version. [`read_frame`] returns this (wrapped in `anyhow`) instead
+/// of a plain message so serving loops can `downcast_ref` it and send
+/// a clean [`Op::Err`] reply — addressed by the header's `req_id`,
+/// which is version-independent — before closing the connection,
+/// rather than leaving the stale peer to hang on a silent hangup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VersionMismatch {
+    /// The version the peer's frame header claimed.
+    pub peer: u16,
+    /// The offending frame's request id (header layout is shared
+    /// across versions, so this is safe to echo in an error reply).
+    pub req_id: u64,
+}
+
+impl std::fmt::Display for VersionMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "wire: protocol version {} != supported {WIRE_VERSION} \
+             (upgrade both ends to the same mrtsqr build)",
+            self.peer
+        )
+    }
+}
+
+impl std::error::Error for VersionMismatch {}
 
 /// One protocol message: opcode + request-correlation id + payload.
 /// `req_id` pairs replies with requests on a multiplexed pipe; pushed
@@ -193,12 +232,11 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
         &header[0..4]
     );
     let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
-    ensure!(
-        version == WIRE_VERSION,
-        "wire: protocol version {version} != supported {WIRE_VERSION}"
-    );
-    let op = Op::from_u16(u16::from_le_bytes(header[6..8].try_into().unwrap()))?;
     let req_id = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    if version != WIRE_VERSION {
+        return Err(VersionMismatch { peer: version, req_id }.into());
+    }
+    let op = Op::from_u16(u16::from_le_bytes(header[6..8].try_into().unwrap()))?;
     let len = u32::from_le_bytes(header[16..20].try_into().unwrap());
     ensure!(len <= MAX_FRAME_BYTES, "wire: frame length {len} exceeds the {MAX_FRAME_BYTES} limit");
     let mut payload = vec![0u8; len as usize];
@@ -973,10 +1011,15 @@ mod tests {
         let mut bad = good.clone();
         bad[0] ^= 0xFF;
         assert!(read_frame(&mut &bad[..]).unwrap_err().to_string().contains("magic"));
-        // future protocol version
+        // future protocol version: a typed error carrying the peer's
+        // version and the frame's req_id, so serving loops can reply
+        // with a clean Err frame before hanging up
         let mut bad = good.clone();
         bad[4..6].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
-        assert!(read_frame(&mut &bad[..]).unwrap_err().to_string().contains("version"));
+        let err = read_frame(&mut &bad[..]).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err:#}");
+        let vm = err.downcast_ref::<VersionMismatch>().expect("typed version error");
+        assert_eq!((vm.peer, vm.req_id), (WIRE_VERSION + 1, 1));
         // unknown opcode
         let mut bad = good.clone();
         bad[6..8].copy_from_slice(&999u16.to_le_bytes());

@@ -14,6 +14,11 @@
 //!   built — which may itself use `--worker-procs N`, making `serve` a
 //!   relay: any program able to frame bytes on a pipe gets a full
 //!   cross-process engine pool without linking this crate.
+//! * `mrtsqr serve --listen <addr>` ([`super::tcp::TcpServer`]) runs
+//!   the same per-connection loop over sockets, one session thread per
+//!   accepted connection, all sharing one client and one job registry
+//!   (`retain_jobs` mode) so a reconnecting client can re-attach to
+//!   its in-flight jobs.
 //!
 //! One reader (the loop) owns stdin; stdout is mutex-shared between
 //! the loop's replies and the per-job waiter threads that push
@@ -62,6 +67,27 @@ struct PendingIngest {
     data: Vec<f64>,
 }
 
+/// State shared by every connection of one network server: the
+/// pre-built client and the job registry. A TCP client that loses its
+/// connection mid-batch reconnects and resubmits under the same ids —
+/// the shared registry is what lets the new connection attach to jobs
+/// the old one started (see the `Op::Submit` arm of the serve loop).
+#[derive(Clone)]
+pub(crate) struct SharedServe {
+    client: Arc<TsqrClient>,
+    jobs: Arc<Mutex<HashMap<u64, Arc<ClientJobHandle>>>>,
+}
+
+impl SharedServe {
+    pub(crate) fn new(client: Arc<TsqrClient>) -> SharedServe {
+        SharedServe { client, jobs: Arc::new(Mutex::new(HashMap::new())) }
+    }
+
+    pub(crate) fn client(&self) -> &Arc<TsqrClient> {
+        &self.client
+    }
+}
+
 /// Everything one serving session holds between frames.
 struct Server<W: Write + Send + 'static> {
     out: Arc<Mutex<W>>,
@@ -70,6 +96,11 @@ struct Server<W: Write + Send + 'static> {
     /// only version-handshake a pre-built client (serve mode).
     prebuilt: bool,
     jobs: Arc<Mutex<HashMap<u64, Arc<ClientJobHandle>>>>,
+    /// Pipe mode reclaims a registry entry once its terminal frame is
+    /// pushed; network mode retains it until `Evict` so a reconnecting
+    /// client can re-attach (and a done-but-undelivered result is
+    /// re-pushed immediately on resubmission).
+    retain_jobs: bool,
     ingests: HashMap<String, PendingIngest>,
     /// Live notify threads, joined before the loop returns so every
     /// submitted job's terminal frame is flushed before worker exit.
@@ -86,19 +117,52 @@ fn send<W: Write>(out: &Mutex<W>, op: Op, req_id: u64, payload: &[u8]) -> Result
 /// The protocol loop shared by both entry points; exposed to the crate
 /// so tests can serve over in-memory pipes.
 pub(crate) fn serve_loop<R: Read, W: Write + Send + 'static>(
-    mut input: R,
+    input: R,
     output: W,
     prebuilt: Option<TsqrClient>,
 ) -> Result<()> {
+    let shared = prebuilt.map(|client| SharedServe::new(Arc::new(client)));
+    serve_connection(input, output, shared, false)
+}
+
+/// Serve one connection's frames. With `Some(shared)` the session runs
+/// over a pre-built client (and, for the TCP server, a job registry
+/// shared across connections); with `None` the `Hello` handshake must
+/// carry the cluster config (worker mode). `retain_jobs` selects the
+/// network-mode registry lifetime: entries survive their terminal push
+/// until `Evict`, so reconnecting clients can re-attach.
+pub(crate) fn serve_connection<R: Read, W: Write + Send + 'static>(
+    mut input: R,
+    output: W,
+    shared: Option<SharedServe>,
+    retain_jobs: bool,
+) -> Result<()> {
     let mut server = Server {
         out: Arc::new(Mutex::new(output)),
-        prebuilt: prebuilt.is_some(),
-        client: prebuilt.map(Arc::new),
-        jobs: Arc::new(Mutex::new(HashMap::new())),
+        prebuilt: shared.is_some(),
+        client: shared.as_ref().map(|s| s.client.clone()),
+        jobs: shared.map(|s| s.jobs).unwrap_or_default(),
+        retain_jobs,
         ingests: HashMap::new(),
         notifiers: Vec::new(),
     };
-    while let Some(frame) = wire::read_frame(&mut input)? {
+    loop {
+        let frame = match wire::read_frame(&mut input) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => break,
+            Err(err) => {
+                // a peer speaking another protocol version gets a
+                // clean error frame (at *our* version, echoing the
+                // offending req_id) before the hangup, instead of a
+                // silent connection drop it cannot diagnose
+                if let Some(vm) = err.downcast_ref::<wire::VersionMismatch>() {
+                    let mut w = WireWriter::new();
+                    w.str(&vm.to_string());
+                    let _ = send(&server.out, Op::Err, vm.req_id, &w.into_bytes());
+                }
+                return Err(err);
+            }
+        };
         let shutdown = frame.op == Op::Shutdown;
         let req_id = frame.req_id;
         match server.handle(frame) {
@@ -212,8 +276,25 @@ impl<W: Write + Send + 'static> Server<W> {
                 let req = r.request()?;
                 r.finish()?;
                 let client = self.client()?.clone();
-                let job = Arc::new(client.submit_with_id(JobId(id), &input, req)?);
-                self.jobs.lock().expect("jobs registry").insert(id, job.clone());
+                // network mode: a Submit under a registered id is a
+                // *resubmission* after a dropped connection — attach
+                // this connection as the push target instead of
+                // re-running (determinism makes the result identical
+                // either way; a job that already finished re-pushes
+                // its terminal frame immediately)
+                let attached = if self.retain_jobs {
+                    self.jobs.lock().expect("jobs registry").get(&id).cloned()
+                } else {
+                    None
+                };
+                let job = match attached {
+                    Some(job) => job,
+                    None => {
+                        let job = Arc::new(client.submit_with_id(JobId(id), &input, req)?);
+                        self.jobs.lock().expect("jobs registry").insert(id, job.clone());
+                        job
+                    }
+                };
                 // a long-running serve session must not accumulate one
                 // JoinHandle per job ever submitted
                 self.notifiers.retain(|h| !h.is_finished());
@@ -221,6 +302,7 @@ impl<W: Write + Send + 'static> Server<W> {
                 // finishes, however many jobs are in flight
                 let out = self.out.clone();
                 let registry = self.jobs.clone();
+                let retain = self.retain_jobs;
                 let notifier = std::thread::Builder::new()
                     .name(format!("mrtsqr-notify-{id}"))
                     .spawn(move || {
@@ -252,13 +334,19 @@ impl<W: Write + Send + 'static> Server<W> {
                             }
                         };
                         // a send failure means the peer is gone; the
-                        // loop will exit on its own EOF
+                        // loop will exit on its own EOF (and, over
+                        // TCP, a reconnecting client resubmits to get
+                        // the frame re-pushed)
                         let _ = send(&out, op, 0, &payload);
-                        // the peer's handle has the terminal state now
-                        // (the pushed frame precedes any later
-                        // unknown-job error reply on the FIFO pipe), so
-                        // the registry entry can be reclaimed
-                        registry.lock().expect("jobs registry").remove(&id);
+                        // pipe mode: the peer's handle has the
+                        // terminal state now (the pushed frame
+                        // precedes any later unknown-job error reply
+                        // on the FIFO pipe), so the registry entry can
+                        // be reclaimed. Network mode retains it until
+                        // Evict for reconnect-and-resubmit.
+                        if !retain {
+                            registry.lock().expect("jobs registry").remove(&id);
+                        }
                     })
                     .expect("spawn notify thread");
                 self.notifiers.push(notifier);
@@ -316,6 +404,13 @@ impl<W: Write + Send + 'static> Server<W> {
                 r.finish()?;
                 self.client()?.set_scale(&name, scale)?;
                 Ok((Op::Ok, Vec::new()))
+            }
+            Op::Ping => {
+                // liveness probe: answered even before Hello — the
+                // network transport's health checker must be able to
+                // time a round trip without owning the handshake
+                r.finish()?;
+                Ok((Op::Pong, Vec::new()))
             }
             Op::Shutdown => {
                 r.finish()?;
@@ -447,6 +542,38 @@ mod tests {
         r.finish().unwrap();
         assert_eq!(fact.r.cols, 4);
         assert_eq!(fact.result_digest().len(), 16);
+    }
+
+    #[test]
+    fn ping_is_answered_with_pong() {
+        let frames = roundtrip(&[(Op::Ping, 1, Vec::new())]);
+        assert_eq!((frames[0].op, frames[0].req_id), (Op::Pong, 1));
+        assert!(frames[0].payload.is_empty());
+    }
+
+    #[test]
+    fn version_mismatch_gets_a_clean_error_frame_not_a_hang() {
+        // a doctored Hello claiming WIRE_VERSION+1: the session must
+        // write an Err frame naming the version (at our version, with
+        // the offending req_id) and then end with an error
+        let mut input = Vec::new();
+        wire::write_frame(&mut input, Op::Hello, 7, &hello_payload()).unwrap();
+        input[4..6].copy_from_slice(&(wire::WIRE_VERSION + 1).to_le_bytes());
+        let client = TsqrSession::builder()
+            .backend(Backend::Native)
+            .rows_per_task(50)
+            .service_workers(1)
+            .build_client()
+            .unwrap();
+        let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        let err = serve_loop(Cursor::new(input), SharedBuf(out.clone()), Some(client))
+            .expect_err("mismatched version is a session error");
+        assert!(err.to_string().contains("version"), "{err:#}");
+        let bytes = out.lock().unwrap().clone();
+        let frame = wire::read_frame(&mut &bytes[..]).unwrap().expect("error frame");
+        assert_eq!((frame.op, frame.req_id), (Op::Err, 7));
+        let msg = WireReader::new(&frame.payload).str().unwrap();
+        assert!(msg.contains("version"), "{msg}");
     }
 
     #[test]

@@ -4,8 +4,24 @@
 //! *"Direct QR factorizations for tall-and-skinny matrices in MapReduce
 //! architectures"* (IEEE BigData 2013).
 //!
-//! The system is a six-layer stack:
+//! The system is a seven-layer stack:
 //!
+//! * **L7 ([`client::tcp`] + [`client::net`]) — the network layer.** A
+//!   [`client::TcpServer`] (`mrtsqr serve --listen <addr>`) serves the
+//!   L6 wire protocol over TCP: one long-lived engine pool, one DFS
+//!   and one retained job registry shared across every connection. A
+//!   [`client::TcpTransport`]
+//!   ([`session::SessionBuilder::connect`]) drives one or more such
+//!   hosts through the same [`client::Transport`] seam — a `NetRouter`
+//!   lifts placement across hosts, periodic health checks route `Auto`
+//!   jobs around dead and lagging servers, per-request deadlines mark
+//!   silent hosts suspect, and a dropped connection *parks* its
+//!   in-flight jobs for reconnect-and-resubmit (the server's registry
+//!   re-attaches resubmitted ids, so a mid-batch connection kill still
+//!   yields bit-identical results — `rust/tests/tcp.rs`). Version
+//!   mismatches are rejected at the handshake with a clean error
+//!   frame. `mrtsqr batch --connect` and `mrtsqr loadgen` drive it
+//!   from the CLI.
 //! * **L6 ([`client`]) — the transport-agnostic serving facade.** A
 //!   [`client::TsqrClient`] (built via
 //!   [`session::SessionBuilder::build_client`]) hides *where* the

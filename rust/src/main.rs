@@ -6,7 +6,10 @@
 //! mrtsqr sigma     --rows 50000  --cols 10            # singular values only
 //! mrtsqr batch     --manifest jobs.txt --jobs 4       # concurrent job service
 //! mrtsqr batch     --manifest jobs.txt --worker-procs 2  # …across worker processes
+//! mrtsqr batch     --manifest jobs.txt --connect host:7420  # …against a remote server
 //! mrtsqr serve     --shards 2                         # wire protocol on stdin/stdout
+//! mrtsqr serve     --listen 0.0.0.0:7420 --shards 4   # …served over TCP
+//! mrtsqr loadgen   --connect host:7420 --jobs-total 2000 --concurrency 16
 //! mrtsqr worker                                       # child of the Process transport
 //! mrtsqr stability --rows 5000   --cols 50            # Fig. 6 sweep
 //! mrtsqr faults    --rows 80000  --cols 10 --prob 0.125  # Fig. 7 point
@@ -54,11 +57,43 @@ fn session_builder(args: &Args) -> SessionBuilder {
         reduce_slots: args.get_usize("reduce-slots", 40),
         host_threads: args.get_usize("host-threads", mrtsqr::mapreduce::default_host_threads()),
     };
-    TsqrSession::builder()
+    let builder = TsqrSession::builder()
         .disk_model(model)
         .cluster(cluster)
         .backend(if args.flag("pjrt") { Backend::Pjrt } else { Backend::Auto })
-        .rows_per_task(args.get_usize("rows-per-task", 1000))
+        .rows_per_task(args.get_usize("rows-per-task", 1000));
+    // optional fault injection (--fault-prob > 0 turns it on): lets
+    // `serve`d clusters and loadgen runs exercise the retry path with
+    // the same per-job determinism as the test suites
+    let prob = args.get_f64("fault-prob", 0.0);
+    let builder = if prob > 0.0 {
+        builder.fault_policy(
+            FaultPolicy {
+                probability: prob,
+                max_attempts: args.get_usize("fault-attempts", 4),
+                waste_fraction: args.get_f64("fault-waste", 0.5),
+            },
+            args.get_u64("fault-seed", 99),
+        )
+    } else {
+        builder
+    };
+    // reply deadline for the pipe/TCP transports (seconds)
+    match args.get("request-timeout") {
+        Some(secs) => {
+            let secs: f64 = secs.parse().expect("--request-timeout wants seconds");
+            builder.request_timeout(std::time::Duration::from_secs_f64(secs))
+        }
+        None => builder,
+    }
+}
+
+/// `--connect host:port[,host:port…]` — the remote servers a `batch`
+/// or `loadgen` client drives instead of a local engine pool.
+fn connect_addrs(args: &Args) -> Vec<String> {
+    args.get("connect")
+        .map(|s| s.split(',').map(|a| a.trim().to_string()).filter(|a| !a.is_empty()).collect())
+        .unwrap_or_default()
 }
 
 fn load_input(args: &Args, session: &mut TsqrSession) -> Result<MatrixHandle> {
@@ -163,9 +198,14 @@ fn cmd_batch(args: &Args) -> Result<()> {
     let entries = parse_manifest(&text)?;
     let serial = args.flag("serial");
     let procs = args.get_usize("worker-procs", 0);
+    let connect = connect_addrs(args);
     if serial && procs > 0 {
         anyhow::bail!("--serial drains on the calling thread, which cannot reach into worker \
                        processes — drop --serial or --worker-procs");
+    }
+    if !connect.is_empty() && (serial || procs > 0) {
+        anyhow::bail!("--connect drives remote servers — drop --serial / --worker-procs \
+                       (the servers' own topology applies)");
     }
     let workers = if serial { 0 } else { args.get_usize("jobs", 4).max(1) };
     let shards = args.get_usize("shards", 1).max(1);
@@ -178,6 +218,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
         .queue_capacity(queue)
         .engine_shards(shards)
         .worker_processes(procs)
+        .connect(&connect)
         .build_client()?;
     println!(
         "service        : backend={} procs={} shards={} (total) workers={} (total) queue-capacity={}/shard",
@@ -414,12 +455,14 @@ fn cmd_model(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Serve the binary wire protocol on stdin/stdout over a client built
-/// from the CLI flags: `--shards N` engine shards, `--jobs N` workers
-/// per shard, `--queue N` capacity, and `--worker-procs N` to relay the
-/// whole pool into spawned `mrtsqr worker` processes. Any program able
-/// to frame bytes on a pipe (see `mrtsqr::client::wire`) gets a full
-/// factorization service without linking the crate.
+/// Serve the binary wire protocol over a client built from the CLI
+/// flags: `--shards N` engine shards, `--jobs N` workers per shard,
+/// `--queue N` capacity, and `--worker-procs N` to relay the whole
+/// pool into spawned `mrtsqr worker` processes. Default transport is
+/// stdin/stdout (any program able to frame bytes on a pipe gets a full
+/// factorization service without linking the crate);
+/// `--listen <addr>` serves TCP connections instead — remote
+/// `TsqrClient`s reach it through `SessionBuilder::connect(addrs)`.
 fn cmd_serve(args: &Args) -> Result<()> {
     let client = session_builder(args)
         .service_workers(args.get_usize("jobs", 2).max(1))
@@ -427,6 +470,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .engine_shards(args.get_usize("shards", 1))
         .worker_processes(args.get_usize("worker-procs", 0))
         .build_client()?;
+    if let Some(addr) = args.get("listen") {
+        let topology = format!(
+            "procs={} shards={} workers={}",
+            client.procs(),
+            client.shards(),
+            client.workers()
+        );
+        let server = mrtsqr::client::TcpServer::bind(client, addr)?;
+        eprintln!(
+            "mrtsqr serve: protocol v{} listening on {}, {topology}",
+            mrtsqr::client::WIRE_VERSION,
+            server.local_addr()
+        );
+        // serve until killed: connections come and go, the engine pool
+        // and the retained job registry stay
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
     eprintln!(
         "mrtsqr serve: protocol v{} on stdio, procs={} shards={} workers={}",
         mrtsqr::client::WIRE_VERSION,
@@ -435,6 +497,168 @@ fn cmd_serve(args: &Args) -> Result<()> {
         client.workers()
     );
     mrtsqr::client::worker::run_serve(client)
+}
+
+/// Hammer a factorization service with a synthetic stream of
+/// concurrent mixed jobs and report throughput plus latency
+/// percentiles. `--connect host:port[,…]` drives remote
+/// `mrtsqr serve --listen` hosts (the usual mode); without it the
+/// load runs against an in-process pool built from the same flags as
+/// `batch`. `--jobs-total N` jobs (default 1000) are drawn from the
+/// deterministic 8-way request mix over `--inputs K` gaussian matrices
+/// (ingested once, reused round-robin), submitted by `--concurrency C`
+/// closed-loop threads (each submits, waits, evicts, repeats — so at
+/// most `C` jobs are in flight). `--bench-json PATH` writes the
+/// summary for the BENCH_6 trajectory.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use mrtsqr::service::synthetic_manifest;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    let connect = connect_addrs(args);
+    let total = args.get_usize("jobs-total", 1000).max(1);
+    let concurrency = args.get_usize("concurrency", 8).max(1);
+    let inputs = args.get_usize("inputs", 6).max(1);
+    let rows = args.get_usize("rows", 2000);
+    let cols = args.get_usize("cols", 6);
+    let seed = args.get_u64("seed", 42);
+
+    let client = Arc::new(
+        session_builder(args)
+            .service_workers(args.get_usize("jobs", 4).max(1))
+            .queue_capacity(args.get_usize("queue", 64))
+            .engine_shards(args.get_usize("shards", 1))
+            .connect(&connect)
+            .build_client()?,
+    );
+    println!(
+        "loadgen        : {} jobs, {} closed-loop submitters, {} inputs, target = {} \
+         (backend={} hosts={} shards={})",
+        total,
+        concurrency,
+        inputs,
+        if connect.is_empty() { "in-process".to_string() } else { connect.join(",") },
+        client.backend_desc(),
+        client.procs(),
+        client.shards(),
+    );
+
+    let entries = synthetic_manifest(total, inputs, rows, cols, seed);
+    // ingest each distinct input once, up front (entries sharing a
+    // name share rows/cols/seed by construction)
+    let mut handles = std::collections::HashMap::new();
+    for e in &entries {
+        if !handles.contains_key(&e.name) {
+            handles.insert(e.name.clone(), client.ingest_gaussian(&e.name, e.rows, e.cols, e.seed)?);
+        }
+    }
+    let handles = Arc::new(handles);
+    let entries = Arc::new(entries);
+
+    let next = Arc::new(AtomicUsize::new(0));
+    let failures: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let t0 = std::time::Instant::now();
+    let submitters: Vec<_> = (0..concurrency)
+        .map(|_| {
+            let (client, entries, handles) = (client.clone(), entries.clone(), handles.clone());
+            let (next, failures) = (next.clone(), failures.clone());
+            std::thread::spawn(move || {
+                // per-thread latency samples, merged after the join
+                let mut latencies = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= entries.len() {
+                        return latencies;
+                    }
+                    let entry = &entries[i];
+                    let input = &handles[&entry.name];
+                    let started = std::time::Instant::now();
+                    let outcome = client
+                        .submit(input, entry.request())
+                        .and_then(|job| job.wait().map(|_| job.id()));
+                    match outcome {
+                        Ok(id) => {
+                            latencies.push(started.elapsed().as_secs_f64());
+                            // keep the DFS bounded across thousands of jobs
+                            let _ = client.evict_job(id);
+                        }
+                        Err(err) => {
+                            failures.lock().expect("failure log").push(format!("{err:#}"));
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    let mut latencies: Vec<f64> = Vec::with_capacity(total);
+    for submitter in submitters {
+        latencies.extend(submitter.join().expect("submitter thread"));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let failed = failures.lock().expect("failure log").len();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let pct = |p: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        let idx = ((latencies.len() as f64 * p).ceil() as usize).clamp(1, latencies.len());
+        latencies[idx - 1]
+    };
+    let mean = if latencies.is_empty() {
+        0.0
+    } else {
+        latencies.iter().sum::<f64>() / latencies.len() as f64
+    };
+    let (p50, p95, p99) = (pct(0.50), pct(0.95), pct(0.99));
+    let max = latencies.last().copied().unwrap_or(0.0);
+    let throughput = latencies.len() as f64 / elapsed.max(1e-9);
+
+    println!("completed      : {} ok, {failed} failed in {elapsed:.3} s", latencies.len());
+    println!("throughput     : {throughput:.2} jobs/s");
+    println!(
+        "latency        : p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} ms, mean {:.1} ms, max {:.1} ms",
+        p50 * 1e3,
+        p95 * 1e3,
+        p99 * 1e3,
+        mean * 1e3,
+        max * 1e3
+    );
+    if failed > 0 {
+        let log = failures.lock().expect("failure log");
+        for msg in log.iter().take(3) {
+            eprintln!("loadgen failure: {msg}");
+        }
+    }
+
+    if let Some(path) = args.get("bench-json") {
+        let report = Json::obj([
+            ("jobs", Json::num(total as f64)),
+            ("concurrency", Json::num(concurrency as f64)),
+            ("hosts", Json::num(client.procs() as f64)),
+            ("shards", Json::num(client.shards() as f64)),
+            ("elapsed_secs", Json::num(elapsed)),
+            ("throughput_jobs_per_sec", Json::num(throughput)),
+            (
+                "latency",
+                Json::obj([
+                    ("p50_ms", Json::num(p50 * 1e3)),
+                    ("p95_ms", Json::num(p95 * 1e3)),
+                    ("p99_ms", Json::num(p99 * 1e3)),
+                    ("mean_ms", Json::num(mean * 1e3)),
+                    ("max_ms", Json::num(max * 1e3)),
+                ]),
+            ),
+            ("failed", Json::num(failed as f64)),
+        ]);
+        std::fs::write(path, report.render() + "\n")
+            .with_context(|| format!("writing {path:?}"))?;
+        println!("bench json     : {path}");
+    }
+    if failed > 0 {
+        anyhow::bail!("{failed} of {total} loadgen jobs failed");
+    }
+    Ok(())
 }
 
 fn cmd_info() -> Result<()> {
@@ -450,14 +674,21 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|batch|serve|worker|stability|faults|model|info> [options]
+const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|batch|serve|loadgen|worker|stability|faults|model|info> [options]
   common options: --rows N --cols N --seed N --pjrt
                   --algo <auto|cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder>
                   --beta-r s/GB --beta-w s/GB --byte-scale X
                   --host-threads N   (worker threads for task bodies; results identical for any N)
+                  --fault-prob P --fault-attempts N --fault-waste F --fault-seed N  (fault injection)
+                  --request-timeout SECS   (per-request deadline on the Process/Tcp transports)
   batch options:  --manifest FILE --jobs N --shards N --worker-procs N --queue N [--serial] [--json PATH]
+                  --connect host:port[,host:port...]   (drive remote `serve --listen` hosts instead)
                   (manifest lines: name rows cols seed <qr|r|svd|sigma> <algo> [low|normal|high] [@shard])
-  serve options:  --jobs N --shards N --worker-procs N --queue N   (wire protocol on stdin/stdout)
+  serve options:  --jobs N --shards N --worker-procs N --queue N
+                  default: wire protocol on stdin/stdout; --listen host:port serves TCP instead
+  loadgen options: --connect host:port[,...] --jobs-total N --concurrency N --inputs K
+                  --rows N --cols N --seed N [--bench-json PATH]
+                  (without --connect: in-process pool from --jobs/--shards, like batch)
   worker:         no options — spawned by the Process transport; config arrives in the Hello handshake
   see README.md for the full list";
 
@@ -469,6 +700,7 @@ fn main() -> Result<()> {
         Some("sigma") => cmd_sigma(&args),
         Some("batch") => cmd_batch(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("worker") => mrtsqr::client::worker::run_worker(),
         Some("stability") => cmd_stability(&args),
         Some("faults") => cmd_faults(&args),

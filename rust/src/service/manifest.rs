@@ -152,6 +152,59 @@ pub fn parse_manifest(text: &str) -> Result<Vec<BatchEntry>> {
     Ok(out)
 }
 
+/// Generate a synthetic batch of `jobs` entries for load generation
+/// (`mrtsqr loadgen`): the 8-way mixed request cycle the determinism
+/// suites exercise (every `want`, fixed and auto algorithms, all three
+/// priorities), over `inputs` distinct gaussian matrices reused
+/// round-robin. Entries sharing an input name share its
+/// rows/cols/seed, so each input is ingested once however many jobs
+/// read it. Deterministic: the same arguments always produce the same
+/// manifest.
+pub fn synthetic_manifest(
+    jobs: usize,
+    inputs: usize,
+    base_rows: usize,
+    cols: usize,
+    seed: u64,
+) -> Vec<BatchEntry> {
+    let inputs = inputs.max(1);
+    let cols = cols.max(2);
+    (0..jobs)
+        .map(|i| {
+            let k = i % inputs;
+            // the same 8-request mix as rust/tests/client.rs, cycled
+            let (want, algo, priority) = match i % 8 {
+                0 => (Want::Qr, AlgoChoice::Auto, Priority::Normal),
+                1 => (Want::Qr, AlgoChoice::Fixed(Algorithm::DirectTsqr), Priority::Normal),
+                2 => (Want::Qr, AlgoChoice::Fixed(Algorithm::DirectTsqrFused), Priority::High),
+                3 => (Want::ROnly, AlgoChoice::Auto, Priority::Normal),
+                4 => (
+                    Want::ROnly,
+                    AlgoChoice::Fixed(Algorithm::Cholesky { refine: false }),
+                    Priority::Normal,
+                ),
+                5 => (Want::Svd, AlgoChoice::Auto, Priority::Normal),
+                6 => (Want::SingularValues, AlgoChoice::Auto, Priority::Low),
+                _ => (
+                    Want::Qr,
+                    AlgoChoice::Fixed(Algorithm::IndirectTsqr { refine: true }),
+                    Priority::Normal,
+                ),
+            };
+            BatchEntry {
+                name: format!("gen-{k}"),
+                rows: base_rows + 40 * k,
+                cols: cols + k % 3,
+                seed: seed.wrapping_add(k as u64),
+                want,
+                algo,
+                priority,
+                placement: Placement::Auto,
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +257,30 @@ A4      20000  8     4     sigma  indirect @0
         assert_eq!(req.algo, AlgoChoice::Fixed(Algorithm::DirectTsqr));
         assert_eq!(req.priority, Priority::High);
         assert_eq!(req.label.as_deref(), Some("hot"));
+    }
+
+    #[test]
+    fn synthetic_manifest_is_deterministic_and_input_consistent() {
+        let a = synthetic_manifest(20, 3, 1000, 6, 42);
+        let b = synthetic_manifest(20, 3, 1000, 6, 42);
+        assert_eq!(a, b, "same arguments, same manifest");
+        assert_eq!(a.len(), 20);
+        // entries sharing a name must agree on rows/cols/seed — one
+        // ingestion serves them all
+        let mut shapes: std::collections::HashMap<&str, (usize, usize, u64)> =
+            std::collections::HashMap::new();
+        for e in &a {
+            let shape = (e.rows, e.cols, e.seed);
+            assert_eq!(*shapes.entry(&e.name).or_insert(shape), shape, "{}", e.name);
+        }
+        assert_eq!(shapes.len(), 3, "three distinct inputs");
+        // the mix covers every want and all three priorities
+        for want in [Want::Qr, Want::ROnly, Want::Svd, Want::SingularValues] {
+            assert!(a.iter().any(|e| e.want == want), "{want:?} missing");
+        }
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert!(a.iter().any(|e| e.priority == p), "{p:?} missing");
+        }
     }
 
     #[test]

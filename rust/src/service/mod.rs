@@ -81,7 +81,7 @@
 
 pub mod manifest;
 
-pub use manifest::{parse_manifest, BatchEntry};
+pub use manifest::{parse_manifest, synthetic_manifest, BatchEntry};
 
 use crate::coordinator::{lock_engine, CoordOpts, Coordinator, MatrixHandle};
 use crate::dfs::Dfs;

@@ -3,6 +3,7 @@
 //! place.
 
 use super::TsqrSession;
+use crate::client::net::{NetOptions, TcpTransport};
 use crate::client::process::{default_worker_binary, ProcessTransport};
 use crate::client::{LocalTransport, TsqrClient, WorkerConfig};
 use crate::coordinator::CoordOpts;
@@ -13,6 +14,7 @@ use crate::service::{ServiceConfig, TsqrService};
 use anyhow::{ensure, Result};
 use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
+use std::time::Duration;
 
 /// Compute-backend selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -135,6 +137,14 @@ pub struct SessionBuilder {
     worker_procs: usize,
     /// Override for the `mrtsqr` binary the `Process` transport spawns.
     worker_binary: Option<PathBuf>,
+    /// Remote `mrtsqr serve --listen` addresses — non-empty selects the
+    /// `Tcp` transport (mutually exclusive with `worker_procs ≥ 1`).
+    connect_addrs: Vec<String>,
+    /// Explicit per-request reply deadline. `None` = transport default:
+    /// wait forever on pipes, the `NetOptions` default on sockets.
+    request_timeout: Option<Duration>,
+    /// The remaining `Tcp`-transport knobs.
+    net: NetOptions,
 }
 
 impl SessionBuilder {
@@ -150,6 +160,9 @@ impl SessionBuilder {
             service: ServiceConfig::default(),
             worker_procs: 0,
             worker_binary: None,
+            connect_addrs: Vec::new(),
+            request_timeout: None,
+            net: NetOptions::default(),
         }
     }
 
@@ -173,6 +186,9 @@ impl SessionBuilder {
             },
             worker_procs: 0,
             worker_binary: None,
+            connect_addrs: Vec::new(),
+            request_timeout: None,
+            net: NetOptions::default(),
         }
     }
 
@@ -323,6 +339,59 @@ impl SessionBuilder {
         self
     }
 
+    /// Drive remote `mrtsqr serve --listen` hosts instead of local
+    /// worker processes: a [`TsqrClient`] built from this builder uses
+    /// the `Tcp` transport ([`crate::client::TcpTransport`]), one
+    /// connection per address, with the servers' own engine topology
+    /// (their `--shards` wins; every host must serve the same count).
+    /// Mutually exclusive with [`SessionBuilder::worker_processes`].
+    /// Global shard `k` means (host `k / shards_per_host`, local shard
+    /// `k % shards_per_host`) — the process-transport flattening one
+    /// level up, with the same bit-identity guarantee
+    /// (`rust/tests/tcp.rs`).
+    pub fn connect<S: AsRef<str>>(mut self, addrs: &[S]) -> Self {
+        self.connect_addrs = addrs.iter().map(|a| a.as_ref().to_string()).collect();
+        self
+    }
+
+    /// Reply deadline for every wire request (pipe and TCP transports):
+    /// a request unanswered within `timeout` fails and marks the peer
+    /// *suspect* — skipped by Auto routing until it speaks again —
+    /// instead of wedging the client thread behind a stuck peer.
+    /// Default: wait forever on pipes, 30 s on TCP.
+    pub fn request_timeout(mut self, timeout: Duration) -> Self {
+        self.request_timeout = Some(timeout);
+        self
+    }
+
+    /// Dial deadline per TCP connection attempt (default 5 s).
+    pub fn connect_timeout(mut self, timeout: Duration) -> Self {
+        self.net.connect_timeout = timeout;
+        self
+    }
+
+    /// Cadence of the TCP keeper's health pings and reconnect attempts
+    /// (default 500 ms).
+    pub fn net_health_interval(mut self, interval: Duration) -> Self {
+        self.net.health_interval = interval.max(Duration::from_millis(1));
+        self
+    }
+
+    /// Health-ping round-trip above which a host counts as *lagging*:
+    /// Auto jobs route around it while any brisk host is available
+    /// (default 250 ms). Pins ignore lag.
+    pub fn net_lag_threshold(mut self, threshold: Duration) -> Self {
+        self.net.lag_threshold = threshold;
+        self
+    }
+
+    /// Consecutive failed reconnect dials before a host is condemned
+    /// and its parked jobs fail with a precise error (default 5).
+    pub fn net_reconnect_attempts(mut self, attempts: usize) -> Self {
+        self.net.max_reconnect_attempts = attempts.max(1);
+        self
+    }
+
     fn into_cluster_parts(self) -> Result<ClusterParts> {
         let (compute, backend_desc) = match self.compute {
             Some(c) => (c, "custom"),
@@ -371,8 +440,38 @@ impl SessionBuilder {
     /// client wraps an in-process [`TsqrService`] (the `Local`
     /// transport, zero behavior change); with `n ≥ 1` it spawns `n`
     /// `mrtsqr worker` processes and speaks the framed wire protocol
-    /// (the `Process` transport). See [`crate::client`].
+    /// (the `Process` transport); with [`SessionBuilder::connect`]
+    /// addresses it dials remote `mrtsqr serve` hosts (the `Tcp`
+    /// transport). See [`crate::client`].
     pub fn build_client(self) -> Result<TsqrClient> {
+        if !self.connect_addrs.is_empty() {
+            ensure!(
+                self.worker_procs == 0,
+                "connect(addrs) and worker_processes(n ≥ 1) are mutually exclusive — \
+                 a client drives either remote hosts or local child processes"
+            );
+            ensure!(
+                self.compute.is_none(),
+                "a custom compute backend cannot cross the network — \
+                 connect() talks to servers that resolved their own backend"
+            );
+            let cfg = WorkerConfig {
+                model: self.model,
+                cluster: self.cluster,
+                faults: self.faults,
+                opts: self.opts,
+                backend: self.backend,
+                engine_shards: self.service.engine_shards.max(1),
+                service_workers: self.service.workers,
+                queue_capacity: self.service.queue_capacity.max(1),
+            };
+            let mut net = self.net;
+            if let Some(timeout) = self.request_timeout {
+                net.request_timeout = Some(timeout);
+            }
+            let transport = TcpTransport::connect(&self.connect_addrs, cfg, net)?;
+            return Ok(TsqrClient::new(Box::new(transport)));
+        }
         if self.worker_procs == 0 {
             let svc = self.build_service()?;
             return Ok(TsqrClient::new(Box::new(LocalTransport::new(svc))));
@@ -396,7 +495,8 @@ impl SessionBuilder {
             Some(path) => path,
             None => default_worker_binary()?,
         };
-        let transport = ProcessTransport::launch(cfg, self.worker_procs, program)?;
+        let transport =
+            ProcessTransport::launch(cfg, self.worker_procs, program, self.request_timeout)?;
         Ok(TsqrClient::new(Box::new(transport)))
     }
 }

@@ -1,0 +1,351 @@
+//! The network transport contract (mirror of `rust/tests/client.rs`
+//! for the socket axis): *which host serves a job is pure placement*.
+//!
+//! Four invariants:
+//!
+//! 1. The 8-job mixed manifest through a loopback `TcpServer` is
+//!    bit-identical — `R`, `Q`, Σ, `virtual_secs`, fault draws,
+//!    `result_digest` — to the same pool driven in-process. Sockets
+//!    are framing, nothing more.
+//! 2. A peer speaking another protocol version gets a clean `Op::Err`
+//!    frame naming both versions, not a silent hangup.
+//! 3. A connection killed mid-batch recovers by reconnect-and-resubmit:
+//!    the disturbed run's results are bit-identical to an undisturbed
+//!    one (the server's retained job registry re-attaches resubmitted
+//!    ids instead of recomputing).
+//! 4. A host that never comes back is *condemned*: its parked jobs fail
+//!    with a precise reconnect story — never hang, never vanish — and
+//!    health checks route `Auto` work to the survivors.
+
+use mrtsqr::client::wire::{self, Op, WireReader, WIRE_MAGIC, WIRE_VERSION};
+use mrtsqr::client::{TcpServer, TsqrClient};
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::mapreduce::FaultPolicy;
+use mrtsqr::session::{Backend, FactorizationRequest, Priority, SessionBuilder};
+use mrtsqr::{Factorization, MatrixHandle};
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn builder() -> SessionBuilder {
+    mrtsqr::TsqrSession::builder()
+        .backend(Backend::Native)
+        .rows_per_task(50)
+        .fault_policy(FaultPolicy { probability: 0.15, max_attempts: 16, waste_fraction: 0.5 }, 777)
+}
+
+/// The topology every server in this suite runs: the same
+/// `engine_shards(4)` pool `tests/client.rs` uses as its in-process
+/// baseline.
+fn server_builder() -> SessionBuilder {
+    builder().engine_shards(4).service_workers(2).queue_capacity(8)
+}
+
+/// Bind a loopback server on a free port and hand back its address.
+fn start_server() -> (TcpServer, String) {
+    let server = TcpServer::bind(server_builder().build_client().unwrap(), "127.0.0.1:0")
+        .unwrap();
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+/// The acceptance mix: 8 jobs covering QR / R-only / SVD / Σ, Auto and
+/// Fixed algorithms — the same mix `tests/client.rs` pins its
+/// invariants on.
+fn mixed_requests() -> Vec<FactorizationRequest> {
+    vec![
+        FactorizationRequest::qr(),
+        FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr),
+        FactorizationRequest::qr()
+            .with_algorithm(Algorithm::DirectTsqrFused)
+            .with_priority(Priority::High),
+        FactorizationRequest::r_only(),
+        FactorizationRequest::r_only().with_algorithm(Algorithm::Cholesky { refine: false }),
+        FactorizationRequest::svd(),
+        FactorizationRequest::singular_values().with_priority(Priority::Low),
+        FactorizationRequest::qr().with_algorithm(Algorithm::IndirectTsqr { refine: true }),
+    ]
+}
+
+/// Run the mixed manifest through a client: ingest, submit everything,
+/// run `after_submit` (the disturbance hook — kill a connection here),
+/// then wait and read the Q factors back. Single-threaded submission
+/// keeps global job ids — and with them namespaces and fault streams —
+/// lined up across configurations.
+fn run_mixed(
+    client: &TsqrClient,
+    base_rows: usize,
+    row_step: usize,
+    after_submit: impl FnOnce(&TsqrClient),
+) -> Vec<(Arc<Factorization>, Vec<f64>)> {
+    let requests = mixed_requests();
+    let inputs: Vec<MatrixHandle> = (0..requests.len())
+        .map(|i| {
+            client
+                .ingest_gaussian(&format!("A{i}"), base_rows + row_step * i, 4 + i % 3, i as u64)
+                .unwrap()
+        })
+        .collect();
+    let handles: Vec<_> = inputs
+        .iter()
+        .zip(&requests)
+        .map(|(h, req)| client.submit(h, req.clone()).unwrap())
+        .collect();
+    after_submit(client);
+    handles
+        .iter()
+        .map(|h| {
+            let fact = h.wait().unwrap();
+            let q = fact
+                .q
+                .as_ref()
+                .map(|qh| client.get_matrix(qh).unwrap().data)
+                .unwrap_or_default();
+            (fact, q)
+        })
+        .collect()
+}
+
+fn run_client(client: &TsqrClient) -> Vec<(Arc<Factorization>, Vec<f64>)> {
+    run_mixed(client, 300, 40, |_| {})
+}
+
+/// Field-by-field bitwise comparison of two runs of the same manifest.
+fn assert_bit_identical(
+    baseline: &[(Arc<Factorization>, Vec<f64>)],
+    other: &[(Arc<Factorization>, Vec<f64>)],
+) {
+    assert_eq!(baseline.len(), other.len());
+    for (idx, ((want, want_q), (got, got_q))) in baseline.iter().zip(other).enumerate() {
+        let ctx = format!("request {idx} ({})", want.algorithm.name());
+        assert_eq!(got.algorithm, want.algorithm, "{ctx}: algorithm");
+        assert_eq!((got.r.rows, got.r.cols), (want.r.rows, want.r.cols), "{ctx}: R shape");
+        for (a, b) in got.r.data.iter().zip(&want.r.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: R drifted");
+        }
+        assert_eq!(
+            got.stats.virtual_secs().to_bits(),
+            want.stats.virtual_secs().to_bits(),
+            "{ctx}: virtual_secs drifted ({} vs {})",
+            got.stats.virtual_secs(),
+            want.stats.virtual_secs()
+        );
+        assert_eq!(got.stats.steps.len(), want.stats.steps.len(), "{ctx}: step count");
+        assert_eq!(
+            got.stats.total_faults(),
+            want.stats.total_faults(),
+            "{ctx}: fault draws drifted with placement"
+        );
+        for (a, b) in got.stats.steps.iter().zip(&want.stats.steps) {
+            assert_eq!(a.faults, b.faults, "{ctx}: per-step faults (step {})", a.name);
+            assert_eq!(
+                a.virtual_secs.to_bits(),
+                b.virtual_secs.to_bits(),
+                "{ctx}: per-step virtual clock (step {})",
+                a.name
+            );
+        }
+        assert_eq!(got_q.len(), want_q.len(), "{ctx}: Q shape");
+        for (a, b) in got_q.iter().zip(want_q) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: Q drifted");
+        }
+        match (got.sigma(), want.sigma()) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.len(), b.len(), "{ctx}: sigma length");
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: sigma drifted");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("{ctx}: sigma presence differs"),
+        }
+        match (&got.auto, &want.auto) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.kappa_estimate.to_bits(), b.kappa_estimate.to_bits(), "{ctx}");
+                assert_eq!(a.chosen, b.chosen, "{ctx}");
+            }
+            (None, None) => {}
+            _ => panic!("{ctx}: auto presence differs"),
+        }
+        assert_eq!(got.result_digest(), want.result_digest(), "{ctx}: digest");
+    }
+}
+
+/// Invariant 1 (the headline): the mixed manifest over loopback TCP ≡
+/// the same pool in-process, bit for bit, fault draw for fault draw.
+#[test]
+fn loopback_tcp_is_bit_identical_to_in_process() {
+    let in_process = server_builder().build_client().unwrap();
+    assert_eq!((in_process.procs(), in_process.shards()), (1, 4));
+    let baseline = run_client(&in_process);
+    assert!(
+        baseline.iter().map(|(f, _)| f.stats.total_faults()).sum::<usize>() > 0,
+        "faults should fire at p=0.15 so the fault-draw comparison is non-vacuous"
+    );
+
+    let (_server, addr) = start_server();
+    let tcp = builder().connect(&[addr]).build_client().unwrap();
+    assert_eq!((tcp.procs(), tcp.shards()), (1, 4), "one host serving four shards");
+    let via_tcp = run_client(&tcp);
+    assert_bit_identical(&baseline, &via_tcp);
+}
+
+/// Remote lifecycle smoke over a socket: status, wall clock, Q
+/// readback, eviction, and the operations a shared server refuses.
+#[test]
+fn remote_jobs_expose_the_full_lifecycle_over_tcp() {
+    let (_server, addr) = start_server();
+    let client = builder().connect(&[addr]).build_client().unwrap();
+    let h = client.ingest_gaussian("A", 400, 5, 3).unwrap();
+    let job = client
+        .submit(&h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr))
+        .unwrap();
+    let fact = job.wait().unwrap();
+    assert_eq!(job.status(), mrtsqr::JobStatus::Done);
+    assert!(job.wall_secs().unwrap() >= 0.0);
+    // Q flows back over the wire with a sane orthogonality error
+    let q = client.get_matrix(fact.q.as_ref().unwrap()).unwrap();
+    assert!(q.orthogonality_error() < 1e-10);
+    // eviction sweeps the job namespace on the serving host
+    assert!(client.evict_job(job.id()).unwrap() > 0);
+    assert!(client.get_matrix(fact.q.as_ref().unwrap()).is_err(), "evicted Q gone");
+    // cancel on a finished job is a no-op
+    assert!(!job.cancel());
+    // drain_now cannot reach across the network
+    assert!(client.drain_now().is_err());
+}
+
+/// Invariant 2: a frame claiming another protocol version is answered
+/// with a clean `Op::Err` naming both versions (at the offending
+/// req_id), not a silent connection drop.
+#[test]
+fn version_mismatch_is_rejected_with_a_clean_error_frame() {
+    let (_server, addr) = start_server();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    // a hand-built Hello header claiming the *next* protocol version
+    let mut header = [0u8; 20];
+    header[0..4].copy_from_slice(&WIRE_MAGIC);
+    header[4..6].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+    header[6..8].copy_from_slice(&(Op::Hello as u16).to_le_bytes());
+    header[8..16].copy_from_slice(&7u64.to_le_bytes());
+    header[16..20].copy_from_slice(&0u32.to_le_bytes());
+    stream.write_all(&header).unwrap();
+    stream.flush().unwrap();
+
+    let frame = wire::read_frame(&mut stream)
+        .unwrap()
+        .expect("an error reply, not a hangup");
+    assert_eq!((frame.op, frame.req_id), (Op::Err, 7), "clean Err at the offending req_id");
+    let mut r = WireReader::new(&frame.payload);
+    let msg = r.str().unwrap();
+    assert!(msg.contains("version"), "{msg}");
+    assert!(
+        msg.contains(&(WIRE_VERSION + 1).to_string()) && msg.contains(&WIRE_VERSION.to_string()),
+        "the error should name both versions: {msg}"
+    );
+}
+
+/// Invariant 3: kill the connection mid-batch; the transport reconnects
+/// and resubmits every parked job under its original id, the server's
+/// retained registry re-attaches instead of recomputing, and the
+/// results are bit-identical to an undisturbed run.
+#[test]
+fn connection_kill_recovers_by_resubmission_with_identical_digests() {
+    // rows large enough that jobs are still queued/running when the
+    // kill lands (either way is fine: a job that finished before the
+    // reconnect re-pushes its retained result, one still in flight
+    // re-attaches — determinism makes both paths identical)
+    let in_process = server_builder().build_client().unwrap();
+    let baseline = run_mixed(&in_process, 10_000, 2_000, |_| {});
+
+    let (_server, addr) = start_server();
+    let tcp = builder()
+        .connect(&[addr])
+        .net_health_interval(Duration::from_millis(50))
+        .build_client()
+        .unwrap();
+    let disturbed = run_mixed(&tcp, 10_000, 2_000, |c| {
+        // sever the only connection with all 8 jobs submitted
+        c.kill_worker(0).unwrap();
+    });
+    assert_bit_identical(&baseline, &disturbed);
+}
+
+/// Invariant 4a: health checks condemn a host that stops answering and
+/// route `Auto` jobs to the survivors; pinning to the corpse errors at
+/// submission.
+#[test]
+fn health_checks_route_auto_jobs_around_a_stopped_server() {
+    let bind_small = || {
+        let client = builder()
+            .engine_shards(1)
+            .service_workers(1)
+            .queue_capacity(8)
+            .build_client()
+            .unwrap();
+        let server = TcpServer::bind(client, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        (server, addr)
+    };
+    let (_a, addr_a) = bind_small();
+    let (mut b, addr_b) = bind_small();
+    let client = builder()
+        .connect(&[addr_a, addr_b])
+        .request_timeout(Duration::from_secs(10))
+        .net_health_interval(Duration::from_millis(50))
+        .net_reconnect_attempts(2)
+        .build_client()
+        .unwrap();
+    assert_eq!((client.procs(), client.shards()), (2, 2), "two hosts, one shard each");
+
+    // both alive: global pins address the flattened host×shard space
+    let h = client.ingest_gaussian("A", 300, 4, 1).unwrap();
+    let on_b = client
+        .submit(&h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(1))
+        .unwrap();
+    assert_eq!(on_b.wait().unwrap().stats.shard, 1, "Pinned(1) lands on host 1");
+
+    b.shutdown();
+    // keeper cadence 50ms × 2 reconnect attempts: well condemned by now
+    std::thread::sleep(Duration::from_millis(600));
+
+    let rerouted = client.submit(&h, FactorizationRequest::r_only()).unwrap();
+    assert_eq!(
+        rerouted.wait().unwrap().stats.shard,
+        0,
+        "auto placement must avoid the dead host"
+    );
+    let err = client
+        .submit(&h, FactorizationRequest::r_only().pinned(1))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("dead"), "{err:#}");
+}
+
+/// Invariant 4b: when the only host never comes back, its parked jobs
+/// fail with the reconnect story — a precise error, not a hang.
+#[test]
+fn parked_jobs_fail_precisely_when_the_host_never_returns() {
+    let (mut server, addr) = start_server();
+    let client = builder()
+        .connect(&[addr])
+        .net_health_interval(Duration::from_millis(50))
+        .net_reconnect_attempts(2)
+        .build_client()
+        .unwrap();
+    // big enough that it cannot complete in the instants before the
+    // shutdown severs the connection
+    let h = client.ingest_gaussian("B", 200_000, 8, 2).unwrap();
+    let job = client
+        .submit(&h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr))
+        .unwrap();
+    server.shutdown();
+
+    let err = job.wait().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("host 0"), "the error names the corpse: {msg}");
+    assert!(msg.contains("reconnect"), "the error tells the reconnect story: {msg}");
+    assert_eq!(job.status(), mrtsqr::JobStatus::Failed);
+    // the condemned host stays condemned: new submissions fail fast
+    assert!(client.submit(&h, FactorizationRequest::r_only()).is_err());
+}
