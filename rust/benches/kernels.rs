@@ -1,0 +1,198 @@
+//! Kernel microbenchmarks — the L1 blocked-compute layer on its own,
+//! no engine, no DFS, no virtual clock.
+//!
+//! Three legs, each pinning one claim from the PR that introduced the
+//! blocked kernels:
+//!
+//! 1. **panel**: blocked Householder QR vs the textbook reference on
+//!    tall panels (4096 × {16, 32, 64}). `R` is bit-identical by
+//!    construction (`rust/tests/kernels.rs`); this table shows the
+//!    wall-clock side of that trade — the deferred two-pass trailing
+//!    update touches each work row once per panel instead of once per
+//!    column.
+//! 2. **gemm**: the tiled microkernel vs a naive triple loop on the
+//!    `matmul`/`gram` shapes the pipelines hit (Q·R-sized products).
+//! 3. **batch**: `factor_blocks` over a step-1-shaped batch vs the
+//!    same blocks factored one `blocked_qr` call at a time (the
+//!    workspace amortization the engine's batched dispatch buys).
+//!
+//! `--bench-json PATH` records the numbers for the BENCH_7.json
+//! trajectory; `MRTSQR_BENCH_QUICK=1` (or `--quick`) shrinks shapes.
+
+use mrtsqr::linalg::{blocked_qr, factor_blocks, householder_qr_reference, Matrix, DEFAULT_PANEL};
+use mrtsqr::util::bench::{arg_value, quick_mode, time, Sample};
+use mrtsqr::util::json::Json;
+use mrtsqr::util::table::Table;
+use mrtsqr::util::rng::Rng;
+
+fn gaussian(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let data = (0..rows * cols).map(|_| rng.gaussian()).collect();
+    Matrix::from_rows(rows, cols, data)
+}
+
+/// Naive triple-loop matmul — the pre-kernel baseline for the gemm leg.
+fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut acc = 0.0;
+            for k in 0..a.cols {
+                acc += a.data[i * a.cols + k] * b.data[k * b.cols + j];
+            }
+            c.data[i * b.cols + j] = acc;
+        }
+    }
+    c
+}
+
+fn panel_leg(quick: bool) -> Vec<(String, Sample, Sample)> {
+    let rows = if quick { 1024 } else { 4096 };
+    let (warmup, iters) = if quick { (1, 3) } else { (2, 7) };
+    let mut out = Vec::new();
+    let mut table = Table::new(
+        "Blocked panel QR vs textbook reference (R bit-identical; wall clock moves)",
+        &["shape", "reference (s)", "blocked (s)", "speedup"],
+    );
+    for &cols in &[16usize, 32, 64] {
+        let a = gaussian(rows, cols, cols as u64);
+        let reference = time(warmup, iters, || {
+            std::hint::black_box(householder_qr_reference(&a));
+        });
+        let blocked = time(warmup, iters, || {
+            std::hint::black_box(blocked_qr(&a, DEFAULT_PANEL));
+        });
+        table.row(&[
+            format!("{rows}x{cols}"),
+            format!("{:.4}", reference.median_secs),
+            format!("{:.4}", blocked.median_secs),
+            format!("{:.2}x", reference.median_secs / blocked.median_secs),
+        ]);
+        out.push((format!("{rows}x{cols}"), reference, blocked));
+    }
+    table.print();
+    out
+}
+
+fn gemm_leg(quick: bool) -> Vec<(String, Sample, Sample)> {
+    let m = if quick { 512 } else { 2048 };
+    let (warmup, iters) = if quick { (1, 3) } else { (2, 7) };
+    let mut out = Vec::new();
+    let mut table = Table::new(
+        "Tiled gemm microkernel vs naive triple loop (same bits by k-order contract)",
+        &["shape", "naive (s)", "tiled (s)", "speedup"],
+    );
+    for &n in &[16usize, 64] {
+        let a = gaussian(m, n, 7);
+        let b = gaussian(n, n, 8);
+        let naive = time(warmup, iters, || {
+            std::hint::black_box(matmul_naive(&a, &b));
+        });
+        let tiled = time(warmup, iters, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        table.row(&[
+            format!("{m}x{n} * {n}x{n}"),
+            format!("{:.4}", naive.median_secs),
+            format!("{:.4}", tiled.median_secs),
+            format!("{:.2}x", naive.median_secs / tiled.median_secs),
+        ]);
+        out.push((format!("{m}x{n}*{n}x{n}"), naive, tiled));
+    }
+    table.print();
+    out
+}
+
+fn batch_leg(quick: bool) -> (usize, Sample, Sample) {
+    let (blocks, rows, cols) = if quick { (16, 256, 16) } else { (64, 1000, 25) };
+    let (warmup, iters) = if quick { (1, 3) } else { (2, 7) };
+    let inputs: Vec<Matrix> =
+        (0..blocks).map(|i| gaussian(rows, cols, 100 + i as u64)).collect();
+    let per_block = time(warmup, iters, || {
+        for a in &inputs {
+            std::hint::black_box(blocked_qr(a, DEFAULT_PANEL));
+        }
+    });
+    let batched = time(warmup, iters, || {
+        std::hint::black_box(factor_blocks(&inputs, DEFAULT_PANEL));
+    });
+    let mut table = Table::new(
+        "Batched block factorization vs per-block calls (bits identical by contract)",
+        &["batch", "per-block (s)", "batched (s)", "speedup"],
+    );
+    table.row(&[
+        format!("{blocks} x ({rows}x{cols})"),
+        format!("{:.4}", per_block.median_secs),
+        format!("{:.4}", batched.median_secs),
+        format!("{:.2}x", per_block.median_secs / batched.median_secs),
+    ]);
+    table.print();
+    (blocks, per_block, batched)
+}
+
+fn sample_json(s: &Sample) -> Json {
+    Json::obj([
+        ("median_secs", Json::num(s.median_secs)),
+        ("min_secs", Json::num(s.min_secs)),
+        ("max_secs", Json::num(s.max_secs)),
+        ("iters", Json::num(s.iters as f64)),
+    ])
+}
+
+fn main() {
+    let quick = quick_mode();
+    let panels = panel_leg(quick);
+    let gemms = gemm_leg(quick);
+    let (batch_blocks, per_block, batched) = batch_leg(quick);
+
+    if let Some(path) = arg_value("bench-json") {
+        let report = Json::obj([
+            ("bench", Json::str("kernels")),
+            ("quick", Json::Bool(quick)),
+            (
+                "panel_qr",
+                Json::arr(
+                    panels
+                        .iter()
+                        .map(|(shape, reference, blocked)| {
+                            Json::obj([
+                                ("shape", Json::str(shape)),
+                                ("reference", sample_json(reference)),
+                                ("blocked", sample_json(blocked)),
+                                (
+                                    "speedup",
+                                    Json::num(reference.median_secs / blocked.median_secs),
+                                ),
+                            ])
+                        }),
+                ),
+            ),
+            (
+                "gemm",
+                Json::arr(
+                    gemms
+                        .iter()
+                        .map(|(shape, naive, tiled)| {
+                            Json::obj([
+                                ("shape", Json::str(shape)),
+                                ("naive", sample_json(naive)),
+                                ("tiled", sample_json(tiled)),
+                                ("speedup", Json::num(naive.median_secs / tiled.median_secs)),
+                            ])
+                        }),
+                ),
+            ),
+            (
+                "batch",
+                Json::obj([
+                    ("blocks", Json::num(batch_blocks as f64)),
+                    ("per_block", sample_json(&per_block)),
+                    ("batched", sample_json(&batched)),
+                    ("speedup", Json::num(per_block.median_secs / batched.median_secs)),
+                ]),
+            ),
+        ]);
+        std::fs::write(&path, report.render() + "\n").expect("write bench json");
+        println!("bench json -> {path}");
+    }
+}

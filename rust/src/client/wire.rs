@@ -49,8 +49,10 @@ pub const WIRE_MAGIC: [u8; 4] = *b"MRTQ";
 /// [`VersionMismatch`] error, so serving loops can reply with a clean
 /// [`Op::Err`] frame instead of hanging up silently). v2 added the
 /// [`Op::Ping`]/[`Op::Pong`] liveness probes used by the network
-/// transport's health checks.
-pub const WIRE_VERSION: u16 = 2;
+/// transport's health checks. v3 extended [`WorkerConfig`] with the
+/// kernel-tuning knobs (`panel_block`, `mixed_precision`) and
+/// [`AutoDecision`] with its `mixed_precision` marker.
+pub const WIRE_VERSION: u16 = 3;
 
 /// Upper bound on one frame's payload (1 GiB) — a corrupt length
 /// prefix must not look like an allocation request.
@@ -418,6 +420,7 @@ impl WireWriter {
         self.f64(d.threshold);
         self.algorithm(d.chosen);
         self.bool(d.probe_reused);
+        self.bool(d.mixed_precision);
     }
 
     pub fn factorization(&mut self, f: &Factorization) {
@@ -476,6 +479,14 @@ impl WireWriter {
                 self.u64(rows as u64);
             }
         }
+        match cfg.opts.panel_block {
+            None => self.u8(0),
+            Some(b) => {
+                self.u8(1);
+                self.u64(b as u64);
+            }
+        }
+        self.bool(cfg.opts.mixed_precision);
         self.u8(match cfg.backend {
             Backend::Auto => 0,
             Backend::Native => 1,
@@ -719,6 +730,7 @@ impl<'a> WireReader<'a> {
             threshold: self.f64()?,
             chosen: self.algorithm()?,
             probe_reused: self.bool()?,
+            mixed_precision: self.bool()?,
         })
     }
 
@@ -781,6 +793,12 @@ impl<'a> WireReader<'a> {
                 1 => Some(self.usize()?),
                 other => bail!("wire: bad option tag {other}"),
             },
+            panel_block: match self.u8()? {
+                0 => None,
+                1 => Some(self.usize()?),
+                other => bail!("wire: bad option tag {other}"),
+            },
+            mixed_precision: self.bool()?,
         };
         let backend = match self.u8()? {
             0 => Backend::Auto,
@@ -952,6 +970,7 @@ mod tests {
                 threshold: 1e3,
                 chosen: Algorithm::IndirectTsqr { refine: true },
                 probe_reused: true,
+                mixed_precision: true,
             }),
             stats: sample_stats(),
         };
@@ -1106,7 +1125,13 @@ mod tests {
                 FaultPolicy { probability: 0.125, max_attempts: 7, waste_fraction: 0.5 },
                 777,
             )),
-            opts: CoordOpts { rows_per_task: 50, reduce_tasks: 4, gather_limit: Some(99) },
+            opts: CoordOpts {
+                rows_per_task: 50,
+                reduce_tasks: 4,
+                gather_limit: Some(99),
+                panel_block: Some(8),
+                mixed_precision: true,
+            },
             backend: Backend::Native,
             engine_shards: 2,
             service_workers: 3,

@@ -123,7 +123,7 @@ mod tests {
     fn coord_with(a: &Matrix) -> (Coordinator<'static>, MatrixHandle) {
         let mut engine = Engine::new(crate::dfs::DiskModel::icme_like(), ClusterConfig::default());
         put_matrix(&mut engine.dfs, "A", a);
-        let coord = Coordinator::new(engine, &NativeRuntime);
+        let coord = Coordinator::new(engine, NativeRuntime::oracle());
         (coord, MatrixHandle::new("A", a.rows, a.cols))
     }
 

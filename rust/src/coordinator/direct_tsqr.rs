@@ -71,29 +71,101 @@ pub struct DirectOutput {
 
 struct Step1Map<'a> {
     compute: &'a dyn BlockCompute,
+    /// Factor through the κ-gated mixed-precision path (Auto opt-in,
+    /// depth 0 only — the recursive levels refactor tiny R stacks where
+    /// full precision is essentially free).
+    mixed: bool,
+}
+
+/// How many consecutive step-1 blocks one `factor_blocks` dispatch
+/// amortizes. Any value gives bit-identical results (the batched entry
+/// point's contract); 8 keeps a chunk's inputs + factors comfortably in
+/// cache for paper-sized blocks.
+const STEP1_BATCH: usize = 8;
+
+impl Step1Map<'_> {
+    /// Zero-pad a short block (rows < cols) up to square — exact, see
+    /// `runtime::pad` — returning the padded block and the original
+    /// row count.
+    fn padded(a: Matrix) -> (Matrix, usize) {
+        let rows = a.rows;
+        if a.rows >= a.cols {
+            (a, rows)
+        } else {
+            let pad = Matrix::zeros(a.cols - a.rows, a.cols);
+            (Matrix::vstack(&[&a, &pad]), rows)
+        }
+    }
+
+    /// Emit one factored block: R_i to the default channel (step-2
+    /// input), Q_i to the side file. The Q record carries 32 bytes of
+    /// row-key filler per row so the on-disk bytes match the paper's
+    /// Table III (`8mn + Km` of Q data in step 1's writes and step 3's
+    /// reads).
+    fn emit_factors(
+        task_id: usize,
+        first_row: u64,
+        orig_rows: usize,
+        q: &Matrix,
+        r: &Matrix,
+        out: &mut Emitter,
+    ) {
+        let q_slice;
+        let q = if q.rows > orig_rows {
+            q_slice = q.slice_rows(0, orig_rows);
+            &q_slice
+        } else {
+            q
+        };
+        out.emit(row_key(task_id as u64), encode_block(0, r));
+        out.emit_to(
+            "q1",
+            row_key(task_id as u64),
+            super::io::encode_block_with_filler(first_row, q, 32 * q.rows),
+        );
+    }
 }
 
 impl MapTask for Step1Map<'_> {
     fn run(&self, task_id: usize, input: &[Record], _side: &[&[Record]], out: &mut Emitter) -> Result<()> {
         let (a, first_row) = rows_to_block(input)?;
         // blocks shorter than n: zero-pad rows (exact; see runtime::pad)
-        let (q, r) = if a.rows >= a.cols {
-            self.compute.qr(&a)?
+        let (a, orig_rows) = Self::padded(a);
+        let (q, r) = if self.mixed { self.compute.qr_mixed(&a)? } else { self.compute.qr(&a)? };
+        Self::emit_factors(task_id, first_row, orig_rows, &q, &r, out);
+        Ok(())
+    }
+
+    fn batch_hint(&self) -> usize {
+        // the mixed path is per-block anyway (see run_batch), so keep
+        // its dispatch unbatched
+        if self.mixed {
+            1
         } else {
-            let pad = Matrix::zeros(a.cols - a.rows, a.cols);
-            let (qp, r) = self.compute.qr(&Matrix::vstack(&[&a, &pad]))?;
-            (qp.slice_rows(0, a.rows), r)
-        };
-        // R_i to the default channel (step-2 input), Q_i to the side
-        // file. The Q record carries 32 bytes of row-key filler per row
-        // so the on-disk bytes match the paper's Table III (`8mn + Km`
-        // of Q data in step 1's writes and step 3's reads).
-        out.emit(row_key(task_id as u64), encode_block(0, &r));
-        out.emit_to(
-            "q1",
-            row_key(task_id as u64),
-            super::io::encode_block_with_filler(first_row, &q, 32 * q.rows),
-        );
+            STEP1_BATCH
+        }
+    }
+
+    fn run_batch(
+        &self,
+        first_id: usize,
+        inputs: &[&[Record]],
+        _side: &[&[Record]],
+        outs: &mut [Emitter],
+    ) -> Result<()> {
+        let mut blocks = Vec::with_capacity(inputs.len());
+        let mut metas = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            let (a, first_row) = rows_to_block(input)?;
+            let (a, orig_rows) = Self::padded(a);
+            blocks.push(a);
+            metas.push((first_row, orig_rows));
+        }
+        let factors = self.compute.factor_blocks(&blocks)?;
+        ensure!(factors.len() == blocks.len(), "factor_blocks returned a short batch");
+        for (k, ((q, r), &(first_row, orig_rows))) in factors.iter().zip(&metas).enumerate() {
+            Self::emit_factors(first_id + k, first_row, orig_rows, q, r, &mut outs[k]);
+        }
         Ok(())
     }
 }
@@ -243,7 +315,7 @@ fn direct_tsqr_level(
     // R factors are O(m1·n²) metadata and stay at scale 1 (DESIGN.md §2).
     let data_scale = coord.dfs(|d| d.scale(&input.file));
     {
-        let mapper = Step1Map { compute: coord.compute };
+        let mapper = Step1Map { compute: coord.compute, mixed: coord.mixed_step1 && depth == 0 };
         let spec = JobSpec::map_only(
             &format!("direct-step1(d{depth})"),
             &input.file,
@@ -418,7 +490,7 @@ mod tests {
     fn coord_with(a: &Matrix) -> (Coordinator<'static>, MatrixHandle) {
         let mut engine = Engine::new(crate::dfs::DiskModel::icme_like(), ClusterConfig::default());
         put_matrix(&mut engine.dfs, "A", a);
-        (Coordinator::new(engine, &NativeRuntime), MatrixHandle::new("A", a.rows, a.cols))
+        (Coordinator::new(engine, NativeRuntime::oracle()), MatrixHandle::new("A", a.rows, a.cols))
     }
 
     fn check_qr(a: &Matrix, coord: &Coordinator, out: &DirectOutput, tol: f64) {

@@ -208,7 +208,7 @@ mod tests {
     fn coord_with(a: &Matrix) -> (Coordinator<'static>, MatrixHandle) {
         let mut engine = Engine::new(crate::dfs::DiskModel::icme_like(), ClusterConfig::default());
         put_matrix(&mut engine.dfs, "A", a);
-        (Coordinator::new(engine, &NativeRuntime), MatrixHandle::new("A", a.rows, a.cols))
+        (Coordinator::new(engine, NativeRuntime::oracle()), MatrixHandle::new("A", a.rows, a.cols))
     }
 
     #[test]

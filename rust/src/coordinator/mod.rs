@@ -141,11 +141,28 @@ pub struct CoordOpts {
     /// Override for the step-2 gather limit (rows) — forces the
     /// recursive path when small. `None`: the runtime's `max_qr_rows`.
     pub gather_limit: Option<usize>,
+    /// Panel width for the native backend's blocked Householder QR
+    /// (`None`: [`crate::linalg::DEFAULT_PANEL`]). Pure speed knob —
+    /// results are bit-identical at any width, so it rides outside the
+    /// digest contract like `host_threads`.
+    pub panel_block: Option<usize>,
+    /// Allow the Auto policy to take the mixed-precision (f32-storage /
+    /// f64-accumulate + one refinement step) step-1 path when the κ
+    /// probe is within [`crate::linalg::MIXED_KAPPA_MAX`]. Off by
+    /// default: enabling it changes result bits on the runs it fires
+    /// for, and the decision is recorded in the step stats marker.
+    pub mixed_precision: bool,
 }
 
 impl Default for CoordOpts {
     fn default() -> Self {
-        CoordOpts { rows_per_task: 1000, reduce_tasks: 40, gather_limit: None }
+        CoordOpts {
+            rows_per_task: 1000,
+            reduce_tasks: 40,
+            gather_limit: None,
+            panel_block: None,
+            mixed_precision: false,
+        }
     }
 }
 
@@ -194,6 +211,12 @@ pub struct Coordinator<'c> {
     /// Cached copy of the engine's disk model for leader-step cost
     /// formulas (avoids re-locking a shared engine for plain reads).
     model: DiskModel,
+    /// Set by the Auto policy (never by fixed-algorithm requests) for
+    /// the duration of one `run_fixed` call when `opts.mixed_precision`
+    /// is on and the κ probe cleared the gate: depth-0 Direct TSQR
+    /// step-1 maps then factor through
+    /// [`crate::runtime::BlockCompute::qr_mixed`].
+    pub(crate) mixed_step1: bool,
 }
 
 impl<'c> Coordinator<'c> {
@@ -207,6 +230,7 @@ impl<'c> Coordinator<'c> {
             ns: String::new(),
             fault_rng: None,
             model,
+            mixed_step1: false,
         }
     }
 
@@ -222,6 +246,7 @@ impl<'c> Coordinator<'c> {
             ns: String::new(),
             fault_rng: None,
             model,
+            mixed_step1: false,
         }
     }
 
@@ -411,7 +436,7 @@ mod tests {
         use crate::mapreduce::ClusterConfig;
         use crate::runtime::NativeRuntime;
         let engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
-        let mut c = Coordinator::new(engine, &NativeRuntime).with_namespace("job-7/");
+        let mut c = Coordinator::new(engine, NativeRuntime::oracle()).with_namespace("job-7/");
         assert_eq!(c.tmp("x"), "job-7/tmp/x-0001");
         assert_eq!(c.tmp("x"), "job-7/tmp/x-0002");
     }
@@ -438,7 +463,7 @@ mod tests {
 
         // two independent "jobs", same request, same fresh seq counter
         let run = |ns: &str| {
-            let mut c = Coordinator::shared(&shared, &NativeRuntime).with_namespace(ns);
+            let mut c = Coordinator::shared(&shared, NativeRuntime::oracle()).with_namespace(ns);
             c.qr(&h, Algorithm::DirectTsqr).unwrap()
         };
         let res0 = run("job-0/");

@@ -83,7 +83,20 @@
 //!
 //! Pure-rust dense linear algebra ([`linalg`]) provides the serial
 //! `n×n` steps the paper runs on a single node (Cholesky, `R⁻¹`,
-//! Jacobi SVD) and an independent correctness oracle.
+//! Jacobi SVD) and an independent correctness oracle. Since PR 7 it is
+//! also the native hot path: a register-tiled f64 gemm microkernel
+//! ([`linalg::gemm`]) behind [`Matrix::matmul`]/`gram`, a blocked
+//! compact-WY Householder panel QR ([`linalg::blocked_qr`]) behind
+//! [`linalg::householder_qr`] whose `R` is *bitwise identical* to the
+//! textbook reference at every panel width
+//! ([`session::SessionBuilder::panel_block`] is therefore a pure speed
+//! knob, outside the digest contract like `host_threads`), a batched
+//! [`runtime::BlockCompute::factor_blocks`] entry the engine's map
+//! waves dispatch through ([`mapreduce::MapTask::run_batch`]), and an
+//! opt-in κ-gated mixed-precision step-1 path
+//! ([`session::SessionBuilder::mixed_precision`], recorded in the
+//! `auto-select` marker because it changes bits where it fires).
+//! `rust/tests/kernels.rs` enforces all of these contracts end to end.
 //!
 //! # Execution model: virtual vs host parallelism
 //!

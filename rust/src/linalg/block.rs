@@ -1,0 +1,486 @@
+//! Blocked panel kernels: compact-WY Householder QR, batched block
+//! factorization, and the opt-in mixed-precision fast path.
+//!
+//! # How the blocked QR keeps the digest contract
+//!
+//! The scaling invariant of this codebase is that every knob above L1
+//! is pure scheduling — `R`/`Σ` bits never move. `panel_block` joins
+//! that set by construction:
+//!
+//! * **R path.** A width-`b` panel is factored column-at-a-time in the
+//!   exact reference operation order; columns *outside* the panel are
+//!   updated only after the panel completes, reflector-by-reflector in
+//!   ascending order, each update performing the reference's exact
+//!   per-element FP sequence (k-ascending dot, `s = β·dot`, guarded
+//!   `x -= s·v[i]`). Every matrix element therefore sees the identical
+//!   op sequence as [`householder_qr_reference`] for **any** panel
+//!   width, so `R` is bitwise equal to the reference — the speedup is
+//!   pure cache locality (the deferred update streams row-major instead
+//!   of striding column-wise).
+//! * **Q path.** Thin `Q` is formed with the compact-WY representation
+//!   (`I − V·T·Vᵀ` per block, two gemms — Demmel et al., arxiv
+//!   0809.2407) at a **fixed** internal width [`WY_NB`] independent of
+//!   `panel_block`, so `Q`'s bits are also panel-invariant (and `O(ε)`
+//!   from the reference, which the oracle tests check).
+//!
+//! [`householder_qr_reference`]: crate::linalg::householder_qr_reference
+
+use super::cholesky::cholesky;
+use super::gemm::{gemm_at_b, gemm_nn, Acc};
+use super::matrix::Matrix;
+use super::trisolve::tri_inverse_upper;
+
+/// Default panel width for [`blocked_qr`] (the `panel_block` session
+/// knob when unset). Pure speed knob: results are bit-identical at any
+/// width.
+pub const DEFAULT_PANEL: usize = 32;
+
+/// Fixed internal block width for the compact-WY formation of thin `Q`.
+/// Deliberately *not* tied to `panel_block` so `Q`'s bits cannot depend
+/// on a tuning knob.
+const WY_NB: usize = 32;
+
+/// Scratch buffers for [`blocked_qr_with`], reusable across blocks so a
+/// batched map wave pays one allocation for its whole chunk.
+#[derive(Debug, Default)]
+pub struct PanelWorkspace {
+    work: Vec<f64>,
+    vs: Vec<f64>,
+    betas: Vec<f64>,
+    dots: Vec<f64>,
+    t: Vec<f64>,
+    w: Vec<f64>,
+    z: Vec<f64>,
+    u: Vec<f64>,
+}
+
+/// Thin QR via blocked Householder panels: `a (m×n, m ≥ n) -> (Q m×n,
+/// R n×n)`. `R` is bitwise identical to [`householder_qr_reference`]
+/// for any `panel` width; `Q` is panel-invariant and `O(ε)` from the
+/// reference.
+///
+/// [`householder_qr_reference`]: crate::linalg::householder_qr_reference
+pub fn blocked_qr(a: &Matrix, panel: usize) -> (Matrix, Matrix) {
+    blocked_qr_with(a, panel, &mut PanelWorkspace::default())
+}
+
+/// [`blocked_qr`] with caller-provided scratch (hot path for batched
+/// waves). Buffer reuse is capacity-only — contents are re-initialized
+/// per call, so results are bit-identical to a fresh workspace.
+pub fn blocked_qr_with(a: &Matrix, panel: usize, ws: &mut PanelWorkspace) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "blocked_qr requires m >= n, got {m}x{n}");
+    let panel = panel.max(1);
+
+    ws.work.clear();
+    ws.work.extend_from_slice(&a.data);
+    // the factorization relies on v[i] == 0 for i < j, so the reflector
+    // store must be zero-filled, not just resized
+    ws.vs.clear();
+    ws.vs.resize(m * n, 0.0);
+    ws.betas.clear();
+    ws.betas.resize(n, 0.0);
+    ws.dots.clear();
+    ws.dots.resize(n, 0.0);
+
+    factor_panels(&mut ws.work, m, n, panel, &mut ws.vs, &mut ws.betas, &mut ws.dots);
+
+    let mut r = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r[(i, j)] = ws.work[i * n + j];
+        }
+    }
+    let q = form_q_wy(m, n, &ws.vs, &ws.betas, &mut ws.t, &mut ws.w, &mut ws.z, &mut ws.u);
+    (q, r)
+}
+
+/// Factor `blocks` in one call, reusing a single workspace across the
+/// batch. Each `(Q, R)` is bit-identical to `blocked_qr(block, panel)`
+/// on its own — batching amortizes allocation/dispatch, nothing else.
+pub fn factor_blocks(blocks: &[Matrix], panel: usize) -> Vec<(Matrix, Matrix)> {
+    let mut ws = PanelWorkspace::default();
+    blocks.iter().map(|a| blocked_qr_with(a, panel, &mut ws)).collect()
+}
+
+/// Panel-blocked Householder factorization of `work` (m×n row-major),
+/// storing reflector `j` in `vs[j*m..(j+1)*m]` and its `β` in
+/// `betas[j]`. Per-element FP op sequence identical to the reference
+/// column-at-a-time loop for any `panel` width (see module docs).
+fn factor_panels(
+    work: &mut [f64],
+    m: usize,
+    n: usize,
+    panel: usize,
+    vs: &mut [f64],
+    betas: &mut [f64],
+    dots: &mut [f64],
+) {
+    let mut j0 = 0;
+    while j0 < n {
+        let jend = (j0 + panel).min(n);
+        // Panel factor: columns j0..jend, reference operation order.
+        for j in j0..jend {
+            let mut normx = 0.0f64;
+            for i in j..m {
+                normx = normx.hypot(work[i * n + j]);
+            }
+            let v = &mut vs[j * m..(j + 1) * m];
+            for i in j..m {
+                v[i] = work[i * n + j];
+            }
+            if normx > 0.0 {
+                let alpha = if v[j] >= 0.0 { -normx } else { normx };
+                v[j] -= alpha;
+            }
+            let vnorm2: f64 = v[j..].iter().map(|x| x * x).sum();
+            let beta = if vnorm2 > 0.0 { 2.0 / vnorm2 } else { 0.0 };
+            betas[j] = beta;
+            // within-panel trailing update, immediately and in the
+            // reference's column-outer order
+            for col in j..jend {
+                let mut dot = 0.0;
+                for i in j..m {
+                    dot += v[i] * work[i * n + col];
+                }
+                let s = beta * dot;
+                if s != 0.0 {
+                    for i in j..m {
+                        work[i * n + col] -= s * v[i];
+                    }
+                }
+            }
+        }
+        // Deferred trailing update: apply reflectors j0..jend in order
+        // to columns jend..n. Two row-major streaming passes per
+        // reflector; per-element operands and order match the
+        // reference's column-wise loop exactly.
+        if jend < n {
+            for j in j0..jend {
+                let v = &vs[j * m..(j + 1) * m];
+                let beta = betas[j];
+                for d in dots[jend..n].iter_mut() {
+                    *d = 0.0;
+                }
+                for i in j..m {
+                    let vi = v[i];
+                    let row = &work[i * n..i * n + n];
+                    for col in jend..n {
+                        dots[col] += vi * row[col];
+                    }
+                }
+                for d in dots[jend..n].iter_mut() {
+                    *d = beta * *d;
+                }
+                for i in j..m {
+                    let vi = v[i];
+                    let row = &mut work[i * n..i * n + n];
+                    for col in jend..n {
+                        let s = dots[col];
+                        if s != 0.0 {
+                            row[col] -= s * vi;
+                        }
+                    }
+                }
+            }
+        }
+        j0 = jend;
+    }
+}
+
+/// Form thin `Q = H_0 … H_{n-1} [I; 0]` with compact-WY block
+/// reflectors of fixed width [`WY_NB`]: per block, `T` from the LAPACK
+/// `larft` forward recurrence, then `Q ← (I − V·T·Vᵀ)·Q` as two gemms
+/// plus a small triangular product.
+#[allow(clippy::too_many_arguments)]
+fn form_q_wy(
+    m: usize,
+    n: usize,
+    vs: &[f64],
+    betas: &[f64],
+    t: &mut Vec<f64>,
+    w: &mut Vec<f64>,
+    z: &mut Vec<f64>,
+    u: &mut Vec<f64>,
+) -> Matrix {
+    let mut q = Matrix::from_fn(m, n, |i, j| if i == j { 1.0 } else { 0.0 });
+    if n == 0 {
+        return q;
+    }
+    t.clear();
+    t.resize(WY_NB * WY_NB, 0.0);
+    w.clear();
+    w.resize(WY_NB * n, 0.0);
+    z.clear();
+    z.resize(WY_NB * n, 0.0);
+    u.clear();
+    u.resize(WY_NB, 0.0);
+
+    let nblocks = n.div_ceil(WY_NB);
+    // Q = B_0 · (B_1 · ( … · (B_{L-1} · E))) — innermost block first.
+    for blk in (0..nblocks).rev() {
+        let j0 = blk * WY_NB;
+        let nb = WY_NB.min(n - j0);
+        let rows = m - j0;
+
+        // T (nb×nb, upper): T[j][j] = β_j, T[:j,j] = −β_j T[:j,:j] (Vᵀ v_j)
+        for x in t[..nb * nb].iter_mut() {
+            *x = 0.0;
+        }
+        for jj in 0..nb {
+            let j = j0 + jj;
+            let bj = betas[j];
+            let vj = &vs[j * m..(j + 1) * m];
+            for ii in 0..jj {
+                let vi = &vs[(j0 + ii) * m..(j0 + ii + 1) * m];
+                // v_j is zero above row j, so the dot starts there
+                let mut d = 0.0;
+                for rr in j..m {
+                    d += vi[rr] * vj[rr];
+                }
+                u[ii] = d;
+            }
+            for ii in 0..jj {
+                let mut s = 0.0;
+                for kk in ii..jj {
+                    s += t[ii * nb + kk] * u[kk];
+                }
+                t[ii * nb + jj] = -bj * s;
+            }
+            t[jj * nb + jj] = bj;
+        }
+
+        // The reflector store is column-major V (reflector j is a row of
+        // the buffer), so the stored buffer *is* Vᵀ row-major with row
+        // stride m; rows of Q above j0 are untouched (V is zero there).
+        let vblk = &vs[j0 * m + j0..];
+        // W (nb×n) = Vᵀ · Q[j0.., :]
+        gemm_nn(nb, rows, n, vblk, m, &q.data[j0 * n..], n, &mut w[..], n, Acc::Store);
+        // Z (nb×n) = T · W
+        gemm_nn(nb, nb, n, &t[..], nb, &w[..], n, &mut z[..], n, Acc::Store);
+        // Q[j0.., :] −= V · Z
+        gemm_at_b(rows, nb, n, vblk, m, &z[..], n, &mut q.data[j0 * n..], n, Acc::Sub);
+    }
+    q
+}
+
+/// Maximum κ estimate at which the Auto policy will take the
+/// mixed-precision step-1 path when the session opts in. Above this the
+/// f32 backward error (≈`ε₃₂‖A‖`) starts costing meaningful digits in
+/// the small singular values, so the gate keeps the fast path to the
+/// regime where the refined factors are practically full quality.
+pub const MIXED_KAPPA_MAX: f64 = 1e6;
+
+/// Mixed-precision thin QR: f32-storage / f64-accumulate Householder
+/// factorization followed by one f64 CholeskyQR refinement step.
+///
+/// The refinement (`G = Q̂ᵀQ̂ = SᵀS`, `Q = Q̂S⁻¹`, `R = S·R̂`) restores
+/// `QᵀQ = I` to `O(ε₆₄)` while preserving the product `QR = Q̂R̂`, so
+/// the residual stays at the f32 backward-error level `O(ε₃₂‖A‖)` —
+/// which is why callers gate this on the κ probe ([`MIXED_KAPPA_MAX`]).
+///
+/// Returns `None` when the fast path can't run safely (values outside
+/// f32 range, or the refinement Cholesky/inverse breaks down — e.g.
+/// numerically rank-deficient input); callers fall back to the full f64
+/// path.
+pub fn mixed_qr(a: &Matrix) -> Option<(Matrix, Matrix)> {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "mixed_qr requires m >= n, got {m}x{n}");
+    if n == 0 {
+        return Some((Matrix::zeros(m, 0), Matrix::zeros(0, 0)));
+    }
+    let mut work: Vec<f32> = a.data.iter().map(|&x| x as f32).collect();
+    if !work.iter().all(|x| x.is_finite()) {
+        return None;
+    }
+    let mut vs = vec![0.0f32; m * n];
+    let mut betas = vec![0.0f64; n];
+    for j in 0..n {
+        let mut norm2 = 0.0f64;
+        for i in j..m {
+            let x = work[i * n + j] as f64;
+            norm2 += x * x;
+        }
+        let normx = norm2.sqrt();
+        let v = &mut vs[j * m..(j + 1) * m];
+        for i in j..m {
+            v[i] = work[i * n + j];
+        }
+        if normx > 0.0 {
+            let alpha = if v[j] >= 0.0 { -normx } else { normx };
+            v[j] = (v[j] as f64 - alpha) as f32;
+        }
+        let mut vnorm2 = 0.0f64;
+        for i in j..m {
+            let x = v[i] as f64;
+            vnorm2 += x * x;
+        }
+        let beta = if vnorm2 > 0.0 { 2.0 / vnorm2 } else { 0.0 };
+        betas[j] = beta;
+        for col in j..n {
+            let mut dot = 0.0f64;
+            for i in j..m {
+                dot += v[i] as f64 * work[i * n + col] as f64;
+            }
+            let s = beta * dot;
+            if s != 0.0 {
+                for i in j..m {
+                    work[i * n + col] = (work[i * n + col] as f64 - s * v[i] as f64) as f32;
+                }
+            }
+        }
+    }
+
+    let mut rhat = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rhat[(i, j)] = work[i * n + j] as f64;
+        }
+    }
+    let mut qhat = Matrix::from_fn(m, n, |i, j| if i == j { 1.0 } else { 0.0 });
+    for j in (0..n).rev() {
+        let v = &vs[j * m..(j + 1) * m];
+        let beta = betas[j];
+        if beta == 0.0 {
+            continue;
+        }
+        for col in 0..n {
+            let mut dot = 0.0f64;
+            for i in j..m {
+                dot += v[i] as f64 * qhat[(i, col)];
+            }
+            let s = beta * dot;
+            if s != 0.0 {
+                for i in j..m {
+                    qhat[(i, col)] -= s * v[i] as f64;
+                }
+            }
+        }
+    }
+
+    // One CholeskyQR refinement step in f64.
+    let g = qhat.gram();
+    let l = cholesky(&g).ok()?;
+    let s = l.transpose();
+    let sinv = tri_inverse_upper(&s)?;
+    let q = qhat.matmul(&sinv);
+    let r = s.matmul(&rhat);
+    Some((q, r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::householder_qr_reference;
+    use crate::util::rng::Rng;
+
+    fn bits(m: &Matrix) -> Vec<u64> {
+        m.data.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn r_bitwise_matches_reference_at_any_panel() {
+        let mut rng = Rng::new(21);
+        for &(m, n) in &[(8usize, 4usize), (50, 10), (200, 25), (64, 64), (37, 13)] {
+            let a = Matrix::gaussian(m, n, &mut rng);
+            let (_, r_ref) = householder_qr_reference(&a);
+            for &panel in &[1usize, 2, 3, 4, 8, 32, 64, 1000] {
+                let (_, r) = blocked_qr(&a, panel);
+                assert_eq!(bits(&r), bits(&r_ref), "{m}x{n} panel={panel}");
+            }
+        }
+    }
+
+    #[test]
+    fn q_bits_are_panel_invariant() {
+        let mut rng = Rng::new(22);
+        for &(m, n) in &[(60usize, 9usize), (128, 40), (33, 33)] {
+            let a = Matrix::gaussian(m, n, &mut rng);
+            let (q_base, _) = blocked_qr(&a, DEFAULT_PANEL);
+            for &panel in &[1usize, 4, 8, 64] {
+                let (q, _) = blocked_qr(&a, panel);
+                assert_eq!(bits(&q), bits(&q_base), "{m}x{n} panel={panel}");
+            }
+        }
+    }
+
+    #[test]
+    fn q_is_close_to_reference_and_orthonormal() {
+        let mut rng = Rng::new(23);
+        for &(m, n) in &[(100usize, 8usize), (64, 64), (200, 50)] {
+            let a = Matrix::gaussian(m, n, &mut rng);
+            let (q, r) = blocked_qr(&a, 8);
+            let (q_ref, _) = householder_qr_reference(&a);
+            assert!(q.orthogonality_error() < 1e-13);
+            let recon = a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm();
+            assert!(recon < 1e-13, "recon {recon}");
+            assert!(q.sub(&q_ref).max_abs() < 1e-12, "Q drift {}", q.sub(&q_ref).max_abs());
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_identical() {
+        let mut rng = Rng::new(24);
+        let blocks: Vec<Matrix> = [(40usize, 6usize), (12, 12), (100, 3), (64, 20)]
+            .iter()
+            .map(|&(m, n)| Matrix::gaussian(m, n, &mut rng))
+            .collect();
+        let batched = factor_blocks(&blocks, DEFAULT_PANEL);
+        for (a, (qb, rb)) in blocks.iter().zip(&batched) {
+            let (q, r) = blocked_qr(a, DEFAULT_PANEL);
+            assert_eq!(bits(&q), bits(qb));
+            assert_eq!(bits(&r), bits(rb));
+        }
+    }
+
+    #[test]
+    fn zero_column_no_nan() {
+        let mut rng = Rng::new(25);
+        let mut a = Matrix::gaussian(16, 4, &mut rng);
+        for i in 0..16 {
+            a[(i, 2)] = 0.0;
+        }
+        let (_, r_ref) = householder_qr_reference(&a);
+        for &panel in &[1usize, 2, 4] {
+            let (q, r) = blocked_qr(&a, panel);
+            assert!(q.data.iter().all(|v| v.is_finite()));
+            assert_eq!(bits(&r), bits(&r_ref), "panel={panel}");
+        }
+    }
+
+    #[test]
+    fn mixed_qr_refines_to_f64_orthogonality() {
+        let mut rng = Rng::new(26);
+        let a = crate::linalg::matgen::matrix_with_condition(300, 8, 1e4, &mut rng);
+        let (q, r) = mixed_qr(&a).unwrap();
+        // orthogonality restored to f64 level by the refinement step
+        assert!(q.orthogonality_error() < 1e-12, "orth {}", q.orthogonality_error());
+        assert!(r.is_upper_triangular(1e-4 * a.frob_norm()));
+        // residual stays at the f32 backward-error level
+        let recon = a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm();
+        assert!(recon < 1e-5, "recon {recon}");
+        assert!(recon > 1e-14, "suspiciously exact — f32 path not taken?");
+    }
+
+    #[test]
+    fn mixed_qr_declines_outside_f32_range() {
+        let mut rng = Rng::new(27);
+        let mut a = Matrix::gaussian(40, 4, &mut rng);
+        a[(3, 1)] = 1e300; // overflows f32 => must fall back, not emit inf
+        assert!(mixed_qr(&a).is_none());
+    }
+
+    #[test]
+    fn mixed_qr_reproduces_known_spectrum() {
+        // σ spanning the gated κ window: refined R's singular values
+        // keep f32-level relative accuracy
+        let sigma_true = vec![1.0, 0.3, 1e-2, 1e-4];
+        let mut rng = Rng::new(28);
+        let (a, _, _) = crate::linalg::matgen::matrix_with_spectrum(200, 4, &sigma_true, &mut rng);
+        let (_, r) = mixed_qr(&a).unwrap();
+        let svd = crate::linalg::jacobi_svd(&r);
+        for (got, want) in svd.sigma.iter().zip(&sigma_true) {
+            assert!((got / want - 1.0).abs() < 1e-3, "sigma {got} vs {want}");
+        }
+    }
+}

@@ -1,0 +1,301 @@
+//! Tiled f64 gemm microkernel — the BLAS-3 engine behind the blocked
+//! kernels in [`crate::linalg::block`] and the public
+//! [`Matrix::matmul`](crate::linalg::Matrix::matmul) /
+//! [`Matrix::gram`](crate::linalg::Matrix::gram) entry points.
+//!
+//! # Bit-determinism contract
+//!
+//! Every output element is produced by **one** accumulator that sums the
+//! full k-range in ascending order. The register tiling (MR×NR output
+//! blocks) changes only *which elements are in flight together*, never
+//! the per-element operation sequence, so the result is bitwise
+//! identical for any tile traversal, any caller-side blocking, and any
+//! thread count above this layer. This is the same argument that keeps
+//! `host_threads`/`engine_shards`/`worker_processes` pure scheduling:
+//! the FP op sequence per output element is fixed by (shape, inputs)
+//! alone.
+//!
+//! Strides (`lda`/`ldb`/`ldc`) are row strides in elements, so callers
+//! can aim the kernel at sub-panels of a larger row-major buffer without
+//! copying.
+
+/// How the computed product is written into `C`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Acc {
+    /// `C = A·B`
+    Store,
+    /// `C += A·B`
+    Add,
+    /// `C -= A·B`
+    Sub,
+}
+
+/// Register-tile height (rows of C per microtile).
+const MR: usize = 4;
+/// Register-tile width (cols of C per microtile).
+const NR: usize = 4;
+
+#[inline]
+fn write_tile(
+    t: &[[f64; NR]; MR],
+    mr: usize,
+    nr: usize,
+    c: &mut [f64],
+    ldc: usize,
+    i0: usize,
+    j0: usize,
+    acc: Acc,
+) {
+    for di in 0..mr {
+        let base = (i0 + di) * ldc + j0;
+        let crow = &mut c[base..base + nr];
+        match acc {
+            Acc::Store => {
+                for dj in 0..nr {
+                    crow[dj] = t[di][dj];
+                }
+            }
+            Acc::Add => {
+                for dj in 0..nr {
+                    crow[dj] += t[di][dj];
+                }
+            }
+            Acc::Sub => {
+                for dj in 0..nr {
+                    crow[dj] -= t[di][dj];
+                }
+            }
+        }
+    }
+}
+
+/// `C (m×n) ⟵ A (m×k) · B (k×n)`, all row-major with explicit row
+/// strides. `acc` selects store / accumulate / subtract.
+///
+/// Each `C[i][j]` is the k-ascending sum of `A[i][kk] * B[kk][j]` in a
+/// single accumulator — bitwise independent of the tiling.
+pub fn gemm_nn(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    acc: Acc,
+) {
+    debug_assert!(m == 0 || k == 0 || a.len() >= (m - 1) * lda + k);
+    debug_assert!(k == 0 || n == 0 || b.len() >= (k - 1) * ldb + n);
+    debug_assert!(m == 0 || n == 0 || c.len() >= (m - 1) * ldc + n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut i0 = 0;
+    while i0 < m {
+        let mr = MR.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            let mut t = [[0.0f64; NR]; MR];
+            for kk in 0..k {
+                let bbase = kk * ldb + j0;
+                let brow = &b[bbase..bbase + nr];
+                for di in 0..mr {
+                    let av = a[(i0 + di) * lda + kk];
+                    let trow = &mut t[di];
+                    for dj in 0..nr {
+                        trow[dj] += av * brow[dj];
+                    }
+                }
+            }
+            write_tile(&t, mr, nr, c, ldc, i0, j0, acc);
+            j0 += nr;
+        }
+        i0 += mr;
+    }
+}
+
+/// `C (m×n) ⟵ Aᵀ · B` where `A` is a **k×m** row-major buffer (so `Aᵀ`
+/// is m×k) and `B` is k×n row-major. Same per-element k-ascending
+/// accumulation contract as [`gemm_nn`].
+///
+/// Reading `A` row-by-row makes this the natural kernel for Gram
+/// matrices (`AᵀA`) and for applying a column-stored reflector panel
+/// `V` (each stored row of the buffer is one reflector, i.e. one
+/// *column* of `V`).
+pub fn gemm_at_b(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    acc: Acc,
+) {
+    debug_assert!(m == 0 || k == 0 || a.len() >= (k - 1) * lda + m);
+    debug_assert!(k == 0 || n == 0 || b.len() >= (k - 1) * ldb + n);
+    debug_assert!(m == 0 || n == 0 || c.len() >= (m - 1) * ldc + n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut i0 = 0;
+    while i0 < m {
+        let mr = MR.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            let mut t = [[0.0f64; NR]; MR];
+            for kk in 0..k {
+                let abase = kk * lda + i0;
+                let arow = &a[abase..abase + mr];
+                let bbase = kk * ldb + j0;
+                let brow = &b[bbase..bbase + nr];
+                for di in 0..mr {
+                    let av = arow[di];
+                    let trow = &mut t[di];
+                    for dj in 0..nr {
+                        trow[dj] += av * brow[dj];
+                    }
+                }
+            }
+            write_tile(&t, mr, nr, c, ldc, i0, j0, acc);
+            j0 += nr;
+        }
+        i0 += mr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64]) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    fn rand_buf(rng: &mut Rng, len: usize) -> Vec<f64> {
+        (0..len).map(|_| rng.gaussian()).collect()
+    }
+
+    #[test]
+    fn matches_naive_all_shapes() {
+        let mut rng = Rng::new(7);
+        // hit every mr/nr edge combination around the 4×4 tile
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 2, 5),
+            (4, 4, 4),
+            (5, 7, 3),
+            (8, 1, 9),
+            (13, 11, 6),
+            (17, 32, 17),
+        ] {
+            let a = rand_buf(&mut rng, m * k);
+            let b = rand_buf(&mut rng, k * n);
+            let want = naive_nn(m, k, n, &a, &b);
+            let mut c = vec![0.0; m * n];
+            gemm_nn(m, k, n, &a, k, &b, n, &mut c, n, Acc::Store);
+            for (got, want) in c.iter().zip(&want) {
+                // identical per-element op order => exactly equal
+                assert_eq!(got.to_bits(), want.to_bits(), "{m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_and_sub_accumulate() {
+        let mut rng = Rng::new(8);
+        let (m, k, n) = (6, 5, 7);
+        let a = rand_buf(&mut rng, m * k);
+        let b = rand_buf(&mut rng, k * n);
+        let base = rand_buf(&mut rng, m * n);
+        let prod = naive_nn(m, k, n, &a, &b);
+
+        let mut c = base.clone();
+        gemm_nn(m, k, n, &a, k, &b, n, &mut c, n, Acc::Add);
+        for i in 0..m * n {
+            assert_eq!(c[i].to_bits(), (base[i] + prod[i]).to_bits());
+        }
+
+        let mut c = base.clone();
+        gemm_nn(m, k, n, &a, k, &b, n, &mut c, n, Acc::Sub);
+        for i in 0..m * n {
+            assert_eq!(c[i].to_bits(), (base[i] - prod[i]).to_bits());
+        }
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        let mut rng = Rng::new(9);
+        // A is k×m row-major; C = Aᵀ·B is m×n
+        for &(m, k, n) in &[(3, 9, 4), (5, 5, 5), (10, 2, 7), (4, 16, 4)] {
+            let a = rand_buf(&mut rng, k * m);
+            let b = rand_buf(&mut rng, k * n);
+            // explicit transpose then same k-ascending accumulation
+            let mut at = vec![0.0; m * k];
+            for kk in 0..k {
+                for i in 0..m {
+                    at[i * k + kk] = a[kk * m + i];
+                }
+            }
+            let want = naive_nn(m, k, n, &at, &b);
+            let mut c = vec![0.0; m * n];
+            gemm_at_b(m, k, n, &a, m, &b, n, &mut c, n, Acc::Store);
+            for (got, want) in c.iter().zip(&want) {
+                assert_eq!(got.to_bits(), want.to_bits(), "{m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn strided_subviews_match_dense() {
+        // aim the kernel at an interior sub-block of larger buffers and
+        // check it sees exactly the same numbers as a packed copy
+        let mut rng = Rng::new(10);
+        let (m, k, n) = (5, 6, 4);
+        let (lda, ldb, ldc) = (k + 3, n + 2, n + 5);
+        let abuf = rand_buf(&mut rng, m * lda);
+        let bbuf = rand_buf(&mut rng, k * ldb);
+        let mut cbuf = vec![0.0; m * ldc];
+
+        let mut ap = vec![0.0; m * k];
+        for i in 0..m {
+            ap[i * k..(i + 1) * k].copy_from_slice(&abuf[i * lda..i * lda + k]);
+        }
+        let mut bp = vec![0.0; k * n];
+        for i in 0..k {
+            bp[i * n..(i + 1) * n].copy_from_slice(&bbuf[i * ldb..i * ldb + n]);
+        }
+        let want = naive_nn(m, k, n, &ap, &bp);
+        gemm_nn(m, k, n, &abuf, lda, &bbuf, ldb, &mut cbuf, ldc, Acc::Store);
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(cbuf[i * ldc + j].to_bits(), want[i * n + j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_dims_are_noops() {
+        let mut c = vec![42.0; 4];
+        gemm_nn(0, 3, 2, &[], 3, &[0.0; 6], 2, &mut c, 2, Acc::Store);
+        gemm_nn(2, 0, 2, &[], 0, &[], 2, &mut c, 2, Acc::Add);
+        assert!(c.iter().all(|&x| x == 42.0));
+    }
+}

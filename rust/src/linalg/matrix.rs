@@ -1,5 +1,6 @@
 //! Row-major dense matrix with the operations the coordinator needs.
 
+use super::gemm;
 use crate::util::rng::Rng;
 use std::fmt;
 use std::ops::{Index, IndexMut};
@@ -90,49 +91,28 @@ impl Matrix {
         Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
     }
 
-    /// `self · other` (naive triple loop with the k-loop innermost on
-    /// rows — cache-friendly for row-major data).
+    /// `self · other`, routed through the tiled gemm microkernel
+    /// ([`crate::linalg::gemm`]). Per-element k-ascending accumulation
+    /// keeps the result bitwise identical to the seed's naive loop for
+    /// finite inputs (a `+0.0`-initialized accumulator can never turn
+    /// into `−0.0` under round-to-nearest, so dropping the old
+    /// skip-zero shortcut does not move bits).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (kk, &a) in arow.iter().enumerate().take(k) {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        gemm::gemm_nn(m, k, n, &self.data, k, &other.data, n, &mut out.data, n, gemm::Acc::Store);
         out
     }
 
-    /// `selfᵀ · self` — the Gram matrix (exploits symmetry).
+    /// `selfᵀ · self` — the Gram matrix, via the transposed gemm
+    /// kernel. Both triangles come out of the same row-ascending
+    /// accumulation, so the result stays exactly symmetric (bitwise)
+    /// like the seed's mirror-the-upper-triangle loop.
     pub fn gram(&self) -> Matrix {
-        let n = self.cols;
+        let (m, n) = (self.rows, self.cols);
         let mut g = Matrix::zeros(n, n);
-        for i in 0..self.rows {
-            let r = self.row(i);
-            for a in 0..n {
-                let ra = r[a];
-                if ra == 0.0 {
-                    continue;
-                }
-                for b in a..n {
-                    g[(a, b)] += ra * r[b];
-                }
-            }
-        }
-        for a in 0..n {
-            for b in 0..a {
-                g[(a, b)] = g[(b, a)];
-            }
-        }
+        gemm::gemm_at_b(n, m, n, &self.data, n, &self.data, n, &mut g.data, n, gemm::Acc::Store);
         g
     }
 

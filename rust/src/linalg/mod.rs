@@ -9,17 +9,27 @@
 //! plus an independent oracle for every distributed kernel and the
 //! prescribed-condition-number matrix generator used by the stability
 //! study (paper Fig. 6).
+//!
+//! The hot-path kernels are blocked (PR 7): [`gemm`] is the tiled
+//! f64 microkernel every product routes through, and [`block`] holds
+//! the compact-WY panel QR behind [`householder_qr`], the batched
+//! [`block::factor_blocks`] entry, and the κ-gated [`block::mixed_qr`]
+//! fast path. The bit-determinism story — why `panel_block` and
+//! batching are pure speed knobs — lives in the `block` module docs.
 
+pub mod block;
 pub mod cholesky;
+pub mod gemm;
 pub mod matgen;
 pub mod matrix;
 pub mod qr;
 pub mod svd;
 pub mod trisolve;
 
+pub use block::{blocked_qr, factor_blocks, mixed_qr, PanelWorkspace, DEFAULT_PANEL, MIXED_KAPPA_MAX};
 pub use cholesky::{cholesky, CholeskyError};
 pub use matgen::{matrix_with_condition, random_orthogonal};
 pub use matrix::Matrix;
-pub use qr::householder_qr;
+pub use qr::{householder_qr, householder_qr_reference, sign_normalize};
 pub use svd::jacobi_svd;
 pub use trisolve::{back_substitute, tri_inverse_upper};

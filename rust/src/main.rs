@@ -62,6 +62,14 @@ fn session_builder(args: &Args) -> SessionBuilder {
         .cluster(cluster)
         .backend(if args.flag("pjrt") { Backend::Pjrt } else { Backend::Auto })
         .rows_per_task(args.get_usize("rows-per-task", 1000));
+    // kernel-layer knobs: --panel-block is a pure speed knob (digests
+    // unchanged at any width); --mixed-precision opts Auto runs into
+    // the κ-gated f32 step-1 path (changes bits where it fires)
+    let builder = match args.get("panel-block") {
+        Some(b) => builder.panel_block(b.parse().expect("--panel-block wants a width")),
+        None => builder,
+    };
+    let builder = if args.flag("mixed-precision") { builder.mixed_precision(true) } else { builder };
     // optional fault injection (--fault-prob > 0 turns it on): lets
     // `serve`d clusters and loadgen runs exercise the retry path with
     // the same per-job determinism as the test suites
@@ -679,6 +687,8 @@ const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|batch|serve|loadgen|worker|stab
                   --algo <auto|cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder>
                   --beta-r s/GB --beta-w s/GB --byte-scale X
                   --host-threads N   (worker threads for task bodies; results identical for any N)
+                  --panel-block N    (blocked-QR panel width; pure speed knob, results identical)
+                  --mixed-precision  (let Auto take the kappa-gated f32 step-1 path; changes bits)
                   --fault-prob P --fault-attempts N --fault-waste F --fault-seed N  (fault injection)
                   --request-timeout SECS   (per-request deadline on the Process/Tcp transports)
   batch options:  --manifest FILE --jobs N --shards N --worker-procs N --queue N [--serial] [--json PATH]

@@ -99,9 +99,10 @@ struct TaskOutput {
 /// the calling thread. On failure the pool stops claiming new tasks
 /// (fast-fail, like the serial loop) and the lowest-task-id error among
 /// the tasks that ran is returned.
-fn run_tasks<F>(workers: usize, n: usize, task: F) -> Result<Vec<TaskOutput>>
+fn run_tasks<T, F>(workers: usize, n: usize, task: F) -> Result<Vec<T>>
 where
-    F: Fn(usize) -> Result<TaskOutput> + Sync,
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
 {
     if n == 0 {
         return Ok(Vec::new());
@@ -109,7 +110,7 @@ where
     if workers <= 1 || n == 1 {
         return (0..n).map(task).collect();
     }
-    let slots: Vec<Mutex<Option<Result<TaskOutput>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
     let failed = AtomicBool::new(false);
     std::thread::scope(|scope| {
@@ -132,7 +133,7 @@ where
     });
     // merge in task-id order; a slot left `None` was skipped after some
     // other task failed, and that failure is present in another slot
-    let mut results: Vec<Option<Result<TaskOutput>>> = slots
+    let mut results: Vec<Option<Result<T>>> = slots
         .into_iter()
         .map(|s| s.into_inner().expect("task slot poisoned"))
         .collect();
@@ -271,21 +272,61 @@ impl Engine {
         let workers = self.cluster.host_threads.max(1);
         stats.host_threads = workers.min(splits.len().max(1));
         let dfs = &self.dfs;
-        let map_results = run_tasks(workers, splits.len(), |task_id| {
-            let input = dfs.read_split(&spec.input, splits[task_id])?;
-            let in_bytes: u64 = input.iter().map(|r| r.size_bytes()).sum();
-            let side_refs: Vec<&[Record]> = spec
-                .side_inputs
-                .iter()
-                .map(|f| dfs.get(f))
-                .collect::<Result<_>>()?;
-            let mut em = Emitter::new();
-            let t0 = Instant::now();
-            spec.mapper
-                .run(task_id, input, &side_refs, &mut em)
-                .with_context(|| format!("job {:?}: map task {task_id}", spec.name))?;
-            Ok(TaskOutput { em, compute_secs: t0.elapsed().as_secs_f64(), in_bytes })
-        })?;
+        // Batched dispatch: the mapper's hint partitions the wave's task
+        // ids into fixed contiguous chunks *before* scheduling, so the
+        // chunking — like fault draws — is independent of host_threads
+        // and emissions merge in the same task-id order either way.
+        let hint = spec.mapper.batch_hint().max(1);
+        let map_results: Vec<TaskOutput> = if hint <= 1 {
+            run_tasks(workers, splits.len(), |task_id| {
+                let input = dfs.read_split(&spec.input, splits[task_id])?;
+                let in_bytes: u64 = input.iter().map(|r| r.size_bytes()).sum();
+                let side_refs: Vec<&[Record]> = spec
+                    .side_inputs
+                    .iter()
+                    .map(|f| dfs.get(f))
+                    .collect::<Result<_>>()?;
+                let mut em = Emitter::new();
+                let t0 = Instant::now();
+                spec.mapper
+                    .run(task_id, input, &side_refs, &mut em)
+                    .with_context(|| format!("job {:?}: map task {task_id}", spec.name))?;
+                Ok(TaskOutput { em, compute_secs: t0.elapsed().as_secs_f64(), in_bytes })
+            })?
+        } else {
+            let chunks = splits.len().div_ceil(hint);
+            let nested: Vec<Vec<TaskOutput>> = run_tasks(workers, chunks, |chunk| {
+                let lo = chunk * hint;
+                let hi = (lo + hint).min(splits.len());
+                let inputs: Vec<&[Record]> = (lo..hi)
+                    .map(|t| dfs.read_split(&spec.input, splits[t]))
+                    .collect::<Result<_>>()?;
+                let side_refs: Vec<&[Record]> = spec
+                    .side_inputs
+                    .iter()
+                    .map(|f| dfs.get(f))
+                    .collect::<Result<_>>()?;
+                let mut ems: Vec<Emitter> = (lo..hi).map(|_| Emitter::new()).collect();
+                let t0 = Instant::now();
+                spec.mapper
+                    .run_batch(lo, &inputs, &side_refs, &mut ems)
+                    .with_context(|| format!("job {:?}: map tasks {lo}..{hi}", spec.name))?;
+                let batch_secs = t0.elapsed().as_secs_f64();
+                Ok(ems
+                    .into_iter()
+                    .enumerate()
+                    .map(|(k, em)| TaskOutput {
+                        em,
+                        // one fused kernel call per chunk: attribute its
+                        // wall time to the chunk's first task (the field
+                        // is only ever summed into map_compute_secs)
+                        compute_secs: if k == 0 { batch_secs } else { 0.0 },
+                        in_bytes: inputs[k].iter().map(|r| r.size_bytes()).sum(),
+                    })
+                    .collect())
+            })?;
+            nested.into_iter().flatten().collect()
+        };
 
         // merge in task-id order: byte accounting, durations, emissions
         let mut map_durations = Vec::with_capacity(splits.len());
@@ -497,6 +538,65 @@ mod tests {
         assert_eq!(stats.reduce_tasks, 0);
         assert_eq!(e.dfs.file_records("out").unwrap(), 10);
         assert!(stats.virtual_secs > 0.0);
+    }
+
+    /// `ColMap` semantics plus a batch hint, exercising the chunked
+    /// dispatch path through the default `run_batch`.
+    struct BatchedColMap(usize);
+    impl MapTask for BatchedColMap {
+        fn run(&self, id: usize, input: &[Record], side: &[&[Record]], out: &mut Emitter) -> Result<()> {
+            ColMap.run(id, input, side, out)
+        }
+        fn batch_hint(&self) -> usize {
+            self.0
+        }
+    }
+
+    #[test]
+    fn batched_dispatch_is_invisible_to_results_and_accounting() {
+        // same job with hint 1 vs 3 (13 tasks => a ragged final chunk),
+        // at 1 and 8 host threads: outputs and every non-wall-clock
+        // stat must be identical
+        let run = |hint: usize, threads: usize| {
+            let mut e = engine_with_input(26, 2);
+            e.cluster.host_threads = threads;
+            let m = BatchedColMap(hint);
+            let spec = JobSpec::map_reduce("batched", "input", 13, &m, &SumReduce, 2, "out");
+            let stats = e.run(&spec).unwrap();
+            (e.dfs.get("out").unwrap().to_vec(), stats)
+        };
+        let (base_out, base) = run(1, 1);
+        for (hint, threads) in [(3usize, 1usize), (3, 8), (5, 2), (100, 4)] {
+            let (out, stats) = run(hint, threads);
+            assert_eq!(out, base_out, "hint={hint} threads={threads}");
+            assert_eq!(stats.map_tasks, base.map_tasks);
+            assert_eq!(stats.map_io, base.map_io);
+            assert_eq!(stats.reduce_io, base.reduce_io);
+            assert_eq!(stats.map_attempts, base.map_attempts);
+            assert_eq!(stats.distinct_keys, base.distinct_keys);
+        }
+    }
+
+    #[test]
+    fn batched_mapper_error_carries_chunk_context() {
+        struct FailBatch;
+        impl MapTask for FailBatch {
+            fn run(&self, id: usize, _: &[Record], _: &[&[Record]], _: &mut Emitter) -> Result<()> {
+                if id == 3 {
+                    anyhow::bail!("task {id} failed")
+                }
+                Ok(())
+            }
+            fn batch_hint(&self) -> usize {
+                4
+            }
+        }
+        let mut e = engine_with_input(8, 1);
+        let m = FailBatch;
+        let spec = JobSpec::map_only("batch-fail", "input", 8, &m, "out");
+        let err = format!("{:#}", e.run(&spec).unwrap_err());
+        assert!(err.contains("map tasks 0..4"), "{err}");
+        assert!(err.contains("task 3 failed"), "{err}");
     }
 
     #[test]

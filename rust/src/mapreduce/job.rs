@@ -61,6 +61,37 @@ pub trait MapTask: Send + Sync {
         side: &[&[Record]],
         out: &mut Emitter,
     ) -> Result<()>;
+
+    /// How many consecutive map tasks this mapper wants delivered to a
+    /// single [`MapTask::run_batch`] call. The engine chunks a wave's
+    /// task ids `[0, hint)`, `[hint, 2·hint)`, … — a fixed partition
+    /// independent of `host_threads`, so batching never perturbs which
+    /// task sees which split. `1` (the default) keeps the plain
+    /// per-task dispatch path.
+    fn batch_hint(&self) -> usize {
+        1
+    }
+
+    /// Process `inputs.len()` consecutive tasks in one call: task ids
+    /// `first_id..first_id + inputs.len()`, with `outs[k]` receiving
+    /// exactly what task `first_id + k` would have emitted through
+    /// [`MapTask::run`]. Implementations must keep the per-task
+    /// emission contract bit-identical — batching may only amortize
+    /// dispatch (see [`crate::runtime::BlockCompute::factor_blocks`]).
+    /// The default loops `run`.
+    fn run_batch(
+        &self,
+        first_id: usize,
+        inputs: &[&[Record]],
+        side: &[&[Record]],
+        outs: &mut [Emitter],
+    ) -> Result<()> {
+        debug_assert_eq!(inputs.len(), outs.len());
+        for (k, (input, out)) in inputs.iter().zip(outs.iter_mut()).enumerate() {
+            self.run(first_id + k, input, side, out)?;
+        }
+        Ok(())
+    }
 }
 
 /// One key group delivered to a reducer: `(key, values)` with values in
@@ -195,6 +226,29 @@ mod tests {
         fn run(&self, _: usize, _: &[Record], _: &[&[Record]], _: &mut Emitter) -> Result<()> {
             Ok(())
         }
+    }
+
+    struct EchoIdMap;
+    impl MapTask for EchoIdMap {
+        fn run(&self, id: usize, input: &[Record], _: &[&[Record]], out: &mut Emitter) -> Result<()> {
+            out.emit(vec![id as u8], vec![input.len() as u8]);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn default_run_batch_loops_run() {
+        let m = EchoIdMap;
+        let a = [Record::new(vec![0], vec![0])];
+        let b = [Record::new(vec![1], vec![1]), Record::new(vec![2], vec![2])];
+        let inputs: Vec<&[Record]> = vec![&a, &b];
+        let mut outs = vec![Emitter::new(), Emitter::new()];
+        m.run_batch(5, &inputs, &[], &mut outs).unwrap();
+        assert_eq!(outs[0].main[0].key, vec![5]);
+        assert_eq!(outs[0].main[0].value, vec![1]);
+        assert_eq!(outs[1].main[0].key, vec![6]);
+        assert_eq!(outs[1].main[0].value, vec![2]);
+        assert_eq!(m.batch_hint(), 1);
     }
 
     #[test]

@@ -22,7 +22,7 @@ pub use artifacts::{Manifest, ManifestEntry, Op};
 #[cfg(feature = "pjrt")]
 pub use client::{PjrtRuntime, RuntimeStats};
 
-use crate::linalg::{householder_qr, Matrix};
+use crate::linalg::Matrix;
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -42,6 +42,24 @@ pub type SharedCompute = Arc<dyn BlockCompute + Send + Sync>;
 pub trait BlockCompute: Send + Sync {
     /// Thin QR of a tall block: `(rows×n) -> (Q rows×n, R n×n)`.
     fn qr(&self, a: &Matrix) -> Result<(Matrix, Matrix)>;
+    /// Batched thin QR: factor `blocks` in one dispatch. Each `(Q, R)`
+    /// must be bit-identical to a standalone [`BlockCompute::qr`] call
+    /// on that block — batching may only amortize dispatch and scratch
+    /// allocation. The default loops `qr`; backends with a cheaper
+    /// batched path (the native workspace reuse, a future PJRT batch
+    /// executable) override it.
+    fn factor_blocks(&self, blocks: &[Matrix]) -> Result<Vec<(Matrix, Matrix)>> {
+        blocks.iter().map(|a| self.qr(a)).collect()
+    }
+    /// Mixed-precision thin QR (f32 storage, f64 accumulate, one
+    /// refinement step) for κ-gated opt-in callers. Backends without a
+    /// reduced-precision path serve the full-precision factorization —
+    /// callers may not assume which one ran. The native override also
+    /// falls back to full precision when the fast path declines (input
+    /// outside f32 range, refinement breakdown).
+    fn qr_mixed(&self, a: &Matrix) -> Result<(Matrix, Matrix)> {
+        self.qr(a)
+    }
     /// Gram matrix `AᵀA` of a block.
     fn gram(&self, a: &Matrix) -> Result<Matrix>;
     /// Tall×small product `(rows×n)·(n×k)`.
@@ -55,13 +73,64 @@ pub trait BlockCompute: Send + Sync {
     fn max_qr_rows(&self, cols: usize) -> usize;
 }
 
-/// Pure-rust implementation of [`BlockCompute`] (no PJRT).
-#[derive(Debug, Default)]
-pub struct NativeRuntime;
+/// Pure-rust implementation of [`BlockCompute`] (no PJRT), built on the
+/// blocked panel kernels in [`crate::linalg::block`].
+///
+/// `panel` is the Householder panel width — a pure speed knob: results
+/// are bit-identical at any setting (see the `block` module docs), so
+/// it is safe to tune per deployment via
+/// `SessionBuilder::panel_block(b)` without invalidating digests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NativeRuntime {
+    panel: usize,
+}
+
+impl NativeRuntime {
+    /// Default-width runtime ([`linalg::DEFAULT_PANEL`]).
+    ///
+    /// [`linalg::DEFAULT_PANEL`]: crate::linalg::DEFAULT_PANEL
+    pub fn new() -> Self {
+        NativeRuntime { panel: crate::linalg::DEFAULT_PANEL }
+    }
+
+    /// Runtime with an explicit panel width (clamped to ≥ 1).
+    pub fn with_panel(panel: usize) -> Self {
+        NativeRuntime { panel: panel.max(1) }
+    }
+
+    /// The configured panel width.
+    pub fn panel(&self) -> usize {
+        self.panel
+    }
+
+    /// A `&'static` default-width instance — handy for tests and
+    /// benches that need a `'static` oracle reference.
+    pub fn oracle() -> &'static NativeRuntime {
+        static ORACLE: NativeRuntime = NativeRuntime { panel: crate::linalg::DEFAULT_PANEL };
+        &ORACLE
+    }
+}
+
+impl Default for NativeRuntime {
+    fn default() -> Self {
+        NativeRuntime::new()
+    }
+}
 
 impl BlockCompute for NativeRuntime {
     fn qr(&self, a: &Matrix) -> Result<(Matrix, Matrix)> {
-        Ok(householder_qr(a))
+        Ok(crate::linalg::blocked_qr(a, self.panel))
+    }
+
+    fn factor_blocks(&self, blocks: &[Matrix]) -> Result<Vec<(Matrix, Matrix)>> {
+        Ok(crate::linalg::factor_blocks(blocks, self.panel))
+    }
+
+    fn qr_mixed(&self, a: &Matrix) -> Result<(Matrix, Matrix)> {
+        match crate::linalg::mixed_qr(a) {
+            Some(qr) => Ok(qr),
+            None => self.qr(a),
+        }
     }
 
     fn gram(&self, a: &Matrix) -> Result<Matrix> {
@@ -86,7 +155,7 @@ mod tests {
     fn native_qr_contract() {
         let mut rng = Rng::new(1);
         let a = Matrix::gaussian(40, 6, &mut rng);
-        let rt = NativeRuntime;
+        let rt = NativeRuntime::new();
         let (q, r) = rt.qr(&a).unwrap();
         assert!(a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm() < 1e-13);
         assert!(q.orthogonality_error() < 1e-13);
@@ -97,8 +166,45 @@ mod tests {
         let mut rng = Rng::new(2);
         let a = Matrix::gaussian(30, 4, &mut rng);
         let s = Matrix::identity(4);
-        let rt = NativeRuntime;
+        let rt = NativeRuntime::new();
         let (qs, r) = rt.qr_apply(&a, &s).unwrap();
         assert!(a.sub(&qs.matmul(&r)).frob_norm() / a.frob_norm() < 1e-13);
+    }
+
+    #[test]
+    fn panel_width_is_a_pure_speed_knob() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(64, 12, &mut rng);
+        let (q1, r1) = NativeRuntime::with_panel(1).qr(&a).unwrap();
+        let (q2, r2) = NativeRuntime::with_panel(64).qr(&a).unwrap();
+        assert_eq!(q1.data, q2.data);
+        assert_eq!(r1.data, r2.data);
+    }
+
+    #[test]
+    fn factor_blocks_matches_per_block_qr() {
+        let mut rng = Rng::new(4);
+        let blocks: Vec<Matrix> =
+            (0..5).map(|i| Matrix::gaussian(20 + 7 * i, 4, &mut rng)).collect();
+        let rt = NativeRuntime::new();
+        let batched = rt.factor_blocks(&blocks).unwrap();
+        for (a, (qb, rb)) in blocks.iter().zip(&batched) {
+            let (q, r) = rt.qr(a).unwrap();
+            assert_eq!(q.data, qb.data);
+            assert_eq!(r.data, rb.data);
+        }
+    }
+
+    #[test]
+    fn qr_mixed_falls_back_outside_f32_range() {
+        let mut rng = Rng::new(5);
+        let mut a = Matrix::gaussian(30, 4, &mut rng);
+        a[(2, 2)] = 1e300;
+        let rt = NativeRuntime::new();
+        let (q, r) = rt.qr_mixed(&a).unwrap();
+        // fallback must serve the full-precision factorization
+        let (qf, rf) = rt.qr(&a).unwrap();
+        assert_eq!(q.data, qf.data);
+        assert_eq!(r.data, rf.data);
     }
 }

@@ -52,7 +52,7 @@ impl Backend {
     pub fn resolve(self) -> Result<(SharedCompute, &'static str)> {
         match self {
             Backend::Native => Ok((
-                NATIVE_POOL.get_or_init(|| Arc::new(NativeRuntime)).clone(),
+                NATIVE_POOL.get_or_init(|| Arc::new(NativeRuntime::new())).clone(),
                 "native",
             )),
             Backend::Auto => {
@@ -93,7 +93,7 @@ impl Backend {
     /// [`Backend::resolve`].
     pub fn resolve_fresh(self) -> Result<(SharedCompute, &'static str)> {
         match self {
-            Backend::Native => Ok((Arc::new(NativeRuntime), "native")),
+            Backend::Native => Ok((Arc::new(NativeRuntime::new()), "native")),
             Backend::Auto => {
                 #[cfg(feature = "pjrt")]
                 {
@@ -103,7 +103,7 @@ impl Backend {
                         return Ok((Arc::new(rt), "pjrt"));
                     }
                 }
-                Ok((Arc::new(NativeRuntime), "native"))
+                Ok((Arc::new(NativeRuntime::new()), "native"))
             }
             Backend::Pjrt => {
                 #[cfg(feature = "pjrt")]
@@ -254,6 +254,32 @@ impl SessionBuilder {
         self
     }
 
+    /// Panel width of the native backend's blocked Householder QR
+    /// (default [`crate::linalg::DEFAULT_PANEL`]). Purely a speed knob:
+    /// `R` is bit-identical to the textbook column-by-column
+    /// factorization at every width, and `Q` bits are panel-invariant
+    /// (the compact-WY accumulation runs at its own fixed internal
+    /// block size) — so result digests never depend on this setting.
+    /// Ignored when a custom or PJRT compute backend serves the
+    /// session. The floor is 1.
+    pub fn panel_block(mut self, b: usize) -> Self {
+        self.opts.panel_block = Some(b.max(1));
+        self
+    }
+
+    /// Opt in to mixed-precision step-1 panel factorization for `Auto`
+    /// requests (default **off**). When enabled, an `Auto` decision
+    /// that already lands on Direct TSQR additionally checks the κ
+    /// probe: if κ ≤ [`crate::linalg::MIXED_KAPPA_MAX`], step-1 blocks
+    /// are factored in f32 storage with f64 accumulation and finished
+    /// with one f64 refinement sweep. This *changes result bits* for
+    /// those runs (never for fixed-algorithm requests, which skip the
+    /// probe), and is recorded in the `auto-select` marker step.
+    pub fn mixed_precision(mut self, on: bool) -> Self {
+        self.opts.mixed_precision = on;
+        self
+    }
+
     /// DFS namespace prefix for this session's temp files (e.g.
     /// `"s0/"`). Sessions whose requests land in one shared store must
     /// use distinct namespaces, or their `seq`-derived intermediate
@@ -393,10 +419,19 @@ impl SessionBuilder {
     }
 
     fn into_cluster_parts(self) -> Result<ClusterParts> {
-        let (compute, backend_desc) = match self.compute {
+        let (mut compute, backend_desc) = match self.compute {
             Some(c) => (c, "custom"),
             None => self.backend.resolve()?,
         };
+        // A non-default panel width needs its own NativeRuntime value
+        // (the pooled instance stays at DEFAULT_PANEL). The runtime is
+        // a stateless two-word value, so skipping the pool costs
+        // nothing; custom/PJRT backends ignore the knob.
+        if let Some(b) = self.opts.panel_block {
+            if backend_desc == "native" {
+                compute = Arc::new(NativeRuntime::with_panel(b));
+            }
+        }
         Ok(ClusterParts {
             model: self.model,
             cluster: self.cluster,

@@ -65,6 +65,7 @@ fn run_auto(
             threshold: req.condition_threshold,
             chosen: Algorithm::IndirectTsqr { refine: false },
             probe_reused: true,
+            mixed_precision: false,
         };
         stats.push(decision.step_stats());
         return Ok(Factorization {
@@ -77,7 +78,19 @@ fn run_auto(
         });
     }
 
-    let decision = AutoDecision::from_probe(&probe_r, req.condition_threshold, req.refine);
+    let mut decision = AutoDecision::from_probe(&probe_r, req.condition_threshold, req.refine);
+    // Mixed-precision step 1 is an explicit session opt-in and only
+    // engages when the probe shows the f32 mantissa plus one f64
+    // refinement sweep can still deliver full accuracy (κ within
+    // MIXED_KAPPA_MAX). The well-conditioned branch reuses the probe's
+    // f64 R as-is, so only the Direct-TSQR rerun is eligible.
+    if !decision.probe_reused
+        && coord.opts.mixed_precision
+        && decision.kappa_estimate.is_finite()
+        && decision.kappa_estimate <= crate::linalg::MIXED_KAPPA_MAX
+    {
+        decision.mixed_precision = true;
+    }
     stats.push(decision.step_stats());
 
     if decision.probe_reused {
@@ -100,7 +113,10 @@ fn run_auto(
     }
 
     // ill-conditioned: the unconditionally stable path
-    run_fixed(coord, input, req.want, decision.chosen, Some((decision, stats)))
+    coord.mixed_step1 = decision.mixed_precision;
+    let out = run_fixed(coord, input, req.want, decision.chosen, Some((decision, stats)));
+    coord.mixed_step1 = false;
+    out
 }
 
 fn run_fixed(

@@ -38,6 +38,11 @@ pub struct AutoDecision {
     /// Whether the probe's `R` directly served the request (the
     /// well-conditioned and R-only branches: one fewer pass over `A`).
     pub probe_reused: bool,
+    /// Whether the chosen Direct TSQR run takes the mixed-precision
+    /// step-1 path (session opt-in and κ within
+    /// [`crate::linalg::MIXED_KAPPA_MAX`]). Recorded here — and in the
+    /// marker step — because it changes result bits for that run.
+    pub mixed_precision: bool,
 }
 
 impl AutoDecision {
@@ -51,6 +56,7 @@ impl AutoDecision {
                 threshold,
                 chosen: Algorithm::IndirectTsqr { refine },
                 probe_reused: true,
+                mixed_precision: false,
             }
         } else {
             AutoDecision {
@@ -58,6 +64,7 @@ impl AutoDecision {
                 threshold,
                 chosen: Algorithm::DirectTsqr,
                 probe_reused: false,
+                mixed_precision: false,
             }
         }
     }
@@ -66,10 +73,11 @@ impl AutoDecision {
     pub(crate) fn step_stats(&self) -> StepStats {
         StepStats {
             name: format!(
-                "auto-select(kappa~{:.1e} -> {}{})",
+                "auto-select(kappa~{:.1e} -> {}{}{})",
                 self.kappa_estimate,
                 self.chosen.cli_name(),
-                if self.probe_reused { ", probe-reused" } else { "" }
+                if self.probe_reused { ", probe-reused" } else { "" },
+                if self.mixed_precision { ", mixed-precision" } else { "" }
             ),
             ..Default::default()
         }
@@ -130,11 +138,13 @@ mod tests {
             threshold: 1e6,
             chosen: Algorithm::IndirectTsqr { refine: false },
             probe_reused: true,
+            mixed_precision: false,
         };
         let s = d.step_stats();
         assert!(s.name.starts_with("auto-select"));
         assert!(s.name.contains("indirect"));
         assert!(s.name.contains("probe-reused"));
+        assert!(!s.name.contains("mixed-precision"));
         assert_eq!(s.virtual_secs, 0.0);
         assert_eq!(s.map_tasks, 0);
 
@@ -143,8 +153,12 @@ mod tests {
             threshold: 1e6,
             chosen: Algorithm::DirectTsqr,
             probe_reused: false,
+            mixed_precision: false,
         };
         assert!(!d2.step_stats().name.contains("probe-reused"));
         assert!(d2.step_stats().name.contains("direct"));
+
+        let d3 = AutoDecision { mixed_precision: true, ..d2 };
+        assert!(d3.step_stats().name.contains("mixed-precision"));
     }
 }

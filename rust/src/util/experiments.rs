@@ -198,7 +198,7 @@ mod tests {
     use crate::runtime::NativeRuntime;
 
     fn native() -> SharedCompute {
-        std::sync::Arc::new(NativeRuntime)
+        std::sync::Arc::new(NativeRuntime::new())
     }
 
     #[test]

@@ -31,7 +31,7 @@ macro_rules! require_runtime {
 #[test]
 fn pjrt_qr_matches_native_oracle() {
     let rt = require_runtime!();
-    let native = NativeRuntime;
+    let native = NativeRuntime::new();
     let mut rng = Rng::new(1);
     for &(rows, cols) in &[(64usize, 4usize), (1000, 10), (777, 25), (300, 50)] {
         let a = Matrix::gaussian(rows, cols, &mut rng);
@@ -76,7 +76,7 @@ fn pjrt_qr_ill_conditioned_stays_orthogonal() {
 #[test]
 fn pjrt_gram_matches_native() {
     let rt = require_runtime!();
-    let native = NativeRuntime;
+    let native = NativeRuntime::new();
     let mut rng = Rng::new(4);
     for &(rows, cols) in &[(100usize, 4usize), (1024, 10), (333, 25)] {
         let a = Matrix::gaussian(rows, cols, &mut rng);
@@ -169,7 +169,7 @@ fn pjrt_svd_of_r_pipeline() {
 #[test]
 fn pjrt_differential_fuzz_vs_native() {
     let rt = require_runtime!();
-    let native = NativeRuntime;
+    let native = NativeRuntime::new();
     let mut rng = Rng::new(11);
     for case in 0..20 {
         let rows = 4 + (rng.below(500) as usize);

@@ -1,0 +1,201 @@
+//! Kernel-layer determinism contracts, end to end.
+//!
+//! The blocked panel kernels (`rust/src/linalg/{gemm,block}.rs`) must be
+//! invisible to everything above them except the wall clock:
+//!
+//! - `R` from the blocked QR is **bitwise identical** to the textbook
+//!   column-by-column factorization at every panel width, so
+//!   `panel_block` joins `host_threads`/`shards`/`worker_procs` in the
+//!   set of pure scheduling knobs outside the digest contract.
+//! - `factor_blocks` is a dispatch amortization, not a different
+//!   algorithm: any split of a block list produces the same bits as
+//!   per-block calls.
+//! - Mixed precision is the one *opt-in* exception: it changes result
+//!   bits exactly where the recorded `Auto` decision says it fired,
+//!   and nowhere else.
+
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::linalg::{
+    blocked_qr, factor_blocks, householder_qr_reference, matrix_with_condition, Matrix,
+    DEFAULT_PANEL,
+};
+use mrtsqr::session::{Backend, Factorization, SessionBuilder, TsqrSession};
+use mrtsqr::util::rng::Rng;
+
+fn gaussian(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let data = (0..rows * cols).map(|_| rng.gaussian()).collect();
+    Matrix::from_rows(rows, cols, data)
+}
+
+fn assert_bits_eq(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+// ------------------------------------------------------------- unit level
+
+#[test]
+fn blocked_r_bits_are_panel_invariant() {
+    for &(m, n) in &[(200, 7), (96, 32), (64, 64)] {
+        let a = gaussian(m, n, (m * 31 + n) as u64);
+        let (_, r_ref) = householder_qr_reference(&a);
+        for &panel in &[1usize, 3, 8, DEFAULT_PANEL, 64, 1000] {
+            let (_, r) = blocked_qr(&a, panel);
+            assert_bits_eq(&r, &r_ref, &format!("R at {m}x{n} panel={panel}"));
+        }
+    }
+}
+
+#[test]
+fn factor_blocks_is_split_invariant() {
+    let blocks: Vec<Matrix> = (0..7)
+        .map(|i| gaussian(40 + 8 * i, 6, 1000 + i as u64))
+        .collect();
+    let whole = factor_blocks(&blocks, DEFAULT_PANEL);
+    // any contiguous split of the batch yields the same bits
+    for split in [1usize, 2, 3, 7] {
+        let mut pieced = Vec::new();
+        for chunk in blocks.chunks(split) {
+            pieced.extend(factor_blocks(chunk, DEFAULT_PANEL));
+        }
+        assert_eq!(pieced.len(), whole.len());
+        for (k, ((q1, r1), (q2, r2))) in whole.iter().zip(&pieced).enumerate() {
+            assert_bits_eq(q1, q2, &format!("Q block {k} split {split}"));
+            assert_bits_eq(r1, r2, &format!("R block {k} split {split}"));
+        }
+    }
+    // and matches the single-block entry point
+    for (k, (q, r)) in whole.iter().enumerate() {
+        let (q1, r1) = blocked_qr(&blocks[k], DEFAULT_PANEL);
+        assert_bits_eq(q, &q1, &format!("Q block {k} vs blocked_qr"));
+        assert_bits_eq(r, &r1, &format!("R block {k} vs blocked_qr"));
+    }
+}
+
+// -------------------------------------------------------------- e2e level
+
+fn builder() -> SessionBuilder {
+    TsqrSession::builder().backend(Backend::Native).rows_per_task(50)
+}
+
+fn run_direct(b: SessionBuilder, seed: u64) -> (TsqrSession, Factorization) {
+    let mut s = b.build().unwrap();
+    let h = s.ingest_gaussian("A", 1500, 8, seed).unwrap();
+    let f = s.qr_with(&h, Algorithm::DirectTsqr).unwrap();
+    (s, f)
+}
+
+#[test]
+fn digests_are_invariant_to_panel_block_and_host_threads() {
+    let (s0, base) = run_direct(builder(), 42);
+    let d0 = base.result_digest();
+    let q0 = s0.get_matrix(base.q.as_ref().unwrap()).unwrap();
+
+    for (panel, threads) in [(Some(4), 1), (Some(4), 8), (Some(32), 1), (None, 8)] {
+        let mut b = builder().host_threads(threads);
+        if let Some(p) = panel {
+            b = b.panel_block(p);
+        }
+        let (s, f) = run_direct(b, 42);
+        assert_eq!(
+            f.result_digest(),
+            d0,
+            "digest drifted at panel_block={panel:?} host_threads={threads}"
+        );
+        let q = s.get_matrix(f.q.as_ref().unwrap()).unwrap();
+        assert_bits_eq(&q, &q0, &format!("Q at panel_block={panel:?} host_threads={threads}"));
+        assert_eq!(
+            f.stats.virtual_secs().to_bits(),
+            base.stats.virtual_secs().to_bits(),
+            "virtual time drifted at panel_block={panel:?}"
+        );
+    }
+}
+
+fn run_auto_kappa(b: SessionBuilder, kappa: f64) -> Factorization {
+    let mut s = b.build().unwrap();
+    let mut rng = Rng::new(7);
+    let a = matrix_with_condition(400, 6, kappa, &mut rng);
+    let h = s.ingest_matrix("A", &a).unwrap();
+    s.qr(&h).unwrap()
+}
+
+#[test]
+fn mixed_precision_is_opt_in_and_recorded() {
+    // κ ~ 1e4: above the default Auto threshold (Direct TSQR fires),
+    // inside the mixed-precision ceiling (MIXED_KAPPA_MAX = 1e6)
+    let base = run_auto_kappa(builder(), 1e4);
+    let d = base.auto.unwrap();
+    assert_eq!(d.chosen, Algorithm::DirectTsqr, "κ~1e4 must take the stable path");
+    assert!(!d.mixed_precision, "mixed precision must be off by default");
+    assert!(
+        !base.stats.steps.iter().any(|s| s.name.contains("mixed-precision")),
+        "no mixed marker without the opt-in"
+    );
+
+    // explicit off == default, byte for byte
+    let off = run_auto_kappa(builder().mixed_precision(false), 1e4);
+    assert_eq!(off.result_digest(), base.result_digest());
+
+    // opting in flips the recorded decision, the marker, and the bits
+    let on = run_auto_kappa(builder().mixed_precision(true), 1e4);
+    let d_on = on.auto.unwrap();
+    assert!(d_on.mixed_precision, "κ within the gate + opt-in must engage");
+    assert!(
+        on.stats
+            .steps
+            .iter()
+            .any(|s| s.name.contains("auto-select") && s.name.contains("mixed-precision")),
+        "the auto-select marker must record the mixed run"
+    );
+    assert_ne!(
+        on.result_digest(),
+        base.result_digest(),
+        "f32 storage + one refinement sweep cannot reproduce f64 bits"
+    );
+    // ...but the refined factors are still full accuracy on a tame κ
+    let r_err: f64 = on
+        .r
+        .data
+        .iter()
+        .zip(&base.r.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max);
+    let r_scale = base.r.data.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    // step-1 blocks carry an f32-mantissa backward error (~1e-7) that
+    // the f64 refinement turns into orthogonality, not into f64 R bits
+    assert!(
+        r_err / r_scale < 1e-5,
+        "mixed R strayed from the f64 R: rel {:.2e}",
+        r_err / r_scale
+    );
+
+    // the mixed path is still a deterministic function of the input
+    let on2 = run_auto_kappa(builder().mixed_precision(true).host_threads(8), 1e4);
+    assert_eq!(on2.result_digest(), on.result_digest(), "mixed bits must not depend on threads");
+}
+
+#[test]
+fn mixed_precision_respects_the_kappa_ceiling() {
+    // κ ~ 1e9 clears the Auto threshold but busts MIXED_KAPPA_MAX:
+    // the opt-in must be ignored and the bits must match the f64 run
+    let base = run_auto_kappa(builder(), 1e9);
+    let on = run_auto_kappa(builder().mixed_precision(true), 1e9);
+    let d = on.auto.unwrap();
+    assert_eq!(d.chosen, Algorithm::DirectTsqr);
+    assert!(!d.mixed_precision, "κ~1e9 is outside the f32 gate");
+    assert_eq!(on.result_digest(), base.result_digest());
+}
+
+#[test]
+fn mixed_precision_never_touches_fixed_algorithm_requests() {
+    // fixed requests skip the probe — there is no κ evidence, so the
+    // opt-in must be inert and digests must match the plain session
+    let (_, base) = run_direct(builder(), 55);
+    let (_, on) = run_direct(builder().mixed_precision(true), 55);
+    assert!(on.auto.is_none());
+    assert_eq!(on.result_digest(), base.result_digest());
+}

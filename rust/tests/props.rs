@@ -16,7 +16,7 @@ use mrtsqr::workload::{get_matrix, put_matrix};
 fn run_direct(a: &Matrix, rows_per_task: usize) -> (Matrix, Matrix) {
     let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
     put_matrix(&mut engine.dfs, "A", a);
-    let mut coord = Coordinator::new(engine, &NativeRuntime);
+    let mut coord = Coordinator::new(engine, NativeRuntime::oracle());
     coord.opts.rows_per_task = rows_per_task;
     let h = MatrixHandle::new("A", a.rows, a.cols);
     let res = coord.qr(&h, Algorithm::DirectTsqr).unwrap();
@@ -210,7 +210,7 @@ fn prop_engine_bytes_match_perfmodel_for_cholesky_gram() {
         |(a, rpt)| {
             let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
             put_matrix(&mut engine.dfs, "A", a);
-            let mut coord = Coordinator::new(engine, &NativeRuntime);
+            let mut coord = Coordinator::new(engine, NativeRuntime::oracle());
             coord.opts.rows_per_task = *rpt;
             let h = MatrixHandle::new("A", a.rows, a.cols);
             let (_, stats) =
@@ -263,7 +263,7 @@ fn prop_virtual_time_monotone_in_bytes() {
     fn run_time(a: &Matrix) -> f64 {
         let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
         put_matrix(&mut engine.dfs, "A", a);
-        let mut coord = Coordinator::new(engine, &NativeRuntime);
+        let mut coord = Coordinator::new(engine, NativeRuntime::oracle());
         coord.opts.rows_per_task = 20;
         let h = MatrixHandle::new("A", a.rows, a.cols);
         coord.qr(&h, Algorithm::DirectTsqr).unwrap().stats.virtual_secs()

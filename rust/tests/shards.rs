@@ -319,7 +319,7 @@ impl BlockCompute for PoisonOnSevenCols {
 #[test]
 fn panicked_job_leaves_every_shard_serving() {
     let svc = mrtsqr::TsqrSession::builder()
-        .compute(Arc::new(PoisonOnSevenCols(NativeRuntime)))
+        .compute(Arc::new(PoisonOnSevenCols(NativeRuntime::new())))
         .rows_per_task(50)
         .engine_shards(2)
         .service_workers(1)
