@@ -8,12 +8,28 @@
 //! fitted per-slot β's are recovered from the virtual times and should
 //! reproduce the model inputs — this bench both regenerates Table II's
 //! layout and validates the engine's clock (measured == charged).
+//!
+//! PR 8 revives this bench with a second leg: **streamed single-pass
+//! R/Σ vs the staged two-pass batch path**. The streamed side folds
+//! arriving row chunks straight into a running `R`
+//! ([`mrtsqr::stream::RFold`] through `TsqrSession::stream`) — one
+//! pass, `O(n²)` resident state, the input never exists whole
+//! anywhere; the batch side ingests the full matrix into the DFS
+//! (pass 1, write) and then factors it (pass 2, read). The table
+//! reports wall-clock *and* peak-resident rows for both;
+//! `--bench-json PATH` records the leg for the BENCH_8.json
+//! trajectory (`MRTSQR_BENCH_QUICK=1` / `--quick` shrinks shapes).
 
 use anyhow::Result;
 use mrtsqr::dfs::records::Record;
 use mrtsqr::dfs::DiskModel;
+use mrtsqr::linalg::Matrix;
 use mrtsqr::mapreduce::{ClusterConfig, Emitter, Engine, JobSpec, MapTask};
+use mrtsqr::session::{Backend, TsqrSession};
+use mrtsqr::util::bench::{arg_value, quick_mode, time, Sample};
 use mrtsqr::util::experiments::bench_scale;
+use mrtsqr::util::json::Json;
+use mrtsqr::util::rng::Rng;
 use mrtsqr::util::table::{commas, Table};
 use mrtsqr::workload::{gaussian_matrix, paper_workloads};
 
@@ -34,6 +50,107 @@ impl MapTask for RewriteMap {
         }
         Ok(())
     }
+}
+
+/// One shape's numbers from the streamed-vs-batch leg.
+struct StreamPoint {
+    rows: usize,
+    cols: usize,
+    streamed: Sample,
+    batch: Sample,
+    /// Fold high-water mark: arrival buffer + stack `R`s.
+    streamed_peak_rows: usize,
+    /// The staged input lives whole in the DFS on the batch path.
+    batch_resident_rows: usize,
+    input_passes: u64,
+}
+
+fn stream_session() -> TsqrSession {
+    TsqrSession::builder()
+        .backend(Backend::Native)
+        .stream_chunk_rows(1000)
+        .build()
+        .expect("native session")
+}
+
+/// Streamed single-pass Σ vs ingest-then-factor. Both sides consume
+/// the identical seeded row sequence; the streamed side never holds
+/// more than the fold's `O(n²)` state.
+fn streaming_vs_batch_leg(quick: bool) -> Vec<StreamPoint> {
+    let shapes: &[(usize, usize)] =
+        if quick { &[(20_000, 8)] } else { &[(200_000, 8), (100_000, 25)] };
+    let (warmup, iters) = if quick { (1, 3) } else { (2, 5) };
+    let mut out = Vec::new();
+    let mut table = Table::new(
+        "Streamed 1-pass R/Σ vs staged 2-pass batch (same rows, same Σ problem)",
+        &["shape", "streamed (s)", "batch (s)", "streamed peak rows", "batch resident rows",
+          "passes"],
+    );
+    for &(rows, cols) in shapes {
+        let streamed = time(warmup, iters, || {
+            let mut session = stream_session();
+            let mut w = session.stream("S", cols);
+            let mut rng = Rng::new(42);
+            let mut remaining = rows;
+            while remaining > 0 {
+                let take = 1000.min(remaining);
+                w.push_chunk(&Matrix::gaussian(take, cols, &mut rng)).unwrap();
+                remaining -= take;
+            }
+            std::hint::black_box(w.finalize_sigma().unwrap());
+        });
+        let batch = time(warmup, iters, || {
+            let mut session = stream_session();
+            // pass 1: write the whole input into the DFS; pass 2: read
+            // it back through the factorization
+            let input = session.ingest_gaussian("A", rows, cols, 42).unwrap();
+            std::hint::black_box(session.singular_values(&input).unwrap());
+        });
+        // accounting run, outside the timers: fold stats for the
+        // resident high-water mark and the single-pass invariant
+        let (streamed_peak_rows, input_passes) = {
+            let mut session = stream_session();
+            let mut w = session.stream("S", cols);
+            let mut rng = Rng::new(42);
+            let mut remaining = rows;
+            while remaining > 0 {
+                let take = 1000.min(remaining);
+                w.push_chunk(&Matrix::gaussian(take, cols, &mut rng)).unwrap();
+                remaining -= take;
+            }
+            let (_, _, stats) = w.finalize_sigma().unwrap();
+            (stats.peak_resident_rows, stats.input_passes())
+        };
+        assert_eq!(input_passes, 1, "the streamed side must stay single-pass");
+        table.row(&[
+            format!("{rows}x{cols}"),
+            format!("{:.4}", streamed.median_secs),
+            format!("{:.4}", batch.median_secs),
+            commas(streamed_peak_rows as u64),
+            commas(rows as u64),
+            input_passes.to_string(),
+        ]);
+        out.push(StreamPoint {
+            rows,
+            cols,
+            streamed,
+            batch,
+            streamed_peak_rows,
+            batch_resident_rows: rows,
+            input_passes,
+        });
+    }
+    table.print();
+    out
+}
+
+fn sample_json(s: &Sample) -> Json {
+    Json::obj([
+        ("median_secs", Json::num(s.median_secs)),
+        ("min_secs", Json::num(s.min_secs)),
+        ("max_secs", Json::num(s.max_secs)),
+        ("iters", Json::num(s.iters as f64)),
+    ])
 }
 
 fn main() -> Result<()> {
@@ -90,5 +207,33 @@ fn main() -> Result<()> {
     table.print();
     println!("paper Table II: beta_r/m_max = 1.38–2.27 s/GB, beta_w/m_max = 3.03–3.24 s/GB");
     println!("(our simulated disk is configured at 1.6 / 3.15 s/GB per slot — the fit recovers it)");
+
+    let quick = quick_mode();
+    let points = streaming_vs_batch_leg(quick);
+    if let Some(path) = arg_value("bench-json") {
+        let report = Json::obj([
+            ("bench", Json::str("table2_streaming")),
+            ("quick", Json::Bool(quick)),
+            (
+                "streaming_vs_batch",
+                Json::arr(points.iter().map(|p| {
+                    Json::obj([
+                        ("shape", Json::str(format!("{}x{}", p.rows, p.cols))),
+                        ("streamed", sample_json(&p.streamed)),
+                        ("batch", sample_json(&p.batch)),
+                        (
+                            "speedup",
+                            Json::num(p.batch.median_secs / p.streamed.median_secs),
+                        ),
+                        ("streamed_peak_rows", Json::num(p.streamed_peak_rows as f64)),
+                        ("batch_resident_rows", Json::num(p.batch_resident_rows as f64)),
+                        ("input_passes", Json::num(p.input_passes as f64)),
+                    ])
+                })),
+            ),
+        ]);
+        std::fs::write(&path, report.render() + "\n").expect("write bench json");
+        println!("bench json -> {path}");
+    }
     Ok(())
 }

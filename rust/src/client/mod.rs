@@ -92,7 +92,7 @@ pub mod worker;
 pub use net::TcpTransport;
 pub use process::ProcessTransport;
 pub use tcp::TcpServer;
-pub use transport::{LocalTransport, Transport, TransportJob};
+pub use transport::{LocalTransport, Transport, TransportIngest, TransportJob};
 pub use wire::{WorkerConfig, WIRE_VERSION};
 
 use crate::coordinator::MatrixHandle;
@@ -148,6 +148,43 @@ impl ClientJobHandle {
     /// process transport); `None` until terminal.
     pub fn wall_secs(&self) -> Option<f64> {
         self.inner.wall_secs()
+    }
+}
+
+/// Handle to one queued async ingestion, returned by
+/// [`TsqrClient::ingest_gaussian_async`]: the matrix handle is usable
+/// for dependent submissions immediately; `wait()` blocks until the
+/// rows are durable on their home shard.
+pub struct ClientIngestHandle {
+    inner: Box<dyn TransportIngest>,
+}
+
+impl ClientIngestHandle {
+    /// The ingestion's job id (it occupies the same id space as
+    /// factorization jobs).
+    pub fn id(&self) -> JobId {
+        self.inner.id()
+    }
+
+    /// The matrix the ingestion will produce — valid for `submit`
+    /// right away; the dependent job queues behind the upload.
+    pub fn handle(&self) -> MatrixHandle {
+        self.inner.handle()
+    }
+
+    pub fn status(&self) -> JobStatus {
+        self.inner.status()
+    }
+
+    /// Block until the rows are durably on their home shard.
+    pub fn wait(&self) -> Result<MatrixHandle> {
+        self.inner.wait()
+    }
+
+    /// Cancel if not yet running; `true` on success. Jobs already
+    /// submitted against the handle then fail with a dependency error.
+    pub fn cancel(&self) -> bool {
+        self.inner.cancel()
     }
 }
 
@@ -227,6 +264,56 @@ impl TsqrClient {
         placement: Placement,
     ) -> Result<MatrixHandle> {
         self.transport.ingest_gaussian(name, rows, cols, seed, placement)
+    }
+
+    /// Queue a gaussian ingestion as a first-class async job and
+    /// return immediately (PR 8). The upload runs on the target
+    /// shard's worker queue in short chunked engine-lock acquisitions,
+    /// so factorizations on the same shard interleave with it, and a
+    /// [`TsqrClient::submit`] naming the still-ingesting matrix queues
+    /// behind it via a dependency edge — bit-identical to
+    /// ingest-then-submit.
+    pub fn ingest_gaussian_async(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        placement: Placement,
+    ) -> Result<ClientIngestHandle> {
+        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        self.ingest_async_id(id, name, rows, cols, seed, placement)
+    }
+
+    /// [`TsqrClient::ingest_gaussian_async`] under a *caller-chosen*
+    /// job id — the relay hook `mrtsqr serve` uses so ingestion job
+    /// ids agree end to end (same contract as
+    /// [`TsqrClient::submit_with_id`]).
+    pub fn ingest_gaussian_async_with_id(
+        &self,
+        id: JobId,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        placement: Placement,
+    ) -> Result<ClientIngestHandle> {
+        self.next_id.fetch_max(id.0 + 1, Ordering::Relaxed);
+        self.ingest_async_id(id, name, rows, cols, seed, placement)
+    }
+
+    fn ingest_async_id(
+        &self,
+        id: JobId,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        placement: Placement,
+    ) -> Result<ClientIngestHandle> {
+        Ok(ClientIngestHandle {
+            inner: self.transport.ingest_gaussian_async(id, name, rows, cols, seed, placement)?,
+        })
     }
 
     /// Ingest an in-memory matrix onto the home shard (exact bits; on a
@@ -389,6 +476,20 @@ mod tests {
         for j in [&j0, &j1, &j9, &j10] {
             j.wait().unwrap();
         }
+    }
+
+    #[test]
+    fn async_ingest_then_dependent_submit_over_the_local_transport() {
+        let client = local_client();
+        let ing = client.ingest_gaussian_async("A", 200, 4, 7, Placement::Auto).unwrap();
+        assert_eq!(ing.id().0, 0);
+        let job = client.submit(&ing.handle(), FactorizationRequest::r_only()).unwrap();
+        assert_eq!(job.id().0, 1, "submit ids share the ingestion id space");
+        assert_eq!(client.drain_now().unwrap(), 2, "ingest + dependent job");
+        let h = ing.wait().unwrap();
+        assert_eq!((h.rows, h.cols), (200, 4));
+        assert_eq!(ing.status(), JobStatus::Done);
+        assert_eq!(job.wait().unwrap().r.rows, 4);
     }
 
     #[test]

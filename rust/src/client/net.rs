@@ -56,10 +56,10 @@
 //! server keeps serving everyone else.
 
 use super::process::{
-    decode_job_done, decode_job_fail, GaussianRecipe, Peer, ProcRouter, RemoteJob,
-    RemoteJobHandle, RemoteState, ReplySlot, RouteBook, CHUNK_ROWS,
+    decode_job_done, decode_job_fail, GaussianRecipe, Peer, ProcRouter, RemoteIngestHandle,
+    RemoteJob, RemoteJobHandle, RemoteState, ReplySlot, RouteBook, CHUNK_ROWS,
 };
-use super::transport::{Transport, TransportJob};
+use super::transport::{Transport, TransportIngest, TransportJob};
 use super::wire::{self, Frame, Op, WireReader, WireWriter, WorkerConfig};
 use crate::coordinator::MatrixHandle;
 use crate::linalg::Matrix;
@@ -902,6 +902,37 @@ impl Transport for TcpTransport {
             .insert(name.to_string(), GaussianRecipe { rows, cols, seed });
         core.mark_staged(name, hidx, true);
         Ok(handle)
+    }
+
+    fn ingest_gaussian_async(
+        &self,
+        id: JobId,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        placement: Placement,
+    ) -> Result<Box<dyn TransportIngest>> {
+        let core = &self.core;
+        let (hidx, local) = core.ingest_target(placement)?;
+        let mut w = WireWriter::new();
+        w.u64(id.0);
+        w.str(name);
+        w.u64(rows as u64);
+        w.u64(cols as u64);
+        w.u64(seed);
+        w.placement(local);
+        let reply = core.hosts[hidx].request(Op::IngestAsync, &w.into_bytes())?;
+        ensure!(reply.op == Op::Handle, "expected Handle, got {:?}", reply.op);
+        let mut r = WireReader::new(&reply.payload);
+        let handle = r.handle()?;
+        r.finish()?;
+        core.recipes
+            .lock()
+            .expect("recipes")
+            .insert(name.to_string(), GaussianRecipe { rows, cols, seed });
+        core.mark_staged(name, hidx, true);
+        Ok(Box::new(RemoteIngestHandle { id, handle, conn: core.hosts[hidx].clone() }))
     }
 
     fn ingest_matrix(

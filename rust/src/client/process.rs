@@ -35,7 +35,7 @@
 //! the client-side recipe (gaussian seeds replay as seeds, not bytes) —
 //! and job outputs are fetched from the worker that holds them.
 
-use super::transport::{Transport, TransportJob};
+use super::transport::{Transport, TransportIngest, TransportJob};
 use super::wire::{self, Frame, Op, WireReader, WireWriter, WorkerConfig};
 use crate::coordinator::MatrixHandle;
 use crate::linalg::Matrix;
@@ -273,6 +273,73 @@ impl<P: Peer + 'static> TransportJob for RemoteJobHandle<P> {
             RemoteState::Done { wall_secs, .. } => Some(*wall_secs),
             RemoteState::Failed { wall_secs, .. } => *wall_secs,
             _ => None,
+        }
+    }
+}
+
+/// [`TransportIngest`] over the wire: the serving side queued the
+/// ingestion as a first-class job ([`Op::IngestAsync`]) and this handle
+/// polls its status ([`Op::IngestStatus`]). Unlike factorizations,
+/// ingestions have no pushed terminal frame — their result *is* the
+/// matrix handle, already known — so a poll loop is all `wait` needs.
+pub(crate) struct RemoteIngestHandle<P: Peer> {
+    pub(crate) id: JobId,
+    pub(crate) handle: MatrixHandle,
+    pub(crate) conn: Arc<P>,
+}
+
+impl<P: Peer> RemoteIngestHandle<P> {
+    fn remote_status(&self) -> Result<JobStatus> {
+        let mut w = WireWriter::new();
+        w.u64(self.id.0);
+        let reply = self.conn.request(Op::IngestStatus, &w.into_bytes())?;
+        ensure!(reply.op == Op::StatusReply, "expected StatusReply, got {:?}", reply.op);
+        let mut r = WireReader::new(&reply.payload);
+        let status = r.status()?;
+        r.finish()?;
+        Ok(status)
+    }
+}
+
+impl<P: Peer + 'static> TransportIngest for RemoteIngestHandle<P> {
+    fn id(&self) -> JobId {
+        self.id
+    }
+
+    fn handle(&self) -> MatrixHandle {
+        self.handle.clone()
+    }
+
+    fn status(&self) -> JobStatus {
+        self.remote_status().unwrap_or_else(|_| self.conn.offline_status())
+    }
+
+    fn wait(&self) -> Result<MatrixHandle> {
+        loop {
+            match self.remote_status()? {
+                JobStatus::Queued | JobStatus::Running => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                JobStatus::Done => return Ok(self.handle.clone()),
+                JobStatus::Failed => {
+                    bail!("{} (ingestion of {:?}) failed on the serving side", self.id, self.handle.file)
+                }
+                JobStatus::Cancelled => {
+                    bail!("{} (ingestion of {:?}) was cancelled before it ran", self.id, self.handle.file)
+                }
+            }
+        }
+    }
+
+    fn cancel(&self) -> bool {
+        let mut w = WireWriter::new();
+        w.u64(self.id.0);
+        match self.conn.request(Op::Cancel, &w.into_bytes()) {
+            Ok(frame) => {
+                let mut r = WireReader::new(&frame.payload);
+                r.bool().unwrap_or(false)
+            }
+            Err(_) => false,
         }
     }
 }
@@ -944,6 +1011,39 @@ impl Transport for ProcessTransport {
             .insert(name.to_string(), GaussianRecipe { rows, cols, seed });
         self.mark_staged(name, proc, true);
         Ok(handle)
+    }
+
+    fn ingest_gaussian_async(
+        &self,
+        id: JobId,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        placement: Placement,
+    ) -> Result<Box<dyn TransportIngest>> {
+        let (proc, local) = self.ingest_target(placement)?;
+        let mut w = WireWriter::new();
+        w.u64(id.0);
+        w.str(name);
+        w.u64(rows as u64);
+        w.u64(cols as u64);
+        w.u64(seed);
+        w.placement(local);
+        let reply = self.conns[proc].request(Op::IngestAsync, &w.into_bytes())?;
+        ensure!(reply.op == Op::Handle, "expected Handle, got {:?}", reply.op);
+        let mut r = WireReader::new(&reply.payload);
+        let handle = r.handle()?;
+        r.finish()?;
+        // same bookkeeping as the synchronous path: the recipe replays
+        // on other workers if a job routed there needs the matrix, and
+        // the queued ingestion owns the name exclusively until then
+        self.recipes
+            .lock()
+            .expect("recipes")
+            .insert(name.to_string(), GaussianRecipe { rows, cols, seed });
+        self.mark_staged(name, proc, true);
+        Ok(Box::new(RemoteIngestHandle { id, handle, conn: self.conns[proc].clone() }))
     }
 
     fn ingest_matrix(

@@ -22,7 +22,7 @@
 
 use crate::coordinator::MatrixHandle;
 use crate::linalg::Matrix;
-use crate::service::{JobHandle, JobId, JobStatus, TsqrService};
+use crate::service::{IngestHandle, IngestRecipe, JobHandle, JobId, JobStatus, TsqrService};
 use crate::session::{Factorization, FactorizationRequest, Placement};
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -44,6 +44,23 @@ pub trait TransportJob: Send + Sync {
     /// Measured running→terminal wall seconds (`None` until then; on a
     /// process transport, measured worker-side).
     fn wall_secs(&self) -> Option<f64>;
+}
+
+/// One queued ingestion job as seen through a transport (PR 8's async
+/// ingest). The [`MatrixHandle`] is valid for dependent submissions
+/// immediately; the rows land when the job runs. Implementations: a
+/// thin wrapper over [`crate::service::IngestHandle`] (local), or a
+/// status-polling proxy over the wire (process/tcp).
+pub trait TransportIngest: Send + Sync {
+    fn id(&self) -> JobId;
+    /// The matrix the ingestion will produce (usable right away).
+    fn handle(&self) -> MatrixHandle;
+    fn status(&self) -> JobStatus;
+    /// Block until the rows are durably on their home shard.
+    fn wait(&self) -> Result<MatrixHandle>;
+    /// Cancel if not yet running; `true` on success. Dependent jobs
+    /// then fail with a precise dependency error.
+    fn cancel(&self) -> bool;
 }
 
 /// Where a client's engine pool lives and how to reach it. All methods
@@ -79,6 +96,21 @@ pub trait Transport: Send + Sync {
     /// Ingest an in-memory matrix (exact bits; chunked on the wire).
     fn ingest_matrix(&self, name: &str, a: &Matrix, placement: Placement)
         -> Result<MatrixHandle>;
+
+    /// Queue a seeded gaussian ingestion as a first-class async job
+    /// under the caller-assigned global `id` and return immediately.
+    /// `submit` on the returned handle's matrix queues behind the
+    /// ingestion via a dependency edge and runs bit-identically to
+    /// ingest-then-submit.
+    fn ingest_gaussian_async(
+        &self,
+        id: JobId,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        placement: Placement,
+    ) -> Result<Box<dyn TransportIngest>>;
 
     /// Run `req` on `input` under the caller-assigned global `id`.
     /// `req.placement` names a *global* shard index; transports map it
@@ -153,6 +185,32 @@ impl TransportJob for LocalJob {
     }
 }
 
+/// [`TransportIngest`] over an in-process [`IngestHandle`] — pure
+/// delegation.
+struct LocalIngest(IngestHandle);
+
+impl TransportIngest for LocalIngest {
+    fn id(&self) -> JobId {
+        self.0.id()
+    }
+
+    fn handle(&self) -> MatrixHandle {
+        self.0.handle().clone()
+    }
+
+    fn status(&self) -> JobStatus {
+        self.0.status()
+    }
+
+    fn wait(&self) -> Result<MatrixHandle> {
+        self.0.wait()
+    }
+
+    fn cancel(&self) -> bool {
+        self.0.cancel()
+    }
+}
+
 /// The in-process transport: wraps today's sharded [`TsqrService`] with
 /// zero behavior change. Global shard indices *are* the service's shard
 /// indices, and every operation is a direct call.
@@ -209,6 +267,21 @@ impl Transport for LocalTransport {
         placement: Placement,
     ) -> Result<MatrixHandle> {
         self.svc.ingest_matrix_placed(name, a, placement)
+    }
+
+    fn ingest_gaussian_async(
+        &self,
+        id: JobId,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        placement: Placement,
+    ) -> Result<Box<dyn TransportIngest>> {
+        let recipe = IngestRecipe::Gaussian { rows, seed };
+        Ok(Box::new(LocalIngest(
+            self.svc.ingest_async_with_id(id, name, cols, recipe, placement)?,
+        )))
     }
 
     fn submit(

@@ -51,8 +51,12 @@ pub const WIRE_MAGIC: [u8; 4] = *b"MRTQ";
 /// [`Op::Ping`]/[`Op::Pong`] liveness probes used by the network
 /// transport's health checks. v3 extended [`WorkerConfig`] with the
 /// kernel-tuning knobs (`panel_block`, `mixed_precision`) and
-/// [`AutoDecision`] with its `mixed_precision` marker.
-pub const WIRE_VERSION: u16 = 3;
+/// [`AutoDecision`] with its `mixed_precision` marker. v4 added the
+/// streaming layer: the [`Op::IngestAsync`]/[`Op::IngestStatus`]
+/// queued-ingestion opcodes, the [`Op::StreamFold`] single-pass
+/// streamed-QR opcode, and [`WorkerConfig`]'s `stream_chunk_rows`
+/// knob.
+pub const WIRE_VERSION: u16 = 4;
 
 /// Upper bound on one frame's payload (1 GiB) — a corrupt length
 /// prefix must not look like an allocation request.
@@ -90,6 +94,19 @@ pub enum Op {
     /// Liveness/latency probe (empty payload); replied with [`Op::Pong`].
     /// The network transport's health checks time these round trips.
     Ping = 13,
+    /// Queue a recipe-described ingestion as a first-class job under a
+    /// caller-assigned job id; the reply is the matrix `Handle`
+    /// (usable for dependent `Submit`s immediately — the serving side
+    /// queues them behind the ingestion). Payload: id, name, rows,
+    /// cols, seed, placement.
+    IngestAsync = 14,
+    /// Poll an asynchronous ingestion's [`JobStatus`] by job id.
+    IngestStatus = 15,
+    /// Drive a server-side single-pass streamed QR
+    /// ([`crate::stream::RFold`]). Payload: a one-byte subop — `0`
+    /// begin (name, cols, chunk_rows), `1` push (a `chunk` of rows),
+    /// `2` finish (name; replies `MatrixData` with the final `R`).
+    StreamFold = 16,
     /// Handshake reply: topology of the serving side.
     HelloAck = 100,
     /// Empty success ack.
@@ -132,6 +149,9 @@ impl Op {
             11 => Op::SetScale,
             12 => Op::Shutdown,
             13 => Op::Ping,
+            14 => Op::IngestAsync,
+            15 => Op::IngestStatus,
+            16 => Op::StreamFold,
             100 => Op::HelloAck,
             101 => Op::Ok,
             102 => Op::Handle,
@@ -487,6 +507,7 @@ impl WireWriter {
             }
         }
         self.bool(cfg.opts.mixed_precision);
+        self.u64(cfg.opts.stream_chunk_rows as u64);
         self.u8(match cfg.backend {
             Backend::Auto => 0,
             Backend::Native => 1,
@@ -799,6 +820,7 @@ impl<'a> WireReader<'a> {
                 other => bail!("wire: bad option tag {other}"),
             },
             mixed_precision: self.bool()?,
+            stream_chunk_rows: self.usize()?,
         };
         let backend = match self.u8()? {
             0 => Backend::Auto,
@@ -1131,6 +1153,7 @@ mod tests {
                 gather_limit: Some(99),
                 panel_block: Some(8),
                 mixed_precision: true,
+                stream_chunk_rows: 777,
             },
             backend: Backend::Native,
             engine_shards: 2,
@@ -1151,6 +1174,7 @@ mod tests {
         assert_eq!(policy.max_attempts, 7);
         assert_eq!(seed, 777);
         assert_eq!(back.opts.gather_limit, Some(99));
+        assert_eq!(back.opts.stream_chunk_rows, 777);
         assert_eq!(back.backend, Backend::Native);
         assert_eq!(
             (back.engine_shards, back.service_workers, back.queue_capacity),

@@ -32,10 +32,11 @@
 //! half.
 
 use super::wire::{self, Frame, Op, WireReader, WireWriter, WorkerConfig, MAX_FRAME_BYTES};
-use super::{ClientJobHandle, TsqrClient};
+use super::{ClientIngestHandle, ClientJobHandle, TsqrClient};
 use crate::linalg::Matrix;
 use crate::service::{JobId, JobStatus};
 use crate::session::{Placement, SessionBuilder};
+use crate::stream::RFold;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -76,11 +77,19 @@ struct PendingIngest {
 pub(crate) struct SharedServe {
     client: Arc<TsqrClient>,
     jobs: Arc<Mutex<HashMap<u64, Arc<ClientJobHandle>>>>,
+    /// Async-ingestion jobs, keyed by their (peer-assigned) job id —
+    /// shared like `jobs` so a reconnecting TCP client can keep
+    /// polling an ingestion the old connection queued.
+    ingest_jobs: Arc<Mutex<HashMap<u64, Arc<ClientIngestHandle>>>>,
 }
 
 impl SharedServe {
     pub(crate) fn new(client: Arc<TsqrClient>) -> SharedServe {
-        SharedServe { client, jobs: Arc::new(Mutex::new(HashMap::new())) }
+        SharedServe {
+            client,
+            jobs: Arc::new(Mutex::new(HashMap::new())),
+            ingest_jobs: Arc::new(Mutex::new(HashMap::new())),
+        }
     }
 
     pub(crate) fn client(&self) -> &Arc<TsqrClient> {
@@ -102,6 +111,12 @@ struct Server<W: Write + Send + 'static> {
     /// re-pushed immediately on resubmission).
     retain_jobs: bool,
     ingests: HashMap<String, PendingIngest>,
+    /// Queued asynchronous ingestions ([`Op::IngestAsync`]), polled by
+    /// [`Op::IngestStatus`] and cancellable via [`Op::Cancel`].
+    ingest_jobs: Arc<Mutex<HashMap<u64, Arc<ClientIngestHandle>>>>,
+    /// Open server-side streamed folds ([`Op::StreamFold`]), one
+    /// [`RFold`] per stream name, connection-local like `ingests`.
+    folds: HashMap<String, RFold>,
     /// Live notify threads, joined before the loop returns so every
     /// submitted job's terminal frame is flushed before worker exit.
     notifiers: Vec<std::thread::JoinHandle<()>>,
@@ -141,9 +156,11 @@ pub(crate) fn serve_connection<R: Read, W: Write + Send + 'static>(
         out: Arc::new(Mutex::new(output)),
         prebuilt: shared.is_some(),
         client: shared.as_ref().map(|s| s.client.clone()),
+        ingest_jobs: shared.as_ref().map(|s| s.ingest_jobs.clone()).unwrap_or_default(),
         jobs: shared.map(|s| s.jobs).unwrap_or_default(),
         retain_jobs,
         ingests: HashMap::new(),
+        folds: HashMap::new(),
         notifiers: Vec::new(),
     };
     loop {
@@ -363,10 +380,101 @@ impl<W: Write + Send + 'static> Server<W> {
             Op::Cancel => {
                 let id = r.u64()?;
                 r.finish()?;
-                let job = self.job(id)?;
+                // the id spaces are shared: try factorizations first,
+                // then queued ingestions
+                let cancelled = match self.job(id) {
+                    Ok(job) => job.cancel(),
+                    Err(err) => {
+                        let ing = self
+                            .ingest_jobs
+                            .lock()
+                            .expect("ingest registry")
+                            .get(&id)
+                            .cloned();
+                        match ing {
+                            Some(ing) => ing.cancel(),
+                            None => return Err(err),
+                        }
+                    }
+                };
                 let mut w = WireWriter::new();
-                w.bool(job.cancel());
+                w.bool(cancelled);
                 Ok((Op::Flag, w.into_bytes()))
+            }
+            Op::IngestAsync => {
+                let id = r.u64()?;
+                let name = r.str()?;
+                let rows = r.usize()?;
+                let cols = r.usize()?;
+                let seed = r.u64()?;
+                let placement = r.placement()?;
+                r.finish()?;
+                let ing = self.client()?.ingest_gaussian_async_with_id(
+                    JobId(id),
+                    &name,
+                    rows,
+                    cols,
+                    seed,
+                    placement,
+                )?;
+                let mut w = WireWriter::new();
+                w.handle(&ing.handle());
+                self.ingest_jobs.lock().expect("ingest registry").insert(id, Arc::new(ing));
+                Ok((Op::Handle, w.into_bytes()))
+            }
+            Op::IngestStatus => {
+                let id = r.u64()?;
+                r.finish()?;
+                let ing = self
+                    .ingest_jobs
+                    .lock()
+                    .expect("ingest registry")
+                    .get(&id)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("protocol: unknown ingestion job id {id}"))?;
+                let mut w = WireWriter::new();
+                w.status(ing.status());
+                Ok((Op::StatusReply, w.into_bytes()))
+            }
+            Op::StreamFold => {
+                match r.u8()? {
+                    0 => {
+                        // begin: name, cols, chunk_rows
+                        let name = r.str()?;
+                        let cols = r.usize()?;
+                        let chunk_rows = r.usize()?;
+                        r.finish()?;
+                        self.client()?;
+                        self.folds.insert(name, RFold::new(cols, chunk_rows));
+                        Ok((Op::Ok, Vec::new()))
+                    }
+                    1 => {
+                        // push: one chunk of rows folded into the
+                        // running R — O(cols²) retained state, the raw
+                        // rows are never kept
+                        let (name, _first_row, cols, data) = r.chunk()?;
+                        r.finish()?;
+                        let fold = self.folds.get_mut(&name).ok_or_else(|| {
+                            anyhow!("protocol: chunk for unopened stream fold {name:?}")
+                        })?;
+                        let rows = data.len() / cols;
+                        fold.push_chunk(&Matrix { rows, cols, data })?;
+                        Ok((Op::Ok, Vec::new()))
+                    }
+                    2 => {
+                        // finish: reply with the final R
+                        let name = r.str()?;
+                        r.finish()?;
+                        let fold = self.folds.remove(&name).ok_or_else(|| {
+                            anyhow!("protocol: finish of unopened stream fold {name:?}")
+                        })?;
+                        let (r_final, _stats) = fold.finish_r()?;
+                        let mut w = WireWriter::new();
+                        w.matrix(&r_final);
+                        Ok((Op::MatrixData, w.into_bytes()))
+                    }
+                    other => bail!("protocol: unknown StreamFold subop {other}"),
+                }
             }
             Op::Evict => {
                 let id = r.u64()?;
@@ -590,6 +698,94 @@ mod tests {
         assert_eq!(frame.op, Op::Err);
         let msg = WireReader::new(&frame.payload).str().unwrap();
         assert!(msg.contains("Hello"), "{msg}");
+    }
+
+    #[test]
+    fn async_ingest_over_the_wire_runs_a_dependent_job() {
+        // IngestAsync replies with the handle immediately; a Submit
+        // naming the still-ingesting matrix queues behind it on the
+        // serving side and must still complete (JobDone push)
+        let mut ingest = WireWriter::new();
+        ingest.u64(1); // peer-assigned ingestion job id
+        ingest.str("A");
+        ingest.u64(200);
+        ingest.u64(4);
+        ingest.u64(7);
+        ingest.placement(Placement::Auto);
+        let mut status = WireWriter::new();
+        status.u64(1);
+        let mut submit = WireWriter::new();
+        submit.u64(5);
+        submit.handle(&crate::coordinator::MatrixHandle::new("A", 200, 4));
+        submit.request(&FactorizationRequest::r_only());
+        let frames = roundtrip(&[
+            (Op::Hello, 1, hello_payload()),
+            (Op::IngestAsync, 2, ingest.into_bytes()),
+            (Op::IngestStatus, 3, status.into_bytes()),
+            (Op::Submit, 4, submit.into_bytes()),
+        ]);
+        assert_eq!(frames[1].op, Op::Handle, "IngestAsync acks with the handle");
+        let mut r = WireReader::new(&frames[1].payload);
+        let h = r.handle().unwrap();
+        assert_eq!((h.file.as_str(), h.rows, h.cols), ("A", 200, 4));
+        assert_eq!(frames[2].op, Op::StatusReply);
+        let mut r = WireReader::new(&frames[2].payload);
+        let s = r.status().unwrap(); // any live state — the upload races the poll
+        assert_ne!(s, JobStatus::Failed, "queued ingestion must not have failed");
+        assert_eq!(frames[3].op, Op::Ok, "submit ack");
+        let done = frames.iter().find(|f| f.op == Op::JobDone).expect("JobDone push");
+        let mut r = WireReader::new(&done.payload);
+        assert_eq!(r.u64().unwrap(), 5);
+        let _wall = r.f64().unwrap();
+        let fact = r.factorization().unwrap();
+        assert_eq!(fact.r.cols, 4, "dependent job ran against the ingested matrix");
+    }
+
+    #[test]
+    fn stream_fold_over_the_wire_is_chunking_invariant() {
+        // the same 5 rows through a 2-chunk split and a one-shot push
+        // must produce bitwise-identical R frames
+        let rows: Vec<f64> = (0..15).map(|i| (i as f64).mul_add(0.5, 1.0)).collect();
+        let begin = |name: &str| {
+            let mut w = WireWriter::new();
+            w.u8(0);
+            w.str(name);
+            w.u64(3);
+            w.u64(2); // fold leaf size: 2 rows
+            w.into_bytes()
+        };
+        let push = |name: &str, first: u64, data: &[f64]| {
+            let mut w = WireWriter::new();
+            w.u8(1);
+            w.chunk(name, first, 3, data);
+            w.into_bytes()
+        };
+        let finish = |name: &str| {
+            let mut w = WireWriter::new();
+            w.u8(2);
+            w.str(name);
+            w.into_bytes()
+        };
+        let frames = roundtrip(&[
+            (Op::StreamFold, 1, begin("S")),
+            (Op::StreamFold, 2, push("S", 0, &rows[..9])),
+            (Op::StreamFold, 3, push("S", 3, &rows[9..])),
+            (Op::StreamFold, 4, finish("S")),
+            (Op::StreamFold, 5, begin("T")),
+            (Op::StreamFold, 6, push("T", 0, &rows)),
+            (Op::StreamFold, 7, finish("T")),
+            (Op::StreamFold, 8, finish("T")), // already closed: an error
+        ]);
+        assert_eq!(frames[3].op, Op::MatrixData);
+        assert_eq!(frames[6].op, Op::MatrixData);
+        let mut r = WireReader::new(&frames[3].payload);
+        let r_split = r.matrix().unwrap();
+        let mut r = WireReader::new(&frames[6].payload);
+        let r_oneshot = r.matrix().unwrap();
+        assert_eq!((r_split.rows, r_split.cols), (3, 3));
+        let bits = |m: &Matrix| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&r_split), bits(&r_oneshot), "arrival chunking must not change R");
+        assert_eq!(frames[7].op, Op::Err, "finishing a closed fold is a clean error");
     }
 
     #[test]

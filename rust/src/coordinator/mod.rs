@@ -152,6 +152,12 @@ pub struct CoordOpts {
     /// default: enabling it changes result bits on the runs it fires
     /// for, and the decision is recorded in the step stats marker.
     pub mixed_precision: bool,
+    /// Canonical leaf block height for streaming folds
+    /// ([`crate::session::TsqrSession::stream`]). Part of the digest
+    /// contract for *streamed* results (it shapes the fold tree, like
+    /// `rows_per_task` shapes batch step 1) — but arrival chunking and
+    /// every scheduling knob remain outside it.
+    pub stream_chunk_rows: usize,
 }
 
 impl Default for CoordOpts {
@@ -162,6 +168,7 @@ impl Default for CoordOpts {
             gather_limit: None,
             panel_block: None,
             mixed_precision: false,
+            stream_chunk_rows: 1000,
         }
     }
 }

@@ -81,6 +81,24 @@
 //!   ([`runtime`], behind the `pjrt` feature). Python is never on the
 //!   request path.
 //!
+//! Cutting across L4–L7 sits the **[`stream`] layer** (PR 8): a
+//! single-pass incremental TSQR ([`stream::RFold`]) that folds each
+//! arriving row-chunk into a running `R` via `[R; chunk] → qr`
+//! reduction, so R/Σ of an unbounded stream is available `O(n²)` after
+//! the last row lands — the paper's "slightly more than 2 passes"
+//! collapses to 1 for R-only, and the raw input never exists in full.
+//! [`session::TsqrSession::stream`] returns a
+//! [`session::StreamingWriter`] (with `finalize_qr()` replaying
+//! Direct-TSQR Q-formation from DFS-spilled chunk recipes), the
+//! service makes ingestion itself a first-class async job
+//! ([`service::TsqrService::ingest_async`] →
+//! [`service::IngestHandle`], with dependency-aware scheduling so
+//! `submit` on a still-ingesting matrix queues behind it), and the
+//! wire protocol (v4) carries `IngestAsync`/`IngestStatus`/`StreamFold`
+//! opcodes; `mrtsqr stream` drives it from the CLI. Streamed R/Σ bits
+//! are invariant to chunk size and arrival interleaving
+//! (`rust/tests/stream.rs`).
+//!
 //! Pure-rust dense linear algebra ([`linalg`]) provides the serial
 //! `n×n` steps the paper runs on a single node (Cholesky, `R⁻¹`,
 //! Jacobi SVD) and an independent correctness oracle. Since PR 7 it is
@@ -132,11 +150,12 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod service;
 pub mod session;
+pub mod stream;
 pub mod util;
 pub mod workload;
 
 pub use client::{ClientJobHandle, Transport, TsqrClient};
 pub use coordinator::{Algorithm, Coordinator, MatrixHandle};
 pub use linalg::Matrix;
-pub use service::{JobHandle, JobId, JobStatus, TsqrService};
+pub use service::{IngestHandle, IngestRecipe, JobHandle, JobId, JobKind, JobStatus, TsqrService};
 pub use session::{Backend, Factorization, FactorizationRequest, Placement, Priority, TsqrSession};

@@ -7,6 +7,7 @@
 //! mrtsqr batch     --manifest jobs.txt --jobs 4       # concurrent job service
 //! mrtsqr batch     --manifest jobs.txt --worker-procs 2  # …across worker processes
 //! mrtsqr batch     --manifest jobs.txt --connect host:7420  # …against a remote server
+//! mrtsqr stream    --rows 1000000 --cols 10 --chunk-rows 4096  # single-pass streaming R/Σ
 //! mrtsqr serve     --shards 2                         # wire protocol on stdin/stdout
 //! mrtsqr serve     --listen 0.0.0.0:7420 --shards 4   # …served over TCP
 //! mrtsqr loadgen   --connect host:7420 --jobs-total 2000 --concurrency 16
@@ -26,7 +27,7 @@
 use anyhow::{Context, Result};
 use mrtsqr::coordinator::{Algorithm, MatrixHandle};
 use mrtsqr::dfs::DiskModel;
-use mrtsqr::linalg::matrix_with_condition;
+use mrtsqr::linalg::{matrix_with_condition, Matrix};
 use mrtsqr::mapreduce::{ClusterConfig, FaultPolicy};
 use mrtsqr::perfmodel::{lower_bound_secs, AlgoKind, StageParallelism, WorkloadShape};
 use mrtsqr::runtime::Manifest;
@@ -383,6 +384,87 @@ fn cmd_batch(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Single-pass streaming factorization over a synthetic row stream:
+/// `--rows N` seeded gaussian rows arrive in `--chunk-rows C` arrival
+/// chunks (0 = one single push) and fold into a running `R`
+/// ([`mrtsqr::stream::RFold`]) without the input ever being
+/// materialized — the peak-resident line next to the row count shows
+/// the `O(n²)` bound. `--stream-chunk-rows L` sets the canonical fold
+/// leaf height (this shapes the fold tree, so it is part of the
+/// streamed digest contract — unlike the arrival chunking, which never
+/// changes bits); `--sigma`
+/// adds singular values; `--q` re-forms the full `Q` from the spilled
+/// leaf recipes (a second pass over the spill, never over the input).
+/// The `result_digest` line is the same FNV-1a digest `batch --json`
+/// emits, so CI diffs streamed runs at different arrival chunkings /
+/// `--host-threads` values against each other with one
+/// `grep result_digest | diff`.
+fn cmd_stream(args: &Args) -> Result<()> {
+    let rows = args.get_usize("rows", 100_000);
+    let cols = args.get_usize("cols", 10);
+    let seed = args.get_u64("seed", 42);
+    let arrival = args.get_usize("chunk-rows", 1000);
+    let want_sigma = args.flag("sigma");
+    let want_q = args.flag("q");
+    let mut session = session_builder(args)
+        .stream_chunk_rows(args.get_usize("stream-chunk-rows", 1000))
+        .build()?;
+
+    let t0 = std::time::Instant::now();
+    let mut w = session.stream("S", cols);
+    if want_q {
+        w = w.retain_q()?;
+    }
+    // one shared rng: the row sequence depends only on the seed, so any
+    // --chunk-rows slicing of it feeds the fold the exact same rows
+    let mut rng = Rng::new(seed);
+    let mut remaining = rows;
+    while remaining > 0 {
+        let take = if arrival == 0 { remaining } else { arrival.min(remaining) };
+        let chunk = Matrix::gaussian(take, cols, &mut rng);
+        w.push_chunk(&chunk)?;
+        remaining -= take;
+    }
+    let (r, sigma, stats, q_err) = if want_q {
+        let (qh, r, stats) = w.finalize_qr()?;
+        let q = session.get_matrix(&qh)?;
+        let sigma = want_sigma.then(|| mrtsqr::stream::sigma_from_r(&r));
+        (r, sigma, stats, Some(q.orthogonality_error()))
+    } else if want_sigma {
+        let (r, sigma, stats) = w.finalize_sigma()?;
+        (r, Some(sigma), stats, None)
+    } else {
+        let (r, stats) = w.finalize_r()?;
+        (r, None, stats, None)
+    };
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("stream         : {} x {} gaussian rows (seed {})", commas(rows as u64), cols, seed);
+    println!(
+        "arrival chunks : {}",
+        if arrival == 0 { "one-shot".to_string() } else { format!("{arrival} rows") }
+    );
+    println!(
+        "fold           : {} rows/leaf, {} leaves, {} reductions, depth {}",
+        stats.chunk_rows, stats.leaves, stats.folds, stats.max_depth
+    );
+    println!("input passes   : {}", stats.input_passes());
+    println!(
+        "peak resident  : {} rows (vs {} streamed)",
+        commas(stats.peak_resident_rows as u64),
+        commas(stats.rows)
+    );
+    println!("wall time      : {wall:.3} s");
+    if let Some(err) = q_err {
+        println!("|QtQ-I|_2      : {}", sci(err));
+    }
+    if let Some(s) = &sigma {
+        println!("sigma          : {:?}", &s[..s.len().min(8)]);
+    }
+    println!("result_digest  : {}", mrtsqr::stream::result_digest(&r, sigma.as_deref()));
+    Ok(())
+}
+
 fn cmd_stability(args: &Args) -> Result<()> {
     let rows = args.get_usize("rows", 5000);
     let cols = args.get_usize("cols", 50);
@@ -682,7 +764,7 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|batch|serve|loadgen|worker|stability|faults|model|info> [options]
+const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|batch|stream|serve|loadgen|worker|stability|faults|model|info> [options]
   common options: --rows N --cols N --seed N --pjrt
                   --algo <auto|cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder>
                   --beta-r s/GB --beta-w s/GB --byte-scale X
@@ -694,6 +776,9 @@ const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|batch|serve|loadgen|worker|stab
   batch options:  --manifest FILE --jobs N --shards N --worker-procs N --queue N [--serial] [--json PATH]
                   --connect host:port[,host:port...]   (drive remote `serve --listen` hosts instead)
                   (manifest lines: name rows cols seed <qr|r|svd|sigma> <algo> [low|normal|high] [@shard])
+  stream options: --rows N --cols N --seed N [--sigma] [--q]
+                  --chunk-rows N          (arrival granularity; 0 = one-shot; never changes bits)
+                  --stream-chunk-rows N   (fold leaf height; shapes the fold tree, part of the digest)
   serve options:  --jobs N --shards N --worker-procs N --queue N
                   default: wire protocol on stdin/stdout; --listen host:port serves TCP instead
   loadgen options: --connect host:port[,...] --jobs-total N --concurrency N --inputs K
@@ -709,6 +794,7 @@ fn main() -> Result<()> {
         Some("svd") => cmd_svd(&args),
         Some("sigma") => cmd_sigma(&args),
         Some("batch") => cmd_batch(&args),
+        Some("stream") => cmd_stream(&args),
         Some("serve") => cmd_serve(&args),
         Some("loadgen") => cmd_loadgen(&args),
         Some("worker") => mrtsqr::client::worker::run_worker(),

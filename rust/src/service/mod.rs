@@ -84,6 +84,7 @@ pub mod manifest;
 pub use manifest::{parse_manifest, synthetic_manifest, BatchEntry};
 
 use crate::coordinator::{lock_engine, CoordOpts, Coordinator, MatrixHandle};
+use crate::dfs::records::{encode_row, row_key, Record};
 use crate::dfs::Dfs;
 use crate::linalg::Matrix;
 use crate::mapreduce::Engine;
@@ -93,7 +94,7 @@ use crate::session::{
 };
 use crate::util::rng::Rng;
 use crate::workload;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -155,8 +156,19 @@ enum JobSlot {
     Queued,
     Running,
     Done { fact: Arc<Factorization>, wall_secs: f64 },
+    /// Terminal state of an ingestion job ([`JobKind::Ingest`]): the
+    /// rows are durably on the home shard.
+    Ingested { handle: MatrixHandle, wall_secs: f64 },
     Failed { msg: String, wall_secs: f64 },
     Cancelled,
+}
+
+/// What kind of work a queued job carries — factorizations and
+/// ingestions share one scheduler, one id space, and one lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    Factorize,
+    Ingest,
 }
 
 struct JobShared {
@@ -170,6 +182,7 @@ struct JobShared {
 /// multiple threads.
 pub struct JobHandle {
     id: JobId,
+    kind: JobKind,
     label: Option<String>,
     shared: Arc<JobShared>,
 }
@@ -177,6 +190,11 @@ pub struct JobHandle {
 impl JobHandle {
     pub fn id(&self) -> JobId {
         self.id
+    }
+
+    /// Whether this job factorizes or ingests.
+    pub fn kind(&self) -> JobKind {
+        self.kind
     }
 
     /// The request's label, if it carried one.
@@ -188,7 +206,7 @@ impl JobHandle {
         match *self.shared.slot.lock().expect("job slot") {
             JobSlot::Queued => JobStatus::Queued,
             JobSlot::Running => JobStatus::Running,
-            JobSlot::Done { .. } => JobStatus::Done,
+            JobSlot::Done { .. } | JobSlot::Ingested { .. } => JobStatus::Done,
             JobSlot::Failed { .. } => JobStatus::Failed,
             JobSlot::Cancelled => JobStatus::Cancelled,
         }
@@ -204,6 +222,9 @@ impl JobHandle {
                     slot = self.shared.done.wait(slot).expect("job slot");
                 }
                 JobSlot::Done { fact, .. } => return Ok(fact.clone()),
+                JobSlot::Ingested { .. } => {
+                    bail!("{} is an ingestion job — wait on its IngestHandle", self.id)
+                }
                 JobSlot::Failed { msg, .. } => bail!("{} failed: {msg}", self.id),
                 JobSlot::Cancelled => bail!("{} was cancelled before it ran", self.id),
             }
@@ -216,6 +237,9 @@ impl JobHandle {
         match &*self.shared.slot.lock().expect("job slot") {
             JobSlot::Queued | JobSlot::Running => None,
             JobSlot::Done { fact, .. } => Some(Ok(fact.clone())),
+            JobSlot::Ingested { .. } => {
+                Some(Err(anyhow!("{} is an ingestion job — wait on its IngestHandle", self.id)))
+            }
             JobSlot::Failed { msg, .. } => Some(Err(anyhow!("{} failed: {msg}", self.id))),
             JobSlot::Cancelled => Some(Err(anyhow!("{} was cancelled before it ran", self.id))),
         }
@@ -227,9 +251,9 @@ impl JobHandle {
     /// `mrtsqr batch` sums to show submit/await overlap.
     pub fn wall_secs(&self) -> Option<f64> {
         match &*self.shared.slot.lock().expect("job slot") {
-            JobSlot::Done { wall_secs, .. } | JobSlot::Failed { wall_secs, .. } => {
-                Some(*wall_secs)
-            }
+            JobSlot::Done { wall_secs, .. }
+            | JobSlot::Ingested { wall_secs, .. }
+            | JobSlot::Failed { wall_secs, .. } => Some(*wall_secs),
             _ => None,
         }
     }
@@ -249,14 +273,140 @@ impl JobHandle {
     }
 }
 
+/// A deterministic description of the rows an asynchronous ingestion
+/// job writes. Recipes (not row bytes) travel through the queue, so an
+/// ingestion is replayable and cheap to enqueue.
+#[derive(Clone)]
+pub enum IngestRecipe {
+    /// Seeded gaussian rows — byte-identical to
+    /// [`TsqrService::ingest_gaussian`] with the same seed.
+    Gaussian { rows: usize, seed: u64 },
+    /// Explicit rows, shared behind an `Arc` (cloned once at
+    /// submission).
+    Rows(Arc<Matrix>),
+}
+
+impl IngestRecipe {
+    fn rows(&self) -> usize {
+        match self {
+            IngestRecipe::Gaussian { rows, .. } => *rows,
+            IngestRecipe::Rows(a) => a.rows,
+        }
+    }
+}
+
+/// Handle returned by [`TsqrService::ingest_async`]: the matrix's
+/// shape is known up front from the recipe, so
+/// [`IngestHandle::handle`] can feed a dependent
+/// [`TsqrService::submit`] immediately — the scheduler queues that job
+/// behind the ingestion via a dependency edge.
+pub struct IngestHandle {
+    job: JobHandle,
+    handle: MatrixHandle,
+}
+
+impl IngestHandle {
+    pub fn id(&self) -> JobId {
+        self.job.id()
+    }
+
+    /// The matrix handle (valid for dependent submissions right away;
+    /// the rows themselves land when the ingestion job runs).
+    pub fn handle(&self) -> &MatrixHandle {
+        &self.handle
+    }
+
+    pub fn status(&self) -> JobStatus {
+        self.job.status()
+    }
+
+    /// Block until the rows are durably on the home shard.
+    pub fn wait(&self) -> Result<MatrixHandle> {
+        let mut slot = self.job.shared.slot.lock().expect("job slot");
+        loop {
+            match &*slot {
+                JobSlot::Queued | JobSlot::Running => {
+                    slot = self.job.shared.done.wait(slot).expect("job slot");
+                }
+                JobSlot::Ingested { handle, .. } => return Ok(handle.clone()),
+                JobSlot::Done { .. } => bail!("{} is not an ingestion job", self.job.id),
+                JobSlot::Failed { msg, .. } => bail!("{} failed: {msg}", self.job.id),
+                JobSlot::Cancelled => bail!("{} was cancelled before it ran", self.job.id),
+            }
+        }
+    }
+
+    /// See [`JobHandle::wall_secs`].
+    pub fn wall_secs(&self) -> Option<f64> {
+        self.job.wall_secs()
+    }
+
+    /// Cancel the ingestion if it has not started (see
+    /// [`JobHandle::cancel`]). Jobs already submitted against the
+    /// handle then fail with a precise dependency error.
+    pub fn cancel(&self) -> bool {
+        self.job.cancel()
+    }
+
+    /// The underlying job handle (status polling, labels).
+    pub fn job(&self) -> &JobHandle {
+        &self.job
+    }
+}
+
+/// What a queued job does when a worker (or drain) picks it up.
+enum JobWork {
+    /// Factorize `input` per `req` — the classic L5 job.
+    Factorize { input: MatrixHandle, req: FactorizationRequest },
+    /// Materialize `name` on the job's shard from a deterministic
+    /// recipe, appending in bounded chunks so the engine lock is
+    /// re-acquired per chunk, never held across the upload.
+    Ingest { name: String, cols: usize, recipe: IngestRecipe },
+}
+
+impl JobWork {
+    fn kind(&self) -> JobKind {
+        match self {
+            JobWork::Factorize { .. } => JobKind::Factorize,
+            JobWork::Ingest { .. } => JobKind::Ingest,
+        }
+    }
+}
+
 /// One queue entry (the handle keeps the shared slot alive on the
 /// caller's side).
 struct QueuedJob {
     id: JobId,
     priority: Priority,
-    input: MatrixHandle,
-    req: FactorizationRequest,
+    work: JobWork,
+    /// Jobs that must reach a terminal state before this one may run
+    /// (today: the in-flight ingestion of this job's input). The drain
+    /// stays deterministic: among *ready* jobs the ordinary
+    /// [`ServiceInner::sched_key`] order decides, and dependency edges
+    /// only ever delay a job behind work that was enqueued before it.
+    deps: Vec<(JobId, Arc<JobShared>)>,
     shared: Arc<JobShared>,
+}
+
+/// Readiness of a queued job's dependency edges.
+enum DepState {
+    Ready,
+    Waiting,
+    Broken(String),
+}
+
+fn dep_state(deps: &[(JobId, Arc<JobShared>)]) -> DepState {
+    for (id, shared) in deps {
+        match &*shared.slot.lock().expect("job slot") {
+            JobSlot::Queued | JobSlot::Running => return DepState::Waiting,
+            JobSlot::Failed { msg, .. } => {
+                return DepState::Broken(format!("dependency {id} failed: {msg}"))
+            }
+            JobSlot::Cancelled => return DepState::Broken(format!("dependency {id} was cancelled")),
+            JobSlot::Done { .. } | JobSlot::Ingested { .. } => {}
+        }
+    }
+    DepState::Ready
 }
 
 struct QueueState {
@@ -301,6 +451,12 @@ struct ServiceInner {
     /// that reclaims it, so a service churning through unbounded jobs
     /// should evict them as it retires them.
     placements: Mutex<HashMap<u64, usize>>,
+    /// Live asynchronous ingestions: matrix name → the job
+    /// materializing it. A `submit` reading one of these names gets a
+    /// dependency edge on the ingestion; entries retire when the
+    /// ingestion reaches a terminal state (eagerly on completion,
+    /// lazily at the next lookup).
+    ingests: Mutex<HashMap<String, (JobId, Arc<JobShared>)>>,
 }
 
 impl ServiceInner {
@@ -317,11 +473,16 @@ impl ServiceInner {
         (std::cmp::Reverse(priority), id)
     }
 
-    /// Pop the job [`ServiceInner::sched_key`] orders first.
+    /// Pop the job [`ServiceInner::sched_key`] orders first among the
+    /// *runnable* ones — jobs whose dependencies are still queued or
+    /// running stay put (dependency-aware drain; broken-dependency
+    /// jobs are popped so [`ServiceInner::execute_job`] can fail them
+    /// fast with a precise error).
     fn pop_best(jobs: &mut VecDeque<QueuedJob>) -> Option<QueuedJob> {
         let best = jobs
             .iter()
             .enumerate()
+            .filter(|(_, job)| !matches!(dep_state(&job.deps), DepState::Waiting))
             .min_by_key(|(_, job)| Self::sched_key(job.priority, job.id))
             .map(|(i, _)| i);
         best.and_then(|i| jobs.remove(i))
@@ -379,15 +540,53 @@ impl ServiceInner {
         }
     }
 
+    /// A terminal transition may unblock dependents queued on *any*
+    /// shard: wake every shard's workers so a dependency-parked queue
+    /// re-evaluates.
+    fn wake_all_shards(&self) {
+        for shard in &self.shards {
+            shard.ready.notify_all();
+        }
+    }
+
+    /// Retire a finished ingestion's name registration (only if it
+    /// still points at this job — a re-ingest of the same name may
+    /// have replaced it).
+    fn retire_ingest_registration(&self, job: &QueuedJob) {
+        if let JobWork::Ingest { name, .. } = &job.work {
+            let mut ingests = self.ingests.lock().expect("ingests");
+            if ingests.get(name).is_some_and(|(id, _)| *id == job.id) {
+                ingests.remove(name);
+            }
+        }
+    }
+
     /// Run one dequeued job to a terminal state on `shard_idx`. Skips
-    /// (and reports `false` for) jobs cancelled while queued.
+    /// (and reports `false` for) jobs cancelled while queued, and fails
+    /// fast — without ever entering `Running` — on jobs whose
+    /// dependency broke.
     fn execute_job(&self, shard_idx: usize, job: QueuedJob) -> bool {
         let shard = &self.shards[shard_idx];
+        if let DepState::Broken(msg) = dep_state(&job.deps) {
+            {
+                let mut slot = job.shared.slot.lock().expect("job slot");
+                if !matches!(*slot, JobSlot::Cancelled) {
+                    *slot = JobSlot::Failed { msg, wall_secs: 0.0 };
+                }
+            }
+            job.shared.done.notify_all();
+            shard.load.fetch_sub(1, Ordering::Relaxed);
+            self.retire_ingest_registration(&job);
+            self.wake_all_shards();
+            return false;
+        }
         {
             let mut slot = job.shared.slot.lock().expect("job slot");
             if matches!(*slot, JobSlot::Cancelled) {
                 drop(slot);
                 shard.load.fetch_sub(1, Ordering::Relaxed);
+                self.retire_ingest_registration(&job);
+                self.wake_all_shards();
                 return false;
             }
             *slot = JobSlot::Running;
@@ -395,36 +594,140 @@ impl ServiceInner {
         let t0 = Instant::now();
         // catch_unwind so one panicking job reports Failed instead of
         // killing its worker thread and wedging every waiter
-        let outcome = catch_unwind(AssertUnwindSafe(|| self.run_request(shard_idx, &job)));
+        let outcome = catch_unwind(AssertUnwindSafe(|| self.run_work(shard_idx, &job)));
         let wall_secs = t0.elapsed().as_secs_f64();
         let slot_value = match outcome {
-            Ok(Ok(mut fact)) => {
+            Ok(Ok(WorkOutput::Fact(mut fact))) => {
                 fact.stats.shard = shard_idx;
                 JobSlot::Done { fact: Arc::new(fact), wall_secs }
             }
+            Ok(Ok(WorkOutput::Ingested(handle))) => JobSlot::Ingested { handle, wall_secs },
             Ok(Err(err)) => JobSlot::Failed { msg: format!("{err:#}"), wall_secs },
             Err(_) => JobSlot::Failed { msg: "job panicked".into(), wall_secs },
         };
         *job.shared.slot.lock().expect("job slot") = slot_value;
         job.shared.done.notify_all();
         shard.load.fetch_sub(1, Ordering::Relaxed);
+        self.retire_ingest_registration(&job);
+        self.wake_all_shards();
         true
     }
 
-    fn run_request(&self, shard_idx: usize, job: &QueuedJob) -> Result<Factorization> {
+    fn run_work(&self, shard_idx: usize, job: &QueuedJob) -> Result<WorkOutput> {
+        match &job.work {
+            JobWork::Factorize { input, req } => {
+                let shard = &self.shards[shard_idx];
+                // a job that queued behind an ingestion could not stage
+                // its input at submission (the rows did not exist yet)
+                // — staging is idempotent, so re-run it here
+                self.stage_input(shard_idx, &input.file);
+                // per-job fault stream: depends only on (cluster seed,
+                // job id), never on how concurrent jobs interleave
+                // their steps — or on which shard the router picked
+                let fault_rng =
+                    Rng::new(self.fault_seed ^ (job.id.0 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let mut coord = Coordinator::shared(&shard.engine, &*self.compute)
+                    .with_opts(self.opts)
+                    .with_namespace(format!("{}{}", shard.ns, job.id.namespace()))
+                    .with_fault_rng(fault_rng);
+                exec::execute(&mut coord, input, req).map(WorkOutput::Fact)
+            }
+            JobWork::Ingest { name, cols, recipe } => {
+                self.run_ingest(shard_idx, name, *cols, recipe).map(WorkOutput::Ingested)
+            }
+        }
+    }
+
+    /// Body of an asynchronous ingestion job: generate rows from the
+    /// recipe and append them in [`INGEST_CHUNK_ROWS`]-row chunks,
+    /// taking the shard's engine lock per chunk — a long upload never
+    /// starves same-shard factorizations. A failed ingestion deletes
+    /// its partial file: no half-written matrix is ever visible.
+    fn run_ingest(
+        &self,
+        shard_idx: usize,
+        name: &str,
+        cols: usize,
+        recipe: &IngestRecipe,
+    ) -> Result<MatrixHandle> {
         let shard = &self.shards[shard_idx];
-        // per-job fault stream: depends only on (cluster seed, job id),
-        // never on how concurrent jobs interleave their steps — or on
-        // which shard the router picked
-        let fault_rng =
-            Rng::new(self.fault_seed ^ (job.id.0 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let mut coord = Coordinator::shared(&shard.engine, &*self.compute)
-            .with_opts(self.opts)
-            .with_namespace(format!("{}{}", shard.ns, job.id.namespace()))
-            .with_fault_rng(fault_rng);
-        exec::execute(&mut coord, &job.input, &job.req)
+        // scales registered ahead of ingestion live on shard 0; an
+        // ingest homed elsewhere must honor them there (mirrors the
+        // synchronous path)
+        let pre_scale = if shard_idx != 0 {
+            let engine = lock_engine(&self.shards[0].engine);
+            Some(engine.dfs.scale(name)).filter(|s| *s != 1.0)
+        } else {
+            None
+        };
+        lock_engine(&shard.engine).dfs.put(name, Vec::new());
+        let total_rows = recipe.rows();
+        let write = (|| -> Result<()> {
+            match recipe {
+                IngestRecipe::Gaussian { rows, seed } => {
+                    let mut rng = Rng::new(*seed);
+                    let mut row = vec![0.0f64; cols];
+                    let mut next = 0usize;
+                    while next < *rows {
+                        let take = INGEST_CHUNK_ROWS.min(rows - next);
+                        let mut recs = Vec::with_capacity(take);
+                        for _ in 0..take {
+                            for v in row.iter_mut() {
+                                *v = rng.gaussian();
+                            }
+                            recs.push(Record::new(row_key(next as u64), encode_row(&row)));
+                            next += 1;
+                        }
+                        lock_engine(&shard.engine).dfs.append(name, recs);
+                    }
+                }
+                IngestRecipe::Rows(a) => {
+                    ensure!(
+                        a.cols == cols,
+                        "recipe rows are {} wide, ingestion declared {cols}",
+                        a.cols
+                    );
+                    let mut next = 0usize;
+                    while next < a.rows {
+                        let take = INGEST_CHUNK_ROWS.min(a.rows - next);
+                        let recs: Vec<Record> = (next..next + take)
+                            .map(|i| Record::new(row_key(i as u64), encode_row(a.row(i))))
+                            .collect();
+                        next += take;
+                        lock_engine(&shard.engine).dfs.append(name, recs);
+                    }
+                }
+            }
+            Ok(())
+        })();
+        if let Err(err) = write {
+            lock_engine(&shard.engine).dfs.delete(name);
+            return Err(err);
+        }
+        if let Some(scale) = pre_scale {
+            lock_engine(&shard.engine).dfs.set_scale(name, scale);
+        }
+        // stale copies elsewhere are now invalid (mirrors the
+        // synchronous ingest)
+        for (k, other) in self.shards.iter().enumerate() {
+            if k != shard_idx {
+                lock_engine(&other.engine).dfs.delete(name);
+            }
+        }
+        Ok(MatrixHandle::new(name, total_rows, cols))
     }
 }
+
+/// Result of one executed job, by kind.
+enum WorkOutput {
+    Fact(Factorization),
+    Ingested(MatrixHandle),
+}
+
+/// Rows appended per engine-lock acquisition during a chunked
+/// ingestion: the lock is released between chunks so same-shard jobs
+/// interleave with a long upload.
+const INGEST_CHUNK_ROWS: usize = 4096;
 
 fn worker_loop(inner: Arc<ServiceInner>, shard_idx: usize) {
     loop {
@@ -435,10 +738,23 @@ fn worker_loop(inner: Arc<ServiceInner>, shard_idx: usize) {
                 if let Some(job) = ServiceInner::pop_best(&mut q.jobs) {
                     break Some(job);
                 }
-                if !q.open {
+                if !q.open && q.jobs.is_empty() {
                     break None;
                 }
-                q = shard.ready.wait(q).expect("service queue");
+                if q.jobs.is_empty() {
+                    q = shard.ready.wait(q).expect("service queue");
+                } else {
+                    // jobs exist but none is runnable: everything is
+                    // parked on a dependency. Terminal transitions ring
+                    // every shard's bell, but a dependency cancelled
+                    // through its own handle cannot — poll with a
+                    // timeout rather than sleeping forever.
+                    q = shard
+                        .ready
+                        .wait_timeout(q, std::time::Duration::from_millis(50))
+                        .expect("service queue")
+                        .0;
+                }
             }
         };
         let Some(job) = job else { return };
@@ -490,6 +806,7 @@ impl TsqrService {
             fault_seed,
             capacity: cfg.queue_capacity.max(1),
             placements: Mutex::new(HashMap::new()),
+            ingests: Mutex::new(HashMap::new()),
         });
         let workers = (0..nshards)
             .flat_map(|k| (0..cfg.workers).map(move |i| (k, i)))
@@ -602,23 +919,53 @@ impl TsqrService {
         shard_idx: usize,
         q: &mut QueueState,
         id: JobId,
-        input: &MatrixHandle,
-        req: FactorizationRequest,
+        priority: Priority,
+        label: Option<String>,
+        work: JobWork,
+        deps: Vec<(JobId, Arc<JobShared>)>,
     ) -> JobHandle {
         let shared = Arc::new(JobShared { slot: Mutex::new(JobSlot::Queued), done: Condvar::new() });
-        let handle = JobHandle { id, label: req.label.clone(), shared: shared.clone() };
-        q.jobs.push_back(QueuedJob {
-            id,
-            priority: req.priority,
-            input: input.clone(),
-            req,
-            shared,
-        });
+        let handle = JobHandle { id, kind: work.kind(), label, shared: shared.clone() };
+        q.jobs.push_back(QueuedJob { id, priority, work, deps, shared });
         let shard = &self.inner.shards[shard_idx];
         shard.load.fetch_add(1, Ordering::Relaxed);
         self.inner.placements.lock().expect("placements").insert(id.0, shard_idx);
         shard.ready.notify_one();
         handle
+    }
+
+    /// The dependency edge a job reading `file` must carry: the live
+    /// asynchronous ingestion materializing that name, if one exists.
+    /// Terminal registry entries retire here (lazy half of the
+    /// retirement contract); a dependency that already *failed* or was
+    /// cancelled rejects the submission up front with the root cause.
+    fn ingest_dep(&self, file: &str) -> Result<Vec<(JobId, Arc<JobShared>)>> {
+        let mut ingests = self.inner.ingests.lock().expect("ingests");
+        let Some((dep_id, shared)) = ingests.get(file).map(|(id, s)| (*id, s.clone())) else {
+            return Ok(Vec::new());
+        };
+        let state = {
+            let slot = shared.slot.lock().expect("job slot");
+            match &*slot {
+                JobSlot::Queued | JobSlot::Running => None,
+                JobSlot::Ingested { .. } | JobSlot::Done { .. } => Some(Ok(())),
+                JobSlot::Failed { msg, .. } => Some(Err(anyhow!(
+                    "input {file:?}: its ingestion (job {dep_id}) failed: {msg}"
+                ))),
+                JobSlot::Cancelled => Some(Err(anyhow!(
+                    "input {file:?}: its ingestion (job {dep_id}) was cancelled"
+                ))),
+            }
+        };
+        match state {
+            None => Ok(vec![(dep_id, shared)]),
+            Some(done) => {
+                if ingests.get(file).is_some_and(|(id, _)| *id == dep_id) {
+                    ingests.remove(file);
+                }
+                done.map(|()| Vec::new())
+            }
+        }
     }
 
     /// Route an already-identified job: pick its shard and stage its
@@ -646,8 +993,11 @@ impl TsqrService {
         input: &MatrixHandle,
         req: FactorizationRequest,
     ) -> Result<JobHandle> {
-        let shard_idx = match self.place(id, &req, input) {
-            Ok(shard_idx) => shard_idx,
+        let placed = self
+            .place(id, &req, input)
+            .and_then(|shard_idx| Ok((shard_idx, self.ingest_dep(&input.file)?)));
+        let (shard_idx, deps) = match placed {
+            Ok(placed) => placed,
             Err(err) => {
                 self.unreserve(id);
                 return Err(err);
@@ -663,7 +1013,9 @@ impl TsqrService {
             self.unreserve(id);
             bail!("job service is shut down");
         }
-        Ok(self.enqueue(shard_idx, &mut q, id, input, req))
+        let (priority, label) = (req.priority, req.label.clone());
+        let work = JobWork::Factorize { input: input.clone(), req };
+        Ok(self.enqueue(shard_idx, &mut q, id, priority, label, work, deps))
     }
 
     /// [`TsqrService::submit`] under a *caller-assigned* job id (it
@@ -688,8 +1040,11 @@ impl TsqrService {
     /// when the routed shard's queue is at capacity.
     pub fn try_submit(&self, input: &MatrixHandle, req: FactorizationRequest) -> Result<JobHandle> {
         let id = self.reserve_auto_id();
-        let shard_idx = match self.place(id, &req, input) {
-            Ok(shard_idx) => shard_idx,
+        let placed = self
+            .place(id, &req, input)
+            .and_then(|shard_idx| Ok((shard_idx, self.ingest_dep(&input.file)?)));
+        let (shard_idx, deps) = match placed {
+            Ok(placed) => placed,
             Err(err) => {
                 self.unreserve(id);
                 return Err(err);
@@ -709,7 +1064,9 @@ impl TsqrService {
                 self.inner.capacity
             );
         }
-        Ok(self.enqueue(shard_idx, &mut q, id, input, req))
+        let (priority, label) = (req.priority, req.label.clone());
+        let work = JobWork::Factorize { input: input.clone(), req };
+        Ok(self.enqueue(shard_idx, &mut q, id, priority, label, work, deps))
     }
 
     // ---------------------------------------------------- manual drain
@@ -722,11 +1079,32 @@ impl TsqrService {
     /// determinism tests baseline against.
     pub fn drain_one(&self) -> Option<JobId> {
         loop {
-            // scan every shard queue for the job sched_key orders first
+            // scan every shard queue for the *runnable* job sched_key
+            // orders first; remember one still-pending dependency so a
+            // fully-parked queue can block on it instead of returning
+            // None while work remains
             let mut best: Option<(usize, (std::cmp::Reverse<Priority>, JobId))> = None;
+            let mut saw_waiting = false;
+            let mut waiting_dep: Option<Arc<JobShared>> = None;
             for k in 0..self.inner.shards.len() {
                 let q = self.inner.lock_queue(k);
                 for job in &q.jobs {
+                    if matches!(dep_state(&job.deps), DepState::Waiting) {
+                        saw_waiting = true;
+                        if waiting_dep.is_none() {
+                            waiting_dep = job
+                                .deps
+                                .iter()
+                                .find(|(_, shared)| {
+                                    matches!(
+                                        *shared.slot.lock().expect("job slot"),
+                                        JobSlot::Queued | JobSlot::Running
+                                    )
+                                })
+                                .map(|(_, shared)| shared.clone());
+                        }
+                        continue;
+                    }
                     let key = ServiceInner::sched_key(job.priority, job.id);
                     let better = match best {
                         None => true,
@@ -737,7 +1115,26 @@ impl TsqrService {
                     }
                 }
             }
-            let (shard_idx, (_, id)) = best?;
+            let Some((shard_idx, (_, id))) = best else {
+                if !saw_waiting {
+                    return None;
+                }
+                match waiting_dep {
+                    // the dependency went terminal between the two
+                    // checks — rescan, its dependent is runnable now
+                    None => continue,
+                    Some(shared) => {
+                        // every queued job is parked behind a running
+                        // dependency (executing on a background worker
+                        // or another drainer): wait for it, then rescan
+                        let mut slot = shared.slot.lock().expect("job slot");
+                        while matches!(*slot, JobSlot::Queued | JobSlot::Running) {
+                            slot = shared.done.wait(slot).expect("job slot");
+                        }
+                        continue;
+                    }
+                }
+            };
             // re-lock and pop that specific job; a background worker
             // may have taken it meanwhile — rescan if so
             let job = {
@@ -822,11 +1219,15 @@ impl TsqrService {
     }
 
     /// Stream rows into the pool through a [`MatrixWriter`]. The
-    /// matrix lands on shard 0 — its *home* shard — and shard 0's
-    /// engine lock is held for the closure's duration, so ingest before
-    /// submitting jobs that read the file. Other shards receive the
-    /// file by O(1) reference-counted copy when the router places a
-    /// reader there.
+    /// matrix lands on shard 0 — its *home* shard. Rows are generated
+    /// into a detached scratch store and published with one short O(1)
+    /// import, so the home shard's engine lock is **not** held while
+    /// the closure runs: jobs already executing there keep making
+    /// progress during a long upload. Other shards receive the file by
+    /// O(1) reference-counted copy when the router places a reader
+    /// there. For fully queued, overlap-friendly ingestion see
+    /// [`TsqrService::ingest_gaussian_async`] /
+    /// [`TsqrService::ingest_matrix_async`].
     pub fn ingest_with(
         &self,
         name: &str,
@@ -862,24 +1263,32 @@ impl TsqrService {
                 k
             }
         };
-        // scales registered ahead of ingestion live on shard 0; a
-        // pinned ingest must honor them on its actual home shard
-        let pre_scale = if home != 0 {
-            let engine = lock_engine(&self.inner.shards[0].engine);
-            Some(engine.dfs.scale(name)).filter(|s| *s != 1.0)
-        } else {
-            None
+        // scales registered ahead of ingestion live on shard 0 (and,
+        // for an unpinned ingest, that IS the home); a pinned ingest
+        // must honor shard 0's registration on its actual home shard,
+        // falling back to whatever the home itself has registered
+        let final_scale = {
+            let home_scale = lock_engine(&self.inner.shards[home].engine).dfs.scale(name);
+            let zero_scale = if home != 0 {
+                lock_engine(&self.inner.shards[0].engine).dfs.scale(name)
+            } else {
+                1.0
+            };
+            if zero_scale != 1.0 { zero_scale } else { home_scale }
         };
+        // generate the rows into a detached scratch DFS — the home
+        // shard's engine lock is NOT held while the closure runs, so
+        // concurrent jobs on that shard keep making progress during a
+        // long upload; publication is one short O(1) import at the end
+        // (and a failing closure publishes nothing at all)
+        let mut scratch = Dfs::new();
         let handle = {
-            let mut engine = lock_engine(&self.inner.shards[home].engine);
-            let mut w = MatrixWriter::new(&mut engine.dfs, name, cols);
+            let mut w = MatrixWriter::new(&mut scratch, name, cols);
             f(&mut w)?;
-            let handle = w.finish();
-            if let Some(scale) = pre_scale {
-                engine.dfs.set_scale(name, scale);
-            }
-            handle
+            w.finish()
         };
+        let (records, _) = scratch.export_file(name).expect("scratch ingest file");
+        lock_engine(&self.inner.shards[home].engine).dfs.import_file(name, records, final_scale);
         // re-ingesting a name overwrites the home copy, so any copy an
         // earlier ingest or job staged onto another shard is now stale
         // — drop them all; the next job routed there re-stages fresh
@@ -889,6 +1298,115 @@ impl TsqrService {
             }
         }
         Ok(handle)
+    }
+
+    // ------------------------------------------ asynchronous ingestion
+
+    /// Queue a seeded gaussian ingestion as a first-class job and
+    /// return immediately (see [`TsqrService::ingest_async`]). Writes
+    /// the same records, bit for bit, as
+    /// [`TsqrService::ingest_gaussian`].
+    pub fn ingest_gaussian_async(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+    ) -> Result<IngestHandle> {
+        self.ingest_async(name, cols, IngestRecipe::Gaussian { rows, seed }, Placement::Auto)
+    }
+
+    /// Queue an in-memory matrix upload as a first-class job and
+    /// return immediately (see [`TsqrService::ingest_async`]).
+    pub fn ingest_matrix_async(&self, name: &str, a: &Matrix) -> Result<IngestHandle> {
+        let cols = a.cols;
+        self.ingest_async(name, cols, IngestRecipe::Rows(Arc::new(a.clone())), Placement::Auto)
+    }
+
+    /// Queue an ingestion as a first-class job and return an
+    /// [`IngestHandle`] immediately. Unlike the synchronous ingest
+    /// family, the upload runs on the shard's worker queue, appending
+    /// in short chunked engine-lock acquisitions — it never holds an
+    /// engine lock for its duration, so running factorizations on the
+    /// same shard interleave with it. A [`TsqrService::submit`] naming
+    /// the still-ingesting matrix queues *behind* it via a
+    /// job-dependency edge and runs bit-identically to
+    /// ingest-then-submit. `Placement::Auto` homes the matrix on shard
+    /// 0, like the synchronous path.
+    pub fn ingest_async(
+        &self,
+        name: &str,
+        cols: usize,
+        recipe: IngestRecipe,
+        placement: Placement,
+    ) -> Result<IngestHandle> {
+        let id = self.reserve_auto_id();
+        self.ingest_async_reserved(id, name, cols, recipe, placement)
+    }
+
+    /// [`TsqrService::ingest_async`] under a *caller-assigned* job id
+    /// (same contract as [`TsqrService::submit_with_id`]: controlling
+    /// ids controls determinism across services).
+    pub fn ingest_async_with_id(
+        &self,
+        id: JobId,
+        name: &str,
+        cols: usize,
+        recipe: IngestRecipe,
+        placement: Placement,
+    ) -> Result<IngestHandle> {
+        self.reserve_explicit_id(id)?;
+        self.ingest_async_reserved(id, name, cols, recipe, placement)
+    }
+
+    fn ingest_async_reserved(
+        &self,
+        id: JobId,
+        name: &str,
+        cols: usize,
+        recipe: IngestRecipe,
+        placement: Placement,
+    ) -> Result<IngestHandle> {
+        let rows = recipe.rows();
+        let home = match placement {
+            Placement::Auto => 0,
+            Placement::Pinned(k) if k < self.inner.shards.len() => k,
+            Placement::Pinned(k) => {
+                self.unreserve(id);
+                bail!(
+                    "ingest pinned to shard {k}, but the service has {} shard(s)",
+                    self.inner.shards.len()
+                );
+            }
+        };
+        // a still-live writer of the same name must finish before this
+        // one starts (two interleaved writers would corrupt the file);
+        // a previous ingestion that failed or was cancelled is simply
+        // superseded, not an error for the re-ingest
+        let deps = self.ingest_dep(name).unwrap_or_default();
+        let shard = &self.inner.shards[home];
+        let mut q = self.inner.lock_queue(home);
+        while q.open && q.jobs.len() >= self.inner.capacity {
+            q = shard.space.wait(q).expect("service queue");
+        }
+        if !q.open {
+            drop(q);
+            self.unreserve(id);
+            bail!("job service is shut down");
+        }
+        let work = JobWork::Ingest { name: name.to_string(), cols, recipe };
+        let label = Some(format!("ingest:{name}"));
+        let job = self.enqueue(home, &mut q, id, Priority::Normal, label, work, deps);
+        // register while still holding the queue lock: popping the job
+        // needs this lock, so no submit() can observe the queued
+        // ingestion without also seeing its registry entry
+        self.inner
+            .ingests
+            .lock()
+            .expect("ingests")
+            .insert(name.to_string(), (id, job.shared.clone()));
+        drop(q);
+        Ok(IngestHandle { job, handle: MatrixHandle::new(name, rows, cols) })
     }
 
     /// Read a handle's rows back from the pool: shards are scanned in
@@ -1260,6 +1778,56 @@ mod tests {
         let again = svc.submit_with_id(JobId(7), &h, FactorizationRequest::r_only()).unwrap();
         svc.drain_now();
         again.wait().unwrap();
+    }
+
+    #[test]
+    fn async_ingest_then_dependent_submit_drains_in_order() {
+        let svc = manual_service();
+        let ing = svc.ingest_gaussian_async("A", 300, 5, 1).unwrap();
+        assert_eq!(ing.status(), JobStatus::Queued);
+        assert_eq!(ing.job().kind(), JobKind::Ingest);
+        // the handle is usable for a dependent submission immediately
+        let job = svc.submit(ing.handle(), FactorizationRequest::qr()).unwrap();
+        assert_eq!(job.kind(), JobKind::Factorize);
+        // manual drain runs the ingestion first (the dependent job is
+        // parked on its edge), then the factorization
+        assert_eq!(svc.drain_now(), 2);
+        let m = ing.wait().unwrap();
+        assert_eq!((m.rows, m.cols), (300, 5));
+        let fact = job.wait().unwrap();
+        assert_eq!(fact.r.rows, 5);
+    }
+
+    #[test]
+    fn async_ingest_matches_synchronous_ingest_bits() {
+        let sync_svc = manual_service();
+        let async_svc = manual_service();
+        let hs = sync_svc.ingest_gaussian("A", 500, 6, 42).unwrap();
+        let ing = async_svc.ingest_gaussian_async("A", 500, 6, 42).unwrap();
+        async_svc.drain_now();
+        let ha = ing.wait().unwrap();
+        let (ms, ma) =
+            (sync_svc.get_matrix(&hs).unwrap(), async_svc.get_matrix(&ha).unwrap());
+        assert_eq!(ms.data, ma.data, "queued ingestion must write the same bits");
+    }
+
+    #[test]
+    fn cancelled_ingest_fails_dependents_with_the_root_cause() {
+        let svc = manual_service();
+        let ing = svc.ingest_gaussian_async("A", 100, 4, 2).unwrap();
+        let job = svc.submit(ing.handle(), FactorizationRequest::qr()).unwrap();
+        assert!(ing.cancel());
+        // a submission against the dead (not yet drained) name reports
+        // the cause up front — the lazy half of registry retirement …
+        let err = svc.submit(ing.handle(), FactorizationRequest::qr()).unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "{err}");
+        assert_eq!(svc.drain_now(), 0, "both queued jobs resolve without executing");
+        let err = job.wait().unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "{err}");
+        // … and a re-ingest of the name supersedes the dead writer
+        let again = svc.ingest_gaussian_async("A", 100, 4, 2).unwrap();
+        svc.drain_now();
+        assert_eq!(again.wait().unwrap().rows, 100);
     }
 
     #[test]

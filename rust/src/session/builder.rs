@@ -280,6 +280,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Canonical leaf block height for streaming folds
+    /// ([`crate::session::TsqrSession::stream`], default 1000 to
+    /// mirror `rows_per_task`). This shapes the fold tree, so it is
+    /// part of the *streamed* digest contract — but the arrival
+    /// chunking (how many rows each `push_chunk` carries) never
+    /// changes bits. The floor is 1.
+    pub fn stream_chunk_rows(mut self, rows: usize) -> Self {
+        self.opts.stream_chunk_rows = rows.max(1);
+        self
+    }
+
     /// DFS namespace prefix for this session's temp files (e.g.
     /// `"s0/"`). Sessions whose requests land in one shared store must
     /// use distinct namespaces, or their `seq`-derived intermediate

@@ -6,11 +6,21 @@
 //! can be staged with O(batch) memory — the same layout
 //! [`crate::workload::put_matrix`] produces (one row record per matrix
 //! row, keyed by 32-byte global row id).
+//!
+//! [`StreamingWriter`] goes one step further: it never stages the rows
+//! at all. Each pushed chunk folds into a running `R`
+//! ([`crate::stream::RFold`]), so R/Σ of an unbounded stream costs one
+//! pass and `O(n²)` resident state — and with
+//! [`retain_q`](StreamingWriter::retain_q) the leaf `Q` factors spill
+//! to the DFS as chunk recipes that
+//! [`finalize_qr`](StreamingWriter::finalize_qr) replays
+//! Direct-TSQR-style into a full `Q`.
 
 use crate::coordinator::MatrixHandle;
 use crate::dfs::records::{encode_row, row_key, Record};
 use crate::dfs::Dfs;
 use crate::linalg::Matrix;
+use crate::stream::{FoldStats, RFold};
 use anyhow::{ensure, Result};
 
 /// Rows buffered before each DFS append.
@@ -97,6 +107,182 @@ impl<'s> MatrixWriter<'s> {
 impl Drop for MatrixWriter<'_> {
     fn drop(&mut self) {
         self.flush();
+    }
+}
+
+/// A single-pass streaming factorization in progress. Obtain via
+/// [`crate::session::TsqrSession::stream`].
+///
+/// Unlike [`MatrixWriter`], nothing is staged under the stream's name:
+/// rows fold into a running `R` as they arrive
+/// ([`crate::stream::RFold`]), so the raw input never exists in the
+/// DFS and an abandoned writer leaves **no partial matrix visible** —
+/// dropping mid-stream deletes any spilled chunk recipes and the
+/// stream's name never resolves to a file.
+///
+/// `R`/Σ come straight out of [`finalize_r`](Self::finalize_r) /
+/// [`finalize_sigma`](Self::finalize_sigma) after the last row, one
+/// pass total. Full `Q` needs [`retain_q`](Self::retain_q) before the
+/// first row: factored leaf `Q`s then spill to
+/// `<ns>stream/<name>/q1-*` as they form, and
+/// [`finalize_qr`](Self::finalize_qr) replays the Direct-TSQR
+/// Q-formation over the fold tree, writing `<ns>stream/<name>/Q`.
+pub struct StreamingWriter<'s> {
+    dfs: &'s mut Dfs,
+    /// Spill namespace: `<session-ns>stream/<name>/`.
+    ns: String,
+    cols: usize,
+    fold: RFold,
+    spilled: bool,
+    finished: bool,
+}
+
+impl<'s> StreamingWriter<'s> {
+    pub(crate) fn new(
+        dfs: &'s mut Dfs,
+        session_ns: &str,
+        name: &str,
+        cols: usize,
+        chunk_rows: usize,
+    ) -> StreamingWriter<'s> {
+        StreamingWriter {
+            dfs,
+            ns: format!("{session_ns}stream/{name}/"),
+            cols,
+            fold: RFold::new(cols, chunk_rows),
+            spilled: false,
+            finished: false,
+        }
+    }
+
+    /// Keep the chunk recipes needed for a full `Q`. Must be called
+    /// before the first row; errors afterwards.
+    pub fn retain_q(mut self) -> Result<Self> {
+        self.fold.record_q()?;
+        Ok(self)
+    }
+
+    /// Rows streamed so far.
+    pub fn rows(&self) -> u64 {
+        self.fold.rows()
+    }
+
+    /// Running pass/size accounting.
+    pub fn stats(&self) -> &FoldStats {
+        self.fold.stats()
+    }
+
+    /// Fold one row into the stream.
+    pub fn push_row(&mut self, row: &[f64]) -> Result<()> {
+        self.fold.push_row(row)?;
+        self.drain_spill();
+        Ok(())
+    }
+
+    /// Fold a chunk of rows (any height — bits never depend on the
+    /// arrival chunking).
+    pub fn push_chunk(&mut self, chunk: &Matrix) -> Result<()> {
+        self.fold.push_chunk(chunk)?;
+        self.drain_spill();
+        Ok(())
+    }
+
+    fn spill_file(&self, index: usize) -> String {
+        format!("{}q1-{index:08}", self.ns)
+    }
+
+    fn drain_spill(&mut self) {
+        for (index, q) in self.fold.drain_leaf_q() {
+            let file = self.spill_file(index);
+            crate::workload::put_matrix(self.dfs, &file, &q);
+            self.spilled = true;
+        }
+    }
+
+    fn take_fold(&mut self) -> RFold {
+        std::mem::replace(&mut self.fold, RFold::new(self.cols, 1))
+    }
+
+    /// Finish the stream and return `R` (possibly ragged `m×n` if
+    /// fewer than `n` rows arrived) plus the pass accounting. Any
+    /// spilled chunk recipes are discarded.
+    pub fn finalize_r(mut self) -> Result<(Matrix, FoldStats)> {
+        let (r, stats) = self.take_fold().finish_r()?;
+        if self.spilled {
+            self.dfs.delete_prefix(&self.ns);
+        }
+        self.finished = true;
+        Ok((r, stats))
+    }
+
+    /// Finish the stream and return `(R, Σ)` — Σ descending, computed
+    /// from the streamed `R` (same singular values as the stream).
+    pub fn finalize_sigma(mut self) -> Result<(Matrix, Vec<f64>, FoldStats)> {
+        let (r, stats) = self.take_fold().finish_r()?;
+        ensure!(
+            r.rows == r.cols,
+            "singular values need at least {} rows streamed (got {})",
+            self.cols,
+            stats.rows
+        );
+        if self.spilled {
+            self.dfs.delete_prefix(&self.ns);
+        }
+        self.finished = true;
+        let sigma = crate::stream::sigma_from_r(&r);
+        Ok((r, sigma, stats))
+    }
+
+    /// Finish the stream and form the full thin `Q` by replaying the
+    /// Direct-TSQR Q-formation over the fold tree: each spilled leaf
+    /// `Q` is multiplied by its tree transform and appended to
+    /// `<ns>stream/<name>/Q` in row order; spills are deleted as they
+    /// are consumed. Requires [`retain_q`](Self::retain_q) and at
+    /// least `cols` rows.
+    pub fn finalize_qr(mut self) -> Result<(MatrixHandle, Matrix, FoldStats)> {
+        ensure!(
+            self.fold.records_q(),
+            "finalize_qr needs retain_q() before the first row (R-only streams keep no chunk recipes)"
+        );
+        let (r, tree, stats) = self.take_fold().finish_tree()?;
+        ensure!(
+            r.rows == r.cols,
+            "full Q needs at least {} rows streamed (got {})",
+            self.cols,
+            stats.rows
+        );
+        let qfile = format!("{}Q", self.ns);
+        self.dfs.put(&qfile, Vec::new());
+        let mut next_row = 0u64;
+        for t in tree.leaf_transforms() {
+            let part = if t.factored {
+                let q1 = crate::workload::get_matrix(self.dfs, &self.spill_file(t.index), self.cols)?;
+                q1.matmul(&t.transform)
+            } else {
+                t.transform
+            };
+            debug_assert_eq!(part.rows, t.rows);
+            let recs: Vec<Record> = (0..part.rows)
+                .map(|i| Record::new(row_key(next_row + i as u64), encode_row(part.row(i))))
+                .collect();
+            next_row += part.rows as u64;
+            self.dfs.append(&qfile, recs);
+            self.dfs.delete(&self.spill_file(t.index));
+        }
+        self.finished = true;
+        let q = MatrixHandle::new(&qfile, next_row as usize, r.rows);
+        Ok((q, r, stats))
+    }
+}
+
+impl Drop for StreamingWriter<'_> {
+    fn drop(&mut self) {
+        // Abandoned mid-stream: leave nothing visible. (After a
+        // finalize_* the outputs must survive — only spill cleanup has
+        // already happened there.)
+        if !self.finished && self.spilled {
+            self.dfs.delete_prefix(&self.ns);
+        }
     }
 }
 

@@ -51,7 +51,7 @@ mod request;
 mod select;
 
 pub use builder::{Backend, SessionBuilder};
-pub use ingest::MatrixWriter;
+pub use ingest::{MatrixWriter, StreamingWriter};
 pub use request::{
     AlgoChoice, FactorizationRequest, Placement, Priority, Want, DEFAULT_CONDITION_THRESHOLD,
 };
@@ -108,27 +108,7 @@ impl Factorization {
     /// diff a `--shards 1` report against a `--shards 4` report with
     /// one `grep | diff` (wall-clock fields differ; digests must not).
     pub fn result_digest(&self) -> String {
-        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-        let mut h = FNV_OFFSET;
-        let mut eat = |bytes: &[u8]| {
-            for &b in bytes {
-                h ^= u64::from(b);
-                h = h.wrapping_mul(FNV_PRIME);
-            }
-        };
-        eat(&(self.r.rows as u64).to_le_bytes());
-        eat(&(self.r.cols as u64).to_le_bytes());
-        for v in &self.r.data {
-            eat(&v.to_bits().to_le_bytes());
-        }
-        if let Some(sigma) = self.sigma() {
-            eat(&(sigma.len() as u64).to_le_bytes());
-            for v in sigma {
-                eat(&v.to_bits().to_le_bytes());
-            }
-        }
-        format!("{h:016x}")
+        crate::util::digest::r_sigma_digest(&self.r, self.sigma())
     }
 }
 
@@ -205,6 +185,21 @@ impl TsqrSession {
     /// it; call [`MatrixWriter::finish`] for the handle.
     pub fn ingest(&mut self, name: &str, cols: usize) -> MatrixWriter<'_> {
         MatrixWriter::new(self.dfs_mut(), name, cols)
+    }
+
+    /// Open a **single-pass streaming factorization**: rows fold into a
+    /// running `R` as they arrive ([`crate::stream::RFold`]) instead of
+    /// being staged, so R/Σ of an unbounded stream costs one pass and
+    /// `O(n²)` resident state — the raw input never exists in the DFS.
+    /// Leaf block height comes from
+    /// [`SessionBuilder::stream_chunk_rows`]; the arrival chunking
+    /// never changes bits. Call
+    /// [`StreamingWriter::retain_q`] before the first row if the full
+    /// `Q` will be needed.
+    pub fn stream(&mut self, name: &str, cols: usize) -> StreamingWriter<'_> {
+        let ns = self.ns.clone();
+        let chunk_rows = self.opts.stream_chunk_rows;
+        StreamingWriter::new(self.dfs_mut(), &ns, name, cols, chunk_rows)
     }
 
     /// Ingest an in-memory matrix (subsumes `workload::put_matrix`).

@@ -1,0 +1,503 @@
+//! Incremental single-pass R-fold: sequential communication-optimal
+//! TSQR (Demmel, Grigori, Hoemmen & Langou, arXiv:0809.2407) over an
+//! unbounded row stream.
+//!
+//! Rows arrive in whatever chunking the producer likes; [`RFold`]
+//! re-buffers them into *canonical leaf blocks* of exactly
+//! `chunk_rows` rows (the last block may be ragged). Each full leaf is
+//! reduced to its triangular factor with the blocked compact-WY kernel
+//! ([`crate::linalg::householder_qr`]), and leaf `R`s fold pairwise
+//! through a binary-counter stack: two same-level `R`s combine via
+//! `qr([R_older; R_newer])` and carry one level up. After `m` rows the
+//! stack holds at most `⌈log₂(m/chunk_rows)⌉ ≤ 64` small factors, so
+//! the resident state is `O(n²)` (with a log-bounded constant) no
+//! matter how long the stream runs, and the final `R` is available
+//! immediately after the last row lands — **one pass, and the raw
+//! input never exists in full anywhere**.
+//!
+//! # Determinism
+//!
+//! The fold tree's shape is a pure function of `(total rows,
+//! chunk_rows, cols)`: leaves are cut at exact multiples of
+//! `chunk_rows` regardless of push granularity, and the binary counter
+//! folds in arrival order. Pushing one row at a time, a thousand at a
+//! time, or the whole matrix in one call therefore produces
+//! bit-identical `R`/Σ — the streaming extension of the repo-wide
+//! determinism contract (`rust/tests/stream.rs` enforces it).
+//!
+//! # Q formation
+//!
+//! In [`RFold::record_q`] mode each factored leaf's thin `Q` is handed
+//! to the caller (a [`crate::session::StreamingWriter`] spills it to
+//! the DFS as a *chunk recipe*) and every join keeps its small
+//! `(≤2n)×n` factor in an arena. [`FoldTree::leaf_transforms`] then
+//! replays the Direct-TSQR step-3 recursion top-down — `S_root = I`,
+//! `[S_left; S_right] = Q_join · S_join` — giving the `n×n` transform
+//! each spilled leaf `Q` must be multiplied by to yield its slice of
+//! the full `Q`.
+
+use anyhow::{ensure, Result};
+
+use crate::linalg::{householder_qr, Matrix};
+
+/// Sentinel node id used when Q recording is off.
+const NO_NODE: usize = usize::MAX;
+
+/// One node of the fold tree (only materialized in `record_q` mode).
+#[derive(Clone, Debug)]
+pub enum FoldNode {
+    /// A canonical input block of `rows` raw rows. `factored` is false
+    /// only for blocks shorter than `cols` (ragged tail or tiny
+    /// streams), whose rows are kept verbatim instead of being QR'd.
+    Leaf { index: usize, rows: usize, factored: bool },
+    /// `[R_left; R_right] = q · R_this`. `q` is `None` when the stack
+    /// was still shorter than `cols` rows (no reduction happened);
+    /// the children's factors were just concatenated.
+    Join { left: usize, right: usize, rows_left: usize, rows_right: usize, q: Option<Matrix> },
+}
+
+/// Pass/size accounting for a completed fold.
+#[derive(Clone, Debug, Default)]
+pub struct FoldStats {
+    /// Raw rows pushed into the fold.
+    pub rows: u64,
+    /// Stream width.
+    pub cols: usize,
+    /// Canonical leaf block height.
+    pub chunk_rows: usize,
+    /// Leaf blocks cut (⌈rows / chunk_rows⌉).
+    pub leaves: usize,
+    /// Pairwise `[R;R] → qr` reductions performed.
+    pub folds: usize,
+    /// Raw input rows consumed out of the arrival buffer. Every row
+    /// leaves the buffer exactly once, so `rows_consumed == rows` is
+    /// the single-pass invariant ([`FoldStats::input_passes`]).
+    pub rows_consumed: u64,
+    /// High-water mark of resident rows: arrival buffer + every stack
+    /// `R` + undrained leaf-Q spill. Compare against `rows` to see the
+    /// streaming win.
+    pub peak_resident_rows: usize,
+    /// Deepest binary-counter level reached (≤ 64 for any physical
+    /// stream).
+    pub max_depth: usize,
+}
+
+impl FoldStats {
+    /// Passes over the raw input: exactly 1 for any stream that folded
+    /// each row once (0 for an empty stream).
+    pub fn input_passes(&self) -> u64 {
+        if self.rows == 0 {
+            0
+        } else {
+            self.rows_consumed.div_ceil(self.rows)
+        }
+    }
+}
+
+/// The completed fold tree, for Q replay. See the module docs.
+#[derive(Clone, Debug)]
+pub struct FoldTree {
+    nodes: Vec<FoldNode>,
+    root: usize,
+    /// Height of the root factor (== `cols` once rows ≥ cols).
+    root_rows: usize,
+}
+
+/// One leaf's share of the Q-formation replay.
+#[derive(Clone, Debug)]
+pub struct LeafTransform {
+    /// Canonical leaf index (row range `[index·chunk_rows, …)`).
+    pub index: usize,
+    /// Raw rows in this leaf.
+    pub rows: usize,
+    /// Whether the leaf was QR'd (its thin `Q` was emitted) or kept
+    /// verbatim (its `Q` is implicitly the identity).
+    pub factored: bool,
+    /// The transform: final `Q` rows of this leaf are
+    /// `Q_leaf · transform` when factored, `transform` itself when not.
+    pub transform: Matrix,
+}
+
+impl FoldTree {
+    /// Replay Direct-TSQR step 3 top-down, returning one transform per
+    /// leaf in ascending leaf order.
+    pub fn leaf_transforms(&self) -> Vec<LeafTransform> {
+        let mut out = Vec::new();
+        let mut stack = vec![(self.root, Matrix::identity(self.root_rows))];
+        while let Some((id, s)) = stack.pop() {
+            match &self.nodes[id] {
+                FoldNode::Leaf { index, rows, factored } => {
+                    out.push(LeafTransform {
+                        index: *index,
+                        rows: *rows,
+                        factored: *factored,
+                        transform: s,
+                    });
+                }
+                FoldNode::Join { left, right, rows_left, rows_right, q } => {
+                    let prod = match q {
+                        Some(q) => q.matmul(&s),
+                        None => s,
+                    };
+                    debug_assert_eq!(prod.rows, rows_left + rows_right);
+                    stack.push((*left, prod.slice_rows(0, *rows_left)));
+                    stack.push((*right, prod.slice_rows(*rows_left, prod.rows)));
+                }
+            }
+        }
+        out.sort_by_key(|t| t.index);
+        out
+    }
+}
+
+/// A pending factor on the binary-counter stack.
+struct Slot {
+    r: Matrix,
+    node: usize,
+}
+
+/// The incremental fold. See the module docs for the contract.
+pub struct RFold {
+    cols: usize,
+    chunk_rows: usize,
+    record_q: bool,
+    /// Arrival buffer: `buf_rows` rows of the next (partial) leaf.
+    buf: Vec<f64>,
+    buf_rows: usize,
+    next_leaf: usize,
+    /// Binary counter: `levels[k]` holds the fold of a run of `2^k`
+    /// leaves, higher levels older.
+    levels: Vec<Option<Slot>>,
+    /// Node arena (`record_q` only).
+    nodes: Vec<FoldNode>,
+    /// Factored leaf `Q`s awaiting [`RFold::drain_leaf_q`]
+    /// (`record_q` only).
+    pending_q: Vec<(usize, Matrix)>,
+    pending_q_rows: usize,
+    stats: FoldStats,
+}
+
+impl RFold {
+    /// A fold over `cols`-wide rows with canonical leaf blocks of
+    /// `chunk_rows` (clamped to ≥ 1).
+    pub fn new(cols: usize, chunk_rows: usize) -> Self {
+        let chunk_rows = chunk_rows.max(1);
+        RFold {
+            cols,
+            chunk_rows,
+            record_q: false,
+            buf: Vec::new(),
+            buf_rows: 0,
+            next_leaf: 0,
+            levels: Vec::new(),
+            nodes: Vec::new(),
+            pending_q: Vec::new(),
+            pending_q_rows: 0,
+            stats: FoldStats { cols, chunk_rows, ..FoldStats::default() },
+        }
+    }
+
+    /// Turn on Q recording. Must be called before any rows arrive; the
+    /// caller is responsible for draining [`RFold::drain_leaf_q`] after
+    /// every push (the fold counts undrained spill as resident).
+    pub fn record_q(&mut self) -> Result<()> {
+        ensure!(self.stats.rows == 0, "record_q must be enabled before the first row");
+        self.record_q = true;
+        Ok(())
+    }
+
+    /// Rows pushed so far.
+    pub fn rows(&self) -> u64 {
+        self.stats.rows
+    }
+
+    /// Whether Q recording is on.
+    pub fn records_q(&self) -> bool {
+        self.record_q
+    }
+
+    /// Stream width.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Running accounting (final numbers come from `finish_*`).
+    pub fn stats(&self) -> &FoldStats {
+        &self.stats
+    }
+
+    /// Push one row.
+    pub fn push_row(&mut self, row: &[f64]) -> Result<()> {
+        ensure!(row.len() == self.cols, "row has {} values, stream is {} wide", row.len(), self.cols);
+        self.buf.extend_from_slice(row);
+        self.buf_rows += 1;
+        self.stats.rows += 1;
+        self.note_resident();
+        if self.buf_rows == self.chunk_rows {
+            self.close_leaf();
+        }
+        Ok(())
+    }
+
+    /// Push a chunk of rows (any height — the fold re-buffers into
+    /// canonical leaves, so chunking never changes bits).
+    pub fn push_chunk(&mut self, a: &Matrix) -> Result<()> {
+        ensure!(a.cols == self.cols, "chunk is {} wide, stream is {} wide", a.cols, self.cols);
+        let mut next = 0;
+        while next < a.rows {
+            let take = (self.chunk_rows - self.buf_rows).min(a.rows - next);
+            for i in next..next + take {
+                self.buf.extend_from_slice(a.row(i));
+            }
+            self.buf_rows += take;
+            self.stats.rows += take as u64;
+            next += take;
+            self.note_resident();
+            if self.buf_rows == self.chunk_rows {
+                self.close_leaf();
+            }
+        }
+        Ok(())
+    }
+
+    /// Take the factored leaf `Q`s produced since the last drain
+    /// (ascending leaf index). Empty unless [`RFold::record_q`] is on.
+    pub fn drain_leaf_q(&mut self) -> Vec<(usize, Matrix)> {
+        self.pending_q_rows = 0;
+        std::mem::take(&mut self.pending_q)
+    }
+
+    /// Finish the stream: fold the remaining stack into the final `R`.
+    pub fn finish_r(self) -> Result<(Matrix, FoldStats)> {
+        let (r, _, stats) = self.finish_tree()?;
+        Ok((r, stats))
+    }
+
+    /// Finish the stream, keeping the fold tree for Q replay.
+    pub fn finish_tree(mut self) -> Result<(Matrix, FoldTree, FoldStats)> {
+        ensure!(self.stats.rows > 0, "cannot finalize an empty stream");
+        if self.buf_rows > 0 {
+            self.close_leaf();
+        }
+        // Merge survivors newest → oldest: level k joins *above* the
+        // accumulated newer rows, mirroring input order.
+        let mut acc: Option<Slot> = None;
+        let levels = std::mem::take(&mut self.levels);
+        for slot in levels.into_iter().flatten() {
+            acc = Some(match acc {
+                None => slot,
+                Some(newer) => self.join(slot, newer),
+            });
+        }
+        let root = acc.expect("non-empty stream folds to a root");
+        let tree = FoldTree {
+            nodes: std::mem::take(&mut self.nodes),
+            root: root.node,
+            root_rows: root.r.rows,
+        };
+        self.stats.peak_resident_rows = self.stats.peak_resident_rows.max(self.resident_rows());
+        Ok((root.r, tree, self.stats))
+    }
+
+    fn resident_rows(&self) -> usize {
+        self.buf_rows
+            + self.pending_q_rows
+            + self.levels.iter().flatten().map(|s| s.r.rows).sum::<usize>()
+    }
+
+    fn note_resident(&mut self) {
+        let now = self.resident_rows();
+        if now > self.stats.peak_resident_rows {
+            self.stats.peak_resident_rows = now;
+        }
+    }
+
+    /// Reduce the arrival buffer to a leaf factor and carry it into
+    /// the binary counter.
+    fn close_leaf(&mut self) {
+        let rows = self.buf_rows;
+        let index = self.next_leaf;
+        self.next_leaf += 1;
+        self.stats.leaves += 1;
+        self.stats.rows_consumed += rows as u64;
+        let block = Matrix::from_rows(rows, self.cols, std::mem::take(&mut self.buf));
+        self.buf_rows = 0;
+        let factored = rows >= self.cols;
+        let r = if factored {
+            let (q, r) = householder_qr(&block);
+            if self.record_q {
+                self.pending_q.push((index, q));
+                self.pending_q_rows += rows;
+            }
+            r
+        } else {
+            block
+        };
+        let node = if self.record_q {
+            self.nodes.push(FoldNode::Leaf { index, rows, factored });
+            self.nodes.len() - 1
+        } else {
+            NO_NODE
+        };
+        self.insert(Slot { r, node }, 0);
+        self.note_resident();
+    }
+
+    /// Carry a factor into the binary counter at `level`, folding on
+    /// collision.
+    fn insert(&mut self, mut slot: Slot, mut level: usize) {
+        loop {
+            if self.levels.len() <= level {
+                self.levels.push(None);
+            }
+            if level + 1 > self.stats.max_depth {
+                self.stats.max_depth = level + 1;
+            }
+            match self.levels[level].take() {
+                None => {
+                    self.levels[level] = Some(slot);
+                    return;
+                }
+                Some(older) => {
+                    slot = self.join(older, slot);
+                    level += 1;
+                }
+            }
+        }
+    }
+
+    /// `qr([R_older; R_newer])` (or plain concatenation while the stack
+    /// is still shorter than `cols` rows).
+    fn join(&mut self, older: Slot, newer: Slot) -> Slot {
+        let rows_left = older.r.rows;
+        let rows_right = newer.r.rows;
+        let stacked = Matrix::vstack(&[&older.r, &newer.r]);
+        let (r, q) = if stacked.rows >= self.cols {
+            self.stats.folds += 1;
+            let (q, r) = householder_qr(&stacked);
+            (r, Some(q))
+        } else {
+            (stacked, None)
+        };
+        let node = if self.record_q {
+            self.nodes.push(FoldNode::Join {
+                left: older.node,
+                right: newer.node,
+                rows_left,
+                rows_right,
+                q,
+            });
+            self.nodes.len() - 1
+        } else {
+            NO_NODE
+        };
+        Slot { r, node }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn gaussian(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::gaussian(rows, cols, &mut rng)
+    }
+
+    #[test]
+    fn push_granularity_does_not_change_bits() {
+        let a = gaussian(257, 6, 7);
+        let mut one_shot = RFold::new(6, 32);
+        one_shot.push_chunk(&a).unwrap();
+        let (r_one, _) = one_shot.finish_r().unwrap();
+
+        let mut by_row = RFold::new(6, 32);
+        for i in 0..a.rows {
+            by_row.push_row(a.row(i)).unwrap();
+        }
+        let (r_row, _) = by_row.finish_r().unwrap();
+        assert_eq!(r_one.data, r_row.data);
+
+        let mut ragged = RFold::new(6, 32);
+        let mut next = 0;
+        for (k, step) in [1usize, 7, 50, 3, 100, 96].iter().enumerate() {
+            let end = (next + step).min(a.rows);
+            ragged.push_chunk(&a.slice_rows(next, end)).unwrap();
+            next = end;
+            assert!(k < 6);
+        }
+        assert_eq!(next, a.rows);
+        let (r_ragged, _) = ragged.finish_r().unwrap();
+        assert_eq!(r_one.data, r_ragged.data);
+    }
+
+    #[test]
+    fn fold_r_matches_direct_qr_factor() {
+        let a = gaussian(300, 5, 11);
+        let mut fold = RFold::new(5, 64);
+        fold.push_chunk(&a).unwrap();
+        let (r, stats) = fold.finish_r().unwrap();
+        let (_, r_direct) = householder_qr(&a);
+        // Same factor up to column signs; compare |R| and the Gram
+        // identity RᵀR = AᵀA.
+        assert_eq!(r.rows, 5);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert!((r[(i, j)].abs() - r_direct[(i, j)].abs()).abs() < 1e-9);
+            }
+        }
+        assert_eq!(stats.input_passes(), 1);
+        assert_eq!(stats.rows, 300);
+        assert_eq!(stats.leaves, 5);
+        assert!(stats.peak_resident_rows < 300);
+    }
+
+    #[test]
+    fn q_replay_reconstructs_the_input() {
+        let a = gaussian(190, 4, 3);
+        let mut fold = RFold::new(4, 48);
+        fold.record_q().unwrap();
+        let mut leaf_q = Vec::new();
+        fold.push_chunk(&a).unwrap();
+        leaf_q.extend(fold.drain_leaf_q());
+        let (r, tree, _) = fold.finish_tree().unwrap();
+        let mut q_parts: Vec<Matrix> = Vec::new();
+        for t in tree.leaf_transforms() {
+            let part = if t.factored {
+                let (idx, q) = leaf_q.remove(0);
+                assert_eq!(idx, t.index);
+                q.matmul(&t.transform)
+            } else {
+                t.transform.clone()
+            };
+            assert_eq!(part.rows, t.rows);
+            q_parts.push(part);
+        }
+        let refs: Vec<&Matrix> = q_parts.iter().collect();
+        let q = Matrix::vstack(&refs);
+        let back = q.matmul(&r);
+        assert_eq!(back.rows, a.rows);
+        let diff = back.sub(&a).max_abs();
+        assert!(diff < 1e-9, "QR replay drifted: {diff}");
+        assert!(q.orthogonality_error() < 1e-9);
+    }
+
+    #[test]
+    fn tiny_streams_shorter_than_cols_still_fold() {
+        let a = gaussian(3, 8, 5);
+        let mut fold = RFold::new(8, 1);
+        fold.push_chunk(&a).unwrap();
+        let (r, stats) = fold.finish_r().unwrap();
+        // Fewer rows than columns: the "R" is the raw stack.
+        assert_eq!((r.rows, r.cols), (3, 8));
+        assert_eq!(stats.folds, 0);
+        assert_eq!(r.data, a.data);
+    }
+
+    #[test]
+    fn empty_stream_refuses_to_finalize() {
+        let fold = RFold::new(4, 16);
+        assert!(fold.finish_r().is_err());
+    }
+}

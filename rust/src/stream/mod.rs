@@ -1,0 +1,50 @@
+//! Streaming layer: single-pass incremental TSQR over unbounded row
+//! streams.
+//!
+//! The paper's Direct TSQR makes "slightly more than 2 passes" over a
+//! materialized matrix. For R-only / Σ-only workloads the sequential
+//! communication-optimal TSQR of Demmel et al. (arXiv:0809.2407)
+//! collapses that to **one pass over rows that never exist in full**:
+//! each arriving chunk folds into a running `R` via repeated
+//! `[R; chunk] → qr` reduction ([`fold::RFold`]), with the binary
+//! fold tree bounded at `O(log m)` depth so resident state stays
+//! `O(n²)` for any stream length.
+//!
+//! Two front-ends drive the core:
+//!
+//! * [`crate::session::StreamingWriter`]
+//!   ([`crate::session::TsqrSession::stream`]) — in-process streaming
+//!   with optional Q retention: leaf `Q`s spill to the DFS as chunk
+//!   recipes, and `finalize_qr()` replays the Direct-TSQR Q-formation
+//!   over the fold tree.
+//! * The wire protocol's `StreamFold` opcode (v4) — a remote peer
+//!   opens a fold on the serving side, pushes chunks, and gets the
+//!   final `R` back; `mrtsqr stream` drives the same core from the
+//!   CLI over chunked stdin or a seeded generator.
+//!
+//! The determinism contract extends to streams: **`R`/Σ bits are
+//! invariant to chunk size and arrival interleaving** at every
+//! `(host_threads, shards, procs, hosts)` setting, because the fold
+//! tree is shaped by row count alone — never by timing. See
+//! [`fold`] for the mechanics and `rust/tests/stream.rs` for the
+//! enforcement.
+
+pub mod fold;
+
+pub use fold::{FoldStats, FoldTree, LeafTransform, RFold};
+
+use crate::linalg::{jacobi_svd, Matrix};
+
+/// Digest of a streamed result, bit-compatible with
+/// [`crate::session::Factorization::result_digest`] (same FNV-1a over
+/// `R` shape/bits + Σ), so streamed and batch reports diff with one
+/// `grep result_digest` recipe.
+pub fn result_digest(r: &Matrix, sigma: Option<&[f64]>) -> String {
+    crate::util::digest::r_sigma_digest(r, sigma)
+}
+
+/// Singular values of a streamed (square) `R`, descending — the Σ of
+/// the stream, since `A` and `R` share singular values.
+pub fn sigma_from_r(r: &Matrix) -> Vec<f64> {
+    jacobi_svd(r).sigma
+}

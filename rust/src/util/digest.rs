@@ -1,0 +1,39 @@
+//! FNV-1a digest of a factorization's numerical content.
+//!
+//! One digest definition is shared by the batch path
+//! ([`crate::session::Factorization::result_digest`]) and the streaming
+//! path ([`crate::stream::result_digest`]) so CI can diff the two
+//! families of reports with the same `grep result_digest | diff`
+//! recipe. The digest covers `R`'s shape and exact f64 bit patterns
+//! plus Σ when present — wall-clock and scheduling metadata are
+//! excluded on purpose.
+
+use crate::linalg::Matrix;
+
+/// FNV-1a over `R`'s shape + exact bits, then Σ (when present).
+///
+/// Two results agree on this hex string iff their factors are
+/// bit-identical.
+pub fn r_sigma_digest(r: &Matrix, sigma: Option<&[f64]>) -> String {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    };
+    eat(&(r.rows as u64).to_le_bytes());
+    eat(&(r.cols as u64).to_le_bytes());
+    for v in &r.data {
+        eat(&v.to_bits().to_le_bytes());
+    }
+    if let Some(sigma) = sigma {
+        eat(&(sigma.len() as u64).to_le_bytes());
+        for v in sigma {
+            eat(&v.to_bits().to_le_bytes());
+        }
+    }
+    format!("{h:016x}")
+}

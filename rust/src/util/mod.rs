@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod digest;
 pub mod experiments;
 pub mod json;
 pub mod prop;

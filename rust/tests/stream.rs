@@ -1,0 +1,280 @@
+//! The streaming subsystem's contract (PR 8), across both halves:
+//!
+//! * **Single-pass incremental TSQR** — `TsqrSession::stream` folds
+//!   arriving row chunks into a running `R` in exactly one pass over
+//!   the input with `O(n²)`-bounded resident state, and the streamed
+//!   `R`/Σ bits are invariant to the *arrival* chunking (how many rows
+//!   each `push_chunk` carries) and to `--host-threads`. The fold-tree
+//!   shape depends only on the row count and the configured leaf
+//!   height (`SessionBuilder::stream_chunk_rows`), which *is* part of
+//!   the digest contract.
+//! * **Async ingestion jobs** — an ingestion queued with
+//!   `ingest_gaussian_async` never holds the shard engine lock for its
+//!   duration, a `submit` naming the still-ingesting matrix queues
+//!   behind it on a dependency edge, and the pair runs bit-identically
+//!   to synchronous ingest-then-submit under the same global job ids.
+//!
+//! The lock-duration regression (PR 8's satellite fix) is pinned
+//! deterministically: a whole factorization job is submitted, drained
+//! and awaited *from inside* a chunked ingest closure — if the ingest
+//! held its shard's engine lock across the upload, that drain would
+//! deadlock instead of completing.
+
+use mrtsqr::linalg::Matrix;
+use mrtsqr::service::{JobId, TsqrService};
+use mrtsqr::session::{Backend, FactorizationRequest, SessionBuilder};
+use mrtsqr::stream::result_digest;
+use mrtsqr::util::rng::Rng;
+use mrtsqr::Placement;
+
+fn builder() -> SessionBuilder {
+    mrtsqr::TsqrSession::builder().backend(Backend::Native).rows_per_task(50)
+}
+
+fn manual_service() -> TsqrService {
+    builder().service_workers(0).queue_capacity(8).build_service().unwrap()
+}
+
+fn bits(data: &[f64]) -> Vec<u64> {
+    data.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Stream `rows × cols` seeded gaussian rows in arrival chunks of
+/// `arrival` rows (0 = one single push) into a session with the given
+/// fold leaf height and host-thread count; return `(R, Σ, digest)`.
+fn streamed(
+    rows: usize,
+    cols: usize,
+    arrival: usize,
+    leaf: usize,
+    host_threads: usize,
+) -> (Matrix, Vec<f64>, String) {
+    let mut session =
+        builder().host_threads(host_threads).stream_chunk_rows(leaf).build().unwrap();
+    let mut w = session.stream("S", cols);
+    // one shared rng: the row *sequence* depends only on the seed, so
+    // every arrival slicing feeds the fold identical rows
+    let mut rng = Rng::new(7);
+    let mut remaining = rows;
+    while remaining > 0 {
+        let take = if arrival == 0 { remaining } else { arrival.min(remaining) };
+        w.push_chunk(&Matrix::gaussian(take, cols, &mut rng)).unwrap();
+        remaining -= take;
+    }
+    let (r, sigma, stats) = w.finalize_sigma().unwrap();
+    assert_eq!(stats.input_passes(), 1, "streamed R/Σ must cost exactly one pass");
+    assert_eq!(stats.rows, rows as u64);
+    let digest = result_digest(&r, Some(&sigma));
+    (r, sigma, digest)
+}
+
+/// The tentpole determinism contract: R, Σ and the digest are
+/// bit-identical whether the 537 rows arrive one at a time, in uneven
+/// chunks, in one shot, or into a session with 8 host threads instead
+/// of 1. Only the leaf height reshapes the fold tree.
+#[test]
+fn streamed_bits_are_invariant_to_arrival_chunking_and_host_threads() {
+    let (rows, cols, leaf) = (537, 5, 50);
+    let (r0, s0, d0) = streamed(rows, cols, 1, leaf, 1);
+    assert_eq!((r0.rows, r0.cols), (cols, cols));
+    for (arrival, threads) in [(7, 1), (64, 1), (4096, 1), (0, 1), (64, 8), (0, 8)] {
+        let (r, s, d) = streamed(rows, cols, arrival, leaf, threads);
+        assert_eq!(
+            bits(&r.data),
+            bits(&r0.data),
+            "R bits drifted at arrival={arrival} host_threads={threads}"
+        );
+        assert_eq!(
+            bits(&s),
+            bits(&s0),
+            "Σ bits drifted at arrival={arrival} host_threads={threads}"
+        );
+        assert_eq!(d, d0, "digest drifted at arrival={arrival} host_threads={threads}");
+    }
+}
+
+/// The leaf height is a *tree-shape* knob, not an arrival knob: the
+/// fold cuts ⌈rows / leaf⌉ canonical leaves regardless of how the rows
+/// were pushed, so two leaf settings produce two different (each
+/// internally deterministic) fold trees.
+#[test]
+fn fold_tree_shape_follows_row_count_and_leaf_height_alone() {
+    for (leaf, arrival) in [(50, 1), (50, 64), (13, 1), (13, 512)] {
+        let mut session = builder().stream_chunk_rows(leaf).build().unwrap();
+        let mut w = session.stream("S", 3);
+        let mut rng = Rng::new(3);
+        let mut remaining = 537usize;
+        while remaining > 0 {
+            let take = arrival.min(remaining);
+            w.push_chunk(&Matrix::gaussian(take, 3, &mut rng)).unwrap();
+            remaining -= take;
+        }
+        let (_, stats) = w.finalize_r().unwrap();
+        assert_eq!(stats.chunk_rows, leaf);
+        assert_eq!(stats.leaves, 537usize.div_ceil(leaf), "leaf count at leaf={leaf}");
+    }
+}
+
+/// R-only streaming is the unbounded-stream mode: one pass, nothing
+/// written to the DFS (no spill without `retain_q`), and the resident
+/// high-water mark stays a small multiple of the leaf height — far
+/// below the row count.
+#[test]
+fn r_only_stream_is_single_pass_with_bounded_state_and_no_dfs_writes() {
+    let mut session = builder().stream_chunk_rows(40).build().unwrap();
+    let before = session.dfs().list().len();
+    let mut w = session.stream("S", 4);
+    let mut rng = Rng::new(11);
+    let mut remaining = 1000usize;
+    while remaining > 0 {
+        let take = 77.min(remaining);
+        w.push_chunk(&Matrix::gaussian(take, 4, &mut rng)).unwrap();
+        remaining -= take;
+    }
+    let (r, stats) = w.finalize_r().unwrap();
+    assert_eq!((r.rows, r.cols), (4, 4));
+    assert_eq!(stats.input_passes(), 1);
+    assert_eq!(stats.rows_consumed, 1000, "every row leaves the arrival buffer exactly once");
+    assert!(
+        stats.peak_resident_rows < 200,
+        "resident state must stay O(n²)-ish, got {} rows for a 1000-row stream",
+        stats.peak_resident_rows
+    );
+    assert_eq!(
+        session.dfs().list().len(),
+        before,
+        "an R-only stream must never materialize anything in the DFS"
+    );
+}
+
+/// `retain_q` + `finalize_qr` replays Direct-TSQR Q-formation from the
+/// spilled leaf recipes: the thin `Q` lands in the DFS, reconstructs
+/// `A` to roundoff, is orthogonal, and every per-leaf spill file is
+/// consumed (deleted) by the replay.
+#[test]
+fn finalize_qr_replays_an_orthogonal_q_and_consumes_the_spill() {
+    let mut rng = Rng::new(19);
+    let a = Matrix::gaussian(600, 5, &mut rng);
+    let mut session = builder().stream_chunk_rows(64).build().unwrap();
+    let mut w = session.stream("S", 5).retain_q().unwrap();
+    let mut at = 0usize;
+    while at < a.rows {
+        let hi = (at + 37).min(a.rows);
+        w.push_chunk(&a.slice_rows(at, hi)).unwrap();
+        at = hi;
+    }
+    let (qh, r, stats) = w.finalize_qr().unwrap();
+    assert_eq!(stats.input_passes(), 1, "Q replay reads the spill, never the input again");
+    assert_eq!((qh.rows, qh.cols), (600, 5));
+
+    let q = session.get_matrix(&qh).unwrap();
+    assert!(q.orthogonality_error() < 1e-10, "|QtQ-I| = {}", q.orthogonality_error());
+    let recon = a.sub(&q.matmul(&r)).frob_norm() / a.frob_norm();
+    assert!(recon < 1e-12, "|A-QR|/|A| = {recon}");
+
+    let leftovers: Vec<String> = session
+        .dfs()
+        .list()
+        .into_iter()
+        .filter(|n| n.contains("stream/S/") && !n.ends_with("/Q"))
+        .map(|n| n.to_string())
+        .collect();
+    assert!(leftovers.is_empty(), "spill files must be consumed by the replay: {leftovers:?}");
+}
+
+/// Abandoning a writer mid-stream (drop without finalize) must leave
+/// no partial matrix or spill behind — the DFS looks exactly as it did
+/// before the stream opened.
+#[test]
+fn dropping_a_writer_mid_stream_leaves_no_partial_state() {
+    let mut session = builder().stream_chunk_rows(8).build().unwrap();
+    let before = session.dfs().list().len();
+    {
+        let mut w = session.stream("Z", 3).retain_q().unwrap();
+        let mut rng = Rng::new(23);
+        // enough rows to force several spilled leaf Qs before the drop
+        w.push_chunk(&Matrix::gaussian(100, 3, &mut rng)).unwrap();
+    }
+    assert_eq!(session.dfs().list().len(), before, "mid-stream drop must clean its spill");
+    assert!(
+        session.dfs().list().iter().all(|n| !n.contains("stream/Z/")),
+        "no trace of the abandoned stream may remain"
+    );
+}
+
+/// Satellite 4's regression, pinned without timing: the chunked ingest
+/// path generates rows into a detached scratch store and publishes in
+/// one short lock acquisition, so a whole factorization job can be
+/// submitted, drained and awaited *between two chunks of the same
+/// ingest*. If the upload held its shard's engine lock, this test
+/// would deadlock in `drain_now`.
+#[test]
+fn a_job_completes_in_the_middle_of_a_chunked_ingest() {
+    let svc = manual_service();
+    let a = svc.ingest_gaussian("A", 200, 4, 1).unwrap();
+    let mut mid = None;
+    let b = svc
+        .ingest_with_placed("B", 3, Placement::Auto, |w| {
+            let mut rng = Rng::new(5);
+            // > FLUSH_EVERY rows so the writer has really flushed once
+            w.push_chunk(&Matrix::gaussian(5000, 3, &mut rng))?;
+            let job = svc.submit(&a, FactorizationRequest::r_only()).unwrap();
+            assert_eq!(svc.drain_now(), 1, "the engine must be free mid-ingest");
+            mid = Some(job.wait().unwrap());
+            w.push_chunk(&Matrix::gaussian(5000, 3, &mut rng))?;
+            Ok(())
+        })
+        .unwrap();
+    assert_eq!(mid.unwrap().r.rows, 4, "the interleaved job finished with a real result");
+    let b = svc.get_matrix(&b).unwrap();
+    assert_eq!((b.rows, b.cols), (10_000, 3), "the split upload still landed whole");
+}
+
+/// The async-ingest determinism half of the tentpole: queueing the
+/// ingestion as a job and submitting against its handle immediately
+/// produces the same global job ids — and therefore bit-identical
+/// R/Q/Σ and digest — as synchronous ingest-then-submit.
+#[test]
+fn dependent_submit_behind_async_ingest_matches_ingest_then_submit_bits() {
+    // serial baseline: synchronous ingest (no job id), then the
+    // factorization under the id the async path will assign it (the
+    // ingestion takes id 0, so the dependent job gets id 1)
+    let base = manual_service();
+    let h = base.ingest_gaussian("A", 400, 5, 21).unwrap();
+    let bjob = base.submit_with_id(JobId(1), &h, FactorizationRequest::svd()).unwrap();
+    assert_eq!(base.drain_now(), 1);
+    let bfact = bjob.wait().unwrap();
+
+    let svc = manual_service();
+    let ing = svc.ingest_gaussian_async("A", 400, 5, 21).unwrap();
+    assert_eq!(ing.id(), JobId(0));
+    let job = svc.submit(ing.handle(), FactorizationRequest::svd()).unwrap();
+    assert_eq!(job.id(), JobId(1));
+    // the drain runs the ingestion first (dependency edge), then the job
+    assert_eq!(svc.drain_now(), 2);
+    let fact = job.wait().unwrap();
+
+    assert_eq!(fact.result_digest(), bfact.result_digest());
+    assert_eq!(bits(&fact.r.data), bits(&bfact.r.data));
+    assert_eq!(bits(fact.sigma().unwrap()), bits(bfact.sigma().unwrap()));
+    let q = svc.get_matrix(fact.q.as_ref().unwrap()).unwrap();
+    let bq = base.get_matrix(bfact.q.as_ref().unwrap()).unwrap();
+    assert_eq!(bits(&q.data), bits(&bq.data), "Q bits must survive the dependency edge");
+}
+
+/// The client facade end to end with real workers: submit against a
+/// matrix that is still ingesting, and both the upload and the
+/// dependent factorization complete with consistent shapes.
+#[test]
+fn async_ingest_overlaps_with_a_dependent_job_under_real_workers() {
+    let client = builder().service_workers(2).queue_capacity(8).build_client().unwrap();
+    let ing = client.ingest_gaussian_async("B", 20_000, 6, 9, Placement::Auto).unwrap();
+    let h = ing.handle();
+    assert_eq!((h.rows, h.cols), (20_000, 6), "the handle is usable before the rows land");
+    let job = client.submit(&h, FactorizationRequest::singular_values()).unwrap();
+    let m = ing.wait().unwrap();
+    assert_eq!((m.rows, m.cols), (20_000, 6));
+    let fact = job.wait().unwrap();
+    assert_eq!(fact.sigma().unwrap().len(), 6);
+    assert_eq!(fact.r.rows, 6);
+}
