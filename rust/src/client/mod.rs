@@ -97,7 +97,7 @@ pub use wire::{WorkerConfig, WIRE_VERSION};
 
 use crate::coordinator::MatrixHandle;
 use crate::linalg::Matrix;
-use crate::service::{JobId, JobStatus};
+use crate::service::{JobId, JobStatus, SchedTally};
 use crate::session::{Factorization, FactorizationRequest, Placement};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -400,6 +400,14 @@ impl TsqrClient {
         self.transport.shard_of(id)
     }
 
+    /// Elastic-scheduling counters aggregated across the whole pool:
+    /// steals per *global* shard plus per-label admission-hold tallies
+    /// (merged by label across processes/hosts). All zeros/empty when
+    /// the scheduler runs with everything off.
+    pub fn sched_tally(&self) -> Result<SchedTally> {
+        self.transport.sched_tally()
+    }
+
     /// Sweep one finished job's DFS namespace; returns files removed.
     pub fn evict_job(&self, id: JobId) -> Result<usize> {
         self.transport.evict_job(id)
@@ -428,7 +436,7 @@ impl Drop for TsqrClient {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::session::{Backend, TsqrSession};
+    use crate::session::{Backend, SubmitOptions, TsqrSession};
 
     fn local_client() -> TsqrClient {
         TsqrSession::builder()
@@ -445,7 +453,9 @@ mod tests {
         assert_eq!(client.procs(), 1);
         assert_eq!(client.shards(), 1);
         let h = client.ingest_gaussian("A", 300, 5, 1).unwrap();
-        let job = client.submit(&h, FactorizationRequest::qr().labeled("smoke")).unwrap();
+        let job = client
+            .submit(&h, FactorizationRequest::qr().options(SubmitOptions::new().label("smoke")))
+            .unwrap();
         assert_eq!(job.status(), JobStatus::Queued);
         assert_eq!(job.label(), Some("smoke"));
         assert!(job.try_result().is_none());
@@ -457,6 +467,9 @@ mod tests {
         assert!(q.orthogonality_error() < 1e-10);
         assert!(client.evict_job(job.id()).unwrap() > 0);
         assert!(client.kill_worker(0).is_err(), "local transport has no process to kill");
+        let tally = client.sched_tally().unwrap();
+        assert_eq!(tally.per_shard_steals, vec![0], "nothing steals with the scheduler off");
+        assert!(tally.admission_held.is_empty());
     }
 
     #[test]

@@ -63,7 +63,7 @@ use super::transport::{Transport, TransportIngest, TransportJob};
 use super::wire::{self, Frame, Op, WireReader, WireWriter, WorkerConfig};
 use crate::coordinator::MatrixHandle;
 use crate::linalg::Matrix;
-use crate::service::{JobId, JobStatus};
+use crate::service::{JobId, JobStatus, SchedTally};
 use crate::session::{FactorizationRequest, Placement};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -956,7 +956,7 @@ impl Transport for TcpTransport {
         mut req: FactorizationRequest,
     ) -> Result<Box<dyn TransportJob>> {
         let core = &self.core;
-        let (hidx, local) = core.router.route(id, req.placement, &core.health())?;
+        let (hidx, local) = core.router.route(id, req.options.placement, &core.health())?;
         {
             let mut placements = core.book.placements.lock().expect("placements");
             if placements.contains_key(&id.0) {
@@ -968,9 +968,9 @@ impl Transport for TcpTransport {
             core.book.placements.lock().expect("placements").remove(&id.0);
             return Err(err);
         }
-        req.placement = local;
+        req.options.placement = local;
         let host = core.hosts[hidx].clone();
-        let job = Arc::new(RemoteJob::new(id, req.label.clone()));
+        let job = Arc::new(RemoteJob::new(id, req.options.label.clone()));
         host.jobs.lock().expect("jobs map").insert(
             id.0,
             TrackedJob { job: job.clone(), input: input.clone(), req: req.clone() },
@@ -1059,6 +1059,37 @@ impl Transport for TcpTransport {
             .expect("placements")
             .get(&id.0)
             .and_then(|(_, shard)| *shard)
+    }
+
+    fn sched_tally(&self) -> Result<SchedTally> {
+        // same aggregation as the pipe transport, one level up: each
+        // host's tally covers its local shards, remapped into the
+        // global index space; admission holds merge by label
+        let core = &self.core;
+        let mut per_shard = vec![0u64; core.router.total_shards()];
+        let mut held: BTreeMap<String, u64> = BTreeMap::new();
+        for host in &core.hosts {
+            if !host.connected.load(Ordering::SeqCst) {
+                continue;
+            }
+            let reply = host.request(Op::SchedTally, &[])?;
+            ensure!(reply.op == Op::TallyReply, "expected TallyReply, got {:?}", reply.op);
+            let mut r = WireReader::new(&reply.payload);
+            let tally = r.tally()?;
+            r.finish()?;
+            for (local, n) in tally.per_shard_steals.iter().enumerate() {
+                if let Some(slot) = per_shard.get_mut(host.index * core.shards_per_host + local) {
+                    *slot = *n;
+                }
+            }
+            for (label, n) in tally.admission_held {
+                *held.entry(label).or_default() += n;
+            }
+        }
+        Ok(SchedTally {
+            per_shard_steals: per_shard,
+            admission_held: held.into_iter().collect(),
+        })
     }
 
     /// Fault-injection hook, reinterpreted for the network: sever the

@@ -34,12 +34,27 @@
 //! worker the first time a job routed there needs them — replayed from
 //! the client-side recipe (gaussian seeds replay as seeds, not bytes) —
 //! and job outputs are fetched from the worker that holds them.
+//!
+//! # Autoscaling
+//!
+//! With [`SchedulerConfig::autoscale`] enabled
+//! (`autoscale_max > 0`), an autoscaler thread breathes the live
+//! worker population between the configured bounds: when every live
+//! worker is busy and the ceiling allows, it spawns another child into
+//! a parked slot (reviving a killed worker's seat counts); a worker
+//! idle for two consecutive ticks is flagged out of routing for one
+//! tick and then retired, never below `max(autoscale_min, 1)`, never
+//! worker 0 (the ingestion home), and never a worker holding the only
+//! copy of a staged file. The slot table — and with it the global
+//! shard index space — is fixed at `max(worker_processes,
+//! autoscale_max)`, so scaling is pure placement like everything else:
+//! no result bit depends on the live population.
 
 use super::transport::{Transport, TransportIngest, TransportJob};
 use super::wire::{self, Frame, Op, WireReader, WireWriter, WorkerConfig};
 use crate::coordinator::MatrixHandle;
 use crate::linalg::Matrix;
-use crate::service::{JobId, JobStatus};
+use crate::service::{JobId, JobStatus, SchedTally, SchedulerConfig};
 use crate::session::{Factorization, FactorizationRequest, Placement};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::{BTreeMap, BTreeSet, HashMap};
@@ -365,6 +380,10 @@ struct WorkerConn {
     /// Auto router until its next frame arrives; unlike `alive`, the
     /// flag clears itself the moment the worker speaks again.
     suspect: AtomicBool,
+    /// Set by the autoscaler's scale-down phase 1: the worker leaves
+    /// `Auto` routing immediately and is killed on the next tick if it
+    /// is still idle (cleared instead if a straggler job landed).
+    retiring: AtomicBool,
     /// Per-request reply deadline (`None` = wait forever, the
     /// pre-timeout behavior).
     timeout: Option<Duration>,
@@ -642,11 +661,166 @@ pub(crate) struct GaussianRecipe {
     pub(crate) seed: u64,
 }
 
+/// The spawn recipe and live slot table shared between the transport
+/// and its autoscaler thread. Slot `i` is worker process `i`'s seat:
+/// `Some(conn)` while a child occupies it, `None` while it is parked
+/// (never spawned, or retired). The slot count is fixed at launch —
+/// `max(worker_processes, autoscale_max)` — so global shard indices
+/// stay stable while the live population breathes.
+struct ProcPool {
+    slots: Vec<Mutex<Option<Arc<WorkerConn>>>>,
+    book: Arc<RouteBook>,
+    /// Spawn ingredients, retained so the autoscaler can grow the pool
+    /// with children configured identically to the originals.
+    program: PathBuf,
+    cfg: WorkerConfig,
+    shards_per_proc: usize,
+    request_timeout: Option<Duration>,
+}
+
+impl ProcPool {
+    /// The connection seated in slot `proc`, if any.
+    fn conn(&self, proc: usize) -> Option<Arc<WorkerConn>> {
+        self.slots.get(proc).and_then(|s| s.lock().expect("worker slot").clone())
+    }
+
+    /// Live (seated, pipe not dead) connections with their slot index.
+    fn live(&self) -> Vec<(usize, Arc<WorkerConn>)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.lock().expect("worker slot").clone().map(|c| (i, c)))
+            .filter(|(_, c)| c.alive.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Whether retiring `proc` would lose the only copy of a staged
+    /// file (an input, or a chained job's Q output). Such a worker is
+    /// never scaled down.
+    fn sole_holder(&self, proc: usize) -> bool {
+        self.book
+            .staged
+            .lock()
+            .expect("staged map")
+            .values()
+            .any(|procs| procs.len() == 1 && procs.contains(&proc))
+    }
+
+    /// Forget every staging record pointing at slot `index` — its
+    /// occupant (dead or replaced) no longer serves those files.
+    fn forget_staged(&self, index: usize) {
+        let mut staged = self.book.staged.lock().expect("staged map");
+        for procs in staged.values_mut() {
+            procs.remove(&index);
+        }
+        staged.retain(|_, procs| !procs.is_empty());
+    }
+
+    /// (Re)spawn a worker into slot `index`: a scale-up, or the revival
+    /// of a killed worker's seat. A spawn failure leaves the slot
+    /// parked; the next tick retries.
+    fn respawn(&self, index: usize) {
+        if let Some(old) = self.slots[index].lock().expect("worker slot").take() {
+            ProcessTransport::reap(std::slice::from_ref(&old));
+        }
+        // the replacement starts with an empty DFS: any staging records
+        // of the old occupant are stale
+        self.forget_staged(index);
+        if let Ok((conn, _topo)) = ProcessTransport::spawn_one(
+            &self.program,
+            index,
+            &self.cfg,
+            &self.book,
+            self.shards_per_proc,
+            self.request_timeout,
+        ) {
+            *self.slots[index].lock().expect("worker slot") = Some(conn);
+        }
+    }
+
+    /// Phase 2 of a scale-down: kill a worker that spent a whole tick
+    /// flagged `retiring` (out of Auto routing) and is still idle.
+    /// Re-checks under the slot lock that the seat still holds the same
+    /// connection and that no straggler job snuck in.
+    fn retire(&self, index: usize, conn: &Arc<WorkerConn>) {
+        {
+            let mut slot = self.slots[index].lock().expect("worker slot");
+            match &*slot {
+                Some(c) if Arc::ptr_eq(c, conn) && c.load.load(Ordering::Relaxed) == 0 => {
+                    slot.take();
+                }
+                _ => return,
+            }
+        }
+        ProcessTransport::reap(std::slice::from_ref(conn));
+        self.forget_staged(index);
+    }
+
+    /// One autoscaler heartbeat. `idle[i]` counts consecutive ticks
+    /// slot `i` was live and empty of work; it is the hysteresis that
+    /// keeps a momentarily quiet pool from thrashing.
+    fn autoscale_tick(&self, sched: &SchedulerConfig, idle: &mut [u32]) {
+        // finish (or abort) retirements flagged on the previous tick
+        for (i, conn) in self.live() {
+            if conn.retiring.load(Ordering::SeqCst) {
+                if conn.load.load(Ordering::Relaxed) == 0 {
+                    self.retire(i, &conn);
+                } else {
+                    // a straggler landed (stale handle, pin): serve on
+                    conn.retiring.store(false, Ordering::SeqCst);
+                }
+                idle[i] = 0;
+            }
+        }
+        let live = self.live();
+        for (i, ticks) in idle.iter_mut().enumerate() {
+            let quiet = live.iter().any(|(j, c)| {
+                *j == i
+                    && !c.retiring.load(Ordering::SeqCst)
+                    && c.load.load(Ordering::Relaxed) == 0
+            });
+            *ticks = if quiet { ticks.saturating_add(1) } else { 0 };
+        }
+        // scale up: every live worker is busy and the ceiling allows
+        // one more — seat a child in the first parked (or dead) slot
+        let busy =
+            !live.is_empty() && live.iter().all(|(_, c)| c.load.load(Ordering::Relaxed) >= 1);
+        if busy && live.len() < sched.autoscale_max {
+            let parked = (0..self.slots.len()).find(|&i| {
+                match &*self.slots[i].lock().expect("worker slot") {
+                    None => true,
+                    Some(c) => !c.alive.load(Ordering::SeqCst),
+                }
+            });
+            if let Some(i) = parked {
+                self.respawn(i);
+                idle[i] = 0;
+                return;
+            }
+        }
+        // scale down, phase 1: flag the highest-index worker that has
+        // been idle two ticks. Never below the floor, never worker 0
+        // (the ingestion home), never a sole holder of staged data. A
+        // flagged worker leaves Auto routing now and dies next tick.
+        let floor = sched.autoscale_min.max(1);
+        let retiring_now = live.iter().filter(|(_, c)| c.retiring.load(Ordering::SeqCst)).count();
+        if live.len() - retiring_now > floor {
+            if let Some((_, conn)) = live.iter().rev().find(|(i, c)| {
+                *i > 0
+                    && idle[*i] >= 2
+                    && !c.retiring.load(Ordering::SeqCst)
+                    && !self.sole_holder(*i)
+            }) {
+                conn.retiring.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
 /// The `Process` transport: see the [module docs](self).
 pub struct ProcessTransport {
-    conns: Vec<Arc<WorkerConn>>,
+    pool: Arc<ProcPool>,
     router: ProcRouter,
-    book: Arc<RouteBook>,
     recipes: Mutex<HashMap<String, GaussianRecipe>>,
     /// Virtual byte scales to re-apply when a recipe replays.
     scales: Mutex<HashMap<String, f64>>,
@@ -656,12 +830,17 @@ pub struct ProcessTransport {
     host_threads: usize,
     backend_desc: String,
     down: AtomicBool,
+    /// Autoscaler heartbeat thread (`None` when autoscaling is off).
+    scaler: Mutex<Option<std::thread::JoinHandle<()>>>,
+    scaler_stop: Arc<AtomicBool>,
 }
 
 impl ProcessTransport {
     /// Spawn `nprocs` workers from `program`, handshake each with
     /// `cfg`, and wire up their reader threads. `request_timeout`
-    /// bounds every request's reply wait (`None` = wait forever).
+    /// bounds every request's reply wait (`None` = wait forever). With
+    /// `cfg.scheduler.autoscale_max > 0` the slot table is sized to the
+    /// ceiling and an autoscaler thread starts breathing the pool.
     pub(crate) fn launch(
         cfg: WorkerConfig,
         nprocs: usize,
@@ -669,6 +848,9 @@ impl ProcessTransport {
         request_timeout: Option<Duration>,
     ) -> Result<ProcessTransport> {
         ensure!(nprocs >= 1, "worker_processes wants at least one process");
+        let sched = cfg.scheduler;
+        let autoscaling = sched.autoscale_max > 0;
+        let nslots = if autoscaling { nprocs.max(sched.autoscale_max) } else { nprocs };
         let book = Arc::new(RouteBook::default());
         let shards_per_proc = cfg.engine_shards.max(1);
         let mut conns = Vec::with_capacity(nprocs);
@@ -690,10 +872,49 @@ impl ProcessTransport {
         }
         let (workers_per_proc, capacity, host_threads, backend_desc) =
             topo.expect("at least one worker");
-        Ok(ProcessTransport {
-            conns,
-            router: ProcRouter::new(nprocs, shards_per_proc),
+        let slots: Vec<Mutex<Option<Arc<WorkerConn>>>> =
+            (0..nslots).map(|i| Mutex::new(conns.get(i).cloned())).collect();
+        let pool = Arc::new(ProcPool {
+            slots,
             book,
+            program,
+            cfg,
+            shards_per_proc,
+            request_timeout,
+        });
+        let scaler_stop = Arc::new(AtomicBool::new(false));
+        let scaler = if autoscaling {
+            let pool = pool.clone();
+            let stop = scaler_stop.clone();
+            let interval = sched.autoscale_interval.max(Duration::from_millis(1));
+            Some(
+                std::thread::Builder::new()
+                    .name("mrtsqr-autoscale".into())
+                    .spawn(move || {
+                        let mut idle = vec![0u32; pool.slots.len()];
+                        loop {
+                            // sleep in short steps so shutdown is prompt
+                            // even under a long heartbeat interval
+                            let mut slept = Duration::ZERO;
+                            while slept < interval && !stop.load(Ordering::SeqCst) {
+                                let step = (interval - slept).min(Duration::from_millis(25));
+                                std::thread::sleep(step);
+                                slept += step;
+                            }
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            pool.autoscale_tick(&sched, &mut idle);
+                        }
+                    })
+                    .expect("spawn autoscaler"),
+            )
+        } else {
+            None
+        };
+        Ok(ProcessTransport {
+            pool,
+            router: ProcRouter::new(nslots, shards_per_proc),
             recipes: Mutex::new(HashMap::new()),
             scales: Mutex::new(HashMap::new()),
             workers_per_proc,
@@ -701,6 +922,8 @@ impl ProcessTransport {
             host_threads,
             backend_desc,
             down: AtomicBool::new(false),
+            scaler: Mutex::new(scaler),
+            scaler_stop,
         })
     }
 
@@ -733,6 +956,7 @@ impl ProcessTransport {
             jobs: Mutex::new(HashMap::new()),
             alive: AtomicBool::new(true),
             suspect: AtomicBool::new(false),
+            retiring: AtomicBool::new(false),
             timeout: request_timeout,
             load: AtomicUsize::new(0),
             reader: Mutex::new(None),
@@ -796,17 +1020,23 @@ impl ProcessTransport {
     }
 
     fn loads(&self) -> Vec<Option<usize>> {
-        self.conns
+        self.pool
+            .slots
             .iter()
-            .map(|c| {
-                (c.alive.load(Ordering::SeqCst) && !c.suspect.load(Ordering::SeqCst))
+            .map(|s| {
+                s.lock().expect("worker slot").as_ref().and_then(|c| {
+                    (c.alive.load(Ordering::SeqCst)
+                        && !c.suspect.load(Ordering::SeqCst)
+                        && !c.retiring.load(Ordering::SeqCst))
                     .then(|| c.load.load(Ordering::Relaxed))
+                })
             })
             .collect()
     }
 
     fn is_staged(&self, name: &str, proc: usize) -> bool {
-        self.book
+        self.pool
+            .book
             .staged
             .lock()
             .expect("staged map")
@@ -815,7 +1045,7 @@ impl ProcessTransport {
     }
 
     fn mark_staged(&self, name: &str, proc: usize, exclusive: bool) {
-        let mut staged = self.book.staged.lock().expect("staged map");
+        let mut staged = self.pool.book.staged.lock().expect("staged map");
         let entry = staged.entry(name.to_string()).or_default();
         if exclusive {
             entry.clear();
@@ -862,7 +1092,10 @@ impl ProcessTransport {
         if self.is_staged(&handle.file, proc) {
             return Ok(());
         }
-        let conn = &self.conns[proc];
+        let conn = self
+            .pool
+            .conn(proc)
+            .ok_or_else(|| anyhow!("worker process {proc} is not running"))?;
         // copy the recipe out so no lock is held across the blocking
         // pipe round-trips below
         let recipe = self.recipes.lock().expect("recipes").get(&handle.file).copied();
@@ -881,7 +1114,7 @@ impl ProcessTransport {
             // layout), so byte accounting — and with it the virtual
             // clock — is unchanged.
             let rows = self.fetch_matrix(handle)?;
-            self.send_matrix(conn, &handle.file, &rows, Placement::Auto)?;
+            self.send_matrix(&conn, &handle.file, &rows, Placement::Auto)?;
         }
         let scale = self.scales.lock().expect("scales").get(&handle.file).copied();
         if let Some(scale) = scale {
@@ -897,6 +1130,7 @@ impl ProcessTransport {
     fn fetch_matrix(&self, handle: &MatrixHandle) -> Result<Matrix> {
         // prefer workers known to hold the file, then try the rest
         let known: Vec<usize> = self
+            .pool
             .book
             .staged
             .lock()
@@ -905,14 +1139,16 @@ impl ProcessTransport {
             .map(|s| s.iter().copied().collect())
             .unwrap_or_default();
         let mut order: Vec<usize> = known;
-        for i in 0..self.conns.len() {
+        for i in 0..self.pool.slots.len() {
             if !order.contains(&i) {
                 order.push(i);
             }
         }
         let mut last_err = anyhow!("no live worker holds {:?}", handle.file);
         for proc in order {
-            let conn = &self.conns[proc];
+            let Some(conn) = self.pool.conn(proc) else {
+                continue;
+            };
             if !conn.alive.load(Ordering::SeqCst) {
                 continue;
             }
@@ -947,9 +1183,13 @@ impl ProcessTransport {
                     self.router.total_shards()
                 );
                 let proc = k / self.router.shards_per_proc;
+                let live = self
+                    .pool
+                    .conn(proc)
+                    .is_some_and(|c| c.alive.load(Ordering::SeqCst));
                 ensure!(
-                    self.conns[proc].alive.load(Ordering::SeqCst),
-                    "ingest pinned to shard {k}, but worker process {proc} is dead"
+                    live,
+                    "ingest pinned to shard {k}, but worker process {proc} is not running"
                 );
                 Ok((proc, Placement::Pinned(k % self.router.shards_per_proc)))
             }
@@ -959,7 +1199,7 @@ impl ProcessTransport {
 
 impl Transport for ProcessTransport {
     fn procs(&self) -> usize {
-        self.conns.len()
+        self.pool.live().len()
     }
 
     fn shards(&self) -> usize {
@@ -967,7 +1207,7 @@ impl Transport for ProcessTransport {
     }
 
     fn workers(&self) -> usize {
-        self.workers_per_proc * self.conns.len()
+        self.workers_per_proc * self.pool.live().len()
     }
 
     fn capacity(&self) -> usize {
@@ -997,7 +1237,11 @@ impl Transport for ProcessTransport {
         w.u64(cols as u64);
         w.u64(seed);
         w.placement(local);
-        let reply = self.conns[proc].request(Op::IngestGaussian, &w.into_bytes())?;
+        let conn = self
+            .pool
+            .conn(proc)
+            .ok_or_else(|| anyhow!("worker process {proc} is not running"))?;
+        let reply = conn.request(Op::IngestGaussian, &w.into_bytes())?;
         ensure!(reply.op == Op::Handle, "expected Handle, got {:?}", reply.op);
         let mut r = WireReader::new(&reply.payload);
         let handle = r.handle()?;
@@ -1030,7 +1274,11 @@ impl Transport for ProcessTransport {
         w.u64(cols as u64);
         w.u64(seed);
         w.placement(local);
-        let reply = self.conns[proc].request(Op::IngestAsync, &w.into_bytes())?;
+        let conn = self
+            .pool
+            .conn(proc)
+            .ok_or_else(|| anyhow!("worker process {proc} is not running"))?;
+        let reply = conn.request(Op::IngestAsync, &w.into_bytes())?;
         ensure!(reply.op == Op::Handle, "expected Handle, got {:?}", reply.op);
         let mut r = WireReader::new(&reply.payload);
         let handle = r.handle()?;
@@ -1043,7 +1291,7 @@ impl Transport for ProcessTransport {
             .expect("recipes")
             .insert(name.to_string(), GaussianRecipe { rows, cols, seed });
         self.mark_staged(name, proc, true);
-        Ok(Box::new(RemoteIngestHandle { id, handle, conn: self.conns[proc].clone() }))
+        Ok(Box::new(RemoteIngestHandle { id, handle, conn }))
     }
 
     fn ingest_matrix(
@@ -1053,7 +1301,11 @@ impl Transport for ProcessTransport {
         placement: Placement,
     ) -> Result<MatrixHandle> {
         let (proc, local) = self.ingest_target(placement)?;
-        let handle = self.send_matrix(&self.conns[proc], name, a, local)?;
+        let conn = self
+            .pool
+            .conn(proc)
+            .ok_or_else(|| anyhow!("worker process {proc} is not running"))?;
+        let handle = self.send_matrix(&conn, name, a, local)?;
         // no client-side copy is retained: a stale gaussian recipe for
         // this name must go, so later staging fetches the fresh rows
         // from the worker that now holds them
@@ -1068,24 +1320,30 @@ impl Transport for ProcessTransport {
         input: &MatrixHandle,
         mut req: FactorizationRequest,
     ) -> Result<Box<dyn TransportJob>> {
-        let (proc, local) = self.router.route(id, req.placement, &self.loads())?;
+        let (proc, local) = self.router.route(id, req.options.placement, &self.loads())?;
         // atomic duplicate guard (mirrors the service's live-id check):
         // a second submission under a live id must not overwrite the
         // first job's registry entry — that would orphan its handle
         {
-            let mut placements = self.book.placements.lock().expect("placements");
+            let mut placements = self.pool.book.placements.lock().expect("placements");
             if placements.contains_key(&id.0) {
                 bail!("job id {id} is already in use by a live (unevicted) job");
             }
             placements.insert(id.0, (proc, None));
         }
         if let Err(err) = self.ensure_staged(proc, input) {
-            self.book.placements.lock().expect("placements").remove(&id.0);
+            self.pool.book.placements.lock().expect("placements").remove(&id.0);
             return Err(err);
         }
-        req.placement = local;
-        let conn = self.conns[proc].clone();
-        let job = Arc::new(RemoteJob::new(id, req.label.clone()));
+        req.options.placement = local;
+        let conn = match self.pool.conn(proc) {
+            Some(conn) => conn,
+            None => {
+                self.pool.book.placements.lock().expect("placements").remove(&id.0);
+                bail!("worker process {proc} is not running");
+            }
+        };
+        let job = Arc::new(RemoteJob::new(id, req.options.label.clone()));
         conn.jobs.lock().expect("jobs map").insert(id.0, job.clone());
         conn.load.fetch_add(1, Ordering::Relaxed);
         let mut w = WireWriter::new();
@@ -1100,7 +1358,7 @@ impl Transport for ProcessTransport {
                 if conn.jobs.lock().expect("jobs map").remove(&id.0).is_some() {
                     conn.load.fetch_sub(1, Ordering::Relaxed);
                 }
-                self.book.placements.lock().expect("placements").remove(&id.0);
+                self.pool.book.placements.lock().expect("placements").remove(&id.0);
                 Err(err)
             }
         }
@@ -1112,10 +1370,7 @@ impl Transport for ProcessTransport {
 
     fn set_scale(&self, name: &str, scale: f64) -> Result<()> {
         self.scales.lock().expect("scales").insert(name.to_string(), scale);
-        for conn in &self.conns {
-            if !conn.alive.load(Ordering::SeqCst) {
-                continue;
-            }
+        for (_, conn) in self.pool.live() {
             let mut w = WireWriter::new();
             w.str(name);
             w.f64(scale);
@@ -1125,7 +1380,7 @@ impl Transport for ProcessTransport {
     }
 
     fn evict_job(&self, id: JobId) -> Result<usize> {
-        if !self.book.placements.lock().expect("placements").contains_key(&id.0) {
+        if !self.pool.book.placements.lock().expect("placements").contains_key(&id.0) {
             return Ok(0);
         }
         // sweep every live worker, not just the owner: chained jobs may
@@ -1135,10 +1390,7 @@ impl Transport for ProcessTransport {
         // with it, so there is nothing durable left to sweep there and
         // the error is not propagated.
         let mut swept = 0;
-        for conn in &self.conns {
-            if !conn.alive.load(Ordering::SeqCst) {
-                continue;
-            }
+        for (_, conn) in self.pool.live() {
             let mut w = WireWriter::new();
             w.u64(id.0);
             if let Ok(reply) = conn.request(Op::Evict, &w.into_bytes()) {
@@ -1148,9 +1400,10 @@ impl Transport for ProcessTransport {
         }
         // only after the sweep: retire the id and forget client-side
         // records of the namespace's files
-        self.book.placements.lock().expect("placements").remove(&id.0);
+        self.pool.book.placements.lock().expect("placements").remove(&id.0);
         let ns = format!("job-{}/", id.0);
-        self.book
+        self.pool
+            .book
             .staged
             .lock()
             .expect("staged map")
@@ -1166,7 +1419,8 @@ impl Transport for ProcessTransport {
     }
 
     fn shard_of(&self, id: JobId) -> Option<usize> {
-        self.book
+        self.pool
+            .book
             .placements
             .lock()
             .expect("placements")
@@ -1174,11 +1428,34 @@ impl Transport for ProcessTransport {
             .and_then(|(_, shard)| *shard)
     }
 
+    fn sched_tally(&self) -> Result<SchedTally> {
+        let mut per_shard = vec![0u64; self.router.total_shards()];
+        let mut held: std::collections::BTreeMap<String, u64> = std::collections::BTreeMap::new();
+        for (proc, conn) in self.pool.live() {
+            let reply = conn.request(Op::SchedTally, &[])?;
+            ensure!(reply.op == Op::TallyReply, "expected TallyReply, got {:?}", reply.op);
+            let mut r = WireReader::new(&reply.payload);
+            let tally = r.tally()?;
+            r.finish()?;
+            for (local, n) in tally.per_shard_steals.iter().enumerate() {
+                if let Some(slot) = per_shard.get_mut(proc * self.router.shards_per_proc + local) {
+                    *slot = *n;
+                }
+            }
+            for (label, n) in tally.admission_held {
+                *held.entry(label).or_default() += n;
+            }
+        }
+        Ok(SchedTally {
+            per_shard_steals: per_shard,
+            admission_held: held.into_iter().collect(),
+        })
+    }
+
     fn kill_worker(&self, proc: usize) -> Result<()> {
-        let conn = self
-            .conns
-            .get(proc)
-            .ok_or_else(|| anyhow!("no worker process {proc} (client has {})", self.conns.len()))?;
+        let conn = self.pool.conn(proc).ok_or_else(|| {
+            anyhow!("no live worker process {proc} (client has {} slot(s))", self.pool.slots.len())
+        })?;
         let mut child = conn.child.lock().expect("worker child");
         child.kill().with_context(|| format!("killing worker process {proc}"))?;
         child.wait().ok();
@@ -1190,7 +1467,15 @@ impl Transport for ProcessTransport {
         if self.down.swap(true, Ordering::SeqCst) {
             return;
         }
-        for conn in &self.conns {
+        // stop the autoscaler first so it cannot spawn into slots we
+        // are tearing down
+        self.scaler_stop.store(true, Ordering::SeqCst);
+        if let Some(scaler) = self.scaler.lock().expect("scaler slot").take() {
+            let _ = scaler.join();
+        }
+        for slot in self.pool.slots.iter() {
+            let conn = slot.lock().expect("worker slot").take();
+            let Some(conn) = conn else { continue };
             // best-effort goodbye, then close the pipe (the EOF the
             // worker also understands) and reap
             {

@@ -22,7 +22,9 @@
 
 use crate::coordinator::MatrixHandle;
 use crate::linalg::Matrix;
-use crate::service::{IngestHandle, IngestRecipe, JobHandle, JobId, JobStatus, TsqrService};
+use crate::service::{
+    IngestHandle, IngestRecipe, JobHandle, JobId, JobStatus, SchedTally, TsqrService,
+};
 use crate::session::{Factorization, FactorizationRequest, Placement};
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -139,6 +141,11 @@ pub trait Transport: Send + Sync {
     /// Global shard index a job was placed on, where known (local:
     /// immediately; process: once the job completed).
     fn shard_of(&self, id: JobId) -> Option<usize>;
+
+    /// Elastic-scheduling counters, aggregated across the whole pool:
+    /// per-*global*-shard steal counts plus per-label admission-hold
+    /// tallies (merged by label across processes/hosts).
+    fn sched_tally(&self) -> Result<SchedTally>;
 
     /// Fault-injection hook: kill worker process `proc` outright (no
     /// graceful shutdown), as if the OS OOM-killed it. Errors on a
@@ -312,6 +319,10 @@ impl Transport for LocalTransport {
 
     fn shard_of(&self, id: JobId) -> Option<usize> {
         self.svc.shard_of(id)
+    }
+
+    fn sched_tally(&self) -> Result<SchedTally> {
+        Ok(self.svc.sched_tally())
     }
 
     fn kill_worker(&self, proc: usize) -> Result<()> {

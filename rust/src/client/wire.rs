@@ -33,13 +33,14 @@ use crate::coordinator::{Algorithm, CoordOpts, MatrixHandle, SvdParts};
 use crate::dfs::{DiskModel, IoMeter};
 use crate::linalg::Matrix;
 use crate::mapreduce::{ClusterConfig, FaultPolicy, JobStats, StepStats};
-use crate::service::JobStatus;
+use crate::service::{JobStatus, SchedTally, SchedulerConfig};
 use crate::session::{
     AlgoChoice, AutoDecision, Backend, Factorization, FactorizationRequest, Placement, Priority,
-    Want,
+    SubmitOptions, Want,
 };
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
+use std::time::Duration;
 
 /// Frame preamble: identifies a byte stream as this protocol.
 pub const WIRE_MAGIC: [u8; 4] = *b"MRTQ";
@@ -55,8 +56,11 @@ pub const WIRE_MAGIC: [u8; 4] = *b"MRTQ";
 /// streaming layer: the [`Op::IngestAsync`]/[`Op::IngestStatus`]
 /// queued-ingestion opcodes, the [`Op::StreamFold`] single-pass
 /// streamed-QR opcode, and [`WorkerConfig`]'s `stream_chunk_rows`
-/// knob.
-pub const WIRE_VERSION: u16 = 4;
+/// knob. v5 added elastic scheduling: the request codec's
+/// `no_steal`/`quota_exempt` opt-outs, the stats codec's `stolen`
+/// placement flag, [`WorkerConfig`]'s [`SchedulerConfig`] group, and
+/// the [`Op::SchedTally`]/[`Op::TallyReply`] scheduler-counter probe.
+pub const WIRE_VERSION: u16 = 5;
 
 /// Upper bound on one frame's payload (1 GiB) — a corrupt length
 /// prefix must not look like an allocation request.
@@ -107,6 +111,9 @@ pub enum Op {
     /// begin (name, cols, chunk_rows), `1` push (a `chunk` of rows),
     /// `2` finish (name; replies `MatrixData` with the final `R`).
     StreamFold = 16,
+    /// Poll the serving side's elastic-scheduling counters (empty
+    /// payload); replied with [`Op::TallyReply`].
+    SchedTally = 17,
     /// Handshake reply: topology of the serving side.
     HelloAck = 100,
     /// Empty success ack.
@@ -125,6 +132,8 @@ pub enum Op {
     Err = 107,
     /// Reply to [`Op::Ping`] (empty payload).
     Pong = 112,
+    /// Reply to [`Op::SchedTally`]: a [`SchedTally`] payload.
+    TallyReply = 113,
     /// Push (req_id 0): job reached Done. Payload: id, wall_secs,
     /// [`Factorization`].
     JobDone = 110,
@@ -152,6 +161,7 @@ impl Op {
             14 => Op::IngestAsync,
             15 => Op::IngestStatus,
             16 => Op::StreamFold,
+            17 => Op::SchedTally,
             100 => Op::HelloAck,
             101 => Op::Ok,
             102 => Op::Handle,
@@ -163,6 +173,7 @@ impl Op {
             110 => Op::JobDone,
             111 => Op::JobFail,
             112 => Op::Pong,
+            113 => Op::TallyReply,
             other => bail!("wire: unknown opcode {other}"),
         })
     }
@@ -368,13 +379,15 @@ impl WireWriter {
         }
         self.bool(req.refine);
         self.f64(req.condition_threshold);
-        self.u8(match req.priority {
+        self.u8(match req.options.priority {
             Priority::Low => 0,
             Priority::Normal => 1,
             Priority::High => 2,
         });
-        self.opt_str(req.label.as_deref());
-        self.placement(req.placement);
+        self.opt_str(req.options.label.as_deref());
+        self.placement(req.options.placement);
+        self.bool(req.options.no_steal);
+        self.bool(req.options.quota_exempt);
     }
 
     pub fn matrix(&mut self, m: &Matrix) {
@@ -419,6 +432,7 @@ impl WireWriter {
 
     pub fn stats(&mut self, stats: &JobStats) {
         self.u64(stats.shard as u64);
+        self.bool(stats.stolen);
         self.u32(stats.steps.len() as u32);
         for s in &stats.steps {
             self.step(s);
@@ -516,6 +530,31 @@ impl WireWriter {
         self.u64(cfg.engine_shards as u64);
         self.u64(cfg.service_workers as u64);
         self.u64(cfg.queue_capacity as u64);
+        self.bool(cfg.scheduler.steal);
+        self.bool(cfg.scheduler.locality);
+        match cfg.scheduler.quota_per_label {
+            None => self.u8(0),
+            Some(q) => {
+                self.u8(1);
+                self.u64(q as u64);
+            }
+        }
+        self.u64(cfg.scheduler.autoscale_min as u64);
+        self.u64(cfg.scheduler.autoscale_max as u64);
+        self.u64(cfg.scheduler.autoscale_interval.as_millis() as u64);
+    }
+
+    /// Elastic-scheduling counters ([`Op::TallyReply`]).
+    pub fn tally(&mut self, t: &SchedTally) {
+        self.u32(t.per_shard_steals.len() as u32);
+        for &n in &t.per_shard_steals {
+            self.u64(n);
+        }
+        self.u32(t.admission_held.len() as u32);
+        for (label, n) in &t.admission_held {
+            self.str(label);
+            self.u64(*n);
+        }
     }
 }
 
@@ -652,14 +691,14 @@ impl<'a> WireReader<'a> {
         };
         let label = self.opt_str()?;
         let placement = self.placement()?;
+        let no_steal = self.bool()?;
+        let quota_exempt = self.bool()?;
         Ok(FactorizationRequest {
             want,
             algo,
             refine,
             condition_threshold,
-            priority,
-            label,
-            placement,
+            options: SubmitOptions { priority, label, placement, no_steal, quota_exempt },
         })
     }
 
@@ -726,12 +765,13 @@ impl<'a> WireReader<'a> {
 
     pub fn stats(&mut self) -> Result<JobStats> {
         let shard = self.usize()?;
+        let stolen = self.bool()?;
         let nsteps = self.u32()? as usize;
         let mut steps = Vec::with_capacity(nsteps.min(1024));
         for _ in 0..nsteps {
             steps.push(self.step()?);
         }
-        Ok(JobStats { steps, shard })
+        Ok(JobStats { steps, shard, stolen })
     }
 
     pub fn status(&mut self) -> Result<JobStatus> {
@@ -828,16 +868,49 @@ impl<'a> WireReader<'a> {
             2 => Backend::Pjrt,
             other => bail!("wire: bad backend tag {other}"),
         };
+        let engine_shards = self.usize()?;
+        let service_workers = self.usize()?;
+        let queue_capacity = self.usize()?;
+        let scheduler = SchedulerConfig {
+            steal: self.bool()?,
+            locality: self.bool()?,
+            quota_per_label: match self.u8()? {
+                0 => None,
+                1 => Some(self.usize()?),
+                other => bail!("wire: bad option tag {other}"),
+            },
+            autoscale_min: self.usize()?,
+            autoscale_max: self.usize()?,
+            autoscale_interval: Duration::from_millis(self.u64()?),
+        };
         Ok(WorkerConfig {
             model,
             cluster,
             faults,
             opts,
             backend,
-            engine_shards: self.usize()?,
-            service_workers: self.usize()?,
-            queue_capacity: self.usize()?,
+            engine_shards,
+            service_workers,
+            queue_capacity,
+            scheduler,
         })
+    }
+
+    /// Inverse of [`WireWriter::tally`].
+    pub fn tally(&mut self) -> Result<SchedTally> {
+        let nshards = self.u32()? as usize;
+        ensure!(
+            nshards.checked_mul(8).is_some_and(|bytes| self.buf.len() - self.pos >= bytes),
+            "wire: steal-counter run of {nshards} exceeds the remaining payload"
+        );
+        let per_shard_steals = (0..nshards).map(|_| self.u64()).collect::<Result<Vec<_>>>()?;
+        let nlabels = self.u32()? as usize;
+        let mut admission_held = Vec::with_capacity(nlabels.min(1024));
+        for _ in 0..nlabels {
+            let label = self.str()?;
+            admission_held.push((label, self.u64()?));
+        }
+        Ok(SchedTally { per_shard_steals, admission_held })
     }
 }
 
@@ -860,6 +933,10 @@ pub struct WorkerConfig {
     /// manual drain does not exist across a pipe).
     pub service_workers: usize,
     pub queue_capacity: usize,
+    /// Elastic-scheduling policy of the serving side's job queues
+    /// (stealing, locality, quotas, autoscale bounds) — pure
+    /// scheduling, so shipping it changes no result bits.
+    pub scheduler: SchedulerConfig,
 }
 
 #[cfg(test)]
@@ -881,7 +958,7 @@ mod tests {
     fn request_roundtrips_every_variant() {
         // the satellite's property sweep: every want × algo choice ×
         // priority × placement, plus the label edge cases (absent,
-        // empty, unicode)
+        // empty, unicode) and the v5 opt-out flags
         let wants = [
             FactorizationRequest::qr(),
             FactorizationRequest::r_only(),
@@ -896,17 +973,32 @@ mod tests {
                 for priority in [Priority::Low, Priority::Normal, Priority::High] {
                     for placement in [Placement::Auto, Placement::Pinned(0), Placement::Pinned(usize::MAX >> 1)] {
                         for label in [None, Some(""), Some("hot-λ-job")] {
-                            let mut req = base.clone().with_priority(priority).refined(true);
+                            let mut req = base.clone().refined(true);
                             req.algo = algo;
-                            req.placement = placement;
-                            req.label = label.map(str::to_string);
                             req.condition_threshold = 1.5e7;
+                            req.options = SubmitOptions::new()
+                                .priority(priority)
+                                .placement(placement);
+                            req.options.label = label.map(str::to_string);
+                            // both flag polarities cross the sweep
+                            req.options.no_steal = label.is_some();
+                            req.options.quota_exempt = priority == Priority::High;
                             assert_eq!(roundtrip_request(&req), req);
                         }
                     }
                 }
             }
         }
+        // and the everything-on corner
+        let req = FactorizationRequest::qr().options(
+            SubmitOptions::new()
+                .priority(Priority::High)
+                .label("t1")
+                .pinned(2)
+                .no_steal()
+                .quota_exempt(),
+        );
+        assert_eq!(roundtrip_request(&req), req);
     }
 
     #[test]
@@ -942,6 +1034,7 @@ mod tests {
         JobStats {
             steps: vec![step("s1", 100.125), step("auto-select(...)", 0.0)],
             shard: 3,
+            stolen: true,
         }
     }
 
@@ -955,6 +1048,7 @@ mod tests {
         let back = r.stats().unwrap();
         r.finish().unwrap();
         assert_eq!(back.shard, stats.shard);
+        assert_eq!(back.stolen, stats.stolen);
         assert_eq!(back.steps.len(), stats.steps.len());
         for (a, b) in back.steps.iter().zip(&stats.steps) {
             assert_eq!(a.name, b.name);
@@ -1075,7 +1169,7 @@ mod tests {
     fn corrupt_payloads_are_rejected_not_misread() {
         // truncated mid-struct
         let mut w = WireWriter::new();
-        w.request(&FactorizationRequest::qr().labeled("x"));
+        w.request(&FactorizationRequest::qr().options(SubmitOptions::new().label("x")));
         let bytes = w.into_bytes();
         for cut in [0, 1, bytes.len() / 2, bytes.len() - 1] {
             assert!(
@@ -1159,6 +1253,12 @@ mod tests {
             engine_shards: 2,
             service_workers: 3,
             queue_capacity: 64,
+            scheduler: SchedulerConfig::new()
+                .steal(true)
+                .locality(true)
+                .quota_per_label(4)
+                .autoscale(1, 6)
+                .autoscale_interval(Duration::from_millis(125)),
         };
         let mut w = WireWriter::new();
         w.config(&cfg);
@@ -1166,6 +1266,7 @@ mod tests {
         let mut r = WireReader::new(&bytes);
         let back = r.config().unwrap();
         r.finish().unwrap();
+        assert_eq!(back.scheduler, cfg.scheduler);
         assert_eq!(back.model, cfg.model);
         assert_eq!(back.cluster.reduce_slots, 13);
         assert_eq!(back.cluster.host_threads, 3);
@@ -1180,6 +1281,32 @@ mod tests {
             (back.engine_shards, back.service_workers, back.queue_capacity),
             (2, 3, 64)
         );
+    }
+
+    #[test]
+    fn tally_roundtrips() {
+        let t = SchedTally {
+            per_shard_steals: vec![0, 7, 0, 19],
+            admission_held: vec![("batch".into(), 12), ("t1".into(), 0)],
+        };
+        let mut w = WireWriter::new();
+        w.tally(&t);
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        assert_eq!(r.tally().unwrap(), t);
+        r.finish().unwrap();
+        // the empty tally (a serving side with scheduling off)
+        let mut w = WireWriter::new();
+        w.tally(&SchedTally::default());
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        assert_eq!(r.tally().unwrap(), SchedTally::default());
+        r.finish().unwrap();
+        // a corrupt steal-counter count must not become an allocation
+        let mut w = WireWriter::new();
+        w.u32(u32::MAX);
+        let bytes = w.into_bytes();
+        assert!(WireReader::new(&bytes).tally().is_err());
     }
 
     #[test]

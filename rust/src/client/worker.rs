@@ -513,6 +513,13 @@ impl<W: Write + Send + 'static> Server<W> {
                 self.client()?.set_scale(&name, scale)?;
                 Ok((Op::Ok, Vec::new()))
             }
+            Op::SchedTally => {
+                r.finish()?;
+                let tally = self.client()?.sched_tally()?;
+                let mut w = WireWriter::new();
+                w.tally(&tally);
+                Ok((Op::TallyReply, w.into_bytes()))
+            }
             Op::Ping => {
                 // liveness probe: answered even before Hello — the
                 // network transport's health checker must be able to
@@ -607,6 +614,7 @@ mod tests {
             engine_shards: 1,
             service_workers: 1,
             queue_capacity: 8,
+            scheduler: crate::service::SchedulerConfig::default(),
         });
         w.into_bytes()
     }
@@ -657,6 +665,18 @@ mod tests {
         let frames = roundtrip(&[(Op::Ping, 1, Vec::new())]);
         assert_eq!((frames[0].op, frames[0].req_id), (Op::Pong, 1));
         assert!(frames[0].payload.is_empty());
+    }
+
+    #[test]
+    fn sched_tally_over_the_wire() {
+        let frames =
+            roundtrip(&[(Op::Hello, 1, hello_payload()), (Op::SchedTally, 2, Vec::new())]);
+        assert_eq!((frames[1].op, frames[1].req_id), (Op::TallyReply, 2));
+        let mut r = WireReader::new(&frames[1].payload);
+        let t = r.tally().unwrap();
+        r.finish().unwrap();
+        assert_eq!(t.per_shard_steals, vec![0], "one idle counter per shard");
+        assert!(t.admission_held.is_empty());
     }
 
     #[test]

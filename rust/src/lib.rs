@@ -81,6 +81,20 @@
 //!   ([`runtime`], behind the `pjrt` feature). Python is never on the
 //!   request path.
 //!
+//! Since PR 9 the whole stack schedules **elastically** behind two
+//! small knob surfaces: per-job [`session::SubmitOptions`]
+//! (priority/label/placement plus `no_steal`/`quota_exempt` opt-outs,
+//! set with [`session::FactorizationRequest::options`]) and pool-level
+//! [`service::SchedulerConfig`]
+//! ([`session::SessionBuilder::scheduler`]) — idle shards steal queued
+//! jobs in `sched_key` order, `Auto` placement prefers the shard
+//! already holding a chained job's input, per-label admission quotas
+//! hold excess submissions fairly, and the Process transport autoscales
+//! its worker-process population between configured bounds. Every knob
+//! is pure scheduling: `result_digest`s are bit-identical at any
+//! setting (`rust/tests/steal.rs`), and [`client::Transport::sched_tally`]
+//! reports pool-wide steal/admission counters.
+//!
 //! Cutting across L4–L7 sits the **[`stream`] layer** (PR 8): a
 //! single-pass incremental TSQR ([`stream::RFold`]) that folds each
 //! arriving row-chunk into a running `R` via `[R; chunk] → qr`
@@ -157,5 +171,11 @@ pub mod workload;
 pub use client::{ClientJobHandle, Transport, TsqrClient};
 pub use coordinator::{Algorithm, Coordinator, MatrixHandle};
 pub use linalg::Matrix;
-pub use service::{IngestHandle, IngestRecipe, JobHandle, JobId, JobKind, JobStatus, TsqrService};
-pub use session::{Backend, Factorization, FactorizationRequest, Placement, Priority, TsqrSession};
+pub use service::{
+    IngestHandle, IngestRecipe, JobHandle, JobId, JobKind, JobStatus, SchedTally,
+    SchedulerConfig, TsqrService,
+};
+pub use session::{
+    Backend, Factorization, FactorizationRequest, Placement, Priority, SubmitOptions,
+    TsqrSession,
+};

@@ -31,7 +31,7 @@ use mrtsqr::linalg::{matrix_with_condition, Matrix};
 use mrtsqr::mapreduce::{ClusterConfig, FaultPolicy};
 use mrtsqr::perfmodel::{lower_bound_secs, AlgoKind, StageParallelism, WorkloadShape};
 use mrtsqr::runtime::Manifest;
-use mrtsqr::service::parse_manifest;
+use mrtsqr::service::{parse_manifest_full, SchedulerConfig};
 use mrtsqr::session::{AlgoChoice, Backend, FactorizationRequest, SessionBuilder, TsqrSession};
 use mrtsqr::util::cli::Args;
 use mrtsqr::util::json::Json;
@@ -95,6 +95,44 @@ fn session_builder(args: &Args) -> SessionBuilder {
         }
         None => builder,
     }
+}
+
+/// Elastic-scheduling knobs: CLI flags layered over a manifest's
+/// `%scheduler` directive, CLI winning key by key. `--steal` /
+/// `--locality` switch those policies on, `--quota-per-label N` caps
+/// concurrent jobs per label (0 = off), `--autoscale MIN:MAX` bounds
+/// the worker-process autoscaler (0:0 = off; needs `--worker-procs`),
+/// `--autoscale-interval-ms N` its heartbeat. Every knob is pure
+/// scheduling: `result_digest`s are identical at any setting.
+fn scheduler_config(args: &Args, base: Option<SchedulerConfig>) -> Result<SchedulerConfig> {
+    let mut cfg = base.unwrap_or_default();
+    if args.flag("steal") {
+        cfg.steal = true;
+    }
+    if args.flag("locality") {
+        cfg.locality = true;
+    }
+    if let Some(n) = args.get("quota-per-label") {
+        let n: usize = n.parse().ok().context("--quota-per-label wants a count")?;
+        cfg.quota_per_label = if n == 0 { None } else { Some(n) };
+    }
+    if let Some(spec) = args.get("autoscale") {
+        let (min, max) = spec.split_once(':').context("--autoscale wants MIN:MAX")?;
+        cfg.autoscale_min = min.parse().ok().context("--autoscale min wants a count")?;
+        cfg.autoscale_max = max.parse().ok().context("--autoscale max wants a count")?;
+        if cfg.autoscale_max > 0 && cfg.autoscale_min > cfg.autoscale_max {
+            anyhow::bail!(
+                "--autoscale min {} exceeds max {}",
+                cfg.autoscale_min,
+                cfg.autoscale_max
+            );
+        }
+    }
+    if let Some(ms) = args.get("autoscale-interval-ms") {
+        let ms: u64 = ms.parse().ok().context("--autoscale-interval-ms wants millis")?;
+        cfg.autoscale_interval = std::time::Duration::from_millis(ms);
+    }
+    Ok(cfg)
 }
 
 /// `--connect host:port[,host:port…]` — the remote servers a `batch`
@@ -204,7 +242,9 @@ fn cmd_batch(args: &Args) -> Result<()> {
         .context("batch wants a manifest: mrtsqr batch --manifest jobs.txt")?;
     let text = std::fs::read_to_string(&manifest_path)
         .with_context(|| format!("reading manifest {manifest_path:?}"))?;
-    let entries = parse_manifest(&text)?;
+    let manifest = parse_manifest_full(&text)?;
+    let entries = manifest.entries;
+    let sched = scheduler_config(args, manifest.scheduler)?;
     let serial = args.flag("serial");
     let procs = args.get_usize("worker-procs", 0);
     let connect = connect_addrs(args);
@@ -228,6 +268,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
         .engine_shards(shards)
         .worker_processes(procs)
         .connect(&connect)
+        .scheduler(sched)
         .build_client()?;
     println!(
         "service        : backend={} procs={} shards={} (total) workers={} (total) queue-capacity={}/shard",
@@ -255,7 +296,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
     }
 
     let mut table = Table::new(
-        "Batch report (wall = running->done, queue wait excluded)",
+        "Batch report (wall = running->done, queue wait excluded; shard * = stolen)",
         &["job", "label", "request", "priority", "shard", "status", "virtual (s)", "wall (s)"],
     );
     let mut job_rows = Vec::new();
@@ -264,19 +305,20 @@ fn cmd_batch(args: &Args) -> Result<()> {
     let mut shard_jobs = vec![0usize; client.shards()];
     let mut shard_wall = vec![0.0f64; client.shards()];
     for (entry, handle) in entries.iter().zip(&handles) {
-        let (status, virt, digest, shard) = match handle.wait() {
+        let (status, virt, digest, shard, stolen) = match handle.wait() {
             Ok(fact) => (
                 format!("done ({})", fact.algorithm.cli_name()),
                 fact.stats.virtual_secs(),
                 Some(fact.result_digest()),
                 Some(fact.stats.shard),
+                fact.stats.stolen,
             ),
             Err(err) => {
                 failed += 1;
                 // a cross-process job that died with its worker has no
                 // known shard — report it honestly instead of booking
                 // it under shard 0
-                (format!("FAILED: {err:#}"), 0.0, None, client.shard_of(handle.id()))
+                (format!("FAILED: {err:#}"), 0.0, None, client.shard_of(handle.id()), false)
             }
         };
         // failed-while-running jobs report their measured wall too;
@@ -293,7 +335,10 @@ fn cmd_batch(args: &Args) -> Result<()> {
             entry.name.clone(),
             entry.describe(),
             entry.priority.name().into(),
-            shard.map_or_else(|| "?".into(), |s| s.to_string()),
+            shard.map_or_else(
+                || "?".into(),
+                |s| if stolen { format!("{s}*") } else { s.to_string() },
+            ),
             status.clone(),
             format!("{virt:.1}"),
             format!("{wall:.3}"),
@@ -311,6 +356,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
                 },
             ),
             ("status", Json::str(status)),
+            ("stolen", Json::Bool(stolen)),
             ("virtual_secs", Json::num(virt)),
             ("wall_secs", Json::num(wall)),
             (
@@ -338,10 +384,16 @@ fn cmd_batch(args: &Args) -> Result<()> {
     }
     println!("throughput     : {:.2} jobs/s", jobs as f64 / elapsed.max(1e-9));
     println!("virtual total  : {sum_virtual:.1} s");
+    // elastic-scheduling tallies (all zero with the default config)
+    let tally = client.sched_tally().unwrap_or_default();
     if client.shards() > 1 {
         for (k, (n, w)) in shard_jobs.iter().zip(&shard_wall).enumerate() {
-            println!("shard {k:<8} : {n} jobs, {w:.3} s summed wall");
+            let steals = tally.per_shard_steals.get(k).copied().unwrap_or(0);
+            println!("shard {k:<8} : {n} jobs, {w:.3} s summed wall, {steals} stolen");
         }
+    }
+    for (label, held) in &tally.admission_held {
+        println!("admission      : label {label:?} held {held} submission(s) at quota");
     }
 
     if let Some(path) = args.get("json") {
@@ -354,7 +406,15 @@ fn cmd_batch(args: &Args) -> Result<()> {
                     ("shard", Json::num(k as f64)),
                     ("jobs", Json::num(*n as f64)),
                     ("sum_job_wall_secs", Json::num(*w)),
+                    ("steals", Json::num(tally.per_shard_steals.get(k).copied().unwrap_or(0) as f64)),
                 ])
+            })
+            .collect();
+        let admission_rows: Vec<Json> = tally
+            .admission_held
+            .iter()
+            .map(|(label, held)| {
+                Json::obj([("label", Json::str(label)), ("held", Json::num(*held as f64))])
             })
             .collect();
         let report = Json::obj([
@@ -369,7 +429,9 @@ fn cmd_batch(args: &Args) -> Result<()> {
             ("aggregate_wall_secs", Json::num(elapsed)),
             ("throughput_jobs_per_sec", Json::num(jobs as f64 / elapsed.max(1e-9))),
             ("virtual_secs_total", Json::num(sum_virtual)),
+            ("steal", Json::Bool(sched.steal)),
             ("per_shard", Json::Arr(shard_rows)),
+            ("admission_held", Json::Arr(admission_rows)),
             ("per_job", Json::Arr(job_rows)),
         ]);
         std::fs::write(path, report.render() + "\n")
@@ -559,6 +621,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .queue_capacity(args.get_usize("queue", 64))
         .engine_shards(args.get_usize("shards", 1))
         .worker_processes(args.get_usize("worker-procs", 0))
+        .scheduler(scheduler_config(args, None)?)
         .build_client()?;
     if let Some(addr) = args.get("listen") {
         let topology = format!(
@@ -613,12 +676,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let cols = args.get_usize("cols", 6);
     let seed = args.get_u64("seed", 42);
 
+    let sched = scheduler_config(args, None)?;
     let client = Arc::new(
         session_builder(args)
             .service_workers(args.get_usize("jobs", 4).max(1))
             .queue_capacity(args.get_usize("queue", 64))
             .engine_shards(args.get_usize("shards", 1))
             .connect(&connect)
+            .scheduler(sched)
             .build_client()?,
     );
     println!(
@@ -720,8 +785,29 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             eprintln!("loadgen failure: {msg}");
         }
     }
+    // elastic-scheduling tallies (all zero with the default config)
+    let tally = client.sched_tally().unwrap_or_default();
+    let total_steals: u64 = tally.per_shard_steals.iter().sum();
+    if sched.steal || total_steals > 0 {
+        println!("steals         : {total_steals} across {} shard(s)", client.shards());
+    }
+    for (label, held) in &tally.admission_held {
+        println!("admission      : label {label:?} held {held} submission(s) at quota");
+    }
 
     if let Some(path) = args.get("bench-json") {
+        let steal_rows: Vec<Json> = tally
+            .per_shard_steals
+            .iter()
+            .map(|n| Json::num(*n as f64))
+            .collect();
+        let admission_rows: Vec<Json> = tally
+            .admission_held
+            .iter()
+            .map(|(label, held)| {
+                Json::obj([("label", Json::str(label)), ("held", Json::num(*held as f64))])
+            })
+            .collect();
         let report = Json::obj([
             ("jobs", Json::num(total as f64)),
             ("concurrency", Json::num(concurrency as f64)),
@@ -729,6 +815,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             ("shards", Json::num(client.shards() as f64)),
             ("elapsed_secs", Json::num(elapsed)),
             ("throughput_jobs_per_sec", Json::num(throughput)),
+            ("per_shard_steals", Json::Arr(steal_rows)),
+            ("admission_held", Json::Arr(admission_rows)),
             (
                 "latency",
                 Json::obj([
@@ -775,7 +863,10 @@ const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|batch|stream|serve|loadgen|work
                   --request-timeout SECS   (per-request deadline on the Process/Tcp transports)
   batch options:  --manifest FILE --jobs N --shards N --worker-procs N --queue N [--serial] [--json PATH]
                   --connect host:port[,host:port...]   (drive remote `serve --listen` hosts instead)
-                  (manifest lines: name rows cols seed <qr|r|svd|sigma> <algo> [low|normal|high] [@shard])
+                  (manifest lines: name rows cols seed <qr|r|svd|sigma> <algo> [low|normal|high] [@shard] [+nosteal] [+exempt];
+                   `%scheduler key=value...` lines configure the pool — CLI flags win key by key)
+  scheduling:     --steal --locality --quota-per-label N --autoscale MIN:MAX --autoscale-interval-ms N
+                  (batch/serve/loadgen; pure placement — result digests identical at any setting)
   stream options: --rows N --cols N --seed N [--sigma] [--q]
                   --chunk-rows N          (arrival granularity; 0 = one-shot; never changes bits)
                   --stream-chunk-rows N   (fold leaf height; shapes the fold tree, part of the digest)

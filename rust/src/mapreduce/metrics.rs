@@ -61,6 +61,11 @@ pub struct JobStats {
     /// metric in `steps` is bit-identical whatever shard served the
     /// job (`rust/tests/shards.rs` enforces this).
     pub shard: usize,
+    /// Whether an idle shard stole this job off its routed queue
+    /// before running it. Like `shard`, a pure *placement* record —
+    /// stealing never changes a modelled metric
+    /// (`rust/tests/steal.rs` enforces this).
+    pub stolen: bool,
 }
 
 impl JobStats {

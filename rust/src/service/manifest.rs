@@ -16,11 +16,25 @@
 //! ([`crate::session::Placement::Pinned`]) instead of letting the
 //! service's least-loaded router place it; it errors at submission
 //! when the service has fewer than `k+1` shards (`mrtsqr batch
-//! --shards N`).
+//! --shards N`). Two more trailing flags opt a job out of elastic
+//! scheduling: `+nosteal` (never stolen by an idle shard) and
+//! `+exempt` (ignores per-label admission quotas).
+//!
+//! A manifest may also carry `%scheduler` directive lines configuring
+//! the pool the batch runs on ([`parse_manifest_full`]); CLI flags
+//! override them key by key:
+//!
+//! ```text
+//! %scheduler steal=on locality=on quota=2 autoscale=1:4 interval_ms=100
+//! ```
 
 use crate::coordinator::Algorithm;
-use crate::session::{AlgoChoice, FactorizationRequest, Placement, Priority, Want};
+use crate::service::SchedulerConfig;
+use crate::session::{
+    AlgoChoice, FactorizationRequest, Placement, Priority, SubmitOptions, Want,
+};
 use anyhow::{bail, Context, Result};
+use std::time::Duration;
 
 /// One parsed manifest line: the input to generate and the request to
 /// run on it.
@@ -37,6 +51,10 @@ pub struct BatchEntry {
     pub priority: Priority,
     /// Engine-shard placement (`@<k>` in the manifest; `Auto` = routed).
     pub placement: Placement,
+    /// `+nosteal`: never let an idle shard steal this job.
+    pub no_steal: bool,
+    /// `+exempt`: admit this job past per-label quotas.
+    pub quota_exempt: bool,
 }
 
 impl BatchEntry {
@@ -52,11 +70,17 @@ impl BatchEntry {
             AlgoChoice::Auto => base.auto(),
             AlgoChoice::Fixed(algo) => base.with_algorithm(algo),
         };
-        let base = match self.placement {
-            Placement::Auto => base,
-            Placement::Pinned(k) => base.pinned(k),
-        };
-        base.with_priority(self.priority).labeled(self.name.clone())
+        let mut opts = SubmitOptions::new()
+            .priority(self.priority)
+            .label(self.name.clone())
+            .placement(self.placement);
+        if self.no_steal {
+            opts = opts.no_steal();
+        }
+        if self.quota_exempt {
+            opts = opts.quota_exempt();
+        }
+        base.options(opts)
     }
 
     /// Short human-readable request description for report tables.
@@ -93,16 +117,19 @@ fn parse_algo(s: &str) -> Result<AlgoChoice> {
 }
 
 fn parse_line(fields: &[&str]) -> Result<BatchEntry> {
-    if !(6..=8).contains(&fields.len()) {
+    if !(6..=10).contains(&fields.len()) {
         bail!(
-            "expected `name rows cols seed want algo [priority] [@shard]`, got {} fields",
+            "expected `name rows cols seed want algo [priority] [@shard] \
+             [+nosteal] [+exempt]`, got {} fields",
             fields.len()
         );
     }
-    // the optional trailing fields: a priority name and/or an `@<k>`
-    // shard pin, in either order
+    // the optional trailing fields: a priority name, an `@<k>` shard
+    // pin, and `+` opt-out flags, in any order
     let mut priority = Priority::Normal;
     let mut placement = Placement::Auto;
+    let mut no_steal = false;
+    let mut quota_exempt = false;
     let mut seen_priority = false;
     let mut seen_placement = false;
     for field in &fields[6..] {
@@ -112,6 +139,13 @@ fn parse_line(fields: &[&str]) -> Result<BatchEntry> {
             }
             placement = Placement::Pinned(shard.parse().context("@shard")?);
             seen_placement = true;
+        } else if let Some(flag) = field.strip_prefix('+') {
+            match flag {
+                "nosteal" if !no_steal => no_steal = true,
+                "exempt" if !quota_exempt => quota_exempt = true,
+                "nosteal" | "exempt" => bail!("duplicate flag {field:?}"),
+                _ => bail!("unknown flag {field:?} (+nosteal|+exempt)"),
+            }
         } else {
             if seen_priority {
                 bail!("duplicate priority field {field:?}");
@@ -129,27 +163,99 @@ fn parse_line(fields: &[&str]) -> Result<BatchEntry> {
         algo: parse_algo(fields[5])?,
         priority,
         placement,
+        no_steal,
+        quota_exempt,
     })
 }
 
-/// Parse a whole manifest. Blank lines and `#` comments are skipped;
-/// errors name the offending line.
-pub fn parse_manifest(text: &str) -> Result<Vec<BatchEntry>> {
-    let mut out = Vec::new();
+/// Fold one `%scheduler` directive's `key=value` fields into `cfg`.
+/// Later directives (and later keys on one line) win key by key.
+fn parse_scheduler_directive(fields: &[&str], mut cfg: SchedulerConfig) -> Result<SchedulerConfig> {
+    if fields.is_empty() {
+        bail!("%scheduler wants `key=value` fields (steal|locality|quota|autoscale|interval_ms)");
+    }
+    for field in fields {
+        let (key, value) = field
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("expected key=value, got {field:?}"))?;
+        match key {
+            "steal" => cfg.steal = parse_on_off(value)?,
+            "locality" => cfg.locality = parse_on_off(value)?,
+            "quota" => {
+                let n: u64 = value.parse().context("quota")?;
+                cfg.quota_per_label = if n == 0 { None } else { Some(n as usize) };
+            }
+            "autoscale" => {
+                let (min, max) = value
+                    .split_once(':')
+                    .ok_or_else(|| anyhow::anyhow!("autoscale wants MIN:MAX, got {value:?}"))?;
+                cfg.autoscale_min = min.parse().context("autoscale min")?;
+                cfg.autoscale_max = max.parse().context("autoscale max")?;
+                if cfg.autoscale_max > 0 && cfg.autoscale_min > cfg.autoscale_max {
+                    bail!("autoscale min {} exceeds max {}", cfg.autoscale_min, cfg.autoscale_max);
+                }
+            }
+            "interval_ms" => {
+                cfg.autoscale_interval =
+                    Duration::from_millis(value.parse().context("interval_ms")?);
+            }
+            other => bail!("unknown %scheduler key {other:?}"),
+        }
+    }
+    Ok(cfg)
+}
+
+fn parse_on_off(s: &str) -> Result<bool> {
+    match s {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => bail!("expected on|off, got {other:?}"),
+    }
+}
+
+/// A fully parsed manifest: the job entries plus any pool-level
+/// `%scheduler` directive ([`SchedulerConfig`]). `scheduler` is `None`
+/// when the manifest has no directive; CLI flags override it key by
+/// key in `mrtsqr batch`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub entries: Vec<BatchEntry>,
+    pub scheduler: Option<SchedulerConfig>,
+}
+
+/// Parse a whole manifest, jobs and `%scheduler` directives alike.
+/// Blank lines and `#` comments are skipped; errors name the offending
+/// line.
+pub fn parse_manifest_full(text: &str) -> Result<Manifest> {
+    let mut entries = Vec::new();
+    let mut scheduler = None;
     for (lineno, line) in text.lines().enumerate() {
         let line = line.split('#').next().unwrap_or("").trim();
         if line.is_empty() {
             continue;
         }
         let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields[0] == "%scheduler" {
+            let cfg = parse_scheduler_directive(&fields[1..], scheduler.unwrap_or_default())
+                .with_context(|| format!("manifest line {}: {line:?}", lineno + 1))?;
+            scheduler = Some(cfg);
+            continue;
+        }
         let entry = parse_line(&fields)
             .with_context(|| format!("manifest line {}: {line:?}", lineno + 1))?;
-        out.push(entry);
+        entries.push(entry);
     }
-    if out.is_empty() {
+    if entries.is_empty() {
         bail!("manifest has no jobs");
     }
-    Ok(out)
+    Ok(Manifest { entries, scheduler })
+}
+
+/// Parse a manifest's job entries, ignoring any `%scheduler` directive
+/// (the pre-elastic surface; `mrtsqr batch` uses
+/// [`parse_manifest_full`]).
+pub fn parse_manifest(text: &str) -> Result<Vec<BatchEntry>> {
+    Ok(parse_manifest_full(text)?.entries)
 }
 
 /// Generate a synthetic batch of `jobs` entries for load generation
@@ -200,6 +306,8 @@ pub fn synthetic_manifest(
                 algo,
                 priority,
                 placement: Placement::Auto,
+                no_steal: false,
+                quota_exempt: false,
             }
         })
         .collect()
@@ -243,7 +351,7 @@ A4      20000  8     4     sigma  indirect @0
         assert_eq!(e.priority, Priority::High);
         assert_eq!(e.placement, Placement::Pinned(2));
         let req = e.request();
-        assert_eq!(req.placement, Placement::Pinned(2));
+        assert_eq!(req.options.placement, Placement::Pinned(2));
         assert!(parse_manifest("A 100 4 7 qr direct @1 @2").is_err(), "duplicate pin");
         assert!(parse_manifest("A 100 4 7 qr direct low high").is_err(), "duplicate priority");
         assert!(parse_manifest("A 100 4 7 qr direct @x").is_err(), "non-numeric shard");
@@ -255,8 +363,51 @@ A4      20000  8     4     sigma  indirect @0
         let req = e.request();
         assert_eq!(req.want, Want::Qr);
         assert_eq!(req.algo, AlgoChoice::Fixed(Algorithm::DirectTsqr));
-        assert_eq!(req.priority, Priority::High);
-        assert_eq!(req.label.as_deref(), Some("hot"));
+        assert_eq!(req.options.priority, Priority::High);
+        assert_eq!(req.options.label.as_deref(), Some("hot"));
+        assert!(!req.options.no_steal);
+        assert!(!req.options.quota_exempt);
+    }
+
+    #[test]
+    fn elastic_flags_parse_and_reach_the_request() {
+        let e = parse_manifest("A 100 4 7 qr direct +nosteal high +exempt @1")
+            .unwrap()
+            .remove(0);
+        assert!(e.no_steal);
+        assert!(e.quota_exempt);
+        assert_eq!(e.priority, Priority::High);
+        assert_eq!(e.placement, Placement::Pinned(1));
+        let req = e.request();
+        assert!(req.options.no_steal);
+        assert!(req.options.quota_exempt);
+        assert!(parse_manifest("A 100 4 7 qr direct +nosteal +nosteal").is_err());
+        assert!(parse_manifest("A 100 4 7 qr direct +turbo").is_err());
+    }
+
+    #[test]
+    fn scheduler_directives_merge_and_cli_keeps_entries() {
+        let text = "\
+%scheduler steal=on quota=2
+A 100 4 7 qr direct
+%scheduler locality=on autoscale=1:4 interval_ms=50   # later line merges
+";
+        let m = parse_manifest_full(text).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let cfg = m.scheduler.expect("directive present");
+        assert!(cfg.steal);
+        assert!(cfg.locality);
+        assert_eq!(cfg.quota_per_label, Some(2));
+        assert_eq!((cfg.autoscale_min, cfg.autoscale_max), (1, 4));
+        assert_eq!(cfg.autoscale_interval, Duration::from_millis(50));
+        // quota=0 switches the quota off; bad keys and shapes error
+        let off = parse_manifest_full("%scheduler quota=0\nA 100 4 7 qr direct").unwrap();
+        assert_eq!(off.scheduler.expect("directive").quota_per_label, None);
+        assert!(parse_manifest_full("%scheduler steal=sometimes\nA 100 4 7 qr auto").is_err());
+        assert!(parse_manifest_full("%scheduler autoscale=4:1\nA 100 4 7 qr auto").is_err());
+        assert!(parse_manifest_full("%scheduler turbo=on\nA 100 4 7 qr auto").is_err());
+        // the directive-ignoring surface still sees the jobs
+        assert_eq!(parse_manifest(text).unwrap().len(), 1);
     }
 
     #[test]

@@ -10,14 +10,17 @@
 //! thing:
 //!
 //! ```no_run
-//! use mrtsqr::session::{FactorizationRequest, Priority, TsqrSession};
+//! use mrtsqr::session::{FactorizationRequest, Priority, SubmitOptions, TsqrSession};
 //!
 //! # fn main() -> anyhow::Result<()> {
 //! let svc = TsqrSession::builder().service_workers(4).build_service()?;
 //! let a = svc.ingest_gaussian("A", 100_000, 25, 42)?;
 //! let b = svc.ingest_gaussian("B", 50_000, 10, 43)?;
 //! let j1 = svc.submit(&a, FactorizationRequest::qr())?;               // returns immediately
-//! let j2 = svc.submit(&b, FactorizationRequest::svd().with_priority(Priority::High))?;
+//! let j2 = svc.submit(
+//!     &b,
+//!     FactorizationRequest::svd().options(SubmitOptions::new().priority(Priority::High)),
+//! )?;
 //! let (f1, f2) = (j1.wait()?, j2.wait()?);                            // Arc<Factorization>
 //! println!("{} + {} done", f1.algorithm.name(), f2.algorithm.name());
 //! # Ok(())
@@ -78,10 +81,42 @@
 //! [`TsqrService::drain_one`] execute queued jobs on the calling
 //! thread in deterministic (priority, job-id) order across all shards
 //! — the serial baseline the determinism tests compare against.
+//!
+//! # Elastic scheduling
+//!
+//! One [`SchedulerConfig`] knob group
+//! ([`crate::session::SessionBuilder::scheduler`]) turns on the
+//! elastic policies — all of them pure scheduling, so every modelled
+//! bit (R/Q/Σ, `virtual_secs`, fault draws, `result_digest`) is
+//! identical at any setting:
+//!
+//! * **Work stealing** (`steal`): an idle shard's worker threads steal
+//!   the globally best *queued* job — same [`ServiceInner::sched_key`]
+//!   order as the worker pop and the manual drain — from another
+//!   shard's queue, re-staging its input by the O(1)
+//!   `export_file`/`import_file` path. Running jobs are never
+//!   migrated, the serial `service_workers(0)` drain never steals,
+//!   and [`SubmitOptions::no_steal`] pins a job to its routed queue.
+//! * **Chained-job locality** (`locality`): `Placement::Auto` prefers
+//!   the least-loaded shard *already holding* the job's input over a
+//!   globally least-loaded shard that would need a staging copy.
+//! * **Admission control** (`quota_per_label`): at most that many
+//!   in-flight jobs per [`SubmitOptions::label`]; excess submissions
+//!   park at an admission gate (still cancellable, status `Queued`)
+//!   and enter their routed queue in `sched_key` order as the label's
+//!   jobs retire. One greedy tenant can no longer starve the pool.
+//! * **Worker autoscaling** (`autoscale_min`/`autoscale_max`): a
+//!   process-pool concern — see
+//!   [`crate::session::SessionBuilder::worker_processes`]; the
+//!   in-process service ignores the bounds.
+//!
+//! [`TsqrService::sched_tally`] reports per-shard steal counts and
+//! per-label admission holds; `mrtsqr batch --json` and `mrtsqr
+//! loadgen` surface the same tallies end-to-end.
 
 pub mod manifest;
 
-pub use manifest::{parse_manifest, synthetic_manifest, BatchEntry};
+pub use manifest::{parse_manifest, parse_manifest_full, synthetic_manifest, BatchEntry};
 
 use crate::coordinator::{lock_engine, CoordOpts, Coordinator, MatrixHandle};
 use crate::dfs::records::{encode_row, row_key, Record};
@@ -90,7 +125,7 @@ use crate::linalg::Matrix;
 use crate::mapreduce::Engine;
 use crate::runtime::SharedCompute;
 use crate::session::{
-    exec, Factorization, FactorizationRequest, MatrixWriter, Placement, Priority,
+    exec, Factorization, FactorizationRequest, MatrixWriter, Placement, Priority, SubmitOptions,
 };
 use crate::util::rng::Rng;
 use crate::workload;
@@ -101,7 +136,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Service-only knobs carried by the [`crate::session::SessionBuilder`].
 #[derive(Debug, Clone, Copy)]
@@ -114,12 +149,116 @@ pub struct ServiceConfig {
     /// Independent engine shards (≥ 1; 1 = the historical
     /// single-engine service).
     pub engine_shards: usize,
+    /// Elastic-scheduling policies (stealing, locality, quotas,
+    /// autoscaling bounds).
+    pub scheduler: SchedulerConfig,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { workers: 2, queue_capacity: 64, engine_shards: 1 }
+        ServiceConfig {
+            workers: 2,
+            queue_capacity: 64,
+            engine_shards: 1,
+            scheduler: SchedulerConfig::default(),
+        }
     }
+}
+
+/// The elastic-scheduling knob group (see the
+/// [module docs](self#elastic-scheduling)): work stealing, chained-job
+/// locality, per-label admission quotas, and worker-process
+/// autoscaling bounds, configured in one place on
+/// [`crate::session::SessionBuilder::scheduler`] and shipped verbatim
+/// in the wire-v5 config handshake. Every policy defaults *off*, which
+/// is bit-for-bit the pre-elastic scheduler; none of them ever changes
+/// numerical results — stealing, locality, quotas and scaling are pure
+/// scheduling.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchedulerConfig {
+    /// Let idle shard workers steal queued jobs from other shards'
+    /// queues (never running jobs; `service_workers(0)` manual drain
+    /// never steals).
+    pub steal: bool,
+    /// Make `Placement::Auto` prefer a shard already holding the job's
+    /// input matrix over a least-loaded shard that would need a
+    /// staging copy.
+    pub locality: bool,
+    /// Per-[`SubmitOptions::label`] cap on in-flight jobs; excess
+    /// submissions park at the admission gate in `sched_key` order.
+    /// `None` = no admission control.
+    pub quota_per_label: Option<usize>,
+    /// Lower bound of live worker processes under autoscaling (clamped
+    /// to ≥ 1; meaningful only with `worker_processes`).
+    pub autoscale_min: usize,
+    /// Upper bound of live worker processes; `0` disables autoscaling
+    /// (the default).
+    pub autoscale_max: usize,
+    /// How often the autoscaler samples queue depth.
+    pub autoscale_interval: Duration,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            steal: false,
+            locality: false,
+            quota_per_label: None,
+            autoscale_min: 1,
+            autoscale_max: 0,
+            autoscale_interval: Duration::from_millis(250),
+        }
+    }
+}
+
+impl SchedulerConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enable/disable queue-level work stealing.
+    pub fn steal(mut self, on: bool) -> Self {
+        self.steal = on;
+        self
+    }
+
+    /// Enable/disable input-locality preference for `Placement::Auto`.
+    pub fn locality(mut self, on: bool) -> Self {
+        self.locality = on;
+        self
+    }
+
+    /// Cap in-flight jobs per label (admission control).
+    pub fn quota_per_label(mut self, quota: usize) -> Self {
+        self.quota_per_label = Some(quota);
+        self
+    }
+
+    /// Autoscale worker processes between `min` and `max` live procs.
+    pub fn autoscale(mut self, min: usize, max: usize) -> Self {
+        self.autoscale_min = min;
+        self.autoscale_max = max;
+        self
+    }
+
+    /// Override the autoscaler's sampling interval.
+    pub fn autoscale_interval(mut self, interval: Duration) -> Self {
+        self.autoscale_interval = interval;
+        self
+    }
+}
+
+/// Cumulative elastic-scheduling counters reported by
+/// [`TsqrService::sched_tally`] (and aggregated across worker
+/// processes/hosts by the L6/L7 transports).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SchedTally {
+    /// Jobs each shard executed after stealing them from another
+    /// shard's queue (indexed by the *executing* shard).
+    pub per_shard_steals: Vec<u64>,
+    /// `(label, count)` of submissions that parked at the admission
+    /// gate, sorted by label.
+    pub admission_held: Vec<(String, u64)>,
 }
 
 /// Identifier of one submitted job; also names its DFS namespace
@@ -386,6 +525,17 @@ struct QueuedJob {
     /// only ever delay a job behind work that was enqueued before it.
     deps: Vec<(JobId, Arc<JobShared>)>,
     shared: Arc<JobShared>,
+    /// The request's tenant label (admission-quota key).
+    label: Option<String>,
+    /// [`SubmitOptions::no_steal`]: never migrate off the routed shard.
+    no_steal: bool,
+    /// Whether this job holds one unit of its label's admission quota
+    /// ([`ServiceInner::settle_admission`] releases it exactly once at
+    /// the terminal transition).
+    quota_counted: bool,
+    /// Set when a thief shard stole this job off its routed queue
+    /// (stamped into [`crate::mapreduce::JobStats::stolen`]).
+    stolen: bool,
 }
 
 /// Readiness of a queued job's dependency edges.
@@ -433,6 +583,9 @@ struct Shard {
     space: Condvar,
     /// Queued + running jobs — the router's load metric.
     load: AtomicUsize,
+    /// Jobs this shard executed after stealing them from another
+    /// shard's queue.
+    steals: AtomicU64,
 }
 
 struct ServiceInner {
@@ -457,6 +610,25 @@ struct ServiceInner {
     /// ingestion reaches a terminal state (eagerly on completion,
     /// lazily at the next lookup).
     ingests: Mutex<HashMap<String, (JobId, Arc<JobShared>)>>,
+    /// Elastic-scheduling policies (fixed at construction).
+    scheduler: SchedulerConfig,
+    /// Admission-control state (only consulted when
+    /// `scheduler.quota_per_label` is set).
+    admission: Mutex<Admission>,
+}
+
+/// Per-label fair-share admission state: in-flight counts and the gate
+/// where over-quota submissions park.
+#[derive(Default)]
+struct Admission {
+    /// label → jobs currently holding a quota unit (admitted, not yet
+    /// terminal).
+    inflight: HashMap<String, usize>,
+    /// Parked submissions: `(routed shard, job)`. Admitted in
+    /// [`ServiceInner::sched_key`] order as quota frees up.
+    held: Vec<(usize, QueuedJob)>,
+    /// Cumulative per-label count of submissions that parked here.
+    held_total: HashMap<String, u64>,
 }
 
 impl ServiceInner {
@@ -473,24 +645,97 @@ impl ServiceInner {
         (std::cmp::Reverse(priority), id)
     }
 
+    /// Position + key of the job [`ServiceInner::sched_key`] orders
+    /// first among those passing `eligible`. This is the **one** scan
+    /// every consumer of the queue order uses — worker pop
+    /// ([`ServiceInner::pop_best`]), the cross-shard manual drain
+    /// ([`TsqrService::drain_one`]), steal victim selection
+    /// ([`ServiceInner::steal_best`]), and admission
+    /// ([`ServiceInner::settle_admission`]) — so the four orders can
+    /// never desynchronize.
+    fn best_pos(
+        jobs: &VecDeque<QueuedJob>,
+        eligible: impl Fn(&QueuedJob) -> bool,
+    ) -> Option<(usize, (std::cmp::Reverse<Priority>, JobId))> {
+        jobs.iter()
+            .enumerate()
+            .filter(|(_, job)| eligible(job))
+            .map(|(i, job)| (i, Self::sched_key(job.priority, job.id)))
+            .min_by_key(|&(_, key)| key)
+    }
+
     /// Pop the job [`ServiceInner::sched_key`] orders first among the
     /// *runnable* ones — jobs whose dependencies are still queued or
     /// running stay put (dependency-aware drain; broken-dependency
     /// jobs are popped so [`ServiceInner::execute_job`] can fail them
     /// fast with a precise error).
     fn pop_best(jobs: &mut VecDeque<QueuedJob>) -> Option<QueuedJob> {
-        let best = jobs
-            .iter()
-            .enumerate()
-            .filter(|(_, job)| !matches!(dep_state(&job.deps), DepState::Waiting))
-            .min_by_key(|(_, job)| Self::sched_key(job.priority, job.id))
-            .map(|(i, _)| i);
-        best.and_then(|i| jobs.remove(i))
+        Self::best_pos(jobs, |job| !matches!(dep_state(&job.deps), DepState::Waiting))
+            .and_then(|(i, _)| jobs.remove(i))
+    }
+
+    /// Whether a queued job may migrate to another shard's worker:
+    /// only factorizations (an ingestion writes its *home* shard), only
+    /// jobs that did not opt out, and only dependency-ready ones (a
+    /// broken-dep job stays for its own shard's fast-fail path).
+    fn stealable(job: &QueuedJob) -> bool {
+        matches!(job.work, JobWork::Factorize { .. })
+            && !job.no_steal
+            && matches!(dep_state(&job.deps), DepState::Ready)
+    }
+
+    /// Steal the globally best stealable queued job for idle shard
+    /// `thief`: scan every other queue for the candidate
+    /// [`ServiceInner::sched_key`] orders first (locks are taken one
+    /// shard at a time), then re-lock the winner's queue and remove it
+    /// — it may have been popped or drained meanwhile, in which case
+    /// the steal simply fails and the caller rescans. The stolen job's
+    /// input is re-staged onto the thief (O(1) reference-counted copy)
+    /// and its placement record moves, so `shard_of`/`stats.shard`
+    /// report where it actually ran.
+    fn steal_best(&self, thief: usize) -> Option<QueuedJob> {
+        let mut best: Option<(usize, JobId, (std::cmp::Reverse<Priority>, JobId))> = None;
+        for k in 0..self.shards.len() {
+            if k == thief {
+                continue;
+            }
+            let q = self.lock_queue(k);
+            if let Some((pos, key)) = Self::best_pos(&q.jobs, Self::stealable) {
+                let id = q.jobs[pos].id;
+                let better = match best {
+                    None => true,
+                    Some((_, _, best_key)) => key < best_key,
+                };
+                if better {
+                    best = Some((k, id, key));
+                }
+            }
+        }
+        let (victim, id, _) = best?;
+        let mut job = {
+            let mut q = self.lock_queue(victim);
+            let pos = q.jobs.iter().position(|j| j.id == id && Self::stealable(j))?;
+            q.jobs.remove(pos)?
+        };
+        self.shards[victim].load.fetch_sub(1, Ordering::Relaxed);
+        self.shards[victim].space.notify_one();
+        self.shards[thief].load.fetch_add(1, Ordering::Relaxed);
+        if let JobWork::Factorize { input, .. } = &job.work {
+            self.stage_input(thief, &input.file);
+        }
+        self.placements.lock().expect("placements").insert(id.0, thief);
+        self.shards[thief].steals.fetch_add(1, Ordering::Relaxed);
+        job.stolen = true;
+        Some(job)
     }
 
     /// Pick the shard for a job: an explicit pin (validated), or the
-    /// least-loaded shard with a deterministic job-id tie-break.
-    fn route(&self, id: JobId, placement: Placement) -> Result<usize> {
+    /// least-loaded shard with a deterministic job-id tie-break. With
+    /// [`SchedulerConfig::locality`] on, Auto placement first narrows
+    /// to the shards already holding `input` (chained jobs land next
+    /// to the Q they read, copy-free) and falls back to the full pool
+    /// when none does.
+    fn route(&self, id: JobId, placement: Placement, input: &str) -> Result<usize> {
         match placement {
             Placement::Pinned(k) => {
                 if k >= self.shards.len() {
@@ -502,14 +747,28 @@ impl ServiceInner {
                 Ok(k)
             }
             Placement::Auto => {
-                let loads: Vec<usize> =
-                    self.shards.iter().map(|s| s.load.load(Ordering::Relaxed)).collect();
-                let min = *loads.iter().min().expect("at least one shard");
-                let tied: Vec<usize> = loads
+                let candidates: Vec<usize> = if self.scheduler.locality {
+                    let holders: Vec<usize> = (0..self.shards.len())
+                        .filter(|&k| lock_engine(&self.shards[k].engine).dfs.exists(input))
+                        .collect();
+                    if holders.is_empty() {
+                        (0..self.shards.len()).collect()
+                    } else {
+                        holders
+                    }
+                } else {
+                    (0..self.shards.len()).collect()
+                };
+                let loads: Vec<usize> = candidates
                     .iter()
-                    .enumerate()
+                    .map(|&k| self.shards[k].load.load(Ordering::Relaxed))
+                    .collect();
+                let min = *loads.iter().min().expect("at least one shard");
+                let tied: Vec<usize> = candidates
+                    .iter()
+                    .zip(&loads)
                     .filter(|&(_, &l)| l == min)
-                    .map(|(i, _)| i)
+                    .map(|(&k, _)| k)
                     .collect();
                 Ok(tied[(id.0 as usize) % tied.len()])
             }
@@ -577,6 +836,7 @@ impl ServiceInner {
             job.shared.done.notify_all();
             shard.load.fetch_sub(1, Ordering::Relaxed);
             self.retire_ingest_registration(&job);
+            self.settle_admission(&job);
             self.wake_all_shards();
             return false;
         }
@@ -586,6 +846,7 @@ impl ServiceInner {
                 drop(slot);
                 shard.load.fetch_sub(1, Ordering::Relaxed);
                 self.retire_ingest_registration(&job);
+                self.settle_admission(&job);
                 self.wake_all_shards();
                 return false;
             }
@@ -599,6 +860,7 @@ impl ServiceInner {
         let slot_value = match outcome {
             Ok(Ok(WorkOutput::Fact(mut fact))) => {
                 fact.stats.shard = shard_idx;
+                fact.stats.stolen = job.stolen;
                 JobSlot::Done { fact: Arc::new(fact), wall_secs }
             }
             Ok(Ok(WorkOutput::Ingested(handle))) => JobSlot::Ingested { handle, wall_secs },
@@ -609,8 +871,101 @@ impl ServiceInner {
         job.shared.done.notify_all();
         shard.load.fetch_sub(1, Ordering::Relaxed);
         self.retire_ingest_registration(&job);
+        self.settle_admission(&job);
         self.wake_all_shards();
         true
+    }
+
+    /// Give back one admission-quota unit taken by a submission that
+    /// failed before enqueue (shutdown or capacity races).
+    fn release_quota(&self, label: &str) {
+        let mut adm = self.admission.lock().expect("admission");
+        if let Some(n) = adm.inflight.get_mut(label) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                adm.inflight.remove(label);
+            }
+        }
+    }
+
+    /// Release the terminal job's admission-quota unit (if it held
+    /// one) and admit the best held submission(s) whose label now has
+    /// headroom, in [`ServiceInner::sched_key`] order. Cancelled holds
+    /// are discarded. Admitted jobs enter their routed shard's queue
+    /// past its capacity bound — the gate already delayed them once.
+    fn settle_admission(&self, job: &QueuedJob) {
+        if !job.quota_counted {
+            return;
+        }
+        let quota = self.scheduler.quota_per_label.unwrap_or(usize::MAX);
+        let mut adm = self.admission.lock().expect("admission");
+        if let Some(label) = job.label.as_deref() {
+            if let Some(n) = adm.inflight.get_mut(label) {
+                *n = n.saturating_sub(1);
+                if *n == 0 {
+                    adm.inflight.remove(label);
+                }
+            }
+        }
+        loop {
+            // the held list is not a VecDeque, so scan it directly with
+            // the same sched_key order best_pos encodes
+            let mut best: Option<(usize, (std::cmp::Reverse<Priority>, JobId))> = None;
+            for (i, (_, held)) in adm.held.iter().enumerate() {
+                let cancelled =
+                    matches!(*held.shared.slot.lock().expect("job slot"), JobSlot::Cancelled);
+                let label = held.label.as_deref().unwrap_or_default();
+                let over = adm.inflight.get(label).copied().unwrap_or(0) >= quota;
+                if over && !cancelled {
+                    continue;
+                }
+                let key = Self::sched_key(held.priority, held.id);
+                let better = match best {
+                    None => true,
+                    Some((_, best_key)) => key < best_key,
+                };
+                if better {
+                    best = Some((i, key));
+                }
+            }
+            let Some((i, _)) = best else { break };
+            let (shard_idx, mut held) = adm.held.remove(i);
+            if matches!(*held.shared.slot.lock().expect("job slot"), JobSlot::Cancelled) {
+                // resolved while parked: nothing to run, nothing counted
+                continue;
+            }
+            let label = held.label.clone().unwrap_or_default();
+            *adm.inflight.entry(label).or_insert(0) += 1;
+            held.quota_counted = true;
+            let admitted = {
+                let mut q = self.lock_queue(shard_idx);
+                if q.open {
+                    q.jobs.push_back(held);
+                    true
+                } else {
+                    drop(q);
+                    let mut slot = held.shared.slot.lock().expect("job slot");
+                    *slot = JobSlot::Cancelled;
+                    drop(slot);
+                    held.shared.done.notify_all();
+                    let label = held.label.as_deref().unwrap_or_default();
+                    if let Some(n) = adm.inflight.get_mut(label) {
+                        *n = n.saturating_sub(1);
+                        if *n == 0 {
+                            adm.inflight.remove(label);
+                        }
+                    }
+                    false
+                }
+            };
+            if admitted {
+                self.shards[shard_idx].load.fetch_add(1, Ordering::Relaxed);
+                self.shards[shard_idx].ready.notify_one();
+                if self.scheduler.steal {
+                    self.wake_all_shards();
+                }
+            }
+        }
     }
 
     fn run_work(&self, shard_idx: usize, job: &QueuedJob) -> Result<WorkOutput> {
@@ -729,37 +1084,66 @@ enum WorkOutput {
 /// interleave with a long upload.
 const INGEST_CHUNK_ROWS: usize = 4096;
 
+/// What one scheduling round decided for a worker thread.
+enum WorkerStep {
+    Run(QueuedJob),
+    Idle,
+    Exit,
+}
+
 fn worker_loop(inner: Arc<ServiceInner>, shard_idx: usize) {
+    let steal = inner.scheduler.steal;
     loop {
-        let job = {
+        // fast path: pop the best runnable job from our own queue
+        let step = {
             let shard = &inner.shards[shard_idx];
             let mut q = shard.queue.lock().expect("service queue");
-            loop {
-                if let Some(job) = ServiceInner::pop_best(&mut q.jobs) {
-                    break Some(job);
-                }
-                if !q.open && q.jobs.is_empty() {
-                    break None;
-                }
-                if q.jobs.is_empty() {
-                    q = shard.ready.wait(q).expect("service queue");
-                } else {
-                    // jobs exist but none is runnable: everything is
-                    // parked on a dependency. Terminal transitions ring
-                    // every shard's bell, but a dependency cancelled
-                    // through its own handle cannot — poll with a
-                    // timeout rather than sleeping forever.
-                    q = shard
-                        .ready
-                        .wait_timeout(q, std::time::Duration::from_millis(50))
-                        .expect("service queue")
-                        .0;
-                }
+            if let Some(job) = ServiceInner::pop_best(&mut q.jobs) {
+                WorkerStep::Run(job)
+            } else if !q.open && q.jobs.is_empty() {
+                WorkerStep::Exit
+            } else {
+                WorkerStep::Idle
             }
         };
-        let Some(job) = job else { return };
-        inner.shards[shard_idx].space.notify_one();
-        inner.execute_job(shard_idx, job);
+        match step {
+            WorkerStep::Run(job) => {
+                inner.shards[shard_idx].space.notify_one();
+                inner.execute_job(shard_idx, job);
+                continue;
+            }
+            WorkerStep::Exit => return,
+            WorkerStep::Idle => {}
+        }
+        // idle: with stealing on, raid the globally best victim queue
+        // before going to sleep
+        if steal {
+            if let Some(job) = inner.steal_best(shard_idx) {
+                inner.execute_job(shard_idx, job);
+                continue;
+            }
+        }
+        // nothing runnable anywhere we may touch: sleep until an
+        // enqueue (or terminal transition) rings this shard's bell
+        let shard = &inner.shards[shard_idx];
+        let q = shard.queue.lock().expect("service queue");
+        let runnable =
+            q.jobs.iter().any(|job| !matches!(dep_state(&job.deps), DepState::Waiting));
+        if runnable || (!q.open && q.jobs.is_empty()) {
+            continue; // re-enter the fast path (or exit) with fresh state
+        }
+        if steal || !q.jobs.is_empty() {
+            // with stealing, a victim-shard enqueue can race our failed
+            // steal scan; with dependency-parked jobs, a dependency
+            // cancelled through its own handle rings no bell. Both
+            // cases poll with a timeout rather than sleeping forever.
+            let _ = shard
+                .ready
+                .wait_timeout(q, Duration::from_millis(50))
+                .expect("service queue");
+        } else {
+            let _ = shard.ready.wait(q).expect("service queue");
+        }
     }
 }
 
@@ -797,6 +1181,7 @@ impl TsqrService {
                 ready: Condvar::new(),
                 space: Condvar::new(),
                 load: AtomicUsize::new(0),
+                steals: AtomicU64::new(0),
             })
             .collect();
         let inner = Arc::new(ServiceInner {
@@ -807,6 +1192,8 @@ impl TsqrService {
             capacity: cfg.queue_capacity.max(1),
             placements: Mutex::new(HashMap::new()),
             ingests: Mutex::new(HashMap::new()),
+            scheduler: cfg.scheduler,
+            admission: Mutex::new(Admission::default()),
         });
         let workers = (0..nshards)
             .flat_map(|k| (0..cfg.workers).map(move |i| (k, i)))
@@ -850,11 +1237,34 @@ impl TsqrService {
     }
 
     /// Jobs currently queued across all shards (not yet picked up by a
-    /// worker).
+    /// worker), parked admission holds included.
     pub fn pending(&self) -> usize {
         (0..self.inner.shards.len())
             .map(|k| self.inner.lock_queue(k).jobs.len())
-            .sum()
+            .sum::<usize>()
+            + self.inner.admission.lock().expect("admission").held.len()
+    }
+
+    /// Cumulative elastic-scheduling counters: per-shard steal counts
+    /// and per-label admission holds (sorted by label). All zeros /
+    /// empty with the default [`SchedulerConfig`].
+    pub fn sched_tally(&self) -> SchedTally {
+        let per_shard_steals = self
+            .inner
+            .shards
+            .iter()
+            .map(|s| s.steals.load(Ordering::Relaxed))
+            .collect();
+        let adm = self.inner.admission.lock().expect("admission");
+        let mut admission_held: Vec<(String, u64)> =
+            adm.held_total.iter().map(|(l, n)| (l.clone(), *n)).collect();
+        admission_held.sort();
+        SchedTally { per_shard_steals, admission_held }
+    }
+
+    /// The scheduler policies this service was built with.
+    pub fn scheduler(&self) -> SchedulerConfig {
+        self.inner.scheduler
     }
 
     /// The shard the router assigned to `id` (`None` for unknown or
@@ -914,6 +1324,7 @@ impl TsqrService {
         self.inner.placements.lock().expect("placements").remove(&id.0);
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn enqueue(
         &self,
         shard_idx: usize,
@@ -923,14 +1334,30 @@ impl TsqrService {
         label: Option<String>,
         work: JobWork,
         deps: Vec<(JobId, Arc<JobShared>)>,
+        no_steal: bool,
+        quota_counted: bool,
     ) -> JobHandle {
         let shared = Arc::new(JobShared { slot: Mutex::new(JobSlot::Queued), done: Condvar::new() });
-        let handle = JobHandle { id, kind: work.kind(), label, shared: shared.clone() };
-        q.jobs.push_back(QueuedJob { id, priority, work, deps, shared });
+        let handle = JobHandle { id, kind: work.kind(), label: label.clone(), shared: shared.clone() };
+        q.jobs.push_back(QueuedJob {
+            id,
+            priority,
+            work,
+            deps,
+            shared,
+            label,
+            no_steal,
+            quota_counted,
+            stolen: false,
+        });
         let shard = &self.inner.shards[shard_idx];
         shard.load.fetch_add(1, Ordering::Relaxed);
         self.inner.placements.lock().expect("placements").insert(id.0, shard_idx);
         shard.ready.notify_one();
+        if self.inner.scheduler.steal {
+            // idle thieves on other shards may want this job
+            self.inner.wake_all_shards();
+        }
         handle
     }
 
@@ -971,7 +1398,7 @@ impl TsqrService {
     /// Route an already-identified job: pick its shard and stage its
     /// input there.
     fn place(&self, id: JobId, req: &FactorizationRequest, input: &MatrixHandle) -> Result<usize> {
-        let shard_idx = self.inner.route(id, req.placement)?;
+        let shard_idx = self.inner.route(id, req.options.placement, &input.file)?;
         self.inner.stage_input(shard_idx, &input.file);
         Ok(shard_idx)
     }
@@ -982,16 +1409,21 @@ impl TsqrService {
     /// buffering.
     pub fn submit(&self, input: &MatrixHandle, req: FactorizationRequest) -> Result<JobHandle> {
         let id = self.reserve_auto_id();
-        self.submit_reserved(id, input, req)
+        self.submit_gated(id, input, req, true)
     }
 
-    /// Queue a job whose id is already reserved (blocking flavor);
-    /// releases the reservation on every failure path.
-    fn submit_reserved(
+    /// The one submission path behind [`TsqrService::submit`] /
+    /// [`TsqrService::submit_with_id`] / [`TsqrService::try_submit`]:
+    /// route + stage, collect dependency edges, pass the admission
+    /// gate, then enqueue — blocking at capacity (`block`) or erroring
+    /// there. Releases the id reservation (and any admission-quota
+    /// unit taken) on every failure path.
+    fn submit_gated(
         &self,
         id: JobId,
         input: &MatrixHandle,
         req: FactorizationRequest,
+        block: bool,
     ) -> Result<JobHandle> {
         let placed = self
             .place(id, &req, input)
@@ -1003,19 +1435,80 @@ impl TsqrService {
                 return Err(err);
             }
         };
+        let (priority, label) = (req.options.priority, req.options.label.clone());
+        let no_steal = req.options.no_steal;
+        // admission gate: a labeled, non-exempt job over its label's
+        // in-flight quota parks here instead of entering a shard queue
+        // (the handle comes back immediately; the job stays `Queued`
+        // and cancellable, and enters its routed queue in sched_key
+        // order as the label's jobs retire)
+        let mut quota_counted = false;
+        if let (Some(quota), Some(lbl)) = (self.inner.scheduler.quota_per_label, label.clone()) {
+            if !req.options.quota_exempt {
+                let mut adm = self.inner.admission.lock().expect("admission");
+                if adm.inflight.get(&lbl).copied().unwrap_or(0) >= quota {
+                    let shared = Arc::new(JobShared {
+                        slot: Mutex::new(JobSlot::Queued),
+                        done: Condvar::new(),
+                    });
+                    let handle = JobHandle {
+                        id,
+                        kind: JobKind::Factorize,
+                        label: label.clone(),
+                        shared: shared.clone(),
+                    };
+                    let work = JobWork::Factorize { input: input.clone(), req };
+                    adm.held.push((
+                        shard_idx,
+                        QueuedJob {
+                            id,
+                            priority,
+                            work,
+                            deps,
+                            shared,
+                            label,
+                            no_steal,
+                            quota_counted: false,
+                            stolen: false,
+                        },
+                    ));
+                    *adm.held_total.entry(lbl).or_insert(0) += 1;
+                    self.inner.placements.lock().expect("placements").insert(id.0, shard_idx);
+                    return Ok(handle);
+                }
+                *adm.inflight.entry(lbl).or_insert(0) += 1;
+                quota_counted = true;
+            }
+        }
         let shard = &self.inner.shards[shard_idx];
         let mut q = self.inner.lock_queue(shard_idx);
-        while q.open && q.jobs.len() >= self.inner.capacity {
-            q = shard.space.wait(q).expect("service queue");
+        if block {
+            while q.open && q.jobs.len() >= self.inner.capacity {
+                q = shard.space.wait(q).expect("service queue");
+            }
         }
         if !q.open {
             drop(q);
             self.unreserve(id);
+            if quota_counted {
+                self.inner.release_quota(label.as_deref().unwrap_or_default());
+            }
             bail!("job service is shut down");
         }
-        let (priority, label) = (req.priority, req.label.clone());
+        if q.jobs.len() >= self.inner.capacity {
+            // only reachable in the non-blocking flavor
+            drop(q);
+            self.unreserve(id);
+            if quota_counted {
+                self.inner.release_quota(label.as_deref().unwrap_or_default());
+            }
+            bail!(
+                "shard {shard_idx} job queue at capacity ({} queued) — wait for a worker or use submit()",
+                self.inner.capacity
+            );
+        }
         let work = JobWork::Factorize { input: input.clone(), req };
-        Ok(self.enqueue(shard_idx, &mut q, id, priority, label, work, deps))
+        Ok(self.enqueue(shard_idx, &mut q, id, priority, label, work, deps, no_steal, quota_counted))
     }
 
     /// [`TsqrService::submit`] under a *caller-assigned* job id (it
@@ -1033,40 +1526,14 @@ impl TsqrService {
         req: FactorizationRequest,
     ) -> Result<JobHandle> {
         self.reserve_explicit_id(id)?;
-        self.submit_reserved(id, input, req)
+        self.submit_gated(id, input, req, true)
     }
 
     /// Non-blocking [`TsqrService::submit`]: errors instead of waiting
     /// when the routed shard's queue is at capacity.
     pub fn try_submit(&self, input: &MatrixHandle, req: FactorizationRequest) -> Result<JobHandle> {
         let id = self.reserve_auto_id();
-        let placed = self
-            .place(id, &req, input)
-            .and_then(|shard_idx| Ok((shard_idx, self.ingest_dep(&input.file)?)));
-        let (shard_idx, deps) = match placed {
-            Ok(placed) => placed,
-            Err(err) => {
-                self.unreserve(id);
-                return Err(err);
-            }
-        };
-        let mut q = self.inner.lock_queue(shard_idx);
-        if !q.open {
-            drop(q);
-            self.unreserve(id);
-            bail!("job service is shut down");
-        }
-        if q.jobs.len() >= self.inner.capacity {
-            drop(q);
-            self.unreserve(id);
-            bail!(
-                "shard {shard_idx} job queue at capacity ({} queued) — wait for a worker or use submit()",
-                self.inner.capacity
-            );
-        }
-        let (priority, label) = (req.priority, req.label.clone());
-        let work = JobWork::Factorize { input: input.clone(), req };
-        Ok(self.enqueue(shard_idx, &mut q, id, priority, label, work, deps))
+        self.submit_gated(id, input, req, false)
     }
 
     // ---------------------------------------------------- manual drain
@@ -1103,9 +1570,13 @@ impl TsqrService {
                                 })
                                 .map(|(_, shared)| shared.clone());
                         }
-                        continue;
                     }
-                    let key = ServiceInner::sched_key(job.priority, job.id);
+                }
+                // same scan the worker pop and steal victim selection
+                // use — one comparator, three consumers
+                if let Some((_pos, key)) = ServiceInner::best_pos(&q.jobs, |job| {
+                    !matches!(dep_state(&job.deps), DepState::Waiting)
+                }) {
                     let better = match best {
                         None => true,
                         Some((_, best_key)) => key < best_key,
@@ -1396,7 +1867,9 @@ impl TsqrService {
         }
         let work = JobWork::Ingest { name: name.to_string(), cols, recipe };
         let label = Some(format!("ingest:{name}"));
-        let job = self.enqueue(home, &mut q, id, Priority::Normal, label, work, deps);
+        // ingestions write their home shard: never stolen (enforced by
+        // kind in `stealable` too) and never quota-gated
+        let job = self.enqueue(home, &mut q, id, Priority::Normal, label, work, deps, true, false);
         // register while still holding the queue lock: popping the job
         // needs this lock, so no submit() can observe the queued
         // ingestion without also seeing its registry entry
@@ -1516,6 +1989,20 @@ impl TsqrService {
                 job.shared.done.notify_all();
             }
         }
+        // submissions parked at the admission gate never reached a
+        // shard queue — resolve them the same way
+        let held: Vec<(usize, QueuedJob)> = {
+            let mut adm = self.inner.admission.lock().expect("admission");
+            adm.held.drain(..).collect()
+        };
+        for (_, job) in held {
+            let mut slot = job.shared.slot.lock().expect("job slot");
+            if matches!(*slot, JobSlot::Queued) {
+                *slot = JobSlot::Cancelled;
+            }
+            drop(slot);
+            job.shared.done.notify_all();
+        }
     }
 }
 
@@ -1555,7 +2042,9 @@ mod tests {
     fn submit_drain_wait_round_trip() {
         let svc = manual_service();
         let h = svc.ingest_gaussian("A", 300, 5, 1).unwrap();
-        let job = svc.submit(&h, FactorizationRequest::qr().labeled("smoke")).unwrap();
+        let job = svc
+            .submit(&h, FactorizationRequest::qr().options(SubmitOptions::new().label("smoke")))
+            .unwrap();
         assert_eq!(job.status(), JobStatus::Queued);
         assert_eq!(job.label(), Some("smoke"));
         assert!(job.try_result().is_none());
@@ -1579,12 +2068,19 @@ mod tests {
         let svc = manual_service();
         let h = svc.ingest_gaussian("A", 60, 3, 2).unwrap();
         let lo = svc
-            .submit(&h, FactorizationRequest::r_only().with_priority(Priority::Low))
+            .submit(
+                &h,
+                FactorizationRequest::r_only().options(SubmitOptions::new().priority(Priority::Low)),
+            )
             .unwrap();
         let n1 = svc.submit(&h, FactorizationRequest::r_only()).unwrap();
         let n2 = svc.submit(&h, FactorizationRequest::r_only()).unwrap();
         let hi = svc
-            .submit(&h, FactorizationRequest::r_only().with_priority(Priority::High))
+            .submit(
+                &h,
+                FactorizationRequest::r_only()
+                    .options(SubmitOptions::new().priority(Priority::High)),
+            )
             .unwrap();
         let order: Vec<JobId> = std::iter::from_fn(|| svc.drain_one()).collect();
         assert_eq!(order, vec![hi.id(), n1.id(), n2.id(), lo.id()]);
@@ -1598,11 +2094,21 @@ mod tests {
         let svc = manual_sharded(2);
         let h = svc.ingest_gaussian("A", 60, 3, 2).unwrap();
         let lo = svc
-            .submit(&h, FactorizationRequest::r_only().pinned(0).with_priority(Priority::Low))
+            .submit(
+                &h,
+                FactorizationRequest::r_only()
+                    .options(SubmitOptions::new().pinned(0).priority(Priority::Low)),
+            )
             .unwrap();
-        let n = svc.submit(&h, FactorizationRequest::r_only().pinned(0)).unwrap();
+        let n = svc
+            .submit(&h, FactorizationRequest::r_only().options(SubmitOptions::new().pinned(0)))
+            .unwrap();
         let hi = svc
-            .submit(&h, FactorizationRequest::r_only().pinned(1).with_priority(Priority::High))
+            .submit(
+                &h,
+                FactorizationRequest::r_only()
+                    .options(SubmitOptions::new().pinned(1).priority(Priority::High)),
+            )
             .unwrap();
         let order: Vec<JobId> = std::iter::from_fn(|| svc.drain_one()).collect();
         assert_eq!(order, vec![hi.id(), n.id(), lo.id()]);
@@ -1644,10 +2150,14 @@ mod tests {
     fn pinned_placement_is_validated_at_submission() {
         let svc = manual_service();
         let h = svc.ingest_gaussian("A", 60, 3, 5).unwrap();
-        let err = svc.submit(&h, FactorizationRequest::r_only().pinned(1)).unwrap_err();
+        let err = svc
+            .submit(&h, FactorizationRequest::r_only().options(SubmitOptions::new().pinned(1)))
+            .unwrap_err();
         assert!(err.to_string().contains("shard"), "{err}");
         // in-range pin on the only shard is fine
-        let job = svc.submit(&h, FactorizationRequest::r_only().pinned(0)).unwrap();
+        let job = svc
+            .submit(&h, FactorizationRequest::r_only().options(SubmitOptions::new().pinned(0)))
+            .unwrap();
         svc.drain_now();
         assert!(job.wait().is_ok());
     }
@@ -1677,7 +2187,9 @@ mod tests {
     fn sharded_namespaces_nest_under_the_shard_prefix() {
         let svc = manual_sharded(2);
         let h = svc.ingest_gaussian("A", 200, 4, 7).unwrap();
-        let job = svc.submit(&h, FactorizationRequest::qr().pinned(1)).unwrap();
+        let job = svc
+            .submit(&h, FactorizationRequest::qr().options(SubmitOptions::new().pinned(1)))
+            .unwrap();
         svc.drain_now();
         let fact = job.wait().unwrap();
         let qf = &fact.q.as_ref().unwrap().file;
@@ -1704,7 +2216,9 @@ mod tests {
         let sharded = manual_sharded(2);
         let h = sharded.ingest_gaussian("B", 60, 3, 9).unwrap();
         sharded.set_scale("B", 250.0);
-        let job = sharded.submit(&h, FactorizationRequest::r_only().pinned(1)).unwrap();
+        let job = sharded
+            .submit(&h, FactorizationRequest::r_only().options(SubmitOptions::new().pinned(1)))
+            .unwrap();
         sharded.drain_now();
         job.wait().unwrap();
         assert_eq!(sharded.with_dfs_on(1, |d| d.scale("B")).unwrap(), 250.0);
@@ -1721,7 +2235,9 @@ mod tests {
             .unwrap();
         assert!(!svc.with_dfs(|d| d.exists("A")), "pinned ingest must skip shard 0");
         assert!(svc.with_dfs_on(1, |d| d.exists("A")).unwrap());
-        let job = svc.submit(&h, FactorizationRequest::qr().pinned(1)).unwrap();
+        let job = svc
+            .submit(&h, FactorizationRequest::qr().options(SubmitOptions::new().pinned(1)))
+            .unwrap();
         svc.drain_now();
         let fact = job.wait().unwrap();
         assert_eq!(fact.stats.shard, 1);
@@ -1735,7 +2251,9 @@ mod tests {
         // the result is readable (get_matrix scans all shards)
         assert!(svc.get_matrix(fact.q.as_ref().unwrap()).is_ok());
         // a job routed *elsewhere* still works — staged from shard 1
-        let j2 = svc.submit(&h, FactorizationRequest::r_only().pinned(2)).unwrap();
+        let j2 = svc
+            .submit(&h, FactorizationRequest::r_only().options(SubmitOptions::new().pinned(2)))
+            .unwrap();
         svc.drain_now();
         j2.wait().unwrap();
         assert!(svc.with_dfs_on(2, |d| d.exists("A")).unwrap(), "cross-shard staging still works");
@@ -1845,10 +2363,88 @@ mod tests {
         assert!(poisoned.is_err());
         assert!(svc.inner.shards[1].engine.lock().is_err(), "shard 1 should be poisoned");
         for k in 0..2 {
-            let job = svc.submit(&h, FactorizationRequest::qr().pinned(k)).unwrap();
+            let job = svc
+                .submit(&h, FactorizationRequest::qr().options(SubmitOptions::new().pinned(k)))
+                .unwrap();
             svc.drain_now();
             let fact = job.wait().unwrap_or_else(|e| panic!("shard {k} wedged: {e:#}"));
             assert_eq!(fact.stats.shard, k);
         }
+    }
+
+    /// A synthetic queued factorization for order-property tests (the
+    /// work is never executed).
+    fn synthetic_job(id: u64, priority: Priority) -> QueuedJob {
+        QueuedJob {
+            id: JobId(id),
+            priority,
+            work: JobWork::Factorize {
+                input: MatrixHandle::new("A", 10, 2),
+                req: FactorizationRequest::r_only(),
+            },
+            deps: Vec::new(),
+            shared: Arc::new(JobShared { slot: Mutex::new(JobSlot::Queued), done: Condvar::new() }),
+            label: None,
+            no_steal: false,
+            quota_counted: false,
+            stolen: false,
+        }
+    }
+
+    /// The skew-hazard audit (PR 9 satellite): over random queues, the
+    /// shared `best_pos` scan — the one order behind the worker pop,
+    /// the manual drain, *and* steal victim selection — must replay a
+    /// full sort by `sched_key` exactly, and the steal-eligibility
+    /// filter must agree with the runnable filter on dep-free queues.
+    #[test]
+    fn sched_key_scan_matches_full_sort_on_random_queues() {
+        let mut rng = Rng::new(0xE1A5);
+        for round in 0..100 {
+            let n = 1 + rng.below(12) as usize;
+            let mut jobs: VecDeque<QueuedJob> = VecDeque::new();
+            let mut used = std::collections::HashSet::new();
+            for _ in 0..n {
+                let mut id = rng.below(64);
+                while !used.insert(id) {
+                    id = rng.below(64);
+                }
+                let priority = match rng.below(3) {
+                    0 => Priority::Low,
+                    1 => Priority::Normal,
+                    _ => Priority::High,
+                };
+                jobs.push_back(synthetic_job(id, priority));
+            }
+            let mut expect: Vec<(std::cmp::Reverse<Priority>, JobId)> =
+                jobs.iter().map(|j| ServiceInner::sched_key(j.priority, j.id)).collect();
+            expect.sort();
+            // steal victim selection and runnable pop agree on the head
+            let steal_head = ServiceInner::best_pos(&jobs, ServiceInner::stealable);
+            let pop_head = ServiceInner::best_pos(&jobs, |job| {
+                !matches!(dep_state(&job.deps), DepState::Waiting)
+            });
+            assert_eq!(steal_head, pop_head, "round {round}");
+            // repeated pops replay the sorted order exactly
+            let mut popped = Vec::new();
+            while let Some(job) = ServiceInner::pop_best(&mut jobs) {
+                popped.push(ServiceInner::sched_key(job.priority, job.id));
+            }
+            assert_eq!(popped, expect, "round {round}");
+        }
+    }
+
+    /// A `no_steal` job is invisible to victim selection while an
+    /// ordinary one right behind it is taken.
+    #[test]
+    fn no_steal_jobs_are_not_victim_candidates() {
+        let mut jobs: VecDeque<QueuedJob> = VecDeque::new();
+        let mut first = synthetic_job(0, Priority::High);
+        first.no_steal = true;
+        jobs.push_back(first);
+        jobs.push_back(synthetic_job(1, Priority::Normal));
+        let (pos, _) = ServiceInner::best_pos(&jobs, ServiceInner::stealable).unwrap();
+        assert_eq!(jobs[pos].id, JobId(1), "the opted-out High job must be skipped");
+        jobs[1].no_steal = true;
+        assert!(ServiceInner::best_pos(&jobs, ServiceInner::stealable).is_none());
     }
 }

@@ -10,7 +10,7 @@ use crate::coordinator::CoordOpts;
 use crate::dfs::DiskModel;
 use crate::mapreduce::{ClusterConfig, Engine, FaultPolicy};
 use crate::runtime::{NativeRuntime, SharedCompute};
-use crate::service::{ServiceConfig, TsqrService};
+use crate::service::{SchedulerConfig, ServiceConfig, TsqrService};
 use anyhow::{ensure, Result};
 use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
@@ -183,6 +183,7 @@ impl SessionBuilder {
                 workers: cfg.service_workers,
                 queue_capacity: cfg.queue_capacity.max(1),
                 engine_shards: cfg.engine_shards.max(1),
+                scheduler: cfg.scheduler,
             },
             worker_procs: 0,
             worker_binary: None,
@@ -343,6 +344,21 @@ impl SessionBuilder {
     /// [`SessionBuilder::build`].
     pub fn engine_shards(mut self, n: usize) -> Self {
         self.service.engine_shards = n.max(1);
+        self
+    }
+
+    /// Elastic-scheduling policy of a [`TsqrService`] / [`TsqrClient`]
+    /// built from this builder — the one knob group for work stealing,
+    /// chained-job locality, per-label admission quotas, and worker
+    /// autoscaling (see [`SchedulerConfig`]). Default:
+    /// [`SchedulerConfig::default`], everything off — exactly the
+    /// pre-elastic service. Every policy here is *pure scheduling*:
+    /// results, `virtual_secs`, fault draws, and result digests are
+    /// bit-identical at every setting (`rust/tests/steal.rs`). Shipped
+    /// to worker processes and remote hosts in the config handshake.
+    /// Ignored by [`SessionBuilder::build`].
+    pub fn scheduler(mut self, scheduler: SchedulerConfig) -> Self {
+        self.service.scheduler = scheduler;
         self
     }
 
@@ -510,6 +526,7 @@ impl SessionBuilder {
                 engine_shards: self.service.engine_shards.max(1),
                 service_workers: self.service.workers,
                 queue_capacity: self.service.queue_capacity.max(1),
+                scheduler: self.service.scheduler,
             };
             let mut net = self.net;
             if let Some(timeout) = self.request_timeout {
@@ -536,6 +553,7 @@ impl SessionBuilder {
             engine_shards: self.service.engine_shards.max(1),
             service_workers: self.service.workers,
             queue_capacity: self.service.queue_capacity.max(1),
+            scheduler: self.service.scheduler,
         };
         let program = match self.worker_binary {
             Some(path) => path,
@@ -647,6 +665,25 @@ mod tests {
         assert_eq!(svc.backend_desc(), "native");
         assert_eq!(svc.pending(), 0);
         assert_eq!(svc.shards(), 1, "default is the single-engine service");
+    }
+
+    #[test]
+    fn scheduler_knob_reaches_the_service() {
+        let sched = SchedulerConfig::new().steal(true).locality(true).quota_per_label(2);
+        let svc = TsqrSession::builder()
+            .backend(Backend::Native)
+            .service_workers(0)
+            .scheduler(sched)
+            .build_service()
+            .unwrap();
+        assert_eq!(svc.scheduler(), sched);
+        // the default is everything-off — the pre-elastic service
+        let svc = TsqrSession::builder()
+            .backend(Backend::Native)
+            .service_workers(0)
+            .build_service()
+            .unwrap();
+        assert_eq!(svc.scheduler(), SchedulerConfig::default());
     }
 
     #[test]

@@ -53,7 +53,8 @@ mod select;
 pub use builder::{Backend, SessionBuilder};
 pub use ingest::{MatrixWriter, StreamingWriter};
 pub use request::{
-    AlgoChoice, FactorizationRequest, Placement, Priority, Want, DEFAULT_CONDITION_THRESHOLD,
+    AlgoChoice, FactorizationRequest, Placement, Priority, SubmitOptions, Want,
+    DEFAULT_CONDITION_THRESHOLD,
 };
 pub use select::{estimate_condition, AutoDecision};
 

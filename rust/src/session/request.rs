@@ -83,12 +83,106 @@ pub enum Placement {
     Pinned(usize),
 }
 
+/// Submit-time scheduling options, consolidated in one struct: how a
+/// job service queues, places, and (since the elastic scheduler) steals
+/// or admission-controls the request. Sessions (inline execution)
+/// ignore all of it. Build fluently and attach with
+/// [`FactorizationRequest::options`]:
+///
+/// ```
+/// use mrtsqr::session::{FactorizationRequest, Priority, SubmitOptions};
+///
+/// let req = FactorizationRequest::qr()
+///     .options(SubmitOptions::new().priority(Priority::High).label("t1").pinned(2).no_steal());
+/// assert_eq!(req.options.priority, Priority::High);
+/// ```
+///
+/// None of these knobs ever changes numerical results: priority,
+/// placement, stealing and admission are pure scheduling, and every
+/// modelled metric (R/Q/Σ bits, `virtual_secs`, fault draws) is
+/// identical at any setting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitOptions {
+    /// Queue priority on a job service.
+    pub priority: Priority,
+    /// Human-readable tenant tag carried through the job service into
+    /// per-job reporting (`mrtsqr batch` prints it) and used as the
+    /// admission-quota key when the scheduler enforces per-label
+    /// fair-share.
+    pub label: Option<String>,
+    /// Engine-shard placement on a job service.
+    pub placement: Placement,
+    /// Opt this job out of queue-level work stealing: it only ever runs
+    /// on the shard the router (or a pin) placed it on.
+    pub no_steal: bool,
+    /// Opt this job out of per-label admission quotas (it still counts
+    /// toward its label's in-flight total for *other* jobs).
+    pub quota_exempt: bool,
+}
+
+impl Default for SubmitOptions {
+    fn default() -> Self {
+        SubmitOptions {
+            priority: Priority::Normal,
+            label: None,
+            placement: Placement::Auto,
+            no_steal: false,
+            quota_exempt: false,
+        }
+    }
+}
+
+impl SubmitOptions {
+    /// Default options: `Normal` priority, no label, `Auto` placement,
+    /// stealing and quotas both applicable.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue priority when submitted to a job service.
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Tag the request for per-job reporting and admission quotas.
+    pub fn label(mut self, label: impl Into<String>) -> Self {
+        self.label = Some(label.into());
+        self
+    }
+
+    /// Set the engine-shard placement explicitly.
+    pub fn placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    /// Pin the job to engine shard `k` of a sharded service (see
+    /// [`Placement`]).
+    pub fn pinned(mut self, shard: usize) -> Self {
+        self.placement = Placement::Pinned(shard);
+        self
+    }
+
+    /// Opt the job out of queue-level work stealing.
+    pub fn no_steal(mut self) -> Self {
+        self.no_steal = true;
+        self
+    }
+
+    /// Opt the job out of per-label admission quotas.
+    pub fn quota_exempt(mut self) -> Self {
+        self.quota_exempt = true;
+        self
+    }
+}
+
 /// A factorization request; every knob in one place.
 ///
 /// `refine` applies one sweep of iterative refinement (paper §II-C)
 /// when `Auto` picks an indirect method; `Fixed` algorithms carry their
-/// own `refine` flag and ignore this field. `priority`, `label` and
-/// `placement` only matter when the request is submitted to a job
+/// own `refine` flag and ignore this field. The [`SubmitOptions`] in
+/// `options` only matter when the request is submitted to a job
 /// service.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FactorizationRequest {
@@ -97,13 +191,9 @@ pub struct FactorizationRequest {
     pub refine: bool,
     /// κ₂ threshold for the `Auto` policy.
     pub condition_threshold: f64,
-    /// Queue priority on a job service (sessions ignore it).
-    pub priority: Priority,
-    /// Human-readable tag carried through the job service into per-job
-    /// reporting (`mrtsqr batch` prints it).
-    pub label: Option<String>,
-    /// Engine-shard placement on a job service (sessions ignore it).
-    pub placement: Placement,
+    /// Submit-time scheduling options (priority, label, placement,
+    /// steal/quota opt-outs). Sessions ignore them.
+    pub options: SubmitOptions,
 }
 
 impl Default for FactorizationRequest {
@@ -113,9 +203,7 @@ impl Default for FactorizationRequest {
             algo: AlgoChoice::Auto,
             refine: false,
             condition_threshold: DEFAULT_CONDITION_THRESHOLD,
-            priority: Priority::Normal,
-            label: None,
-            placement: Placement::Auto,
+            options: SubmitOptions::default(),
         }
     }
 }
@@ -165,22 +253,33 @@ impl FactorizationRequest {
         self
     }
 
+    /// Replace the submit-time scheduling options wholesale (the
+    /// consolidated successor to the loose `with_priority` / `labeled`
+    /// / `pinned` setters).
+    pub fn options(mut self, options: SubmitOptions) -> Self {
+        self.options = options;
+        self
+    }
+
     /// Queue priority when submitted to a job service.
+    #[deprecated(since = "0.9.0", note = "use .options(SubmitOptions::new().priority(..))")]
     pub fn with_priority(mut self, priority: Priority) -> Self {
-        self.priority = priority;
+        self.options.priority = priority;
         self
     }
 
     /// Tag the request for per-job reporting.
+    #[deprecated(since = "0.9.0", note = "use .options(SubmitOptions::new().label(..))")]
     pub fn labeled(mut self, label: impl Into<String>) -> Self {
-        self.label = Some(label.into());
+        self.options.label = Some(label.into());
         self
     }
 
     /// Pin the job to engine shard `k` of a sharded service (see
     /// [`Placement`]).
+    #[deprecated(since = "0.9.0", note = "use .options(SubmitOptions::new().pinned(..))")]
     pub fn pinned(mut self, shard: usize) -> Self {
-        self.placement = Placement::Pinned(shard);
+        self.options.placement = Placement::Pinned(shard);
         self
     }
 }
@@ -196,15 +295,17 @@ mod tests {
         assert_eq!(r.algo, AlgoChoice::Auto);
         assert!(!r.refine);
         assert_eq!(r.condition_threshold, DEFAULT_CONDITION_THRESHOLD);
-        assert_eq!(r.priority, Priority::Normal);
-        assert!(r.label.is_none());
-        assert_eq!(r.placement, Placement::Auto);
+        assert_eq!(r.options, SubmitOptions::default());
+        assert_eq!(r.options.priority, Priority::Normal);
+        assert!(r.options.label.is_none());
+        assert_eq!(r.options.placement, Placement::Auto);
+        assert!(!r.options.no_steal && !r.options.quota_exempt);
     }
 
     #[test]
     fn placement_pins_a_shard() {
-        let r = FactorizationRequest::qr().pinned(3);
-        assert_eq!(r.placement, Placement::Pinned(3));
+        let r = FactorizationRequest::qr().options(SubmitOptions::new().pinned(3));
+        assert_eq!(r.options.placement, Placement::Pinned(3));
     }
 
     #[test]
@@ -214,9 +315,41 @@ mod tests {
             assert_eq!(Priority::parse(p.name()).unwrap(), p);
         }
         assert!(Priority::parse("urgent").is_err());
-        let r = FactorizationRequest::qr().with_priority(Priority::High).labeled("hot");
-        assert_eq!(r.priority, Priority::High);
-        assert_eq!(r.label.as_deref(), Some("hot"));
+        let r = FactorizationRequest::qr()
+            .options(SubmitOptions::new().priority(Priority::High).label("hot"));
+        assert_eq!(r.options.priority, Priority::High);
+        assert_eq!(r.options.label.as_deref(), Some("hot"));
+    }
+
+    #[test]
+    fn submit_options_compose_all_knobs() {
+        let o = SubmitOptions::new()
+            .priority(Priority::Low)
+            .label("tenant-a")
+            .pinned(2)
+            .no_steal()
+            .quota_exempt();
+        assert_eq!(o.priority, Priority::Low);
+        assert_eq!(o.label.as_deref(), Some("tenant-a"));
+        assert_eq!(o.placement, Placement::Pinned(2));
+        assert!(o.no_steal && o.quota_exempt);
+        let o = SubmitOptions::new().placement(Placement::Auto);
+        assert_eq!(o.placement, Placement::Auto);
+    }
+
+    /// The pre-redesign loose setters must keep delegating into
+    /// `options` bit-for-bit (they are deprecated shims, not parallel
+    /// state).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_setters_delegate_into_options() {
+        let r = FactorizationRequest::qr()
+            .with_priority(Priority::High)
+            .labeled("legacy")
+            .pinned(1);
+        let want = FactorizationRequest::qr()
+            .options(SubmitOptions::new().priority(Priority::High).label("legacy").pinned(1));
+        assert_eq!(r, want);
     }
 
     #[test]

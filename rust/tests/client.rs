@@ -20,7 +20,7 @@
 use mrtsqr::client::TsqrClient;
 use mrtsqr::coordinator::Algorithm;
 use mrtsqr::mapreduce::FaultPolicy;
-use mrtsqr::session::{Backend, FactorizationRequest, Priority, SessionBuilder};
+use mrtsqr::session::{Backend, FactorizationRequest, Priority, SessionBuilder, SubmitOptions};
 use mrtsqr::{Factorization, MatrixHandle, Placement};
 use std::sync::Arc;
 
@@ -45,11 +45,11 @@ fn mixed_requests() -> Vec<FactorizationRequest> {
         FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr),
         FactorizationRequest::qr()
             .with_algorithm(Algorithm::DirectTsqrFused)
-            .with_priority(Priority::High),
+            .options(SubmitOptions::new().priority(Priority::High)),
         FactorizationRequest::r_only(),
         FactorizationRequest::r_only().with_algorithm(Algorithm::Cholesky { refine: false }),
         FactorizationRequest::svd(),
-        FactorizationRequest::singular_values().with_priority(Priority::Low),
+        FactorizationRequest::singular_values().options(SubmitOptions::new().priority(Priority::Low)),
         FactorizationRequest::qr().with_algorithm(Algorithm::IndirectTsqr { refine: true }),
     ]
 }
@@ -221,15 +221,19 @@ fn cross_process_pool_is_bit_identical_to_in_process() {
         assert!(fact.stats.shard < 4, "global shard {} out of range", fact.stats.shard);
     }
     let h = cross.ingest_gaussian("P", 240, 4, 99).unwrap();
+    let pin = |k| SubmitOptions::new().pinned(k);
     let pinned = cross
-        .submit(&h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(3))
+        .submit(
+            &h,
+            FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).options(pin(3)),
+        )
         .unwrap();
     let fact = pinned.wait().unwrap();
     assert_eq!(fact.stats.shard, 3, "Pinned(3) must land on proc 1 / local shard 1");
     assert_eq!(cross.shard_of(pinned.id()), Some(3));
     // an out-of-range global pin errors at submission
     assert!(cross
-        .submit(&h, FactorizationRequest::qr().pinned(4))
+        .submit(&h, FactorizationRequest::qr().options(pin(4)))
         .is_err());
 }
 
@@ -248,7 +252,12 @@ fn remote_jobs_expose_the_full_lifecycle() {
         .ingest_gaussian_placed("A", 400, 5, 3, Placement::Pinned(1))
         .unwrap();
     let job = client
-        .submit(&h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(1))
+        .submit(
+            &h,
+            FactorizationRequest::qr()
+                .with_algorithm(Algorithm::DirectTsqr)
+                .options(SubmitOptions::new().pinned(1)),
+        )
         .unwrap();
     let fact = job.wait().unwrap();
     assert_eq!(job.status(), mrtsqr::JobStatus::Done);
@@ -281,14 +290,21 @@ fn killed_worker_fails_only_its_own_jobs() {
     // kill lands
     let big = client.ingest_gaussian("B", 200_000, 8, 2).unwrap();
 
+    let pin = |k| SubmitOptions::new().pinned(k);
     let safe = client
-        .submit(&small, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(0))
+        .submit(
+            &small,
+            FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).options(pin(0)),
+        )
         .unwrap();
     let doomed_running = client
-        .submit(&big, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(1))
+        .submit(
+            &big,
+            FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).options(pin(1)),
+        )
         .unwrap();
     let doomed_queued = client
-        .submit(&small, FactorizationRequest::r_only().pinned(1))
+        .submit(&small, FactorizationRequest::r_only().options(pin(1)))
         .unwrap();
     client.kill_worker(1).unwrap();
 
@@ -303,7 +319,7 @@ fn killed_worker_fails_only_its_own_jobs() {
 
     // pinning to the corpse errors at submission; Auto routes around it
     let err = client
-        .submit(&small, FactorizationRequest::r_only().pinned(1))
+        .submit(&small, FactorizationRequest::r_only().options(pin(1)))
         .unwrap_err();
     assert!(format!("{err:#}").contains("dead"), "{err:#}");
     let rerouted = client.submit(&small, FactorizationRequest::r_only()).unwrap();

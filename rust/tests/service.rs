@@ -14,7 +14,7 @@
 use mrtsqr::coordinator::Algorithm;
 use mrtsqr::mapreduce::FaultPolicy;
 use mrtsqr::service::{JobStatus, TsqrService};
-use mrtsqr::session::{Backend, FactorizationRequest, Priority, SessionBuilder};
+use mrtsqr::session::{Backend, FactorizationRequest, Priority, SessionBuilder, SubmitOptions};
 use mrtsqr::{Factorization, MatrixHandle};
 use std::sync::Arc;
 use std::time::Instant;
@@ -31,11 +31,11 @@ fn mixed_requests() -> Vec<FactorizationRequest> {
         FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr),
         FactorizationRequest::qr()
             .with_algorithm(Algorithm::DirectTsqrFused)
-            .with_priority(Priority::High),
+            .options(SubmitOptions::new().priority(Priority::High)),
         FactorizationRequest::r_only(),
         FactorizationRequest::r_only().with_algorithm(Algorithm::Cholesky { refine: false }),
         FactorizationRequest::svd(),
-        FactorizationRequest::singular_values().with_priority(Priority::Low),
+        FactorizationRequest::singular_values().options(SubmitOptions::new().priority(Priority::Low)),
         FactorizationRequest::qr().with_algorithm(Algorithm::IndirectTsqr { refine: true }),
     ]
 }

@@ -14,7 +14,7 @@ use mrtsqr::linalg::Matrix;
 use mrtsqr::mapreduce::FaultPolicy;
 use mrtsqr::runtime::{BlockCompute, NativeRuntime};
 use mrtsqr::service::TsqrService;
-use mrtsqr::session::{Backend, FactorizationRequest, Priority, SessionBuilder};
+use mrtsqr::session::{Backend, FactorizationRequest, Priority, SessionBuilder, SubmitOptions};
 use mrtsqr::{Factorization, MatrixHandle};
 use std::sync::Arc;
 use std::time::Instant;
@@ -32,11 +32,11 @@ fn mixed_requests() -> Vec<FactorizationRequest> {
         FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr),
         FactorizationRequest::qr()
             .with_algorithm(Algorithm::DirectTsqrFused)
-            .with_priority(Priority::High),
+            .options(SubmitOptions::new().priority(Priority::High)),
         FactorizationRequest::r_only(),
         FactorizationRequest::r_only().with_algorithm(Algorithm::Cholesky { refine: false }),
         FactorizationRequest::svd(),
-        FactorizationRequest::singular_values().with_priority(Priority::Low),
+        FactorizationRequest::singular_values().options(SubmitOptions::new().priority(Priority::Low)),
         FactorizationRequest::qr().with_algorithm(Algorithm::IndirectTsqr { refine: true }),
     ]
 }
@@ -216,8 +216,9 @@ fn sharded_batch_overlaps_in_wall_time() {
 fn eviction_is_scoped_to_the_jobs_own_shard() {
     let svc = builder().engine_shards(3).service_workers(0).build_service().unwrap();
     let h = svc.ingest_gaussian("A", 200, 4, 3).unwrap();
-    let j0 = svc.submit(&h, FactorizationRequest::qr().pinned(0)).unwrap();
-    let j2 = svc.submit(&h, FactorizationRequest::qr().pinned(2)).unwrap();
+    let pin = |k| SubmitOptions::new().pinned(k);
+    let j0 = svc.submit(&h, FactorizationRequest::qr().options(pin(0))).unwrap();
+    let j2 = svc.submit(&h, FactorizationRequest::qr().options(pin(2))).unwrap();
     svc.drain_now();
     let f0 = j0.wait().unwrap();
     let f2 = j2.wait().unwrap();
@@ -246,15 +247,16 @@ fn reingesting_invalidates_staged_copies() {
     let svc = builder().engine_shards(2).service_workers(0).build_service().unwrap();
     let req = || FactorizationRequest::r_only().with_algorithm(Algorithm::DirectTsqr);
     let h1 = svc.ingest_gaussian("A", 300, 4, 1).unwrap();
-    let j_old = svc.submit(&h1, req().pinned(1)).unwrap(); // stages "A" onto shard 1
+    let pin = |k| SubmitOptions::new().pinned(k);
+    let j_old = svc.submit(&h1, req().options(pin(1))).unwrap(); // stages "A" onto shard 1
     svc.drain_now();
     let old_digest = j_old.wait().unwrap().result_digest();
 
     // overwrite "A" with different contents, then read it from both
     // shards: results must agree with each other (and differ from old)
     let h2 = svc.ingest_gaussian("A", 300, 4, 2).unwrap();
-    let on_home = svc.submit(&h2, req().pinned(0)).unwrap();
-    let on_other = svc.submit(&h2, req().pinned(1)).unwrap();
+    let on_home = svc.submit(&h2, req().options(pin(0))).unwrap();
+    let on_other = svc.submit(&h2, req().options(pin(1))).unwrap();
     svc.drain_now();
     let d0 = on_home.wait().unwrap().result_digest();
     let d1 = on_other.wait().unwrap().result_digest();
@@ -269,12 +271,16 @@ fn reingesting_invalidates_staged_copies() {
 fn eviction_reclaims_staged_copies_on_other_shards() {
     let svc = builder().engine_shards(2).service_workers(0).build_service().unwrap();
     let h = svc.ingest_gaussian("A", 200, 4, 5).unwrap();
-    let producer = svc.submit(&h, FactorizationRequest::qr().pinned(0)).unwrap();
+    let pin = |k| SubmitOptions::new().pinned(k);
+    let producer = svc.submit(&h, FactorizationRequest::qr().options(pin(0))).unwrap();
     svc.drain_now();
     let q = producer.wait().unwrap().q.clone().unwrap();
     // chained consumer on the other shard stages a copy of the Q file
     let consumer = svc
-        .submit(&q, FactorizationRequest::r_only().with_algorithm(Algorithm::DirectTsqr).pinned(1))
+        .submit(
+            &q,
+            FactorizationRequest::r_only().with_algorithm(Algorithm::DirectTsqr).options(pin(1)),
+        )
         .unwrap();
     svc.drain_now();
     consumer.wait().unwrap();
@@ -329,7 +335,12 @@ fn panicked_job_leaves_every_shard_serving() {
     let marked = svc.ingest_gaussian("M", 300, 7, 2).unwrap();
 
     let doomed = svc
-        .submit(&marked, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(1))
+        .submit(
+            &marked,
+            FactorizationRequest::qr()
+                .with_algorithm(Algorithm::DirectTsqr)
+                .options(SubmitOptions::new().pinned(1)),
+        )
         .unwrap();
     let err = doomed.wait().unwrap_err();
     assert!(format!("{err:#}").contains("panicked"), "{err:#}");
@@ -337,7 +348,12 @@ fn panicked_job_leaves_every_shard_serving() {
     // the poisoned shard and the clean shard both still serve
     for k in 0..2 {
         let job = svc
-            .submit(&good, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(k))
+            .submit(
+                &good,
+                FactorizationRequest::qr()
+                    .with_algorithm(Algorithm::DirectTsqr)
+                    .options(SubmitOptions::new().pinned(k)),
+            )
             .unwrap();
         let fact = job.wait().unwrap_or_else(|e| panic!("shard {k} wedged after a panic: {e:#}"));
         assert_eq!(fact.stats.shard, k);

@@ -1,0 +1,457 @@
+//! The elastic-scheduling contract (PR 9): work stealing, locality
+//! routing, admission quotas and worker autoscaling are *pure
+//! scheduling*. The same mixed manifest — every job pinned onto shard
+//! 0 so the steal path genuinely has to move work — produces
+//! bit-identical `R`, `Q`, Σ, `virtual_secs`, fault draws and
+//! `result_digest`s with stealing on, stealing off, and under the
+//! serial drain; only wall-clock and the [`SchedTally`] counters may
+//! differ. On top of that: stolen work overlaps in wall time on a
+//! skewed manifest, `no_steal` jobs stay home, locality routes chained
+//! jobs to the shard holding their input, per-label quotas hold excess
+//! without starving anyone, and the process pool scales its worker
+//! population up and down without losing a single job.
+
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::mapreduce::FaultPolicy;
+use mrtsqr::service::{SchedulerConfig, TsqrService};
+use mrtsqr::session::{
+    Backend, FactorizationRequest, Priority, SessionBuilder, SubmitOptions,
+};
+use mrtsqr::{Factorization, MatrixHandle};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The prebuilt `mrtsqr` binary (cargo provides this to integration
+/// tests of the package that owns the bin target).
+const WORKER_BIN: &str = env!("CARGO_BIN_EXE_mrtsqr");
+
+fn builder() -> SessionBuilder {
+    mrtsqr::TsqrSession::builder()
+        .backend(Backend::Native)
+        .rows_per_task(200)
+        .fault_policy(FaultPolicy { probability: 0.15, max_attempts: 16, waste_fraction: 0.5 }, 777)
+}
+
+/// The acceptance mix, all pinned onto shard 0: a long blocker first
+/// (so shard 0 stays busy while idle shards raid its queue), then 8
+/// mixed jobs covering QR / R-only / SVD / Σ with both priorities —
+/// identical ids, inputs and fault streams in every configuration.
+fn skewed_requests() -> Vec<FactorizationRequest> {
+    let pin = |o: SubmitOptions| o.pinned(0);
+    vec![
+        // the blocker: big enough that thieves wake (≤ 50 ms poll)
+        // while it is still running
+        FactorizationRequest::qr()
+            .with_algorithm(Algorithm::DirectTsqr)
+            .options(pin(SubmitOptions::new())),
+        FactorizationRequest::qr().options(pin(SubmitOptions::new())),
+        FactorizationRequest::qr()
+            .with_algorithm(Algorithm::DirectTsqrFused)
+            .options(pin(SubmitOptions::new().priority(Priority::High))),
+        FactorizationRequest::r_only().options(pin(SubmitOptions::new())),
+        FactorizationRequest::r_only()
+            .with_algorithm(Algorithm::Cholesky { refine: false })
+            .options(pin(SubmitOptions::new())),
+        FactorizationRequest::svd().options(pin(SubmitOptions::new())),
+        FactorizationRequest::singular_values()
+            .options(pin(SubmitOptions::new().priority(Priority::Low))),
+        FactorizationRequest::qr()
+            .with_algorithm(Algorithm::IndirectTsqr { refine: true })
+            .options(pin(SubmitOptions::new())),
+        FactorizationRequest::qr()
+            .with_algorithm(Algorithm::DirectTsqr)
+            .options(pin(SubmitOptions::new())),
+    ]
+}
+
+/// Rows for request `i` of the skewed manifest: the blocker is tall,
+/// the rest are quick.
+fn rows_for(i: usize) -> usize {
+    if i == 0 {
+        400_000
+    } else {
+        300 + 40 * i
+    }
+}
+
+fn ingest_inputs(svc: &TsqrService, n: usize) -> Vec<MatrixHandle> {
+    (0..n)
+        .map(|i| {
+            svc.ingest_gaussian(&format!("A{i}"), rows_for(i), 4 + i % 3, i as u64)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Run the skewed manifest through a pool and hand back per-request
+/// results plus the Q read back out of whichever shard holds it.
+/// Submission is single-threaded so job ids — and with them fault
+/// streams — line up across configurations.
+fn run_pool(
+    shards: usize,
+    workers: usize,
+    sched: SchedulerConfig,
+) -> (TsqrService, Vec<(Arc<Factorization>, Vec<f64>)>) {
+    let requests = skewed_requests();
+    let svc = builder()
+        .engine_shards(shards)
+        .service_workers(workers)
+        .queue_capacity(requests.len())
+        .scheduler(sched)
+        .build_service()
+        .unwrap();
+    let inputs = ingest_inputs(&svc, requests.len());
+    let handles: Vec<_> = inputs
+        .iter()
+        .zip(&requests)
+        .map(|(h, req)| svc.submit(h, req.clone()).unwrap())
+        .collect();
+    if workers == 0 {
+        svc.drain_now();
+    }
+    let results = handles
+        .iter()
+        .map(|h| {
+            let fact = h.wait().unwrap();
+            let q = fact
+                .q
+                .as_ref()
+                .map(|qh| svc.get_matrix(qh).unwrap().data)
+                .unwrap_or_default();
+            (fact, q)
+        })
+        .collect();
+    (svc, results)
+}
+
+/// Field-by-field bitwise comparison of two runs of the same manifest.
+fn assert_bit_identical(
+    baseline: &[(Arc<Factorization>, Vec<f64>)],
+    other: &[(Arc<Factorization>, Vec<f64>)],
+) {
+    assert_eq!(baseline.len(), other.len());
+    for (idx, ((want, want_q), (got, got_q))) in baseline.iter().zip(other).enumerate() {
+        let ctx = format!("request {idx} ({})", want.algorithm.name());
+        assert_eq!(got.algorithm, want.algorithm, "{ctx}: algorithm");
+        for (a, b) in got.r.data.iter().zip(&want.r.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: R drifted");
+        }
+        assert_eq!(
+            got.stats.virtual_secs().to_bits(),
+            want.stats.virtual_secs().to_bits(),
+            "{ctx}: virtual_secs drifted ({} vs {})",
+            got.stats.virtual_secs(),
+            want.stats.virtual_secs()
+        );
+        assert_eq!(
+            got.stats.total_faults(),
+            want.stats.total_faults(),
+            "{ctx}: fault draws drifted with placement"
+        );
+        assert_eq!(got_q.len(), want_q.len(), "{ctx}: Q shape");
+        for (a, b) in got_q.iter().zip(want_q) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: Q drifted");
+        }
+        match (got.sigma(), want.sigma()) {
+            (Some(a), Some(b)) => {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: sigma drifted");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("{ctx}: sigma presence differs"),
+        }
+        // the digest `mrtsqr batch --json` emits — what the CI
+        // steal-on-vs-off matrix diffs — condenses exactly this
+        assert_eq!(got.result_digest(), want.result_digest(), "{ctx}: digest");
+    }
+}
+
+/// The tentpole invariant: stealing is pure scheduling. Serial drain,
+/// steal-off pool and steal-on pool agree bit for bit on every modelled
+/// quantity — while the steal-on run provably *did* steal (the manifest
+/// is pinned onto shard 0, so overlap is only reachable by theft) and
+/// the steal-off run provably did not.
+#[test]
+fn stealing_is_bit_identical_to_serial_and_steal_off() {
+    let (_, baseline) = run_pool(1, 0, SchedulerConfig::new());
+    let (off_svc, steal_off) = run_pool(4, 1, SchedulerConfig::new());
+    let (on_svc, steal_on) = run_pool(4, 1, SchedulerConfig::new().steal(true));
+
+    assert_bit_identical(&baseline, &steal_off);
+    assert_bit_identical(&baseline, &steal_on);
+    assert!(
+        baseline.iter().map(|(f, _)| f.stats.total_faults()).sum::<usize>() > 0,
+        "faults should fire at p=0.15 so the fault-draw comparison is non-vacuous"
+    );
+
+    // steal-off: nothing moved, nothing counted
+    let off_tally = off_svc.sched_tally();
+    assert_eq!(off_tally.per_shard_steals.iter().sum::<u64>(), 0, "{off_tally:?}");
+    assert!(steal_off.iter().all(|(f, _)| !f.stats.stolen && f.stats.shard == 0));
+
+    // steal-on: idle shards raided the pinned queue, and both the
+    // per-result flag and the pool tally say so
+    let on_tally = on_svc.sched_tally();
+    let total: u64 = on_tally.per_shard_steals.iter().sum();
+    assert!(total > 0, "a 9-job queue pinned behind a 400k-row blocker must get raided");
+    assert_eq!(
+        steal_on.iter().filter(|(f, _)| f.stats.stolen).count() as u64,
+        total,
+        "stolen flags and shard counters must agree: {on_tally:?}"
+    );
+    for (f, _) in &steal_on {
+        if f.stats.stolen {
+            assert_ne!(f.stats.shard, 0, "a stolen job must report the thief's shard");
+        }
+    }
+}
+
+/// The scaling claim: a skewed manifest (everything pinned onto shard
+/// 0) overlaps in wall time *only* because idle shards steal — the
+/// aggregate batch wall-clock lands below the sum of per-job walls.
+#[test]
+fn stolen_work_overlaps_in_wall_time() {
+    let svc = mrtsqr::TsqrSession::builder()
+        .backend(Backend::Native)
+        .rows_per_task(75)
+        .host_threads(2)
+        .engine_shards(4)
+        .service_workers(1)
+        .scheduler(SchedulerConfig::new().steal(true))
+        .build_service()
+        .unwrap();
+    // big enough that the blocker outlasts the thieves' 50 ms idle poll
+    let inputs: Vec<_> = (0..4)
+        .map(|i| svc.ingest_gaussian(&format!("A{i}"), 120_000, 8, i as u64).unwrap())
+        .collect();
+    let t0 = Instant::now();
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|h| {
+            svc.submit(
+                h,
+                FactorizationRequest::qr()
+                    .with_algorithm(Algorithm::DirectTsqr)
+                    .options(SubmitOptions::new().pinned(0)),
+            )
+            .unwrap()
+        })
+        .collect();
+    for h in &handles {
+        h.wait().unwrap();
+    }
+    let aggregate = t0.elapsed().as_secs_f64();
+    let sum_walls: f64 = handles.iter().map(|h| h.wall_secs().unwrap()).sum();
+    assert!(
+        aggregate < sum_walls,
+        "aggregate {aggregate:.3}s must be below the sum of per-job walls {sum_walls:.3}s \
+         — pinned jobs did not overlap, so nothing was stolen"
+    );
+    assert!(svc.sched_tally().per_shard_steals.iter().sum::<u64>() > 0);
+}
+
+/// `SubmitOptions::no_steal` is honored end to end: with stealing on
+/// and shard 0 blocked, the opted-out job waits for its home shard
+/// while its stealable twin gets carried off.
+#[test]
+fn no_steal_jobs_stay_home() {
+    let svc = builder()
+        .engine_shards(2)
+        .service_workers(1)
+        .scheduler(SchedulerConfig::new().steal(true))
+        .build_service()
+        .unwrap();
+    let big = svc.ingest_gaussian("B", 400_000, 8, 1).unwrap();
+    let small = svc.ingest_gaussian("S", 300, 4, 2).unwrap();
+    let pin = |o: SubmitOptions| o.pinned(0);
+
+    let blocker = svc
+        .submit(
+            &big,
+            FactorizationRequest::qr()
+                .with_algorithm(Algorithm::DirectTsqr)
+                .options(pin(SubmitOptions::new())),
+        )
+        .unwrap();
+    let loyal = svc
+        .submit(
+            &small,
+            FactorizationRequest::r_only()
+                .with_algorithm(Algorithm::DirectTsqr)
+                .options(pin(SubmitOptions::new().no_steal())),
+        )
+        .unwrap();
+    let movable = svc
+        .submit(
+            &small,
+            FactorizationRequest::r_only()
+                .with_algorithm(Algorithm::DirectTsqr)
+                .options(pin(SubmitOptions::new())),
+        )
+        .unwrap();
+
+    let stolen = movable.wait().unwrap();
+    assert!(stolen.stats.stolen, "the stealable twin should be raided off the blocked shard");
+    assert_eq!(stolen.stats.shard, 1);
+    let home = loyal.wait().unwrap();
+    assert!(!home.stats.stolen, "no_steal must keep the job out of every victim scan");
+    assert_eq!(home.stats.shard, 0);
+    blocker.wait().unwrap();
+    // the two twins read the same input on different shards: same bits
+    assert_eq!(stolen.result_digest(), home.result_digest());
+}
+
+/// With [`SchedulerConfig::locality`] on, `Auto` placement lands a
+/// chained job on the shard already holding its input — copy-free — and
+/// the result is bit-identical to reading the same input from the
+/// other shard.
+#[test]
+fn locality_routes_chained_jobs_to_the_holder() {
+    let svc = builder()
+        .engine_shards(2)
+        .service_workers(0)
+        .scheduler(SchedulerConfig::new().locality(true))
+        .build_service()
+        .unwrap();
+    let h = svc.ingest_gaussian("A", 2_000, 4, 3).unwrap();
+    let producer = svc
+        .submit(&h, FactorizationRequest::qr().options(SubmitOptions::new().pinned(1)))
+        .unwrap();
+    svc.drain_now();
+    let q = producer.wait().unwrap().q.clone().unwrap();
+
+    // Auto must pick shard 1 — the only holder of the Q file
+    let consumer = svc
+        .submit(&q, FactorizationRequest::r_only().with_algorithm(Algorithm::DirectTsqr))
+        .unwrap();
+    assert_eq!(svc.shard_of(consumer.id()), Some(1), "locality must route to the holder");
+    // …and a pinned read of the same Q from shard 0 agrees bit for bit
+    let cross = svc
+        .submit(
+            &q,
+            FactorizationRequest::r_only()
+                .with_algorithm(Algorithm::DirectTsqr)
+                .options(SubmitOptions::new().pinned(0)),
+        )
+        .unwrap();
+    svc.drain_now();
+    assert_eq!(consumer.wait().unwrap().stats.shard, 1);
+    assert_eq!(
+        consumer.wait().unwrap().result_digest(),
+        cross.wait().unwrap().result_digest(),
+        "locality is pure scheduling"
+    );
+}
+
+/// Admission control: per-label quotas hold excess submissions at the
+/// gate (recorded in the tally) but starve no one — every job, held or
+/// not, completes with the right result.
+#[test]
+fn quotas_hold_excess_without_starving() {
+    let svc = builder()
+        .engine_shards(1)
+        .service_workers(1)
+        .queue_capacity(16)
+        .scheduler(SchedulerConfig::new().quota_per_label(1))
+        .build_service()
+        .unwrap();
+    let h = svc.ingest_gaussian("A", 20_000, 5, 9).unwrap();
+    let req = || FactorizationRequest::r_only().with_algorithm(Algorithm::DirectTsqr);
+    let tenant_a: Vec<_> = (0..4)
+        .map(|_| {
+            svc.submit(&h, req().options(SubmitOptions::new().label("tenant-a"))).unwrap()
+        })
+        .collect();
+    let tenant_b = svc
+        .submit(&h, req().options(SubmitOptions::new().label("tenant-b")))
+        .unwrap();
+    let vip = svc
+        .submit(&h, req().options(SubmitOptions::new().label("tenant-a").quota_exempt()))
+        .unwrap();
+
+    // nobody starves: every submission resolves…
+    let digests: Vec<_> = tenant_a
+        .iter()
+        .map(|j| j.wait().unwrap().result_digest())
+        .collect();
+    let db = tenant_b.wait().unwrap().result_digest();
+    let dv = vip.wait().unwrap().result_digest();
+    // …with identical bits (same input, same request)
+    for d in digests.iter().chain([&db, &dv]) {
+        assert_eq!(d, &digests[0], "admission holds must not change results");
+    }
+    // …and the gate actually held the over-quota submissions
+    let tally = svc.sched_tally();
+    let held_a = tally
+        .admission_held
+        .iter()
+        .find(|(l, _)| l == "tenant-a")
+        .map(|(_, n)| *n)
+        .unwrap_or(0);
+    assert!(held_a >= 1, "4 back-to-back tenant-a jobs at quota 1 must park: {tally:?}");
+}
+
+/// Worker autoscaling on the process pool: a burst of work grows the
+/// live population to the ceiling, the idle tail shrinks it back to
+/// the floor, and not one job — during growth, shrink, or after — is
+/// lost. Scaling is pure capacity: it never touches results.
+#[test]
+fn autoscaler_grows_and_shrinks_without_losing_jobs() {
+    let client = mrtsqr::TsqrSession::builder()
+        .backend(Backend::Native)
+        .rows_per_task(200)
+        .worker_binary(WORKER_BIN)
+        .worker_processes(1)
+        .engine_shards(1)
+        .service_workers(1)
+        .queue_capacity(16)
+        .scheduler(
+            SchedulerConfig::new()
+                .autoscale(1, 2)
+                .autoscale_interval(Duration::from_millis(25)),
+        )
+        .build_client()
+        .unwrap();
+    assert_eq!(client.procs(), 1, "the pool starts at worker_processes, not the ceiling");
+
+    let inputs: Vec<_> = (0..6)
+        .map(|i| client.ingest_gaussian(&format!("A{i}"), 60_000, 8, i as u64).unwrap())
+        .collect();
+    let burst: Vec<_> = inputs
+        .iter()
+        .map(|h| {
+            client
+                .submit(h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr))
+                .unwrap()
+        })
+        .collect();
+
+    // the keeper (25 ms cadence) sees a busy pool below the ceiling
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while client.procs() < 2 {
+        assert!(Instant::now() < deadline, "autoscaler never reached the ceiling");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for h in &burst {
+        h.wait().unwrap();
+    }
+
+    // the idle tail retires back to the floor (two idle ticks + kill)
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while client.procs() > 1 {
+        assert!(Instant::now() < deadline, "autoscaler never shrank back to the floor");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // the shrunken pool still serves — no job, running or future, lost
+    let h = client.ingest_gaussian("after", 2_000, 4, 42).unwrap();
+    let fact = client
+        .submit(&h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(fact.stats.shard, 0, "post-shrink work lands on the floor population");
+    let q = client.get_matrix(fact.q.as_ref().unwrap()).unwrap();
+    assert!(q.orthogonality_error() < 1e-10);
+}

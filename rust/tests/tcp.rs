@@ -21,7 +21,7 @@ use mrtsqr::client::wire::{self, Op, WireReader, WIRE_MAGIC, WIRE_VERSION};
 use mrtsqr::client::{TcpServer, TsqrClient};
 use mrtsqr::coordinator::Algorithm;
 use mrtsqr::mapreduce::FaultPolicy;
-use mrtsqr::session::{Backend, FactorizationRequest, Priority, SessionBuilder};
+use mrtsqr::session::{Backend, FactorizationRequest, Priority, SessionBuilder, SubmitOptions};
 use mrtsqr::{Factorization, MatrixHandle};
 use std::io::Write;
 use std::net::TcpStream;
@@ -59,11 +59,11 @@ fn mixed_requests() -> Vec<FactorizationRequest> {
         FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr),
         FactorizationRequest::qr()
             .with_algorithm(Algorithm::DirectTsqrFused)
-            .with_priority(Priority::High),
+            .options(SubmitOptions::new().priority(Priority::High)),
         FactorizationRequest::r_only(),
         FactorizationRequest::r_only().with_algorithm(Algorithm::Cholesky { refine: false }),
         FactorizationRequest::svd(),
-        FactorizationRequest::singular_values().with_priority(Priority::Low),
+        FactorizationRequest::singular_values().options(SubmitOptions::new().priority(Priority::Low)),
         FactorizationRequest::qr().with_algorithm(Algorithm::IndirectTsqr { refine: true }),
     ]
 }
@@ -302,7 +302,12 @@ fn health_checks_route_auto_jobs_around_a_stopped_server() {
     // both alive: global pins address the flattened host×shard space
     let h = client.ingest_gaussian("A", 300, 4, 1).unwrap();
     let on_b = client
-        .submit(&h, FactorizationRequest::qr().with_algorithm(Algorithm::DirectTsqr).pinned(1))
+        .submit(
+            &h,
+            FactorizationRequest::qr()
+                .with_algorithm(Algorithm::DirectTsqr)
+                .options(SubmitOptions::new().pinned(1)),
+        )
         .unwrap();
     assert_eq!(on_b.wait().unwrap().stats.shard, 1, "Pinned(1) lands on host 1");
 
@@ -317,7 +322,7 @@ fn health_checks_route_auto_jobs_around_a_stopped_server() {
         "auto placement must avoid the dead host"
     );
     let err = client
-        .submit(&h, FactorizationRequest::r_only().pinned(1))
+        .submit(&h, FactorizationRequest::r_only().options(SubmitOptions::new().pinned(1)))
         .unwrap_err();
     assert!(format!("{err:#}").contains("dead"), "{err:#}");
 }
