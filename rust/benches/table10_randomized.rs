@@ -1,0 +1,158 @@
+//! Table X (PR 10) — randomized low-rank SVD vs the exact truncated
+//! Direct-TSQR SVD: input passes, virtual job time, and Σ accuracy.
+//!
+//! The randomized family's whole claim is a *pass-count* one: at rank
+//! `k ≪ n` the fused sketch-project pipeline reads `A`-sized files
+//! exactly `1 + power_iters` times, where the exact path reads them
+//! three times (the Direct-TSQR first pass over `A`, the `Q` formation
+//! pass over the spilled first-pass blocks, and the truncation pass
+//! over `QU`). This bench counts the passes off the recorded per-step
+//! `map_io` meters — a step "reads A-scale" when its map-side
+//! `bytes_read` is at least the input payload — and *asserts* the
+//! randomized side is strictly below the exact side at every `q`
+//! (the acceptance criterion), then reports virtual times and the
+//! leading-Σ relative error next to it.
+//!
+//! `--bench-json PATH` records the leg for the BENCH_10.json
+//! trajectory (`MRTSQR_BENCH_QUICK=1` / `--quick` shrinks shapes).
+
+use anyhow::Result;
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::linalg::matgen;
+use mrtsqr::session::{Backend, FactorizationRequest, TsqrSession};
+use mrtsqr::util::bench::{arg_value, quick_mode};
+use mrtsqr::util::json::Json;
+use mrtsqr::util::rng::Rng;
+use mrtsqr::util::table::Table;
+use mrtsqr::Factorization;
+
+/// One (shape, power-iteration) point of the comparison.
+struct Point {
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    power_iters: usize,
+    rand_passes: usize,
+    exact_passes: usize,
+    rand_virtual: f64,
+    exact_virtual: f64,
+    sigma_rel_err: f64,
+}
+
+/// Count the steps that read at least the input payload — the
+/// "passes over A" the module docs promise.
+fn a_scale_passes(fact: &Factorization, a_bytes: u64) -> usize {
+    fact.stats.steps.iter().filter(|s| s.map_io.bytes_read >= a_bytes).count()
+}
+
+fn main() -> Result<()> {
+    let quick = quick_mode();
+    let shapes: &[(usize, usize, usize)] =
+        if quick { &[(20_000, 32, 4)] } else { &[(100_000, 50, 4), (60_000, 40, 8)] };
+
+    let mut table = Table::new(
+        "Randomized low-rank SVD vs exact truncation (passes = A-scale reads)",
+        &["shape", "rank", "q", "rand passes", "exact passes", "rand virt (s)",
+          "exact virt (s)", "max |sigma_rel_err|"],
+    );
+    let mut points = Vec::new();
+    for &(rows, cols, rank) in shapes {
+        // a decaying spectrum so the truncation is meaningful and the
+        // randomized estimates have something to track
+        let mut rng = Rng::new(10);
+        let sigma_true: Vec<f64> =
+            (0..cols).map(|i| 10f64.powf(-4.0 * i as f64 / (cols - 1) as f64)).collect();
+        let (a, _, _) = matgen::matrix_with_spectrum(rows, cols, &sigma_true, &mut rng);
+        let mut session =
+            TsqrSession::builder().backend(Backend::Native).rows_per_task(1000).build()?;
+        let input = session.ingest_matrix("A", &a)?;
+        let a_bytes = 8 * (rows as u64) * (cols as u64);
+
+        let exact = session.factorize(
+            &input,
+            &FactorizationRequest::low_rank(rank).with_algorithm(Algorithm::DirectTsqr),
+        )?;
+        let exact_passes = a_scale_passes(&exact, a_bytes);
+        let exact_sigma = exact.sigma().expect("exact sigma").to_vec();
+
+        for power_iters in [0usize, 1] {
+            let rand = session.factorize(
+                &input,
+                &FactorizationRequest::low_rank(rank)
+                    .oversample(4)
+                    .power_iters(power_iters)
+                    .randomized(),
+            )?;
+            let rand_passes = a_scale_passes(&rand, a_bytes);
+            // the acceptance criterion: strictly fewer input passes
+            assert_eq!(
+                rand_passes,
+                1 + power_iters,
+                "randomized path must read A exactly 1+q times"
+            );
+            assert!(
+                rand_passes < exact_passes,
+                "randomized ({rand_passes}) must beat exact ({exact_passes}) at rank {rank} ≪ {cols}"
+            );
+            let sigma_rel_err = rand
+                .sigma()
+                .expect("randomized sigma")
+                .iter()
+                .zip(&exact_sigma)
+                .map(|(r, e)| (r / e - 1.0).abs())
+                .fold(0.0f64, f64::max);
+            table.row(&[
+                format!("{rows}x{cols}"),
+                rank.to_string(),
+                power_iters.to_string(),
+                rand_passes.to_string(),
+                exact_passes.to_string(),
+                format!("{:.1}", rand.stats.virtual_secs()),
+                format!("{:.1}", exact.stats.virtual_secs()),
+                format!("{sigma_rel_err:.2e}"),
+            ]);
+            points.push(Point {
+                rows,
+                cols,
+                rank,
+                power_iters,
+                rand_passes,
+                exact_passes,
+                rand_virtual: rand.stats.virtual_secs(),
+                exact_virtual: exact.stats.virtual_secs(),
+                sigma_rel_err,
+            });
+        }
+    }
+    table.print();
+    println!("randomized reads A 1+q times; the exact truncated SVD reads A-scale files 3 times");
+
+    if let Some(path) = arg_value("bench-json") {
+        let report = Json::obj([
+            ("bench", Json::str("table10_randomized")),
+            ("quick", Json::Bool(quick)),
+            (
+                "randomized_vs_exact",
+                Json::arr(points.iter().map(|p| {
+                    Json::obj([
+                        ("shape", Json::str(format!("{}x{}", p.rows, p.cols))),
+                        ("rank", Json::num(p.rank as f64)),
+                        ("power_iters", Json::num(p.power_iters as f64)),
+                        ("rand_passes", Json::num(p.rand_passes as f64)),
+                        ("exact_passes", Json::num(p.exact_passes as f64)),
+                        ("rand_virtual_secs", Json::num(p.rand_virtual)),
+                        ("exact_virtual_secs", Json::num(p.exact_virtual)),
+                        ("sigma_rel_err", Json::num(p.sigma_rel_err)),
+                        (
+                            "virtual_speedup",
+                            Json::num(p.exact_virtual / p.rand_virtual.max(1e-12)),
+                        ),
+                    ])
+                })),
+            ),
+        ]);
+        std::fs::write(&path, report.render() + "\n").expect("write bench json");
+        println!("bench json -> {path}");
+    }
+    Ok(())
+}

@@ -36,8 +36,9 @@ use crate::mapreduce::{ClusterConfig, FaultPolicy, JobStats, StepStats};
 use crate::service::{JobStatus, SchedTally, SchedulerConfig};
 use crate::session::{
     AlgoChoice, AutoDecision, Backend, Factorization, FactorizationRequest, Placement, Priority,
-    SubmitOptions, Want,
+    SketchChoice, SubmitOptions, Want,
 };
+use crate::sketch::{SketchKind, SketchOptions};
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 use std::time::Duration;
@@ -60,7 +61,12 @@ pub const WIRE_MAGIC: [u8; 4] = *b"MRTQ";
 /// `no_steal`/`quota_exempt` opt-outs, the stats codec's `stolen`
 /// placement flag, [`WorkerConfig`]'s [`SchedulerConfig`] group, and
 /// the [`Op::SchedTally`]/[`Op::TallyReply`] scheduler-counter probe.
-pub const WIRE_VERSION: u16 = 5;
+/// v6 added the randomized sketching family: the `LowRank`/`Solve`
+/// want tags, the request codec's sketch operator + seed fields (the
+/// seed is part of the digest contract, so it ships exactly like an
+/// ingestion seed), the factorization codec's least-squares `solution`
+/// block, and [`AutoDecision`]'s recorded [`SketchChoice`].
+pub const WIRE_VERSION: u16 = 6;
 
 /// Upper bound on one frame's payload (1 GiB) — a corrupt length
 /// prefix must not look like an allocation request.
@@ -364,12 +370,22 @@ impl WireWriter {
     }
 
     pub fn request(&mut self, req: &FactorizationRequest) {
-        self.u8(match req.want {
-            Want::Qr => 0,
-            Want::ROnly => 1,
-            Want::Svd => 2,
-            Want::SingularValues => 3,
-        });
+        match req.want {
+            Want::Qr => self.u8(0),
+            Want::ROnly => self.u8(1),
+            Want::Svd => self.u8(2),
+            Want::SingularValues => self.u8(3),
+            Want::LowRank { rank, oversample, power_iters } => {
+                self.u8(4);
+                self.u64(rank as u64);
+                self.u64(oversample as u64);
+                self.u64(power_iters as u64);
+            }
+            Want::Solve { rhs } => {
+                self.u8(5);
+                self.u64(rhs as u64);
+            }
+        }
         match req.algo {
             AlgoChoice::Auto => self.u8(0),
             AlgoChoice::Fixed(a) => {
@@ -388,6 +404,17 @@ impl WireWriter {
         self.placement(req.options.placement);
         self.bool(req.options.no_steal);
         self.bool(req.options.quota_exempt);
+        // v6: the sketch operator + seed travel on every request (the
+        // non-sketch wants ignore them, like `refine` on Fixed algos)
+        self.sketch_kind(req.sketch.kind);
+        self.u64(req.sketch.seed);
+    }
+
+    fn sketch_kind(&mut self, k: SketchKind) {
+        self.u8(match k {
+            SketchKind::Gaussian => 0,
+            SketchKind::CountSketch => 1,
+        });
     }
 
     pub fn matrix(&mut self, m: &Matrix) {
@@ -455,6 +482,15 @@ impl WireWriter {
         self.algorithm(d.chosen);
         self.bool(d.probe_reused);
         self.bool(d.mixed_precision);
+        match &d.sketch {
+            None => self.u8(0),
+            Some(c) => {
+                self.u8(1);
+                self.sketch_kind(c.kind);
+                self.u64(c.seed);
+                self.u64(c.oversample as u64);
+            }
+        }
     }
 
     pub fn factorization(&mut self, f: &Factorization) {
@@ -472,6 +508,14 @@ impl WireWriter {
                 self.u8(1);
                 self.f64s(&parts.sigma);
                 self.matrix(&parts.v);
+            }
+        }
+        // v6: the least-squares solution block (digest-relevant)
+        match &f.solution {
+            None => self.u8(0),
+            Some(x) => {
+                self.u8(1);
+                self.matrix(x);
             }
         }
         self.algorithm(f.algorithm);
@@ -674,6 +718,12 @@ impl<'a> WireReader<'a> {
             1 => Want::ROnly,
             2 => Want::Svd,
             3 => Want::SingularValues,
+            4 => Want::LowRank {
+                rank: self.usize()?,
+                oversample: self.usize()?,
+                power_iters: self.usize()?,
+            },
+            5 => Want::Solve { rhs: self.usize()? },
             other => bail!("wire: bad want tag {other}"),
         };
         let algo = match self.u8()? {
@@ -693,12 +743,22 @@ impl<'a> WireReader<'a> {
         let placement = self.placement()?;
         let no_steal = self.bool()?;
         let quota_exempt = self.bool()?;
+        let sketch = SketchOptions { kind: self.sketch_kind()?, seed: self.u64()? };
         Ok(FactorizationRequest {
             want,
             algo,
             refine,
             condition_threshold,
             options: SubmitOptions { priority, label, placement, no_steal, quota_exempt },
+            sketch,
+        })
+    }
+
+    fn sketch_kind(&mut self) -> Result<SketchKind> {
+        Ok(match self.u8()? {
+            0 => SketchKind::Gaussian,
+            1 => SketchKind::CountSketch,
+            other => bail!("wire: bad sketch-kind tag {other}"),
         })
     }
 
@@ -792,6 +852,15 @@ impl<'a> WireReader<'a> {
             chosen: self.algorithm()?,
             probe_reused: self.bool()?,
             mixed_precision: self.bool()?,
+            sketch: match self.u8()? {
+                0 => None,
+                1 => Some(SketchChoice {
+                    kind: self.sketch_kind()?,
+                    seed: self.u64()?,
+                    oversample: self.usize()?,
+                }),
+                other => bail!("wire: bad option tag {other}"),
+            },
         })
     }
 
@@ -811,6 +880,11 @@ impl<'a> WireReader<'a> {
             }
             other => bail!("wire: bad option tag {other}"),
         };
+        let solution = match self.u8()? {
+            0 => None,
+            1 => Some(self.matrix()?),
+            other => bail!("wire: bad option tag {other}"),
+        };
         let algorithm = self.algorithm()?;
         let auto = match self.u8()? {
             0 => None,
@@ -818,7 +892,7 @@ impl<'a> WireReader<'a> {
             other => bail!("wire: bad option tag {other}"),
         };
         let stats = self.stats()?;
-        Ok(Factorization { q, r, svd, algorithm, auto, stats })
+        Ok(Factorization { q, r, svd, solution, algorithm, auto, stats })
     }
 
     pub fn config(&mut self) -> Result<WorkerConfig> {
@@ -964,6 +1038,8 @@ mod tests {
             FactorizationRequest::r_only(),
             FactorizationRequest::svd(),
             FactorizationRequest::singular_values(),
+            FactorizationRequest::low_rank(7).oversample(3).power_iters(2),
+            FactorizationRequest::solve().rhs_cols(4),
         ];
         let algos: Vec<AlgoChoice> = std::iter::once(AlgoChoice::Auto)
             .chain(Algorithm::ALL.into_iter().map(AlgoChoice::Fixed))
@@ -999,6 +1075,25 @@ mod tests {
                 .quota_exempt(),
         );
         assert_eq!(roundtrip_request(&req), req);
+    }
+
+    #[test]
+    fn sketch_fields_roundtrip_exactly() {
+        // the v6 fields: operator + seed on every request, with the
+        // LowRank/Solve wants carrying their shape parameters
+        let req = FactorizationRequest::low_rank(9)
+            .oversample(0)
+            .power_iters(3)
+            .with_sketch(SketchOptions { kind: SketchKind::CountSketch, seed: u64::MAX })
+            .randomized();
+        assert_eq!(roundtrip_request(&req), req);
+        let req = FactorizationRequest::solve()
+            .rhs_cols(1)
+            .with_sketch(SketchOptions { kind: SketchKind::Gaussian, seed: 0 });
+        assert_eq!(roundtrip_request(&req), req);
+        // a plain QR still carries (and preserves) the default sketch
+        let back = roundtrip_request(&FactorizationRequest::qr());
+        assert_eq!(back.sketch, SketchOptions::default());
     }
 
     #[test]
@@ -1080,6 +1175,7 @@ mod tests {
                 sigma: vec![3.5, 1.0, 0.5, 1e-300, 4e-320],
                 v: Matrix::gaussian(5, 5, &mut rng),
             }),
+            solution: None,
             algorithm: Algorithm::IndirectTsqr { refine: true },
             auto: Some(AutoDecision {
                 kappa_estimate: 37.25,
@@ -1087,6 +1183,7 @@ mod tests {
                 chosen: Algorithm::IndirectTsqr { refine: true },
                 probe_reused: true,
                 mixed_precision: true,
+                sketch: None,
             }),
             stats: sample_stats(),
         };
@@ -1111,6 +1208,53 @@ mod tests {
             back.stats.virtual_secs().to_bits(),
             fact.stats.virtual_secs().to_bits()
         );
+    }
+
+    #[test]
+    fn solve_factorization_roundtrips_solution_and_nan_kappa() {
+        // the v6 blocks: a Solve result's x enters the digest, and a
+        // LowRank auto decision's NaN kappa must survive (NaN has no
+        // decimal rendering; the wire ships bits)
+        let mut rng = Rng::new(9);
+        let fact = Factorization {
+            q: None,
+            r: Matrix::gaussian(4, 4, &mut rng),
+            svd: None,
+            solution: Some(Matrix::gaussian(4, 2, &mut rng)),
+            algorithm: Algorithm::Randomized,
+            auto: Some(AutoDecision {
+                kappa_estimate: f64::NAN,
+                threshold: 1e3,
+                chosen: Algorithm::Randomized,
+                probe_reused: false,
+                mixed_precision: false,
+                sketch: Some(SketchChoice {
+                    kind: SketchKind::CountSketch,
+                    seed: 0x5EED,
+                    oversample: 8,
+                }),
+            }),
+            stats: sample_stats(),
+        };
+        let mut w = WireWriter::new();
+        w.factorization(&fact);
+        let bytes = w.into_bytes();
+        let mut rd = WireReader::new(&bytes);
+        let back = rd.factorization().unwrap();
+        rd.finish().unwrap();
+        assert_eq!(back.result_digest(), fact.result_digest());
+        let (xa, xb) = (back.solution.as_ref().unwrap(), fact.solution.as_ref().unwrap());
+        assert_eq!((xa.rows, xa.cols), (xb.rows, xb.cols));
+        for (a, b) in xa.data.iter().zip(&xb.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let d = back.auto.unwrap();
+        assert!(d.kappa_estimate.is_nan());
+        assert_eq!(d.sketch, fact.auto.unwrap().sketch);
+        // and: a digest with a solution differs from one without
+        let mut without = back.clone();
+        without.solution = None;
+        assert_ne!(without.result_digest(), fact.result_digest());
     }
 
     #[test]

@@ -63,6 +63,12 @@ pub enum Algorithm {
     DirectTsqrFused,
     /// 2n-pass MapReduce Householder QR (R only — the paper's baseline).
     Householder,
+    /// The randomized sketching family ([`crate::sketch`]): randomized
+    /// range finder + truncated SVD for `Want::LowRank` requests,
+    /// sketch-and-precondition least squares for `Want::Solve`. Not a
+    /// QR pipeline — [`Coordinator::qr`] rejects it; dispatch happens
+    /// in the session execution layer.
+    Randomized,
 }
 
 impl Algorithm {
@@ -75,6 +81,7 @@ impl Algorithm {
             Algorithm::DirectTsqr => AlgoKind::DirectTsqr,
             Algorithm::DirectTsqrFused => AlgoKind::DirectTsqrFused,
             Algorithm::Householder => AlgoKind::Householder,
+            Algorithm::Randomized => AlgoKind::Randomized,
         }
     }
 
@@ -92,6 +99,7 @@ impl Algorithm {
             Algorithm::DirectTsqr => "direct",
             Algorithm::DirectTsqrFused => "direct-fused",
             Algorithm::Householder => "householder",
+            Algorithm::Randomized => "randomized",
         }
     }
 
@@ -105,13 +113,14 @@ impl Algorithm {
             "direct" => Algorithm::DirectTsqr,
             "direct-fused" => Algorithm::DirectTsqrFused,
             "householder" => Algorithm::Householder,
+            "randomized" => Algorithm::Randomized,
             other => bail!(
-                "unknown algorithm {other:?} (cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder)"
+                "unknown algorithm {other:?} (cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder|randomized)"
             ),
         })
     }
 
-    pub const ALL: [Algorithm; 7] = [
+    pub const ALL: [Algorithm; 8] = [
         Algorithm::Cholesky { refine: false },
         Algorithm::IndirectTsqr { refine: false },
         Algorithm::Cholesky { refine: true },
@@ -119,6 +128,7 @@ impl Algorithm {
         Algorithm::DirectTsqr,
         Algorithm::DirectTsqrFused,
         Algorithm::Householder,
+        Algorithm::Randomized,
     ];
 }
 
@@ -361,6 +371,9 @@ impl<'c> Coordinator<'c> {
                 let (r, stats) = householder::householder_r(self, input, None)?;
                 Ok(QrResult { q: None, r, stats })
             }
+            Algorithm::Randomized => bail!(
+                "the randomized family serves LowRank/Solve requests, not QR (see crate::sketch)"
+            ),
         }
     }
 
@@ -401,10 +414,11 @@ mod tests {
 
     #[test]
     fn all_covers_every_variant() {
-        // the CLI parses 7 names; ALL must expose the same 7 (the fused
+        // the CLI parses 8 names; ALL must expose the same 8 (the fused
         // §VI variant was historically missing)
-        assert_eq!(Algorithm::ALL.len(), 7);
+        assert_eq!(Algorithm::ALL.len(), 8);
         assert!(Algorithm::ALL.contains(&Algorithm::DirectTsqrFused));
+        assert!(Algorithm::ALL.contains(&Algorithm::Randomized));
         // no duplicates
         for (i, a) in Algorithm::ALL.iter().enumerate() {
             for b in &Algorithm::ALL[i + 1..] {

@@ -113,6 +113,21 @@
 //! are invariant to chunk size and arrival interleaving
 //! (`rust/tests/stream.rs`).
 //!
+//! Also cutting across the stack sits the **[`sketch`] layer**
+//! (PR 10): the randomized algorithm family — a seeded Gaussian /
+//! CountSketch range finder feeding a randomized truncated SVD
+//! ([`sketch::randomized_svd`], `1 + power_iters` passes over `A`),
+//! and sketch-and-precondition least squares
+//! ([`sketch::sketched_solve`], two passes) — surfaced through the
+//! same request pair as `Want::LowRank { .. }` / `Want::Solve { .. }`
+//! with `algo: Randomized`. Sketch seeds ride the request (and the
+//! wire payload, protocol v6) exactly like ingestion seeds, and every
+//! partial sum reduces in task-id order, so the family inherits the
+//! bit-identical-at-every-scaling-setting contract unchanged
+//! (`rust/tests/sketch.rs`). The `Auto` policy gates sketch-vs-exact
+//! on the requested rank vs. the column count (low-rank) or the
+//! existing κ probe (solve).
+//!
 //! Pure-rust dense linear algebra ([`linalg`]) provides the serial
 //! `n×n` steps the paper runs on a single node (Cholesky, `R⁻¹`,
 //! Jacobi SVD) and an independent correctness oracle. Since PR 7 it is
@@ -164,6 +179,7 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod service;
 pub mod session;
+pub mod sketch;
 pub mod stream;
 pub mod util;
 pub mod workload;
@@ -179,3 +195,4 @@ pub use session::{
     Backend, Factorization, FactorizationRequest, Placement, Priority, SubmitOptions,
     TsqrSession,
 };
+pub use sketch::{SketchKind, SketchOptions};

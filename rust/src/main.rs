@@ -4,6 +4,8 @@
 //! mrtsqr qr        --rows 100000 --cols 25 --algo auto [--pjrt] [--condition 1e8]
 //! mrtsqr svd       --rows 50000  --cols 10 [--pjrt]
 //! mrtsqr sigma     --rows 50000  --cols 10            # singular values only
+//! mrtsqr lowrank   --rows 50000  --cols 64 --rank 4 --sketch countsketch  # randomized SVD
+//! mrtsqr solve     --rows 50000  --cols 10 --rhs 1    # least squares min |Ax-b|
 //! mrtsqr batch     --manifest jobs.txt --jobs 4       # concurrent job service
 //! mrtsqr batch     --manifest jobs.txt --worker-procs 2  # …across worker processes
 //! mrtsqr batch     --manifest jobs.txt --connect host:7420  # …against a remote server
@@ -33,6 +35,7 @@ use mrtsqr::perfmodel::{lower_bound_secs, AlgoKind, StageParallelism, WorkloadSh
 use mrtsqr::runtime::Manifest;
 use mrtsqr::service::{parse_manifest_full, SchedulerConfig};
 use mrtsqr::session::{AlgoChoice, Backend, FactorizationRequest, SessionBuilder, TsqrSession};
+use mrtsqr::sketch::{SketchKind, SketchOptions, DEFAULT_OVERSAMPLE, DEFAULT_SKETCH_SEED};
 use mrtsqr::util::cli::Args;
 use mrtsqr::util::json::Json;
 use mrtsqr::util::rng::Rng;
@@ -218,6 +221,98 @@ fn cmd_sigma(args: &Args) -> Result<()> {
         commas(input.rows as u64), input.cols);
     println!("virtual time : {:.1} s", out.stats.virtual_secs());
     println!("sigma        : {:?}", &sigma[..sigma.len().min(8)]);
+    Ok(())
+}
+
+/// `--sketch gauss|countsketch` + `--sketch-seed N` — the sketching
+/// operator the randomized family draws. The seed is digest-relevant
+/// (like the ingestion seed); every scheduling knob still is not.
+fn sketch_options(args: &Args) -> Result<SketchOptions> {
+    let kind = match args.get("sketch") {
+        Some(name) => SketchKind::parse(name)?,
+        None => SketchKind::Gaussian,
+    };
+    Ok(SketchOptions { kind, seed: args.get_u64("sketch-seed", DEFAULT_SKETCH_SEED) })
+}
+
+/// Randomized low-rank SVD (`A ≈ Û Σ̂ V̂ᵀ`, rank `k`): the PR 10
+/// sketching family as a CLI surface. `--algo auto` gates sketch vs
+/// exact truncation on rank-vs-cols; `--algo randomized` / `--algo
+/// direct` force a side. Prints the same `result_digest` line the
+/// batch/stream reports carry so CI can diff runs across scheduling
+/// knobs.
+fn cmd_lowrank(args: &Args) -> Result<()> {
+    let rank = args.get_usize("rank", 4);
+    let algo = parse_algo_choice(&args.get_or("algo", "auto"))?;
+    let mut session = session_builder(args).build()?;
+    let input = load_input(args, &mut session)?;
+    let req = FactorizationRequest::low_rank(rank)
+        .oversample(args.get_usize("oversample", DEFAULT_OVERSAMPLE))
+        .power_iters(args.get_usize("power-iters", 0))
+        .with_sketch(sketch_options(args)?);
+    let req = match algo {
+        AlgoChoice::Auto => req.auto(),
+        AlgoChoice::Fixed(a) => req.with_algorithm(a),
+    };
+    let res = session.factorize(&input, &req)?;
+
+    println!("low-rank       : {} x {} -> rank {}", commas(input.rows as u64), input.cols, rank);
+    match &res.auto {
+        Some(d) => println!("algorithm      : {} ({})", res.algorithm.name(), d.step_stats().name),
+        None => println!("algorithm      : {}", res.algorithm.name()),
+    }
+    let sigma = res.sigma().expect("low-rank sigma");
+    println!("sigma_hat      : {:?}", &sigma[..sigma.len().min(8)]);
+    println!("virtual time   : {:.1} s", res.stats.virtual_secs());
+    println!("steps          : {}", res.stats.steps.len());
+    if args.flag("check") {
+        // |A - U Σ Vᵀ| / |A| — materializes A and Û, so keep it to
+        // demo-sized runs
+        let a = session.get_matrix(&input)?;
+        let u = session.get_matrix(res.q.as_ref().expect("low-rank U"))?;
+        let svd = res.svd.as_ref().expect("low-rank parts");
+        let scaled = Matrix::from_fn(u.rows, sigma.len(), |i, j| u[(i, j)] * sigma[j]);
+        let recon = scaled.matmul(&svd.v.transpose());
+        println!("|A-USV'|/|A|   : {}", sci(a.sub(&recon).frob_norm() / a.frob_norm()));
+    }
+    println!("result_digest  : {}", res.result_digest());
+    Ok(())
+}
+
+/// Least squares `min |Ax - b|` over the augmented input `[A b]`
+/// (`--cols` counts A's columns; `--rhs` b's). `--algo auto` probes κ
+/// and solves from the probe when benign, else sketch-and-precondition;
+/// `--algo randomized` forces the sketched path.
+fn cmd_solve(args: &Args) -> Result<()> {
+    let rows = args.get_usize("rows", 100_000);
+    let cols = args.get_usize("cols", 10);
+    let rhs = args.get_usize("rhs", 1);
+    let seed = args.get_u64("seed", 42);
+    let algo = parse_algo_choice(&args.get_or("algo", "auto"))?;
+    let mut session = session_builder(args).build()?;
+    let input = session.ingest_gaussian("Ab", rows, cols + rhs, seed)?;
+    let req = FactorizationRequest::solve().rhs_cols(rhs).with_sketch(sketch_options(args)?);
+    let req = match algo {
+        AlgoChoice::Auto => req.auto(),
+        AlgoChoice::Fixed(a) => req.with_algorithm(a),
+    };
+    let res = session.factorize(&input, &req)?;
+
+    let x = res.solution.as_ref().expect("solve solution");
+    println!("least squares  : {} x {} A, {} rhs column(s)", commas(rows as u64), cols, rhs);
+    match &res.auto {
+        Some(d) => println!("algorithm      : {} ({})", res.algorithm.name(), d.step_stats().name),
+        None => println!("algorithm      : {}", res.algorithm.name()),
+    }
+    println!("virtual time   : {:.1} s", res.stats.virtual_secs());
+    // the relative residual |Ax-b|/|b| is cheap next to the solve
+    // itself: one m*n*rhs matmul on the materialized input
+    let ab = session.get_matrix(&input)?;
+    let a = Matrix::from_fn(rows, cols, |i, j| ab[(i, j)]);
+    let b = Matrix::from_fn(rows, rhs, |i, j| ab[(i, cols + j)]);
+    let resid = a.matmul(x).sub(&b);
+    println!("|Ax-b|/|b|     : {}", sci(resid.frob_norm() / b.frob_norm()));
+    println!("result_digest  : {}", res.result_digest());
     Ok(())
 }
 
@@ -852,7 +947,7 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|batch|stream|serve|loadgen|worker|stability|faults|model|info> [options]
+const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|lowrank|solve|batch|stream|serve|loadgen|worker|stability|faults|model|info> [options]
   common options: --rows N --cols N --seed N --pjrt
                   --algo <auto|cholesky|cholesky-ir|indirect|indirect-ir|direct|direct-fused|householder>
                   --beta-r s/GB --beta-w s/GB --byte-scale X
@@ -861,10 +956,16 @@ const USAGE: &str = "usage: mrtsqr <qr|svd|sigma|batch|stream|serve|loadgen|work
                   --mixed-precision  (let Auto take the kappa-gated f32 step-1 path; changes bits)
                   --fault-prob P --fault-attempts N --fault-waste F --fault-seed N  (fault injection)
                   --request-timeout SECS   (per-request deadline on the Process/Tcp transports)
+  lowrank options: --rank K --oversample P --power-iters Q [--check]
+                  --sketch <gauss|countsketch> --sketch-seed N   (digest-relevant, like --seed)
+                  --algo <auto|randomized|direct>   (auto gates sketch-vs-exact on rank vs cols)
+  solve options:  --rhs K --sketch <gauss|countsketch> --sketch-seed N --algo <auto|randomized|...>
+                  (--cols counts A's columns, --rhs b's; input is the augmented [A b])
   batch options:  --manifest FILE --jobs N --shards N --worker-procs N --queue N [--serial] [--json PATH]
                   --connect host:port[,host:port...]   (drive remote `serve --listen` hosts instead)
-                  (manifest lines: name rows cols seed <qr|r|svd|sigma> <algo> [low|normal|high] [@shard] [+nosteal] [+exempt];
-                   `%scheduler key=value...` lines configure the pool — CLI flags win key by key)
+                  (manifest lines: name rows cols seed <qr|r|svd|sigma|lowrank:<rank>|solve[:<rhs>]> <algo>
+                   [low|normal|high] [@shard] [+nosteal] [+exempt]; sketching wants take :p<n>/:q<n>/:s<seed>/
+                   :gauss/:countsketch knobs; `%scheduler key=value...` lines configure the pool)
   scheduling:     --steal --locality --quota-per-label N --autoscale MIN:MAX --autoscale-interval-ms N
                   (batch/serve/loadgen; pure placement — result digests identical at any setting)
   stream options: --rows N --cols N --seed N [--sigma] [--q]
@@ -884,6 +985,8 @@ fn main() -> Result<()> {
         Some("qr") => cmd_qr(&args),
         Some("svd") => cmd_svd(&args),
         Some("sigma") => cmd_sigma(&args),
+        Some("lowrank") => cmd_lowrank(&args),
+        Some("solve") => cmd_solve(&args),
         Some("batch") => cmd_batch(&args),
         Some("stream") => cmd_stream(&args),
         Some("serve") => cmd_serve(&args),

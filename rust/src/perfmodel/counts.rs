@@ -64,6 +64,10 @@ pub enum AlgoKind {
     /// The paper's §VI proposal (in-memory step 2, no Q₁ spill).
     DirectTsqrFused,
     Householder,
+    /// The PR 10 randomized family (modeled at `ℓ = max(n/4, 1)`):
+    /// one fused sketch-project pass over `A`, a TSQR of the `m×ℓ`
+    /// sketch, and an `m×ℓ` project-back pass.
+    Randomized,
 }
 
 impl AlgoKind {
@@ -76,6 +80,7 @@ impl AlgoKind {
             AlgoKind::DirectTsqr => "Direct TSQR",
             AlgoKind::DirectTsqrFused => "Direct TSQR (fused)",
             AlgoKind::Householder => "House.",
+            AlgoKind::Randomized => "Randomized",
         }
     }
 
@@ -266,6 +271,47 @@ pub fn algorithm_steps(algo: AlgoKind, s: &WorkloadShape) -> Vec<StepBytes> {
                 keys: 0,
             },
         ],
+        // Randomized SVD at the modeled sketch width ℓ = max(n/4, 1):
+        // only the fused sketch-project pass touches A-sized bytes; the
+        // TSQR of Y and the project-back both move m×ℓ < m×n.
+        AlgoKind::Randomized => {
+            let ell = (s.n / 4).max(1);
+            let y_bytes = 8 * s.m * ell + s.k * s.m;
+            let ln = 8 * ell * s.n + 8 * ell;
+            vec![
+                // fused sketch-project: read A (+ broadcast Ω per task),
+                // spill Y, reduce the ℓ×n partial sums into C
+                StepBytes {
+                    rm: a_bytes + s.m1 * (8 * s.n * ell + 8 * ell),
+                    wm: y_bytes + s.m1 * ln,
+                    rr: s.m1 * ln,
+                    wr: ln,
+                    m_tasks: s.m1,
+                    r_tasks: 1,
+                    keys: ell,
+                },
+                // TSQR of Y (m×ℓ) — one read/write of the sketch file
+                StepBytes {
+                    rm: y_bytes,
+                    wm: y_bytes + 8 * s.m1 * ell * ell,
+                    rr: 0,
+                    wr: 0,
+                    m_tasks: s.m1,
+                    r_tasks: 0,
+                    keys: 0,
+                },
+                // project-back Û = Q_y·W (m×ℓ in, m×ℓ out)
+                StepBytes {
+                    rm: y_bytes + s.m3 * (8 * ell * ell + 8 * ell),
+                    wm: y_bytes,
+                    rr: 0,
+                    wr: 0,
+                    m_tasks: s.m3,
+                    r_tasks: 0,
+                    keys: 0,
+                },
+            ]
+        }
     }
 }
 
@@ -327,6 +373,23 @@ mod tests {
         let s = shape();
         let steps = algorithm_steps(AlgoKind::Cholesky, &s);
         assert_eq!(steps[0].keys, s.n);
+    }
+
+    #[test]
+    fn randomized_reads_a_once() {
+        let s = shape();
+        let steps = algorithm_steps(AlgoKind::Randomized, &s);
+        assert_eq!(steps.len(), 3);
+        let a = s.hdfs_bytes();
+        // only the sketch-project pass is at A scale…
+        assert!(steps[0].rm >= a);
+        assert!(steps[1].rm < a && steps[2].rm < a);
+        // …so the family moves strictly fewer map-read bytes than the
+        // exact Direct TSQR pipeline
+        let rand: u64 = steps.iter().map(|x| x.rm).sum();
+        let direct: u64 =
+            algorithm_steps(AlgoKind::DirectTsqr, &s).iter().map(|x| x.rm).sum();
+        assert!(rand < direct);
     }
 
     #[test]

@@ -10,9 +10,19 @@
 //! A4      20000  8     4     sigma  indirect @0
 //! ```
 //!
-//! `want`: `qr` | `r` | `svd` | `sigma`; `algo`: `auto` or any fixed
-//! CLI algorithm name ([`Algorithm::parse`]); `priority` defaults to
-//! `normal`. A trailing `@<k>` pins the job to engine shard `k`
+//! `want`: `qr` | `r` | `svd` | `sigma` | `lowrank:<rank>` |
+//! `solve[:<rhs>]`; `algo`: `auto` or any fixed CLI algorithm name
+//! ([`Algorithm::parse`]); `priority` defaults to `normal`. The
+//! sketching wants take extra colon-separated knobs in any order after
+//! the leading number — `p<oversample>`, `q<power_iters>`,
+//! `s<seed>`, and a sketch-kind name (`gauss`/`countsketch`):
+//!
+//! ```text
+//! L1  60000  48  5  lowrank:4:p8:q1:s42:countsketch  randomized
+//! S1  60000  9   6  solve:1:s7                       auto
+//! ```
+//!
+//! A trailing `@<k>` pins the job to engine shard `k`
 //! ([`crate::session::Placement::Pinned`]) instead of letting the
 //! service's least-loaded router place it; it errors at submission
 //! when the service has fewer than `k+1` shards (`mrtsqr batch
@@ -33,6 +43,7 @@ use crate::service::SchedulerConfig;
 use crate::session::{
     AlgoChoice, FactorizationRequest, Placement, Priority, SubmitOptions, Want,
 };
+use crate::sketch::{SketchKind, SketchOptions, DEFAULT_OVERSAMPLE};
 use anyhow::{bail, Context, Result};
 use std::time::Duration;
 
@@ -55,6 +66,9 @@ pub struct BatchEntry {
     pub no_steal: bool,
     /// `+exempt`: admit this job past per-label quotas.
     pub quota_exempt: bool,
+    /// Sketch operator + seed (`lowrank`/`solve` wants; the default
+    /// everywhere else).
+    pub sketch: SketchOptions,
 }
 
 impl BatchEntry {
@@ -65,7 +79,12 @@ impl BatchEntry {
             Want::ROnly => FactorizationRequest::r_only(),
             Want::Svd => FactorizationRequest::svd(),
             Want::SingularValues => FactorizationRequest::singular_values(),
-        };
+            Want::LowRank { rank, oversample, power_iters } => {
+                FactorizationRequest::low_rank(rank).oversample(oversample).power_iters(power_iters)
+            }
+            Want::Solve { rhs } => FactorizationRequest::solve().rhs_cols(rhs),
+        }
+        .with_sketch(self.sketch);
         let base = match self.algo {
             AlgoChoice::Auto => base.auto(),
             AlgoChoice::Fixed(algo) => base.with_algorithm(algo),
@@ -86,10 +105,12 @@ impl BatchEntry {
     /// Short human-readable request description for report tables.
     pub fn describe(&self) -> String {
         let want = match self.want {
-            Want::Qr => "qr",
-            Want::ROnly => "r",
-            Want::Svd => "svd",
-            Want::SingularValues => "sigma",
+            Want::Qr => "qr".to_string(),
+            Want::ROnly => "r".to_string(),
+            Want::Svd => "svd".to_string(),
+            Want::SingularValues => "sigma".to_string(),
+            Want::LowRank { rank, .. } => format!("lowrank:{rank}"),
+            Want::Solve { rhs } => format!("solve:{rhs}"),
         };
         let algo = match self.algo {
             AlgoChoice::Auto => "auto".to_string(),
@@ -99,14 +120,66 @@ impl BatchEntry {
     }
 }
 
-fn parse_want(s: &str) -> Result<Want> {
-    Ok(match s {
+fn parse_want(s: &str) -> Result<(Want, SketchOptions)> {
+    let mut parts = s.split(':');
+    let head = parts.next().unwrap_or("");
+    let want = match head {
         "qr" => Want::Qr,
         "r" | "r-only" => Want::ROnly,
         "svd" => Want::Svd,
         "sigma" | "singular-values" => Want::SingularValues,
-        other => bail!("unknown want {other:?} (qr|r|svd|sigma)"),
-    })
+        "lowrank" => {
+            let rank: usize = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("lowrank wants a rank: lowrank:<rank>[:...]"))?
+                .parse()
+                .context("lowrank rank")?;
+            if rank == 0 {
+                bail!("lowrank rank must be >= 1");
+            }
+            Want::LowRank { rank, oversample: DEFAULT_OVERSAMPLE, power_iters: 0 }
+        }
+        "solve" => {
+            // the rhs count is optional (defaults to 1) but must come
+            // right after the head when given, like lowrank's rank
+            Want::Solve { rhs: 1 }
+        }
+        other => bail!("unknown want {other:?} (qr|r|svd|sigma|lowrank:<rank>|solve[:<rhs>])"),
+    };
+    let mut want = want;
+    let mut sketch = SketchOptions::default();
+    let mut first = matches!(want, Want::Solve { .. });
+    for knob in parts {
+        // solve's optional leading rhs number
+        if first {
+            first = false;
+            if let (Want::Solve { rhs }, Ok(n)) = (&mut want, knob.parse::<usize>()) {
+                *rhs = n;
+                continue;
+            }
+        }
+        if let Some(v) = knob.strip_prefix('p') {
+            if let (Want::LowRank { oversample, .. }, Ok(n)) = (&mut want, v.parse()) {
+                *oversample = n;
+                continue;
+            }
+        }
+        if let Some(v) = knob.strip_prefix('q') {
+            if let (Want::LowRank { power_iters, .. }, Ok(n)) = (&mut want, v.parse()) {
+                *power_iters = n;
+                continue;
+            }
+        }
+        if let Some(v) = knob.strip_prefix('s') {
+            if let Ok(n) = v.parse() {
+                sketch.seed = n;
+                continue;
+            }
+        }
+        sketch.kind = SketchKind::parse(knob)
+            .with_context(|| format!("want knob {knob:?} (p<n>|q<n>|s<seed>|gauss|countsketch)"))?;
+    }
+    Ok((want, sketch))
 }
 
 fn parse_algo(s: &str) -> Result<AlgoChoice> {
@@ -154,17 +227,19 @@ fn parse_line(fields: &[&str]) -> Result<BatchEntry> {
             seen_priority = true;
         }
     }
+    let (want, sketch) = parse_want(fields[4])?;
     Ok(BatchEntry {
         name: fields[0].to_string(),
         rows: fields[1].parse().context("rows")?,
         cols: fields[2].parse().context("cols")?,
         seed: fields[3].parse().context("seed")?,
-        want: parse_want(fields[4])?,
+        want,
         algo: parse_algo(fields[5])?,
         priority,
         placement,
         no_steal,
         quota_exempt,
+        sketch,
     })
 }
 
@@ -259,13 +334,13 @@ pub fn parse_manifest(text: &str) -> Result<Vec<BatchEntry>> {
 }
 
 /// Generate a synthetic batch of `jobs` entries for load generation
-/// (`mrtsqr loadgen`): the 8-way mixed request cycle the determinism
-/// suites exercise (every `want`, fixed and auto algorithms, all three
-/// priorities), over `inputs` distinct gaussian matrices reused
-/// round-robin. Entries sharing an input name share its
-/// rows/cols/seed, so each input is ingested once however many jobs
-/// read it. Deterministic: the same arguments always produce the same
-/// manifest.
+/// (`mrtsqr loadgen`): the 10-way mixed request cycle the determinism
+/// suites exercise (every `want` including the PR 10 sketching family,
+/// fixed and auto algorithms, all three priorities), over `inputs`
+/// distinct gaussian matrices reused round-robin. Entries sharing an
+/// input name share its rows/cols/seed, so each input is ingested once
+/// however many jobs read it. Deterministic: the same arguments always
+/// produce the same manifest.
 pub fn synthetic_manifest(
     jobs: usize,
     inputs: usize,
@@ -278,8 +353,11 @@ pub fn synthetic_manifest(
     (0..jobs)
         .map(|i| {
             let k = i % inputs;
-            // the same 8-request mix as rust/tests/client.rs, cycled
-            let (want, algo, priority) = match i % 8 {
+            let entry_cols = cols + k % 3;
+            // the mixed-request cycle, extended with a LowRank and a
+            // Solve leg in PR 10 (rank/oversample clamped so any cols
+            // stays valid; the seeded sketch keeps the legs digestable)
+            let (want, algo, priority) = match i % 10 {
                 0 => (Want::Qr, AlgoChoice::Auto, Priority::Normal),
                 1 => (Want::Qr, AlgoChoice::Fixed(Algorithm::DirectTsqr), Priority::Normal),
                 2 => (Want::Qr, AlgoChoice::Fixed(Algorithm::DirectTsqrFused), Priority::High),
@@ -291,6 +369,16 @@ pub fn synthetic_manifest(
                 ),
                 5 => (Want::Svd, AlgoChoice::Auto, Priority::Normal),
                 6 => (Want::SingularValues, AlgoChoice::Auto, Priority::Low),
+                7 => (
+                    Want::LowRank {
+                        rank: (entry_cols / 4).max(1),
+                        oversample: (entry_cols / 4).max(1),
+                        power_iters: 0,
+                    },
+                    AlgoChoice::Fixed(Algorithm::Randomized),
+                    Priority::Normal,
+                ),
+                8 => (Want::Solve { rhs: 1 }, AlgoChoice::Auto, Priority::Low),
                 _ => (
                     Want::Qr,
                     AlgoChoice::Fixed(Algorithm::IndirectTsqr { refine: true }),
@@ -300,7 +388,7 @@ pub fn synthetic_manifest(
             BatchEntry {
                 name: format!("gen-{k}"),
                 rows: base_rows + 40 * k,
-                cols: cols + k % 3,
+                cols: entry_cols,
                 seed: seed.wrapping_add(k as u64),
                 want,
                 algo,
@@ -308,6 +396,7 @@ pub fn synthetic_manifest(
                 placement: Placement::Auto,
                 no_steal: false,
                 quota_exempt: false,
+                sketch: SketchOptions { seed: seed ^ 0x5EED, ..SketchOptions::default() },
             }
         })
         .collect()
@@ -429,9 +518,77 @@ A 100 4 7 qr direct
         for want in [Want::Qr, Want::ROnly, Want::Svd, Want::SingularValues] {
             assert!(a.iter().any(|e| e.want == want), "{want:?} missing");
         }
+        assert!(
+            a.iter().any(|e| matches!(e.want, Want::LowRank { .. })),
+            "LowRank leg missing"
+        );
+        assert!(
+            a.iter().any(|e| matches!(e.want, Want::Solve { .. })),
+            "Solve leg missing"
+        );
         for p in [Priority::Low, Priority::Normal, Priority::High] {
             assert!(a.iter().any(|e| e.priority == p), "{p:?} missing");
         }
+        // every LowRank leg must be feasible at its own cols: the
+        // randomized family needs rank + oversample <= cols
+        for e in &a {
+            if let Want::LowRank { rank, oversample, .. } = e.want {
+                assert!(rank >= 1 && rank + oversample <= e.cols, "{}: infeasible", e.name);
+            }
+        }
+        // the sketch seed is pinned so the legs stay digest-comparable
+        assert!(a.iter().all(|e| e.sketch == a[0].sketch));
+    }
+
+    #[test]
+    fn sketch_wants_parse_with_colon_knobs() {
+        let e = parse_manifest("L 4000 64 7 lowrank:4:p8:q1:s42:countsketch randomized")
+            .unwrap()
+            .remove(0);
+        assert_eq!(e.want, Want::LowRank { rank: 4, oversample: 8, power_iters: 1 });
+        assert_eq!(e.sketch, SketchOptions { kind: SketchKind::CountSketch, seed: 42 });
+        assert_eq!(e.algo, AlgoChoice::Fixed(Algorithm::Randomized));
+        assert_eq!(e.describe(), "lowrank:4/randomized");
+        let req = e.request();
+        assert_eq!(req.want, e.want);
+        assert_eq!(req.sketch, e.sketch);
+
+        // defaults: oversample falls back, solve's rhs defaults to 1
+        let e = parse_manifest("L 4000 64 7 lowrank:6 auto").unwrap().remove(0);
+        assert_eq!(
+            e.want,
+            Want::LowRank { rank: 6, oversample: DEFAULT_OVERSAMPLE, power_iters: 0 }
+        );
+        assert_eq!(e.sketch, SketchOptions::default());
+        let e = parse_manifest("S 4000 8 7 solve auto").unwrap().remove(0);
+        assert_eq!(e.want, Want::Solve { rhs: 1 });
+        let e = parse_manifest("S 4000 8 7 solve:2:s7 auto").unwrap().remove(0);
+        assert_eq!(e.want, Want::Solve { rhs: 2 });
+        assert_eq!(e.sketch.seed, 7);
+        assert_eq!(e.describe(), "solve:2/auto");
+
+        // error shapes: missing rank, zero rank, unknown knob, and
+        // lowrank-only knobs rejected on solve
+        assert!(parse_manifest("L 4000 64 7 lowrank auto").is_err(), "rank required");
+        assert!(parse_manifest("L 4000 64 7 lowrank:0 auto").is_err(), "rank >= 1");
+        assert!(parse_manifest("L 4000 64 7 lowrank:4:turbo auto").is_err(), "unknown knob");
+        assert!(parse_manifest("S 4000 8 7 solve:1:p8 auto").is_err(), "p is lowrank-only");
+        assert!(parse_manifest("S 4000 8 7 solve:1:q2 auto").is_err(), "q is lowrank-only");
+    }
+
+    #[test]
+    fn scheduler_unknown_keys_are_rejected_with_line_numbers() {
+        // regression (PR 10 satellite): the rejection must carry the
+        // 1-based line number so a typo in a long manifest is findable
+        let text = "\
+A 100 4 7 qr direct
+# comment
+%scheduler turbo=on
+";
+        let err = parse_manifest_full(text).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 3"), "{msg}");
+        assert!(msg.contains("turbo"), "{msg}");
     }
 
     #[test]

@@ -9,13 +9,14 @@
 //! session: same probe, same auto decision, same pipelines, same stats.
 
 use super::request::{AlgoChoice, FactorizationRequest, Want};
-use super::select::{estimate_condition, AutoDecision};
+use super::select::{estimate_condition, AutoDecision, SketchChoice};
 use super::Factorization;
 use crate::coordinator::direct_tsqr::SvdParts;
 use crate::coordinator::{ar_inv, cholesky_qr, householder, indirect_tsqr, RFactorMethod};
 use crate::coordinator::{Algorithm, Coordinator, MatrixHandle};
 use crate::linalg::{jacobi_svd, Matrix};
 use crate::mapreduce::JobStats;
+use crate::sketch::{rand_svd, solve as sketch_solve};
 use anyhow::{bail, Result};
 
 /// Run one factorization request against a coordinator (owned or
@@ -26,7 +27,7 @@ pub(crate) fn execute(
     req: &FactorizationRequest,
 ) -> Result<Factorization> {
     match req.algo {
-        AlgoChoice::Fixed(algo) => run_fixed(coord, input, req.want, algo, None),
+        AlgoChoice::Fixed(algo) => run_fixed(coord, input, req, algo, None),
         AlgoChoice::Auto => run_auto(coord, input, req),
     }
 }
@@ -38,18 +39,22 @@ fn run_auto(
 ) -> Result<Factorization> {
     // wants with a single serving algorithm resolve without a probe
     match req.want {
-        Want::Svd => return run_fixed(coord, input, req.want, Algorithm::DirectTsqr, None),
+        Want::Svd => return run_fixed(coord, input, req, Algorithm::DirectTsqr, None),
         Want::SingularValues => {
             // "it would be favorable to use the TSQR implementation
             // from Sec. II-B to compute R" (paper §III-B)
             return run_fixed(
                 coord,
                 input,
-                req.want,
+                req,
                 Algorithm::IndirectTsqr { refine: false },
                 None,
             );
         }
+        Want::LowRank { rank, oversample, .. } => {
+            return auto_low_rank(coord, input, req, rank, oversample);
+        }
+        Want::Solve { rhs } => return auto_solve(coord, input, req, rhs),
         Want::Qr | Want::ROnly => {}
     }
 
@@ -66,12 +71,14 @@ fn run_auto(
             chosen: Algorithm::IndirectTsqr { refine: false },
             probe_reused: true,
             mixed_precision: false,
+            sketch: None,
         };
         stats.push(decision.step_stats());
         return Ok(Factorization {
             q: None,
             r: probe_r,
             svd: None,
+            solution: None,
             algorithm: decision.chosen,
             auto: Some(decision),
             stats,
@@ -106,6 +113,7 @@ fn run_auto(
             q: Some(q),
             r,
             svd: None,
+            solution: None,
             algorithm: decision.chosen,
             auto: Some(decision),
             stats,
@@ -114,15 +122,91 @@ fn run_auto(
 
     // ill-conditioned: the unconditionally stable path
     coord.mixed_step1 = decision.mixed_precision;
-    let out = run_fixed(coord, input, req.want, decision.chosen, Some((decision, stats)));
+    let out = run_fixed(coord, input, req, decision.chosen, Some((decision, stats)));
     coord.mixed_step1 = false;
     out
+}
+
+/// `Auto` for `Want::LowRank`: no probe — the sketch-vs-exact call is a
+/// pure shape question ([`rand_svd::sketch_pays_off`]): below half the
+/// columns the randomized path reads strictly fewer bytes; above it the
+/// exact truncated Direct-TSQR SVD is both cheaper and exact.
+fn auto_low_rank(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    req: &FactorizationRequest,
+    rank: usize,
+    oversample: usize,
+) -> Result<Factorization> {
+    let randomized = rand_svd::sketch_pays_off(input.cols, rank, oversample);
+    let decision = AutoDecision {
+        kappa_estimate: f64::NAN, // rank gate, not a κ probe
+        threshold: req.condition_threshold,
+        chosen: if randomized { Algorithm::Randomized } else { Algorithm::DirectTsqr },
+        probe_reused: false,
+        mixed_precision: false,
+        sketch: randomized.then(|| SketchChoice::new(req.sketch, oversample)),
+    };
+    let mut stats = JobStats::default();
+    stats.push(decision.step_stats());
+    run_fixed(coord, input, req, decision.chosen, Some((decision, stats)))
+}
+
+/// `Auto` for `Want::Solve`: run the usual one-pass Indirect-TSQR probe
+/// on the augmented `[A b]` and estimate κ₂(A) from the leading `n×n`
+/// block of its `R`. Well-conditioned systems are *solved from the
+/// probe itself* — back-substitution on `R_aug`, one pass over the
+/// input, probe reused. Ill-conditioned systems go to
+/// sketch-and-precondition, which is immune to κ(A) by construction.
+fn auto_solve(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    req: &FactorizationRequest,
+    rhs: usize,
+) -> Result<Factorization> {
+    let n = sketch_solve::split_cols(input.cols, rhs)?;
+    let (probe_r, mut stats) = indirect_tsqr::indirect_r(coord, input)?;
+    let r_a = Matrix::from_fn(n, n, |i, j| probe_r[(i, j)]);
+    let kappa = estimate_condition(&r_a);
+
+    if kappa.is_finite() && kappa <= req.condition_threshold {
+        let decision = AutoDecision {
+            kappa_estimate: kappa,
+            threshold: req.condition_threshold,
+            chosen: Algorithm::IndirectTsqr { refine: false },
+            probe_reused: true,
+            mixed_precision: false,
+            sketch: None,
+        };
+        stats.push(decision.step_stats());
+        let (x, r_a) = sketch_solve::solve_from_augmented_r(&probe_r, n, rhs)?;
+        return Ok(Factorization {
+            q: None,
+            r: r_a,
+            svd: None,
+            solution: Some(x),
+            algorithm: decision.chosen,
+            auto: Some(decision),
+            stats,
+        });
+    }
+
+    let decision = AutoDecision {
+        kappa_estimate: kappa,
+        threshold: req.condition_threshold,
+        chosen: Algorithm::Randomized,
+        probe_reused: false,
+        mixed_precision: false,
+        sketch: Some(SketchChoice::new(req.sketch, 0)),
+    };
+    stats.push(decision.step_stats());
+    run_fixed(coord, input, req, decision.chosen, Some((decision, stats)))
 }
 
 fn run_fixed(
     coord: &mut Coordinator,
     input: &MatrixHandle,
-    want: Want,
+    req: &FactorizationRequest,
     algo: Algorithm,
     auto: Option<(AutoDecision, JobStats)>,
 ) -> Result<Factorization> {
@@ -130,16 +214,32 @@ fn run_fixed(
         Some((d, s)) => (Some(d), s),
         None => (None, JobStats::default()),
     };
-    match want {
+    match req.want {
         Want::Qr => {
             let res = coord.qr(input, algo)?;
             stats.extend(res.stats);
-            Ok(Factorization { q: res.q, r: res.r, svd: None, algorithm: algo, auto, stats })
+            Ok(Factorization {
+                q: res.q,
+                r: res.r,
+                svd: None,
+                solution: None,
+                algorithm: algo,
+                auto,
+                stats,
+            })
         }
         Want::ROnly => {
             let (r, st) = r_only(coord, input, algo)?;
             stats.extend(st);
-            Ok(Factorization { q: None, r, svd: None, algorithm: algo, auto, stats })
+            Ok(Factorization {
+                q: None,
+                r,
+                svd: None,
+                solution: None,
+                algorithm: algo,
+                auto,
+                stats,
+            })
         }
         Want::Svd => {
             if algo != Algorithm::DirectTsqr {
@@ -154,6 +254,7 @@ fn run_fixed(
                 q: Some(out.q),
                 r: out.r,
                 svd: out.svd,
+                solution: None,
                 algorithm: algo,
                 auto,
                 stats,
@@ -167,6 +268,62 @@ fn run_fixed(
                 q: None,
                 r,
                 svd: Some(SvdParts { sigma: svd.sigma, v: svd.v }),
+                solution: None,
+                algorithm: algo,
+                auto,
+                stats,
+            })
+        }
+        Want::LowRank { rank, oversample, power_iters } => {
+            let out = match algo {
+                Algorithm::Randomized => rand_svd::randomized_svd(
+                    coord,
+                    input,
+                    rank,
+                    oversample,
+                    power_iters,
+                    req.sketch,
+                )?,
+                // exact truncation rides the Direct-TSQR SVD; no other
+                // pipeline produces the Û the want promises
+                Algorithm::DirectTsqr => rand_svd::exact_low_rank(coord, input, rank)?,
+                other => bail!(
+                    "want=LowRank is served by randomized or direct (exact truncation), not {}",
+                    other.name()
+                ),
+            };
+            stats.extend(out.stats);
+            Ok(Factorization {
+                q: Some(out.u),
+                r: out.r,
+                svd: Some(SvdParts { sigma: out.sigma, v: out.v }),
+                solution: None,
+                algorithm: algo,
+                auto,
+                stats,
+            })
+        }
+        Want::Solve { rhs } => {
+            let (x, r, st) = match algo {
+                Algorithm::Randomized => {
+                    let out = sketch_solve::sketched_solve(coord, input, rhs, req.sketch)?;
+                    (out.x, out.r, out.stats)
+                }
+                // any R-producing pipeline on the augmented [A b]
+                // yields the solution by back-substitution, no Q pass
+                other => {
+                    let n = sketch_solve::split_cols(input.cols, rhs)?;
+                    let (r_aug, st) = r_only(coord, input, other)?;
+                    let (x, r_a) = sketch_solve::solve_from_augmented_r(&r_aug, n, rhs)?;
+                    (x, r_a, st)
+                }
+            };
+            stats.extend(st);
+            Ok(Factorization {
+                q: None,
+                r,
+                svd: None,
+                solution: Some(x),
                 algorithm: algo,
                 auto,
                 stats,
@@ -190,6 +347,9 @@ fn r_only(
         Algorithm::DirectTsqr | Algorithm::DirectTsqrFused => {
             let res = coord.qr(input, algo)?;
             Ok((res.r, res.stats))
+        }
+        Algorithm::Randomized => {
+            bail!("the randomized family serves LowRank/Solve requests, not R-only pipelines")
         }
     }
 }

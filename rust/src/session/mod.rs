@@ -56,7 +56,7 @@ pub use request::{
     AlgoChoice, FactorizationRequest, Placement, Priority, SubmitOptions, Want,
     DEFAULT_CONDITION_THRESHOLD,
 };
-pub use select::{estimate_condition, AutoDecision};
+pub use select::{estimate_condition, AutoDecision, SketchChoice};
 
 pub use crate::coordinator::MatrixHandle;
 
@@ -86,8 +86,12 @@ pub struct Factorization {
     pub q: Option<MatrixHandle>,
     /// The `n×n` triangular factor.
     pub r: Matrix,
-    /// Σ and V for SVD/singular-value requests.
+    /// Σ and V for SVD/singular-value requests (truncated to `rank`
+    /// for `Want::LowRank`).
     pub svd: Option<SvdParts>,
+    /// The `n×rhs` least-squares solution(s) for `Want::Solve`
+    /// requests; `None` otherwise.
+    pub solution: Option<Matrix>,
     /// The algorithm that actually ran.
     pub algorithm: Algorithm,
     /// The recorded `Auto` decision (`None` for `Fixed` requests).
@@ -103,13 +107,14 @@ impl Factorization {
     }
 
     /// FNV-1a digest of the result's numerical content: `R`'s shape and
-    /// exact bit patterns plus Σ (when present). Two runs of the same
-    /// request agree on this hex string iff their factors are
-    /// bit-identical — `mrtsqr batch --json` emits it per job so CI can
+    /// exact bit patterns plus Σ (when present) plus the least-squares
+    /// solution (when present). Two runs of the same request agree on
+    /// this hex string iff their factors are bit-identical —
+    /// `mrtsqr batch --json` emits it per job so CI can
     /// diff a `--shards 1` report against a `--shards 4` report with
     /// one `grep | diff` (wall-clock fields differ; digests must not).
     pub fn result_digest(&self) -> String {
-        crate::util::digest::r_sigma_digest(&self.r, self.sigma())
+        crate::util::digest::full_digest(&self.r, self.sigma(), self.solution.as_ref())
     }
 }
 
@@ -274,6 +279,19 @@ impl TsqrSession {
     /// Convenience: singular values only.
     pub fn singular_values(&mut self, input: &MatrixHandle) -> Result<Factorization> {
         self.factorize(input, &FactorizationRequest::singular_values())
+    }
+
+    /// Convenience: rank-`rank` truncated SVD with the default sketch
+    /// (auto-gated randomized vs exact; see [`crate::sketch`]).
+    pub fn low_rank(&mut self, input: &MatrixHandle, rank: usize) -> Result<Factorization> {
+        self.factorize(input, &FactorizationRequest::low_rank(rank))
+    }
+
+    /// Convenience: least squares against the input's trailing column
+    /// (the input must be the augmented `[A b]`; see
+    /// [`FactorizationRequest::solve`]).
+    pub fn solve(&mut self, input: &MatrixHandle) -> Result<Factorization> {
+        self.factorize(input, &FactorizationRequest::solve())
     }
 
     /// Run `f` against the internal execution layer (a [`Coordinator`]

@@ -3,6 +3,7 @@
 //! `Coordinator` entry points.
 
 use crate::coordinator::Algorithm;
+use crate::sketch::{SketchOptions, DEFAULT_OVERSAMPLE};
 
 /// Which factors the caller wants back.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -15,6 +16,31 @@ pub enum Want {
     Svd,
     /// Σ (and V) only — one pass over A plus a serial n×n SVD.
     SingularValues,
+    /// Rank-`rank` truncated SVD `A ≈ Û Σ_r V_rᵀ` ([`crate::sketch`]):
+    /// `q` holds `Û`, `svd` holds the leading Σ, V. Served by the
+    /// randomized range finder (`Fixed(Randomized)`, or `Auto` when the
+    /// oversampled width is at most half the columns) or exactly by
+    /// truncating the Direct-TSQR SVD.
+    LowRank {
+        /// Target rank, `1 ..= min(rows, cols)`.
+        rank: usize,
+        /// Extra sketch columns beyond `rank` (Halko's `p`; default
+        /// [`crate::sketch::DEFAULT_OVERSAMPLE`]).
+        oversample: usize,
+        /// Power-iteration count `q` — each costs one more pass over A
+        /// and sharpens slowly-decaying spectra.
+        power_iters: usize,
+    },
+    /// Least squares `min ‖A x − b‖₂` on an *augmented* ingested matrix
+    /// `[A b]` whose trailing `rhs` columns are right-hand sides:
+    /// `Factorization.solution` holds the `n×rhs` solution(s). Served
+    /// exactly from any R-producing pipeline's augmented triangle, or
+    /// by sketch-and-precondition (`Fixed(Randomized)`, or `Auto` when
+    /// the κ probe flags the system ill-conditioned).
+    Solve {
+        /// Trailing right-hand-side column count, `1 ..= cols-1`.
+        rhs: usize,
+    },
 }
 
 /// How to pick the algorithm.
@@ -194,6 +220,12 @@ pub struct FactorizationRequest {
     /// Submit-time scheduling options (priority, label, placement,
     /// steal/quota opt-outs). Sessions ignore them.
     pub options: SubmitOptions,
+    /// Sketch operator + seed for the randomized family. Ignored by
+    /// the Qr/ROnly/Svd/SingularValues wants; for `LowRank`/`Solve` the
+    /// seed is part of the digest contract (same seed → same bits at
+    /// every scaling setting) and ships in the wire payload like an
+    /// ingestion seed.
+    pub sketch: SketchOptions,
 }
 
 impl Default for FactorizationRequest {
@@ -204,6 +236,7 @@ impl Default for FactorizationRequest {
             refine: false,
             condition_threshold: DEFAULT_CONDITION_THRESHOLD,
             options: SubmitOptions::default(),
+            sketch: SketchOptions::default(),
         }
     }
 }
@@ -227,6 +260,62 @@ impl FactorizationRequest {
     /// Singular values only (paper §III-B, last sentence).
     pub fn singular_values() -> Self {
         FactorizationRequest { want: Want::SingularValues, ..Self::default() }
+    }
+
+    /// Rank-`rank` truncated SVD with default oversampling and no
+    /// power iterations; tune with [`Self::oversample`] /
+    /// [`Self::power_iters`] / [`Self::with_sketch`].
+    pub fn low_rank(rank: usize) -> Self {
+        FactorizationRequest {
+            want: Want::LowRank { rank, oversample: DEFAULT_OVERSAMPLE, power_iters: 0 },
+            ..Self::default()
+        }
+    }
+
+    /// Least squares against the input's trailing column (`rhs = 1`);
+    /// widen with [`Self::rhs_cols`].
+    pub fn solve() -> Self {
+        FactorizationRequest { want: Want::Solve { rhs: 1 }, ..Self::default() }
+    }
+
+    /// Override the oversampling width of a `LowRank` request (no-op
+    /// for other wants).
+    pub fn oversample(mut self, p: usize) -> Self {
+        if let Want::LowRank { oversample, .. } = &mut self.want {
+            *oversample = p;
+        }
+        self
+    }
+
+    /// Override the power-iteration count of a `LowRank` request
+    /// (no-op for other wants).
+    pub fn power_iters(mut self, q: usize) -> Self {
+        if let Want::LowRank { power_iters, .. } = &mut self.want {
+            *power_iters = q;
+        }
+        self
+    }
+
+    /// Override the right-hand-side column count of a `Solve` request
+    /// (no-op for other wants).
+    pub fn rhs_cols(mut self, k: usize) -> Self {
+        if let Want::Solve { rhs } = &mut self.want {
+            *rhs = k;
+        }
+        self
+    }
+
+    /// Replace the sketch operator + seed wholesale.
+    pub fn with_sketch(mut self, sketch: SketchOptions) -> Self {
+        self.sketch = sketch;
+        self
+    }
+
+    /// Pin the randomized family explicitly (shorthand for
+    /// `.with_algorithm(Algorithm::Randomized)`).
+    pub fn randomized(mut self) -> Self {
+        self.algo = AlgoChoice::Fixed(Algorithm::Randomized);
+        self
     }
 
     /// Pin the algorithm instead of auto-selecting.
@@ -364,5 +453,32 @@ mod tests {
         assert_eq!(r.condition_threshold, 1e4);
         let r = r.auto();
         assert_eq!(r.algo, AlgoChoice::Auto);
+    }
+
+    #[test]
+    fn sketch_requests_compose() {
+        use crate::sketch::SketchKind;
+        let r = FactorizationRequest::low_rank(5);
+        assert_eq!(
+            r.want,
+            Want::LowRank { rank: 5, oversample: DEFAULT_OVERSAMPLE, power_iters: 0 }
+        );
+        assert_eq!(r.sketch, SketchOptions::default());
+        let r = r
+            .oversample(3)
+            .power_iters(2)
+            .with_sketch(SketchOptions { kind: SketchKind::CountSketch, seed: 99 })
+            .randomized();
+        assert_eq!(r.want, Want::LowRank { rank: 5, oversample: 3, power_iters: 2 });
+        assert_eq!(r.sketch.kind, SketchKind::CountSketch);
+        assert_eq!(r.sketch.seed, 99);
+        assert_eq!(r.algo, AlgoChoice::Fixed(Algorithm::Randomized));
+
+        let r = FactorizationRequest::solve().rhs_cols(4);
+        assert_eq!(r.want, Want::Solve { rhs: 4 });
+        // cross-want setters are no-ops, not panics
+        let r = r.oversample(9).power_iters(9);
+        assert_eq!(r.want, Want::Solve { rhs: 4 });
+        assert_eq!(FactorizationRequest::qr().rhs_cols(9).want, Want::Qr);
     }
 }

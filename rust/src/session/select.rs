@@ -20,10 +20,28 @@
 use crate::coordinator::Algorithm;
 use crate::linalg::{jacobi_svd, Matrix};
 use crate::mapreduce::StepStats;
+use crate::sketch::{SketchKind, SketchOptions};
 
 /// κ₂ estimate of the input from a probe's `n×n` triangular factor.
 pub fn estimate_condition(r: &Matrix) -> f64 {
     jacobi_svd(r).condition_number()
+}
+
+/// Sketch parameters an `Auto` decision committed to when it picked the
+/// randomized family — recorded (marker step + wire) because the seed
+/// and operator are part of the digest contract.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SketchChoice {
+    pub kind: SketchKind,
+    pub seed: u64,
+    /// Oversampling width (`LowRank` decisions; 0 for `Solve`).
+    pub oversample: usize,
+}
+
+impl SketchChoice {
+    pub(crate) fn new(sketch: SketchOptions, oversample: usize) -> SketchChoice {
+        SketchChoice { kind: sketch.kind, seed: sketch.seed, oversample }
+    }
 }
 
 /// The recorded outcome of one `Auto` selection.
@@ -43,6 +61,11 @@ pub struct AutoDecision {
     /// [`crate::linalg::MIXED_KAPPA_MAX`]). Recorded here — and in the
     /// marker step — because it changes result bits for that run.
     pub mixed_precision: bool,
+    /// Sketch parameters, when the policy picked the randomized family
+    /// (`LowRank` rank-gate or `Solve` ill-conditioned branch).
+    /// `kappa_estimate` is NaN for `LowRank` decisions — the rank gate
+    /// never runs a probe.
+    pub sketch: Option<SketchChoice>,
 }
 
 impl AutoDecision {
@@ -57,6 +80,7 @@ impl AutoDecision {
                 chosen: Algorithm::IndirectTsqr { refine },
                 probe_reused: true,
                 mixed_precision: false,
+                sketch: None,
             }
         } else {
             AutoDecision {
@@ -65,16 +89,32 @@ impl AutoDecision {
                 chosen: Algorithm::DirectTsqr,
                 probe_reused: false,
                 mixed_precision: false,
+                sketch: None,
             }
         }
     }
 
-    /// Zero-cost marker step recording the decision in the job stats.
-    pub(crate) fn step_stats(&self) -> StepStats {
+    /// Zero-cost marker step recording the decision in the job stats
+    /// (also how the CLI prints the decision line).
+    pub fn step_stats(&self) -> StepStats {
+        // LowRank decisions come from the rank gate, not a κ probe
+        let basis = if self.kappa_estimate.is_nan() {
+            "rank-gate".to_string()
+        } else {
+            format!("kappa~{:.1e}", self.kappa_estimate)
+        };
+        let sketch = match &self.sketch {
+            Some(c) => format!(
+                ", sketch={} seed={} p={}",
+                c.kind.cli_name(),
+                c.seed,
+                c.oversample
+            ),
+            None => String::new(),
+        };
         StepStats {
             name: format!(
-                "auto-select(kappa~{:.1e} -> {}{}{})",
-                self.kappa_estimate,
+                "auto-select({basis} -> {}{}{}{sketch})",
                 self.chosen.cli_name(),
                 if self.probe_reused { ", probe-reused" } else { "" },
                 if self.mixed_precision { ", mixed-precision" } else { "" }
@@ -139,6 +179,7 @@ mod tests {
             chosen: Algorithm::IndirectTsqr { refine: false },
             probe_reused: true,
             mixed_precision: false,
+            sketch: None,
         };
         let s = d.step_stats();
         assert!(s.name.starts_with("auto-select"));
@@ -154,11 +195,30 @@ mod tests {
             chosen: Algorithm::DirectTsqr,
             probe_reused: false,
             mixed_precision: false,
+            sketch: None,
         };
         assert!(!d2.step_stats().name.contains("probe-reused"));
         assert!(d2.step_stats().name.contains("direct"));
 
         let d3 = AutoDecision { mixed_precision: true, ..d2 };
         assert!(d3.step_stats().name.contains("mixed-precision"));
+    }
+
+    #[test]
+    fn sketch_decisions_mark_seed_and_gate() {
+        let d = AutoDecision {
+            kappa_estimate: f64::NAN,
+            threshold: 1e3,
+            chosen: Algorithm::Randomized,
+            probe_reused: false,
+            mixed_precision: false,
+            sketch: Some(SketchChoice::new(SketchOptions { kind: SketchKind::Gaussian, seed: 42 }, 8)),
+        };
+        let s = d.step_stats();
+        assert!(s.name.contains("rank-gate"), "{}", s.name);
+        assert!(s.name.contains("randomized"));
+        assert!(s.name.contains("sketch=gauss seed=42 p=8"));
+        assert!(!s.name.contains("kappa"));
+        assert_eq!(s.virtual_secs, 0.0);
     }
 }

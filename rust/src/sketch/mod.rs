@@ -1,0 +1,117 @@
+//! Randomized sketching — the randomized algorithm family as MapReduce
+//! pipelines (SVD survey, arXiv 2009.00761; Halko–Martinsson–Tropp).
+//!
+//! Where the paper's Direct TSQR computes *exact* factors in ~2 passes,
+//! this subsystem trades a controlled amount of accuracy for strictly
+//! fewer passes over `A`:
+//!
+//! * [`rand_svd::randomized_svd`] — a randomized range finder
+//!   (`Y = A·Ω` for a seeded `n×ℓ` test matrix, `ℓ = rank +
+//!   oversample`) feeding a truncated SVD. One fused *sketch-project*
+//!   pass per power iteration computes both `Y` and `C = YᵀA` as
+//!   partial sums, so the whole factorization reads `A` exactly
+//!   `1 + power_iters` times — vs the exact path's two-pass Direct
+//!   TSQR SVD plus a truncation pass.
+//! * [`solve::sketched_solve`] — sketch-and-precondition least
+//!   squares: one pass sketches the augmented `[A b]` down to `s`
+//!   rows, the leader QRs the sketch, and a second pass solves the
+//!   normal equations of the preconditioned basis `Q̃ = A·R_s⁻¹`
+//!   (κ(Q̃) ≈ O(1), so the Gram solve is benign) through the same
+//!   side-input broadcast machinery as [`crate::coordinator::ar_inv`].
+//!
+//! **Determinism contract.** Both sketches are *seeded*: the Gaussian
+//! test matrix is generated from `SketchOptions::seed` (per-block
+//! generators fork off the seed by task id on the row-sketch path),
+//! CountSketch hashes global row ids under the seed, and every partial
+//! sum is reduced in task-id order by a single reducer. Bits are
+//! therefore invariant to `host_threads`, engine shards, worker
+//! processes and network hosts — the same digest contract the exact
+//! family enforces — and the seed ships in the wire payload so remote
+//! runs reproduce local ones exactly.
+
+pub mod operators;
+pub mod rand_svd;
+pub mod solve;
+
+pub use operators::{countsketch_omega, countsketch_slot, gaussian_omega};
+pub use rand_svd::{exact_low_rank, randomized_svd, LowRankOutput};
+pub use solve::{sketched_solve, solve_from_augmented_r, SolveOutput};
+
+use anyhow::{bail, Result};
+
+/// Which sketching operator generates the test matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchKind {
+    /// Dense i.i.d. N(0,1) test matrix from a seeded generator.
+    Gaussian,
+    /// CountSketch: one `±1` per input row, bucketed by a seeded hash.
+    /// Cheaper to apply (no gemm against a dense Ω on the row-sketch
+    /// path) at slightly worse distortion constants.
+    CountSketch,
+}
+
+impl SketchKind {
+    /// The canonical CLI spelling (inverse of [`SketchKind::parse`]).
+    pub fn cli_name(&self) -> &'static str {
+        match self {
+            SketchKind::Gaussian => "gauss",
+            SketchKind::CountSketch => "countsketch",
+        }
+    }
+
+    /// Parse a CLI/manifest sketch-kind name.
+    pub fn parse(s: &str) -> Result<SketchKind> {
+        Ok(match s {
+            "gauss" | "gaussian" => SketchKind::Gaussian,
+            "countsketch" => SketchKind::CountSketch,
+            other => bail!("unknown sketch kind {other:?} (gauss|countsketch)"),
+        })
+    }
+}
+
+/// Default oversampling parameter `p` (Halko et al. recommend 5–10; the
+/// failure probability decays like `p^{-p}`).
+pub const DEFAULT_OVERSAMPLE: usize = 8;
+
+/// Default sketch seed. Like an ingestion seed, it is part of the
+/// *request*, not the cluster: two runs with the same seed are
+/// bit-identical whatever the scaling knobs say.
+pub const DEFAULT_SKETCH_SEED: u64 = 0x5EED;
+
+/// How a request's sketching operator is seeded and shaped. Rides on
+/// every [`crate::session::FactorizationRequest`]; only `LowRank` /
+/// `Solve` requests that actually take a randomized path consult it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SketchOptions {
+    pub kind: SketchKind,
+    /// Seed for the test matrix / hash functions. Part of the digest
+    /// contract (like `rows_per_task`), unlike the scheduling knobs.
+    pub seed: u64,
+}
+
+impl Default for SketchOptions {
+    fn default() -> Self {
+        SketchOptions { kind: SketchKind::Gaussian, seed: DEFAULT_SKETCH_SEED }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sketch_kind_names_round_trip() {
+        for kind in [SketchKind::Gaussian, SketchKind::CountSketch] {
+            assert_eq!(SketchKind::parse(kind.cli_name()).unwrap(), kind);
+        }
+        assert_eq!(SketchKind::parse("gaussian").unwrap(), SketchKind::Gaussian);
+        assert!(SketchKind::parse("srht").is_err());
+    }
+
+    #[test]
+    fn default_options_are_seeded_gaussian() {
+        let o = SketchOptions::default();
+        assert_eq!(o.kind, SketchKind::Gaussian);
+        assert_eq!(o.seed, DEFAULT_SKETCH_SEED);
+    }
+}

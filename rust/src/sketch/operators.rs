@@ -1,0 +1,494 @@
+//! Seeded sketching operators as map/reduce passes.
+//!
+//! Three reusable building blocks, each a single engine step:
+//!
+//! * [`sketch_project_pass`] — the fused column-sketch pass: each map
+//!   task forms `Y_i = A_i·Ω` against a broadcast `Ω` side file and
+//!   emits the partial projection `C_i = Y_iᵀ A_i` under one key; a
+//!   single reducer sums the partials *in task-id order* (the engine
+//!   delivers values in emission order, and map emissions merge by
+//!   task id), so the sum — and every downstream bit — is invariant
+//!   to scheduling. Optionally spills `Y` rows to a side channel for
+//!   the follow-up TSQR.
+//! * [`row_sketch_pass`] — the row-sketch pass for least squares:
+//!   each task compresses its block to `s` rows with a per-block
+//!   Gaussian forked from the seed by task id (or CountSketch bucketing
+//!   by *global* row id), emitting partials summed the same way.
+//! * [`apply_side_matmul`] / [`col_slice_pass`] — broadcast-product
+//!   and column-truncation passes over row files (the project-back and
+//!   exact-truncation steps).
+
+use super::SketchKind;
+use crate::coordinator::io::{decode_block, encode_block, rows_to_block};
+use crate::coordinator::{Coordinator, MatrixHandle};
+use crate::dfs::records::{decode_row, encode_row, row_key, Record};
+use crate::linalg::Matrix;
+use crate::mapreduce::{Emitter, JobSpec, JobStats, KeyGroup, MapTask, ReduceTask};
+use crate::runtime::BlockCompute;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+// ------------------------------------------------------- test matrices
+
+/// Dense `n×ℓ` i.i.d. N(0,1) test matrix from `seed`. Generated once on
+/// the leader and broadcast — the per-*block* forked generators are the
+/// row-sketch path's job ([`row_sketch_pass`]), where the sketched
+/// dimension is the row space and a global Ω would be `m`-sized.
+pub fn gaussian_omega(n: usize, ell: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::gaussian(n, ell, &mut rng)
+}
+
+/// CountSketch slot for global row/column index `j` under `seed`:
+/// `(bucket, ±1)`. A pure function of `(seed, j, ell)` — no generator
+/// state — so collisions are deterministic wherever the hash is
+/// evaluated (leader, any map task, any host).
+pub fn countsketch_slot(seed: u64, j: u64, ell: usize) -> (usize, f64) {
+    let mut rng = Rng::new(seed ^ j.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let bucket = (rng.next_u64() % ell as u64) as usize;
+    let sign = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+    (bucket, sign)
+}
+
+/// CountSketch test matrix as a dense `n×ℓ`: one `±1` per row, column
+/// drawn by the seeded hash. Dense so the column-sketch path can reuse
+/// the same broadcast-gemm pass as Gaussian (at tall-and-skinny widths
+/// `n×ℓ` is leader-trivial); the row-sketch path applies the hash
+/// directly without materializing anything.
+pub fn countsketch_omega(n: usize, ell: usize, seed: u64) -> Matrix {
+    let mut omega = Matrix::zeros(n, ell);
+    for i in 0..n {
+        let (bucket, sign) = countsketch_slot(seed, i as u64, ell);
+        omega[(i, bucket)] = sign;
+    }
+    omega
+}
+
+/// The single reduce key all partial-sum emissions share.
+const PARTIAL_KEY: &[u8] = b"partial-sum";
+
+// ---------------------------------------------------------- map tasks
+
+/// Fused sketch-project map: `Y_i = A_i·Ω` (side file), emit
+/// `C_i = Y_iᵀA_i`; optionally spill `Y_i` rows for the range TSQR.
+struct SketchProjectMap<'a> {
+    compute: &'a dyn BlockCompute,
+    spill_y: bool,
+}
+
+impl MapTask for SketchProjectMap<'_> {
+    fn run(
+        &self,
+        _id: usize,
+        input: &[Record],
+        side: &[&[Record]],
+        out: &mut Emitter,
+    ) -> Result<()> {
+        ensure!(side.len() == 1, "sketch-project wants the Ω side file");
+        ensure!(side[0].len() == 1, "Ω side file should hold one block record");
+        let (_, omega) = decode_block(&side[0][0].value)?;
+        let (a, first_row) = rows_to_block(input)?;
+        let y = self.compute.matmul(&a, &omega)?;
+        let c_i = self.compute.matmul(&y.transpose(), &a)?;
+        out.emit(PARTIAL_KEY.to_vec(), encode_block(0, &c_i));
+        if self.spill_y {
+            for i in 0..y.rows {
+                out.emit_to("y", row_key(first_row + i as u64), encode_row(y.row(i)));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Row-sketch map for least squares: compress the block to `srows`
+/// rows. Gaussian blocks fork the request seed by task id (splits are
+/// fixed by `rows_per_task` before scheduling, so the fork stream —
+/// like the engine's fault forks — is scheduling-invariant);
+/// CountSketch hashes the *global* row id so the partial is independent
+/// of how rows landed in blocks at all.
+struct RowSketchMap<'a> {
+    compute: &'a dyn BlockCompute,
+    kind: SketchKind,
+    seed: u64,
+    srows: usize,
+}
+
+impl MapTask for RowSketchMap<'_> {
+    fn run(
+        &self,
+        task_id: usize,
+        input: &[Record],
+        _side: &[&[Record]],
+        out: &mut Emitter,
+    ) -> Result<()> {
+        let (ab, first_row) = rows_to_block(input)?;
+        let partial = match self.kind {
+            SketchKind::Gaussian => {
+                let mut base = Rng::new(self.seed);
+                let mut rng = base.fork(task_id as u64);
+                let s_i = Matrix::gaussian(self.srows, ab.rows, &mut rng);
+                self.compute.matmul(&s_i, &ab)?
+            }
+            SketchKind::CountSketch => {
+                let mut p = Matrix::zeros(self.srows, ab.cols);
+                for i in 0..ab.rows {
+                    let (bucket, sign) =
+                        countsketch_slot(self.seed, first_row + i as u64, self.srows);
+                    for j in 0..ab.cols {
+                        p[(bucket, j)] += sign * ab[(i, j)];
+                    }
+                }
+                p
+            }
+        };
+        out.emit(PARTIAL_KEY.to_vec(), encode_block(0, &partial));
+        Ok(())
+    }
+}
+
+/// Preconditioned-Gram map for sketch-and-precondition least squares:
+/// with the broadcast `R_s⁻¹`, form `Q̃_i = A_i·R_s⁻¹` and emit the
+/// partial `[Q̃ᵀQ̃ | Q̃ᵀb]` block (`n×(n+rhs)`).
+struct PrecondGramMap<'a> {
+    compute: &'a dyn BlockCompute,
+    /// Columns of `A` proper; the remaining `rhs` columns are `b`.
+    n: usize,
+}
+
+impl MapTask for PrecondGramMap<'_> {
+    fn run(
+        &self,
+        _id: usize,
+        input: &[Record],
+        side: &[&[Record]],
+        out: &mut Emitter,
+    ) -> Result<()> {
+        ensure!(side.len() == 1, "precond-gram wants the R_s⁻¹ side file");
+        let (_, rinv) = decode_block(&side[0][0].value)?;
+        let (ab, _) = rows_to_block(input)?;
+        let n = self.n;
+        ensure!(ab.cols > n, "augmented block narrower than A");
+        let a = Matrix::from_fn(ab.rows, n, |i, j| ab[(i, j)]);
+        let qt = self.compute.matmul(&a, &rinv)?;
+        // [Q̃_i | b_i] so one gemm yields both the Gram block and Q̃ᵀb
+        let aug = Matrix::from_fn(ab.rows, ab.cols, |i, j| {
+            if j < n {
+                qt[(i, j)]
+            } else {
+                ab[(i, j)]
+            }
+        });
+        let partial = self.compute.matmul(&qt.transpose(), &aug)?;
+        out.emit(PARTIAL_KEY.to_vec(), encode_block(0, &partial));
+        Ok(())
+    }
+}
+
+/// Broadcast-product map: emit `A_i · W` rows (the project-back step).
+struct MatMulSideMap<'a> {
+    compute: &'a dyn BlockCompute,
+}
+
+impl MapTask for MatMulSideMap<'_> {
+    fn run(
+        &self,
+        _id: usize,
+        input: &[Record],
+        side: &[&[Record]],
+        out: &mut Emitter,
+    ) -> Result<()> {
+        ensure!(side.len() == 1, "matmul-side wants the W side file");
+        let (_, w) = decode_block(&side[0][0].value)?;
+        let (a, first_row) = rows_to_block(input)?;
+        let prod = self.compute.matmul(&a, &w)?;
+        crate::coordinator::io::emit_rows(out, first_row, &prod);
+        Ok(())
+    }
+}
+
+/// Keep the first `keep` columns of every row (exact truncation pass).
+struct ColSliceMap {
+    keep: usize,
+}
+
+impl MapTask for ColSliceMap {
+    fn run(
+        &self,
+        _id: usize,
+        input: &[Record],
+        _side: &[&[Record]],
+        out: &mut Emitter,
+    ) -> Result<()> {
+        for rec in input {
+            let row = decode_row(&rec.value);
+            ensure!(row.len() >= self.keep, "row narrower than the kept rank");
+            out.emit(rec.key.clone(), encode_row(&row[..self.keep]));
+        }
+        Ok(())
+    }
+}
+
+/// Sum block-record partials in arrival (= task-id) order, then emit
+/// the total as row records. Sequential left-to-right summation over a
+/// deterministic order is what makes the sketch bits
+/// scheduling-invariant.
+struct SumReduce;
+
+impl ReduceTask for SumReduce {
+    fn run(&self, partition: &[KeyGroup], out: &mut Emitter) -> Result<()> {
+        ensure!(partition.len() == 1, "partial sums share one key");
+        let (_, values) = &partition[0];
+        let mut acc: Option<Matrix> = None;
+        for v in values {
+            let (_, p) = decode_block(v)?;
+            acc = Some(match acc {
+                None => p,
+                Some(a) => a.add(&p),
+            });
+        }
+        let total = acc.expect("at least one partial");
+        for j in 0..total.rows {
+            out.emit(row_key(j as u64), encode_row(total.row(j)));
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------- pass runners
+
+/// Stage a small matrix as a one-record block side file (the same
+/// broadcast pattern as `ar_inv`'s `R⁻¹` distribution).
+pub(crate) fn put_block_side(coord: &mut Coordinator, tag: &str, m: &Matrix) -> String {
+    let file = coord.tmp(tag);
+    coord.dfs_mut(|d| d.put(&file, vec![Record::new(row_key(0), encode_block(0, m))]));
+    file
+}
+
+/// Read a small leader-side matrix back out of a pass's row-record
+/// output.
+fn read_rows(coord: &Coordinator, file: &str, cols: usize) -> Result<Matrix> {
+    coord.dfs(|d| crate::workload::get_matrix(d, file, cols))
+}
+
+/// One fused sketch-project pass: returns `C = (A·Ω)ᵀA` (`ℓ×n`) and,
+/// when `spill_y` names a file, leaves `Y = A·Ω` there as row records.
+/// `label` lands in the step stats (sketch kind/seed/ℓ are recorded
+/// through it).
+pub(crate) fn sketch_project_pass(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    omega: &Matrix,
+    spill_y: Option<&str>,
+    label: &str,
+    stats: &mut JobStats,
+) -> Result<Matrix> {
+    let omega_file = put_block_side(coord, "sk-omega", omega);
+    let c_file = coord.tmp("sk-c");
+    let map_tasks = coord.map_tasks_for(input.rows);
+    let data_scale = coord.dfs(|d| d.scale(&input.file));
+    let mapper = SketchProjectMap { compute: coord.compute, spill_y: spill_y.is_some() };
+    let mut spec = JobSpec::map_reduce(label, &input.file, map_tasks, &mapper, &SumReduce, 1, &c_file)
+        .with_side_input(&omega_file);
+    if let Some(y_file) = spill_y {
+        spec = spec.with_scaled_side_output("y", y_file, data_scale);
+    }
+    stats.push(coord.run_step(&spec)?);
+    read_rows(coord, &c_file, input.cols)
+}
+
+/// One row-sketch pass: returns `S·A` (`srows×cols`).
+pub(crate) fn row_sketch_pass(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    kind: SketchKind,
+    seed: u64,
+    srows: usize,
+    label: &str,
+    stats: &mut JobStats,
+) -> Result<Matrix> {
+    let out_file = coord.tmp("sk-rowsketch");
+    let map_tasks = coord.map_tasks_for(input.rows);
+    let mapper = RowSketchMap { compute: coord.compute, kind, seed, srows };
+    let spec =
+        JobSpec::map_reduce(label, &input.file, map_tasks, &mapper, &SumReduce, 1, &out_file);
+    stats.push(coord.run_step(&spec)?);
+    read_rows(coord, &out_file, input.cols)
+}
+
+/// One preconditioned-Gram pass: returns `[Q̃ᵀQ̃ | Q̃ᵀb]`
+/// (`n×(n+rhs)`) for `Q̃ = A·R_s⁻¹`.
+pub(crate) fn precond_gram_pass(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    rinv: &Matrix,
+    label: &str,
+    stats: &mut JobStats,
+) -> Result<Matrix> {
+    let rinv_file = put_block_side(coord, "sk-rinv", rinv);
+    let out_file = coord.tmp("sk-gram");
+    let map_tasks = coord.map_tasks_for(input.rows);
+    let n = rinv.cols;
+    let mapper = PrecondGramMap { compute: coord.compute, n };
+    let spec =
+        JobSpec::map_reduce(label, &input.file, map_tasks, &mapper, &SumReduce, 1, &out_file)
+            .with_side_input(&rinv_file);
+    stats.push(coord.run_step(&spec)?);
+    read_rows(coord, &out_file, input.cols)
+}
+
+/// Broadcast-product pass over a row file: `out = input · w`.
+pub(crate) fn apply_side_matmul(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    w: &Matrix,
+    label: &str,
+    stats: &mut JobStats,
+) -> Result<MatrixHandle> {
+    let w_file = put_block_side(coord, "sk-w", w);
+    let out_file = coord.tmp("sk-prod");
+    let map_tasks = coord.map_tasks_for(input.rows);
+    let data_scale = coord.dfs(|d| d.scale(&input.file));
+    let mapper = MatMulSideMap { compute: coord.compute };
+    let spec = JobSpec::map_only(label, &input.file, map_tasks, &mapper, &out_file)
+        .with_side_input(&w_file)
+        .with_output_scale(data_scale);
+    stats.push(coord.run_step(&spec)?);
+    Ok(MatrixHandle::new(&out_file, input.rows, w.cols))
+}
+
+/// Column-truncation pass over a row file: keep the first `keep` cols.
+pub(crate) fn col_slice_pass(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    keep: usize,
+    label: &str,
+    stats: &mut JobStats,
+) -> Result<MatrixHandle> {
+    let out_file = coord.tmp("sk-slice");
+    let map_tasks = coord.map_tasks_for(input.rows);
+    let data_scale = coord.dfs(|d| d.scale(&input.file));
+    let mapper = ColSliceMap { keep };
+    let spec = JobSpec::map_only(label, &input.file, map_tasks, &mapper, &out_file)
+        .with_output_scale(data_scale);
+    stats.push(coord.run_step(&spec)?);
+    Ok(MatrixHandle::new(&out_file, input.rows, keep))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::DiskModel;
+    use crate::mapreduce::{ClusterConfig, Engine};
+    use crate::runtime::NativeRuntime;
+    use crate::workload::put_matrix;
+
+    fn coord_with(a: &Matrix) -> (Coordinator<'static>, MatrixHandle) {
+        let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
+        put_matrix(&mut engine.dfs, "A", a);
+        (
+            Coordinator::new(engine, NativeRuntime::oracle()),
+            MatrixHandle::new("A", a.rows, a.cols),
+        )
+    }
+
+    #[test]
+    fn gaussian_omega_is_seed_deterministic() {
+        let a = gaussian_omega(20, 4, 7);
+        let b = gaussian_omega(20, 4, 7);
+        assert_eq!(a.data, b.data);
+        assert_ne!(a.data, gaussian_omega(20, 4, 8).data);
+    }
+
+    #[test]
+    fn countsketch_slot_is_pure_and_covers_buckets() {
+        let ell = 7;
+        let mut seen = vec![false; ell];
+        for j in 0..200u64 {
+            let (b1, s1) = countsketch_slot(42, j, ell);
+            let (b2, s2) = countsketch_slot(42, j, ell);
+            assert_eq!((b1, s1.to_bits()), (b2, s2.to_bits()), "slot must be pure");
+            assert!(b1 < ell && s1.abs() == 1.0);
+            seen[b1] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "200 draws should cover 7 buckets");
+        // different seeds give different hash functions
+        let same = (0..200u64)
+            .filter(|&j| countsketch_slot(1, j, ell) == countsketch_slot(2, j, ell))
+            .count();
+        assert!(same < 120, "seeds 1 and 2 agree on {same}/200 slots");
+    }
+
+    #[test]
+    fn countsketch_omega_has_one_entry_per_row() {
+        let omega = countsketch_omega(30, 5, 9);
+        for i in 0..30 {
+            let nz: Vec<f64> =
+                (0..5).map(|j| omega[(i, j)]).filter(|v| *v != 0.0).collect();
+            assert_eq!(nz.len(), 1);
+            assert_eq!(nz[0].abs(), 1.0);
+        }
+    }
+
+    #[test]
+    fn sketch_project_matches_serial_product() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(120, 6, &mut rng);
+        let omega = gaussian_omega(6, 3, 11);
+        let (mut coord, h) = coord_with(&a);
+        coord.opts.rows_per_task = 32;
+        let mut stats = JobStats::default();
+        let y_file = coord.tmp("y");
+        let c = sketch_project_pass(&mut coord, &h, &omega, Some(&y_file), "t", &mut stats)
+            .unwrap();
+        let y_want = a.matmul(&omega);
+        let c_want = y_want.transpose().matmul(&a);
+        assert_eq!((c.rows, c.cols), (3, 6));
+        assert!(c.sub(&c_want).max_abs() < 1e-12 * c_want.max_abs().max(1.0));
+        let y = coord.dfs(|d| crate::workload::get_matrix(d, &y_file, 3)).unwrap();
+        assert_eq!(y.rows, 120);
+        assert!(y.sub(&y_want).max_abs() < 1e-13 * y_want.max_abs());
+    }
+
+    #[test]
+    fn row_sketch_partials_are_block_invariant_for_countsketch() {
+        // CountSketch hashes global row ids, so the summed sketch is
+        // identical whatever rows_per_task splits the blocks into
+        let mut rng = Rng::new(4);
+        let a = Matrix::gaussian(90, 4, &mut rng);
+        let mut first: Option<Matrix> = None;
+        for rpt in [16, 90] {
+            let (mut coord, h) = coord_with(&a);
+            coord.opts.rows_per_task = rpt;
+            let mut stats = JobStats::default();
+            let s = row_sketch_pass(
+                &mut coord,
+                &h,
+                SketchKind::CountSketch,
+                5,
+                8,
+                "t",
+                &mut stats,
+            )
+            .unwrap();
+            match &first {
+                None => first = Some(s),
+                Some(f) => assert_eq!(f.data, s.data, "rpt={rpt}"),
+            }
+        }
+    }
+
+    #[test]
+    fn col_slice_keeps_leading_columns() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::gaussian(40, 5, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        let mut stats = JobStats::default();
+        let out = col_slice_pass(&mut coord, &h, 2, "t", &mut stats).unwrap();
+        let m = coord.dfs(|d| crate::workload::get_matrix(d, &out.file, 2)).unwrap();
+        assert_eq!((m.rows, m.cols), (40, 2));
+        for i in 0..40 {
+            assert_eq!(m[(i, 0)].to_bits(), a[(i, 0)].to_bits());
+            assert_eq!(m[(i, 1)].to_bits(), a[(i, 1)].to_bits());
+        }
+    }
+}

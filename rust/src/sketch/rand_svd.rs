@@ -1,0 +1,266 @@
+//! Randomized range finder → randomized truncated SVD
+//! (Halko–Martinsson–Tropp Alg. 4.3/4.4 + 5.1, arranged for MapReduce).
+//!
+//! Pass structure (`q = power_iters`, `ℓ = rank + oversample`):
+//!
+//! 1. `1+q` fused *sketch-project* passes over `A`
+//!    ([`super::operators::sketch_project_pass`]): each computes
+//!    `C_j = (A·Ω_j)ᵀA`; between passes the leader orthonormalizes
+//!    `Ω_{j+1} = orth(C_jᵀ)` (the power-iteration stabilization), and
+//!    the final pass spills `Y = A·Ω_q` as a row file.
+//! 2. Direct TSQR of `Y` (`m×ℓ`, *below* the `A`-bytes threshold at
+//!    `ℓ < n`) via the existing step machinery → orthonormal `Q_y`
+//!    and triangle `R_y`.
+//! 3. Leader smalls: `B = R_y⁻ᵀ·C` (`= Q_yᵀA` without another pass,
+//!    since `C = YᵀA = R_yᵀQ_yᵀA`), wide-`B` SVD via QR of `Bᵀ` +
+//!    square Jacobi, truncation to `rank`.
+//! 4. One project-back pass over `Q_y` (`m×ℓ` bytes) → `Û = Q_y·W`.
+//!
+//! Total reads at or above `A`'s size: exactly `1+q` — strictly fewer
+//! than the exact path (Direct-TSQR SVD reads `A`-sized files twice,
+//! plus a truncation pass), which is the whole point of the family.
+
+use super::operators::{
+    apply_side_matmul, col_slice_pass, countsketch_omega, gaussian_omega, sketch_project_pass,
+};
+use super::{SketchKind, SketchOptions};
+use crate::coordinator::{direct_tsqr, Coordinator, DirectOpts, MatrixHandle};
+use crate::linalg::{householder_qr, jacobi_svd, tri_inverse_upper, Matrix};
+use crate::mapreduce::JobStats;
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// Output of a (randomized or exact) truncated SVD: `A ≈ Û Σ_r V_rᵀ`.
+#[derive(Debug)]
+pub struct LowRankOutput {
+    /// Approximate left singular vectors, `m×rank`, row layout.
+    pub u: MatrixHandle,
+    /// The triangular factor behind `u`: `R_y` of the range basis on
+    /// the randomized path, the full `R̃` on the exact path. This is
+    /// what enters the result digest.
+    pub r: Matrix,
+    /// Leading `rank` singular value estimates, descending.
+    pub sigma: Vec<f64>,
+    /// Approximate right singular vectors, `n×rank`.
+    pub v: Matrix,
+    pub stats: JobStats,
+    /// Sketch width actually used (`min(rank+oversample, n, m)`;
+    /// `n` on the exact path).
+    pub ell: usize,
+}
+
+fn validate_rank(input: &MatrixHandle, rank: usize) -> Result<()> {
+    ensure!(rank >= 1, "low-rank request needs rank >= 1");
+    ensure!(
+        rank <= input.cols && rank <= input.rows,
+        "rank {} exceeds the {}x{} input",
+        rank,
+        input.rows,
+        input.cols
+    );
+    Ok(())
+}
+
+/// Keep the first `k` columns.
+fn take_cols(m: &Matrix, k: usize) -> Matrix {
+    Matrix::from_fn(m.rows, k, |i, j| m[(i, j)])
+}
+
+/// Randomized truncated SVD of `input` (see module docs for the pass
+/// structure). Bits depend only on the input, `rank`/`oversample`/
+/// `power_iters`, `rows_per_task` and the sketch seed — never on any
+/// scheduling knob.
+pub fn randomized_svd(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    rank: usize,
+    oversample: usize,
+    power_iters: usize,
+    sketch: SketchOptions,
+) -> Result<LowRankOutput> {
+    validate_rank(input, rank)?;
+    let n = input.cols;
+    let ell = (rank + oversample).min(n).min(input.rows);
+    ensure!(ell >= rank, "oversampled width collapsed below rank");
+    let mut stats = JobStats::default();
+
+    // ---- 1+q fused sketch-project passes over A ----
+    let mut omega = match sketch.kind {
+        SketchKind::Gaussian => gaussian_omega(n, ell, sketch.seed),
+        SketchKind::CountSketch => countsketch_omega(n, ell, sketch.seed),
+    };
+    let y_file = coord.tmp("sk-y");
+    let mut c = Matrix::zeros(0, 0);
+    for j in 0..=power_iters {
+        let spill = j == power_iters;
+        let label = format!(
+            "sketch-project(q{j}, {} seed={} ell={ell})",
+            sketch.kind.cli_name(),
+            sketch.seed
+        );
+        c = sketch_project_pass(
+            coord,
+            input,
+            &omega,
+            spill.then_some(y_file.as_str()),
+            &label,
+            &mut stats,
+        )?;
+        if !spill {
+            // power iteration: Ω ← orth(CᵀA-direction) = orth((YᵀA)ᵀ),
+            // re-orthonormalized each round so repeated products don't
+            // collapse onto the top singular direction numerically
+            let (next, _) = householder_qr(&c.transpose());
+            omega = next;
+        }
+    }
+
+    // ---- Direct TSQR of the spilled Y (m×ℓ — below the A threshold) ----
+    let y_handle = MatrixHandle::new(&y_file, input.rows, ell);
+    let tsqr = direct_tsqr::direct_tsqr(coord, &y_handle, &DirectOpts::default())?;
+    stats.extend(tsqr.stats);
+    let r_y = tsqr.r;
+
+    // ---- leader smalls: B = R_y⁻ᵀ C, then the wide-B SVD ----
+    let rinv = tri_inverse_upper(&r_y).ok_or_else(|| {
+        anyhow!(
+            "sketched range basis is rank-deficient (numerical rank of A < {ell}); \
+             lower rank/oversample"
+        )
+    })?;
+    let b = rinv.transpose().matmul(&c); // ℓ×n, = Q_yᵀA up to roundoff
+    let (qb, rb) = householder_qr(&b.transpose()); // B = R_bᵀ Q_bᵀ
+    let small = jacobi_svd(&rb.transpose()); // ℓ×ℓ: R_bᵀ = U₁ Σ V₁ᵀ
+    let sigma: Vec<f64> = small.sigma[..rank].to_vec();
+    let v = take_cols(&qb.matmul(&small.v), rank); // n×rank
+    let w = take_cols(&small.u, rank); // ℓ×rank
+
+    // ---- project-back pass: Û = Q_y · W ----
+    let u = apply_side_matmul(coord, &tsqr.q, &w, "sketch-project-back", &mut stats)?;
+
+    Ok(LowRankOutput { u, r: r_y, sigma, v, stats, ell })
+}
+
+/// Exact truncated SVD: the two-pass Direct-TSQR SVD plus one
+/// column-truncation pass over `QU`. The accuracy baseline — and the
+/// algorithm the Auto policy picks when the requested rank is too close
+/// to `n` for sketching to save anything.
+pub fn exact_low_rank(
+    coord: &mut Coordinator,
+    input: &MatrixHandle,
+    rank: usize,
+) -> Result<LowRankOutput> {
+    validate_rank(input, rank)?;
+    let out = coord.svd(input)?;
+    let mut stats = out.stats;
+    let svd = out.svd.ok_or_else(|| anyhow!("direct SVD returned no Σ/V"))?;
+    ensure!(svd.sigma.len() >= rank, "SVD returned fewer than rank values");
+    let u = col_slice_pass(coord, &out.q, rank, "lowrank-truncate", &mut stats)?;
+    Ok(LowRankOutput {
+        u,
+        r: out.r,
+        sigma: svd.sigma[..rank].to_vec(),
+        v: take_cols(&svd.v, rank),
+        stats,
+        ell: input.cols,
+    })
+}
+
+/// The Auto policy's sketch-vs-exact gate for `Want::LowRank`: sketch
+/// when the oversampled width is at most half the column count —
+/// below that the randomized path reads strictly fewer bytes; above
+/// it, the exact two-pass SVD is both cheaper and exact.
+pub fn sketch_pays_off(cols: usize, rank: usize, oversample: usize) -> bool {
+    2 * (rank + oversample) <= cols
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::DiskModel;
+    use crate::linalg::matgen::matrix_with_spectrum;
+    use crate::mapreduce::{ClusterConfig, Engine};
+    use crate::runtime::NativeRuntime;
+    use crate::util::rng::Rng;
+    use crate::workload::put_matrix;
+
+    fn coord_with(a: &Matrix) -> (Coordinator<'static>, MatrixHandle) {
+        let mut engine = Engine::new(DiskModel::icme_like(), ClusterConfig::default());
+        put_matrix(&mut engine.dfs, "A", a);
+        (
+            Coordinator::new(engine, NativeRuntime::oracle()),
+            MatrixHandle::new("A", a.rows, a.cols),
+        )
+    }
+
+    fn logspace_sigma(n: usize, decades: f64) -> Vec<f64> {
+        (0..n).map(|i| 10f64.powf(-decades * i as f64 / (n - 1) as f64)).collect()
+    }
+
+    #[test]
+    fn randomized_svd_recovers_decaying_spectrum() {
+        let mut rng = Rng::new(1);
+        let sigma_true = logspace_sigma(24, 6.0);
+        let (a, _, _) = matrix_with_spectrum(300, 24, &sigma_true, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        coord.opts.rows_per_task = 64;
+        let out = randomized_svd(
+            &mut coord,
+            &h,
+            4,
+            4,
+            1,
+            SketchOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(out.sigma.len(), 4);
+        for (got, want) in out.sigma.iter().zip(&sigma_true) {
+            assert!((got / want - 1.0).abs() < 1e-2, "sigma {got} vs {want}");
+        }
+        // A ≈ Û Σ V̂ᵀ within a few σ_{rank+1}
+        let u = coord.dfs(|d| crate::workload::get_matrix(d, &out.u.file, 4)).unwrap();
+        assert!(u.orthogonality_error() < 1e-10, "orth {}", u.orthogonality_error());
+        let mut us = u.clone();
+        for j in 0..4 {
+            for i in 0..us.rows {
+                us[(i, j)] *= out.sigma[j];
+            }
+        }
+        let err = a.sub(&us.matmul(&out.v.transpose())).frob_norm();
+        let tail: f64 = sigma_true[4..].iter().map(|s| s * s).sum::<f64>().sqrt();
+        assert!(err < 10.0 * tail.max(sigma_true[4]), "err {err} vs tail {tail}");
+    }
+
+    #[test]
+    fn exact_low_rank_matches_truncated_direct_svd() {
+        let mut rng = Rng::new(2);
+        let sigma_true = vec![16.0, 4.0, 1.0, 0.25, 0.0625];
+        let (a, _, _) = matrix_with_spectrum(150, 5, &sigma_true, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        let out = exact_low_rank(&mut coord, &h, 2).unwrap();
+        assert_eq!(out.sigma.len(), 2);
+        for (got, want) in out.sigma.iter().zip(&sigma_true) {
+            assert!((got / want - 1.0).abs() < 1e-10);
+        }
+        assert_eq!(out.v.cols, 2);
+        let u = coord.dfs(|d| crate::workload::get_matrix(d, &out.u.file, 2)).unwrap();
+        assert_eq!((u.rows, u.cols), (150, 2));
+        assert!(u.orthogonality_error() < 1e-12);
+    }
+
+    #[test]
+    fn rank_validation_rejects_nonsense() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(30, 4, &mut rng);
+        let (mut coord, h) = coord_with(&a);
+        assert!(randomized_svd(&mut coord, &h, 0, 2, 0, SketchOptions::default()).is_err());
+        assert!(randomized_svd(&mut coord, &h, 5, 2, 0, SketchOptions::default()).is_err());
+        assert!(exact_low_rank(&mut coord, &h, 0).is_err());
+    }
+
+    #[test]
+    fn gate_splits_on_half_the_columns() {
+        assert!(sketch_pays_off(40, 4, 8));
+        assert!(!sketch_pays_off(20, 4, 8));
+        assert!(sketch_pays_off(24, 4, 8)); // boundary: 2·12 == 24
+    }
+}

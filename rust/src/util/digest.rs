@@ -15,6 +15,14 @@ use crate::linalg::Matrix;
 /// Two results agree on this hex string iff their factors are
 /// bit-identical.
 pub fn r_sigma_digest(r: &Matrix, sigma: Option<&[f64]>) -> String {
+    full_digest(r, sigma, None)
+}
+
+/// [`r_sigma_digest`] extended with an optional least-squares solution
+/// block (PR 10's `Want::Solve`). When `solution` is `None` the digested
+/// byte stream is identical to the pre-extension definition, so every
+/// existing digest — QR, SVD, streaming — is unchanged.
+pub fn full_digest(r: &Matrix, sigma: Option<&[f64]>, solution: Option<&Matrix>) -> String {
     const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
     let mut h = FNV_OFFSET;
@@ -35,5 +43,32 @@ pub fn r_sigma_digest(r: &Matrix, sigma: Option<&[f64]>) -> String {
             eat(&v.to_bits().to_le_bytes());
         }
     }
+    if let Some(x) = solution {
+        eat(&(x.rows as u64).to_le_bytes());
+        eat(&(x.cols as u64).to_le_bytes());
+        for v in &x.data {
+            eat(&v.to_bits().to_le_bytes());
+        }
+    }
     format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_solution_preserves_legacy_digest() {
+        let r = Matrix::from_fn(2, 2, |i, j| (i * 2 + j) as f64);
+        let sigma = [3.0, 1.0];
+        assert_eq!(
+            r_sigma_digest(&r, Some(&sigma)),
+            full_digest(&r, Some(&sigma), None)
+        );
+        let x = Matrix::from_fn(2, 1, |i, _| i as f64);
+        assert_ne!(
+            full_digest(&r, Some(&sigma), Some(&x)),
+            full_digest(&r, Some(&sigma), None)
+        );
+    }
 }

@@ -1,0 +1,328 @@
+//! The randomized sketching family's acceptance suite (PR 10).
+//!
+//! Five invariant families:
+//!
+//! 1. **Seeded-sketch bit-identity** — a mixed LowRank/Solve manifest
+//!    with fixed sketch seeds produces bit-identical `R`, Σ, solution,
+//!    `result_digest` and auto decisions across `host_threads` ×
+//!    `engine_shards` × `worker_processes` (the process leg also proves
+//!    the v6 wire codec round-trips the new fields, NaN κ included).
+//! 2. **Accuracy** — the randomized SVD recovers a decaying spectrum's
+//!    leading Σ next to the exact truncated Direct-TSQR SVD.
+//! 3. **Sketched least squares** — sketch-and-precondition matches the
+//!    exact augmented-R solve's residual on the same system.
+//! 4. **Auto decision boundary** — the rank gate picks randomized vs
+//!    exact on `2(rank+oversample) <= cols`, the Solve probe reuses its
+//!    pass when κ is benign, and the marker step records the sketch.
+//! 5. **CountSketch determinism** — same seed same bits, different
+//!    seed different bits (collisions are a function of the seed only).
+
+use mrtsqr::coordinator::Algorithm;
+use mrtsqr::linalg::{matgen, Matrix};
+use mrtsqr::session::{Backend, FactorizationRequest, SessionBuilder};
+use mrtsqr::sketch::{SketchKind, SketchOptions};
+use mrtsqr::util::rng::Rng;
+use mrtsqr::{Factorization, MatrixHandle};
+use std::sync::Arc;
+
+/// The prebuilt `mrtsqr` binary for the worker-process leg.
+const WORKER_BIN: &str = env!("CARGO_BIN_EXE_mrtsqr");
+
+fn builder() -> SessionBuilder {
+    mrtsqr::TsqrSession::builder()
+        .backend(Backend::Native)
+        .rows_per_task(50)
+        .worker_binary(WORKER_BIN)
+}
+
+/// The sketching mix: randomized and auto LowRank (both sketch kinds, a
+/// power iteration, a non-default seed) plus sketched and auto Solve.
+fn sketch_requests() -> Vec<FactorizationRequest> {
+    vec![
+        FactorizationRequest::low_rank(3).oversample(3).randomized(),
+        FactorizationRequest::low_rank(3)
+            .oversample(3)
+            .power_iters(1)
+            .with_sketch(SketchOptions { kind: SketchKind::CountSketch, seed: 42 })
+            .randomized(),
+        FactorizationRequest::low_rank(2).auto(), // rank gate -> randomized at 24 cols
+        FactorizationRequest::solve().randomized(),
+        FactorizationRequest::solve().auto(), // gaussian A: probe reused
+    ]
+}
+
+/// Per-request inputs: 24-column matrices for the LowRank legs, 7-column
+/// augmented `[A b]` systems for the Solve legs.
+fn ingest_inputs(
+    ingest: impl Fn(&str, usize, usize, u64) -> MatrixHandle,
+) -> Vec<MatrixHandle> {
+    vec![
+        ingest("L0", 300, 24, 0),
+        ingest("L1", 340, 24, 1),
+        ingest("L2", 300, 24, 2),
+        ingest("S3", 400, 7, 3),
+        ingest("S4", 400, 7, 4),
+    ]
+}
+
+fn run_pool(host_threads: usize, shards: usize, procs: usize) -> Vec<Arc<Factorization>> {
+    let client = builder()
+        .host_threads(host_threads)
+        .engine_shards(shards)
+        .worker_processes(procs)
+        .service_workers(2)
+        .queue_capacity(8)
+        .build_client()
+        .unwrap();
+    let inputs =
+        ingest_inputs(|name, rows, cols, seed| client.ingest_gaussian(name, rows, cols, seed).unwrap());
+    let handles: Vec<_> = inputs
+        .iter()
+        .zip(sketch_requests())
+        .map(|(h, req)| client.submit(h, req).unwrap())
+        .collect();
+    handles.iter().map(|h| h.wait().unwrap()).collect()
+}
+
+fn assert_bit_identical(baseline: &[Arc<Factorization>], other: &[Arc<Factorization>], ctx: &str) {
+    assert_eq!(baseline.len(), other.len());
+    for (idx, (want, got)) in baseline.iter().zip(other).enumerate() {
+        let ctx = format!("{ctx}: request {idx} ({})", want.algorithm.name());
+        assert_eq!(got.algorithm, want.algorithm, "{ctx}: algorithm");
+        for (a, b) in got.r.data.iter().zip(&want.r.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: R drifted");
+        }
+        match (got.sigma(), want.sigma()) {
+            (Some(a), Some(b)) => {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: sigma drifted");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("{ctx}: sigma presence differs"),
+        }
+        match (&got.solution, &want.solution) {
+            (Some(a), Some(b)) => {
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: solution drifted");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("{ctx}: solution presence differs"),
+        }
+        match (&got.auto, &want.auto) {
+            (Some(a), Some(b)) => {
+                // NaN κ (the rank gate) must compare bit-wise equal too
+                assert_eq!(a.kappa_estimate.to_bits(), b.kappa_estimate.to_bits(), "{ctx}: kappa");
+                assert_eq!(a.chosen, b.chosen, "{ctx}: chosen");
+                assert_eq!(a.sketch, b.sketch, "{ctx}: sketch choice");
+            }
+            (None, None) => {}
+            _ => panic!("{ctx}: auto presence differs"),
+        }
+        assert_eq!(got.result_digest(), want.result_digest(), "{ctx}: digest");
+    }
+}
+
+/// Family 1: the digest contract extends to the sketching family —
+/// every scaling knob is pure scheduling; only the sketch seed (fixed
+/// here) and the input decide the bits. The `worker_processes` leg runs
+/// the requests through two OS processes over wire v6, so it also
+/// proves the new want tags, sketch fields, solution block and NaN-κ
+/// auto decision survive the codec end to end.
+#[test]
+fn sketched_bits_are_invariant_to_threads_shards_and_processes() {
+    let baseline = run_pool(1, 1, 0);
+    // the LowRank legs must actually have taken the randomized path
+    assert_eq!(baseline[0].algorithm, Algorithm::Randomized);
+    assert_eq!(baseline[2].algorithm, Algorithm::Randomized, "rank gate at 2(2+8) <= 24");
+    assert!(baseline[3].solution.is_some() && baseline[4].solution.is_some());
+
+    assert_bit_identical(&baseline, &run_pool(4, 1, 0), "host_threads 1 -> 4");
+    assert_bit_identical(&baseline, &run_pool(2, 4, 0), "engine_shards 1 -> 4");
+    assert_bit_identical(&baseline, &run_pool(2, 2, 2), "worker_processes 0 -> 2");
+}
+
+/// Family 1b: the sketch seed is digest-relevant — unlike every
+/// scheduling knob, changing it must change the randomized bits.
+#[test]
+fn sketch_seed_changes_randomized_bits() {
+    let mut session = builder().build().unwrap();
+    let input = session.ingest_gaussian("A", 300, 24, 7).unwrap();
+    let req = |seed| {
+        FactorizationRequest::low_rank(3)
+            .oversample(3)
+            .with_sketch(SketchOptions { kind: SketchKind::Gaussian, seed })
+            .randomized()
+    };
+    let d1 = session.factorize(&input, &req(1)).unwrap().result_digest();
+    let d1_again = session.factorize(&input, &req(1)).unwrap().result_digest();
+    let d2 = session.factorize(&input, &req(2)).unwrap().result_digest();
+    assert_eq!(d1, d1_again, "same seed, same bits");
+    assert_ne!(d1, d2, "the seed is part of the digest contract");
+}
+
+/// Family 2: randomized SVD accuracy against the exact truncated SVD on
+/// a logspace-decaying spectrum — leading Σ̂ within 1% of exact, and the
+/// reconstruction error within a few tail singular values.
+#[test]
+fn randomized_sigma_tracks_the_exact_truncation() {
+    let mut rng = Rng::new(11);
+    let n = 24;
+    let sigma_true: Vec<f64> =
+        (0..n).map(|i| 10f64.powf(-6.0 * i as f64 / (n - 1) as f64)).collect();
+    let (a, _, _) = matgen::matrix_with_spectrum(400, n, &sigma_true, &mut rng);
+
+    let mut session = builder().build().unwrap();
+    let input = session.ingest_matrix("A", &a).unwrap();
+    let exact = session
+        .factorize(&input, &FactorizationRequest::low_rank(4).with_algorithm(Algorithm::DirectTsqr))
+        .unwrap();
+    let rand = session
+        .factorize(
+            &input,
+            &FactorizationRequest::low_rank(4).oversample(4).power_iters(1).randomized(),
+        )
+        .unwrap();
+    let (se, sr) = (exact.sigma().unwrap(), rand.sigma().unwrap());
+    assert_eq!(se.len(), 4);
+    assert_eq!(sr.len(), 4);
+    for (e, r) in se.iter().zip(sr) {
+        assert!((r / e - 1.0).abs() < 1e-2, "sigma {r} vs exact {e}");
+    }
+    // Û is orthonormal on both paths
+    for fact in [&exact, &rand] {
+        let u = session.get_matrix(fact.q.as_ref().unwrap()).unwrap();
+        assert_eq!(u.cols, 4);
+        assert!(u.orthogonality_error() < 1e-9, "orth {}", u.orthogonality_error());
+    }
+}
+
+/// Family 3: sketch-and-precondition least squares reaches the exact
+/// augmented-R solve's residual on the same noisy system.
+#[test]
+fn sketched_solve_residual_matches_exact() {
+    let mut rng = Rng::new(12);
+    let (m, n) = (400, 6);
+    let a = Matrix::gaussian(m, n, &mut rng);
+    let x_true = Matrix::gaussian(n, 1, &mut rng);
+    let noise = Matrix::gaussian(m, 1, &mut rng);
+    let ab = Matrix::from_fn(m, n + 1, |i, j| {
+        if j < n {
+            a[(i, j)]
+        } else {
+            x_true.data.iter().enumerate().map(|(k, x)| a[(i, k)] * x).sum::<f64>()
+                + 1e-3 * noise[(i, 0)]
+        }
+    });
+    let b = Matrix::from_fn(m, 1, |i, _| ab[(i, n)]);
+
+    let mut session = builder().build().unwrap();
+    let input = session.ingest_matrix("AB", &ab).unwrap();
+    let exact = session
+        .factorize(&input, &FactorizationRequest::solve().with_algorithm(Algorithm::DirectTsqr))
+        .unwrap();
+    let sketched = session.factorize(&input, &FactorizationRequest::solve().randomized()).unwrap();
+    let resid = |f: &Factorization| {
+        a.matmul(f.solution.as_ref().expect("solution")).sub(&b).frob_norm()
+    };
+    let (re, rs) = (resid(&exact), resid(&sketched));
+    assert!(rs <= re * (1.0 + 1e-6) + 1e-12, "sketched residual {rs} vs exact {re}");
+    // both recover x to noise level
+    for f in [&exact, &sketched] {
+        let x = f.solution.as_ref().unwrap();
+        for i in 0..n {
+            assert!((x[(i, 0)] - x_true[(i, 0)]).abs() < 1e-2);
+        }
+    }
+}
+
+/// Family 4: the Auto decision boundary and its marker step.
+#[test]
+fn auto_gates_sketch_vs_exact_and_records_the_decision() {
+    let mut session = builder().build().unwrap();
+
+    // wide input, small rank: 2(2+8) = 20 <= 24 -> randomized, rank
+    // gate (NaN κ), sketch recorded in the decision and the marker
+    let wide = session.ingest_gaussian("W", 300, 24, 1).unwrap();
+    let fact = session.factorize(&wide, &FactorizationRequest::low_rank(2)).unwrap();
+    assert_eq!(fact.algorithm, Algorithm::Randomized);
+    let d = fact.auto.as_ref().expect("auto decision");
+    assert!(d.kappa_estimate.is_nan(), "rank gate runs no probe");
+    let choice = d.sketch.expect("sketch choice recorded");
+    assert_eq!(choice.kind, SketchKind::Gaussian);
+    assert_eq!(choice.seed, mrtsqr::sketch::DEFAULT_SKETCH_SEED);
+    let marker = d.step_stats().name;
+    assert!(marker.contains("rank-gate"), "{marker}");
+    assert!(marker.contains("sketch=gauss"), "{marker}");
+    let marker_step = &fact.stats.steps[0];
+    assert!(marker_step.name.contains("auto-select"), "{}", marker_step.name);
+
+    // narrow input, same rank: 2(2+8) = 20 > 8 -> exact truncation,
+    // no sketch in the decision
+    let narrow = session.ingest_gaussian("N", 300, 8, 2).unwrap();
+    let fact = session.factorize(&narrow, &FactorizationRequest::low_rank(2)).unwrap();
+    assert_eq!(fact.algorithm, Algorithm::DirectTsqr);
+    assert!(fact.auto.as_ref().unwrap().sketch.is_none());
+
+    // well-conditioned solve: the probe pass is reused (κ finite)
+    let benign = session.ingest_gaussian("B", 400, 7, 3).unwrap();
+    let fact = session.solve(&benign).unwrap();
+    assert_eq!(fact.algorithm, Algorithm::IndirectTsqr { refine: false });
+    let d = fact.auto.as_ref().unwrap();
+    assert!(d.probe_reused && d.kappa_estimate.is_finite());
+    assert!(fact.solution.is_some());
+
+    // ill-conditioned solve: κ over threshold -> sketched path
+    let mut rng = Rng::new(4);
+    let a = matgen::matrix_with_condition(400, 6, 1e8, &mut rng);
+    let b = Matrix::gaussian(400, 1, &mut rng);
+    let ab = Matrix::from_fn(400, 7, |i, j| if j < 6 { a[(i, j)] } else { b[(i, 0)] });
+    let nasty = session.ingest_matrix("I", &ab).unwrap();
+    let fact = session.solve(&nasty).unwrap();
+    assert_eq!(fact.algorithm, Algorithm::Randomized);
+    let d = fact.auto.as_ref().unwrap();
+    assert!(!d.probe_reused && d.kappa_estimate > d.threshold);
+    assert!(d.sketch.is_some());
+    assert!(fact.solution.is_some());
+}
+
+/// Family 5: CountSketch collisions are a deterministic function of the
+/// seed — the operator itself, plus the end-to-end request.
+#[test]
+fn countsketch_is_deterministic_in_the_seed() {
+    use mrtsqr::sketch::{countsketch_omega, countsketch_slot};
+
+    // operator level: one ±1 per row, identical across calls, moved by
+    // the seed
+    let (n, ell) = (40, 6);
+    let o1 = countsketch_omega(n, ell, 9);
+    let o2 = countsketch_omega(n, ell, 9);
+    let o3 = countsketch_omega(n, ell, 10);
+    assert_eq!(o1.data, o2.data, "same seed, same sketch");
+    assert_ne!(o1.data, o3.data, "different seed, different sketch");
+    for i in 0..n {
+        let nonzero: Vec<usize> = (0..ell).filter(|&j| o1[(i, j)] != 0.0).collect();
+        assert_eq!(nonzero.len(), 1, "row {i} must hash to exactly one bucket");
+        let (slot, sign) = countsketch_slot(9, i as u64, ell);
+        assert_eq!(nonzero[0], slot);
+        assert_eq!(o1[(i, nonzero[0])], sign);
+    }
+
+    // request level: two sessions, same countsketch seed -> same digest
+    let run = || {
+        let mut session = builder().build().unwrap();
+        let input = session.ingest_gaussian("A", 300, 24, 5).unwrap();
+        session
+            .factorize(
+                &input,
+                &FactorizationRequest::low_rank(3)
+                    .oversample(3)
+                    .with_sketch(SketchOptions { kind: SketchKind::CountSketch, seed: 21 })
+                    .randomized(),
+            )
+            .unwrap()
+            .result_digest()
+    };
+    assert_eq!(run(), run());
+}
